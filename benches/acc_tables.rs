@@ -1,0 +1,37 @@
+//! Tables 3 & 4 regeneration (scaled): multi-SWAG accuracy vs standard
+//! training at constant effective parameter count on the synthetic-MNIST
+//! classification task.
+//!
+//! Fast by default (4 epochs, 4 train batches); PUSH_BENCH_FULL=1 runs the
+//! paper protocol (10 epochs, 7 pretrain + 3 SWAG).
+
+use push::bench::accuracy::{run, AccOpts};
+use push::bench::depth_width::{table1_rows, table2_rows};
+use push::bench::report::results_dir;
+use push::runtime::{artifacts_dir, Manifest};
+
+fn main() {
+    let manifest = Manifest::load(artifacts_dir()).expect("make artifacts first");
+    let full = std::env::var("PUSH_BENCH_FULL").is_ok();
+    let opts = if full {
+        AccOpts { epochs: 10, pretrain_epochs: 7, batches: 8, ..AccOpts::default() }
+    } else {
+        AccOpts { epochs: 3, pretrain_epochs: 2, batches: 3, test_batches: 2, ..AccOpts::default() }
+    };
+
+    let mut rows3 = table1_rows();
+    let mut rows4 = table2_rows(false);
+    if !full {
+        rows3.truncate(3);
+        rows4.truncate(3);
+    }
+    let rep = run(&manifest, "table3_depth_acc", &rows3, &opts).expect("table3");
+    rep.print();
+    let p = rep.save(results_dir()).expect("save");
+    println!("saved {p:?}\n");
+
+    let rep = run(&manifest, "table4_width_acc", &rows4, &opts).expect("table4");
+    rep.print();
+    let p = rep.save(results_dir()).expect("save");
+    println!("saved {p:?}");
+}

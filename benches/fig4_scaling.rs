@@ -1,0 +1,62 @@
+//! Figures 4 & 7 regeneration (scaled): particle scaling across simulated
+//! devices for {ViT/MNIST-like, CGCNN/MD17-like, UNet/advection} (+ the
+//! Figure-7 extras with PUSH_BENCH_FULL=1) under ensemble / multi-SWAG /
+//! SVGD, plus the handwritten 1-device baselines.
+//!
+//! `cargo bench --bench fig4_scaling` runs a fast grid by default
+//! (2 batches/epoch, particles {1,2,4} x devices {1,2,4}); set
+//! PUSH_BENCH_FULL=1 for the paper-shaped grid (40 batches, {1,2,4,8}).
+//! JSON lands in bench_results/.
+
+use push::bench::report::results_dir;
+use push::bench::scaling::{run_figure, ScaleOpts};
+use push::bench::Method;
+use push::runtime::{artifacts_dir, Manifest};
+
+fn main() {
+    let manifest = Manifest::load(artifacts_dir()).expect("make artifacts first");
+    let full = std::env::var("PUSH_BENCH_FULL").is_ok();
+    let opts = if full {
+        ScaleOpts {
+            devices: vec![1, 2, 4],
+            particles_base: vec![1, 2, 4, 8],
+            batches: 40,
+            epochs: 3,
+            ..ScaleOpts::default()
+        }
+    } else {
+        // fast grid sized for a 1-core CI-style run (~10 min total)
+        ScaleOpts {
+            devices: vec![1, 2, 4],
+            particles_base: vec![1, 2],
+            batches: 2,
+            epochs: 2,
+            ..ScaleOpts::default()
+        }
+    };
+
+    let rep = run_figure(
+        &manifest,
+        "fig4_scaling",
+        &["vit_fig4", "cgcnn_fig4", "unet_fig4"],
+        &Method::all(),
+        &opts,
+    )
+    .expect("fig4");
+    rep.print();
+    let p = rep.save(results_dir()).expect("save");
+    println!("saved {p:?}");
+
+    let rep = run_figure(
+        &manifest,
+        "fig7_scaling",
+        &["resnet_fig7", "schnet_fig7"],
+        &Method::all(),
+        &opts,
+    )
+    .expect("fig7");
+    rep.print();
+    let p = rep.save(results_dir()).expect("save");
+    println!("saved {p:?}");
+    let _ = full;
+}

@@ -1,0 +1,160 @@
+//! L3 coordinator micro-benchmarks (criterion-less; see bench::harness).
+//!
+//! Measures the NEL primitives the perf pass optimizes: future round-trip,
+//! message dispatch through a particle control thread, device-job
+//! dispatch, context-switch (swap) cost under cache pressure, parameter
+//! views, and the native SVGD kernel math.
+//!
+//! Run: `cargo bench --bench l3_microbench` (needs `make artifacts`).
+
+use push::bench::harness::{bench, bench_header};
+use push::device::CostModel;
+use push::infer::svgd_update_native;
+use push::nel::CreateOpts;
+use push::particle::{handler, PFuture, Value};
+use push::runtime::{artifacts_dir, Manifest, Tensor};
+use push::util::rng::Rng;
+use push::{NelConfig, PushDist};
+
+fn cfg(devices: usize, cache: usize) -> NelConfig {
+    NelConfig {
+        num_devices: devices,
+        cache_size: cache,
+        cost: CostModel::free(),
+        seed: 1,
+        ..NelConfig::default()
+    }
+}
+
+fn main() {
+    let manifest = Manifest::load(artifacts_dir()).expect("make artifacts first");
+    bench_header();
+
+    // ---- pure future round-trip (no NEL) --------------------------------
+    bench("pfuture_complete_wait", 100, 1000, || {
+        let f = PFuture::new();
+        f.complete(Ok(Value::Unit));
+        let _ = f.wait();
+    });
+
+    // ---- message -> handler -> reply through a control thread -----------
+    {
+        let pd = PushDist::new(&manifest, "mlp_tiny", cfg(1, 4)).unwrap();
+        let noop = handler(|_ctx, _| Ok(Value::Unit));
+        let p = pd
+            .p_create(CreateOpts {
+                receive: [("PING".to_string(), noop)].into_iter().collect(),
+                ..CreateOpts::default()
+            })
+            .unwrap();
+        pd.p_launch(p, "PING", vec![]).wait().unwrap();
+        bench("message_roundtrip_noop_handler", 100, 1000, || {
+            pd.p_launch(p, "PING", vec![]).wait().unwrap();
+        });
+    }
+
+    // ---- device job dispatch (queue + thread + reply) --------------------
+    {
+        let pd = PushDist::new(&manifest, "mlp_tiny", cfg(1, 4)).unwrap();
+        let p = pd.p_create(CreateOpts::default()).unwrap();
+        pd.get(p).wait().unwrap();
+        bench("device_job_param_view", 100, 1000, || {
+            pd.get(p).wait().unwrap();
+        });
+    }
+
+    // ---- PJRT execute of the smallest entry ------------------------------
+    {
+        let pd = PushDist::new(&manifest, "mlp_tiny", cfg(1, 4)).unwrap();
+        let p = pd.p_create(CreateOpts::default()).unwrap();
+        let model = pd.model().clone();
+        let xn: usize = model.x_shape.iter().product();
+        let x = Tensor::f32(model.x_shape.clone(), vec![0.1; xn]);
+        pd.forward(p, x.clone()).wait().unwrap();
+        bench("pjrt_forward_mlp_tiny", 20, 150, || {
+            pd.forward(p, x.clone()).wait().unwrap();
+        });
+    }
+
+    // ---- context switch: alternate two particles in a 1-slot cache ------
+    {
+        let pd = PushDist::new(&manifest, "mlp_small", cfg(1, 1)).unwrap();
+        let pids = pd.p_create_n(2, |_| CreateOpts::default()).unwrap();
+        pd.get(pids[0]).wait().unwrap();
+        let mut flip = 0usize;
+        bench("context_switch_swap_in_out", 50, 500, || {
+            // every access misses: swap-out + swap-in of ~21 KB params
+            pd.get(pids[flip % 2]).wait().unwrap();
+            flip += 1;
+        });
+        let stats = pd.stats();
+        println!(
+            "    (cache hits {} misses {} swapped {} MB)",
+            stats.devices[0].cache_hits,
+            stats.devices[0].cache_misses,
+            stats.devices[0].swap_bytes / (1 << 20)
+        );
+    }
+
+    // ---- cache hit path for comparison -----------------------------------
+    {
+        let pd = PushDist::new(&manifest, "mlp_small", cfg(1, 2)).unwrap();
+        let pids = pd.p_create_n(2, |_| CreateOpts::default()).unwrap();
+        pd.get(pids[0]).wait().unwrap();
+        pd.get(pids[1]).wait().unwrap();
+        let mut flip = 0usize;
+        bench("context_switch_cache_hit", 50, 500, || {
+            pd.get(pids[flip % 2]).wait().unwrap();
+            flip += 1;
+        });
+    }
+
+    // ---- native SVGD update math (the baseline's kernel path) ------------
+    {
+        let d = 5000;
+        let mut rng = Rng::new(3);
+        for n in [4usize, 16] {
+            let p: Vec<Tensor> =
+                (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+            let g: Vec<Tensor> =
+                (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+            bench(&format!("svgd_native_n{n}_d{d}"), 3, 30, || {
+                svgd_update_native(&p, &g, 10.0).unwrap();
+            });
+        }
+    }
+
+    // ---- SVGD Pallas artifact vs native (same shapes) ---------------------
+    {
+        let pd = PushDist::new(&manifest, "mlp_small", cfg(1, 4)).unwrap();
+        let d = pd.model().param_count;
+        let mut rng = Rng::new(4);
+        for n in [4usize, 16] {
+            let path = pd.svgd_artifact(n).expect("svgd artifact");
+            let p = Tensor::f32(vec![n, d], rng.normal_vec(n * d));
+            let g = Tensor::f32(vec![n, d], rng.normal_vec(n * d));
+            let h = Tensor::scalar_f32(10.0);
+            pd.nel()
+                .run_artifact(0, path.clone(), vec![p.clone(), g.clone(), h.clone()])
+                .wait()
+                .unwrap();
+            bench(&format!("svgd_artifact_n{n}_d{d}"), 5, 50, || {
+                pd.nel()
+                    .run_artifact(0, path.clone(), vec![p.clone(), g.clone(), h.clone()])
+                    .wait()
+                    .unwrap();
+            });
+        }
+    }
+
+    // ---- tensor stacking (leader-side gather cost) ------------------------
+    {
+        let d = 50_000;
+        let mut rng = Rng::new(5);
+        let rows: Vec<Tensor> = (0..16).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+        bench("stack_rows_16x50k", 20, 500, || {
+            let refs: Vec<&Tensor> = rows.iter().collect();
+            let _ = Tensor::stack_rows(&refs);
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! Tables 1 & 2 regeneration (scaled): the depth/width vs particles
+//! tradeoff at constant effective parameter count, multi-SWAG on the ViT
+//! sweep across 1/2/4 simulated devices.
+//!
+//! Fast by default (2 batches/epoch); PUSH_BENCH_FULL=1 runs 40 batches
+//! and the long width tail (w16/w8 with 32/128 particles).
+
+use push::bench::depth_width::{run, table1_rows, table2_rows};
+use push::bench::report::results_dir;
+use push::bench::scaling::ScaleOpts;
+use push::runtime::{artifacts_dir, Manifest};
+
+fn main() {
+    let manifest = Manifest::load(artifacts_dir()).expect("make artifacts first");
+    let full = std::env::var("PUSH_BENCH_FULL").is_ok();
+    let opts = ScaleOpts {
+        devices: vec![1, 2, 4],
+        batches: if full { 40 } else { 2 },
+        epochs: if full { 3 } else { 2 },
+        cache_size: 8,
+        baseline: false,
+        ..ScaleOpts::default()
+    };
+
+    let rep = run(&manifest, "table1_depth", &table1_rows(), &[1, 2, 4], &opts).expect("table1");
+    rep.print();
+    let p = rep.save(results_dir()).expect("save");
+    println!("saved {p:?}\n");
+
+    let mut t2 = table2_rows(full);
+    if !full {
+        t2.truncate(3);
+    }
+    let rep = run(&manifest, "table2_width", &t2, &[1, 2, 4], &opts).expect("table2");
+    rep.print();
+    let p = rep.save(results_dir()).expect("save");
+    println!("saved {p:?}");
+}

@@ -1,0 +1,127 @@
+//! End-to-end driver (DESIGN.md §5, row "E2E"): train a transformer
+//! ensemble with multi-SWAG on the synthetic-MNIST workload for a few
+//! hundred steps, logging the loss curve, then evaluate standard vs
+//! multi-SWAG accuracy on a held-out split.
+//!
+//! This proves every layer composes: Rust coordinator -> NEL -> simulated
+//! devices -> PJRT -> AOT HLO (L2 JAX model with the L1 Pallas
+//! fused-linear kernel lowered inside). The paper-scale 100M+ ViT is a
+//! GPU budget; `vit_e2e` (~1.3M params, the largest this CPU testbed
+//! trains in minutes) keeps the identical architecture and protocol —
+//! recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_train [-- --steps 300]
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use push::bench::{data_for, lr_for};
+use push::data::DataLoader;
+use push::device::CostModel;
+use push::infer::eval::dataset_accuracy;
+use push::infer::{DeepEnsemble, Infer, MultiSwag, SwagConfig};
+use push::runtime::{artifacts_dir, Manifest};
+use push::util::flags::Flags;
+use push::{NelConfig, PushDist};
+
+fn main() -> Result<()> {
+    let flags = Flags::from_env().map_err(anyhow::Error::msg)?;
+    let model_name = flags.str_or("model", "vit_e2e");
+    let steps = flags.usize_or("steps", 300).map_err(anyhow::Error::msg)?;
+    let particles = flags.usize_or("particles", 4).map_err(anyhow::Error::msg)?;
+    let devices = flags.usize_or("devices", 2).map_err(anyhow::Error::msg)?;
+    let batches_per_epoch = 10usize;
+    let epochs = steps.div_ceil(batches_per_epoch);
+    let pretrain = (epochs * 7) / 10; // the paper's 7:3 pretrain/SWAG split
+
+    let manifest = Manifest::load(artifacts_dir())?;
+    let cfg = NelConfig {
+        num_devices: devices,
+        cache_size: 4,
+        cost: CostModel::default(),
+        seed: 1234,
+        ..NelConfig::default()
+    };
+    let pd = PushDist::new(&manifest, &model_name, cfg)?;
+    let model = pd.model().clone();
+    let lr = lr_for(&model);
+    println!(
+        "e2e: {model_name} ({} params x {particles} particles = {:.1}M effective) on {devices} devices",
+        model.param_count,
+        (model.param_count * particles) as f64 / 1e6
+    );
+    println!("     {steps} steps = {epochs} epochs x {batches_per_epoch} batches, batch {}, lr {lr}", model.batch());
+
+    // train/test split of the synthetic-MNIST substitute
+    let n_train = model.batch() * batches_per_epoch;
+    let n_test = model.batch() * 4;
+    let all = data_for(&model, n_train + n_test, 99)?;
+    let (train, test) = all.split(n_test as f32 / (n_train + n_test) as f32);
+    let mut loader =
+        DataLoader::new(train.clone(), model.batch(), true, 5).with_max_batches(batches_per_epoch);
+
+    // ---------------- multi-SWAG training with a loss curve ---------------
+    let mut algo = MultiSwag::new(
+        pd,
+        SwagConfig {
+            particles,
+            lr,
+            pretrain_epochs: pretrain,
+            n_samples: 5,
+            scale: 1e-3,
+            adam: true, // the paper's Tables 3/4 protocol
+            seed: 0,
+        },
+    )?;
+    let t0 = Instant::now();
+    println!("\nstep  epoch  phase     mean_loss   secs/epoch");
+    let mut step_count = 0usize;
+    for e in 0..epochs {
+        let rep = algo.train(&mut loader, 1)?;
+        step_count += batches_per_epoch;
+        let phase = if e >= pretrain { "swag" } else { "pretrain" };
+        println!(
+            "{:>4}  {:>5}  {:<8}  {:>9.4}   {:>8.2}s",
+            step_count,
+            e,
+            phase,
+            rep.final_loss(),
+            rep.mean_epoch_secs()
+        );
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+
+    // ---------------- evaluation ------------------------------------------
+    let ms_acc = dataset_accuracy(&test, model.batch(), |x| algo.predict_swag(x))?;
+
+    // standard-training comparison: one particle, same total step budget
+    let pd_std = PushDist::new(
+        &manifest,
+        &model_name,
+        NelConfig {
+            num_devices: devices,
+            cache_size: 4,
+            cost: CostModel::default(),
+            seed: 4321,
+            ..NelConfig::default()
+        },
+    )?;
+    let mut std_algo = DeepEnsemble::new(pd_std, 1, lr)?;
+    let mut loader2 =
+        DataLoader::new(train, model.batch(), true, 5).with_max_batches(batches_per_epoch);
+    std_algo.train(&mut loader2, epochs)?;
+    let std_acc = dataset_accuracy(&test, model.batch(), |x| std_algo.predict_mean(x))?;
+
+    println!("\n== e2e results ==");
+    println!("training wall time      : {train_secs:.1}s for {step_count} steps x {particles} particles");
+    println!("multi-SWAG test accuracy: {:.2}%  (majority vote, 5 draws/particle)", 100.0 * ms_acc);
+    println!("standard test accuracy  : {:.2}%  (single network, same steps)", 100.0 * std_acc);
+    let stats = algo.pd().stats();
+    println!("\nmessages: {} total, {} cross-device", stats.msgs_sent, stats.msgs_cross_device);
+    for (i, d) in stats.devices.iter().enumerate() {
+        println!("{}", d.summary(i));
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Quickstart: the paper's Figures 1 + 2 in Rust.
+//!
+//! Builds a Push distribution over the small MLP, registers the all-to-all
+//! `_gather` handler (Figure 1), launches it from particle 0, then runs a
+//! few synchronized training steps and prints the posterior-mean
+//! prediction. Run with:
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{anyhow, Result};
+use push::data::{synth, DataLoader};
+use push::device::CostModel;
+use push::infer::{DeepEnsemble, Infer};
+use push::nel::CreateOpts;
+use push::particle::{handler, PFuture, Value};
+use push::runtime::{artifacts_dir, Manifest};
+use push::{NelConfig, PushDist};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir())?;
+    let cfg = NelConfig {
+        num_devices: 2,
+        cache_size: 4,
+        cost: CostModel::default(),
+        trace: true, // record the Figure-3b event timeline
+        seed: 42,
+        ..NelConfig::default()
+    };
+
+    // push_dist = Push(nn, *args)  (paper Figure 2, line 2)
+    let pd = PushDist::new(&manifest, "mlp_small", cfg)?;
+    println!(
+        "PD over {} ({} params, task={}) on {} simulated devices",
+        pd.model().name,
+        pd.model().param_count,
+        pd.model().task,
+        pd.nel().num_devices()
+    );
+
+    // _gather: the paper's Figure 1, line for line.
+    let gather = handler(|particle, _args| {
+        // 1. Determine other particles
+        let other_particles = particle.other_particles();
+        // 2. Gather every other particle's parameters
+        let futures: Vec<PFuture> = other_particles.iter().map(|pid| particle.get(*pid)).collect();
+        // 3. Wait for the results
+        let views = PFuture::wait_all(&futures)?;
+        // 4. View a particle's parameters (read-only copy)
+        let first = views[0].as_tensor()?;
+        println!(
+            "  [gather on {}] got {} views; first starts with {:?}",
+            particle.pid,
+            views.len(),
+            &first.as_f32()[..4]
+        );
+        Ok(Value::Usize(views.len()))
+    });
+
+    // p_create x4, each answering "GATHER" (paper Figure 2, lines 4-6)
+    let pids = pd.p_create_n(4, |_| CreateOpts {
+        receive: [("GATHER".to_string(), gather.clone())].into_iter().collect(),
+        ..CreateOpts::default()
+    })?;
+    println!("created particles: {pids:?}");
+
+    // p_launch + p_wait (paper Figure 2, line 7)
+    let fut = pd.p_launch(pids[0], "GATHER", vec![]);
+    let got = pd.p_wait(&[fut]).map_err(|e| anyhow!("{e}"))?;
+    println!("all-to-all gather returned {got:?}\n");
+
+    // A few epochs of the simplest BDL algorithm: a deep ensemble.
+    let model = pd.model().clone();
+    let data = synth::linear(model.batch() * 8, model.x_shape[1], 0.05, 7);
+    let mut loader = DataLoader::new(data, model.batch(), true, 1).with_max_batches(8);
+    let mut ensemble = DeepEnsemble::new(pd, 4, 5e-3)?;
+    let report = ensemble.train(&mut loader, 5)?;
+    for (e, ep) in report.epochs.iter().enumerate() {
+        println!("epoch {e}: mean loss {:.4} ({:.3}s)", ep.mean_loss, ep.secs);
+    }
+
+    let batch = loader.epoch()[0].clone();
+    let pred = ensemble.predict_mean(&batch.x)?;
+    println!(
+        "\nposterior-mean prediction (first 4): {:?}\ntargets                  (first 4): {:?}",
+        &pred.as_f32()[..4],
+        &batch.y.as_f32()[..4]
+    );
+
+    // Figure-3b style event timeline (first 25 events)
+    let trace = ensemble.pd().nel().trace().snapshot();
+    println!("\nNEL event timeline (first 25 of {} events):", trace.len());
+    println!("    t(us)  dev  particle  event          bytes");
+    for e in trace.iter().take(25) {
+        let pid = e.pid.map(|p| format!("{p}")).unwrap_or_else(|| "-".into());
+        println!(
+            "{:>9}  {:>3}  {:>8}  {:<13} {:>6}  {}",
+            e.t_us,
+            e.device,
+            pid,
+            e.kind.name(),
+            e.bytes,
+            e.note
+        );
+    }
+
+    let stats = ensemble.pd().stats();
+    println!("\nmessages sent: {} (cross-device {})", stats.msgs_sent, stats.msgs_cross_device);
+    for (i, d) in stats.devices.iter().enumerate() {
+        println!("{}", d.summary(i));
+    }
+    Ok(())
+}

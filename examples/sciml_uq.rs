@@ -1,0 +1,123 @@
+//! SciML uncertainty quantification (the paper's §5.1 motivation:
+//! "scientists and engineers want to provide guarantees on the
+//! trustworthiness of surrogate models").
+//!
+//! Trains a deep ensemble of UNet surrogates on the 1-D advection
+//! operator-learning task, then uses the particle spread as a predictive
+//! uncertainty estimate and checks it correlates with the true error —
+//! the basic UQ sanity test for BDL surrogates.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example sciml_uq
+//! ```
+
+use anyhow::Result;
+use push::bench::{data_for, lr_for};
+use push::data::DataLoader;
+use push::device::CostModel;
+use push::infer::{DeepEnsemble, Infer};
+use push::runtime::{artifacts_dir, Manifest, Tensor};
+use push::util::flags::Flags;
+use push::{NelConfig, PushDist};
+
+fn main() -> Result<()> {
+    let flags = Flags::from_env().map_err(anyhow::Error::msg)?;
+    let particles = flags.usize_or("particles", 6).map_err(anyhow::Error::msg)?;
+    let epochs = flags.usize_or("epochs", 20).map_err(anyhow::Error::msg)?;
+
+    let manifest = Manifest::load(artifacts_dir())?;
+    let pd = PushDist::new(
+        &manifest,
+        "unet_fig4",
+        NelConfig {
+            num_devices: 2,
+            cache_size: 4,
+            cost: CostModel::default(),
+            seed: 7,
+            ..NelConfig::default()
+        },
+    )?;
+    let model = pd.model().clone();
+    let lr = lr_for(&model);
+    println!(
+        "UQ: UNet-1D advection surrogate, {} params x {particles} particles",
+        model.param_count
+    );
+
+    let n_train = model.batch() * 8;
+    let n_test = model.batch();
+    let all = data_for(&model, n_train + n_test, 3)?;
+    let (train, test) = all.split(n_test as f32 / (n_train + n_test) as f32);
+    let mut loader = DataLoader::new(train, model.batch(), true, 11).with_max_batches(8);
+
+    let mut ens = DeepEnsemble::new(pd, particles, lr)?;
+    println!("\nepoch  mean_loss");
+    for e in 0..epochs {
+        let rep = ens.train(&mut loader, 1)?;
+        if e % 4 == 0 || e == epochs - 1 {
+            println!("{e:>5}  {:.5}", rep.final_loss());
+        }
+    }
+
+    // ---- predictive mean + spread on the held-out batch ----
+    let batch = test.gather(&(0..model.batch()).collect::<Vec<_>>());
+    let pids = ens.pids();
+    let preds: Vec<Tensor> = pids
+        .iter()
+        .map(|p| ens.pd().forward(*p, batch.x.clone()).wait().unwrap().tensor().unwrap())
+        .collect();
+    let n = preds.len() as f32;
+    let len = preds[0].element_count();
+    let mut mean = vec![0.0f32; len];
+    for p in &preds {
+        for (m, v) in mean.iter_mut().zip(p.as_f32()) {
+            *m += v / n;
+        }
+    }
+    let mut var = vec![0.0f32; len];
+    for p in &preds {
+        for ((va, v), m) in var.iter_mut().zip(p.as_f32()).zip(&mean) {
+            *va += (v - m) * (v - m) / n;
+        }
+    }
+    let y = batch.y.as_f32();
+    let err: Vec<f32> = mean.iter().zip(y).map(|(m, t)| (m - t).abs()).collect();
+    let std: Vec<f32> = var.iter().map(|v| v.sqrt()).collect();
+
+    // rank correlation (Spearman-ish via Pearson on ranks would be heavy;
+    // Pearson on |err| vs std is the standard quick UQ diagnostic)
+    let pearson = {
+        let n = err.len() as f64;
+        let (me, ms) = (
+            err.iter().map(|v| *v as f64).sum::<f64>() / n,
+            std.iter().map(|v| *v as f64).sum::<f64>() / n,
+        );
+        let mut num = 0.0;
+        let mut de = 0.0;
+        let mut ds = 0.0;
+        for (e, s) in err.iter().zip(&std) {
+            let a = *e as f64 - me;
+            let b = *s as f64 - ms;
+            num += a * b;
+            de += a * a;
+            ds += b * b;
+        }
+        num / (de.sqrt() * ds.sqrt() + 1e-12)
+    };
+
+    let mse: f64 =
+        mean.iter().zip(y).map(|(m, t)| ((m - t) as f64).powi(2)).sum::<f64>() / len as f64;
+    println!("\n== UQ results on held-out advection fields ==");
+    println!("ensemble-mean MSE         : {mse:.5}");
+    println!("mean predictive std       : {:.5}", std.iter().sum::<f32>() / len as f32);
+    println!("corr(|error|, pred. std)  : {pearson:.3}  (positive = informative uncertainty)");
+    println!("\nper-point sample (x=grid index of field 0):");
+    println!("  idx   truth    mean     std     |err|");
+    for i in (0..model.x_shape[1]).step_by(8) {
+        println!(
+            "{:>5}  {:>6.3}  {:>6.3}  {:>6.4}  {:>6.4}",
+            i, y[i], mean[i], std[i], err[i]
+        );
+    }
+    Ok(())
+}

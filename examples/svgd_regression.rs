@@ -1,0 +1,164 @@
+//! SVGD vs deep ensemble on noisy linear regression — demonstrates the
+//! paper's Appendix-B inference encoding and the effect of the repulsive
+//! kernel term: SVGD particles stay diverse where independent SGD members
+//! collapse toward the same mode.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example svgd_regression
+//! ```
+
+use anyhow::Result;
+use push::data::{synth, DataLoader};
+use push::device::CostModel;
+use push::infer::svgd::median_lengthscale;
+use push::infer::{DeepEnsemble, Infer, Svgd, SvgdConfig};
+use push::runtime::{artifacts_dir, Manifest, Tensor};
+use push::util::flags::Flags;
+use push::{NelConfig, PushDist};
+
+/// Mean pairwise L2 distance between particle parameter vectors — the
+/// diversity measure the repulsion term acts on.
+fn diversity(params: &[Tensor]) -> f64 {
+    let n = params.len();
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d: f64 = params[i]
+                .as_f32()
+                .iter()
+                .zip(params[j].as_f32())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            total += d.sqrt();
+            count += 1;
+        }
+    }
+    total / count.max(1) as f64
+}
+
+fn main() -> Result<()> {
+    let flags = Flags::from_env().map_err(anyhow::Error::msg)?;
+    let particles = flags.usize_or("particles", 8).map_err(anyhow::Error::msg)?;
+    let epochs = flags.usize_or("epochs", 25).map_err(anyhow::Error::msg)?;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let cfg = || NelConfig {
+        num_devices: 2,
+        cache_size: 8,
+        cost: CostModel::default(),
+        seed: 55,
+        ..NelConfig::default()
+    };
+
+    let model = manifest.model("mlp_small")?.clone();
+    let data = synth::linear(model.batch() * 6, model.x_shape[1], 0.1, 13);
+    let mk_loader = || {
+        DataLoader::new(data.clone(), model.batch(), true, 17).with_max_batches(6)
+    };
+
+    // ---------------- SVGD (kernel artifact on the leader device) --------
+    let pd = PushDist::new(&manifest, "mlp_small", cfg())?;
+    let mut svgd = Svgd::new(
+        pd,
+        SvgdConfig {
+            particles,
+            lr: 5e-3,
+            lengthscale: 5.0,
+            median_heuristic: true, // h tracks the particle spread
+            prior_std: Some(10.0),  // Gaussian prior => Appendix-B score term
+            force_native: false,
+        },
+    )?;
+    let mut loader = mk_loader();
+    println!("SVGD on {} particles (kernel artifact: {})", particles,
+             svgd.pd().svgd_artifact(particles).is_some());
+    let mut svgd_curve = Vec::new();
+    for _ in 0..epochs {
+        let rep = svgd.train(&mut loader, 1)?;
+        svgd_curve.push(rep.final_loss());
+    }
+    let svgd_params: Vec<Tensor> = svgd.pd().drain_params()?.into_values().collect();
+
+    // ---------------- independent ensemble, same budget -------------------
+    let pd = PushDist::new(&manifest, "mlp_small", cfg())?;
+    let mut ens = DeepEnsemble::new(pd, particles, 5e-3)?;
+    let mut loader = mk_loader();
+    let mut ens_curve = Vec::new();
+    for _ in 0..epochs {
+        let rep = ens.train(&mut loader, 1)?;
+        ens_curve.push(rep.final_loss());
+    }
+    let ens_params: Vec<Tensor> = ens.pd().drain_params()?.into_values().collect();
+
+    println!("\nepoch   svgd_loss   ensemble_loss");
+    for e in (0..epochs).step_by(4.max(epochs / 6)) {
+        println!("{e:>5}   {:>9.4}   {:>13.4}", svgd_curve[e], ens_curve[e]);
+    }
+    println!(
+        "{:>5}   {:>9.4}   {:>13.4}",
+        epochs - 1,
+        svgd_curve[epochs - 1],
+        ens_curve[epochs - 1]
+    );
+
+    let div_svgd = diversity(&svgd_params);
+    let div_ens = diversity(&ens_params);
+    println!("\n== particle diversity ==");
+    println!("parameter space (mean pairwise distance): svgd {div_svgd:.3} vs ensemble {div_ens:.3}");
+
+    // kernel interaction strength under the median heuristic: off-diagonal
+    // k values ~ exp(-0.5 log n) — the repulsion term is ACTIVE, unlike a
+    // fixed small lengthscale where k_ij ~ 0 in high dimensions.
+    let h = median_lengthscale(&svgd_params);
+    let mut k_sum = 0.0f64;
+    let mut k_cnt = 0usize;
+    for i in 0..svgd_params.len() {
+        for j in (i + 1)..svgd_params.len() {
+            let d2: f32 = svgd_params[i]
+                .as_f32()
+                .iter()
+                .zip(svgd_params[j].as_f32())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            k_sum += (-0.5 * d2 / (h * h)).exp() as f64;
+            k_cnt += 1;
+        }
+    }
+    println!(
+        "median-heuristic h = {h:.2}; mean off-diagonal k_ij = {:.3} (repulsion active)",
+        k_sum / k_cnt as f64
+    );
+
+    // function-space diversity: per-point std of particle predictions
+    let fdiv = |pd: &push::PushDist, pids: &[push::Pid], x: &Tensor| -> f64 {
+        let preds: Vec<Tensor> = pids
+            .iter()
+            .map(|p| pd.forward(*p, x.clone()).wait().unwrap().tensor().unwrap())
+            .collect();
+        let n = preds.len() as f64;
+        let len = preds[0].element_count();
+        let mut total = 0.0;
+        for i in 0..len {
+            let m: f64 = preds.iter().map(|p| p.as_f32()[i] as f64).sum::<f64>() / n;
+            let v: f64 =
+                preds.iter().map(|p| (p.as_f32()[i] as f64 - m).powi(2)).sum::<f64>() / n;
+            total += v.sqrt();
+        }
+        total / len as f64
+    };
+    let b = mk_loader().epoch()[0].clone();
+    let svgd_pids = svgd.pids();
+    let ens_pids = ens.pids();
+    println!(
+        "function space (mean per-point pred std): svgd {:.4} vs ensemble {:.4}",
+        fdiv(svgd.pd(), &svgd_pids, &b.x),
+        fdiv(ens.pd(), &ens_pids, &b.x)
+    );
+
+    // posterior-mean predictions agree with targets
+    let b = mk_loader().epoch()[0].clone();
+    let pred = svgd.predict_mean(&b.x)?;
+    println!("\nSVGD posterior mean (first 4): {:?}", &pred.as_f32()[..4]);
+    println!("targets             (first 4): {:?}", &b.y.as_f32()[..4]);
+    Ok(())
+}

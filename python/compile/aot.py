@@ -1,0 +1,173 @@
+"""AOT driver: lower every L2 entry to HLO *text* + write the manifest.
+
+This is the only place Python touches the build: `make artifacts` runs this
+module once; the Rust coordinator then loads `artifacts/*.hlo.txt` through
+the PJRT CPU client and never imports Python again.
+
+Interchange is HLO text, NOT `.serialize()` / StableHLO bytes: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--only fig4 vit_d8 ...]
+                          [--force] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.svgd import svgd_update
+from .models import registry
+from .models.common import ModelDef, example_args, make_entries
+
+_DTYPE_NAMES = {
+    jnp.float32.dtype: "f32",
+    jnp.int32.dtype: "i32",
+    jnp.uint32.dtype: "u32",
+}
+
+
+def dtype_name(dt) -> str:
+    try:
+        return _DTYPE_NAMES[jnp.dtype(dt)]
+    except KeyError:
+        raise ValueError(f"dtype {dt} not part of the L2/L3 contract") from None
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def sig_of(fn, args) -> Tuple[List[dict], List[dict]]:
+    """(arg specs, output specs) for the manifest."""
+    outs = jax.eval_shape(fn, *args)
+    spec = lambda s: {"shape": list(s.shape), "dtype": dtype_name(s.dtype)}  # noqa: E731
+    return [spec(a) for a in args], [spec(o) for o in outs]
+
+
+def lower_entry(fn, args, path: str, force: bool) -> bool:
+    """Lower fn(*args) to HLO text at `path`. Returns True if (re)built."""
+    if os.path.exists(path) and not force:
+        return False
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return True
+
+
+def build_model(name: str, model: ModelDef, out_dir: str,
+                force: bool) -> dict:
+    entries = make_entries(model)
+    ex = example_args(model)
+    entry_manifest = {}
+    for ename, fn in entries.items():
+        args, outs = sig_of(fn, ex[ename])
+        fname = f"{name}.{ename}.hlo.txt"
+        t0 = time.time()
+        built = lower_entry(fn, ex[ename], os.path.join(out_dir, fname), force)
+        status = f"lowered in {time.time() - t0:.1f}s" if built else "cached"
+        print(f"  {name}.{ename}: {status}", flush=True)
+        entry_manifest[ename] = {"file": fname, "args": args, "outs": outs}
+    return {
+        "param_count": model.param_count,
+        "task": model.task,
+        "x_shape": list(model.x_shape),
+        "y_shape": list(model.y_shape),
+        "y_dtype": model.y_dtype,
+        "meta": {k: v for k, v in model.meta.items()},
+        "entries": entry_manifest,
+    }
+
+
+def build_svgd(n: int, d: int, out_dir: str, force: bool) -> dict:
+    """svgd_update artifact for n particles with d flat params each."""
+    def entry(p, g, h):
+        return (svgd_update(p, g, h),)
+
+    f32 = jnp.float32
+    args = (jax.ShapeDtypeStruct((n, d), f32),
+            jax.ShapeDtypeStruct((n, d), f32),
+            jax.ShapeDtypeStruct((), f32))
+    fname = f"svgd_n{n}_d{d}.hlo.txt"
+    t0 = time.time()
+    built = lower_entry(entry, args, os.path.join(out_dir, fname), force)
+    status = f"lowered in {time.time() - t0:.1f}s" if built else "cached"
+    print(f"  svgd n={n} d={d}: {status}", flush=True)
+    aspec, ospec = sig_of(entry, args)
+    return {"n": n, "d": d, "file": fname, "args": aspec, "outs": ospec}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="model or group names (default: everything)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    ap.add_argument("--no-svgd", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    opts = ap.parse_args()
+
+    names = registry.groups_for(opts.only) if opts.only \
+        else list(registry.REGISTRY)
+    if opts.list:
+        for g, ms in registry.GROUPS.items():
+            print(f"{g}: {' '.join(ms)}")
+        return
+
+    os.makedirs(opts.out_dir, exist_ok=True)
+    manifest_path = os.path.join(opts.out_dir, "manifest.json")
+    manifest = {"models": {}, "svgd": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for name in names:
+        print(f"[aot] model {name}", flush=True)
+        model = registry.REGISTRY[name]()
+        manifest["models"][name] = build_model(name, model, opts.out_dir,
+                                               opts.force)
+
+    if not opts.no_svgd:
+        seen = {(s["n"], s["d"]) for s in manifest["svgd"]}
+        dims = {}
+        for mname in registry.SVGD_MODELS:
+            if mname in manifest["models"]:
+                dims[mname] = manifest["models"][mname]["param_count"]
+        for mname, d in dims.items():
+            print(f"[aot] svgd for {mname} (d={d})", flush=True)
+            for n in registry.SVGD_NS:
+                entry = build_svgd(n, d, opts.out_dir, opts.force)
+                if (n, d) not in seen:
+                    manifest["svgd"].append(entry)
+                    seen.add((n, d))
+
+    tmp = manifest_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, manifest_path)
+    n_art = len(os.listdir(opts.out_dir)) - 1
+    print(f"[aot] done: {n_art} artifacts, manifest at {manifest_path} "
+          f"({time.time() - t0:.1f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Flat-parameter-vector utilities.
+
+All Push models expose their parameters to the Rust coordinator as a single
+flat f32[P] vector (the particle's local state). Inside the jitted graph the
+vector is unflattened into the per-layer tensors. Keeping the L2/L3 contract
+to one tensor makes the Rust runtime generic over architectures and makes the
+SVGD kernel (which operates on stacked flat parameter vectors) trivial to
+feed.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def shape_size(shape: Sequence[int]) -> int:
+    """Number of elements of a tensor shape."""
+    return math.prod(shape) if shape else 1
+
+
+def total_size(shapes: Sequence[Tuple[int, ...]]) -> int:
+    """Total parameter count across a list of shapes."""
+    return sum(shape_size(s) for s in shapes)
+
+
+def unflatten(flat: jnp.ndarray, shapes: Sequence[Tuple[int, ...]]) -> List[jnp.ndarray]:
+    """Split a flat f32[P] vector into tensors with the given shapes.
+
+    The order of `shapes` is the canonical parameter order of the model; the
+    Rust side never needs to know it.
+    """
+    out = []
+    idx = 0
+    for s in shapes:
+        n = shape_size(s)
+        out.append(flat[idx : idx + n].reshape(s))
+        idx += n
+    assert idx == flat.shape[0], f"flat vector has {flat.shape[0]} params, shapes need {idx}"
+    return out
+
+
+def flatten(tensors: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Concatenate tensors into a flat f32[P] vector (inverse of unflatten)."""
+    return jnp.concatenate([t.reshape(-1) for t in tensors]) if tensors else jnp.zeros((0,), jnp.float32)

@@ -1,0 +1,151 @@
+"""Analytical TPU cost model for the L1 kernels (EXPERIMENTS.md §Perf).
+
+interpret=True executes kernels as numpy on CPU, so wall-clock there says
+nothing about TPU behaviour. What IS determined by the kernel source — and
+what this module computes from the same block parameters the kernels use —
+is the structural performance story:
+
+* VMEM working set per grid cell (must fit ~16 MiB with double-buffering),
+* MXU tile occupancy of the inner matmuls (128x128 systolic array),
+* HBM traffic vs the algorithmic lower bound (bandwidth-bound kernels).
+
+`push bench`'s §Perf numbers and DESIGN.md cite these estimates; the pytest
+suite pins them so a kernel/block-shape change that regresses the structure
+fails CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .fused_linear import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, pick_block
+from .svgd import DEFAULT_BD
+
+VMEM_BYTES = 16 * 1024 * 1024       # per-TensorCore VMEM
+MXU = 128                           # systolic array dimension
+F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    name: str
+    grid_cells: int
+    vmem_bytes_per_cell: int
+    mxu_m_occupancy: float          # fraction of the 128 MXU rows used
+    mxu_n_occupancy: float
+    hbm_traffic_bytes: int          # total bytes moved for one call
+    hbm_optimal_bytes: int          # algorithmic lower bound
+
+    @property
+    def fits_vmem(self) -> bool:
+        # x2 for double-buffering the streamed inputs
+        return 2 * self.vmem_bytes_per_cell <= VMEM_BYTES
+
+    @property
+    def mxu_tile_occupancy(self) -> float:
+        return self.mxu_m_occupancy * self.mxu_n_occupancy
+
+    @property
+    def traffic_efficiency(self) -> float:
+        """optimal / actual HBM bytes (1.0 = reads/writes each element once)."""
+        return self.hbm_optimal_bytes / max(1, self.hbm_traffic_bytes)
+
+
+def fused_linear_estimate(m: int, k: int, n: int,
+                          bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                          bk: int = DEFAULT_BK) -> KernelEstimate:
+    """y[M,N] = act(x[M,K] @ w[K,N] + b) with the kernel's blocking."""
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    cells = (m // bm) * (n // bn) * (k // bk)
+    vmem = F32 * (bm * bk + bk * bn + bm * bn + bn)
+    # every (i, j) output block streams the full K axis of x and w once:
+    traffic = F32 * ((m // bm) * (n // bn) * (bm * k + k * bn) + m * n)
+    optimal = F32 * (m * k + k * n + n + m * n)
+    return KernelEstimate(
+        name=f"fused_linear[{m}x{k}x{n}/bm{bm},bn{bn},bk{bk}]",
+        grid_cells=cells,
+        vmem_bytes_per_cell=vmem,
+        mxu_m_occupancy=min(1.0, bm / MXU),
+        mxu_n_occupancy=min(1.0, bn / MXU),
+        hbm_traffic_bytes=traffic,
+        hbm_optimal_bytes=optimal,
+    )
+
+
+def svgd_estimate(n: int, d: int, bd: int = DEFAULT_BD) -> KernelEstimate:
+    """Two-pass svgd_update over P[n,d], G[n,d] -> U[n,d]."""
+    bd = pick_block(d, bd)
+    cells = 2 * (d // bd)           # pass 1 + pass 2 share the d grid
+    # pass 2 working set dominates: K resident + P/G/U blocks + rowsum
+    vmem = F32 * (n * n + 3 * n * bd + n + 1)
+    # pass 1 reads P once; pass 2 reads P and G once and writes U:
+    traffic = F32 * (2 * n * d + n * d + n * d + 2 * n * n)
+    optimal = F32 * (3 * n * d)     # read P, G; write U
+    return KernelEstimate(
+        name=f"svgd_update[n{n},d{d}/bd{bd}]",
+        grid_cells=cells,
+        vmem_bytes_per_cell=vmem,
+        mxu_m_occupancy=min(1.0, n / MXU),
+        mxu_n_occupancy=min(1.0, n / MXU),
+        hbm_traffic_bytes=traffic,
+        hbm_optimal_bytes=optimal,
+    )
+
+
+def attention_estimate(bh: int, t: int, d: int, bq: int = 128) -> KernelEstimate:
+    """Fused softmax(QK^T)V per (bh, q-block) cell; K/V resident."""
+    bq = pick_block(t, bq)
+    cells = bh * (t // bq)
+    vmem = F32 * (bq * d + 2 * t * d + bq * t + bq * d)
+    # every q block revisits K and V in full:
+    traffic = F32 * (bh * (t * d + (t // bq) * 2 * t * d + t * d))
+    optimal = F32 * (bh * 4 * t * d)     # read Q, K, V; write O
+    return KernelEstimate(
+        name=f"attention[bh{bh},t{t},d{d}/bq{bq}]",
+        grid_cells=cells,
+        vmem_bytes_per_cell=vmem,
+        mxu_m_occupancy=min(1.0, bq / MXU),
+        mxu_n_occupancy=min(1.0, max(t, d) / MXU),
+        hbm_traffic_bytes=traffic,
+        hbm_optimal_bytes=optimal,
+    )
+
+
+def report(estimates) -> str:
+    """Human table, printed by `python -m compile.kernels.analysis`."""
+    lines = [
+        f"{'kernel':<46} {'cells':>6} {'VMEM/cell':>10} {'fits':>5} "
+        f"{'MXU occ':>8} {'HBM eff':>8}"
+    ]
+    for e in estimates:
+        lines.append(
+            f"{e.name:<46} {e.grid_cells:>6} "
+            f"{e.vmem_bytes_per_cell / 1024:>8.1f}KB "
+            f"{'yes' if e.fits_vmem else 'NO':>5} "
+            f"{100 * e.mxu_tile_occupancy:>7.1f}% "
+            f"{100 * e.traffic_efficiency:>7.1f}%"
+        )
+    return "\n".join(lines)
+
+
+def _default_suite():
+    """The shapes the shipped models actually lower (registry-aligned)."""
+    return [
+        # vit_fig4 FFN: (batch*tokens, hidden, mlp) = (640, 64, 128)
+        fused_linear_estimate(640, 64, 128),
+        # vit_e2e FFN: (320, 128, 256)
+        fused_linear_estimate(320, 128, 256),
+        # paper-scale FFN for reference: (65536, 768, 3072)
+        fused_linear_estimate(65536, 768, 3072),
+        # svgd over mlp_small and vit_fig4 parameter vectors
+        svgd_estimate(8, 5313),
+        svgd_estimate(32, 206346),
+        # vit attention: bh = batch*heads, t = tokens+1
+        attention_estimate(512, 5, 16),
+        attention_estimate(512, 256, 64, bq=128),  # long-seq reference
+    ]
+
+
+if __name__ == "__main__":
+    print(report(_default_suite()))

@@ -1,0 +1,100 @@
+"""Fused single-head attention Pallas kernel (L1).
+
+softmax(Q K^T / sqrt(d)) V computed per (batch*head, q-block) grid cell with
+K/V resident in VMEM — the logits tile never round-trips to HBM, which is
+the attention analogue of fused_linear's epilogue fusion. The paper's ViT
+workloads run at tiny token counts (28x28 / patch 14 -> 5 tokens), so K/V
+fit VMEM whole; the BlockSpec still tiles the query axis so the same kernel
+shape scales to longer sequences on a real TPU (DESIGN.md
+§Hardware-Adaptation).
+
+Differentiation: Pallas kernels have no transpose rule, so `attention` is a
+custom_vjp whose backward pass is the VJP of the pure-jnp reference — the
+forward hot path stays fused while the backward reuses XLA's fusion of the
+standard attention graph.
+
+Lowered with interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import pick_block
+
+DEFAULT_BQ = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One (bh, q-block) cell: o = softmax(q k^T / sqrt(d)) v.
+
+    Block shapes carry a leading singleton bh axis ((1, bq, d) etc.);
+    index it away so the matmuls are plain 2-D MXU shapes."""
+    q = q_ref[0]                                     # [bq, d]
+    k = k_ref[0]                                     # [t, d]
+    v = v_ref[0]                                     # [t, d]
+    d = q.shape[-1]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    m = jnp.max(logits, axis=-1, keepdims=True)      # numerical stability
+    p = jnp.exp(logits - m)
+    z = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = (jnp.dot(p, v, preferred_element_type=jnp.float32) / z).astype(
+        o_ref.dtype)
+
+
+def attention_raw(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  bq: int = DEFAULT_BQ, interpret: bool = True) -> jnp.ndarray:
+    """q[bh, t, d], k[bh, t, d], v[bh, t, d] -> [bh, t, d]."""
+    bh, t, d = q.shape
+    assert k.shape == (bh, t, d) and v.shape == (bh, t, d)
+    bq = pick_block(t, bq)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(bh, t // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),   # K resident
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),   # V resident
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _attention_ref(q, k, v):
+    d = q.shape[-1]
+    logits = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v)
+
+
+@jax.custom_vjp
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable fused attention; Pallas fwd, reference-graph bwd."""
+    return attention_raw(q, k, v)
+
+
+def _attention_fwd(q, k, v):
+    return attention_raw(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(_attention_ref, q, k, v)
+    return vjp(do)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def _kernel_blockspec_note() -> str:
+    """VMEM accounting used by EXPERIMENTS.md §Perf (L1): per grid cell the
+    working set is bq*d (Q tile) + 2*t*d (K/V resident) + bq*t (logits) +
+    bq*d (output) floats."""
+    return "see EXPERIMENTS.md §Perf"

@@ -1,0 +1,144 @@
+"""Fused linear + bias + GELU Pallas kernel (L1).
+
+The transformer/MLP feed-forward path is the per-particle compute hotspot for
+the ensemble/multi-SWAG workloads (paper §5: Push benefits most when compute
+per particle is high). On TPU this kernel tiles the matmul for the MXU
+(128x128 systolic array) and revisits a resident f32 output block in VMEM
+across the K-dimension grid axis, applying bias + GELU on the final K step so
+the activation never round-trips to HBM.
+
+Lowered with interpret=True so the CPU PJRT client can execute it (real-TPU
+Mosaic lowering is compile-only on this testbed — see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes, chosen for the MXU: the (bm, bn) output tile matches
+# the 128x128 systolic array when the problem is large enough; bk=128 keeps
+# the VMEM working set (bm*bk + bk*bn + bm*bn floats ~= 192 KiB at f32)
+# comfortably inside a TensorCore's ~16 MiB VMEM with room to double-buffer
+# the x/w input streams.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps_k, activation):
+    """One (i, j, k) grid step: o += x_blk @ w_blk; epilogue on last k.
+
+    The output BlockSpec maps every k to the same (i, j) block, so o_ref is
+    revisited (stays resident in VMEM) across the K axis and doubles as the
+    accumulator — no separate scratch needed, which also keeps the kernel
+    portable across interpret/Mosaic lowerings.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == nsteps_k - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...][None, :]
+        if activation == "gelu":
+            y = _gelu(y)
+        o_ref[...] = y
+
+
+def pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (so small shapes still tile)."""
+    b = max(1, min(dim, want))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def fused_linear_raw(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                     activation: str = "gelu",
+                     bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                     interpret: bool = True) -> jnp.ndarray:
+    """y = activation(x @ w + b) with x[M,K], w[K,N], b[N]."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(kdim, bk)
+    nsteps_k = kdim // bk
+
+    kernel = functools.partial(
+        _fused_linear_kernel, nsteps_k=nsteps_k, activation=activation
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nsteps_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def _gelu_grad(z):
+    """d/dz gelu(z) for the tanh approximation used in the kernel."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+    inner = c * (z + 0.044715 * z**3)
+    t = jnp.tanh(inner)
+    dinner = c * (1.0 + 3.0 * 0.044715 * z**2)
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * dinner
+
+
+# Pallas kernels have no automatic transpose rule (the grid/program_id
+# machinery is not differentiable), so the backward pass is hand-written —
+# and itself routed through the Pallas matmul so the L1 kernel stays on the
+# bwd hot path too. The pre-activation z is REMATERIALIZED in bwd (one extra
+# fused matmul) instead of saved, trading FLOPs for activation memory — the
+# same remat-over-store choice the L2 design doc calls out.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 activation: str = "gelu") -> jnp.ndarray:
+    """Differentiable y = activation(x @ w + b); Pallas fwd AND bwd."""
+    return fused_linear_raw(x, w, b, activation=activation)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    return fused_linear_raw(x, w, b, activation=activation), (x, w, b)
+
+
+def _fused_linear_bwd(activation, res, dy):
+    x, w, b = res
+    if activation == "gelu":
+        z = fused_linear_raw(x, w, b, activation="none")
+        dz = dy * _gelu_grad(z)
+    else:
+        dz = dy
+    zn = jnp.zeros((w.shape[0],), x.dtype)   # dx cols = K
+    zm = jnp.zeros((w.shape[1],), x.dtype)   # dw cols = N
+    # dx = dz @ w.T ; dw = x.T @ dz — both through the Pallas matmul path.
+    dx = fused_linear_raw(dz, w.T, zn, activation="none")
+    dw = fused_linear_raw(x.T, dz, zm, activation="none")
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

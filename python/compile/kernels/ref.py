@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here using
+only jax.numpy ops. pytest (python/tests/test_kernels.py) sweeps shapes/dtypes
+with deterministic seeds and asserts allclose between the Pallas kernel under
+interpret=True and these oracles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches the kernel's in-VMEM activation)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                     activation: str = "gelu") -> jnp.ndarray:
+    """Reference for kernels.fused_linear: y = act(x @ w + b)."""
+    y = x @ w + b[None, :]
+    if activation == "gelu":
+        return gelu_ref(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def pairwise_sq_dists_ref(p: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.svgd.pairwise_sq_dists: D[i,j] = ||p_i - p_j||^2."""
+    diff = p[:, None, :] - p[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def svgd_update_ref(p: jnp.ndarray, g: jnp.ndarray,
+                    lengthscale: jnp.ndarray) -> jnp.ndarray:
+    """Reference SVGD update in descent form (Liu & Wang 2016).
+
+    For particles p[n,d] with LOSS gradients g = -grad log posterior and RBF
+    lengthscale h:
+
+        k_ij = exp(-0.5 * ||p_i - p_j||^2 / h^2)
+        U_i  = (1/n) * sum_j [ k_ij * g_j + k_ij * (p_j - p_i) / h^2 ]
+
+    The caller applies p_i <- p_i - lr * U_i, which is exactly
+    x_i <- x_i + eps * phi*(x_i) of the SVGD paper: the first term is the
+    kernel-smoothed score descent, the second the repulsive grad-k term.
+
+    NOTE (DESIGN.md §SVGD-sign): the Push paper's Appendix-B listing applies
+    `diff * (-k/h)` with `p.add_(update, alpha=-lr)`, which flips the
+    repulsion into attraction. We reproduce the *algorithm* the paper cites
+    (canonical SVGD), not the listing's sign.
+    """
+    n = p.shape[0]
+    h2 = lengthscale * lengthscale
+    d2 = pairwise_sq_dists_ref(p)
+    k = jnp.exp(-0.5 * d2 / h2)                     # [n, n]
+    # sum_j k_ij g_j  = K @ G
+    term1 = k @ g
+    # sum_j k_ij (p_j - p_i)/h^2 = (K @ P - rowsum(K) * p_i) / h^2
+    rowsum = jnp.sum(k, axis=1, keepdims=True)      # [n, 1]
+    term2 = (k @ p - rowsum * p) / h2
+    return (term1 + term2) / n
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.attention: softmax(q k^T / sqrt(d)) v over
+    [bh, t, d] tensors."""
+    import jax
+    d = q.shape[-1]
+    logits = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v)

@@ -1,0 +1,118 @@
+"""SVGD RBF kernel-matrix update as Pallas kernels (L1).
+
+This is the paper's stated bottleneck: "at higher particle counts, the SVGD
+algorithm is fundamentally bottlenecked by the computation of the kernel
+matrix" (§5.1). The update for particle i given particles P[n,d] and loss
+gradients G[n,d] is
+
+    k_ij = exp(-0.5 ||p_i - p_j||^2 / h^2)
+    U_i  = (1/n) sum_j [ k_ij g_j + k_ij (p_j - p_i) / h^2 ]
+
+(descent form of canonical SVGD; the paper's Appendix-B listing has the
+repulsion sign flipped — see ref.svgd_update_ref and DESIGN.md §SVGD-sign).
+We restructure the paper's O(n^2 d) elementwise loop (their Fig. 6 leader
+code) into matmul form so it maps onto the MXU systolic array:
+
+    D    = pairwise squared distances              (Gram-style, pass 1)
+    K    = exp(-0.5 D / h^2)                        (tiny [n,n], host jnp)
+    U    = (K @ G + (K @ P - rowsum(K) * P)/h^2)/n  (pass 2)
+
+Pass 1 tiles the d axis: ||p_i - p_j||^2 decomposes blockwise as
+sum_blk ||p_i_blk - p_j_blk||^2, so the [n,n] output block stays resident in
+VMEM as the accumulator across the d grid axis. Pass 2 streams d-blocks of P
+and G through VMEM while K ([n,n], n <= 64 here, i.e. <= 16 KiB) stays
+resident. Both passes are bandwidth-bound in d with MXU-shaped inner matmuls.
+
+Lowered with interpret=True for CPU-PJRT execution (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import pick_block
+
+# d-axis block: 512 floats/row keeps the pass-2 working set
+# (3 * n * bd + n * n floats; n=32, bd=512 -> ~200 KiB) well inside VMEM with
+# double-buffering headroom, while keeping the streamed matmul K-dim a
+# multiple of the 128-lane register width.
+DEFAULT_BD = 512
+
+
+def _sq_dists_kernel(p_ref, d_ref, *, nsteps):
+    """Accumulate blockwise pairwise squared distances into d_ref[n,n]."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    blk = p_ref[...]                                    # [n, bd]
+    sq = jnp.sum(blk * blk, axis=1)                     # [n]
+    gram = jnp.dot(blk, blk.T, preferred_element_type=jnp.float32)
+    d_ref[...] += sq[:, None] + sq[None, :] - 2.0 * gram
+    del nsteps  # grid length only needed by the caller
+
+
+def pairwise_sq_dists(p: jnp.ndarray, bd: int = DEFAULT_BD,
+                      interpret: bool = True) -> jnp.ndarray:
+    """D[i,j] = ||p_i - p_j||^2 for p[n,d], tiled over d."""
+    n, d = p.shape
+    bd = pick_block(d, bd)
+    nsteps = d // bd
+    return pl.pallas_call(
+        functools.partial(_sq_dists_kernel, nsteps=nsteps),
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((n, bd), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((n, n), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(p)
+
+
+def _apply_kernel(k_ref, rs_ref, p_ref, g_ref, h2_ref, o_ref):
+    """One d-block of U = (K @ G + (rowsum(K) * P - K @ P)/h^2)/n."""
+    kmat = k_ref[...]                                   # [n, n] resident
+    p_blk = p_ref[...]                                  # [n, bd]
+    g_blk = g_ref[...]                                  # [n, bd]
+    h2 = h2_ref[0]
+    n = kmat.shape[0]
+    kg = jnp.dot(kmat, g_blk, preferred_element_type=jnp.float32)
+    kp = jnp.dot(kmat, p_blk, preferred_element_type=jnp.float32)
+    o_ref[...] = (kg + (kp - rs_ref[...][:, None] * p_blk) / h2) / n
+
+
+def svgd_update(p: jnp.ndarray, g: jnp.ndarray, lengthscale: jnp.ndarray,
+                bd: int = DEFAULT_BD, interpret: bool = True) -> jnp.ndarray:
+    """Full SVGD update U[n,d] (see module docstring). lengthscale: f32[]."""
+    n, d = p.shape
+    assert g.shape == (n, d)
+    h2 = (lengthscale * lengthscale).reshape((1,)).astype(jnp.float32)
+    d2 = pairwise_sq_dists(p, bd=bd, interpret=interpret)
+    # The Gram-form distance loses ~|p|^2 * eps of absolute precision in f32:
+    # clamp negatives and pin the diagonal to exactly 0 so k_ii == 1 (the
+    # paper's elementwise loop gets this for free from diff = p_i - p_i).
+    d2 = jnp.maximum(d2, 0.0) * (1.0 - jnp.eye(p.shape[0], dtype=p.dtype))
+    kmat = jnp.exp(-0.5 * d2 / h2[0])                   # [n,n]: tiny, host op
+    rowsum = jnp.sum(kmat, axis=1)                      # [n]
+
+    bd = pick_block(d, bd)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda k: (0, 0)),     # K resident
+            pl.BlockSpec((n,), lambda k: (0,)),         # rowsum resident
+            pl.BlockSpec((n, bd), lambda k: (0, k)),    # P streamed
+            pl.BlockSpec((n, bd), lambda k: (0, k)),    # G streamed
+            pl.BlockSpec((1,), lambda k: (0,)),         # h^2 scalar
+        ],
+        out_specs=pl.BlockSpec((n, bd), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(kmat, rowsum, p, g, h2)

@@ -1,0 +1,9 @@
+"""L2 facade: re-exports the model zoo + entry machinery.
+
+Kept for the architecture's canonical layout (python/compile/model.py is the
+documented L2 entrypoint); the real definitions live in compile.models.*.
+"""
+
+from .models.common import (ModelDef, example_args, make_entries,  # noqa: F401
+                            make_init)
+from .models.registry import GROUPS, REGISTRY, groups_for  # noqa: F401

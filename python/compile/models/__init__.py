@@ -1,0 +1,3 @@
+"""L2 model zoo: every architecture is a pure function over a flat f32[P]
+parameter vector. See common.py for the entry contract and registry.py for
+the artifact variants."""

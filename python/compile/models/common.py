@@ -1,0 +1,180 @@
+"""Shared L2 model machinery: ModelDef, init, losses, artifact entries.
+
+Every model is a pure function over a single flat f32[P] parameter vector (the
+particle state the Rust coordinator manages — see compile.flatten). A model
+contributes four AOT entries with fixed example shapes:
+
+    init(key u32[2])            -> (flat f32[P],)
+    fwd (flat, x)               -> (pred,)
+    grad(flat, x, y)            -> (loss f32[], grad f32[P])
+    step(flat, x, y, lr f32[])  -> (loss f32[], new_flat f32[P])
+    adam(flat, m, v, t, x, y, lr) -> (loss, new_flat, new_m, new_v)
+
+`step` is plain SGD; `adam` carries its first/second-moment state as extra
+flat vectors owned by the Rust coordinator (the paper's Tables 3/4 protocol
+trains with Adam, lr 1e-3). Richer schemes (SWAG moment tracking, SVGD
+transport) are composed by the coordinator from these plus the svgd_update
+kernel artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..flatten import flatten, shape_size, total_size, unflatten
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A lowered-shape-complete description of one model config."""
+
+    name: str
+    shapes: List[Tuple[int, ...]]            # canonical parameter order
+    apply: Callable                          # (flat, x) -> pred
+    loss: Callable                           # (flat, x, y) -> scalar
+    x_shape: Tuple[int, ...]
+    y_shape: Tuple[int, ...]
+    y_dtype: str                             # "f32" | "i32"
+    task: str                                # "classify" | "regress"
+    init_scales: List[float] = None          # per-tensor init std (None -> fan-in)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def param_count(self) -> int:
+        return total_size(self.shapes)
+
+
+def fan_in_scales(shapes: Sequence[Tuple[int, ...]]) -> List[float]:
+    """He-style per-tensor init std: sqrt(2 / fan_in); biases/1-d tensors 0."""
+    scales = []
+    for s in shapes:
+        if len(s) <= 1:
+            scales.append(0.0)
+        else:
+            fan_in = shape_size(s[:-1]) if len(s) == 2 else shape_size(s[:-1])
+            scales.append((2.0 / max(1, fan_in)) ** 0.5)
+    return scales
+
+
+def make_init(model: ModelDef):
+    """init(key) -> flat params, with per-tensor scaling."""
+    scales = model.init_scales or fan_in_scales(model.shapes)
+
+    def init(key: jnp.ndarray) -> jnp.ndarray:
+        # A single draw over the whole flat vector, scaled piecewise. The
+        # u32[2] entry argument is folded into a PRNG key so the artifact
+        # signature stays plain (no jax key types cross the L2/L3 boundary).
+        k = jax.random.fold_in(jax.random.PRNGKey(0), key[0])
+        k = jax.random.fold_in(k, key[1])
+        flat = jax.random.normal(k, (model.param_count,), jnp.float32)
+        segs = []
+        idx = 0
+        for s, sc in zip(model.shapes, scales):
+            n = shape_size(s)
+            segs.append(flat[idx:idx + n] * jnp.float32(sc))
+            idx += n
+        return jnp.concatenate(segs) if segs else flat
+
+    return init
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32[B]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def mse(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((pred - target) ** 2)
+
+
+def classify_loss(model_apply):
+    def loss(flat, x, y):
+        return softmax_xent(model_apply(flat, x), y)
+    return loss
+
+
+def regress_loss(model_apply):
+    def loss(flat, x, y):
+        return mse(model_apply(flat, x), y)
+    return loss
+
+
+def make_entries(model: ModelDef):
+    """Build the four jittable entry functions for a ModelDef.
+
+    All entries return tuples (the AOT path lowers with return_tuple=True and
+    the Rust runtime unpacks positionally).
+    """
+    init = make_init(model)
+
+    def init_entry(key):
+        return (init(key),)
+
+    def fwd_entry(flat, x):
+        return (model.apply(flat, x),)
+
+    def grad_entry(flat, x, y):
+        loss, g = jax.value_and_grad(model.loss)(flat, x, y)
+        return (loss, g)
+
+    def step_entry(flat, x, y, lr):
+        loss, g = jax.value_and_grad(model.loss)(flat, x, y)
+        return (loss, flat - lr * g)
+
+    def adam_entry(flat, m, v, t, x, y, lr,
+                   b1=0.9, b2=0.999, eps=1e-8):
+        """Adam (Kingma & Ba 2015) with bias correction; t is the 1-based
+        step count as f32[] (passed in by the coordinator)."""
+        loss, g = jax.value_and_grad(model.loss)(flat, x, y)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mhat = m / (1.0 - b1**t)
+        vhat = v / (1.0 - b2**t)
+        new_flat = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return (loss, new_flat, m, v)
+
+    return {
+        "init": init_entry,
+        "fwd": fwd_entry,
+        "grad": grad_entry,
+        "step": step_entry,
+        "adam": adam_entry,
+    }
+
+
+def example_args(model: ModelDef):
+    """ShapeDtypeStructs for lowering each entry of a model."""
+    f32 = jnp.float32
+    flat = jax.ShapeDtypeStruct((model.param_count,), f32)
+    x = jax.ShapeDtypeStruct(model.x_shape, f32)
+    ydt = jnp.int32 if model.y_dtype == "i32" else f32
+    y = jax.ShapeDtypeStruct(model.y_shape, ydt)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    return {
+        "init": (key,),
+        "fwd": (flat, x),
+        "grad": (flat, x, y),
+        "step": (flat, x, y, lr),
+        "adam": (flat, flat, flat, lr, x, y, lr),
+    }
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+__all__ = [
+    "ModelDef", "make_entries", "make_init", "example_args", "fan_in_scales",
+    "softmax_xent", "mse", "classify_loss", "regress_loss", "layer_norm",
+    "flatten", "unflatten", "total_size",
+]

@@ -1,0 +1,59 @@
+"""MLP regression model (quickstart / SVGD workloads).
+
+The hidden layers run through the L1 fused_linear Pallas kernel (matmul +
+bias + GELU in one VMEM-resident pass), so this model's fwd/bwd HLO contains
+the kernel's lowering — the L2-calls-L1 composition the architecture requires.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from ..kernels.fused_linear import fused_linear
+from .common import ModelDef, regress_loss, unflatten
+
+
+def build(name: str, in_dim: int, hidden: int, depth: int, out_dim: int,
+          batch: int, use_pallas: bool = True) -> ModelDef:
+    shapes: List[Tuple[int, ...]] = []
+    dims = [in_dim] + [hidden] * depth + [out_dim]
+    for a, b in zip(dims[:-1], dims[1:]):
+        shapes.append((a, b))
+        shapes.append((b,))
+
+    def apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        params = unflatten(flat, shapes)
+        h = x
+        n_layers = len(dims) - 1
+        for li in range(n_layers):
+            w, b = params[2 * li], params[2 * li + 1]
+            last = li == n_layers - 1
+            if use_pallas and not last:
+                h = fused_linear(h, w, b, activation="gelu")
+            else:
+                h = h @ w + b[None, :]
+                if not last:
+                    import jax
+                    h = jax.nn.gelu(h, approximate=True)
+        return h[:, 0] if out_dim == 1 else h
+
+    model = ModelDef(
+        name=name,
+        shapes=shapes,
+        apply=apply,
+        loss=None,
+        x_shape=(batch, in_dim),
+        y_shape=(batch,) if out_dim == 1 else (batch, out_dim),
+        y_dtype="f32",
+        task="regress",
+        meta={"arch": "mlp", "hidden": hidden, "depth": depth,
+              "use_pallas": use_pallas},
+    )
+    return ModelDef(**{**dataclass_asdict(model), "loss": regress_loss(apply)})
+
+
+def dataclass_asdict(m: ModelDef) -> dict:
+    # dataclasses.asdict deep-copies (breaks callables); shallow field dict:
+    return {f: getattr(m, f) for f in m.__dataclass_fields__}

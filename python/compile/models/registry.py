@@ -1,0 +1,97 @@
+"""Registry of every model variant the Rust side needs (L2 -> artifact map).
+
+Grouped by experiment (DESIGN.md §5). The paper's models run up to 454M
+parameters on 24GB GPUs; this CPU testbed scales every architecture down
+uniformly while preserving the sweep *structure* (halve depth or width <->
+double particles at constant effective parameter count) — see DESIGN.md
+§Hardware-Adaptation.
+
+Each entry is a zero-argument builder so that importing the registry stays
+cheap; aot.py instantiates lazily.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from . import cgcnn, mlp, resnet, schnet, unet1d, vit
+from .common import ModelDef
+
+Builder = Callable[[], ModelDef]
+
+REGISTRY: Dict[str, Builder] = {}
+GROUPS: Dict[str, List[str]] = {}
+
+
+def _reg(group: str, name: str, builder: Builder) -> None:
+    assert name not in REGISTRY, f"duplicate model {name}"
+    REGISTRY[name] = builder
+    GROUPS.setdefault(group, []).append(name)
+
+
+# --- core / tests / quickstart ------------------------------------------------
+_reg("core", "mlp_tiny",
+     lambda: mlp.build("mlp_tiny", in_dim=8, hidden=32, depth=2, out_dim=1,
+                       batch=16))
+_reg("core", "mlp_small",
+     lambda: mlp.build("mlp_small", in_dim=16, hidden=64, depth=2, out_dim=1,
+                       batch=32))
+
+# --- end-to-end driver: the largest ViT the CPU testbed trains in minutes ---
+# (paper-scale 100M+ params is a GPU budget; DESIGN.md §Hardware-Adaptation)
+_reg("e2e", "vit_e2e",
+     lambda: vit.build("vit_e2e", hidden=128, depth=6, heads=8, mlp_dim=256,
+                       batch=64))
+
+# --- Figure 4: ViT/MNIST, CGCNN/MD17, UNet/Advection -------------------------
+_reg("fig4", "vit_fig4",
+     lambda: vit.build("vit_fig4", hidden=64, depth=4, heads=4, mlp_dim=128,
+                       batch=128))
+_reg("fig4", "cgcnn_fig4",
+     lambda: cgcnn.build("cgcnn_fig4", atoms=8, species=4, hidden=32,
+                         gauss=16, layers=2, batch=20))
+_reg("fig4", "unet_fig4",
+     lambda: unet1d.build("unet_fig4", nx=64, c=8, levels=2, batch=50))
+
+# --- Figure 7: ResNet, SchNet -------------------------------------------------
+_reg("fig7", "resnet_fig7",
+     lambda: resnet.build("resnet_fig7", c=8, blocks=2, batch=128))
+_reg("fig7", "schnet_fig7",
+     lambda: schnet.build("schnet_fig7", atoms=8, species=4, hidden=16,
+                          gauss=16, layers=2, batch=20))
+
+# --- Table 1 / Table 3: ViT depth sweep (constant effective param count) ----
+# Paper sweeps depth {64..1}; scaled to {8,4,2,1} with hidden 32, mlp 64.
+for _d in (8, 4, 2, 1):
+    _reg("depth", f"vit_d{_d}",
+         lambda d=_d: vit.build(f"vit_d{d}", hidden=32, depth=d, heads=4,
+                                mlp_dim=64, batch=64))
+
+# --- Table 2 / Table 4: ViT width sweep (depth fixed, shrink hidden/mlp) -----
+# Paper keeps 12 layers and shrinks the MLP + hidden dims; we keep 3 layers.
+for _h, _m in ((64, 128), (48, 96), (32, 64), (24, 48), (16, 32), (8, 16)):
+    _reg("width", f"vit_w{_h}",
+         lambda h=_h, m=_m: vit.build(f"vit_w{h}", hidden=h, depth=3, heads=4,
+                                      mlp_dim=m, batch=64))
+
+# --- SVGD kernel artifact specs ----------------------------------------------
+# The L1 svgd_update kernel is shape-specialized per (n particles, d params).
+# One artifact set per architecture that the SVGD benches/examples drive.
+SVGD_NS = (2, 4, 8, 16, 32)
+SVGD_MODELS = ("mlp_small", "vit_fig4", "cgcnn_fig4", "unet_fig4",
+               "resnet_fig7", "schnet_fig7")
+
+
+def groups_for(names: List[str]) -> List[str]:
+    """Expand group names / model names into a model-name list."""
+    out: List[str] = []
+    for n in names:
+        if n in GROUPS:
+            out.extend(GROUPS[n])
+        elif n in REGISTRY:
+            out.append(n)
+        else:
+            raise KeyError(f"unknown model or group: {n!r}; "
+                           f"groups={sorted(GROUPS)} "
+                           f"models={sorted(REGISTRY)}")
+    return out

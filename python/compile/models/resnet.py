@@ -1,0 +1,98 @@
+"""ResNet-lite (L2) — the extra vision architecture of Figure 7.
+
+A scaled-down He-style residual CNN for 28x28 single-channel images: stem
+conv, two stages of residual blocks (second stage strided + channel-doubled),
+global average pool, linear head. Convolutions use lax.conv_general_dilated
+(XLA fuses these well on its own; the Pallas kernel budget goes to the
+transformer/MLP workloads that dominate the paper's evaluation).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelDef, classify_loss, unflatten
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NCHW conv with HWIO->OIHW weights stored as [out, in, kh, kw]."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _gn(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+        eps: float = 1e-5) -> jnp.ndarray:
+    """Per-channel norm over spatial dims (instance-norm flavour; batch-size
+    independent so train == eval and no running stats cross the L2/L3
+    boundary)."""
+    mu = jnp.mean(x, axis=(2, 3), keepdims=True)
+    var = jnp.var(x, axis=(2, 3), keepdims=True)
+    # scale is zero-initialized in the flat-vector scheme; shift by 1 so the
+    # effective initial scale is the identity.
+    return (x - mu) / jnp.sqrt(var + eps) * (1.0 + scale[None, :, None, None]) \
+        + bias[None, :, None, None]
+
+
+def param_shapes(c: int, blocks: int) -> List[Tuple[int, ...]]:
+    shapes: List[Tuple[int, ...]] = [(c, 1, 3, 3), (c,), (c,)]   # stem + gn
+    for stage, ch in ((0, c), (1, 2 * c)):
+        for bi in range(blocks):
+            cin = ch if not (stage == 1 and bi == 0) else c
+            shapes += [
+                (ch, cin, 3, 3), (ch,), (ch,),     # conv1 + gn1
+                (ch, ch, 3, 3), (ch,), (ch,),      # conv2 + gn2
+            ]
+            if cin != ch:
+                shapes += [(ch, cin, 1, 1)]        # projection shortcut
+    shapes += [(2 * c, 10), (10,)]                 # head
+    return shapes
+
+
+def build(name: str, *, image: int = 28, c: int = 8, blocks: int = 2,
+          n_classes: int = 10, batch: int = 128) -> ModelDef:
+    shapes = param_shapes(c, blocks)
+
+    def apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        params = unflatten(flat, shapes)
+        it = iter(params)
+        nxt = lambda: next(it)  # noqa: E731
+
+        b = x.shape[0]
+        h = x.reshape(b, 1, image, image)
+        h = jax.nn.relu(_gn(_conv(h, nxt()), nxt(), nxt()))
+
+        for stage, ch in ((0, c), (1, 2 * c)):
+            for bi in range(blocks):
+                cin = h.shape[1]
+                stride = 2 if (stage == 1 and bi == 0) else 1
+                w1, s1, b1 = nxt(), nxt(), nxt()
+                w2, s2, b2 = nxt(), nxt(), nxt()
+                y = jax.nn.relu(_gn(_conv(h, w1, stride), s1, b1))
+                y = _gn(_conv(y, w2), s2, b2)
+                if cin != ch:
+                    sc = _conv(h, nxt(), stride)
+                else:
+                    sc = h
+                h = jax.nn.relu(sc + y)
+
+        hw, hb = nxt(), nxt()
+        pooled = jnp.mean(h, axis=(2, 3))
+        return pooled @ hw + hb
+
+    return ModelDef(
+        name=name,
+        shapes=shapes,
+        apply=apply,
+        loss=classify_loss(apply),
+        x_shape=(batch, image * image),
+        y_shape=(batch,),
+        y_dtype="i32",
+        task="classify",
+        meta={"arch": "resnet", "channels": c, "blocks": blocks,
+              "n_classes": n_classes},
+    )

@@ -1,0 +1,93 @@
+"""SchNet-like continuous-filter convolution (L2) — Figure 7's extra SciML
+architecture.
+
+SchNet (Schuett et al. 2017) models quantum interactions with continuous
+filters over interatomic distances: h_i <- h_i + sum_j h_j * W(rbf(d_ij)).
+The paper uses it as the "small network" datapoint that exposes Push's
+per-particle overhead floor (§C.2), so we keep it deliberately tiny. Energy
+regression only (first-order autodiff — contrast with cgcnn.py).
+
+Input x[B, A, 3+S] packs positions and a species one-hot; target y[B] is the
+energy.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, unflatten
+
+
+def _ssp(x: jnp.ndarray) -> jnp.ndarray:
+    """Shifted softplus, SchNet's activation: ln(0.5 e^x + 0.5)."""
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def param_shapes(s: int, h: int, g: int, layers: int) -> List[Tuple[int, ...]]:
+    shapes: List[Tuple[int, ...]] = [(s, h), (h,)]          # species embed
+    for _ in range(layers):
+        shapes += [
+            (g, h), (h,),        # filter net layer 1 (rbf -> h)
+            (h, h), (h,),        # filter net layer 2
+            (h, h), (h,),        # atomwise in
+            (h, h), (h,),        # atomwise out
+        ]
+    shapes += [(h, h // 2), (h // 2,), (h // 2, 1), (1,)]   # readout
+    return shapes
+
+
+def build(name: str, *, atoms: int = 8, species: int = 4, hidden: int = 16,
+          gauss: int = 16, layers: int = 2, cutoff: float = 4.0,
+          batch: int = 20) -> ModelDef:
+    shapes = param_shapes(species, hidden, gauss, layers)
+    centers = jnp.linspace(0.0, cutoff, gauss)
+    width = cutoff / gauss
+
+    def apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        params = unflatten(flat, shapes)
+        it = iter(params)
+        nxt = lambda: next(it)  # noqa: E731
+
+        pos, spec = x[..., :3], x[..., 3:]
+        a = pos.shape[1]
+        ew, eb = nxt(), nxt()
+        h = spec @ ew + eb                                   # [B, A, H]
+
+        diff = pos[:, :, None, :] - pos[:, None, :, :]
+        d = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-9)   # [B, A, A]
+        rbf = jnp.exp(-((d[..., None] - centers) ** 2) / (2 * width**2))
+        fcut = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cutoff, 0.0, 1.0)) + 1.0)
+        fcut = fcut * (1.0 - jnp.eye(a)[None])
+
+        for _ in range(layers):
+            fw1, fb1, fw2, fb2 = nxt(), nxt(), nxt(), nxt()
+            aw1, ab1, aw2, ab2 = nxt(), nxt(), nxt(), nxt()
+            filt = _ssp(_ssp(rbf @ fw1 + fb1) @ fw2 + fb2)   # [B,A,A,H]
+            hin = h @ aw1 + ab1                              # [B,A,H]
+            conv = jnp.sum(hin[:, None, :, :] * filt
+                           * fcut[..., None], axis=2)        # cfconv
+            h = h + _ssp(conv @ aw2 + ab2)
+
+        rw1, rb1, rw2, rb2 = nxt(), nxt(), nxt(), nxt()
+        atom_e = _ssp(h @ rw1 + rb1) @ rw2 + rb2             # [B, A, 1]
+        return jnp.sum(atom_e[..., 0], axis=1)               # [B]
+
+    def loss(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        return jnp.mean((apply(flat, x) - y) ** 2)
+
+    return ModelDef(
+        name=name,
+        shapes=shapes,
+        apply=apply,
+        loss=loss,
+        x_shape=(batch, atoms, 3 + species),
+        y_shape=(batch,),
+        y_dtype="f32",
+        task="regress",
+        meta={"arch": "schnet", "atoms": atoms, "species": species,
+              "hidden": hidden, "gauss": gauss, "layers": layers,
+              "cutoff": cutoff},
+    )

@@ -1,0 +1,96 @@
+"""UNet-1D (L2) — the paper's PDE surrogate workload (Figure 4, Advection).
+
+The paper trains PDEBench's UNet on the 1-D Advection dataset (batch 50). We
+implement the same operator-learning setup: input field u(x, t) -> evolved
+field u(x, t + dt) on a periodic 1-D grid. Encoder/decoder with strided
+downsampling, nearest-neighbour upsampling, and skip connections.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelDef, regress_loss, unflatten
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """x[B, C, N] (periodic) conv with w[out, in, k]."""
+    k = w.shape[-1]
+    pad = k // 2
+    x = jnp.concatenate([x[..., -pad:], x, x[..., :pad]], axis=-1)
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="VALID",
+        dimension_numbers=("NCH", "OIH", "NCH"))
+
+
+def _up(x: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-neighbour 2x upsample along the grid axis."""
+    return jnp.repeat(x, 2, axis=-1)
+
+
+def param_shapes(c: int, levels: int, k: int = 5) -> List[Tuple[int, ...]]:
+    shapes: List[Tuple[int, ...]] = [(c, 1, k), (c,)]            # lift
+    ch = c
+    for _ in range(levels):                                      # encoder
+        shapes += [(2 * ch, ch, k), (2 * ch,)]
+        ch *= 2
+    shapes += [(ch, ch, k), (ch,)]                               # bottleneck
+    for _ in range(levels):                                      # decoder
+        # input: upsampled (ch) + skip (ch//2) channels
+        shapes += [(ch // 2, ch + ch // 2, k), (ch // 2,)]
+        ch //= 2
+    shapes += [(1, c, k), (1,)]                                  # project out
+    return shapes
+
+
+def build(name: str, *, nx: int = 64, c: int = 8, levels: int = 2,
+          k: int = 5, batch: int = 50) -> ModelDef:
+    assert nx % (1 << levels) == 0, (nx, levels)
+    shapes = param_shapes(c, levels, k)
+
+    def apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        params = unflatten(flat, shapes)
+        it = iter(params)
+        nxt = lambda: next(it)  # noqa: E731
+
+        b = x.shape[0]
+        h = x.reshape(b, 1, nx)
+        w, bias = nxt(), nxt()
+        h = jax.nn.gelu(_conv1d(h, w) + bias[None, :, None], approximate=True)
+
+        skips = []
+        for _ in range(levels):
+            skips.append(h)
+            w, bias = nxt(), nxt()
+            h = jax.nn.gelu(_conv1d(h, w, stride=2) + bias[None, :, None],
+                            approximate=True)
+
+        w, bias = nxt(), nxt()
+        h = jax.nn.gelu(_conv1d(h, w) + bias[None, :, None], approximate=True)
+
+        for _ in range(levels):
+            h = _up(h)
+            h = jnp.concatenate([h, skips.pop()], axis=1)
+            w, bias = nxt(), nxt()
+            h = jax.nn.gelu(_conv1d(h, w) + bias[None, :, None],
+                            approximate=True)
+
+        w, bias = nxt(), nxt()
+        out = _conv1d(h, w) + bias[None, :, None]
+        return out.reshape(b, nx)
+
+    return ModelDef(
+        name=name,
+        shapes=shapes,
+        apply=apply,
+        loss=regress_loss(apply),
+        x_shape=(batch, nx),
+        y_shape=(batch, nx),
+        y_dtype="f32",
+        task="regress",
+        meta={"arch": "unet1d", "nx": nx, "channels": c, "levels": levels},
+    )

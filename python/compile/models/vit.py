@@ -1,0 +1,143 @@
+"""Vision transformer (L2) — the paper's primary scaling workload.
+
+Matches the paper's setup (§C.1): b16-style ViT on 28x28 images, patch size
+14, 10 classes, with sweepable depth (Table 1/3), width (Table 2/4) and head
+count. The MLP block's first matmul runs through the L1 fused_linear Pallas
+kernel (matmul + bias + GELU resident in VMEM), so every fwd/bwd artifact
+contains the kernel's lowering.
+
+All parameters live in one flat f32[P] vector (compile.flatten); the shape
+list below is the canonical order.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.attention import attention as pallas_attention
+from ..kernels.fused_linear import fused_linear
+from .common import ModelDef, classify_loss, layer_norm, unflatten
+
+
+def param_shapes(hidden: int, depth: int, mlp_dim: int, n_tokens: int,
+                 patch_dim: int, n_classes: int) -> List[Tuple[int, ...]]:
+    """Canonical parameter order for the ViT flat vector."""
+    shapes: List[Tuple[int, ...]] = [
+        (patch_dim, hidden),        # patch embedding
+        (hidden,),                  # patch bias
+        (hidden,),                  # cls token
+        (n_tokens + 1, hidden),     # positional embedding
+    ]
+    for _ in range(depth):
+        shapes += [
+            (hidden,), (hidden,),           # ln1 scale, bias
+            (hidden, 3 * hidden),           # qkv
+            (3 * hidden,),
+            (hidden, hidden),               # attn out proj
+            (hidden,),
+            (hidden,), (hidden,),           # ln2 scale, bias
+            (hidden, mlp_dim),              # mlp in  (fused_linear kernel)
+            (mlp_dim,),
+            (mlp_dim, hidden),              # mlp out
+            (hidden,),
+        ]
+    shapes += [
+        (hidden,), (hidden,),               # final ln
+        (hidden, n_classes),                # head
+        (n_classes,),
+    ]
+    return shapes
+
+
+def build(name: str, *, image: int = 28, patch: int = 14, hidden: int = 64,
+          depth: int = 4, heads: int = 4, mlp_dim: int = 128,
+          n_classes: int = 10, batch: int = 128,
+          use_pallas: bool = True) -> ModelDef:
+    assert image % patch == 0, (image, patch)
+    grid = image // patch
+    n_tokens = grid * grid
+    patch_dim = patch * patch
+    assert hidden % heads == 0, (hidden, heads)
+    head_dim = hidden // heads
+    shapes = param_shapes(hidden, depth, mlp_dim, n_tokens, patch_dim, n_classes)
+
+    def patches(x: jnp.ndarray) -> jnp.ndarray:
+        """x[B, image*image] -> tokens [B, n_tokens, patch_dim]."""
+        b = x.shape[0]
+        x = x.reshape(b, grid, patch, grid, patch)
+        x = x.transpose(0, 1, 3, 2, 4)
+        return x.reshape(b, n_tokens, patch_dim)
+
+    def attention(h: jnp.ndarray, wqkv, bqkv, wproj, bproj) -> jnp.ndarray:
+        b, t, _ = h.shape
+        qkv = h.reshape(b * t, hidden) @ wqkv + bqkv
+        qkv = qkv.reshape(b, t, 3, heads, head_dim)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]     # [b,t,nh,hd]
+        if use_pallas:
+            # fold (batch, head) into the kernel's leading grid axis
+            fold = lambda z: z.transpose(0, 2, 1, 3).reshape(  # noqa: E731
+                b * heads, t, head_dim)
+            out = pallas_attention(fold(q), fold(k), fold(v))
+            out = out.reshape(b, heads, t, head_dim).transpose(0, 2, 1, 3)
+            out = out.reshape(b, t, hidden)
+        else:
+            att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+                jnp.float32(head_dim))
+            att = jax.nn.softmax(att, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, hidden)
+        return out.reshape(b * t, hidden) @ wproj + bproj
+
+    def apply(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        params = unflatten(flat, shapes)
+        it = iter(params)
+        nxt = lambda: next(it)  # noqa: E731 — sequential reader
+
+        pw, pb, cls, pos = nxt(), nxt(), nxt(), nxt()
+        b = x.shape[0]
+        tok = patches(x).reshape(b * n_tokens, patch_dim) @ pw + pb
+        tok = tok.reshape(b, n_tokens, hidden)
+        h = jnp.concatenate(
+            [jnp.broadcast_to(cls[None, None, :], (b, 1, hidden)), tok], axis=1)
+        h = h + pos[None, :, :]
+        t = n_tokens + 1
+
+        for _ in range(depth):
+            ln1s, ln1b = nxt(), nxt()
+            wqkv, bqkv, wproj, bproj = nxt(), nxt(), nxt(), nxt()
+            ln2s, ln2b = nxt(), nxt()
+            wm1, bm1, wm2, bm2 = nxt(), nxt(), nxt(), nxt()
+
+            # Norm scales are zero-initialized in the flat-vector scheme
+            # (fan_in_scales gives 1-D tensors std 0); (1 + s) makes the
+            # effective initial scale the identity.
+            a = attention(layer_norm(h, 1.0 + ln1s, ln1b), wqkv, bqkv, wproj, bproj)
+            h = h + a.reshape(b, t, hidden)
+            z = layer_norm(h, 1.0 + ln2s, ln2b).reshape(b * t, hidden)
+            if use_pallas:
+                m = fused_linear(z, wm1, bm1, "gelu")
+            else:
+                m = jax.nn.gelu(z @ wm1 + bm1, approximate=True)
+            m = m @ wm2 + bm2
+            h = h + m.reshape(b, t, hidden)
+
+        lns, lnb = nxt(), nxt()
+        hw, hb = nxt(), nxt()
+        cls_out = layer_norm(h, 1.0 + lns, lnb)[:, 0, :]
+        return cls_out @ hw + hb
+
+    return ModelDef(
+        name=name,
+        shapes=shapes,
+        apply=apply,
+        loss=classify_loss(apply),
+        x_shape=(batch, image * image),
+        y_shape=(batch,),
+        y_dtype="i32",
+        task="classify",
+        meta={"arch": "vit", "hidden": hidden, "depth": depth, "heads": heads,
+              "mlp_dim": mlp_dim, "n_classes": n_classes,
+              "use_pallas": use_pallas},
+    )

@@ -1,0 +1,57 @@
+"""Structural performance pins for the L1 kernels (EXPERIMENTS.md §Perf).
+
+These tests fail if a block-shape change regresses the VMEM fit, MXU
+occupancy, or HBM-traffic efficiency the docs claim.
+"""
+
+from compile.kernels.analysis import (attention_estimate,
+                                      fused_linear_estimate, report,
+                                      svgd_estimate)
+
+
+def test_fused_linear_default_blocks_fit_vmem():
+    e = fused_linear_estimate(65536, 768, 3072)   # paper-scale FFN
+    assert e.fits_vmem
+    assert e.vmem_bytes_per_cell <= 256 * 1024    # ~192 KiB documented
+    assert e.mxu_tile_occupancy == 1.0            # full 128x128 tiles
+
+
+def test_fused_linear_small_shapes_degrade_gracefully():
+    e = fused_linear_estimate(640, 64, 128)       # vit_fig4 FFN
+    assert e.fits_vmem
+    assert e.mxu_tile_occupancy == 1.0            # 640 and 128 tile cleanly
+    # vit_e2e FFN: m=320 forces bm=80 -> 62.5% M-occupancy (documented)
+    e2 = fused_linear_estimate(320, 128, 256)
+    assert 0.55 <= e2.mxu_m_occupancy <= 0.70
+
+
+def test_svgd_bandwidth_bound_story():
+    e = svgd_estimate(32, 206346)
+    assert e.fits_vmem
+    # two-pass scheme: 75% of optimal traffic (P read twice), documented
+    assert 0.70 <= e.traffic_efficiency <= 0.80
+    # kernel-matrix output tiles are inherently small: <= (32/128)^2
+    assert e.mxu_tile_occupancy <= (32 / 128) ** 2 + 1e-9
+
+
+def test_svgd_beats_elementwise_loop_traffic():
+    # the paper's Figure-6 loop touches P O(n) times; our two-pass scheme
+    # must stay within ~4/3 of optimal regardless of n
+    for n in (4, 8, 16, 32):
+        e = svgd_estimate(n, 50_000)
+        assert e.traffic_efficiency >= 0.5, (n, e.traffic_efficiency)
+
+
+def test_attention_tiny_tokens_fit_and_long_seq_tiles():
+    tiny = attention_estimate(512, 5, 16)
+    assert tiny.fits_vmem
+    long = attention_estimate(512, 256, 64, bq=128)
+    assert long.fits_vmem
+    assert long.grid_cells == 512 * 2             # query axis tiled
+
+
+def test_report_renders_all_rows():
+    rows = [fused_linear_estimate(128, 128, 128), svgd_estimate(8, 1000)]
+    text = report(rows)
+    assert "fused_linear" in text and "svgd_update" in text
+    assert text.count("\n") == len(rows)

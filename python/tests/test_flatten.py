@@ -1,0 +1,40 @@
+"""flatten/unflatten roundtrip + shape accounting (property-based)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.flatten import flatten, shape_size, total_size, unflatten
+
+shapes_strategy = st.lists(
+    st.lists(st.integers(1, 5), min_size=0, max_size=3).map(tuple),
+    min_size=1, max_size=6)
+
+
+@given(shapes_strategy, st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip(shapes, seed):
+    rs = np.random.RandomState(seed % (2**31))
+    tensors = [jnp.array(rs.randn(*s), jnp.float32) for s in shapes]
+    flat = flatten(tensors)
+    assert flat.shape == (total_size(shapes),)
+    back = unflatten(flat, shapes)
+    assert len(back) == len(tensors)
+    for t, b in zip(tensors, back):
+        assert t.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(b))
+
+
+@given(shapes_strategy)
+@settings(max_examples=50, deadline=None)
+def test_total_size_matches_elements(shapes):
+    assert total_size(shapes) == sum(int(np.prod(s)) if s else 1 for s in shapes)
+
+
+def test_shape_size_scalar():
+    assert shape_size(()) == 1
+    assert shape_size((3, 4)) == 12
+
+
+def test_empty_tensor_list():
+    assert flatten([]).shape == (0,)

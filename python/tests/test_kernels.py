@@ -1,0 +1,201 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the CORE correctness signal).
+
+hypothesis sweeps shapes (including MXU-unaligned ones, exercising
+pick_block's divisor fallback); assert_allclose against compile.kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import (fused_linear, fused_linear_raw,
+                                          pick_block)
+from compile.kernels.svgd import pairwise_sq_dists, svgd_update
+
+
+def rand(rs, *shape):
+    return jnp.array(rs.randn(*shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- fused_linear
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 40),
+       st.sampled_from(["gelu", "none"]), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_fused_linear_matches_ref(m, k, n, activation, seed):
+    rs = np.random.RandomState(seed)
+    x, w, b = rand(rs, m, k), rand(rs, k, n), rand(rs, n)
+    got = fused_linear_raw(x, w, b, activation=activation)
+    want = ref.fused_linear_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (128, 256, 128),
+                                   (7, 13, 3), (1, 1, 1), (64, 512, 32)])
+def test_fused_linear_shapes(m, k, n):
+    rs = np.random.RandomState(0)
+    x, w, b = rand(rs, m, k), rand(rs, k, n), rand(rs, n)
+    got = fused_linear_raw(x, w, b)
+    want = ref.fused_linear_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_grad_matches_ref():
+    rs = np.random.RandomState(7)
+    x, w, b = rand(rs, 12, 24), rand(rs, 24, 8), rand(rs, 8)
+
+    def f(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear(x, w, b, "gelu")))
+
+    def fr(x, w, b):
+        return jnp.sum(jnp.sin(ref.fused_linear_ref(x, w, b, "gelu")))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_grad_none_activation():
+    rs = np.random.RandomState(8)
+    x, w, b = rand(rs, 6, 10), rand(rs, 10, 4), rand(rs, 4)
+    g = jax.grad(lambda x: jnp.sum(fused_linear(x, w, b, "none") ** 2))(x)
+    gr = jax.grad(lambda x: jnp.sum((x @ w + b) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 600), st.integers(1, 600))
+@settings(max_examples=40, deadline=None)
+def test_pick_block_invariants(dim, want):
+    b = pick_block(dim, want)
+    assert 1 <= b <= dim
+    assert dim % b == 0
+    assert b <= max(1, min(dim, want))
+
+
+# ------------------------------------------------------------------------ svgd
+@given(st.integers(2, 12), st.integers(4, 200), st.integers(0, 2**31 - 1),
+       st.floats(0.3, 5.0))
+@settings(max_examples=25, deadline=None)
+def test_svgd_update_matches_ref(n, d, seed, lengthscale):
+    rs = np.random.RandomState(seed)
+    p, g = rand(rs, n, d), rand(rs, n, d)
+    h = jnp.float32(lengthscale)
+    got = svgd_update(p, g, h)
+    want = ref.svgd_update_ref(p, g, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(2, 10), st.integers(1, 128), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pairwise_sq_dists_matches_ref(n, d, seed):
+    rs = np.random.RandomState(seed)
+    p = rand(rs, n, d)
+    got = pairwise_sq_dists(p)
+    want = ref.pairwise_sq_dists_ref(p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_sq_dists_diagonal_zero():
+    rs = np.random.RandomState(3)
+    p = rand(rs, 6, 33)
+    d = np.asarray(pairwise_sq_dists(p))
+    np.testing.assert_allclose(np.diag(d), np.zeros(6), atol=1e-4)
+    np.testing.assert_allclose(d, d.T, atol=1e-4)
+
+
+def test_svgd_single_mode_attracts():
+    """With zero loss gradient the repulsive term pushes particles APART:
+    the update for the closest pair points away from each other."""
+    p = jnp.array([[0.0, 0.0], [0.1, 0.0], [3.0, 0.0]], jnp.float32)
+    g = jnp.zeros_like(p)
+    u = np.asarray(svgd_update(p, g, jnp.float32(1.0)))
+    # particle 0 and 1 are nearly coincident: repulsion separates them.
+    # Rust applies p -= lr * u, so u must point TOWARD the other particle.
+    assert u[0, 0] > 0.0 and u[1, 0] < u[0, 0]
+
+
+def test_svgd_kernel_identity_when_far():
+    """Distant particles -> K ~ I -> update ~ g / n (pure gradient step)."""
+    rs = np.random.RandomState(1)
+    n, d = 4, 32
+    p = jnp.array(rs.randn(n, d) * 100.0, jnp.float32)
+    g = rand(rs, n, d)
+    u = np.asarray(svgd_update(p, g, jnp.float32(1.0)))
+    np.testing.assert_allclose(u, np.asarray(g) / n, rtol=1e-3, atol=1e-3)
+
+
+def test_svgd_block_size_invariance():
+    """The d-axis tiling must not change the result."""
+    rs = np.random.RandomState(5)
+    p, g = rand(rs, 4, 96), rand(rs, 4, 96)
+    h = jnp.float32(1.3)
+    u1 = svgd_update(p, g, h, bd=96)
+    u2 = svgd_update(p, g, h, bd=32)
+    u3 = svgd_update(p, g, h, bd=16)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u3), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------------ attention
+from compile.kernels.attention import attention, attention_raw  # noqa: E402
+
+
+@given(st.integers(1, 6), st.integers(1, 16), st.integers(1, 16),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_attention_matches_ref(bh, t, d, seed):
+    rs = np.random.RandomState(seed)
+    q, k, v = (rand(rs, bh, t, d) for _ in range(3))
+    got = attention_raw(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attention_softmax_rows_sum_to_one_effect():
+    """With v = identity-like constant rows, output equals that constant —
+    softmax weights sum to 1."""
+    rs = np.random.RandomState(0)
+    q, k = rand(rs, 2, 5, 4), rand(rs, 2, 5, 4)
+    v = jnp.ones((2, 5, 4), jnp.float32) * 3.25
+    out = np.asarray(attention_raw(q, k, v))
+    np.testing.assert_allclose(out, 3.25 * np.ones_like(out), rtol=1e-5)
+
+
+def test_attention_grad_matches_ref():
+    rs = np.random.RandomState(4)
+    q, k, v = (rand(rs, 2, 4, 8) for _ in range(3))
+
+    def f(q, k, v):
+        return jnp.sum(jnp.tanh(attention(q, k, v)))
+
+    def fr(q, k, v):
+        return jnp.sum(jnp.tanh(ref.attention_ref(q, k, v)))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_attention_query_block_invariance():
+    """Tiling the query axis must not change the result."""
+    rs = np.random.RandomState(5)
+    q, k, v = (rand(rs, 3, 8, 4) for _ in range(3))
+    a = attention_raw(q, k, v, bq=8)
+    b = attention_raw(q, k, v, bq=4)
+    c = attention_raw(q, k, v, bq=2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,168 @@
+"""L2 model zoo: entry signatures, init determinism, learnability.
+
+Heavy numeric checks run only on the tiny configs; everything in the
+registry gets an eval_shape pass (no execution) so signature drift against
+the manifest contract is caught cheaply.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.model as M
+from compile.models.common import example_args, make_entries
+
+ALL_MODELS = sorted(M.REGISTRY)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    md = M.REGISTRY["mlp_tiny"]()
+    return md, make_entries(md), example_args(md)
+
+
+# --------------------------------------------------------------- signatures
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_entry_signatures(name):
+    md = M.REGISTRY[name]()
+    entries = make_entries(md)
+    ex = example_args(md)
+    # init -> (flat,)
+    out = jax.eval_shape(entries["init"], *ex["init"])
+    assert len(out) == 1 and out[0].shape == (md.param_count,)
+    # fwd -> (pred,) with leading batch dim
+    out = jax.eval_shape(entries["fwd"], *ex["fwd"])
+    assert len(out) == 1 and out[0].shape[0] == md.x_shape[0]
+    # grad -> (scalar loss, flat grad)
+    out = jax.eval_shape(entries["grad"], *ex["grad"])
+    assert out[0].shape == () and out[1].shape == (md.param_count,)
+    # step -> (scalar loss, new flat)
+    out = jax.eval_shape(entries["step"], *ex["step"])
+    assert out[0].shape == () and out[1].shape == (md.param_count,)
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_param_count_matches_shapes(name):
+    md = M.REGISTRY[name]()
+    assert md.param_count == sum(int(np.prod(s)) if s else 1
+                                 for s in md.shapes)
+
+
+def test_registry_groups_cover_registry():
+    covered = {m for ms in M.GROUPS.values() for m in ms}
+    assert covered == set(M.REGISTRY)
+
+
+def test_groups_for_expansion_and_errors():
+    assert M.groups_for(["core"]) == ["mlp_tiny", "mlp_small"]
+    assert M.groups_for(["mlp_tiny"]) == ["mlp_tiny"]
+    with pytest.raises(KeyError):
+        M.groups_for(["nonexistent_model"])
+
+
+# ------------------------------------------------------------ init behaviour
+def test_init_deterministic(tiny):
+    _, entries, _ = tiny
+    k = jnp.array([3, 4], jnp.uint32)
+    a, = entries["init"](k)
+    b, = entries["init"](k)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_init_key_sensitivity(tiny):
+    _, entries, _ = tiny
+    a, = entries["init"](jnp.array([0, 0], jnp.uint32))
+    b, = entries["init"](jnp.array([0, 1], jnp.uint32))
+    c, = entries["init"](jnp.array([1, 0], jnp.uint32))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+def test_init_finite_and_scaled(tiny):
+    md, entries, _ = tiny
+    flat, = entries["init"](jnp.array([7, 8], jnp.uint32))
+    f = np.asarray(flat)
+    assert np.isfinite(f).all()
+    # biases are zero-initialized; weights are not
+    assert (f == 0).sum() > 0 and (f != 0).sum() > 0
+
+
+# ------------------------------------------------------------- learnability
+def test_mlp_learns_linear_target(tiny):
+    """A few hundred SGD steps on y = <w*, x> must cut the loss sharply."""
+    md, entries, _ = tiny
+    rs = np.random.RandomState(0)
+    wstar = rs.randn(md.x_shape[1]).astype(np.float32)
+    x = jnp.array(rs.randn(*md.x_shape), jnp.float32)
+    y = x @ jnp.array(wstar)
+    flat, = entries["init"](jnp.array([1, 1], jnp.uint32))
+    step = jax.jit(entries["step"])
+    loss0 = None
+    for i in range(300):
+        loss, flat = step(flat, x, y, jnp.float32(5e-3))
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < 0.2 * loss0, (loss0, float(loss))
+
+
+def test_grad_step_consistency(tiny):
+    """step(flat, ...) == flat - lr * grad(flat, ...)."""
+    md, entries, ex = tiny
+    rs = np.random.RandomState(2)
+    flat, = entries["init"](jnp.array([5, 6], jnp.uint32))
+    x = jnp.array(rs.randn(*md.x_shape), jnp.float32)
+    y = jnp.array(rs.randn(*md.y_shape), jnp.float32)
+    lr = jnp.float32(0.01)
+    l1, g = entries["grad"](flat, x, y)
+    l2, newflat = entries["step"](flat, x, y, lr)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+    np.testing.assert_allclose(np.asarray(newflat),
+                               np.asarray(flat - lr * g), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_cgcnn_forces_are_neg_position_grad():
+    """apply() must pack F = -dE/dpos (the second-order property §5.1)."""
+    md = M.REGISTRY["cgcnn_fig4"]()
+    entries = make_entries(md)
+    flat, = entries["init"](jnp.array([1, 2], jnp.uint32))
+    rs = np.random.RandomState(3)
+    x = jnp.array(rs.randn(*md.x_shape), jnp.float32)
+    pred, = entries["fwd"](flat, x)
+    atoms = md.meta["atoms"]
+    assert pred.shape == (md.x_shape[0], 1 + 3 * atoms)
+
+    # finite-difference check on one coordinate of one atom
+    eps = 1e-3
+    xp = x.at[0, 0, 0].add(eps)
+    xm = x.at[0, 0, 0].add(-eps)
+    ep, = entries["fwd"](flat, xp)
+    em, = entries["fwd"](flat, xm)
+    fd = (float(ep[0, 0]) - float(em[0, 0])) / (2 * eps)
+    force = float(pred[0, 1])          # F[atom0, x] = -dE/dx
+    assert force == pytest.approx(-fd, rel=5e-2, abs=5e-3)
+
+
+def test_vit_fwd_logit_shape():
+    md = M.REGISTRY["vit_d1"]()
+    entries = make_entries(md)
+    flat, = entries["init"](jnp.array([0, 9], jnp.uint32))
+    x = jnp.zeros(md.x_shape, jnp.float32)
+    logits, = entries["fwd"](flat, x)
+    assert logits.shape == (md.x_shape[0], 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_unet_translation_of_constant_field():
+    """A constant input field must produce a constant output (periodic conv,
+    no spatial symmetry breaking anywhere in the net)."""
+    md = M.REGISTRY["unet_fig4"]()
+    entries = make_entries(md)
+    flat, = entries["init"](jnp.array([4, 2], jnp.uint32))
+    x = jnp.ones(md.x_shape, jnp.float32) * 0.7
+    out, = entries["fwd"](flat, x)
+    o = np.asarray(out)
+    assert o.shape == md.x_shape
+    np.testing.assert_allclose(o, np.broadcast_to(o[:, :1], o.shape),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,201 @@
+//! Handwritten (particle-free) baseline implementations — the paper's
+//! §5.1 comparison curves.
+//!
+//! These are what a practitioner would write without Push: a single thread,
+//! one `RuntimeClient`, parameters in a plain `Vec<Tensor>`, strictly
+//! sequential loops over ensemble members. Differences that the paper calls
+//! out and that we preserve:
+//!
+//! * **Ensemble / multi-SWAG**: identical math to the Push versions, no
+//!   concurrency — Push's 1-device overhead is measured against these.
+//! * **SVGD**: "we store the kernel matrix and then update all the
+//!   parameters after the kernel matrix has been computed since we only
+//!   keep one copy of each NN" — i.e. fully synchronous, no read-only
+//!   views, native kernel math (no L1 artifact).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DataLoader;
+use crate::infer::svgd::svgd_update_native;
+use crate::infer::TrainReport;
+use crate::runtime::{Manifest, ModelSpec, RuntimeClient, Tensor};
+
+/// Shared state of a sequential baseline run.
+pub struct Baseline {
+    client: RuntimeClient,
+    model: ModelSpec,
+    pub params: Vec<Tensor>,
+}
+
+impl Baseline {
+    /// Initialize `n` members with the same AOT init entry (and the same
+    /// seed/pid scheme) that Push particles use, so trajectories are
+    /// comparable.
+    pub fn new(manifest: &Manifest, model_name: &str, n: usize, seed: u64) -> Result<Baseline> {
+        let model = manifest.model(model_name)?.clone();
+        let mut client = RuntimeClient::cpu()?;
+        let init = model.entry("init")?.clone();
+        let mut params = Vec::with_capacity(n);
+        for pid in 0..n {
+            let key = Tensor::u32(vec![2], vec![(seed & 0xffff_ffff) as u32, pid as u32]);
+            let outs = client.execute(&init.file, &[key])?;
+            params.push(outs.into_iter().next().ok_or_else(|| anyhow!("init empty"))?);
+        }
+        Ok(Baseline { client, model, params })
+    }
+
+    pub fn n(&self) -> usize {
+        self.params.len()
+    }
+
+    fn step_one(&mut self, i: usize, x: &Tensor, y: &Tensor, lr: f32) -> Result<f32> {
+        let step = self.model.entry("step")?.clone();
+        let args = [
+            self.params[i].clone(),
+            x.clone(),
+            y.clone(),
+            Tensor::scalar_f32(lr),
+        ];
+        let mut outs = self.client.execute(&step.file, &args)?;
+        let new_params = outs.remove(1);
+        let loss = outs.remove(0).scalar();
+        self.params[i] = new_params;
+        Ok(loss)
+    }
+
+    fn grad_one(&mut self, i: usize, x: &Tensor, y: &Tensor) -> Result<(f32, Tensor)> {
+        let grad = self.model.entry("grad")?.clone();
+        let args = [self.params[i].clone(), x.clone(), y.clone()];
+        let mut outs = self.client.execute(&grad.file, &args)?;
+        let g = outs.remove(1);
+        Ok((outs.remove(0).scalar(), g))
+    }
+
+    pub fn forward_one(&mut self, i: usize, x: &Tensor) -> Result<Tensor> {
+        let fwd = self.model.entry("fwd")?.clone();
+        let args = [self.params[i].clone(), x.clone()];
+        let mut outs = self.client.execute(&fwd.file, &args)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Sequential deep ensemble: every member steps on every batch, one
+    /// after another.
+    pub fn train_ensemble(
+        &mut self,
+        loader: &mut DataLoader,
+        epochs: usize,
+        lr: f32,
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport::new("baseline_ensemble");
+        for _ in 0..epochs {
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0f64;
+            for b in &batches {
+                for i in 0..self.n() {
+                    loss += self.step_one(i, &b.x, &b.y, lr)? as f64;
+                }
+            }
+            report.push(
+                loss / (batches.len() * self.n()).max(1) as f64,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        Ok(report)
+    }
+
+    /// Sequential multi-SWAG: ensemble + host-side moment tracking.
+    /// Returns (report, per-member (mean, sq_mean) moments).
+    pub fn train_multiswag(
+        &mut self,
+        loader: &mut DataLoader,
+        epochs: usize,
+        pretrain_epochs: usize,
+        lr: f32,
+    ) -> Result<(TrainReport, Vec<(Tensor, Tensor)>)> {
+        let mut report = TrainReport::new("baseline_multiswag");
+        let d = self.model.param_count;
+        let mut moments: Vec<(Tensor, Tensor, usize)> = (0..self.n())
+            .map(|_| (Tensor::zeros(vec![d]), Tensor::zeros(vec![d]), 0usize))
+            .collect();
+        for e in 0..epochs {
+            let collect = e >= pretrain_epochs;
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0f64;
+            for b in &batches {
+                for i in 0..self.n() {
+                    loss += self.step_one(i, &b.x, &b.y, lr)? as f64;
+                    if collect {
+                        let (mean, sq, n) = &mut moments[i];
+                        let w_old = *n as f32 / (*n as f32 + 1.0);
+                        let w_new = 1.0 / (*n as f32 + 1.0);
+                        crate::runtime::tensor::ops::scale_add(mean, w_old, w_new, &self.params[i]);
+                        crate::runtime::tensor::ops::scale_add_sq(sq, w_old, w_new, &self.params[i]);
+                        *n += 1;
+                    }
+                }
+            }
+            report.push(
+                loss / (batches.len() * self.n()).max(1) as f64,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        Ok((report, moments.into_iter().map(|(m, s, _)| (m, s)).collect()))
+    }
+
+    /// Sequential SVGD, the paper's handwritten variant: all gradients,
+    /// THEN the full kernel matrix, THEN all updates — one copy of each NN,
+    /// no views, no overlap.
+    pub fn train_svgd(
+        &mut self,
+        loader: &mut DataLoader,
+        epochs: usize,
+        lr: f32,
+        lengthscale: f32,
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport::new("baseline_svgd");
+        for _ in 0..epochs {
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0f64;
+            for b in &batches {
+                let mut grads = Vec::with_capacity(self.n());
+                for i in 0..self.n() {
+                    let (l, g) = self.grad_one(i, &b.x, &b.y)?;
+                    loss += l as f64;
+                    grads.push(g);
+                }
+                let updates = svgd_update_native(&self.params, &grads, lengthscale)?;
+                for (p, u) in self.params.iter_mut().zip(&updates) {
+                    crate::runtime::tensor::ops::axpy(p, -lr, u);
+                }
+            }
+            report.push(
+                loss / (batches.len() * self.n()).max(1) as f64,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        Ok(report)
+    }
+
+    /// Ensemble-mean prediction (sequential).
+    pub fn predict_mean(&mut self, x: &Tensor) -> Result<Tensor> {
+        let mut acc: Option<Tensor> = None;
+        for i in 0..self.n() {
+            let p = self.forward_one(i, x)?;
+            match &mut acc {
+                None => acc = Some(p),
+                Some(a) => crate::runtime::tensor::ops::axpy(a, 1.0, &p),
+            }
+        }
+        let mut out = acc.ok_or_else(|| anyhow!("no members"))?;
+        let n = self.n() as f32;
+        for v in out.as_f32_mut() {
+            *v /= n;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,163 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * **Active-set size** — the paper's context-switch knob (§4.2): time an
+//!   ensemble epoch as `cache_size` shrinks below the particle count,
+//!   exposing swap cost.
+//! * **SVGD kernel path** — AOT Pallas artifact vs native Rust loops for
+//!   the leader's O(n^2 d) update.
+//! * **Transfer cost model** — account-only vs simulated PCIe sleeps,
+//!   quantifying what the virtual clock claims the schedule would cost.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::bench::report::{Report, Row};
+use crate::bench::{data_for, lr_for};
+use crate::data::DataLoader;
+use crate::device::CostModel;
+use crate::infer::{DeepEnsemble, Infer, Svgd, SvgdConfig};
+use crate::nel::NelConfig;
+use crate::pd::PushDist;
+use crate::runtime::Manifest;
+
+fn cfg(devices: usize, cache: usize, cost: CostModel, seed: u64) -> NelConfig {
+    NelConfig { num_devices: devices, cache_size: cache, cost, seed, ..NelConfig::default() }
+}
+
+/// Ensemble epoch time vs active-set size (particles fixed).
+pub fn cache_size_sweep(
+    manifest: &Manifest,
+    model_name: &str,
+    particles: usize,
+    cache_sizes: &[usize],
+    batches: usize,
+    epochs: usize,
+) -> Result<Report> {
+    let mut rep = Report::new("ablate_cache_size");
+    for &cache in cache_sizes {
+        let pd = PushDist::new(manifest, model_name, cfg(1, cache, CostModel::free(), 0))?;
+        let model = pd.model().clone();
+        let lr = lr_for(&model);
+        let data = data_for(&model, model.batch() * batches, 1)?;
+        let mut loader = DataLoader::new(data, model.batch(), true, 2).with_max_batches(batches);
+        let mut algo = DeepEnsemble::new(pd, particles, lr)?;
+        let report = algo.train(&mut loader, epochs)?;
+        let secs = if report.epochs.len() > 1 {
+            report.epochs[1..].iter().map(|e| e.secs).sum::<f64>()
+                / (report.epochs.len() - 1) as f64
+        } else {
+            report.mean_epoch_secs()
+        };
+        let stats = algo.pd().stats();
+        let d0 = &stats.devices[0];
+        crate::log_info!(
+            "ablate cache={cache}: {secs:.3}s/epoch (hit rate {:.0}%)",
+            100.0 * d0.cache_hit_rate()
+        );
+        rep.push(
+            Row::new()
+                .str("model", model_name)
+                .int("particles", particles)
+                .int("cache_size", cache)
+                .num("secs_per_epoch", secs)
+                .num("cache_hit_rate", d0.cache_hit_rate())
+                .int("swaps", (d0.swaps_in + d0.swaps_out) as usize)
+                .int("swap_mb", (d0.swap_bytes >> 20) as usize),
+        );
+    }
+    Ok(rep)
+}
+
+/// SVGD leader kernel: Pallas artifact vs native Rust, same workload.
+pub fn svgd_kernel_ablation(
+    manifest: &Manifest,
+    model_name: &str,
+    particle_counts: &[usize],
+    batches: usize,
+) -> Result<Report> {
+    let mut rep = Report::new("ablate_svgd_kernel");
+    for &n in particle_counts {
+        for force_native in [false, true] {
+            let pd = PushDist::new(manifest, model_name, cfg(2, n.max(4), CostModel::free(), 0))?;
+            if !force_native && pd.svgd_artifact(n).is_none() {
+                crate::log_warn!("no svgd artifact for n={n}; skipping artifact arm");
+                continue;
+            }
+            let model = pd.model().clone();
+            let data = data_for(&model, model.batch() * batches, 1)?;
+            let mut loader =
+                DataLoader::new(data, model.batch(), true, 2).with_max_batches(batches);
+            let mut algo = Svgd::new(
+                pd,
+                SvgdConfig {
+                    particles: n,
+                    lr: 1e-3,
+                    lengthscale: 10.0,
+                    force_native,
+                    ..SvgdConfig::default()
+                },
+            )?;
+            // warmup epoch compiles; measure the second
+            algo.train(&mut loader, 1)?;
+            let t0 = Instant::now();
+            algo.train(&mut loader, 1)?;
+            let secs = t0.elapsed().as_secs_f64();
+            crate::log_info!(
+                "ablate svgd n={n} kernel={}: {secs:.3}s/epoch",
+                if force_native { "native" } else { "pallas" }
+            );
+            rep.push(
+                Row::new()
+                    .str("model", model_name)
+                    .int("particles", n)
+                    .str("kernel", if force_native { "native" } else { "pallas" })
+                    .num("secs_per_epoch", secs),
+            );
+        }
+    }
+    Ok(rep)
+}
+
+/// Transfer-cost model: account-only vs simulated sleeps.
+pub fn cost_model_ablation(
+    manifest: &Manifest,
+    model_name: &str,
+    particles: usize,
+    batches: usize,
+) -> Result<Report> {
+    let mut rep = Report::new("ablate_cost_model");
+    for (label, cost) in [
+        ("free", CostModel::free()),
+        ("account_only", CostModel::default()),
+        (
+            "simulated_pcie",
+            CostModel { simulate: true, ..CostModel::default() },
+        ),
+    ] {
+        let pd = PushDist::new(manifest, model_name, cfg(2, 4, cost, 0))?;
+        let model = pd.model().clone();
+        let lr = lr_for(&model);
+        let data = data_for(&model, model.batch() * batches, 1)?;
+        let mut loader = DataLoader::new(data, model.batch(), true, 2).with_max_batches(batches);
+        let mut algo = DeepEnsemble::new(pd, particles, lr)?;
+        algo.train(&mut loader, 1)?; // warmup/compile
+        let t0 = Instant::now();
+        algo.train(&mut loader, 1)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let stats = algo.pd().stats();
+        let vclock: f64 = stats
+            .devices
+            .iter()
+            .map(|d| d.modeled_swap_secs + d.modeled_transfer_secs)
+            .sum();
+        crate::log_info!("ablate cost={label}: {secs:.3}s/epoch vclock={vclock:.5}s");
+        rep.push(
+            Row::new()
+                .str("cost_model", label)
+                .int("particles", particles)
+                .num("secs_per_epoch", secs)
+                .num("virtual_clock_secs", vclock),
+        );
+    }
+    Ok(rep)
+}

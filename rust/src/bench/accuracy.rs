@@ -1,0 +1,128 @@
+//! Tables 3 & 4 (Appendix C.4): multi-SWAG accuracy vs standard training
+//! at constant effective parameter count.
+//!
+//! Paper protocol (§C.4): Adam with lr 1e-3 everywhere. Standard training
+//! = 1 network, 10 epochs, argmax of its logits. Multi-SWAG = P particles
+//! (P doubling as the model shrinks), 7 pretrain + 3 SWAG epochs,
+//! predictions by majority vote over 5 posterior draws per particle with
+//! tiny variance scale.
+
+use anyhow::Result;
+
+use crate::bench::depth_width::SweepRow;
+use crate::bench::report::{Report, Row};
+use crate::bench::data_for;
+use crate::data::DataLoader;
+use crate::device::CostModel;
+use crate::infer::eval::dataset_accuracy;
+use crate::infer::{DeepEnsemble, Infer, MultiSwag, SwagConfig};
+use crate::nel::NelConfig;
+use crate::pd::PushDist;
+use crate::runtime::Manifest;
+
+#[derive(Debug, Clone)]
+pub struct AccOpts {
+    pub devices: usize,
+    pub cache_size: usize,
+    /// Training batches per epoch.
+    pub batches: usize,
+    /// Test-set batches.
+    pub test_batches: usize,
+    pub epochs: usize,
+    pub pretrain_epochs: usize,
+    pub n_samples: usize,
+    pub scale: f32,
+    /// Adam learning rate (paper: 1e-3).
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for AccOpts {
+    fn default() -> Self {
+        AccOpts {
+            devices: 2,
+            cache_size: 8,
+            batches: 6,
+            test_batches: 3,
+            epochs: 10,
+            pretrain_epochs: 7,
+            n_samples: 5,
+            scale: 1e-30,
+            lr: 1e-3,
+            seed: 0,
+        }
+    }
+}
+
+fn cfg(opts: &AccOpts) -> NelConfig {
+    NelConfig {
+        num_devices: opts.devices,
+        cache_size: opts.cache_size,
+        cost: CostModel::default(),
+        seed: opts.seed,
+        ..NelConfig::default()
+    }
+}
+
+/// Accuracy sweep over (model, particles) rows.
+pub fn run(
+    manifest: &Manifest,
+    name: &str,
+    rows: &[SweepRow],
+    opts: &AccOpts,
+) -> Result<Report> {
+    let mut rep = Report::new(name);
+    for row in rows {
+        let model = manifest.model(&row.model)?.clone();
+        let lr = opts.lr;
+        let bsz = model.batch();
+        let n_train = bsz * opts.batches;
+        let n_test = bsz * opts.test_batches;
+        let all = data_for(&model, n_train + n_test, opts.seed + 10)?;
+        let (train, test) = all.split(n_test as f32 / (n_train + n_test) as f32);
+
+        // --- standard training: one particle, plain SGD, argmax logits ---
+        let pd = PushDist::new(manifest, &row.model, cfg(opts))?;
+        let mut std_algo = DeepEnsemble::new(pd, 1, lr)?.with_adam();
+        let mut loader = DataLoader::new(train.clone(), bsz, true, opts.seed + 11)
+            .with_max_batches(opts.batches);
+        std_algo.train(&mut loader, opts.epochs)?;
+        let std_acc = dataset_accuracy(&test, bsz, |x| std_algo.predict_mean(x))?;
+
+        // --- multi-SWAG: P particles, 7+3, majority vote over draws ------
+        let particles = row.base_particles;
+        let pd = PushDist::new(manifest, &row.model, cfg(opts))?;
+        let mut ms = MultiSwag::new(
+            pd,
+            SwagConfig {
+                particles,
+                lr,
+                pretrain_epochs: opts.pretrain_epochs,
+                n_samples: opts.n_samples,
+                scale: opts.scale,
+                adam: true,
+                seed: opts.seed,
+            },
+        )?;
+        let mut loader = DataLoader::new(train, bsz, true, opts.seed + 12)
+            .with_max_batches(opts.batches);
+        ms.train(&mut loader, opts.epochs)?;
+        let ms_acc = dataset_accuracy(&test, bsz, |x| ms.predict_swag(x))?;
+
+        crate::log_info!(
+            "{name}: {} std={:.2}% mswag(P={particles})={:.2}%",
+            row.model,
+            100.0 * std_acc,
+            100.0 * ms_acc
+        );
+        rep.push(
+            Row::new()
+                .str("model", &row.model)
+                .int("params", model.param_count)
+                .num("standard_acc", 100.0 * std_acc)
+                .int("particles", particles)
+                .num("multiswag_acc", 100.0 * ms_acc),
+        );
+    }
+    Ok(rep)
+}

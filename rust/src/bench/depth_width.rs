@@ -1,0 +1,100 @@
+//! Tables 1 & 2: depth/width vs number-of-particles tradeoff at constant
+//! effective parameter count (multi-SWAG on the ViT sweep).
+//!
+//! Paper protocol: hold `param_count x particles` ~ constant down each
+//! column; doubling the device count doubles both the particle count and
+//! the effective parameter count. Ideal scaling is a 1.0x multiple of the
+//! 1-device time in each row; the paper reports how the multiple grows as
+//! particles shrink (Table 1) and under width scaling (Table 2).
+
+use anyhow::Result;
+
+use crate::bench::report::{Report, Row};
+use crate::bench::scaling::{run_one, ScaleOpts};
+use crate::bench::Method;
+use crate::runtime::Manifest;
+
+/// One sweep row: a model variant and its 1-device particle count.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub model: String,
+    pub base_particles: usize,
+}
+
+/// The Table-1 sweep scaled to this testbed: depth halves, particles
+/// double (paper: depths 64..1 / particles 1..64).
+pub fn table1_rows() -> Vec<SweepRow> {
+    vec![
+        SweepRow { model: "vit_d8".into(), base_particles: 2 },
+        SweepRow { model: "vit_d4".into(), base_particles: 4 },
+        SweepRow { model: "vit_d2".into(), base_particles: 8 },
+        SweepRow { model: "vit_d1".into(), base_particles: 16 },
+    ]
+}
+
+/// The Table-2 sweep: width shrinks (params ~ width^2), particles grow
+/// (paper: 8..256 on 1 device).
+pub fn table2_rows(full: bool) -> Vec<SweepRow> {
+    let mut rows = vec![
+        SweepRow { model: "vit_w64".into(), base_particles: 2 },
+        SweepRow { model: "vit_w48".into(), base_particles: 4 },
+        SweepRow { model: "vit_w32".into(), base_particles: 8 },
+        SweepRow { model: "vit_w24".into(), base_particles: 16 },
+    ];
+    if full {
+        rows.push(SweepRow { model: "vit_w16".into(), base_particles: 32 });
+        rows.push(SweepRow { model: "vit_w8".into(), base_particles: 128 });
+    }
+    rows
+}
+
+/// Run a depth/width sweep with multi-SWAG across `devices`, reporting the
+/// paper's T_k time multiples.
+pub fn run(
+    manifest: &Manifest,
+    name: &str,
+    rows: &[SweepRow],
+    devices: &[usize],
+    opts: &ScaleOpts,
+) -> Result<Report> {
+    let mut rep = Report::new(name);
+    let mut t1: Option<f64> = None; // first row, 1 device (the paper's T_1)
+    for row in rows {
+        let params = manifest.model(&row.model)?.param_count;
+        let mut one_dev_secs: Option<f64> = None;
+        for &dev in devices {
+            let particles = row.base_particles * dev;
+            let pt = run_one(manifest, &row.model, Method::MultiSwag, dev, particles, opts)?;
+            // The paper's multiples compare times that would overlap across
+            // devices — use the modeled parallel makespan (1-core host;
+            // see ScalePoint docs).
+            let secs = pt.modeled_secs;
+            crate::log_info!(
+                "{name}: {} dev={dev} P={particles}: wall {:.3}s modeled {secs:.3}s",
+                row.model,
+                pt.wall_secs
+            );
+            if dev == 1 {
+                one_dev_secs = Some(secs);
+                if t1.is_none() {
+                    t1 = Some(secs);
+                }
+            }
+            let vs_one_dev = one_dev_secs.map(|t| secs / t).unwrap_or(f64::NAN);
+            let vs_t1 = t1.map(|t| secs / t).unwrap_or(f64::NAN);
+            rep.push(
+                Row::new()
+                    .str("model", &row.model)
+                    .int("params", params)
+                    .int("effective_params", params * particles)
+                    .int("devices", dev)
+                    .int("particles", particles)
+                    .num("wall_secs_per_epoch", pt.wall_secs)
+                    .num("modeled_secs_per_epoch", secs)
+                    .num("x_vs_1dev", vs_one_dev)
+                    .num("x_vs_T1", vs_t1),
+            );
+        }
+    }
+    Ok(rep)
+}

@@ -1,0 +1,74 @@
+//! Criterion-less micro/macro benchmark utilities (criterion is not in the
+//! vendored crate set; `cargo bench` targets use this instead).
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Measure `f` for `iters` iterations after `warmup` unmeasured ones.
+/// Returns per-iteration seconds.
+pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Run, summarize, and print one named micro-benchmark.
+pub fn bench(name: &str, warmup: usize, iters: usize, f: impl FnMut()) -> Summary {
+    let samples = time_iters(warmup, iters, f);
+    let s = Summary::of(&samples);
+    println!(
+        "{name:<44} {:>10} {:>10} {:>10} {:>10}   n={}",
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p90),
+        fmt_secs(s.max),
+        s.n
+    );
+    s
+}
+
+pub fn bench_header() {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p90", "max"
+    );
+}
+
+/// Human-scale duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_iters_counts() {
+        let mut calls = 0;
+        let samples = time_iters(2, 5, || calls += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("us"));
+    }
+}

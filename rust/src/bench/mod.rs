@@ -1,0 +1,109 @@
+//! Benchmark harness: one driver per paper table/figure (DESIGN.md §5).
+//!
+//! Every driver returns structured rows, prints a paper-style table, and
+//! writes JSON under `bench_results/` so EXPERIMENTS.md can cite exact
+//! numbers. Absolute seconds differ from the paper (simulated devices on a
+//! CPU host — DESIGN.md §Hardware-Adaptation); the *shape* (who wins, the
+//! scaling multipliers, where SVGD saturates) is what the harness checks.
+//!
+//! | Driver                  | Paper artifact          |
+//! |-------------------------|-------------------------|
+//! | [`scaling::run_figure`] | Figures 4 and 7         |
+//! | [`scaling::run_stress`] | Appendix C.3 (Table 2)  |
+//! | [`depth_width::run`]    | Tables 1 and 2          |
+//! | [`accuracy::run`]       | Tables 3 and 4 (App C.4)|
+//! | [`ablate`]              | DESIGN.md ablations     |
+
+pub mod ablate;
+pub mod accuracy;
+pub mod depth_width;
+pub mod harness;
+pub mod report;
+pub mod scaling;
+
+use anyhow::Result;
+
+use crate::data::{synth, Dataset};
+use crate::runtime::ModelSpec;
+
+/// Inference method selector shared by the drivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Ensemble,
+    MultiSwag,
+    Svgd,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Ensemble => "ensemble",
+            Method::MultiSwag => "multi_swag",
+            Method::Svgd => "svgd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "ensemble" => Some(Method::Ensemble),
+            "multi_swag" | "multiswag" | "swag" => Some(Method::MultiSwag),
+            "svgd" => Some(Method::Svgd),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Method; 3] {
+        [Method::Ensemble, Method::MultiSwag, Method::Svgd]
+    }
+}
+
+/// Generate the substitute dataset matching a model's task/shape contract
+/// (DESIGN.md §Dataset-substitutions), sized for `n_samples`.
+pub fn data_for(model: &ModelSpec, n_samples: usize, seed: u64) -> Result<Dataset> {
+    let meta_usize = |key: &str| {
+        model
+            .meta
+            .get(key)
+            .and_then(crate::util::json::Json::as_usize)
+    };
+    let ds = match model.arch.as_str() {
+        "vit" | "resnet" => synth::mnist_like(n_samples, 0.35, seed),
+        "cgcnn" => {
+            let atoms = meta_usize("atoms").unwrap_or(8);
+            let species = meta_usize("species").unwrap_or(4);
+            synth::md17_like(n_samples, atoms, species, seed)
+        }
+        "schnet" => {
+            let atoms = meta_usize("atoms").unwrap_or(8);
+            let species = meta_usize("species").unwrap_or(4);
+            synth::md17_energy(n_samples, atoms, species, seed)
+        }
+        "unet1d" => {
+            let nx = meta_usize("nx").unwrap_or(64);
+            synth::advection(n_samples, nx, 1.0, 0.2, 6, seed)
+        }
+        "mlp" => synth::linear(n_samples, model.x_shape[1], 0.1, seed),
+        other => anyhow::bail!("no dataset substitute for arch {other:?}"),
+    };
+    // shape sanity against the manifest contract
+    anyhow::ensure!(
+        ds.x_dims == model.x_shape[1..],
+        "dataset x {:?} vs model {:?}",
+        ds.x_dims,
+        &model.x_shape[1..]
+    );
+    Ok(ds)
+}
+
+/// Learning rate defaults per architecture (kept small: synthetic targets
+/// are normalized but CGCNN's force term amplifies gradients).
+pub fn lr_for(model: &ModelSpec) -> f32 {
+    match model.arch.as_str() {
+        "cgcnn" => 1e-4,
+        "schnet" => 1e-3,
+        // plain-SGD transformers/CNNs on the synthetic vision task train
+        // comfortably at 5e-2 (validated in tests/infer_integration.rs)
+        "vit" | "resnet" => 5e-2,
+        _ => 1e-2,
+    }
+}

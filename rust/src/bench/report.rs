@@ -1,0 +1,165 @@
+//! Structured bench output: aligned console tables + JSON files under
+//! `bench_results/` (consumed by EXPERIMENTS.md).
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// A generic result row: ordered (key, value) pairs.
+#[derive(Debug, Clone)]
+pub struct Row(pub Vec<(String, Json)>);
+
+impl Row {
+    pub fn new() -> Row {
+        Row(Vec::new())
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Row {
+        self.0.push((k.to_string(), Json::Str(v.to_string())));
+        self
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Row {
+        self.0.push((k.to_string(), Json::Num(v)));
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: usize) -> Row {
+        self.0.push((k.to_string(), Json::Num(v as f64)));
+        self
+    }
+
+    fn cell(&self, k: &str) -> String {
+        for (key, v) in &self.0 {
+            if key == k {
+                return match v {
+                    Json::Str(s) => s.clone(),
+                    Json::Num(n) if n.fract() == 0.0 && n.abs() < 1e12 => {
+                        format!("{}", *n as i64)
+                    }
+                    Json::Num(n) => format!("{n:.4}"),
+                    other => other.pretty(),
+                };
+            }
+        }
+        "-".to_string()
+    }
+}
+
+impl Default for Row {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Print rows as an aligned table using the union of keys in first-seen
+/// order, then persist them as JSON.
+pub struct Report {
+    pub name: String,
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report { name: name.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    fn columns(&self) -> Vec<String> {
+        let mut cols: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for (k, _) in &r.0 {
+                if !cols.contains(k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        cols
+    }
+
+    pub fn print(&self) {
+        let cols = self.columns();
+        if cols.is_empty() {
+            println!("[{}] (no rows)", self.name);
+            return;
+        }
+        let mut widths: Vec<usize> = cols.iter().map(|c| c.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| cols.iter().map(|c| r.cell(c)).collect())
+            .collect();
+        for row in &cells {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("== {} ==", self.name);
+        let header: Vec<String> = cols
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        for row in &cells {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// Write `bench_results/<name>.json`.
+    pub fn save(&self, dir: impl Into<PathBuf>) -> Result<PathBuf> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let path = dir.join(format!("{}.json", self.name));
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| Json::Obj(r.0.iter().cloned().collect()))
+            .collect();
+        let j = obj(vec![
+            ("experiment", Json::Str(self.name.clone())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(j.pretty().as_bytes())?;
+        Ok(path)
+    }
+}
+
+/// Default results directory: `$PUSH_BENCH_DIR` or `<repo>/bench_results`.
+pub fn results_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("PUSH_BENCH_DIR") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_align_and_save() {
+        let mut rep = Report::new("unit_test_report");
+        rep.push(Row::new().str("arch", "vit").int("particles", 4).num("secs", 1.25));
+        rep.push(Row::new().str("arch", "unet").int("particles", 16).num("secs", 0.5));
+        rep.print();
+        let dir = std::env::temp_dir().join(format!("push-bench-{}", std::process::id()));
+        let p = rep.save(&dir).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,256 @@
+//! Figures 4 & 7 (particle scaling across devices/architectures/methods)
+//! and the Appendix C.3 stress test.
+
+use anyhow::Result;
+
+use crate::bench::report::{Report, Row};
+use crate::bench::{data_for, lr_for, Method};
+use crate::data::DataLoader;
+use crate::device::CostModel;
+use crate::infer::{DeepEnsemble, Infer, MultiSwag, Svgd, SvgdConfig, SwagConfig};
+use crate::nel::NelConfig;
+use crate::pd::PushDist;
+use crate::runtime::Manifest;
+
+#[derive(Debug, Clone)]
+pub struct ScaleOpts {
+    /// Device counts to sweep (paper: 1, 2, 4).
+    pub devices: Vec<usize>,
+    /// Particle counts for ONE device; d devices run `base * d` particles
+    /// (the paper's {1,2,4,8} x devices grid).
+    pub particles_base: Vec<usize>,
+    /// Batches per epoch (paper: 40).
+    pub batches: usize,
+    /// Epochs per configuration; the first is warmup (compile) and is
+    /// excluded from the mean when more than one runs (paper averages 10).
+    pub epochs: usize,
+    /// Active-set slots per device (paper default: 4, or 8 to fit the
+    /// 8-particles-per-device grid point).
+    pub cache_size: usize,
+    /// Also run the handwritten 1-device baselines (paper §5.1).
+    pub baseline: bool,
+    pub seed: u64,
+}
+
+impl Default for ScaleOpts {
+    fn default() -> Self {
+        ScaleOpts {
+            devices: vec![1, 2, 4],
+            particles_base: vec![1, 2, 4, 8],
+            batches: 4,
+            epochs: 2,
+            cache_size: 8,
+            baseline: true,
+            seed: 0,
+        }
+    }
+}
+
+fn mk_config(devices: usize, cache: usize, seed: u64) -> NelConfig {
+    NelConfig {
+        num_devices: devices,
+        cache_size: cache,
+        cost: CostModel::default(),
+        // 1-core host: measure in discrete-event mode so the modeled
+        // makespan (max per-device busy) is contention-free.
+        serialize_streams: true,
+        seed,
+        ..NelConfig::default()
+    }
+}
+
+/// One scaling measurement.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    /// Wall seconds per epoch. NOTE: on a 1-core host the simulated
+    /// devices' thread-level concurrency serializes, so wall time cannot
+    /// show multi-device speedup — use `modeled_secs` for the paper's
+    /// scaling shape (DESIGN.md §Hardware-Adaptation).
+    pub wall_secs: f64,
+    /// Modeled parallel makespan per epoch: max over devices of that
+    /// device's REAL busy time plus its virtual transfer/swap clock —
+    /// what the same schedule costs when devices truly overlap.
+    pub modeled_secs: f64,
+    pub final_loss: f64,
+}
+
+/// Train `method` with `particles` on `devices`. Uses the substitute
+/// dataset for the model's architecture.
+pub fn run_one(
+    manifest: &Manifest,
+    model_name: &str,
+    method: Method,
+    devices: usize,
+    particles: usize,
+    opts: &ScaleOpts,
+) -> Result<ScalePoint> {
+    let pd = PushDist::new(manifest, model_name, mk_config(devices, opts.cache_size, opts.seed))?;
+    let model = pd.model().clone();
+    let lr = lr_for(&model);
+    let n_samples = model.batch() * opts.batches;
+    let data = data_for(&model, n_samples, opts.seed + 1)?;
+    let mut loader =
+        DataLoader::new(data, model.batch(), true, opts.seed + 2).with_max_batches(opts.batches);
+
+    let mut algo: Box<dyn Infer> = match method {
+        Method::Ensemble => Box::new(DeepEnsemble::new(pd, particles, lr)?),
+        Method::MultiSwag => Box::new(MultiSwag::new(
+            pd,
+            SwagConfig {
+                particles,
+                lr,
+                pretrain_epochs: 0, // every measured epoch does moment work
+                ..SwagConfig::default()
+            },
+        )?),
+        Method::Svgd => Box::new(Svgd::new(
+            pd,
+            SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() },
+        )?),
+    };
+    // warmup epoch (PJRT compiles) excluded from both metrics
+    let (warmup, measured) = if opts.epochs > 1 { (1, opts.epochs - 1) } else { (0, opts.epochs) };
+    if warmup > 0 {
+        algo.train(&mut loader, warmup)?;
+    }
+    let before = algo.pids().len(); // force algo borrow shape
+    let _ = before;
+    let stats0 = stats_snapshot(algo.as_ref());
+    let report = algo.train(&mut loader, measured)?;
+    let stats1 = stats_snapshot(algo.as_ref());
+    let wall = report.mean_epoch_secs();
+    let modeled = stats1
+        .iter()
+        .zip(&stats0)
+        .map(|(a, b)| {
+            (a.busy_secs - b.busy_secs)
+                + (a.modeled_swap_secs - b.modeled_swap_secs)
+                + (a.modeled_transfer_secs - b.modeled_transfer_secs)
+        })
+        .fold(0.0f64, f64::max)
+        / measured as f64;
+    Ok(ScalePoint { wall_secs: wall, modeled_secs: modeled, final_loss: report.final_loss() })
+}
+
+fn stats_snapshot(algo: &dyn Infer) -> Vec<crate::device::DeviceStats> {
+    algo.nel_stats().devices
+}
+
+/// The handwritten 1-device baseline for the same (method, particles).
+pub fn run_baseline(
+    manifest: &Manifest,
+    model_name: &str,
+    method: Method,
+    particles: usize,
+    opts: &ScaleOpts,
+) -> Result<ScalePoint> {
+    let model = manifest.model(model_name)?.clone();
+    let lr = lr_for(&model);
+    let n_samples = model.batch() * opts.batches;
+    let data = data_for(&model, n_samples, opts.seed + 1)?;
+    let mut loader =
+        DataLoader::new(data, model.batch(), true, opts.seed + 2).with_max_batches(opts.batches);
+    let mut b = crate::baselines::Baseline::new(manifest, model_name, particles, opts.seed)?;
+    let report = match method {
+        Method::Ensemble => b.train_ensemble(&mut loader, opts.epochs, lr)?,
+        Method::MultiSwag => b.train_multiswag(&mut loader, opts.epochs, 0, lr)?.0,
+        Method::Svgd => b.train_svgd(&mut loader, opts.epochs, lr, 10.0)?,
+    };
+    let secs = if report.epochs.len() > 1 {
+        report.epochs[1..].iter().map(|e| e.secs).sum::<f64>() / (report.epochs.len() - 1) as f64
+    } else {
+        report.mean_epoch_secs()
+    };
+    // The baseline is a single sequential stream: modeled == wall.
+    Ok(ScalePoint { wall_secs: secs, modeled_secs: secs, final_loss: report.final_loss() })
+}
+
+/// Figure 4 / Figure 7 grid: archs x methods x devices x particles.
+pub fn run_figure(
+    manifest: &Manifest,
+    name: &str,
+    archs: &[&str],
+    methods: &[Method],
+    opts: &ScaleOpts,
+) -> Result<Report> {
+    let mut rep = Report::new(name);
+    for arch in archs {
+        for method in methods {
+            for &dev in &opts.devices {
+                for &base in &opts.particles_base {
+                    let particles = base * dev;
+                    let pt = run_one(manifest, arch, *method, dev, particles, opts)?;
+                    crate::log_info!(
+                        "{name}: {arch} {} dev={dev} P={particles}: wall {:.3}s modeled {:.3}s",
+                        method.name(),
+                        pt.wall_secs,
+                        pt.modeled_secs
+                    );
+                    rep.push(
+                        Row::new()
+                            .str("arch", arch)
+                            .str("method", method.name())
+                            .int("devices", dev)
+                            .int("particles", particles)
+                            .num("wall_secs_per_epoch", pt.wall_secs)
+                            .num("modeled_secs_per_epoch", pt.modeled_secs)
+                            .num("final_loss", pt.final_loss),
+                    );
+                }
+            }
+            if opts.baseline {
+                for &base in &opts.particles_base {
+                    let pt = run_baseline(manifest, arch, *method, base, opts)?;
+                    crate::log_info!(
+                        "{name}: {arch} {} baseline P={base}: {:.3}s/epoch",
+                        method.name(),
+                        pt.wall_secs
+                    );
+                    rep.push(
+                        Row::new()
+                            .str("arch", arch)
+                            .str("method", &format!("{}_baseline", method.name()))
+                            .int("devices", 1)
+                            .int("particles", base)
+                            .num("wall_secs_per_epoch", pt.wall_secs)
+                            .num("modeled_secs_per_epoch", pt.modeled_secs)
+                            .num("final_loss", pt.final_loss),
+                    );
+                }
+            }
+        }
+    }
+    Ok(rep)
+}
+
+/// Appendix C.3 stress test: saturate device caches with many small
+/// particles (ensemble; the point is scheduler/swap behaviour, not math).
+pub fn run_stress(
+    manifest: &Manifest,
+    model_name: &str,
+    devices: &[usize],
+    particles_base: &[usize],
+    opts: &ScaleOpts,
+) -> Result<Report> {
+    let mut rep = Report::new("stress_c3");
+    for &dev in devices {
+        for &base in particles_base {
+            let particles = base * dev;
+            let pt = run_one(manifest, model_name, Method::Ensemble, dev, particles, opts)?;
+            crate::log_info!(
+                "stress: dev={dev} P={particles}: wall {:.3}s modeled {:.3}s",
+                pt.wall_secs,
+                pt.modeled_secs
+            );
+            rep.push(
+                Row::new()
+                    .str("arch", model_name)
+                    .int("devices", dev)
+                    .int("particles", particles)
+                    .num("wall_secs_per_epoch", pt.wall_secs)
+                    .num("modeled_secs_per_epoch", pt.modeled_secs),
+            );
+        }
+    }
+    Ok(rep)
+}

@@ -1,0 +1,257 @@
+//! Dataset container + batching DataLoader.
+//!
+//! Samples are stored row-major in one contiguous buffer per split; the
+//! loader materializes `Tensor` batches matching the model's AOT example
+//! shapes (fixed batch size — artifacts are shape-specialized, so trailing
+//! ragged batches are dropped, mirroring `drop_last=True`).
+
+use crate::runtime::{DType, Tensor, TensorData};
+use crate::util::rng::Rng;
+
+/// A fixed-size batch ready to feed an AOT entry.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+}
+
+/// In-memory dataset: n samples of x-shape `x_dims` and y-shape `y_dims`
+/// (per-sample shapes, no batch dim). `y_dtype` distinguishes class labels
+/// (I32) from regression targets (F32).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub x_dims: Vec<usize>,
+    pub y_dims: Vec<usize>,
+    pub xs: Vec<f32>,
+    pub ys_f: Vec<f32>,
+    pub ys_i: Vec<i32>,
+    pub y_dtype: DType,
+}
+
+impl Dataset {
+    pub fn new_f32(x_dims: Vec<usize>, y_dims: Vec<usize>) -> Dataset {
+        Dataset {
+            n: 0,
+            x_dims,
+            y_dims,
+            xs: Vec::new(),
+            ys_f: Vec::new(),
+            ys_i: Vec::new(),
+            y_dtype: DType::F32,
+        }
+    }
+
+    pub fn new_classify(x_dims: Vec<usize>) -> Dataset {
+        Dataset {
+            n: 0,
+            x_dims,
+            y_dims: vec![],
+            xs: Vec::new(),
+            ys_f: Vec::new(),
+            ys_i: Vec::new(),
+            y_dtype: DType::I32,
+        }
+    }
+
+    pub fn x_stride(&self) -> usize {
+        self.x_dims.iter().product()
+    }
+
+    pub fn y_stride(&self) -> usize {
+        self.y_dims.iter().product()
+    }
+
+    pub fn push_f32(&mut self, x: &[f32], y: &[f32]) {
+        assert_eq!(x.len(), self.x_stride());
+        assert_eq!(y.len(), self.y_stride());
+        assert_eq!(self.y_dtype, DType::F32);
+        self.xs.extend_from_slice(x);
+        self.ys_f.extend_from_slice(y);
+        self.n += 1;
+    }
+
+    pub fn push_classify(&mut self, x: &[f32], label: i32) {
+        assert_eq!(x.len(), self.x_stride());
+        assert_eq!(self.y_dtype, DType::I32);
+        self.xs.extend_from_slice(x);
+        self.ys_i.push(label);
+        self.n += 1;
+    }
+
+    /// Assemble a batch from sample indices.
+    pub fn gather(&self, idxs: &[usize]) -> Batch {
+        let b = idxs.len();
+        let xs_stride = self.x_stride();
+        let mut xb = Vec::with_capacity(b * xs_stride);
+        for &i in idxs {
+            xb.extend_from_slice(&self.xs[i * xs_stride..(i + 1) * xs_stride]);
+        }
+        let mut x_shape = vec![b];
+        x_shape.extend(&self.x_dims);
+        let x = Tensor::f32(x_shape, xb);
+
+        let y = match self.y_dtype {
+            DType::I32 => {
+                let yb: Vec<i32> = idxs.iter().map(|&i| self.ys_i[i]).collect();
+                Tensor::new(vec![b], TensorData::I32(yb))
+            }
+            _ => {
+                let ys_stride = self.y_stride();
+                let mut yb = Vec::with_capacity(b * ys_stride);
+                for &i in idxs {
+                    yb.extend_from_slice(&self.ys_f[i * ys_stride..(i + 1) * ys_stride]);
+                }
+                let mut y_shape = vec![b];
+                y_shape.extend(&self.y_dims);
+                Tensor::f32(y_shape, yb)
+            }
+        };
+        Batch { x, y }
+    }
+
+    /// Split off the last `frac` of samples as a test set.
+    pub fn split(mut self, frac: f32) -> (Dataset, Dataset) {
+        let n_test = ((self.n as f32) * frac).round() as usize;
+        let n_train = self.n - n_test;
+        let xs_stride = self.x_stride();
+        let ys_stride = self.y_stride();
+        let mut test = self.clone();
+        test.xs = self.xs.split_off(n_train * xs_stride);
+        if self.y_dtype == DType::I32 {
+            test.ys_i = self.ys_i.split_off(n_train);
+            test.ys_f.clear();
+        } else {
+            test.ys_f = self.ys_f.split_off(n_train * ys_stride);
+            test.ys_i.clear();
+        }
+        test.n = n_test;
+        self.n = n_train;
+        (self, test)
+    }
+}
+
+/// Epoch iterator producing fixed-size batches, optionally shuffled and
+/// optionally capped at `max_batches` per epoch (the paper fixes 40
+/// batches/epoch across tasks, §5.1).
+pub struct DataLoader {
+    pub data: Dataset,
+    pub batch_size: usize,
+    pub shuffle: bool,
+    pub max_batches: Option<usize>,
+    rng: Rng,
+    order: Vec<usize>,
+}
+
+impl DataLoader {
+    pub fn new(data: Dataset, batch_size: usize, shuffle: bool, seed: u64) -> DataLoader {
+        assert!(batch_size > 0 && data.n >= batch_size,
+                "dataset of {} can't fill a batch of {batch_size}", data.n);
+        let order = (0..data.n).collect();
+        DataLoader {
+            data,
+            batch_size,
+            shuffle,
+            max_batches: None,
+            rng: Rng::new(seed),
+            order,
+        }
+    }
+
+    pub fn with_max_batches(mut self, m: usize) -> DataLoader {
+        self.max_batches = Some(m);
+        self
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        let full = self.data.n / self.batch_size;
+        match self.max_batches {
+            Some(m) => full.min(m),
+            None => full,
+        }
+    }
+
+    /// Materialize one epoch of batches.
+    pub fn epoch(&mut self) -> Vec<Batch> {
+        if self.shuffle {
+            self.rng.shuffle(&mut self.order);
+        }
+        let nb = self.batches_per_epoch();
+        (0..nb)
+            .map(|b| {
+                let idxs = &self.order[b * self.batch_size..(b + 1) * self.batch_size];
+                self.data.gather(idxs)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let mut d = Dataset::new_f32(vec![2], vec![1]);
+        for i in 0..n {
+            d.push_f32(&[i as f32, -(i as f32)], &[2.0 * i as f32]);
+        }
+        d
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let d = toy(10);
+        let b = d.gather(&[1, 3, 5]);
+        assert_eq!(b.x.shape, vec![3, 2]);
+        assert_eq!(b.y.shape, vec![3, 1]);
+        assert_eq!(b.x.as_f32()[2], 3.0);
+        assert_eq!(b.y.as_f32()[1], 6.0);
+    }
+
+    #[test]
+    fn classify_batches_are_i32() {
+        let mut d = Dataset::new_classify(vec![4]);
+        for i in 0..8 {
+            d.push_classify(&[0.0; 4], i % 3);
+        }
+        let b = d.gather(&[0, 1, 2]);
+        assert_eq!(b.y.as_i32(), &[0, 1, 2]);
+        assert_eq!(b.y.shape, vec![3]);
+    }
+
+    #[test]
+    fn loader_covers_epoch_without_repeats() {
+        let mut dl = DataLoader::new(toy(10), 3, true, 42);
+        let batches = dl.epoch();
+        assert_eq!(batches.len(), 3); // 10/3, last ragged batch dropped
+        let mut seen: Vec<f32> = batches
+            .iter()
+            .flat_map(|b| b.x.as_f32().chunks(2).map(|c| c[0]).collect::<Vec<_>>())
+            .collect();
+        seen.sort_by(f32::total_cmp);
+        seen.dedup();
+        assert_eq!(seen.len(), 9, "no sample repeated within an epoch");
+    }
+
+    #[test]
+    fn max_batches_caps() {
+        let mut dl = DataLoader::new(toy(100), 10, false, 0).with_max_batches(4);
+        assert_eq!(dl.batches_per_epoch(), 4);
+        assert_eq!(dl.epoch().len(), 4);
+    }
+
+    #[test]
+    fn unshuffled_is_deterministic() {
+        let mut a = DataLoader::new(toy(9), 3, false, 0);
+        let mut b = DataLoader::new(toy(9), 3, false, 99);
+        assert_eq!(a.epoch()[0].x, b.epoch()[0].x);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let (tr, te) = toy(10).split(0.3);
+        assert_eq!(tr.n, 7);
+        assert_eq!(te.n, 3);
+        assert_eq!(te.xs[0], 7.0);
+    }
+}

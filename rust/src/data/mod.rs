@@ -1,0 +1,22 @@
+//! Synthetic datasets + DataLoader (DESIGN.md §Dataset-substitutions).
+//!
+//! The paper trains on MNIST, MD17 and PDEBench-Advection; none ship with
+//! this testbed, so each is replaced by a deterministic generator that
+//! preserves the property the experiment needs:
+//!
+//! * [`synth::mnist_like`] — 10-class 28x28 images from class templates +
+//!   noise: same shapes/batching as MNIST and *learnable* (Tables 3/4
+//!   compare accuracies).
+//! * [`synth::md17_like`] — atoms jittered around an equilibrium geometry
+//!   with energies/forces from a Morse-style pair potential: regression
+//!   with a force term, driving the CGCNN second-order autodiff path.
+//! * [`synth::advection`] — periodic 1-D advection with random-Fourier
+//!   initial conditions; exact solution u(x,t) = u0(x - ct) gives the
+//!   UNet's operator-learning pairs.
+//! * [`synth::linear`] — noisy linear regression for the MLP quickstart /
+//!   SVGD examples.
+
+pub mod loader;
+pub mod synth;
+
+pub use loader::{Batch, DataLoader, Dataset};

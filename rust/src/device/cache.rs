@@ -1,0 +1,269 @@
+//! Resident-particle cache: the paper's per-device *active set* (§4.2).
+//!
+//! Particles in the active set live "on the accelerator" (here: owned by
+//! the device thread); the rest live in the shared host store. A compute
+//! job touching a non-resident particle triggers the paper's context
+//! switch: evict the LRU unpinned particle (swap-out copy back to host),
+//! then swap the target in. Both directions perform REAL copies so the
+//! measured cost of cache pressure is honest, and are additionally charged
+//! to the virtual transfer clock (cost::CostModel).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::device::cost::CostModel;
+use crate::device::stats::DeviceStats;
+use crate::nel::trace::{Event, EventKind, Trace};
+use crate::particle::Pid;
+use crate::runtime::Tensor;
+
+/// Host-RAM parameter store, shared by all devices. A particle's parameters
+/// are EITHER here or resident in exactly one device cache (the invariant
+/// `swap-out inserts / swap-in removes` maintains single authority).
+#[derive(Clone, Default)]
+pub struct HostStore {
+    inner: Arc<Mutex<HashMap<Pid, Tensor>>>,
+}
+
+impl HostStore {
+    pub fn insert(&self, pid: Pid, t: Tensor) {
+        self.inner.lock().unwrap().insert(pid, t);
+    }
+
+    pub fn take(&self, pid: Pid) -> Option<Tensor> {
+        self.inner.lock().unwrap().remove(&pid)
+    }
+
+    pub fn get_clone(&self, pid: Pid) -> Option<Tensor> {
+        self.inner.lock().unwrap().get(&pid).cloned()
+    }
+
+    pub fn contains(&self, pid: Pid) -> bool {
+        self.inner.lock().unwrap().contains_key(&pid)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+pub struct ResidentCache {
+    capacity: usize,
+    mem_budget: usize,
+    cost: CostModel,
+    resident: HashMap<Pid, Tensor>,
+    /// LRU order: front = least recently used.
+    lru: VecDeque<Pid>,
+    bytes: usize,
+}
+
+impl ResidentCache {
+    pub fn new(capacity: usize, mem_budget: usize, cost: CostModel) -> ResidentCache {
+        assert!(capacity > 0, "active set must hold at least one particle");
+        ResidentCache {
+            capacity,
+            mem_budget,
+            cost,
+            resident: HashMap::new(),
+            lru: VecDeque::new(),
+            bytes: 0,
+        }
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn is_resident(&self, pid: Pid) -> bool {
+        self.resident.contains_key(&pid)
+    }
+
+    fn touch(&mut self, pid: Pid) {
+        if let Some(pos) = self.lru.iter().position(|p| *p == pid) {
+            self.lru.remove(pos);
+        }
+        self.lru.push_back(pid);
+    }
+
+    /// Swap in `pid` (evicting as needed) and return its parameters.
+    pub fn ensure_resident(
+        &mut self,
+        pid: Pid,
+        host: &HostStore,
+        stats: &mut DeviceStats,
+        trace: &Trace,
+        device: usize,
+    ) -> Result<&mut Tensor> {
+        if self.resident.contains_key(&pid) {
+            self.touch(pid);
+            stats.cache_hits += 1;
+            return Ok(self.resident.get_mut(&pid).unwrap());
+        }
+        stats.cache_misses += 1;
+        let t = host.take(pid).ok_or_else(|| {
+            anyhow!("particle {pid:?} is neither resident on device {device} nor in the host store (resident elsewhere?)")
+        })?;
+        let incoming = t.size_bytes();
+
+        // Evict until both the slot budget and the byte budget fit.
+        while self.resident.len() >= self.capacity
+            || (self.bytes + incoming > self.mem_budget && !self.resident.is_empty())
+        {
+            let victim = self
+                .lru
+                .pop_front()
+                .ok_or_else(|| anyhow!("cache bookkeeping lost its LRU order"))?;
+            let vt = self
+                .resident
+                .remove(&victim)
+                .ok_or_else(|| anyhow!("LRU entry {victim:?} not resident"))?;
+            let vbytes = vt.size_bytes();
+            self.bytes -= vbytes;
+            self.cost.charge_swap(vbytes, stats);
+            stats.swaps_out += 1;
+            stats.swap_bytes += vbytes as u64;
+            trace.record(Event::new(device, Some(victim), EventKind::SwapOut, vbytes));
+            host.insert(victim, vt);
+        }
+
+        self.cost.charge_swap(incoming, stats);
+        stats.swaps_in += 1;
+        stats.swap_bytes += incoming as u64;
+        trace.record(Event::new(device, Some(pid), EventKind::SwapIn, incoming));
+        self.bytes += incoming;
+        self.resident.insert(pid, t);
+        self.lru.push_back(pid);
+        Ok(self.resident.get_mut(&pid).unwrap())
+    }
+
+    /// Write a resident particle back to the host store (used on particle
+    /// drop and by the drain API that snapshots all parameters).
+    pub fn flush(&mut self, pid: Pid, host: &HostStore) -> bool {
+        if let Some(t) = self.resident.remove(&pid) {
+            self.bytes -= t.size_bytes();
+            if let Some(pos) = self.lru.iter().position(|p| *p == pid) {
+                self.lru.remove(pos);
+            }
+            host.insert(pid, t);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Flush everything (drain before reading a global snapshot).
+    pub fn flush_all(&mut self, host: &HostStore) -> usize {
+        let pids: Vec<Pid> = self.resident.keys().copied().collect();
+        let n = pids.len();
+        for pid in pids {
+            self.flush(pid, host);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(pid: u32, elems: usize) -> (Pid, Tensor) {
+        (Pid(pid), Tensor::f32(vec![elems], vec![pid as f32; elems]))
+    }
+
+    fn setup(cap: usize, budget: usize) -> (ResidentCache, HostStore, DeviceStats, Trace) {
+        (
+            ResidentCache::new(cap, budget, CostModel::default()),
+            HostStore::default(),
+            DeviceStats::default(),
+            Trace::disabled(),
+        )
+    }
+
+    #[test]
+    fn swap_in_and_hit() {
+        let (mut c, host, mut st, tr) = setup(2, 1 << 20);
+        let (p, t) = mk(1, 4);
+        host.insert(p, t);
+        c.ensure_resident(p, &host, &mut st, &tr, 0).unwrap();
+        assert!(c.is_resident(p));
+        assert!(!host.contains(p), "authority moved to device");
+        c.ensure_resident(p, &host, &mut st, &tr, 0).unwrap();
+        assert_eq!(st.cache_hits, 1);
+        assert_eq!(st.swaps_in, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let (mut c, host, mut st, tr) = setup(2, 1 << 20);
+        for i in 1..=3 {
+            let (p, t) = mk(i, 4);
+            host.insert(p, t);
+        }
+        c.ensure_resident(Pid(1), &host, &mut st, &tr, 0).unwrap();
+        c.ensure_resident(Pid(2), &host, &mut st, &tr, 0).unwrap();
+        // touch 1 so 2 becomes LRU
+        c.ensure_resident(Pid(1), &host, &mut st, &tr, 0).unwrap();
+        c.ensure_resident(Pid(3), &host, &mut st, &tr, 0).unwrap();
+        assert!(c.is_resident(Pid(1)));
+        assert!(!c.is_resident(Pid(2)), "2 was LRU, must be evicted");
+        assert!(host.contains(Pid(2)), "evicted particle back in host store");
+        assert_eq!(st.swaps_out, 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts() {
+        // budget of 40 bytes = 10 f32; two 4-elem tensors fit, a third evicts
+        let (mut c, host, mut st, tr) = setup(8, 40);
+        for i in 1..=3 {
+            let (p, t) = mk(i, 4); // 16 bytes each
+            host.insert(p, t);
+        }
+        c.ensure_resident(Pid(1), &host, &mut st, &tr, 0).unwrap();
+        c.ensure_resident(Pid(2), &host, &mut st, &tr, 0).unwrap();
+        c.ensure_resident(Pid(3), &host, &mut st, &tr, 0).unwrap();
+        assert_eq!(c.resident_count(), 2);
+        assert!(c.resident_bytes() <= 40);
+    }
+
+    #[test]
+    fn missing_particle_errors() {
+        let (mut c, host, mut st, tr) = setup(2, 1 << 20);
+        assert!(c.ensure_resident(Pid(9), &host, &mut st, &tr, 0).is_err());
+    }
+
+    #[test]
+    fn flush_restores_authority() {
+        let (mut c, host, mut st, tr) = setup(2, 1 << 20);
+        let (p, t) = mk(5, 4);
+        host.insert(p, t.clone());
+        c.ensure_resident(p, &host, &mut st, &tr, 0).unwrap();
+        assert!(c.flush(p, &host));
+        assert_eq!(host.get_clone(p).unwrap(), t);
+        assert!(!c.flush(p, &host), "double flush is a no-op");
+    }
+
+    #[test]
+    fn mutation_survives_roundtrip() {
+        let (mut c, host, mut st, tr) = setup(1, 1 << 20);
+        for i in 1..=2 {
+            let (p, t) = mk(i, 4);
+            host.insert(p, t);
+        }
+        c.ensure_resident(Pid(1), &host, &mut st, &tr, 0)
+            .unwrap()
+            .as_f32_mut()[0] = 99.0;
+        // forces eviction of 1
+        c.ensure_resident(Pid(2), &host, &mut st, &tr, 0).unwrap();
+        assert_eq!(host.get_clone(Pid(1)).unwrap().as_f32()[0], 99.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Transfer cost model (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper's cross-device message passing pays PCIe; same-device passing
+//! is free. Swaps in/out of the active set pay host<->device bandwidth.
+//! Here real copies already happen (honest relative costs on a CPU host);
+//! the model *additionally* accumulates a virtual clock from a configurable
+//! bandwidth + latency, so EXPERIMENTS.md can report what the schedule
+//! would cost on PCIe-class links. `simulate = true` turns the virtual cost
+//! into actual sleeps for end-to-end what-if runs.
+
+use std::time::Duration;
+
+use crate::device::stats::DeviceStats;
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Host<->device bandwidth for swaps (bytes/sec). None = don't model.
+    pub swap_bw: Option<f64>,
+    /// Device<->device bandwidth for views/transfers (bytes/sec).
+    pub transfer_bw: Option<f64>,
+    /// Fixed per-operation latency.
+    pub latency: Duration,
+    /// If true, sleep for the modeled duration (otherwise account only).
+    pub simulate: bool,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Account-only defaults sized like PCIe 4.0 x16 (~24 GB/s effective)
+        // with a 10 us launch latency.
+        CostModel {
+            swap_bw: Some(24e9),
+            transfer_bw: Some(24e9),
+            latency: Duration::from_micros(10),
+            simulate: false,
+        }
+    }
+}
+
+impl CostModel {
+    /// No modeling at all (unit tests).
+    pub fn free() -> CostModel {
+        CostModel { swap_bw: None, transfer_bw: None, latency: Duration::ZERO, simulate: false }
+    }
+
+    fn model(&self, bytes: usize, bw: Option<f64>) -> f64 {
+        match bw {
+            None => 0.0,
+            Some(bw) => self.latency.as_secs_f64() + bytes as f64 / bw,
+        }
+    }
+
+    pub fn charge_swap(&self, bytes: usize, stats: &mut DeviceStats) {
+        let secs = self.model(bytes, self.swap_bw);
+        stats.modeled_swap_secs += secs;
+        self.maybe_sleep(secs);
+    }
+
+    pub fn charge_transfer(&self, bytes: usize, stats: &mut DeviceStats) {
+        let secs = self.model(bytes, self.transfer_bw);
+        stats.modeled_transfer_secs += secs;
+        stats.transfer_bytes += bytes as u64;
+        stats.transfers += 1;
+        self.maybe_sleep(secs);
+    }
+
+    fn maybe_sleep(&self, secs: f64) {
+        if self.simulate && secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_accumulates() {
+        let m = CostModel {
+            swap_bw: Some(1e9),
+            transfer_bw: Some(2e9),
+            latency: Duration::from_micros(5),
+            simulate: false,
+        };
+        let mut st = DeviceStats::default();
+        m.charge_swap(1_000_000, &mut st); // 5us + 1ms
+        assert!((st.modeled_swap_secs - 0.001005).abs() < 1e-9);
+        m.charge_transfer(2_000_000, &mut st); // 5us + 1ms
+        assert!((st.modeled_transfer_secs - 0.001005).abs() < 1e-9);
+        assert_eq!(st.transfer_bytes, 2_000_000);
+    }
+
+    #[test]
+    fn free_model_is_zero() {
+        let m = CostModel::free();
+        let mut st = DeviceStats::default();
+        m.charge_swap(1 << 30, &mut st);
+        assert_eq!(st.modeled_swap_secs, 0.0);
+    }
+}

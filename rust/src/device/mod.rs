@@ -1,0 +1,233 @@
+//! Simulated accelerator devices (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper maps particles onto physical GPUs; this testbed has none, so
+//! each `SimDevice` is a dedicated OS thread with a FIFO compute stream, a
+//! byte-budgeted resident-particle cache (the paper's *active set* +
+//! *particle cache*, §4.2), and its own PJRT CPU client. Compute submitted
+//! to a device executes for real — strictly serialized per device, truly
+//! concurrent across devices — so contention and scheduling behave like the
+//! paper's multi-GPU node while numerics stay exact.
+//!
+//! Compute jobs must never block on other jobs' results (that is the
+//! particle control threads' job, see nel::particle) — device streams are
+//! kept deadlock-free by construction.
+
+pub mod cache;
+pub mod cost;
+pub mod stats;
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::nel::trace::Trace;
+use crate::particle::Pid;
+use crate::runtime::{RuntimeClient, Tensor};
+pub use cache::{HostStore, ResidentCache};
+pub use cost::CostModel;
+pub use stats::DeviceStats;
+
+/// Context handed to every compute job, giving access to the device's PJRT
+/// client, its resident-particle cache, and the shared host store.
+pub struct DeviceCtx<'a> {
+    pub device_id: usize,
+    pub runtime: &'a mut RuntimeClient,
+    pub cache: &'a mut ResidentCache,
+    pub host: &'a HostStore,
+    pub stats: &'a mut DeviceStats,
+    pub trace: &'a Trace,
+}
+
+impl<'a> DeviceCtx<'a> {
+    /// Ensure `pid`'s parameters are resident on this device (performing
+    /// the swap-in / LRU eviction the paper's context switch does) and
+    /// return a mutable reference to them.
+    pub fn params_mut(&mut self, pid: Pid) -> Result<&mut Tensor> {
+        self.cache
+            .ensure_resident(pid, self.host, self.stats, self.trace, self.device_id)
+    }
+
+    /// Read-only snapshot of `pid`'s parameters (a *view* in the paper's
+    /// sense): the device copies them out, charging a device->host
+    /// transfer.
+    pub fn params_view(&mut self, pid: Pid) -> Result<Tensor> {
+        let dev = self.device_id;
+        let t = self
+            .cache
+            .ensure_resident(pid, self.host, self.stats, self.trace, dev)?
+            .clone();
+        self.stats.view_bytes += t.size_bytes() as u64;
+        self.stats.views += 1;
+        Ok(t)
+    }
+}
+
+type Job = Box<dyn FnOnce(&mut DeviceCtx<'_>) + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Handle to one simulated device's FIFO stream.
+pub struct DeviceHandle {
+    pub id: usize,
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<DeviceStats>>,
+}
+
+impl DeviceHandle {
+    /// Enqueue a compute job. FIFO per device.
+    pub fn submit(&self, job: Job) -> Result<()> {
+        self.tx
+            .send(Msg::Run(job))
+            .map_err(|_| anyhow!("device {} stream closed", self.id))
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// Configuration for one device (uniform across the pool today).
+#[derive(Clone)]
+pub struct DeviceConfig {
+    /// Max particles resident at once — the paper's active-set size
+    /// ("cache_size" in its API).
+    pub cache_size: usize,
+    /// Device memory budget in bytes (24 GB on the paper's A5000s; scaled
+    /// here, mostly exercised by the stress tests).
+    pub mem_budget: usize,
+    pub cost: CostModel,
+    /// When set, every device stream acquires this lock around each job —
+    /// discrete-event measurement mode for 1-core hosts: per-device busy
+    /// times become contention-free, so `max_d(busy_d)` is an honest
+    /// parallel makespan (DESIGN.md §Hardware-Adaptation). None = real
+    /// thread-level concurrency.
+    pub serialize: Option<Arc<Mutex<()>>>,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            cache_size: 4,
+            mem_budget: 2 << 30,
+            cost: CostModel::default(),
+            serialize: None,
+        }
+    }
+}
+
+/// The pool of simulated devices on this "node".
+pub struct DevicePool {
+    devices: Vec<DeviceHandle>,
+    pub host: HostStore,
+}
+
+impl DevicePool {
+    pub fn new(n: usize, cfg: DeviceConfig, trace: Trace) -> Result<DevicePool> {
+        assert!(n > 0, "need at least one device");
+        let host = HostStore::default();
+        let mut devices = Vec::with_capacity(n);
+        for id in 0..n {
+            devices.push(Self::spawn(id, cfg.clone(), host.clone(), trace.clone())?);
+        }
+        Ok(DevicePool { devices, host })
+    }
+
+    fn spawn(id: usize, cfg: DeviceConfig, host: HostStore, trace: Trace) -> Result<DeviceHandle> {
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(Mutex::new(DeviceStats::default()));
+        let stats_in = stats.clone();
+        // RuntimeClient is created ON the worker thread (PJRT types are
+        // !Send); creation failure is reported through the first join.
+        let join = std::thread::Builder::new()
+            .name(format!("sim-device-{id}"))
+            .spawn(move || {
+                let mut runtime = match RuntimeClient::cpu() {
+                    Ok(r) => r,
+                    Err(e) => {
+                        crate::log_error!("device {id}: PJRT client failed: {e:#}");
+                        return;
+                    }
+                };
+                let mut cache = ResidentCache::new(cfg.cache_size, cfg.mem_budget, cfg.cost);
+                let mut local = DeviceStats::default();
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Shutdown => break,
+                        Msg::Run(job) => {
+                            let _serial = cfg.serialize.as_ref().map(|l| l.lock().unwrap());
+                            let t0 = Instant::now();
+                            let mut ctx = DeviceCtx {
+                                device_id: id,
+                                runtime: &mut runtime,
+                                cache: &mut cache,
+                                host: &host,
+                                stats: &mut local,
+                                trace: &trace,
+                            };
+                            job(&mut ctx);
+                            local.jobs += 1;
+                            local.busy_secs += t0.elapsed().as_secs_f64();
+                            local.client = runtime.stats.clone();
+                            *stats_in.lock().unwrap() = local.clone();
+                        }
+                    }
+                }
+                // final flush (also writes back nothing: host store sync is
+                // handled by explicit drains; residual copies just drop)
+                *stats_in.lock().unwrap() = local;
+            })
+            .map_err(|e| anyhow!("spawning device {id}: {e}"))?;
+        Ok(DeviceHandle { id, tx, join: Some(join), stats })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, id: usize) -> &DeviceHandle {
+        &self.devices[id]
+    }
+
+    pub fn stats(&self) -> Vec<DeviceStats> {
+        self.devices.iter().map(|d| d.stats()).collect()
+    }
+
+    /// Submit a job and block until it completes, returning its value.
+    /// Convenience for tests and sequential baselines.
+    pub fn run_blocking<T, F>(&self, device: usize, f: F) -> Result<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut DeviceCtx<'_>) -> Result<T> + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.device(device).submit(Box::new(move |ctx| {
+            let _ = tx.send(f(ctx));
+        }))?;
+        rx.recv().map_err(|_| anyhow!("device {device} dropped the job"))?
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        for d in &self.devices {
+            let _ = d.tx.send(Msg::Shutdown);
+        }
+        for d in &mut self.devices {
+            if let Some(j) = d.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+

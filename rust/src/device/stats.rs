@@ -1,0 +1,81 @@
+//! Per-device counters surfaced by `push bench ... --stats` and consumed by
+//! the perf pass (EXPERIMENTS.md §Perf).
+
+use crate::runtime::ClientStats;
+
+#[derive(Debug, Default, Clone)]
+pub struct DeviceStats {
+    /// Compute jobs executed on this device's stream.
+    pub jobs: u64,
+    /// Wall time spent executing jobs (busy time).
+    pub busy_secs: f64,
+
+    // --- particle cache (active set) ---
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub swaps_in: u64,
+    pub swaps_out: u64,
+    pub swap_bytes: u64,
+
+    // --- parameter views / cross-particle reads ---
+    pub views: u64,
+    pub view_bytes: u64,
+
+    // --- messaging transfers charged to this device ---
+    pub transfers: u64,
+    pub transfer_bytes: u64,
+
+    // --- virtual clock from the cost model ---
+    pub modeled_swap_secs: f64,
+    pub modeled_transfer_secs: f64,
+
+    // --- PJRT client counters ---
+    pub client: ClientStats,
+}
+
+impl DeviceStats {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self, id: usize) -> String {
+        format!(
+            "dev{id}: jobs={} busy={:.3}s exec={}({:.3}s) compile={}({:.1}s) \
+             cache {}/{} hit={:.0}% swaps={}+{} ({} MB) views={} vclock={:.4}s",
+            self.jobs,
+            self.busy_secs,
+            self.client.executions,
+            self.client.execute_secs,
+            self.client.compiles,
+            self.client.compile_secs,
+            self.cache_hits,
+            self.cache_hits + self.cache_misses,
+            100.0 * self.cache_hit_rate(),
+            self.swaps_in,
+            self.swaps_out,
+            self.swap_bytes / (1 << 20),
+            self.views,
+            self.modeled_swap_secs + self.modeled_transfer_secs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate() {
+        let mut s = DeviceStats::default();
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        s.cache_hits = 3;
+        s.cache_misses = 1;
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Deep ensembles (Lakshminarayanan et al. 2017) on particles.
+//!
+//! The no-communication extreme of the paper's spectrum (§3.1): n particles
+//! train independently; the only synchronization is the per-batch barrier
+//! the driver imposes by waiting on every particle's STEP future (which is
+//! what the paper's epoch timing measures).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DataLoader;
+use crate::infer::{Infer, TrainReport};
+use crate::nel::CreateOpts;
+use crate::particle::{handler, PFuture, Value};
+use crate::pd::PushDist;
+use crate::runtime::Tensor;
+use crate::Pid;
+
+pub struct DeepEnsemble {
+    pd: PushDist,
+    pids: Vec<Pid>,
+    pub lr: f32,
+    /// Use Adam (paper Tables 3/4 protocol) instead of plain SGD.
+    pub adam: bool,
+}
+
+impl DeepEnsemble {
+    /// Create `n` particles, each answering `STEP(x, y, lr)` with one SGD
+    /// step on its own device.
+    pub fn new(pd: PushDist, n: usize, lr: f32) -> Result<DeepEnsemble> {
+        assert!(n > 0);
+        let step = handler(|ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let y = args[1].as_tensor()?.clone();
+            let lr = args[2].f32()?;
+            let adam = matches!(args.get(3), Some(crate::Value::Bool(true)));
+            if adam {
+                ctx.adam_step(x, y, lr).wait()
+            } else {
+                ctx.step(x, y, lr).wait()
+            }
+        });
+        let pids = pd.p_create_n(n, |_| CreateOpts {
+            receive: [("STEP".to_string(), step.clone())].into_iter().collect(),
+            ..CreateOpts::default()
+        })?;
+        Ok(DeepEnsemble { pd, pids, lr, adam: false })
+    }
+
+    /// Switch the STEP message to Adam updates.
+    pub fn with_adam(mut self) -> DeepEnsemble {
+        self.adam = true;
+        self
+    }
+
+    pub fn pd(&self) -> &PushDist {
+        &self.pd
+    }
+
+    /// One synchronized step of every particle on (x, y); returns the mean
+    /// loss. Exposed for the benches' per-batch timing.
+    pub fn step_all(&self, x: &Tensor, y: &Tensor) -> Result<f64> {
+        let futs: Vec<PFuture> = self
+            .pids
+            .iter()
+            .map(|p| {
+                self.pd.p_launch(
+                    *p,
+                    "STEP",
+                    vec![
+                        Value::Tensor(x.clone()),
+                        Value::Tensor(y.clone()),
+                        Value::F32(self.lr),
+                        Value::Bool(self.adam),
+                    ],
+                )
+            })
+            .collect();
+        let losses = PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        let mut total = 0.0f64;
+        for l in &losses {
+            total += l.as_tensor().map_err(|e| anyhow!("{e}"))?.scalar() as f64;
+        }
+        Ok(total / losses.len() as f64)
+    }
+}
+
+impl Infer for DeepEnsemble {
+    fn name(&self) -> &str {
+        "deep_ensemble"
+    }
+
+    fn pids(&self) -> Vec<Pid> {
+        self.pids.clone()
+    }
+
+    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport> {
+        let mut report = TrainReport::new(self.name());
+        for _ in 0..epochs {
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0;
+            for b in &batches {
+                loss += self.step_all(&b.x, &b.y)?;
+            }
+            report.push(loss / batches.len().max(1) as f64, t0.elapsed().as_secs_f64());
+        }
+        Ok(report)
+    }
+
+    fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
+        self.pd.mean_forward(&self.pids, x)
+    }
+
+    fn nel_stats(&self) -> crate::nel::NelStats {
+        self.pd.stats()
+    }
+}

@@ -1,0 +1,96 @@
+//! Evaluation metrics: classification accuracy (Tables 3/4) and regression
+//! MSE, computed over a dataset in artifact-sized batches.
+
+use anyhow::Result;
+
+use crate::data::{DataLoader, Dataset};
+use crate::runtime::Tensor;
+
+/// Fraction of rows whose argmax matches the label. `scores` is [B, C]
+/// (logits or vote counts — argmax is invariant).
+pub fn batch_accuracy(scores: &Tensor, labels: &Tensor) -> f64 {
+    assert_eq!(scores.shape.len(), 2);
+    let (b, c) = (scores.shape[0], scores.shape[1]);
+    assert_eq!(labels.element_count(), b);
+    let s = scores.as_f32();
+    let l = labels.as_i32();
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &s[i * c..(i + 1) * c];
+        let mut best = 0;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == l[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+/// Mean squared error between a prediction and target batch.
+pub fn batch_mse(pred: &Tensor, target: &Tensor) -> f64 {
+    let p = pred.as_f32();
+    let t = target.as_f32();
+    assert_eq!(p.len(), t.len());
+    p.iter()
+        .zip(t)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / p.len() as f64
+}
+
+/// Dataset-level accuracy of a predictor `f(x) -> scores` evaluated in
+/// fixed-size batches (artifacts are shape-specialized).
+pub fn dataset_accuracy(
+    data: &Dataset,
+    batch_size: usize,
+    mut f: impl FnMut(&Tensor) -> Result<Tensor>,
+) -> Result<f64> {
+    let mut loader = DataLoader::new(data.clone(), batch_size, false, 0);
+    let batches = loader.epoch();
+    let mut acc = 0.0;
+    for b in &batches {
+        let scores = f(&b.x)?;
+        acc += batch_accuracy(&scores, &b.y);
+    }
+    Ok(acc / batches.len().max(1) as f64)
+}
+
+/// Dataset-level MSE of a predictor.
+pub fn dataset_mse(
+    data: &Dataset,
+    batch_size: usize,
+    mut f: impl FnMut(&Tensor) -> Result<Tensor>,
+) -> Result<f64> {
+    let mut loader = DataLoader::new(data.clone(), batch_size, false, 0);
+    let batches = loader.epoch();
+    let mut e = 0.0;
+    for b in &batches {
+        let pred = f(&b.x)?;
+        e += batch_mse(&pred, &b.y);
+    }
+    Ok(e / batches.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorData;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let scores = Tensor::f32(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        let labels = Tensor::new(vec![3], TensorData::I32(vec![0, 1, 1]));
+        assert!((batch_accuracy(&scores, &labels) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_basics() {
+        let a = Tensor::f32(vec![2], vec![1.0, 3.0]);
+        let b = Tensor::f32(vec![2], vec![0.0, 1.0]);
+        assert!((batch_mse(&a, &b) - 2.5).abs() < 1e-12);
+    }
+}

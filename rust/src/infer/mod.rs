@@ -1,0 +1,77 @@
+//! BDL inference algorithms written against the particle abstraction
+//! (paper §3.4, Appendix B): deep ensembles, SWAG / multi-SWAG, and SVGD.
+//!
+//! Each algorithm is a struct owning a [`PushDist`] whose particles carry
+//! the algorithm's message handlers; `train` drives epochs by launching
+//! messages and waiting on futures. Every algorithm is agnostic to the
+//! number of devices — changing `NelConfig::num_devices` rescales the same
+//! code (the property the paper's §B.2 emphasizes).
+
+pub mod ensemble;
+pub mod eval;
+pub mod svgd;
+pub mod swag;
+
+use anyhow::Result;
+
+use crate::data::DataLoader;
+use crate::runtime::Tensor;
+
+pub use ensemble::DeepEnsemble;
+pub use svgd::{svgd_update_native, Svgd, SvgdConfig};
+pub use swag::{MultiSwag, SwagConfig};
+
+/// Per-epoch training record.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub mean_loss: f64,
+    pub secs: f64,
+}
+
+/// What `train` returns; consumed by the bench harness and EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub algo: String,
+    pub epochs: Vec<EpochReport>,
+}
+
+impl TrainReport {
+    pub fn new(algo: &str) -> TrainReport {
+        TrainReport { algo: algo.to_string(), epochs: Vec::new() }
+    }
+
+    pub fn push(&mut self, mean_loss: f64, secs: f64) {
+        self.epochs.push(EpochReport { mean_loss, secs });
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.epochs.last().map(|e| e.mean_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn mean_epoch_secs(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return f64::NAN;
+        }
+        self.epochs.iter().map(|e| e.secs).sum::<f64>() / self.epochs.len() as f64
+    }
+}
+
+/// The common interface all Push inference algorithms implement (paper's
+/// `Infer` base class, Figure 5).
+pub trait Infer {
+    fn name(&self) -> &str;
+
+    /// Particle ids participating in inference.
+    fn pids(&self) -> Vec<crate::Pid>;
+
+    /// Run `epochs` of Bayesian inference over the loader's data.
+    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport>;
+
+    /// Posterior-mean prediction at `x` (paper §3.4: the average of
+    /// particle predictions).
+    fn predict_mean(&self, x: &Tensor) -> Result<Tensor>;
+
+    /// NEL statistics of the backing PD (device busy time, swaps,
+    /// messages) — the scaling benches' modeled-makespan source.
+    fn nel_stats(&self) -> crate::nel::NelStats;
+}

@@ -1,0 +1,377 @@
+//! Stein variational gradient descent (Liu & Wang 2016) on particles —
+//! the all-to-all-communication extreme of the paper's spectrum (§3.1),
+//! implemented with the leader/follower message protocol of Appendix B
+//! (Figures 5/6).
+//!
+//! Per batch, the leader: (1) triggers a gradient computation on every
+//! follower (concurrent across devices), (2) gathers every particle's
+//! parameters via read-only views, (3) stacks them and runs the L1 Pallas
+//! `svgd_update` kernel artifact on its own device (the paper's
+//! kernel-matrix bottleneck, O(n^2 d)), and (4) scatters per-particle
+//! updates applied concurrently via SVGD_FOLLOW. The optional Gaussian
+//! prior adds the score term of Eq. 26 (Appendix B.1).
+//!
+//! Sign convention: canonical descent-form SVGD — the paper's Appendix-B
+//! listing flips the repulsion term; see DESIGN.md §SVGD-sign.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DataLoader;
+use crate::infer::{Infer, TrainReport};
+use crate::nel::CreateOpts;
+use crate::particle::{handler, PFuture, PushError, Value};
+use crate::pd::PushDist;
+use crate::runtime::Tensor;
+use crate::Pid;
+
+#[derive(Debug, Clone)]
+pub struct SvgdConfig {
+    pub particles: usize,
+    pub lr: f32,
+    /// RBF kernel lengthscale h (ignored when `median_heuristic` is on).
+    pub lengthscale: f32,
+    /// Recompute h each step from the particles' pairwise distances
+    /// (Liu & Wang 2016: h^2 = median^2 / log n) — keeps the kernel
+    /// informative as particles spread.
+    pub median_heuristic: bool,
+    /// Gaussian prior std; None = likelihood-only (improper flat prior).
+    pub prior_std: Option<f32>,
+    /// Force the native (non-artifact) kernel update even when an AOT
+    /// artifact exists — used by the ablation bench.
+    pub force_native: bool,
+}
+
+impl Default for SvgdConfig {
+    fn default() -> Self {
+        SvgdConfig {
+            particles: 4,
+            lr: 1e-2,
+            lengthscale: 1.0,
+            median_heuristic: false,
+            prior_std: None,
+            force_native: false,
+        }
+    }
+}
+
+pub struct Svgd {
+    pd: PushDist,
+    leader: Pid,
+    followers: Vec<Pid>,
+    pub cfg: SvgdConfig,
+}
+
+impl Svgd {
+    pub fn new(pd: PushDist, cfg: SvgdConfig) -> Result<Svgd> {
+        assert!(cfg.particles > 0);
+        // --- follower handlers -------------------------------------------
+        // SVGD_STEP: compute (loss, grad) on own device, return both.
+        let svgd_step = handler(|ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let y = args[1].as_tensor()?.clone();
+            ctx.grad(x, y).wait()
+        });
+        // SVGD_FOLLOW: apply params -= lr * update on own device.
+        let svgd_follow = handler(|ctx, args| {
+            let lr = args[0].f32()?;
+            let update = args[1].as_tensor()?.clone();
+            ctx.axpy_params(-lr, update).wait()
+        });
+
+        let follower_table = || {
+            [
+                ("SVGD_STEP".to_string(), svgd_step.clone()),
+                ("SVGD_FOLLOW".to_string(), svgd_follow.clone()),
+            ]
+            .into_iter()
+            .collect()
+        };
+        let followers = pd.p_create_n(cfg.particles - 1, |_| CreateOpts {
+            receive: follower_table(),
+            ..CreateOpts::default()
+        })?;
+
+        // --- leader --------------------------------------------------------
+        // Captures follower pids + kernel artifact path + config; receives
+        // SVGD_BATCH(x, y) and performs steps 1-4 of the module docstring.
+        let fls = followers.clone();
+        let artifact = if cfg.force_native { None } else { pd.svgd_artifact(cfg.particles) };
+        let lcfg = cfg.clone();
+        let svgd_batch = handler(move |ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let y = args[1].as_tensor()?.clone();
+            let n = fls.len() + 1;
+
+            // 1. every particle computes its gradient concurrently
+            let own = ctx.grad(x.clone(), y.clone());
+            let futs: Vec<PFuture> = fls
+                .iter()
+                .map(|p| {
+                    ctx.send(
+                        *p,
+                        "SVGD_STEP",
+                        vec![Value::Tensor(x.clone()), Value::Tensor(y.clone())],
+                    )
+                })
+                .collect();
+            let own_lg = own.wait()?.list()?;
+            let mut losses = vec![own_lg[0].as_tensor()?.scalar()];
+            let mut grads = vec![own_lg[1].as_tensor()?.clone()];
+            for f in &futs {
+                let lg = f.wait()?.list()?;
+                losses.push(lg[0].as_tensor()?.scalar());
+                grads.push(lg[1].as_tensor()?.clone());
+            }
+
+            // single-particle degenerate case: plain gradient descent
+            if n == 1 {
+                ctx.axpy_params(-lcfg.lr, grads.remove(0)).wait()?;
+                return Ok(Value::F32(losses[0]));
+            }
+
+            // 2. gather every particle's parameters (read-only views)
+            let own_params = ctx.own_params();
+            let pfuts: Vec<PFuture> = fls.iter().map(|p| ctx.get(*p)).collect();
+            let mut params = vec![own_params.wait()?.tensor()?];
+            for f in &pfuts {
+                params.push(f.wait()?.tensor()?);
+            }
+
+            // Appendix B.1: score-based posterior gradient adds the prior
+            // term  -grad log p(theta) = theta / sigma^2.
+            if let Some(std) = lcfg.prior_std {
+                let inv_var = 1.0 / (std * std);
+                for (g, p) in grads.iter_mut().zip(&params) {
+                    crate::runtime::tensor::ops::axpy(g, inv_var, p);
+                }
+            }
+
+            let h = if lcfg.median_heuristic {
+                median_lengthscale(&params)
+            } else {
+                lcfg.lengthscale
+            };
+
+            // 3. kernel-matrix update: Pallas artifact on the leader's
+            //    device when available, native O(n^2 d) otherwise.
+            let updates: Vec<Tensor> = match &artifact {
+                Some(path) => {
+                    let prows: Vec<&Tensor> = params.iter().collect();
+                    let grows: Vec<&Tensor> = grads.iter().collect();
+                    let stacked_p = Tensor::stack_rows(&prows);
+                    let stacked_g = Tensor::stack_rows(&grows);
+                    let h = Tensor::scalar_f32(h);
+                    let u = ctx
+                        .run_artifact(path.clone(), vec![stacked_p, stacked_g, h])
+                        .wait()?
+                        .tensor()?;
+                    u.unstack_rows()
+                }
+                None => svgd_update_native(&params, &grads, h)
+                    .map_err(|e| PushError::new(format!("{e:#}")))?,
+            };
+
+            // 4. scatter: followers apply their rows concurrently; the
+            //    leader applies its own.
+            let mut apply_futs = Vec::with_capacity(n);
+            let mut it = updates.into_iter();
+            let own_update = it.next().expect("leader row");
+            for (p, u) in fls.iter().zip(it) {
+                apply_futs.push(ctx.send(
+                    *p,
+                    "SVGD_FOLLOW",
+                    vec![Value::F32(lcfg.lr), Value::Tensor(u)],
+                ));
+            }
+            apply_futs.push(ctx.axpy_params(-lcfg.lr, own_update));
+            PFuture::wait_all(&apply_futs)?;
+
+            let mean_loss = losses.iter().sum::<f32>() / losses.len() as f32;
+            Ok(Value::F32(mean_loss))
+        });
+
+        let mut leader_table = follower_table();
+        leader_table.insert("SVGD_BATCH".to_string(), svgd_batch);
+        let leader = pd.p_create(CreateOpts {
+            device: Some(0),
+            receive: leader_table,
+            ..CreateOpts::default()
+        })?;
+
+        Ok(Svgd { pd, leader, followers, cfg })
+    }
+
+    pub fn pd(&self) -> &PushDist {
+        &self.pd
+    }
+
+    pub fn leader(&self) -> Pid {
+        self.leader
+    }
+
+    /// One SVGD step over (x, y); returns the mean loss across particles.
+    pub fn step_batch(&self, x: &Tensor, y: &Tensor) -> Result<f64> {
+        let v = self
+            .pd
+            .p_launch(
+                self.leader,
+                "SVGD_BATCH",
+                vec![Value::Tensor(x.clone()), Value::Tensor(y.clone())],
+            )
+            .wait()
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(v.f32().map_err(|e| anyhow!("{e}"))? as f64)
+    }
+}
+
+impl Infer for Svgd {
+    fn name(&self) -> &str {
+        "svgd"
+    }
+
+    fn pids(&self) -> Vec<Pid> {
+        let mut all = vec![self.leader];
+        all.extend(&self.followers);
+        all
+    }
+
+    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport> {
+        let mut report = TrainReport::new(self.name());
+        for _ in 0..epochs {
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0;
+            for b in &batches {
+                loss += self.step_batch(&b.x, &b.y)?;
+            }
+            report.push(loss / batches.len().max(1) as f64, t0.elapsed().as_secs_f64());
+        }
+        Ok(report)
+    }
+
+    fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
+        self.pd.mean_forward(&self.pids(), x)
+    }
+
+    fn nel_stats(&self) -> crate::nel::NelStats {
+        self.pd.stats()
+    }
+}
+
+/// Liu & Wang's median heuristic: h = median(pairwise dist) / sqrt(log n).
+pub fn median_lengthscale(params: &[Tensor]) -> f32 {
+    let n = params.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut d2s = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        let pi = params[i].as_f32();
+        for j in (i + 1)..n {
+            let pj = params[j].as_f32();
+            let d2: f32 = pi.iter().zip(pj).map(|(a, b)| (a - b) * (a - b)).sum();
+            d2s.push(d2);
+        }
+    }
+    d2s.sort_by(f32::total_cmp);
+    let med2 = d2s[d2s.len() / 2];
+    let h2 = med2 / ((n as f32 + 1.0).ln()).max(1e-3);
+    h2.sqrt().max(1e-3)
+}
+
+/// Native CPU SVGD update, canonical descent form (mirrors
+/// `compile/kernels/ref.py::svgd_update_ref`):
+///
+///   k_ij = exp(-0.5 ||p_i - p_j||^2 / h^2)
+///   U_i  = (1/n) sum_j [ k_ij g_j + k_ij (p_j - p_i) / h^2 ]
+///
+/// Used when no AOT artifact matches (n, d), by the handwritten baseline,
+/// and as the oracle in kernel-consistency tests.
+pub fn svgd_update_native(params: &[Tensor], grads: &[Tensor], h: f32) -> Result<Vec<Tensor>> {
+    let n = params.len();
+    if n == 0 || grads.len() != n {
+        return Err(anyhow!("svgd_update_native: {} params vs {} grads", n, grads.len()));
+    }
+    let d = params[0].element_count();
+    let h2 = h * h;
+
+    // pairwise squared distances
+    let mut k = vec![0.0f32; n * n];
+    for i in 0..n {
+        k[i * n + i] = 1.0;
+        let pi = params[i].as_f32();
+        for j in (i + 1)..n {
+            let pj = params[j].as_f32();
+            let mut d2 = 0.0f32;
+            for t in 0..d {
+                let diff = pi[t] - pj[t];
+                d2 += diff * diff;
+            }
+            let kij = (-0.5 * d2 / h2).exp();
+            k[i * n + j] = kij;
+            k[j * n + i] = kij;
+        }
+    }
+
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let pi = params[i].as_f32();
+        let mut u = vec![0.0f32; d];
+        for j in 0..n {
+            let kij = k[i * n + j];
+            let gj = grads[j].as_f32();
+            let pj = params[j].as_f32();
+            for t in 0..d {
+                u[t] += kij * gj[t] + kij * (pj[t] - pi[t]) / h2;
+            }
+        }
+        for v in u.iter_mut() {
+            *v /= n as f32;
+        }
+        out.push(Tensor::f32(vec![d], u));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_far_apart_is_grad_over_n() {
+        let p = vec![
+            Tensor::f32(vec![2], vec![0.0, 0.0]),
+            Tensor::f32(vec![2], vec![1000.0, 1000.0]),
+        ];
+        let g = vec![
+            Tensor::f32(vec![2], vec![2.0, -2.0]),
+            Tensor::f32(vec![2], vec![4.0, 4.0]),
+        ];
+        let u = svgd_update_native(&p, &g, 1.0).unwrap();
+        assert!((u[0].as_f32()[0] - 1.0).abs() < 1e-5);
+        assert!((u[1].as_f32()[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn native_repulsion_separates_coincident_particles() {
+        // zero gradients, two nearly-coincident particles: applying
+        // p -= lr * U must push them apart.
+        let p = vec![
+            Tensor::f32(vec![1], vec![0.0]),
+            Tensor::f32(vec![1], vec![0.1]),
+        ];
+        let g = vec![Tensor::zeros(vec![1]), Tensor::zeros(vec![1])];
+        let u = svgd_update_native(&p, &g, 1.0).unwrap();
+        // U_0 points toward p_1 (positive); descent moves p_0 away.
+        assert!(u[0].as_f32()[0] > 0.0);
+        assert!(u[1].as_f32()[0] < 0.0);
+    }
+
+    #[test]
+    fn native_rejects_mismatch() {
+        let p = vec![Tensor::zeros(vec![2])];
+        assert!(svgd_update_native(&p, &[], 1.0).is_err());
+    }
+}

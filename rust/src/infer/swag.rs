@@ -1,0 +1,315 @@
+//! SWAG / multi-SWAG (Maddox et al. 2019; Wilson & Izmailov 2020) on
+//! particles.
+//!
+//! Each particle tracks the first and second moments of its own SGD
+//! trajectory in its local state (the paper's "augments a deep ensemble
+//! with more particle-independent computation", §5.1 — moment tracking is
+//! O(P) axpy work on the particle's device, no communication). Prediction
+//! draws `n_samples` parameter settings per particle from the diagonal
+//! Gaussian N(mean, scale * var) and majority-votes across all samples of
+//! all particles (classify) or averages predictions (regress) — the §C.4
+//! protocol.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DataLoader;
+use crate::infer::{Infer, TrainReport};
+use crate::nel::CreateOpts;
+use crate::particle::{handler, PFuture, Value};
+use crate::pd::PushDist;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+use crate::Pid;
+
+#[derive(Debug, Clone)]
+pub struct SwagConfig {
+    pub particles: usize,
+    pub lr: f32,
+    /// Epochs of plain SGD before moment collection starts (paper §C.4:
+    /// 7 pretrain + 3 SWAG).
+    pub pretrain_epochs: usize,
+    /// Posterior draws per particle at prediction time (paper: 5).
+    pub n_samples: usize,
+    /// Variance scale for the draws (paper: 1e-30, i.e. near-SWA).
+    pub scale: f32,
+    /// Use Adam updates (the paper's Tables 3/4 protocol; its footnote
+    /// recommends vanilla SGD for the SWAG phase — set `pretrain_epochs`
+    /// high to mimic that split if desired).
+    pub adam: bool,
+    pub seed: u64,
+}
+
+impl Default for SwagConfig {
+    fn default() -> Self {
+        SwagConfig {
+            particles: 2,
+            lr: 1e-2,
+            pretrain_epochs: 7,
+            n_samples: 5,
+            scale: 1e-30,
+            adam: false,
+            seed: 0,
+        }
+    }
+}
+
+pub struct MultiSwag {
+    pd: PushDist,
+    pids: Vec<Pid>,
+    pub cfg: SwagConfig,
+}
+
+const K_N: &str = "swag_n";
+const K_MEAN: &str = "swag_mean";
+const K_SQ: &str = "swag_sqmean";
+
+impl MultiSwag {
+    pub fn new(pd: PushDist, cfg: SwagConfig) -> Result<MultiSwag> {
+        assert!(cfg.particles > 0);
+        // Optimizer step (pretraining phase): SGD or Adam by message arg.
+        let step = handler(|ctx, args| {
+            let (x, y, lr) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone(), args[2].f32()?);
+            if matches!(args.get(3), Some(Value::Bool(true))) {
+                ctx.adam_step(x, y, lr).wait()
+            } else {
+                ctx.step(x, y, lr).wait()
+            }
+        });
+        // SGD step + first/second moment update in particle-local state.
+        let swag_step = handler(|ctx, args| {
+            let (x, y, lr) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone(), args[2].f32()?);
+            let loss = if matches!(args.get(3), Some(Value::Bool(true))) {
+                ctx.adam_step(x, y, lr).wait()?
+            } else {
+                ctx.step(x, y, lr).wait()?
+            };
+            let params = ctx.own_params().wait()?.tensor()?;
+            let n = match ctx.state_get(K_N) {
+                Some(Value::Usize(n)) => n,
+                _ => 0,
+            };
+            let w_old = n as f32 / (n as f32 + 1.0);
+            let w_new = 1.0 / (n as f32 + 1.0);
+            let mut mean = match ctx.state_take(K_MEAN) {
+                Some(Value::Tensor(t)) => t,
+                _ => Tensor::zeros(params.shape.clone()),
+            };
+            let mut sq = match ctx.state_take(K_SQ) {
+                Some(Value::Tensor(t)) => t,
+                _ => Tensor::zeros(params.shape.clone()),
+            };
+            crate::runtime::tensor::ops::scale_add(&mut mean, w_old, w_new, &params);
+            crate::runtime::tensor::ops::scale_add_sq(&mut sq, w_old, w_new, &params);
+            ctx.state_set(K_MEAN, Value::Tensor(mean));
+            ctx.state_set(K_SQ, Value::Tensor(sq));
+            ctx.state_set(K_N, Value::Usize(n + 1));
+            Ok(loss)
+        });
+        // Posterior-sample prediction: draw, forward, vote/average, restore.
+        let swag_predict = handler(|ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let n_samples = args[1].usize()?;
+            let scale = args[2].f32()?;
+            let seed = args[3].usize()? as u64;
+            let classify = ctx.model().task == "classify";
+
+            let backup = ctx.own_params().wait()?.tensor()?;
+            let (mean, sq) = match (ctx.state_get(K_MEAN), ctx.state_get(K_SQ)) {
+                (Some(Value::Tensor(m)), Some(Value::Tensor(s))) => (m, s),
+                // No moments collected: fall back to the current params
+                // (pretrain-only particle == plain ensemble member).
+                _ => (backup.clone(), {
+                    let mut s = backup.clone();
+                    let b = backup.as_f32();
+                    for (si, bi) in s.as_f32_mut().iter_mut().zip(b) {
+                        *si = bi * bi;
+                    }
+                    s
+                }),
+            };
+            let mut rng = Rng::new(seed).fold_in(ctx.pid.0 as u64);
+            let mut acc: Option<Tensor> = None;
+            for _ in 0..n_samples {
+                // theta = mean + scale * sqrt(max(sq - mean^2, 0)) * eps
+                let mut theta = mean.clone();
+                {
+                    let m = mean.as_f32();
+                    let s = sq.as_f32();
+                    for (i, t) in theta.as_f32_mut().iter_mut().enumerate() {
+                        let var = (s[i] - m[i] * m[i]).max(0.0);
+                        *t = m[i] + scale * var.sqrt() * rng.normal();
+                    }
+                }
+                ctx.set_params(theta).wait()?;
+                let pred = ctx.forward(x.clone()).wait()?.tensor()?;
+                match (&mut acc, classify) {
+                    (None, true) => acc = Some(votes_of(&pred)),
+                    (Some(a), true) => {
+                        let v = votes_of(&pred);
+                        crate::runtime::tensor::ops::axpy(a, 1.0, &v);
+                    }
+                    (None, false) => acc = Some(pred),
+                    (Some(a), false) => crate::runtime::tensor::ops::axpy(a, 1.0, &pred),
+                }
+            }
+            ctx.set_params(backup).wait()?;
+            let mut out = acc.ok_or_else(|| crate::PushError::new("n_samples == 0"))?;
+            if !classify {
+                for v in out.as_f32_mut() {
+                    *v /= n_samples as f32;
+                }
+            }
+            Ok(Value::Tensor(out))
+        });
+
+        let pids = pd.p_create_n(cfg.particles, |_| CreateOpts {
+            receive: [
+                ("STEP".to_string(), step.clone()),
+                ("SWAG_STEP".to_string(), swag_step.clone()),
+                ("SWAG_PREDICT".to_string(), swag_predict.clone()),
+            ]
+            .into_iter()
+            .collect(),
+            ..CreateOpts::default()
+        })?;
+        Ok(MultiSwag { pd, pids, cfg })
+    }
+
+    pub fn pd(&self) -> &PushDist {
+        &self.pd
+    }
+
+    /// Synchronized step of all particles; `collect_moments` selects plain
+    /// SGD vs SWAG-moment mode. Returns mean loss.
+    pub fn step_all(&self, x: &Tensor, y: &Tensor, collect_moments: bool) -> Result<f64> {
+        let msg = if collect_moments { "SWAG_STEP" } else { "STEP" };
+        let futs: Vec<PFuture> = self
+            .pids
+            .iter()
+            .map(|p| {
+                self.pd.p_launch(
+                    *p,
+                    msg,
+                    vec![
+                        Value::Tensor(x.clone()),
+                        Value::Tensor(y.clone()),
+                        Value::F32(self.cfg.lr),
+                        Value::Bool(self.cfg.adam),
+                    ],
+                )
+            })
+            .collect();
+        let losses = PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        let mut total = 0.0;
+        for l in &losses {
+            total += l.as_tensor().map_err(|e| anyhow!("{e}"))?.scalar() as f64;
+        }
+        Ok(total / losses.len() as f64)
+    }
+
+    /// Multi-SWAG prediction: summed class votes (classify) or averaged
+    /// predictions (regress) across all samples of all particles.
+    pub fn predict_swag(&self, x: &Tensor) -> Result<Tensor> {
+        let futs: Vec<PFuture> = self
+            .pids
+            .iter()
+            .map(|p| {
+                self.pd.p_launch(
+                    *p,
+                    "SWAG_PREDICT",
+                    vec![
+                        Value::Tensor(x.clone()),
+                        Value::Usize(self.cfg.n_samples),
+                        Value::F32(self.cfg.scale),
+                        Value::Usize(self.cfg.seed as usize),
+                    ],
+                )
+            })
+            .collect();
+        let preds = PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        let mut acc: Option<Tensor> = None;
+        for p in preds {
+            let t = p.tensor().map_err(|e| anyhow!("{e}"))?;
+            match &mut acc {
+                None => acc = Some(t),
+                Some(a) => crate::runtime::tensor::ops::axpy(a, 1.0, &t),
+            }
+        }
+        let mut out = acc.unwrap();
+        if self.pd.model().task != "classify" {
+            let n = self.pids.len() as f32;
+            for v in out.as_f32_mut() {
+                *v /= n;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One-hot argmax votes of a [B, C] logit tensor.
+fn votes_of(logits: &Tensor) -> Tensor {
+    assert_eq!(logits.shape.len(), 2, "votes need [B, C] logits");
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    let l = logits.as_f32();
+    let mut v = vec![0.0f32; b * c];
+    for i in 0..b {
+        let row = &l[i * c..(i + 1) * c];
+        let mut best = 0;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        v[i * c + best] = 1.0;
+    }
+    Tensor::f32(vec![b, c], v)
+}
+
+impl Infer for MultiSwag {
+    fn name(&self) -> &str {
+        "multi_swag"
+    }
+
+    fn pids(&self) -> Vec<Pid> {
+        self.pids.clone()
+    }
+
+    /// `epochs` total: the first `cfg.pretrain_epochs` run plain SGD, the
+    /// remainder collect SWAG moments (paper §C.4's 7 + 3 split).
+    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport> {
+        let mut report = TrainReport::new(self.name());
+        for e in 0..epochs {
+            let collect = e >= self.cfg.pretrain_epochs;
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0;
+            for b in &batches {
+                loss += self.step_all(&b.x, &b.y, collect)?;
+            }
+            report.push(loss / batches.len().max(1) as f64, t0.elapsed().as_secs_f64());
+        }
+        Ok(report)
+    }
+
+    fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
+        self.predict_swag(x)
+    }
+
+    fn nel_stats(&self) -> crate::nel::NelStats {
+        self.pd.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn votes_pick_argmax() {
+        let logits = Tensor::f32(vec![2, 3], vec![0.1, 2.0, -1.0, 5.0, 0.0, 4.9]);
+        let v = votes_of(&logits);
+        assert_eq!(v.as_f32(), &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,38 @@
+//! # Push — concurrent probabilistic programming for Bayesian deep learning
+//!
+//! A from-scratch reproduction of *"Push: Concurrent Probabilistic
+//! Programming for Bayesian Deep Learning"* (Huang, Camaño, Tsegaye, Gale;
+//! 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the particle
+//!   abstraction ([`particle`]), the node event loop with particle-to-device
+//!   mapping and context-switching dispatch ([`nel`], [`device`]), the Push
+//!   distribution ([`pd`]), and the BDL inference algorithms written
+//!   against them ([`infer`]): deep ensembles, SWAG, multi-SWAG, SVGD.
+//! * **L2 (python/compile, build-time only)** — every model as a JAX
+//!   function over a flat parameter vector, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels, build-time only)** — Pallas kernels for
+//!   the compute hotspots (SVGD kernel-matrix update, fused linear+GELU),
+//!   lowered inside the L2 graphs.
+//!
+//! At run time the [`runtime`] module loads `artifacts/*.hlo.txt` through
+//! PJRT and Python is never on the path. See DESIGN.md for the experiment
+//! inventory and EXPERIMENTS.md for measured results.
+
+#[macro_use]
+pub mod util;
+
+pub mod baselines;
+pub mod bench;
+pub mod data;
+pub mod device;
+pub mod infer;
+pub mod nel;
+pub mod particle;
+pub mod pd;
+pub mod runtime;
+
+pub use nel::{CreateOpts, Nel, NelConfig, ParticleCtx};
+pub use particle::{handler, PFuture, Pid, PushError, Value};
+pub use pd::PushDist;
+pub use runtime::{Manifest, Tensor};

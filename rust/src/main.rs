@@ -1,0 +1,306 @@
+//! `push` — the leader entrypoint / CLI launcher.
+//!
+//! ```text
+//! push info                          manifest + runtime summary
+//! push train  --model M --method A   train one configuration
+//! push bench  fig4|fig7|table1|table2|table3|table4|stress
+//! push trace                         two-particle Figure-3b timeline
+//! ```
+//!
+//! Every `bench` subcommand regenerates one of the paper's tables/figures
+//! (scaled per DESIGN.md §Hardware-Adaptation) and writes JSON under
+//! `bench_results/`.
+
+use anyhow::{anyhow, bail, Result};
+
+use push::bench::report::results_dir;
+use push::bench::scaling::ScaleOpts;
+use push::bench::{accuracy, depth_width, scaling, Method};
+use push::data::DataLoader;
+use push::device::CostModel;
+use push::infer::{DeepEnsemble, Infer, MultiSwag, Svgd, SvgdConfig, SwagConfig};
+use push::nel::CreateOpts;
+use push::particle::{handler, Value};
+use push::runtime::{artifacts_dir, Manifest};
+use push::util::flags::Flags;
+use push::{NelConfig, PushDist};
+
+const USAGE: &str = "\
+push — concurrent probabilistic programming for Bayesian deep learning
+
+USAGE:
+  push info
+  push train --model <name> [--method ensemble|multi_swag|svgd]
+             [--particles N] [--devices D] [--epochs E] [--batches B]
+             [--lr F] [--cache N] [--seed N]
+  push bench <fig4|fig7|table1|table2|table3|table4|stress|ablate>
+             [--devices 1,2,4] [--particles 1,2,4,8] [--batches B]
+             [--epochs E] [--no-baseline] [--full] [--cache N] [--seed N]
+  push trace [--model <name>]
+
+Artifacts are read from $PUSH_ARTIFACTS or <repo>/artifacts (make artifacts).
+Bench JSON is written to $PUSH_BENCH_DIR or <repo>/bench_results.
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let flags = Flags::from_env().map_err(anyhow::Error::msg)?;
+    let cmd = flags.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "train" => train(&flags),
+        "bench" => bench(&flags),
+        "trace" => trace(&flags),
+        "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn scale_opts(flags: &Flags) -> Result<ScaleOpts> {
+    let mut o = ScaleOpts::default();
+    if let Some(d) = flags.usize_list("devices").map_err(anyhow::Error::msg)? {
+        o.devices = d;
+    }
+    if let Some(p) = flags.usize_list("particles").map_err(anyhow::Error::msg)? {
+        o.particles_base = p;
+    }
+    o.batches = flags.usize_or("batches", o.batches).map_err(anyhow::Error::msg)?;
+    o.epochs = flags.usize_or("epochs", o.epochs).map_err(anyhow::Error::msg)?;
+    o.cache_size = flags.usize_or("cache", o.cache_size).map_err(anyhow::Error::msg)?;
+    o.seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
+    o.baseline = !flags.has("no-baseline");
+    Ok(o)
+}
+
+fn info() -> Result<()> {
+    let m = Manifest::load(artifacts_dir())?;
+    println!("artifacts: {:?}", m.dir);
+    println!("{:<12} {:>10} {:>9} {:>10}  entries", "model", "params", "task", "batch");
+    for (name, spec) in &m.models {
+        println!(
+            "{name:<12} {:>10} {:>9} {:>10}  {}",
+            spec.param_count,
+            spec.task,
+            spec.batch(),
+            spec.entries.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    println!("\nsvgd kernel artifacts: {} (n, d) specializations", m.svgd.len());
+    let mut client = push::runtime::RuntimeClient::cpu()?;
+    println!("PJRT platform: {}", client.platform());
+    // compile + run one tiny entry as a smoke check
+    let tiny = m.model("mlp_tiny")?;
+    let key = push::Tensor::u32(vec![2], vec![0, 0]);
+    let outs = client.execute(&tiny.entry("init")?.file, &[key])?;
+    println!("smoke: mlp_tiny.init -> {} params OK", outs[0].element_count());
+    Ok(())
+}
+
+fn train(flags: &Flags) -> Result<()> {
+    let model_name = flags
+        .str("model")
+        .ok_or_else(|| anyhow!("--model is required (see `push info`)"))?;
+    let method = Method::parse(&flags.str_or("method", "ensemble"))
+        .ok_or_else(|| anyhow!("--method must be ensemble|multi_swag|svgd"))?;
+    let particles = flags.usize_or("particles", 4).map_err(anyhow::Error::msg)?;
+    let devices = flags.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
+    let epochs = flags.usize_or("epochs", 5).map_err(anyhow::Error::msg)?;
+    let batches = flags.usize_or("batches", 8).map_err(anyhow::Error::msg)?;
+    let cache = flags.usize_or("cache", 8).map_err(anyhow::Error::msg)?;
+    let seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
+
+    let manifest = Manifest::load(artifacts_dir())?;
+    let cfg = NelConfig {
+        num_devices: devices,
+        cache_size: cache,
+        cost: CostModel::default(),
+        seed,
+        ..NelConfig::default()
+    };
+    let pd = PushDist::new(&manifest, model_name, cfg)?;
+    let model = pd.model().clone();
+    let lr = flags
+        .f64("lr")
+        .map_err(anyhow::Error::msg)?
+        .map(|v| v as f32)
+        .unwrap_or_else(|| push::bench::lr_for(&model));
+
+    let data = push::bench::data_for(&model, model.batch() * batches, seed + 1)?;
+    let mut loader =
+        DataLoader::new(data, model.batch(), true, seed + 2).with_max_batches(batches);
+
+    println!(
+        "training {model_name} via {} — {particles} particles on {devices} devices, lr {lr}",
+        method.name()
+    );
+    let mut algo: Box<dyn Infer> = match method {
+        Method::Ensemble => Box::new(DeepEnsemble::new(pd, particles, lr)?),
+        Method::MultiSwag => Box::new(MultiSwag::new(
+            pd,
+            SwagConfig { particles, lr, ..SwagConfig::default() },
+        )?),
+        Method::Svgd => Box::new(Svgd::new(
+            pd,
+            SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() },
+        )?),
+    };
+    for e in 0..epochs {
+        let rep = algo.train(&mut loader, 1)?;
+        println!(
+            "epoch {e:>3}: loss {:>9.4}  ({:.3}s)",
+            rep.final_loss(),
+            rep.mean_epoch_secs()
+        );
+    }
+    Ok(())
+}
+
+fn bench(flags: &Flags) -> Result<()> {
+    let which = flags
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("bench needs a target (fig4|fig7|table1|table2|table3|table4|stress)"))?;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let opts = scale_opts(flags)?;
+    let full = flags.has("full");
+
+    let report = match which {
+        "fig4" => scaling::run_figure(
+            &manifest,
+            "fig4_scaling",
+            &["vit_fig4", "cgcnn_fig4", "unet_fig4"],
+            &Method::all(),
+            &opts,
+        )?,
+        "fig7" => scaling::run_figure(
+            &manifest,
+            "fig7_scaling",
+            &["resnet_fig7", "schnet_fig7"],
+            &Method::all(),
+            &opts,
+        )?,
+        "table1" => depth_width::run(
+            &manifest,
+            "table1_depth",
+            &depth_width::table1_rows(),
+            &opts.devices.clone(),
+            &opts,
+        )?,
+        "table2" => depth_width::run(
+            &manifest,
+            "table2_width",
+            &depth_width::table2_rows(full),
+            &opts.devices.clone(),
+            &opts,
+        )?,
+        "table3" => {
+            let rows = depth_width::table1_rows();
+            accuracy::run(&manifest, "table3_depth_acc", &rows, &acc_opts(flags)?)?
+        }
+        "table4" => {
+            let rows = depth_width::table2_rows(full);
+            accuracy::run(&manifest, "table4_width_acc", &rows, &acc_opts(flags)?)?
+        }
+        "ablate" => {
+            let mut combined = push::bench::report::Report::new("ablations");
+            for rep in [
+                push::bench::ablate::cache_size_sweep(
+                    &manifest, "mlp_small", 8, &[1, 2, 4, 8], opts.batches, opts.epochs,
+                )?,
+                push::bench::ablate::svgd_kernel_ablation(
+                    &manifest, "mlp_small", &[4, 8, 16], opts.batches,
+                )?,
+                push::bench::ablate::cost_model_ablation(&manifest, "mlp_small", 4, opts.batches)?,
+            ] {
+                rep.print();
+                let p = rep.save(results_dir())?;
+                println!("saved {p:?}\n");
+                combined.rows.extend(rep.rows);
+            }
+            combined
+        }
+        "stress" => {
+            let bases = flags
+                .usize_list("particles")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or_else(|| vec![16, 32, 64]);
+            scaling::run_stress(&manifest, "mlp_small", &opts.devices.clone(), &bases, &opts)?
+        }
+        other => bail!("unknown bench target {other:?}"),
+    };
+    report.print();
+    let path = report.save(results_dir())?;
+    println!("\nsaved {path:?}");
+    Ok(())
+}
+
+fn acc_opts(flags: &Flags) -> Result<accuracy::AccOpts> {
+    let mut o = accuracy::AccOpts::default();
+    o.devices = flags.usize_or("devices-n", o.devices).map_err(anyhow::Error::msg)?;
+    o.batches = flags.usize_or("batches", o.batches).map_err(anyhow::Error::msg)?;
+    o.epochs = flags.usize_or("epochs", o.epochs).map_err(anyhow::Error::msg)?;
+    o.pretrain_epochs = (o.epochs * 7) / 10;
+    o.seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
+    Ok(o)
+}
+
+/// Two interacting particles with the trace on — regenerates the paper's
+/// Figure 3b timeline qualitatively.
+fn trace(flags: &Flags) -> Result<()> {
+    let model_name = flags.str_or("model", "mlp_tiny");
+    let manifest = Manifest::load(artifacts_dir())?;
+    let cfg = NelConfig {
+        num_devices: 2,
+        cache_size: 2,
+        cost: CostModel::default(),
+        trace: true,
+        seed: 0,
+        ..NelConfig::default()
+    };
+    let pd = PushDist::new(&manifest, &model_name, cfg)?;
+
+    // P_j sends MSG to P_k; P_k computes (a forward pass) and replies.
+    let compute = handler(|ctx, args| {
+        let x = args[0].as_tensor()?.clone();
+        ctx.forward(x).wait()
+    });
+    let relay = handler(|ctx, args| {
+        let target = push::Pid(args[0].usize()? as u32);
+        let x = args[1].as_tensor()?.clone();
+        // send -> receive a future -> wait (Figure 3b labels 1-7)
+        let fut = ctx.send(target, "COMPUTE", vec![Value::Tensor(x)]);
+        let pred = fut.wait()?;
+        Ok(pred)
+    });
+    let pj = pd.p_create(CreateOpts {
+        device: Some(0),
+        receive: [("RELAY".to_string(), relay)].into_iter().collect(),
+        ..CreateOpts::default()
+    })?;
+    let pk = pd.p_create(CreateOpts {
+        device: Some(1),
+        receive: [("COMPUTE".to_string(), compute)].into_iter().collect(),
+        ..CreateOpts::default()
+    })?;
+
+    let model = pd.model().clone();
+    let xn: usize = model.x_shape.iter().product();
+    let x = push::Tensor::f32(model.x_shape.clone(), vec![0.1; xn]);
+    pd.p_launch(pj, "RELAY", vec![Value::Usize(pk.0 as usize), Value::Tensor(x)])
+        .wait()
+        .map_err(|e| anyhow!("{e}"))?;
+
+    println!("Figure-3b timeline for two interacting particles ({pj} on dev0, {pk} on dev1):\n");
+    print!("{}", pd.nel().trace().to_text());
+    Ok(())
+}

@@ -1,0 +1,724 @@
+//! The node event loop (paper §4.2): particle-to-device mapping, mailboxes,
+//! context-switch dispatch, and the messaging semantics of §3.2.
+//!
+//! Execution model (maps the paper's Figure 3b onto threads):
+//!
+//! * Each **particle** gets a *control thread* processing its mailbox
+//!   sequentially — the particle's "own logical thread of execution".
+//!   Handlers run here and MAY block on futures (actor + async-await
+//!   blend).
+//! * Each **device** runs a *stream thread* (device::DevicePool) executing
+//!   compute jobs FIFO — the paper's "launch a thread to dispatch NN
+//!   computations" (T4c). Compute jobs never block on futures, so device
+//!   streams cannot deadlock; the context switch (active-set swap) happens
+//!   here, exactly when a job touches a non-resident particle.
+//! * Parameters are owned by the device layer (resident cache or host
+//!   store); every access is a job on the owning particle's device, so
+//!   FIFO ordering per device serializes parameter access without locks.
+//!
+//! Deadlock discipline for handlers: waits must form a DAG (the shipped
+//! algorithms use a leader/follower pattern — the leader waits on
+//! followers, never the reverse while holding a resource).
+
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+
+use anyhow::{anyhow, Result};
+
+use crate::device::{CostModel, DeviceConfig, DevicePool, DeviceStats};
+use crate::particle::{Handler, HandlerTable, PFuture, PResult, Pid, PushError, Value};
+use crate::runtime::{ModelSpec, Tensor};
+use trace::{Event, EventKind, Trace};
+
+/// NEL configuration (paper API: `num_devices`, `cache_size`, `view_size`).
+#[derive(Debug, Clone)]
+pub struct NelConfig {
+    pub num_devices: usize,
+    /// Active-set slots per device.
+    pub cache_size: usize,
+    /// View-buffer slots per device (paper §B.2). Tracked for accounting;
+    /// views are materialized host-side copies in this implementation.
+    pub view_size: usize,
+    /// Device memory budget in bytes.
+    pub mem_budget: usize,
+    pub cost: CostModel,
+    /// Record a Figure-3b event trace (bounded).
+    pub trace: bool,
+    /// Serialize all device streams through one lock (measurement mode for
+    /// 1-core hosts; see device::DeviceConfig::serialize).
+    pub serialize_streams: bool,
+    /// Base seed for particle parameter initialization.
+    pub seed: u64,
+}
+
+impl Default for NelConfig {
+    fn default() -> Self {
+        NelConfig {
+            num_devices: 1,
+            cache_size: 4,
+            view_size: 4,
+            mem_budget: 2 << 30,
+            cost: CostModel::default(),
+            trace: false,
+            serialize_streams: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregate messaging counters (device compute counters live in
+/// device::DeviceStats).
+#[derive(Debug, Default)]
+pub struct NelCounters {
+    pub msgs_sent: AtomicU64,
+    pub msgs_cross_device: AtomicU64,
+    pub msg_payload_bytes: AtomicU64,
+    pub handler_errors: AtomicU64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct NelStats {
+    pub msgs_sent: u64,
+    pub msgs_cross_device: u64,
+    pub msg_payload_bytes: u64,
+    pub handler_errors: u64,
+    pub devices: Vec<DeviceStats>,
+}
+
+struct Envelope {
+    msg: String,
+    args: Vec<Value>,
+    reply: PFuture,
+}
+
+pub(crate) struct ParticleEntry {
+    pub pid: Pid,
+    pub device: usize,
+    pub model: Arc<ModelSpec>,
+    pub handlers: Arc<HandlerTable>,
+    pub state: Arc<Mutex<BTreeMap<String, Value>>>,
+    tx: Sender<Envelope>,
+}
+
+pub(crate) struct NelInner {
+    pool: DevicePool,
+    pub trace: Trace,
+    particles: RwLock<BTreeMap<Pid, Arc<ParticleEntry>>>,
+    next_pid: AtomicU32,
+    counters: NelCounters,
+    cfg: NelConfig,
+}
+
+/// Handle to the node event loop. Clone freely; the NEL shuts down when the
+/// last handle drops (control threads exit when their mailboxes close).
+#[derive(Clone)]
+pub struct Nel {
+    inner: Arc<NelInner>,
+}
+
+/// Options for particle creation (paper: `p_create(..., device=, receive=,
+/// state=)`).
+#[derive(Default)]
+pub struct CreateOpts {
+    /// Pin to a device; default round-robin by pid.
+    pub device: Option<usize>,
+    pub receive: HandlerTable,
+    pub state: Vec<(String, Value)>,
+    /// Skip parameter initialization (moment/scratch particles that only
+    /// carry state — the multi-SWAG-as-particles encoding, §C.2).
+    pub no_params: bool,
+}
+
+impl Nel {
+    pub fn new(cfg: NelConfig) -> Result<Nel> {
+        let trace = if cfg.trace { Trace::enabled(1 << 20) } else { Trace::disabled() };
+        let dev_cfg = DeviceConfig {
+            cache_size: cfg.cache_size,
+            mem_budget: cfg.mem_budget,
+            cost: cfg.cost.clone(),
+            serialize: cfg
+                .serialize_streams
+                .then(|| std::sync::Arc::new(std::sync::Mutex::new(()))),
+        };
+        let pool = DevicePool::new(cfg.num_devices, dev_cfg, trace.clone())?;
+        Ok(Nel {
+            inner: Arc::new(NelInner {
+                pool,
+                trace,
+                particles: RwLock::new(BTreeMap::new()),
+                next_pid: AtomicU32::new(0),
+                counters: NelCounters::default(),
+                cfg,
+            }),
+        })
+    }
+
+    pub fn config(&self) -> &NelConfig {
+        &self.inner.cfg
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.inner.pool.len()
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.inner.trace
+    }
+
+    pub fn particle_ids(&self) -> Vec<Pid> {
+        self.inner.particles.read().unwrap().keys().copied().collect()
+    }
+
+    pub fn device_of(&self, pid: Pid) -> Option<usize> {
+        self.inner.particles.read().unwrap().get(&pid).map(|e| e.device)
+    }
+
+    fn entry(&self, pid: Pid) -> Result<Arc<ParticleEntry>, PushError> {
+        self.inner
+            .particles
+            .read()
+            .unwrap()
+            .get(&pid)
+            .cloned()
+            .ok_or_else(|| PushError::new(format!("unknown particle {pid}")))
+    }
+
+    /// Create a particle of `model`, initialize its parameters on its
+    /// device (via the model's AOT `init` entry), register handlers, and
+    /// start its control thread. Returns the new pid immediately — device
+    /// FIFO ordering makes later jobs see the initialized parameters.
+    pub fn p_create(&self, model: Arc<ModelSpec>, opts: CreateOpts) -> Result<Pid> {
+        let pid = Pid(self.inner.next_pid.fetch_add(1, Ordering::Relaxed));
+        let device = match opts.device {
+            Some(d) => {
+                if d >= self.num_devices() {
+                    return Err(anyhow!("device {d} out of range (have {})", self.num_devices()));
+                }
+                d
+            }
+            None => pid.0 as usize % self.num_devices(),
+        };
+        self.inner
+            .trace
+            .record(Event::new(device, Some(pid), EventKind::Create, 0));
+
+        let (tx, rx) = channel::<Envelope>();
+        let entry = Arc::new(ParticleEntry {
+            pid,
+            device,
+            model: model.clone(),
+            handlers: Arc::new(opts.receive),
+            state: Arc::new(Mutex::new(opts.state.into_iter().collect())),
+            tx,
+        });
+        self.inner.particles.write().unwrap().insert(pid, entry.clone());
+
+        if !opts.no_params {
+            // Initialize parameters on the particle's device; the job
+            // inserts into the host store, first use swaps in.
+            let init = model.entry("init")?.clone();
+            let seed = self.inner.cfg.seed;
+            self.submit_job(device, move |ctx| {
+                let key = Tensor::u32(vec![2], vec![(seed & 0xffff_ffff) as u32, pid.0]);
+                let outs = ctx.runtime.execute(&init.file, &[key])?;
+                let params = outs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("init returned nothing"))?;
+                ctx.host.insert(pid, params);
+                Ok(Value::Unit)
+            });
+        }
+
+        self.spawn_control_thread(entry, rx);
+        Ok(pid)
+    }
+
+    fn spawn_control_thread(&self, entry: Arc<ParticleEntry>, rx: Receiver<Envelope>) {
+        let weak: Weak<NelInner> = Arc::downgrade(&self.inner);
+        let pid = entry.pid;
+        let device = entry.device;
+        let model = entry.model.clone();
+        let handlers = entry.handlers.clone();
+        let state = entry.state.clone();
+        // The control thread must NOT keep `entry` alive (it holds the
+        // mailbox sender; holding it would prevent shutdown).
+        drop(entry);
+        std::thread::Builder::new()
+            .name(format!("particle-{}", pid.0))
+            .spawn(move || {
+                while let Ok(env) = rx.recv() {
+                    let Some(inner) = weak.upgrade() else {
+                        env.reply.complete(Err(PushError::new("NEL shut down")));
+                        break;
+                    };
+                    let nel = Nel { inner };
+                    nel.inner.trace.record(
+                        Event::new(device, Some(pid), EventKind::HandlerStart, 0)
+                            .with_note(env.msg.clone()),
+                    );
+                    let ctx = ParticleCtx {
+                        pid,
+                        device,
+                        nel: nel.clone(),
+                        model: model.clone(),
+                        state: state.clone(),
+                    };
+                    let result = match handlers.get(&env.msg) {
+                        None => Err(PushError::new(format!(
+                            "particle {pid} has no handler for {:?}",
+                            env.msg
+                        ))),
+                        Some(h) => run_handler(h, &ctx, &env.args),
+                    };
+                    if result.is_err() {
+                        nel.inner.counters.handler_errors.fetch_add(1, Ordering::Relaxed);
+                        nel.inner.trace.record(
+                            Event::new(device, Some(pid), EventKind::Error, 0)
+                                .with_note(env.msg.clone()),
+                        );
+                    }
+                    nel.inner.trace.record(
+                        Event::new(device, Some(pid), EventKind::HandlerEnd, 0)
+                            .with_note(env.msg.clone()),
+                    );
+                    env.reply.complete(result);
+                    // `nel` (strong ref) drops here — no permanent cycle.
+                }
+            })
+            .expect("spawning particle control thread");
+    }
+
+    /// Asynchronously send `msg` to `pid` (paper: `particle.send` /
+    /// `p_launch`). Returns the future of the handler's result.
+    pub fn send(&self, from_device: Option<usize>, to: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+        let entry = match self.entry(to) {
+            Ok(e) => e,
+            Err(e) => return PFuture::ready(Err(e)),
+        };
+        let payload: usize = args
+            .iter()
+            .map(|v| match v {
+                Value::Tensor(t) => t.size_bytes(),
+                _ => 0,
+            })
+            .sum();
+        self.inner.counters.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .counters
+            .msg_payload_bytes
+            .fetch_add(payload as u64, Ordering::Relaxed);
+        if let Some(fd) = from_device {
+            if fd != entry.device {
+                self.inner.counters.msgs_cross_device.fetch_add(1, Ordering::Relaxed);
+                if payload > 0 {
+                    // Cross-device payload movement charged on the receiver.
+                    let cost = self.inner.cfg.cost.clone();
+                    self.submit_job(entry.device, move |ctx| {
+                        cost.charge_transfer(payload, ctx.stats);
+                        Ok(Value::Unit)
+                    });
+                }
+            }
+        }
+        self.inner.trace.record(
+            Event::new(entry.device, Some(to), EventKind::MsgSend, payload)
+                .with_note(msg.to_string()),
+        );
+        let reply = PFuture::new();
+        let env = Envelope {
+            msg: msg.to_string(),
+            args,
+            reply: reply.clone(),
+        };
+        if entry.tx.send(env).is_err() {
+            return PFuture::ready(Err(PushError::new(format!(
+                "particle {to} mailbox closed"
+            ))));
+        }
+        reply
+    }
+
+    /// Submit a compute job to a device stream, completing `reply` with its
+    /// result. Low-level; prefer the typed wrappers below.
+    fn submit_job<F>(&self, device: usize, f: F) -> PFuture
+    where
+        F: FnOnce(&mut crate::device::DeviceCtx<'_>) -> Result<Value> + Send + 'static,
+    {
+        let reply = PFuture::new();
+        let r2 = reply.clone();
+        let trace = self.inner.trace.clone();
+        let res = self.inner.pool.device(device).submit(Box::new(move |ctx| {
+            trace.record(Event::new(ctx.device_id, None, EventKind::JobStart, 0));
+            let out = std::panic::catch_unwind(AssertUnwindSafe(|| f(ctx)))
+                .unwrap_or_else(|p| Err(anyhow!("compute job panicked: {}", panic_msg(p.as_ref()))));
+            trace.record(Event::new(ctx.device_id, None, EventKind::JobEnd, 0));
+            r2.complete(out.map_err(PushError::from));
+        }));
+        if let Err(e) = res {
+            reply.complete(Err(PushError::from(e)));
+        }
+        reply
+    }
+
+    /// Run a model entry (fwd/grad/step/...) for `pid` on its device. The
+    /// particle's flat parameter vector is prepended as the first argument;
+    /// if `write_back` is given, that output index replaces the parameters.
+    pub fn run_entry(
+        &self,
+        pid: Pid,
+        entry_name: &'static str,
+        extra_args: Vec<Tensor>,
+        write_back: Option<usize>,
+    ) -> PFuture {
+        let entry = match self.entry(pid) {
+            Ok(e) => e,
+            Err(e) => return PFuture::ready(Err(e)),
+        };
+        let spec = match entry.model.entry(entry_name) {
+            Ok(s) => s.clone(),
+            Err(e) => return PFuture::ready(Err(PushError::from(e))),
+        };
+        self.submit_job(entry.device, move |ctx| {
+            // Perf (EXPERIMENTS.md §Perf L3): move the resident parameter
+            // tensor out of its cache slot for the call instead of cloning
+            // it — saves one param-sized memcpy per step. The slot is
+            // restored (or replaced by the written-back output) before the
+            // job ends, so the single-authority invariant holds: no other
+            // job can interleave on this device stream.
+            let slot = ctx.params_mut(pid)?;
+            let params = std::mem::replace(slot, Tensor::f32(vec![0], vec![]));
+            let mut args = Vec::with_capacity(1 + extra_args.len());
+            args.push(params);
+            args.extend(extra_args);
+            let result = ctx.runtime.execute(&spec.file, &args);
+            let mut outs = match result {
+                Ok(o) => o,
+                Err(e) => {
+                    // restore the moved-out parameters on failure
+                    *ctx.params_mut(pid)? = args.into_iter().next().unwrap();
+                    return Err(e);
+                }
+            };
+            let restore = match write_back {
+                Some(ix) if ix < outs.len() => outs.remove(ix),
+                Some(ix) => {
+                    *ctx.params_mut(pid)? = args.into_iter().next().unwrap();
+                    return Err(anyhow!(
+                        "entry {entry_name} has {} outputs, cannot write back #{ix}",
+                        outs.len()
+                    ));
+                }
+                None => args.into_iter().next().unwrap(),
+            };
+            *ctx.params_mut(pid)? = restore;
+            let vals: Vec<Value> = outs.into_iter().map(Value::Tensor).collect();
+            Ok(match vals.len() {
+                1 => vals.into_iter().next().unwrap(),
+                _ => Value::List(vals),
+            })
+        })
+    }
+
+    /// One Adam step (paper Tables 3/4 protocol: Adam, lr 1e-3). The
+    /// optimizer moments m/v and step count live in the particle's local
+    /// state and ride along to its device each step; the AOT `adam` entry
+    /// computes the update with bias correction.
+    pub fn run_adam(&self, pid: Pid, x: Tensor, y: Tensor, lr: f32) -> PFuture {
+        let entry = match self.entry(pid) {
+            Ok(e) => e,
+            Err(e) => return PFuture::ready(Err(e)),
+        };
+        let spec = match entry.model.entry("adam") {
+            Ok(s) => s.clone(),
+            Err(e) => return PFuture::ready(Err(PushError::from(e))),
+        };
+        let state = entry.state.clone();
+        self.submit_job(entry.device, move |ctx| {
+            let slot = ctx.params_mut(pid)?;
+            let params = std::mem::replace(slot, Tensor::f32(vec![0], vec![]));
+            let d = params.element_count();
+            let (m, v, t) = {
+                let mut st = state.lock().unwrap();
+                let m = match st.remove("adam_m") {
+                    Some(Value::Tensor(t)) => t,
+                    _ => Tensor::zeros(vec![d]),
+                };
+                let v = match st.remove("adam_v") {
+                    Some(Value::Tensor(t)) => t,
+                    _ => Tensor::zeros(vec![d]),
+                };
+                let t = match st.get("adam_t") {
+                    Some(Value::Usize(n)) => *n,
+                    _ => 0,
+                };
+                (m, v, t)
+            };
+            let args = [
+                params,
+                m,
+                v,
+                Tensor::scalar_f32((t + 1) as f32),
+                x,
+                y,
+                Tensor::scalar_f32(lr),
+            ];
+            let outs = match ctx.runtime.execute(&spec.file, &args) {
+                Ok(o) => o,
+                Err(e) => {
+                    *ctx.params_mut(pid)? = args.into_iter().next().unwrap();
+                    return Err(e);
+                }
+            };
+            let mut it = outs.into_iter();
+            let loss = it.next().ok_or_else(|| anyhow!("adam: no loss"))?;
+            let new_flat = it.next().ok_or_else(|| anyhow!("adam: no params"))?;
+            let new_m = it.next().ok_or_else(|| anyhow!("adam: no m"))?;
+            let new_v = it.next().ok_or_else(|| anyhow!("adam: no v"))?;
+            *ctx.params_mut(pid)? = new_flat;
+            {
+                let mut st = state.lock().unwrap();
+                st.insert("adam_m".into(), Value::Tensor(new_m));
+                st.insert("adam_v".into(), Value::Tensor(new_v));
+                st.insert("adam_t".into(), Value::Usize(t + 1));
+            }
+            Ok(Value::Tensor(loss))
+        })
+    }
+
+    /// Execute an arbitrary artifact on `device` (SVGD kernel updates).
+    pub fn run_artifact(
+        &self,
+        device: usize,
+        path: std::path::PathBuf,
+        args: Vec<Tensor>,
+    ) -> PFuture {
+        self.submit_job(device, move |ctx| {
+            let outs = ctx.runtime.execute(&path, &args)?;
+            let vals: Vec<Value> = outs.into_iter().map(Value::Tensor).collect();
+            Ok(match vals.len() {
+                1 => vals.into_iter().next().unwrap(),
+                _ => Value::List(vals),
+            })
+        })
+    }
+
+    /// Read-only view of a particle's parameters (paper: `get` + `view`).
+    /// Runs on the owner's device; cross-device requests charge a transfer.
+    pub fn get_params(&self, requester_device: Option<usize>, pid: Pid) -> PFuture {
+        let entry = match self.entry(pid) {
+            Ok(e) => e,
+            Err(e) => return PFuture::ready(Err(e)),
+        };
+        let cost = self.inner.cfg.cost.clone();
+        let cross = requester_device.map(|rd| rd != entry.device).unwrap_or(false);
+        self.submit_job(entry.device, move |ctx| {
+            let t = ctx.params_view(pid)?;
+            if cross {
+                cost.charge_transfer(t.size_bytes(), ctx.stats);
+                ctx.trace.record(
+                    Event::new(ctx.device_id, Some(pid), EventKind::Transfer, t.size_bytes()),
+                );
+            }
+            Ok(Value::Tensor(t))
+        })
+    }
+
+    /// Overwrite a particle's parameters.
+    pub fn set_params(&self, pid: Pid, t: Tensor) -> PFuture {
+        let entry = match self.entry(pid) {
+            Ok(e) => e,
+            Err(e) => return PFuture::ready(Err(e)),
+        };
+        self.submit_job(entry.device, move |ctx| {
+            let params = ctx.params_mut(pid)?;
+            if params.shape != t.shape {
+                return Err(anyhow!(
+                    "set_params shape mismatch: particle has {:?}, got {:?}",
+                    params.shape,
+                    t.shape
+                ));
+            }
+            *params = t;
+            Ok(Value::Unit)
+        })
+    }
+
+    /// In-place `params += alpha * update` on the particle's device (the
+    /// apply step of SVGD_FOLLOW and SWAG averaging).
+    pub fn axpy_params(&self, pid: Pid, alpha: f32, update: Tensor) -> PFuture {
+        let entry = match self.entry(pid) {
+            Ok(e) => e,
+            Err(e) => return PFuture::ready(Err(e)),
+        };
+        self.submit_job(entry.device, move |ctx| {
+            let params = ctx.params_mut(pid)?;
+            if params.element_count() != update.element_count() {
+                return Err(anyhow!(
+                    "axpy length mismatch: {} vs {}",
+                    params.element_count(),
+                    update.element_count()
+                ));
+            }
+            crate::runtime::tensor::ops::axpy(params, alpha, &update);
+            Ok(Value::Unit)
+        })
+    }
+
+    /// Barrier: wait until every device has drained its queue, then flush
+    /// all resident particles to the host store and return a snapshot of
+    /// every particle's parameters.
+    pub fn drain_params(&self) -> Result<BTreeMap<Pid, Tensor>, PushError> {
+        let n = self.num_devices();
+        let futs: Vec<PFuture> = (0..n)
+            .map(|d| {
+                self.submit_job(d, move |ctx| {
+                    ctx.cache.flush_all(ctx.host);
+                    Ok(Value::Unit)
+                })
+            })
+            .collect();
+        PFuture::wait_all(&futs)?;
+        let mut out = BTreeMap::new();
+        for pid in self.particle_ids() {
+            if let Some(t) = self.inner.pool.host.get_clone(pid) {
+                out.insert(pid, t);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Aggregate statistics. Barriers every device stream first so counters
+    /// from jobs whose futures already resolved are guaranteed published
+    /// (the worker publishes after the job closure returns, which races
+    /// with waiters otherwise).
+    pub fn stats(&self) -> NelStats {
+        let barriers: Vec<PFuture> = (0..self.num_devices())
+            .map(|d| self.submit_job(d, |_| Ok(Value::Unit)))
+            .collect();
+        let _ = PFuture::wait_all(&barriers);
+        let c = &self.inner.counters;
+        NelStats {
+            msgs_sent: c.msgs_sent.load(Ordering::Relaxed),
+            msgs_cross_device: c.msgs_cross_device.load(Ordering::Relaxed),
+            msg_payload_bytes: c.msg_payload_bytes.load(Ordering::Relaxed),
+            handler_errors: c.handler_errors.load(Ordering::Relaxed),
+            devices: self.inner.pool.stats(),
+        }
+    }
+}
+
+fn run_handler(h: &Handler, ctx: &ParticleCtx, args: &[Value]) -> PResult {
+    std::panic::catch_unwind(AssertUnwindSafe(|| h(ctx, args)))
+        .unwrap_or_else(|p| Err(PushError::new(format!("handler panicked: {}", panic_msg(p.as_ref())))))
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+/// The context a handler executes with — the paper's `particle` argument
+/// (Figure 1): local state access plus messaging.
+pub struct ParticleCtx {
+    pub pid: Pid,
+    pub device: usize,
+    nel: Nel,
+    model: Arc<ModelSpec>,
+    state: Arc<Mutex<BTreeMap<String, Value>>>,
+}
+
+impl ParticleCtx {
+    pub fn nel(&self) -> &Nel {
+        &self.nel
+    }
+
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    /// All particle ids in the NEL (paper: `particle.particle_ids()`).
+    pub fn particle_ids(&self) -> Vec<Pid> {
+        self.nel.particle_ids()
+    }
+
+    /// Other particles' ids (the common filter in the paper's listings).
+    pub fn other_particles(&self) -> Vec<Pid> {
+        self.particle_ids().into_iter().filter(|p| *p != self.pid).collect()
+    }
+
+    /// Async send (paper: `particle.send(pid, msg, *args)`).
+    pub fn send(&self, to: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+        self.nel.send(Some(self.device), to, msg, args)
+    }
+
+    /// Async read-only view of another particle's parameters (paper:
+    /// `particle.get(pid)` + `.view()`).
+    pub fn get(&self, pid: Pid) -> PFuture {
+        self.nel.get_params(Some(self.device), pid)
+    }
+
+    /// This particle's own parameters (no transfer charge).
+    pub fn own_params(&self) -> PFuture {
+        self.nel.get_params(None, self.pid)
+    }
+
+    /// One SGD step on (x, y): runs the model's AOT `step` entry on this
+    /// particle's device, writes back parameters, resolves to the loss.
+    pub fn step(&self, x: Tensor, y: Tensor, lr: f32) -> PFuture {
+        self.nel
+            .run_entry(self.pid, "step", vec![x, y, Tensor::scalar_f32(lr)], Some(1))
+    }
+
+    /// One Adam step (moments in particle state); resolves to the loss.
+    pub fn adam_step(&self, x: Tensor, y: Tensor, lr: f32) -> PFuture {
+        self.nel.run_adam(self.pid, x, y, lr)
+    }
+
+    /// Forward pass; resolves to the prediction tensor.
+    pub fn forward(&self, x: Tensor) -> PFuture {
+        self.nel.run_entry(self.pid, "fwd", vec![x], None)
+    }
+
+    /// Loss + flat gradient; resolves to List[loss, grad].
+    pub fn grad(&self, x: Tensor, y: Tensor) -> PFuture {
+        self.nel.run_entry(self.pid, "grad", vec![x, y], None)
+    }
+
+    pub fn set_params(&self, t: Tensor) -> PFuture {
+        self.nel.set_params(self.pid, t)
+    }
+
+    pub fn axpy_params(&self, alpha: f32, update: Tensor) -> PFuture {
+        self.nel.axpy_params(self.pid, alpha, update)
+    }
+
+    /// Execute an arbitrary AOT artifact on this particle's device (the
+    /// SVGD leader runs the L1 kernel artifact this way).
+    pub fn run_artifact(&self, path: std::path::PathBuf, args: Vec<Tensor>) -> PFuture {
+        self.nel.run_artifact(self.device, path, args)
+    }
+
+    // ---- local user state (paper: `state=` at p_create) ----
+    pub fn state_get(&self, key: &str) -> Option<Value> {
+        self.state.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn state_set(&self, key: &str, v: Value) {
+        self.state.lock().unwrap().insert(key.to_string(), v);
+    }
+
+    pub fn state_take(&self, key: &str) -> Option<Value> {
+        self.state.lock().unwrap().remove(key)
+    }
+}

@@ -1,0 +1,185 @@
+//! NEL event trace — the instrumentation behind the paper's Figure 3b
+//! timeline (message send, context switch / swap, dispatch, future
+//! resolution). Disabled by default; `push trace` and the quickstart enable
+//! it to print a two-particle interaction timeline.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::particle::Pid;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A message was enqueued to a particle's mailbox.
+    MsgSend,
+    /// A particle's control thread began a handler.
+    HandlerStart,
+    HandlerEnd,
+    /// A compute job began executing on a device stream.
+    JobStart,
+    JobEnd,
+    /// Active-set context switches (paper §4.2).
+    SwapIn,
+    SwapOut,
+    /// Cross-device parameter view / message payload movement.
+    Transfer,
+    /// Particle lifecycle.
+    Create,
+    /// Handler panic / failure surfaced to a future.
+    Error,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::MsgSend => "msg_send",
+            EventKind::HandlerStart => "handler_start",
+            EventKind::HandlerEnd => "handler_end",
+            EventKind::JobStart => "job_start",
+            EventKind::JobEnd => "job_end",
+            EventKind::SwapIn => "swap_in",
+            EventKind::SwapOut => "swap_out",
+            EventKind::Transfer => "transfer",
+            EventKind::Create => "create",
+            EventKind::Error => "error",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Microseconds since trace start (filled by `Trace::record`).
+    pub t_us: u64,
+    pub device: usize,
+    pub pid: Option<Pid>,
+    pub kind: EventKind,
+    pub bytes: usize,
+    pub note: String,
+}
+
+impl Event {
+    pub fn new(device: usize, pid: Option<Pid>, kind: EventKind, bytes: usize) -> Event {
+        Event { t_us: 0, device, pid, kind, bytes, note: String::new() }
+    }
+
+    pub fn with_note(mut self, note: impl Into<String>) -> Event {
+        self.note = note.into();
+        self
+    }
+}
+
+struct TraceInner {
+    start: Instant,
+    events: Mutex<Vec<Event>>,
+    cap: usize,
+}
+
+/// Cheap-to-clone handle; a disabled trace records nothing.
+#[derive(Clone)]
+pub struct Trace {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl Trace {
+    pub fn enabled(cap: usize) -> Trace {
+        Trace {
+            inner: Some(Arc::new(TraceInner {
+                start: Instant::now(),
+                events: Mutex::new(Vec::new()),
+                cap,
+            })),
+        }
+    }
+
+    pub fn disabled() -> Trace {
+        Trace { inner: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn record(&self, mut e: Event) {
+        if let Some(inner) = &self.inner {
+            e.t_us = inner.start.elapsed().as_micros() as u64;
+            let mut evs = inner.events.lock().unwrap();
+            if evs.len() < inner.cap {
+                evs.push(e);
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<Event> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => inner.events.lock().unwrap().clone(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner
+            .as_ref()
+            .map(|i| i.events.lock().unwrap().len())
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render a Figure-3b-style textual timeline.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("    t(us)  dev  particle  event          bytes  note\n");
+        for e in self.snapshot() {
+            let pid = e
+                .pid
+                .map(|p| format!("{p}"))
+                .unwrap_or_else(|| "-".to_string());
+            out.push_str(&format!(
+                "{:>9}  {:>3}  {:>8}  {:<13} {:>6}  {}\n",
+                e.t_us,
+                e.device,
+                pid,
+                e.kind.name(),
+                e.bytes,
+                e.note
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let t = Trace::disabled();
+        t.record(Event::new(0, None, EventKind::MsgSend, 0));
+        assert_eq!(t.len(), 0);
+        assert!(!t.is_enabled());
+    }
+
+    #[test]
+    fn enabled_records_in_order() {
+        let t = Trace::enabled(16);
+        t.record(Event::new(0, Some(Pid(1)), EventKind::MsgSend, 10));
+        t.record(Event::new(1, Some(Pid(2)), EventKind::SwapIn, 20));
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert!(evs[0].t_us <= evs[1].t_us);
+        assert_eq!(evs[1].kind, EventKind::SwapIn);
+        assert!(t.to_text().contains("swap_in"));
+    }
+
+    #[test]
+    fn cap_bounds_memory() {
+        let t = Trace::enabled(3);
+        for i in 0..10 {
+            t.record(Event::new(i, None, EventKind::JobStart, 0));
+        }
+        assert_eq!(t.len(), 3);
+    }
+}

@@ -1,0 +1,279 @@
+//! The particle abstraction (paper §3.2): identifiers, message values, and
+//! the async-await future type that `send`/`get` return.
+//!
+//! A particle wraps a NN (its flat parameter vector, managed by the device
+//! layer), a logical thread of execution (nel::particle spawns one control
+//! thread per particle processing its mailbox sequentially), and message
+//! passing (handlers registered per message name). This module holds the
+//! plain data types; the machinery lives in nel.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::runtime::Tensor;
+
+/// Particle identifier, unique within a NEL (paper: `pid`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Pid(pub u32);
+
+impl fmt::Display for Pid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "P{}", self.0)
+    }
+}
+
+/// Message argument / result value. The closed set keeps futures clonable
+/// and the wire format trivially serializable for a future distributed NEL.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Unit,
+    Bool(bool),
+    F32(f32),
+    Usize(usize),
+    Str(String),
+    Tensor(Tensor),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn tensor(self) -> Result<Tensor, PushError> {
+        match self {
+            Value::Tensor(t) => Ok(t),
+            other => Err(PushError::new(format!("expected Tensor, got {other:?}"))),
+        }
+    }
+
+    pub fn as_tensor(&self) -> Result<&Tensor, PushError> {
+        match self {
+            Value::Tensor(t) => Ok(t),
+            other => Err(PushError::new(format!("expected Tensor, got {other:?}"))),
+        }
+    }
+
+    pub fn f32(&self) -> Result<f32, PushError> {
+        match self {
+            Value::F32(v) => Ok(*v),
+            other => Err(PushError::new(format!("expected F32, got {other:?}"))),
+        }
+    }
+
+    pub fn usize(&self) -> Result<usize, PushError> {
+        match self {
+            Value::Usize(v) => Ok(*v),
+            other => Err(PushError::new(format!("expected Usize, got {other:?}"))),
+        }
+    }
+
+    pub fn list(self) -> Result<Vec<Value>, PushError> {
+        match self {
+            Value::List(v) => Ok(v),
+            other => Err(PushError::new(format!("expected List, got {other:?}"))),
+        }
+    }
+}
+
+/// Error type that crosses particle boundaries (clonable so multiple
+/// waiters can observe the same failure; panics in handlers are captured
+/// into this form — the NEL is performance- not fault-oriented, §4.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PushError {
+    pub msg: String,
+}
+
+impl PushError {
+    pub fn new(msg: impl Into<String>) -> PushError {
+        PushError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for PushError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for PushError {}
+
+impl From<anyhow::Error> for PushError {
+    fn from(e: anyhow::Error) -> Self {
+        PushError::new(format!("{e:#}"))
+    }
+}
+
+pub type PResult = Result<Value, PushError>;
+
+enum FutureState {
+    Pending,
+    Ready(PResult),
+}
+
+struct FutureInner {
+    state: Mutex<FutureState>,
+    cv: Condvar,
+}
+
+/// The paper's `PFuture`: returned by `send`/`get`, resolved by the
+/// receiving particle (or device job) on its own timeline.
+#[derive(Clone)]
+pub struct PFuture {
+    inner: Arc<FutureInner>,
+}
+
+impl Default for PFuture {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PFuture {
+    pub fn new() -> PFuture {
+        PFuture {
+            inner: Arc::new(FutureInner {
+                state: Mutex::new(FutureState::Pending),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// An already-resolved future (used when the caller IS the target).
+    pub fn ready(v: PResult) -> PFuture {
+        let f = PFuture::new();
+        f.complete(v);
+        f
+    }
+
+    /// Resolve the future. Second completion is ignored (the first result
+    /// wins — matters when a panic unwinds past an already-completed job).
+    pub fn complete(&self, v: PResult) {
+        let mut st = self.inner.state.lock().unwrap();
+        if matches!(*st, FutureState::Pending) {
+            *st = FutureState::Ready(v);
+            self.inner.cv.notify_all();
+        }
+    }
+
+    /// Block until resolved (paper: `future.wait()`).
+    pub fn wait(&self) -> PResult {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            match &*st {
+                FutureState::Ready(v) => return v.clone(),
+                FutureState::Pending => st = self.inner.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<PResult> {
+        match &*self.inner.state.lock().unwrap() {
+            FutureState::Ready(v) => Some(v.clone()),
+            FutureState::Pending => None,
+        }
+    }
+
+    /// Wait with a timeout (deadlock containment in tests).
+    pub fn wait_timeout(&self, d: Duration) -> Option<PResult> {
+        let mut st = self.inner.state.lock().unwrap();
+        let deadline = std::time::Instant::now() + d;
+        loop {
+            match &*st {
+                FutureState::Ready(v) => return Some(v.clone()),
+                FutureState::Pending => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (g, res) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = g;
+                    if res.timed_out() {
+                        if let FutureState::Ready(v) = &*st {
+                            return Some(v.clone());
+                        }
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wait on a batch (paper: `p_wait`).
+    pub fn wait_all(futs: &[PFuture]) -> Result<Vec<Value>, PushError> {
+        futs.iter().map(|f| f.wait()).collect()
+    }
+}
+
+/// A particle's per-message handler table (paper: the `receive` dict).
+/// Handlers run on the particle's control thread with a `ParticleCtx`
+/// (defined in nel) and may block on futures from other particles.
+pub type Handler =
+    Arc<dyn Fn(&crate::nel::ParticleCtx, &[Value]) -> PResult + Send + Sync + 'static>;
+
+pub type HandlerTable = BTreeMap<String, Handler>;
+
+/// Helper: build a handler from a closure.
+pub fn handler<F>(f: F) -> Handler
+where
+    F: Fn(&crate::nel::ParticleCtx, &[Value]) -> PResult + Send + Sync + 'static,
+{
+    Arc::new(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn future_resolves_across_threads() {
+        let f = PFuture::new();
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            f2.complete(Ok(Value::F32(4.5)));
+        });
+        assert_eq!(f.wait().unwrap(), Value::F32(4.5));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn double_complete_keeps_first() {
+        let f = PFuture::new();
+        f.complete(Ok(Value::Usize(1)));
+        f.complete(Ok(Value::Usize(2)));
+        assert_eq!(f.wait().unwrap(), Value::Usize(1));
+    }
+
+    #[test]
+    fn try_get_pending() {
+        let f = PFuture::new();
+        assert!(f.try_get().is_none());
+        f.complete(Err(PushError::new("boom")));
+        assert_eq!(f.try_get().unwrap().unwrap_err().msg, "boom");
+    }
+
+    #[test]
+    fn wait_timeout_times_out() {
+        let f = PFuture::new();
+        assert!(f.wait_timeout(Duration::from_millis(20)).is_none());
+        f.complete(Ok(Value::Unit));
+        assert!(f.wait_timeout(Duration::from_millis(20)).is_some());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert!(Value::F32(1.0).f32().is_ok());
+        assert!(Value::Unit.f32().is_err());
+        assert!(Value::List(vec![Value::Unit]).list().is_ok());
+        let t = Tensor::scalar_f32(3.0);
+        assert_eq!(Value::Tensor(t.clone()).tensor().unwrap(), t);
+    }
+
+    #[test]
+    fn wait_all_propagates_error() {
+        let ok = PFuture::ready(Ok(Value::Unit));
+        let bad = PFuture::ready(Err(PushError::new("x")));
+        assert!(PFuture::wait_all(&[ok.clone()]).is_ok());
+        assert!(PFuture::wait_all(&[ok, bad]).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! PD checkpointing: save/restore every particle's parameters (and the
+//! model identity) to a single binary file.
+//!
+//! Format (little-endian, versioned):
+//!
+//! ```text
+//! magic  u32 = 0x50555348 ("PUSH")      version u32 = 1
+//! model-name len u32 + utf8 bytes
+//! particle count u32
+//! per particle: pid u32, elem count u64, f32 data
+//! ```
+//!
+//! No serde/npy in the vendored crate set, so the codec is hand-rolled and
+//! round-trip tested.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::particle::Pid;
+use crate::pd::PushDist;
+use crate::runtime::Tensor;
+
+const MAGIC: u32 = 0x5055_5348;
+const VERSION: u32 = 1;
+
+/// A saved PD snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub params: BTreeMap<Pid, Tensor>,
+}
+
+impl Checkpoint {
+    /// Snapshot a PD (drains device caches first).
+    pub fn capture(pd: &PushDist) -> Result<Checkpoint> {
+        let params = pd.drain_params().map_err(|e| anyhow!("{e}"))?;
+        Ok(Checkpoint { model: pd.model().name.clone(), params })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut w =
+            std::io::BufWriter::new(std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        let name = self.model.as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for (pid, t) in &self.params {
+            w.write_all(&pid.0.to_le_bytes())?;
+            w.write_all(&(t.element_count() as u64).to_le_bytes())?;
+            for v in t.as_f32() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut r =
+            std::io::BufReader::new(std::fs::File::open(path).with_context(|| format!("{path:?}"))?);
+        let mut u32buf = [0u8; 4];
+        let mut u64buf = [0u8; 8];
+        let mut read_u32 = |r: &mut dyn Read| -> Result<u32> {
+            r.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        if read_u32(&mut r)? != MAGIC {
+            bail!("{path:?} is not a Push checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("{path:?}: unsupported checkpoint version {version}");
+        }
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("{path:?}: implausible model-name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let model = String::from_utf8(name).context("model name not utf-8")?;
+        let count = read_u32(&mut r)? as usize;
+        let mut params = BTreeMap::new();
+        for _ in 0..count {
+            let pid = Pid(read_u32(&mut r)?);
+            r.read_exact(&mut u64buf)?;
+            let n = u64::from_le_bytes(u64buf) as usize;
+            let mut data = vec![0f32; n];
+            // bulk read as bytes, then reinterpret
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            params.insert(pid, Tensor::f32(vec![n], data));
+        }
+        Ok(Checkpoint { model, params })
+    }
+
+    /// Restore parameters into a PD whose particles were created in the
+    /// same order (pids must match; model name must match).
+    pub fn restore(&self, pd: &PushDist) -> Result<()> {
+        if pd.model().name != self.model {
+            bail!(
+                "checkpoint is for model {:?}, PD wraps {:?}",
+                self.model,
+                pd.model().name
+            );
+        }
+        let futs: Vec<crate::PFuture> = self
+            .params
+            .iter()
+            .map(|(pid, t)| pd.set(*pid, t.clone()))
+            .collect();
+        crate::PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_memory_format() {
+        let mut params = BTreeMap::new();
+        params.insert(Pid(0), Tensor::f32(vec![3], vec![1.0, -2.0, 3.5]));
+        params.insert(Pid(7), Tensor::f32(vec![2], vec![0.25, f32::MIN_POSITIVE]));
+        let ck = Checkpoint { model: "mlp_tiny".into(), params };
+        let dir = std::env::temp_dir().join(format!("push-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("push-ckpt2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,149 @@
+//! Push distribution (paper §3.3, §4.3): `P(nn_Θ)` — an input NN
+//! architecture plus the set of particles that form its empirical
+//! (Dirac-mixture) approximation.
+//!
+//! The paper runs the PD in a separate OS process from its NEL to prepare
+//! for a distributed implementation; here the PD is an in-process facade
+//! over one NEL (process isolation is an explicit non-goal, DESIGN.md §9 —
+//! the seam is this type's API, which only moves plain `Value`s).
+
+pub mod checkpoint;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
+use crate::particle::{PFuture, Pid, PushError, Value};
+use crate::runtime::{Manifest, ModelSpec, Tensor};
+
+pub struct PushDist {
+    nel: Nel,
+    model: Arc<ModelSpec>,
+    manifest_dir: std::path::PathBuf,
+    svgd: Vec<crate::runtime::SvgdSpec>,
+}
+
+impl PushDist {
+    /// Wrap `model_name` from the manifest into a PD backed by a fresh NEL.
+    pub fn new(manifest: &Manifest, model_name: &str, cfg: NelConfig) -> Result<PushDist> {
+        let model = Arc::new(manifest.model(model_name)?.clone());
+        let nel = Nel::new(cfg)?;
+        Ok(PushDist {
+            nel,
+            model,
+            manifest_dir: manifest.dir.clone(),
+            svgd: manifest.svgd.clone(),
+        })
+    }
+
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    pub fn nel(&self) -> &Nel {
+        &self.nel
+    }
+
+    pub fn manifest_dir(&self) -> &std::path::Path {
+        &self.manifest_dir
+    }
+
+    /// The SVGD kernel artifact for n particles of this model, if built.
+    pub fn svgd_artifact(&self, n: usize) -> Option<std::path::PathBuf> {
+        let d = self.model.param_count;
+        self.svgd
+            .iter()
+            .find(|s| s.n == n && s.d == d)
+            .map(|s| s.file.clone())
+    }
+
+    /// Create one particle (paper: `p_create`).
+    pub fn p_create(&self, opts: CreateOpts) -> Result<Pid> {
+        self.nel.p_create(self.model.clone(), opts)
+    }
+
+    /// Create `n` particles round-robin across devices with shared handlers.
+    pub fn p_create_n(
+        &self,
+        n: usize,
+        mk_opts: impl Fn(usize) -> CreateOpts,
+    ) -> Result<Vec<Pid>> {
+        (0..n).map(|i| self.p_create(mk_opts(i))).collect()
+    }
+
+    /// Asynchronously trigger `msg` on `pid` (paper: `p_launch`).
+    pub fn p_launch(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+        self.nel.send(None, pid, msg, args)
+    }
+
+    /// Wait on futures (paper: `p_wait`).
+    pub fn p_wait(&self, futs: &[PFuture]) -> Result<Vec<Value>, PushError> {
+        PFuture::wait_all(futs)
+    }
+
+    pub fn particles(&self) -> Vec<Pid> {
+        self.nel.particle_ids()
+    }
+
+    // ---- direct (handler-less) particle operations, used by inference
+    //      drivers and baselines ----
+
+    pub fn step(&self, pid: Pid, x: Tensor, y: Tensor, lr: f32) -> PFuture {
+        self.nel
+            .run_entry(pid, "step", vec![x, y, Tensor::scalar_f32(lr)], Some(1))
+    }
+
+    pub fn adam_step(&self, pid: Pid, x: Tensor, y: Tensor, lr: f32) -> PFuture {
+        self.nel.run_adam(pid, x, y, lr)
+    }
+
+    pub fn forward(&self, pid: Pid, x: Tensor) -> PFuture {
+        self.nel.run_entry(pid, "fwd", vec![x], None)
+    }
+
+    pub fn grad(&self, pid: Pid, x: Tensor, y: Tensor) -> PFuture {
+        self.nel.run_entry(pid, "grad", vec![x, y], None)
+    }
+
+    pub fn get(&self, pid: Pid) -> PFuture {
+        self.nel.get_params(None, pid)
+    }
+
+    pub fn set(&self, pid: Pid, t: Tensor) -> PFuture {
+        self.nel.set_params(pid, t)
+    }
+
+    /// Posterior-mean prediction `f̂(x) = (1/n) Σ_i nn_θi(x)` (paper §3.4).
+    /// Forward passes run concurrently across devices.
+    pub fn mean_forward(&self, pids: &[Pid], x: &Tensor) -> Result<Tensor> {
+        if pids.is_empty() {
+            return Err(anyhow!("mean_forward over zero particles"));
+        }
+        let futs: Vec<PFuture> = pids.iter().map(|p| self.forward(*p, x.clone())).collect();
+        let mut acc: Option<Tensor> = None;
+        for f in futs {
+            let pred = f.wait().map_err(|e| anyhow!("{e}"))?.tensor().map_err(|e| anyhow!("{e}"))?;
+            match &mut acc {
+                None => acc = Some(pred),
+                Some(a) => crate::runtime::tensor::ops::axpy(a, 1.0, &pred),
+            }
+        }
+        let mut a = acc.unwrap();
+        let n = pids.len() as f32;
+        for v in a.as_f32_mut() {
+            *v /= n;
+        }
+        Ok(a)
+    }
+
+    /// Snapshot every particle's parameters (barrier + cache flush).
+    pub fn drain_params(&self) -> Result<BTreeMap<Pid, Tensor>, PushError> {
+        self.nel.drain_params()
+    }
+
+    pub fn stats(&self) -> NelStats {
+        self.nel.stats()
+    }
+}

@@ -1,0 +1,292 @@
+//! `artifacts/manifest.json` — the L2/L3 contract, parsed with util::json.
+//!
+//! The manifest is produced by `python -m compile.aot` and maps every model
+//! to its four entry artifacts (init/fwd/grad/step) plus the SVGD kernel
+//! artifacts, each with full argument/output signatures so the Rust side can
+//! validate shapes before handing tensors to PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .and_then(DType::parse)
+            .ok_or_else(|| anyhow!("spec missing/bad dtype"))?;
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry: an HLO-text file plus its typed signature.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: PathBuf,
+    pub args: Vec<TensorSpec>,
+    pub outs: Vec<TensorSpec>,
+}
+
+impl EntrySpec {
+    fn parse(dir: &Path, j: &Json) -> Result<EntrySpec> {
+        let file = j
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("entry missing file"))?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry missing {key}"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        Ok(EntrySpec {
+            file: dir.join(file),
+            args: specs("args")?,
+            outs: specs("outs")?,
+        })
+    }
+}
+
+/// A model's artifact set + metadata.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub param_count: usize,
+    pub task: String,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: DType,
+    pub arch: String,
+    pub meta: BTreeMap<String, Json>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl ModelSpec {
+    pub fn batch(&self) -> usize {
+        self.x_shape[0]
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no entry {name}", self.name))
+    }
+
+    /// Number of classes for classify tasks (from the fwd output).
+    pub fn n_classes(&self) -> Option<usize> {
+        if self.task != "classify" {
+            return None;
+        }
+        self.entries
+            .get("fwd")
+            .and_then(|e| e.outs.first())
+            .and_then(|o| o.shape.last())
+            .copied()
+    }
+}
+
+/// SVGD kernel artifact, shape-specialized per (n particles, d params).
+#[derive(Debug, Clone)]
+pub struct SvgdSpec {
+    pub n: usize,
+    pub d: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub svgd: Vec<SvgdSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`. `dir` is typically `artifacts/`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let spec = Self::parse_model(&dir, name, mj)
+                .with_context(|| format!("model {name}"))?;
+            models.insert(name.clone(), spec);
+        }
+
+        let mut svgd = Vec::new();
+        for sj in j
+            .get("svgd")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing svgd"))?
+        {
+            let n = sj.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("svgd n"))?;
+            let d = sj.get("d").and_then(Json::as_usize).ok_or_else(|| anyhow!("svgd d"))?;
+            let file = sj
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("svgd file"))?;
+            svgd.push(SvgdSpec { n, d, file: dir.join(file) });
+        }
+        Ok(Manifest { dir, models, svgd })
+    }
+
+    fn parse_model(dir: &Path, name: &str, j: &Json) -> Result<ModelSpec> {
+        let usize_of = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing {key}"))
+        };
+        let dims_of = |key: &str| -> Result<Vec<usize>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {key}")))
+                .collect()
+        };
+        let meta = j
+            .get("meta")
+            .and_then(Json::as_obj)
+            .cloned()
+            .unwrap_or_default();
+        let mut entries = BTreeMap::new();
+        for (ename, ej) in j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing entries"))?
+        {
+            entries.insert(ename.clone(), EntrySpec::parse(dir, ej)?);
+        }
+        for required in ["init", "fwd", "grad", "step"] {
+            if !entries.contains_key(required) {
+                bail!("model {name} missing required entry {required}");
+            }
+        }
+        Ok(ModelSpec {
+            name: name.to_string(),
+            param_count: usize_of("param_count")?,
+            task: j
+                .get("task")
+                .and_then(Json::as_str)
+                .unwrap_or("regress")
+                .to_string(),
+            x_shape: dims_of("x_shape")?,
+            y_shape: dims_of("y_shape")?,
+            y_dtype: j
+                .get("y_dtype")
+                .and_then(Json::as_str)
+                .and_then(DType::parse)
+                .ok_or_else(|| anyhow!("bad y_dtype"))?,
+            arch: meta
+                .get("arch")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            meta,
+            entries,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model {name:?} (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// The SVGD artifact for exactly (n, d), if it was AOT-compiled.
+    pub fn svgd_for(&self, n: usize, d: usize) -> Option<&SvgdSpec> {
+        self.svgd.iter().find(|s| s.n == n && s.d == d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let entry = |f: &str| {
+            format!(
+                r#"{{"file": "{f}", "args": [{{"shape": [4], "dtype": "f32"}}],
+                     "outs": [{{"shape": [], "dtype": "f32"}}]}}"#
+            )
+        };
+        let text = format!(
+            r#"{{"models": {{"m": {{
+                  "param_count": 4, "task": "regress",
+                  "x_shape": [2, 3], "y_shape": [2], "y_dtype": "f32",
+                  "meta": {{"arch": "mlp"}},
+                  "entries": {{"init": {e0}, "fwd": {e1}, "grad": {e2}, "step": {e3}}}
+               }}}},
+               "svgd": [{{"n": 2, "d": 4, "file": "svgd_n2_d4.hlo.txt"}}]}}"#,
+            e0 = entry("m.init.hlo.txt"),
+            e1 = entry("m.fwd.hlo.txt"),
+            e2 = entry("m.grad.hlo.txt"),
+            e3 = entry("m.step.hlo.txt"),
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parse_fake() {
+        let dir = std::env::temp_dir().join(format!("push-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.model("m").unwrap();
+        assert_eq!(spec.param_count, 4);
+        assert_eq!(spec.batch(), 2);
+        assert_eq!(spec.arch, "mlp");
+        assert_eq!(spec.entry("init").unwrap().args[0].shape, vec![4]);
+        assert!(m.svgd_for(2, 4).is_some());
+        assert!(m.svgd_for(3, 4).is_none());
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_entry_rejected() {
+        let dir = std::env::temp_dir().join(format!("push-manifest2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models": {"m": {"param_count": 1, "x_shape": [1], "y_shape": [1],
+                 "y_dtype": "f32", "entries": {}}}, "svgd": []}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,23 @@
+//! Runtime layer: host tensors, the artifact manifest (L2/L3 contract), and
+//! the per-device PJRT client that loads and executes `artifacts/*.hlo.txt`.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{literal_to_tensor, tensor_to_literal, ClientStats, RuntimeClient};
+pub use manifest::{EntrySpec, Manifest, ModelSpec, SvgdSpec, TensorSpec};
+pub use tensor::{DType, Tensor, TensorData};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$PUSH_ARTIFACTS` or `<repo>/artifacts`.
+/// Falls back to walking up from the executable for `cargo run --example`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("PUSH_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // CARGO_MANIFEST_DIR is compiled in for tests/examples built in-repo.
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    repo.join("artifacts")
+}

@@ -1,0 +1,281 @@
+//! Host-side tensor: the only value type that crosses thread boundaries.
+//!
+//! PJRT objects (clients, buffers, literals) are not Send and stay pinned to
+//! their device thread (see device::worker); everything the coordinator
+//! routes between particles is a plain `Tensor` — shape + contiguous host
+//! data. Conversion to/from `xla::Literal` happens inside the device worker.
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            "u32" => Some(DType::U32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U32(_) => DType::U32,
+        }
+    }
+}
+
+/// A dense host tensor. Shape `[]` is a scalar with one element.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: TensorData) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} vs {} elements", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor::new(shape, TensorData::F32(data))
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        Tensor::new(shape, TensorData::I32(data))
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Tensor {
+        Tensor::new(shape, TensorData::U32(data))
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * self.dtype().size_bytes()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    /// Borrow as f32 slice; panics on dtype mismatch (programming error).
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            other => panic!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            other => panic!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            other => panic!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_u32(&self) -> &[u32] {
+        match &self.data {
+            TensorData::U32(v) => v,
+            other => panic!("expected u32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Scalar extraction for loss values.
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.element_count(), 1, "scalar() on shape {:?}", self.shape);
+        self.as_f32()[0]
+    }
+
+    /// Stack 1-D f32 tensors of equal length into an [n, d] tensor —
+    /// the layout the SVGD kernel artifact takes.
+    pub fn stack_rows(rows: &[&Tensor]) -> Tensor {
+        assert!(!rows.is_empty());
+        let d = rows[0].element_count();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            assert_eq!(r.element_count(), d, "ragged stack");
+            data.extend_from_slice(r.as_f32());
+        }
+        Tensor::f32(vec![rows.len(), d], data)
+    }
+
+    /// Split an [n, d] f32 tensor back into n rows of d.
+    pub fn unstack_rows(&self) -> Vec<Tensor> {
+        assert_eq!(self.shape.len(), 2, "unstack on shape {:?}", self.shape);
+        let (n, d) = (self.shape[0], self.shape[1]);
+        let data = self.as_f32();
+        (0..n)
+            .map(|i| Tensor::f32(vec![d], data[i * d..(i + 1) * d].to_vec()))
+            .collect()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor<{}>{:?}", self.dtype().name(), self.shape)?;
+        if self.element_count() <= 8 {
+            match &self.data {
+                TensorData::F32(v) => write!(f, "{v:?}")?,
+                TensorData::I32(v) => write!(f, "{v:?}")?,
+                TensorData::U32(v) => write!(f, "{v:?}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Axpy-style helpers used by the SWAG moment tracker and optimizers.
+pub mod ops {
+    use super::Tensor;
+
+    /// y += alpha * x (elementwise, f32).
+    pub fn axpy(y: &mut Tensor, alpha: f32, x: &Tensor) {
+        let xs = x.as_f32();
+        let ys = y.as_f32_mut();
+        assert_eq!(xs.len(), ys.len());
+        for (yi, xi) in ys.iter_mut().zip(xs) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// y = a*y + b*x.
+    pub fn scale_add(y: &mut Tensor, a: f32, b: f32, x: &Tensor) {
+        let xs = x.as_f32();
+        let ys = y.as_f32_mut();
+        assert_eq!(xs.len(), ys.len());
+        for (yi, xi) in ys.iter_mut().zip(xs) {
+            *yi = a * *yi + b * xi;
+        }
+    }
+
+    /// Elementwise square accumulate: y = a*y + b*x^2.
+    pub fn scale_add_sq(y: &mut Tensor, a: f32, b: f32, x: &Tensor) {
+        let xs = x.as_f32();
+        let ys = y.as_f32_mut();
+        assert_eq!(xs.len(), ys.len());
+        for (yi, xi) in ys.iter_mut().zip(xs) {
+            *yi = a * *yi + b * xi * xi;
+        }
+    }
+
+    pub fn l2_norm(x: &Tensor) -> f32 {
+        x.as_f32().iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn mean(x: &Tensor) -> f32 {
+        let v = x.as_f32();
+        v.iter().sum::<f32>() / v.len().max(1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(Tensor::scalar_f32(2.5).scalar(), 2.5);
+    }
+
+    #[test]
+    fn stack_unstack() {
+        let a = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(vec![3], vec![4.0, 5.0, 6.0]);
+        let s = Tensor::stack_rows(&[&a, &b]);
+        assert_eq!(s.shape, vec![2, 3]);
+        let rows = s.unstack_rows();
+        assert_eq!(rows[0], a);
+        assert_eq!(rows[1], b);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        let x = Tensor::f32(vec![2], vec![10.0, 20.0]);
+        ops::axpy(&mut y, 0.5, &x);
+        assert_eq!(y.as_f32(), &[6.0, 12.0]);
+    }
+
+    #[test]
+    fn scale_add_sq_works() {
+        let mut y = Tensor::f32(vec![2], vec![1.0, 1.0]);
+        let x = Tensor::f32(vec![2], vec![2.0, 3.0]);
+        ops::scale_add_sq(&mut y, 0.5, 0.5, &x);
+        assert_eq!(y.as_f32(), &[2.5, 5.0]);
+    }
+}

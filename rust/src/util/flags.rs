@@ -1,0 +1,155 @@
+//! CLI flag parsing for the `push` launcher and the bench binaries.
+//!
+//! Supports `--key value`, `--key=value`, bare `--switch` booleans, and
+//! positional arguments, with typed getters and an auto-generated usage
+//! string. No clap in the vendored crate set.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Flags {
+    pub positional: Vec<String>,
+    named: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Flags {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Flags, String> {
+        let mut f = Flags::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates flag parsing
+                    f.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    f.named.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    f.named.insert(rest.to_string(), v);
+                } else {
+                    f.switches.push(rest.to_string());
+                }
+            } else {
+                f.positional.push(a);
+            }
+        }
+        Ok(f)
+    }
+
+    pub fn from_env() -> Result<Flags, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.named.contains_key(switch)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.named
+            .get(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        Ok(self.usize(key)?.unwrap_or(default))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.named
+            .get(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key} expects a number, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        Ok(self.f64(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated usize list, e.g. `--particles 1,2,4,8`.
+    pub fn usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.named.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{key} expects ints, got {p:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    /// Unrecognized-key guard for strict CLIs.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.named.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k} (known: {})", known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Flags {
+        Flags::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn named_and_positional() {
+        let f = parse("bench fig4 --devices 4 --particles=1,2,4 --verbose");
+        assert_eq!(f.positional, vec!["bench", "fig4"]);
+        assert_eq!(f.usize_or("devices", 1).unwrap(), 4);
+        assert_eq!(f.usize_list("particles").unwrap().unwrap(), vec![1, 2, 4]);
+        assert!(f.has("verbose"));
+        assert!(!f.has("quiet"));
+    }
+
+    #[test]
+    fn eq_form_and_defaults() {
+        let f = parse("--lr=0.01");
+        assert!((f.f64_or("lr", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        assert_eq!(f.usize_or("epochs", 10).unwrap(), 10);
+    }
+
+    #[test]
+    fn bad_int_reports_key() {
+        let f = parse("--devices four");
+        let err = f.usize("devices").unwrap_err();
+        assert!(err.contains("devices"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let f = parse("a -- --not-a-flag");
+        assert_eq!(f.positional, vec!["a", "--not-a-flag"]);
+    }
+
+    #[test]
+    fn check_known_rejects() {
+        let f = parse("--oops 1");
+        assert!(f.check_known(&["devices"]).is_err());
+        assert!(f.check_known(&["oops"]).is_ok());
+    }
+}

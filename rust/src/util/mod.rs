@@ -1,0 +1,10 @@
+//! In-repo substrates the offline build cannot pull from crates.io:
+//! a JSON parser/printer (manifest + bench reports), a splittable RNG
+//! (deterministic synthetic data), descriptive statistics, CLI flag
+//! parsing, and a tiny leveled logger.
+
+pub mod flags;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

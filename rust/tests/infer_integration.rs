@@ -1,0 +1,259 @@
+//! Integration: the BDL algorithms (ensemble / multi-SWAG / SVGD) over real
+//! artifacts, plus Push-vs-baseline consistency (paper §5.1's comparison).
+
+use push::baselines::Baseline;
+use push::bench::{data_for, Method};
+use push::data::{synth, DataLoader};
+use push::device::CostModel;
+use push::infer::{
+    svgd_update_native, DeepEnsemble, Infer, MultiSwag, Svgd, SvgdConfig, SwagConfig,
+};
+use push::runtime::{artifacts_dir, Manifest, Tensor};
+use push::util::rng::Rng;
+use push::{NelConfig, PushDist};
+
+fn manifest() -> Manifest {
+    Manifest::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn cfg(devices: usize) -> NelConfig {
+    NelConfig {
+        num_devices: devices,
+        cache_size: 8,
+        cost: CostModel::free(),
+        seed: 3,
+        ..NelConfig::default()
+    }
+}
+
+fn mlp_loader(m: &Manifest, batches: usize, seed: u64) -> DataLoader {
+    let model = m.model("mlp_small").unwrap();
+    let data = synth::linear(model.batch() * batches, model.x_shape[1], 0.05, seed);
+    DataLoader::new(data, model.batch(), true, seed).with_max_batches(batches)
+}
+
+#[test]
+fn ensemble_trains_and_learns() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_small", cfg(2)).unwrap();
+    let mut algo = DeepEnsemble::new(pd, 4, 5e-3).unwrap();
+    let mut loader = mlp_loader(&m, 6, 1);
+    let report = algo.train(&mut loader, 8).unwrap();
+    assert_eq!(report.epochs.len(), 8);
+    let first = report.epochs[0].mean_loss;
+    let last = report.final_loss();
+    assert!(last < 0.5 * first, "ensemble failed to learn: {first} -> {last}");
+    // posterior-mean prediction has the right shape
+    let b = loader.epoch()[0].clone();
+    let pred = algo.predict_mean(&b.x).unwrap();
+    assert_eq!(pred.element_count(), b.y.element_count());
+}
+
+#[test]
+fn multiswag_moments_track_trajectory() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_small", cfg(2)).unwrap();
+    let mut algo = MultiSwag::new(
+        pd,
+        SwagConfig {
+            particles: 3,
+            lr: 5e-3,
+            pretrain_epochs: 2,
+            n_samples: 4,
+            scale: 1e-3,
+            adam: false,
+            seed: 5,
+        },
+    )
+    .unwrap();
+    let mut loader = mlp_loader(&m, 4, 2);
+    let report = algo.train(&mut loader, 6).unwrap();
+    assert!(report.final_loss() < report.epochs[0].mean_loss);
+    // regress task: SWAG prediction averages posterior draws
+    let b = loader.epoch()[0].clone();
+    let pred = algo.predict_swag(&b.x).unwrap();
+    assert_eq!(pred.element_count(), b.y.element_count());
+    assert!(pred.as_f32().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn svgd_artifact_and_native_agree_end_to_end() {
+    // Two SVGD runs — Pallas artifact kernel vs native fallback — must
+    // produce (nearly) identical parameters given identical seeds.
+    let m = manifest();
+    let run = |force_native: bool| -> Vec<Tensor> {
+        let pd = PushDist::new(&m, "mlp_small", cfg(2)).unwrap();
+        let mut algo = Svgd::new(
+            pd,
+            SvgdConfig {
+                particles: 4,
+                lr: 1e-3,
+                lengthscale: 10.0,
+                median_heuristic: false,
+                prior_std: None,
+                force_native,
+            },
+        )
+        .unwrap();
+        let mut loader = mlp_loader(&m, 3, 7);
+        algo.train(&mut loader, 2).unwrap();
+        let snap = algo.pd().drain_params().unwrap();
+        snap.into_values().collect()
+    };
+    let with_artifact = run(false);
+    let native = run(true);
+    assert_eq!(with_artifact.len(), native.len());
+    for (a, b) in with_artifact.iter().zip(&native) {
+        let (av, bv) = (a.as_f32(), b.as_f32());
+        let max_diff = av
+            .iter()
+            .zip(bv)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-4, "kernel vs native diverged: {max_diff}");
+    }
+}
+
+#[test]
+fn svgd_learns_regression() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_small", cfg(2)).unwrap();
+    let mut algo = Svgd::new(
+        pd,
+        SvgdConfig { particles: 4, lr: 5e-3, lengthscale: 10.0, ..SvgdConfig::default() },
+    )
+    .unwrap();
+    let mut loader = mlp_loader(&m, 5, 9);
+    let report = algo.train(&mut loader, 8).unwrap();
+    assert!(
+        report.final_loss() < 0.6 * report.epochs[0].mean_loss,
+        "svgd failed to learn: {} -> {}",
+        report.epochs[0].mean_loss,
+        report.final_loss()
+    );
+}
+
+#[test]
+fn svgd_single_particle_degenerates_to_sgd() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_small", cfg(1)).unwrap();
+    let mut algo =
+        Svgd::new(pd, SvgdConfig { particles: 1, lr: 5e-3, ..SvgdConfig::default() }).unwrap();
+    let mut loader = mlp_loader(&m, 3, 11);
+    let report = algo.train(&mut loader, 4).unwrap();
+    assert!(report.final_loss() < report.epochs[0].mean_loss);
+}
+
+#[test]
+fn push_matches_baseline_trajectories_ensemble() {
+    // Same seeds => identical per-member parameter trajectories between
+    // Push (1 device) and the handwritten sequential baseline.
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_small", cfg(1)).unwrap();
+    let mut push_algo = DeepEnsemble::new(pd, 3, 1e-2).unwrap();
+    let mut loader = mlp_loader(&m, 3, 21);
+    push_algo.train(&mut loader, 2).unwrap();
+    let push_params = push_algo.pd().drain_params().unwrap();
+
+    let mut base = Baseline::new(&m, "mlp_small", 3, 3).unwrap();
+    let mut loader = mlp_loader(&m, 3, 21);
+    base.train_ensemble(&mut loader, 2, 1e-2).unwrap();
+
+    for (i, (_, pp)) in push_params.iter().enumerate() {
+        let bp = &base.params[i];
+        let max_diff = pp
+            .as_f32()
+            .iter()
+            .zip(bp.as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "member {i} diverged from baseline: {max_diff}");
+    }
+}
+
+#[test]
+fn baseline_svgd_agrees_with_push_svgd() {
+    let m = manifest();
+    // Push SVGD with native kernel (same math path as baseline)
+    let pd = PushDist::new(&m, "mlp_small", cfg(1)).unwrap();
+    let mut algo = Svgd::new(
+        pd,
+        SvgdConfig {
+            particles: 3,
+            lr: 1e-3,
+            lengthscale: 10.0,
+            median_heuristic: false,
+            prior_std: None,
+            force_native: true,
+        },
+    )
+    .unwrap();
+    let mut loader = mlp_loader(&m, 2, 31);
+    algo.train(&mut loader, 1).unwrap();
+    let push_params: Vec<Tensor> = algo.pd().drain_params().unwrap().into_values().collect();
+
+    let mut base = Baseline::new(&m, "mlp_small", 3, 3).unwrap();
+    let mut loader = mlp_loader(&m, 2, 31);
+    base.train_svgd(&mut loader, 1, 1e-3, 10.0).unwrap();
+
+    for (pp, bp) in push_params.iter().zip(&base.params) {
+        let max_diff = pp
+            .as_f32()
+            .iter()
+            .zip(bp.as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "push vs baseline svgd diverged: {max_diff}");
+    }
+}
+
+#[test]
+fn native_svgd_matches_pallas_artifact_directly() {
+    // Direct kernel-level consistency: random stacked inputs through the
+    // AOT artifact vs the native Rust implementation.
+    let m = manifest();
+    let d = m.model("mlp_small").unwrap().param_count;
+    let spec = m.svgd_for(4, d).expect("svgd artifact n=4 for mlp_small");
+    let mut rng = Rng::new(17);
+    let rows: Vec<Tensor> = (0..4).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+    let grows: Vec<Tensor> = (0..4).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+    let h = 25.0f32;
+
+    let native = svgd_update_native(&rows, &grows, h).unwrap();
+
+    let mut client = push::runtime::RuntimeClient::cpu().unwrap();
+    let refs: Vec<&Tensor> = rows.iter().collect();
+    let grefs: Vec<&Tensor> = grows.iter().collect();
+    let outs = client
+        .execute(
+            &spec.file,
+            &[
+                Tensor::stack_rows(&refs),
+                Tensor::stack_rows(&grefs),
+                Tensor::scalar_f32(h),
+            ],
+        )
+        .unwrap();
+    let kernel_rows = outs[0].unstack_rows();
+    for (a, b) in native.iter().zip(&kernel_rows) {
+        let max_diff = a
+            .as_f32()
+            .iter()
+            .zip(b.as_f32())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "native vs pallas kernel: {max_diff}");
+    }
+}
+
+#[test]
+fn data_for_covers_all_archs() {
+    let m = manifest();
+    for name in ["vit_fig4", "cgcnn_fig4", "unet_fig4", "resnet_fig7", "schnet_fig7", "mlp_small"]
+    {
+        let model = m.model(name).unwrap();
+        let ds = data_for(model, model.batch() * 2, 1).unwrap();
+        assert_eq!(ds.n, model.batch() * 2, "{name}");
+        let _ = Method::all();
+    }
+}

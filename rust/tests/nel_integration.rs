@@ -1,0 +1,286 @@
+//! Integration: NEL + PJRT runtime over real AOT artifacts (mlp_tiny).
+//!
+//! Requires `make artifacts`. These tests exercise the full paper
+//! machinery: particle creation (init artifact), message passing with
+//! handlers, device compute (step/fwd/grad artifacts), parameter views,
+//! cache pressure, and failure injection.
+
+use std::sync::Arc;
+
+use push::device::CostModel;
+use push::nel::CreateOpts;
+use push::particle::{handler, PFuture, Value};
+use push::runtime::{artifacts_dir, Manifest, Tensor};
+use push::util::rng::Rng;
+use push::{NelConfig, PushDist};
+
+fn manifest() -> Manifest {
+    Manifest::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn cfg(devices: usize, cache: usize) -> NelConfig {
+    NelConfig {
+        num_devices: devices,
+        cache_size: cache,
+        cost: CostModel::free(),
+        seed: 7,
+        ..NelConfig::default()
+    }
+}
+
+fn batch(md: &push::runtime::ModelSpec, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let xn: usize = md.x_shape.iter().product();
+    let x = Tensor::f32(md.x_shape.clone(), rng.normal_vec(xn));
+    let yn: usize = md.y_shape.iter().product();
+    let y = Tensor::f32(md.y_shape.clone(), rng.normal_vec(yn));
+    (x, y)
+}
+
+#[test]
+fn particles_init_deterministically_per_pid() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 4)).unwrap();
+    let a = pd.p_create(CreateOpts::default()).unwrap();
+    let b = pd.p_create(CreateOpts::default()).unwrap();
+    let pa = pd.get(a).wait().unwrap().tensor().unwrap();
+    let pb = pd.get(b).wait().unwrap().tensor().unwrap();
+    assert_eq!(pa.element_count(), pd.model().param_count);
+    assert_ne!(pa, pb, "different pids must get different init draws");
+
+    // Same seed + same pid ordering in a fresh PD reproduces parameters.
+    let pd2 = PushDist::new(&m, "mlp_tiny", cfg(1, 4)).unwrap();
+    let a2 = pd2.p_create(CreateOpts::default()).unwrap();
+    let pa2 = pd2.get(a2).wait().unwrap().tensor().unwrap();
+    assert_eq!(pa, pa2);
+}
+
+#[test]
+fn step_decreases_loss_and_matches_grad() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
+    let p = pd.p_create(CreateOpts::default()).unwrap();
+    let (x, y) = batch(pd.model(), 1);
+
+    let before = pd.get(p).wait().unwrap().tensor().unwrap();
+    let gl = pd.grad(p, x.clone(), y.clone()).wait().unwrap().list().unwrap();
+    let loss_g = gl[0].as_tensor().unwrap().scalar();
+    let grad = gl[1].as_tensor().unwrap().clone();
+
+    let loss_s = pd
+        .step(p, x.clone(), y.clone(), 0.01)
+        .wait()
+        .unwrap()
+        .tensor()
+        .unwrap()
+        .scalar();
+    assert!((loss_g - loss_s).abs() < 1e-5, "{loss_g} vs {loss_s}");
+
+    // step == params - lr * grad
+    let after = pd.get(p).wait().unwrap().tensor().unwrap();
+    for i in 0..after.element_count() {
+        let want = before.as_f32()[i] - 0.01 * grad.as_f32()[i];
+        assert!((after.as_f32()[i] - want).abs() < 1e-5);
+    }
+
+    // and a couple hundred steps actually learn
+    let mut last = f32::MAX;
+    for _ in 0..200 {
+        last = pd
+            .step(p, x.clone(), y.clone(), 0.02)
+            .wait()
+            .unwrap()
+            .tensor()
+            .unwrap()
+            .scalar();
+    }
+    assert!(last < 0.5 * loss_s, "loss {loss_s} -> {last}");
+}
+
+#[test]
+fn all_to_all_gather_via_handlers() {
+    // The paper's Figure 1 `_gather` pattern, verbatim in Rust.
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 4)).unwrap();
+    let gather = handler(|ctx, _args| {
+        let others = ctx.other_particles();
+        let futs: Vec<PFuture> = others.iter().map(|p| ctx.get(*p)).collect();
+        let views = PFuture::wait_all(&futs)?;
+        let mut total = 0usize;
+        for v in &views {
+            total += v.as_tensor()?.element_count();
+        }
+        Ok(Value::Usize(total))
+    });
+    let mk = |_i: usize| CreateOpts {
+        receive: [("GATHER".to_string(), gather.clone())].into_iter().collect(),
+        ..CreateOpts::default()
+    };
+    let pids = pd.p_create_n(4, mk).unwrap();
+    let fut = pd.p_launch(pids[0], "GATHER", vec![]);
+    let total = fut.wait().unwrap().usize().unwrap();
+    assert_eq!(total, 3 * pd.model().param_count);
+    let stats = pd.stats();
+    assert!(stats.msgs_sent >= 1);
+}
+
+#[test]
+fn cache_pressure_swaps_and_preserves_params() {
+    let m = manifest();
+    // 6 particles on 1 device with 2 active-set slots: heavy swapping.
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
+    let pids = pd.p_create_n(6, |_| CreateOpts::default()).unwrap();
+    let (x, y) = batch(pd.model(), 3);
+    let snapshot: Vec<Tensor> = pids
+        .iter()
+        .map(|p| pd.get(*p).wait().unwrap().tensor().unwrap())
+        .collect();
+    // interleave steps across all particles twice
+    for _ in 0..2 {
+        let futs: Vec<PFuture> = pids
+            .iter()
+            .map(|p| pd.step(*p, x.clone(), y.clone(), 0.01))
+            .collect();
+        PFuture::wait_all(&futs).unwrap();
+    }
+    let stats = pd.stats();
+    let dev = &stats.devices[0];
+    assert!(dev.swaps_out > 0, "must have evicted under pressure");
+    // params all updated & distinct from their snapshots
+    for (p, before) in pids.iter().zip(&snapshot) {
+        let after = pd.get(*p).wait().unwrap().tensor().unwrap();
+        assert_ne!(&after, before);
+    }
+}
+
+#[test]
+fn drain_params_returns_everything() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 2)).unwrap();
+    let pids = pd.p_create_n(5, |_| CreateOpts::default()).unwrap();
+    let snap = pd.drain_params().unwrap();
+    assert_eq!(snap.len(), 5);
+    for p in pids {
+        assert_eq!(snap[&p].element_count(), pd.model().param_count);
+    }
+}
+
+#[test]
+fn unknown_message_and_handler_panic_surface_as_errors() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
+    let boom = handler(|_ctx, _args| panic!("injected failure"));
+    let p = pd
+        .p_create(CreateOpts {
+            receive: [("BOOM".to_string(), boom)].into_iter().collect(),
+            ..CreateOpts::default()
+        })
+        .unwrap();
+
+    let err = pd.p_launch(p, "NOPE", vec![]).wait().unwrap_err();
+    assert!(err.msg.contains("no handler"), "{err}");
+
+    let err = pd.p_launch(p, "BOOM", vec![]).wait().unwrap_err();
+    assert!(err.msg.contains("injected failure"), "{err}");
+    assert_eq!(pd.stats().handler_errors, 2);
+
+    // the particle survives failures and keeps processing messages
+    let ok = pd.get(p).wait();
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn mean_forward_averages_particles() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 4)).unwrap();
+    let pids = pd.p_create_n(3, |_| CreateOpts::default()).unwrap();
+    let (x, _) = batch(pd.model(), 5);
+    let mean = pd.mean_forward(&pids, &x).unwrap();
+    // manual average
+    let preds: Vec<Tensor> = pids
+        .iter()
+        .map(|p| pd.forward(*p, x.clone()).wait().unwrap().tensor().unwrap())
+        .collect();
+    for i in 0..mean.element_count() {
+        let want = preds.iter().map(|t| t.as_f32()[i]).sum::<f32>() / 3.0;
+        assert!((mean.as_f32()[i] - want).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn svgd_artifact_runs_and_matches_contract() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_small", cfg(1, 4)).unwrap();
+    let d = pd.model().param_count;
+    let path = pd.svgd_artifact(2).expect("svgd artifact for mlp_small n=2");
+    let mut rng = Rng::new(9);
+    let p = Tensor::f32(vec![2, d], rng.normal_vec(2 * d));
+    let g = Tensor::f32(vec![2, d], rng.normal_vec(2 * d));
+    let h = Tensor::scalar_f32(1.0);
+    let out = pd
+        .nel()
+        .run_artifact(0, path, vec![p.clone(), g.clone(), h])
+        .wait()
+        .unwrap()
+        .tensor()
+        .unwrap();
+    assert_eq!(out.shape, vec![2, d]);
+    // far-apart particles (random init in high-d): K ~ I, U ~ g / n
+    for i in 0..out.element_count() {
+        let want = g.as_f32()[i] / 2.0;
+        assert!(
+            (out.as_f32()[i] - want).abs() < 2e-2 + 0.05 * want.abs(),
+            "U[{i}] = {} vs g/n = {want}",
+            out.as_f32()[i]
+        );
+    }
+}
+
+#[test]
+fn trace_records_figure3b_events() {
+    let m = manifest();
+    let mut c = cfg(1, 2);
+    c.trace = true;
+    let pd = PushDist::new(&m, "mlp_tiny", c).unwrap();
+    let noop = handler(|_ctx, _| Ok(Value::Unit));
+    let p = pd
+        .p_create(CreateOpts {
+            receive: [("PING".to_string(), noop)].into_iter().collect(),
+            ..CreateOpts::default()
+        })
+        .unwrap();
+    pd.p_launch(p, "PING", vec![]).wait().unwrap();
+    pd.get(p).wait().unwrap();
+    let text = pd.nel().trace().to_text();
+    for needle in ["create", "msg_send", "handler_start", "handler_end", "job_start", "swap_in"] {
+        assert!(text.contains(needle), "trace missing {needle}:\n{text}");
+    }
+}
+
+#[test]
+fn cross_device_view_charges_transfer() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 4)).unwrap();
+    // particle 0 -> device 0, particle 1 -> device 1 (round robin)
+    let pids = pd.p_create_n(2, |_| CreateOpts::default()).unwrap();
+    let view = handler(|ctx, args| {
+        let target = push::Pid(args[0].usize()? as u32);
+        ctx.get(target).wait()
+    });
+    let pd2 = pd; // readability
+    let p = pd2
+        .p_create(CreateOpts {
+            device: Some(0),
+            receive: [("VIEW".to_string(), view)].into_iter().collect(),
+            ..CreateOpts::default()
+        })
+        .unwrap();
+    // view particle 1 (device 1) from particle p (device 0): cross-device
+    pd2.p_launch(p, "VIEW", vec![Value::Usize(pids[1].0 as usize)])
+        .wait()
+        .unwrap();
+    let stats = pd2.stats();
+    let d1 = &stats.devices[1];
+    assert!(d1.transfers >= 1, "expected a cross-device transfer: {d1:?}");
+    assert!(d1.transfer_bytes as usize >= pd2.model().param_count * 4);
+}

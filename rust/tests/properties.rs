@@ -1,0 +1,257 @@
+//! Property-based tests over randomized inputs (in-repo generator — the
+//! vendored crate set has no proptest). Each property runs against many
+//! seeded cases; failures print the seed for reproduction.
+//!
+//! Covered invariants:
+//! * JSON printer/parser round-trip on random documents
+//! * Flags parser never panics and preserves positional order
+//! * ResidentCache: slot/byte budgets, single-authority, no data loss
+//! * svgd_update_native: permutation equivariance, large-h limit
+//! * SWAG streaming moments match batch recomputation
+//! * DataLoader epochs cover each sample at most once
+
+use std::collections::BTreeMap;
+
+use push::device::{CostModel, HostStore, ResidentCache};
+use push::device::stats::DeviceStats;
+use push::infer::svgd_update_native;
+use push::nel::trace::Trace;
+use push::runtime::tensor::ops;
+use push::runtime::Tensor;
+use push::util::json::Json;
+use push::util::rng::Rng;
+use push::Pid;
+
+const CASES: u64 = 60;
+
+// ---------------------------------------------------------------- json
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => {
+            // pretty() prints integers exactly; fractional values go
+            // through f64 formatting which round-trips via parse.
+            let v = (rng.normal() * 1e6) as i64 as f64;
+            Json::Num(if rng.below(2) == 0 { v } else { v / 64.0 })
+        }
+        3 => {
+            let n = rng.below(8);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = BTreeMap::new();
+            for i in 0..rng.below(4) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let doc = random_json(&mut rng, 3);
+        let text = doc.pretty();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(doc, back, "seed {seed}");
+    }
+}
+
+// --------------------------------------------------------------- flags
+#[test]
+fn prop_flags_never_panic_and_keep_positional_order() {
+    let vocab = ["--a", "--b=1", "x", "y", "--", "--c", "7", "-z", "--d=--e"];
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xf1a6);
+        let n = rng.below(10);
+        let args: Vec<String> =
+            (0..n).map(|_| vocab[rng.below(vocab.len())].to_string()).collect();
+        let f = push::util::flags::Flags::parse(args.clone()).unwrap();
+        // positional tokens (ignoring flags and values they consume)
+        // must appear in f.positional in their original relative order
+        let mut pos_iter = f.positional.iter();
+        let mut last_found: Option<&String> = None;
+        for p in &f.positional {
+            assert!(pos_iter.any(|q| q == p), "seed {seed}: {args:?}");
+            last_found = Some(p);
+        }
+        let _ = last_found;
+    }
+}
+
+// --------------------------------------------------------------- cache
+#[test]
+fn prop_cache_budgets_and_no_data_loss() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xcac4e);
+        let capacity = 1 + rng.below(4);
+        let n_particles = 1 + rng.below(10);
+        let elems = 1 + rng.below(16);
+        let budget = (capacity * elems * 4).max(elems * 4);
+        let mut cache = ResidentCache::new(capacity, budget, CostModel::free());
+        let host = HostStore::default();
+        let trace = Trace::disabled();
+        let mut stats = DeviceStats::default();
+
+        // every particle's canonical value: pid-tagged, mutated over time
+        let mut expected: Vec<f32> = (0..n_particles).map(|i| i as f32).collect();
+        for i in 0..n_particles {
+            host.insert(Pid(i as u32), Tensor::f32(vec![elems], vec![expected[i]; elems]));
+        }
+
+        for _op in 0..200 {
+            let i = rng.below(n_particles);
+            let pid = Pid(i as u32);
+            match rng.below(3) {
+                0 => {
+                    let t = cache
+                        .ensure_resident(pid, &host, &mut stats, &trace, 0)
+                        .unwrap();
+                    assert_eq!(t.as_f32()[0], expected[i], "seed {seed}: stale read");
+                }
+                1 => {
+                    expected[i] += 1.0;
+                    let t = cache
+                        .ensure_resident(pid, &host, &mut stats, &trace, 0)
+                        .unwrap();
+                    for v in t.as_f32_mut() {
+                        *v = expected[i];
+                    }
+                }
+                _ => {
+                    cache.flush(pid, &host);
+                }
+            }
+            // invariants
+            assert!(cache.resident_count() <= capacity, "seed {seed}: slots");
+            assert!(cache.resident_bytes() <= budget, "seed {seed}: bytes");
+            // single authority: each particle resident XOR in host store
+            for j in 0..n_particles {
+                let p = Pid(j as u32);
+                assert!(
+                    cache.is_resident(p) ^ host.contains(p),
+                    "seed {seed}: dual authority for {p}"
+                );
+            }
+        }
+        // drain and verify nothing was lost
+        cache.flush_all(&host);
+        for j in 0..n_particles {
+            let t = host.get_clone(Pid(j as u32)).unwrap();
+            assert_eq!(t.as_f32()[0], expected[j], "seed {seed}: lost write");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- svgd
+#[test]
+fn prop_svgd_permutation_equivariance() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(seed ^ 0x57d);
+        let n = 2 + rng.below(5);
+        let d = 1 + rng.below(32);
+        let p: Vec<Tensor> = (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+        let g: Vec<Tensor> = (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+        let h = rng.uniform_in(0.5, 4.0);
+        let u = svgd_update_native(&p, &g, h).unwrap();
+
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let pp: Vec<Tensor> = perm.iter().map(|&i| p[i].clone()).collect();
+        let gp: Vec<Tensor> = perm.iter().map(|&i| g[i].clone()).collect();
+        let up = svgd_update_native(&pp, &gp, h).unwrap();
+        for (k, &i) in perm.iter().enumerate() {
+            for (a, b) in up[k].as_f32().iter().zip(u[i].as_f32()) {
+                assert!((a - b).abs() < 1e-4, "seed {seed}: not equivariant");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_svgd_large_h_limit_is_mean_gradient() {
+    // h -> inf: k_ij -> 1 and the repulsion vanishes, so U_i -> mean_j g_j.
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(seed ^ 0x1a26e);
+        let n = 2 + rng.below(4);
+        let d = 1 + rng.below(16);
+        let p: Vec<Tensor> = (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+        let g: Vec<Tensor> = (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+        let u = svgd_update_native(&p, &g, 1e6).unwrap();
+        for i in 0..n {
+            for t in 0..d {
+                let mean_g: f32 = g.iter().map(|gj| gj.as_f32()[t]).sum::<f32>() / n as f32;
+                assert!(
+                    (u[i].as_f32()[t] - mean_g).abs() < 1e-3,
+                    "seed {seed}: U[{i}][{t}] != mean gradient"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- swag
+#[test]
+fn prop_streaming_moments_match_batch() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5a46);
+        let d = 1 + rng.below(24);
+        let steps = 1 + rng.below(30);
+        let mut mean = Tensor::zeros(vec![d]);
+        let mut sq = Tensor::zeros(vec![d]);
+        let mut history: Vec<Vec<f32>> = Vec::new();
+        for n in 0..steps {
+            let x = Tensor::f32(vec![d], rng.normal_vec(d));
+            let w_old = n as f32 / (n as f32 + 1.0);
+            let w_new = 1.0 / (n as f32 + 1.0);
+            ops::scale_add(&mut mean, w_old, w_new, &x);
+            ops::scale_add_sq(&mut sq, w_old, w_new, &x);
+            history.push(x.as_f32().to_vec());
+        }
+        for t in 0..d {
+            let batch_mean: f32 =
+                history.iter().map(|h| h[t]).sum::<f32>() / steps as f32;
+            let batch_sq: f32 =
+                history.iter().map(|h| h[t] * h[t]).sum::<f32>() / steps as f32;
+            assert!((mean.as_f32()[t] - batch_mean).abs() < 1e-4, "seed {seed}");
+            assert!((sq.as_f32()[t] - batch_sq).abs() < 1e-4, "seed {seed}");
+        }
+    }
+}
+
+// -------------------------------------------------------------- loader
+#[test]
+fn prop_loader_no_repeats_within_epoch() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x10ade5);
+        let n = 4 + rng.below(60);
+        let bsz = 1 + rng.below(n.min(12));
+        let mut d = push::data::Dataset::new_f32(vec![1], vec![1]);
+        for i in 0..n {
+            d.push_f32(&[i as f32], &[0.0]);
+        }
+        let mut loader = push::data::DataLoader::new(d, bsz, true, seed);
+        for _epoch in 0..3 {
+            let batches = loader.epoch();
+            assert_eq!(batches.len(), n / bsz, "seed {seed}");
+            let mut seen: Vec<i64> = batches
+                .iter()
+                .flat_map(|b| b.x.as_f32().iter().map(|v| *v as i64).collect::<Vec<_>>())
+                .collect();
+            let len_before = seen.len();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), len_before, "seed {seed}: repeated sample");
+        }
+    }
+}

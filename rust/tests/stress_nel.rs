@@ -1,0 +1,212 @@
+//! Concurrency stress tests: message storms, deep cache pressure, and
+//! deadlock containment over real artifacts. These are the failure modes
+//! the paper's NEL design (§4.2) must survive.
+
+use std::time::Duration;
+
+use push::device::CostModel;
+use push::nel::CreateOpts;
+use push::particle::{handler, PFuture, Value};
+use push::runtime::{artifacts_dir, Manifest, Tensor};
+use push::util::rng::Rng;
+use push::{NelConfig, PushDist};
+
+fn manifest() -> Manifest {
+    Manifest::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn cfg(devices: usize, cache: usize) -> NelConfig {
+    NelConfig {
+        num_devices: devices,
+        cache_size: cache,
+        cost: CostModel::free(),
+        seed: 1,
+        ..NelConfig::default()
+    }
+}
+
+#[test]
+fn many_particles_tiny_cache_message_storm() {
+    // 24 particles on 2 devices with 2 cache slots each; fire interleaved
+    // STEP and GET messages from the driver and random cross-particle GETs
+    // from handlers. Everything must resolve; parameters stay intact.
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 2)).unwrap();
+    let peek = handler(|ctx, args| {
+        // read a random other particle's params (cross-particle traffic)
+        let target = push::Pid(args[0].usize()? as u32);
+        let t = ctx.get(target).wait()?.tensor()?;
+        Ok(Value::Usize(t.element_count()))
+    });
+    let step = handler(|ctx, args| {
+        let x = args[0].as_tensor()?.clone();
+        let y = args[1].as_tensor()?.clone();
+        ctx.step(x, y, 0.01).wait()
+    });
+    let n = 24usize;
+    let pids = pd
+        .p_create_n(n, |_| CreateOpts {
+            receive: [
+                ("PEEK".to_string(), peek.clone()),
+                ("STEP".to_string(), step.clone()),
+            ]
+            .into_iter()
+            .collect(),
+            ..CreateOpts::default()
+        })
+        .unwrap();
+
+    let model = pd.model().clone();
+    let mut rng = Rng::new(7);
+    let xn: usize = model.x_shape.iter().product();
+    let yn: usize = model.y_shape.iter().product();
+    let x = Tensor::f32(model.x_shape.clone(), rng.normal_vec(xn));
+    let y = Tensor::f32(model.y_shape.clone(), rng.normal_vec(yn));
+
+    let mut futs: Vec<PFuture> = Vec::new();
+    for round in 0..6 {
+        for (i, p) in pids.iter().enumerate() {
+            if (i + round) % 3 == 0 {
+                let target = pids[rng.below(n)];
+                futs.push(pd.p_launch(*p, "PEEK", vec![Value::Usize(target.0 as usize)]));
+            } else {
+                futs.push(pd.p_launch(
+                    *p,
+                    "STEP",
+                    vec![Value::Tensor(x.clone()), Value::Tensor(y.clone()), Value::F32(0.01)],
+                ));
+            }
+        }
+    }
+    for (i, f) in futs.iter().enumerate() {
+        let r = f
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|| panic!("future {i} did not resolve (deadlock?)"));
+        r.unwrap();
+    }
+    let stats = pd.stats();
+    let d0 = &stats.devices[0];
+    assert!(d0.swaps_out > 0, "expected heavy cache churn");
+    // all parameters intact after the storm
+    let snap = pd.drain_params().unwrap();
+    assert_eq!(snap.len(), n);
+    for t in snap.values() {
+        assert!(t.as_f32().iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn handler_chains_across_devices_resolve() {
+    // A -> B -> C chained sends across 3 devices (waits form a DAG).
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(3, 2)).unwrap();
+    let hop = handler(|ctx, args| {
+        let chain = args[0].clone().list()?;
+        if chain.is_empty() {
+            return Ok(Value::Usize(ctx.pid.0 as usize));
+        }
+        let next = push::Pid(chain[0].usize()? as u32);
+        let rest = Value::List(chain[1..].to_vec());
+        let got = ctx.send(next, "HOP", vec![rest]).wait()?;
+        Ok(Value::List(vec![Value::Usize(ctx.pid.0 as usize), got]))
+    });
+    let pids = pd
+        .p_create_n(3, |_| CreateOpts {
+            receive: [("HOP".to_string(), hop.clone())].into_iter().collect(),
+            ..CreateOpts::default()
+        })
+        .unwrap();
+    let chain = Value::List(vec![
+        Value::Usize(pids[1].0 as usize),
+        Value::Usize(pids[2].0 as usize),
+    ]);
+    let out = pd
+        .p_launch(pids[0], "HOP", vec![chain])
+        .wait_timeout(Duration::from_secs(60))
+        .expect("chain deadlocked")
+        .unwrap();
+    // nested [0, [1, 2]]
+    let lvl0 = out.list().unwrap();
+    assert_eq!(lvl0[0], Value::Usize(pids[0].0 as usize));
+    let lvl1 = lvl0[1].clone().list().unwrap();
+    assert_eq!(lvl1[0], Value::Usize(pids[1].0 as usize));
+    assert_eq!(lvl1[1], Value::Usize(pids[2].0 as usize));
+}
+
+#[test]
+fn failures_do_not_poison_other_particles() {
+    // One particle panics on every message; its neighbors keep training.
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
+    let boom = handler(|_ctx, _| panic!("chaos"));
+    let step = handler(|ctx, args| {
+        let x = args[0].as_tensor()?.clone();
+        let y = args[1].as_tensor()?.clone();
+        ctx.step(x, y, 0.01).wait()
+    });
+    let bad = pd
+        .p_create(CreateOpts {
+            receive: [("STEP".to_string(), boom)].into_iter().collect(),
+            ..CreateOpts::default()
+        })
+        .unwrap();
+    let good = pd
+        .p_create(CreateOpts {
+            receive: [("STEP".to_string(), step)].into_iter().collect(),
+            ..CreateOpts::default()
+        })
+        .unwrap();
+    let model = pd.model().clone();
+    let mut rng = Rng::new(3);
+    let xn: usize = model.x_shape.iter().product();
+    let yn: usize = model.y_shape.iter().product();
+    let x = Tensor::f32(model.x_shape.clone(), rng.normal_vec(xn));
+    let y = Tensor::f32(model.y_shape.clone(), rng.normal_vec(yn));
+    let args = || vec![Value::Tensor(x.clone()), Value::Tensor(y.clone()), Value::F32(0.01)];
+
+    for _ in 0..5 {
+        assert!(pd.p_launch(bad, "STEP", args()).wait().is_err());
+        assert!(pd.p_launch(good, "STEP", args()).wait().is_ok());
+    }
+    assert_eq!(pd.stats().handler_errors, 5);
+}
+
+#[test]
+fn device_pinning_respected_and_out_of_range_rejected() {
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 2)).unwrap();
+    let a = pd.p_create(CreateOpts { device: Some(1), ..CreateOpts::default() }).unwrap();
+    assert_eq!(pd.nel().device_of(a), Some(1));
+    let err = pd.p_create(CreateOpts { device: Some(9), ..CreateOpts::default() });
+    assert!(err.is_err());
+}
+
+#[test]
+fn no_params_particles_carry_state_only() {
+    // The paper §C.2 floats encoding SWAG moments as extra particles; a
+    // particle can be created without parameters and still serve messages.
+    let m = manifest();
+    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
+    let bump = handler(|ctx, _| {
+        let n = match ctx.state_get("count") {
+            Some(Value::Usize(n)) => n,
+            _ => 0,
+        };
+        ctx.state_set("count", Value::Usize(n + 1));
+        Ok(Value::Usize(n + 1))
+    });
+    let p = pd
+        .p_create(CreateOpts {
+            no_params: true,
+            receive: [("BUMP".to_string(), bump)].into_iter().collect(),
+            state: vec![("count".to_string(), Value::Usize(10))],
+            ..CreateOpts::default()
+        })
+        .unwrap();
+    for want in 11..=13 {
+        let got = pd.p_launch(p, "BUMP", vec![]).wait().unwrap();
+        assert_eq!(got, Value::Usize(want));
+    }
+    // reading its (nonexistent) params errors but does not crash
+    assert!(pd.get(p).wait().is_err());
+}
