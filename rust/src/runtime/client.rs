@@ -5,74 +5,17 @@
 //! kept !Send — a client is created ON its device thread and never leaves
 //! it; only host `Tensor`s cross threads.
 //!
+//! The `xla` crate is a heavy native dependency (it links the xla_extension
+//! C++ runtime), so it is gated behind the `pjrt` cargo feature. The
+//! default build compiles a native stub with the same API that errors at
+//! artifact-execution time — everything that doesn't touch PJRT (the NEL,
+//! cache, tensor plane, native SVGD math, benches over them) stays fully
+//! functional and hermetic.
+//!
 //! Artifacts are HLO *text* (jax >= 0.5 serialized protos use 64-bit ids
 //! that xla_extension 0.5.1 rejects); `HloModuleProto::from_text_file`
 //! reassigns ids. All entries are lowered with return_tuple=True, so every
 //! execution result is a tuple literal that we decompose positionally.
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
-
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
-
-use crate::runtime::tensor::{DType, Tensor, TensorData};
-
-fn element_type(dt: DType) -> ElementType {
-    match dt {
-        DType::F32 => ElementType::F32,
-        DType::I32 => ElementType::S32,
-        DType::U32 => ElementType::U32,
-    }
-}
-
-fn to_bytes(data: &TensorData) -> &[u8] {
-    // All contract dtypes are 4-byte plain-old-data; reinterpret in place.
-    unsafe {
-        match data {
-            TensorData::F32(v) => {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            }
-            TensorData::I32(v) => {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            }
-            TensorData::U32(v) => {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            }
-        }
-    }
-}
-
-pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
-    Literal::create_from_shape_and_untyped_data(
-        element_type(t.dtype()),
-        &t.shape,
-        to_bytes(&t.data),
-    )
-    .map_err(|e| anyhow!("literal from tensor {:?}: {e:?}", t.shape))
-}
-
-pub fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
-    let ty = lit.ty().map_err(|e| anyhow!("literal ty: {e:?}"))?;
-    let data = match ty {
-        ElementType::F32 => TensorData::F32(
-            lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
-        ),
-        ElementType::S32 => TensorData::I32(
-            lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?,
-        ),
-        ElementType::U32 => TensorData::U32(
-            lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e:?}"))?,
-        ),
-        other => bail!("dtype {other:?} outside the L2/L3 contract"),
-    };
-    Ok(Tensor::new(dims, data))
-}
 
 /// Cumulative execution counters, used by the perf pass and device stats.
 #[derive(Debug, Default, Clone)]
@@ -83,73 +26,201 @@ pub struct ClientStats {
     pub execute_secs: f64,
 }
 
-/// A per-device PJRT CPU client with an executable cache keyed by artifact
-/// path. NOT Send/Sync by construction — lives on one device thread.
-pub struct RuntimeClient {
-    client: PjRtClient,
-    cache: HashMap<PathBuf, PjRtLoadedExecutable>,
-    pub stats: ClientStats,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::time::Instant;
 
-impl RuntimeClient {
-    pub fn cpu() -> Result<RuntimeClient> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(RuntimeClient { client, cache: HashMap::new(), stats: ClientStats::default() })
-    }
+    use anyhow::{anyhow, bail, Context, Result};
+    use xla::{
+        ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation,
+    };
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    use super::ClientStats;
+    use crate::runtime::tensor::{DType, Tensor, TensorData};
 
-    /// Compile (or fetch from cache) the artifact at `path`.
-    pub fn load(&mut self, path: &Path) -> Result<&PjRtLoadedExecutable> {
-        if !self.cache.contains_key(path) {
-            let t0 = Instant::now();
-            let proto = HloModuleProto::from_text_file(path)
-                .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
-            let comp = XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
-            self.stats.compiles += 1;
-            self.stats.compile_secs += t0.elapsed().as_secs_f64();
-            self.cache.insert(path.to_path_buf(), exe);
+    fn element_type(dt: DType) -> ElementType {
+        match dt {
+            DType::F32 => ElementType::F32,
+            DType::I32 => ElementType::S32,
+            DType::U32 => ElementType::U32,
         }
-        Ok(&self.cache[path])
     }
 
-    /// Execute the artifact at `path` with host tensors, returning host
-    /// tensors. The artifact's return_tuple=True output is decomposed.
-    pub fn execute(&mut self, path: &Path, args: &[Tensor]) -> Result<Vec<Tensor>> {
-        let lits: Vec<Literal> = args
-            .iter()
-            .map(tensor_to_literal)
-            .collect::<Result<_>>()
-            .with_context(|| format!("args for {path:?}"))?;
-        self.load(path)?;
-        let t0 = Instant::now();
-        let exe = &self.cache[path];
-        let outs = exe
-            .execute::<Literal>(&lits)
-            .map_err(|e| anyhow!("executing {path:?}: {e:?}"))?;
-        let result = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {path:?}: {e:?}"))?;
-        self.stats.executions += 1;
-        self.stats.execute_secs += t0.elapsed().as_secs_f64();
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow!("decomposing tuple of {path:?}: {e:?}"))?;
-        parts.iter().map(literal_to_tensor).collect()
+    fn to_bytes(data: &TensorData) -> &[u8] {
+        // All contract dtypes are 4-byte plain-old-data; reinterpret in place.
+        unsafe {
+            match data {
+                TensorData::F32(v) => {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                }
+                TensorData::I32(v) => {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                }
+                TensorData::U32(v) => {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                }
+            }
+        }
     }
 
-    /// Drop a cached executable (used by cache-pressure tests).
-    pub fn evict(&mut self, path: &Path) -> bool {
-        self.cache.remove(path).is_some()
+    pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+        Literal::create_from_shape_and_untyped_data(
+            element_type(t.dtype()),
+            &t.shape,
+            to_bytes(&t.data),
+        )
+        .map_err(|e| anyhow!("literal from tensor {:?}: {e:?}", t.shape))
     }
 
-    pub fn cached_executables(&self) -> usize {
-        self.cache.len()
+    pub fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        let ty = lit.ty().map_err(|e| anyhow!("literal ty: {e:?}"))?;
+        let data = match ty {
+            ElementType::F32 => TensorData::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
+            ),
+            ElementType::S32 => TensorData::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?,
+            ),
+            ElementType::U32 => TensorData::U32(
+                lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e:?}"))?,
+            ),
+            other => bail!("dtype {other:?} outside the L2/L3 contract"),
+        };
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// A per-device PJRT CPU client with an executable cache keyed by artifact
+    /// path. NOT Send/Sync by construction — lives on one device thread.
+    pub struct RuntimeClient {
+        client: PjRtClient,
+        cache: HashMap<PathBuf, PjRtLoadedExecutable>,
+        pub stats: ClientStats,
+    }
+
+    impl RuntimeClient {
+        pub fn cpu() -> Result<RuntimeClient> {
+            let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+            Ok(RuntimeClient { client, cache: HashMap::new(), stats: ClientStats::default() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) the artifact at `path`.
+        pub fn load(&mut self, path: &Path) -> Result<&PjRtLoadedExecutable> {
+            if !self.cache.contains_key(path) {
+                let t0 = Instant::now();
+                let proto = HloModuleProto::from_text_file(path)
+                    .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+                let comp = XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+                self.stats.compiles += 1;
+                self.stats.compile_secs += t0.elapsed().as_secs_f64();
+                self.cache.insert(path.to_path_buf(), exe);
+            }
+            Ok(&self.cache[path])
+        }
+
+        /// Execute the artifact at `path` with host tensors, returning host
+        /// tensors. The artifact's return_tuple=True output is decomposed.
+        pub fn execute(&mut self, path: &Path, args: &[Tensor]) -> Result<Vec<Tensor>> {
+            let lits: Vec<Literal> = args
+                .iter()
+                .map(tensor_to_literal)
+                .collect::<Result<_>>()
+                .with_context(|| format!("args for {path:?}"))?;
+            self.load(path)?;
+            let t0 = Instant::now();
+            let exe = &self.cache[path];
+            let outs = exe
+                .execute::<Literal>(&lits)
+                .map_err(|e| anyhow!("executing {path:?}: {e:?}"))?;
+            let result = outs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of {path:?}: {e:?}"))?;
+            self.stats.executions += 1;
+            self.stats.execute_secs += t0.elapsed().as_secs_f64();
+            let parts = result
+                .to_tuple()
+                .map_err(|e| anyhow!("decomposing tuple of {path:?}: {e:?}"))?;
+            parts.iter().map(literal_to_tensor).collect()
+        }
+
+        /// Drop a cached executable (used by cache-pressure tests).
+        pub fn evict(&mut self, path: &Path) -> bool {
+            self.cache.remove(path).is_some()
+        }
+
+        pub fn cached_executables(&self) -> usize {
+            self.cache.len()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::{literal_to_tensor, tensor_to_literal, RuntimeClient};
+
+#[cfg(not(feature = "pjrt"))]
+mod native_backend {
+    use std::path::Path;
+
+    use anyhow::Result;
+
+    use super::ClientStats;
+    use crate::runtime::tensor::Tensor;
+
+    fn unavailable(path: &Path) -> anyhow::Error {
+        anyhow::anyhow!(
+            "cannot execute artifact {path:?}: push was built without the `pjrt` \
+             feature. Rebuild with `cargo build --features pjrt` (after `make \
+             artifacts`) to enable the XLA PJRT runtime."
+        )
+    }
+
+    /// Hermetic stand-in for the PJRT client: same API, no native deps.
+    /// Artifact execution fails with a clear message; everything else is a
+    /// no-op so the NEL/device machinery can be exercised without XLA.
+    pub struct RuntimeClient {
+        pub stats: ClientStats,
+    }
+
+    impl RuntimeClient {
+        pub fn cpu() -> Result<RuntimeClient> {
+            Ok(RuntimeClient { stats: ClientStats::default() })
+        }
+
+        pub fn platform(&self) -> String {
+            "native-stub (built without the `pjrt` feature)".to_string()
+        }
+
+        /// Artifact loading always fails in the stub.
+        pub fn load(&mut self, path: &Path) -> Result<()> {
+            Err(unavailable(path))
+        }
+
+        pub fn execute(&mut self, path: &Path, _args: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(unavailable(path))
+        }
+
+        pub fn evict(&mut self, _path: &Path) -> bool {
+            false
+        }
+
+        pub fn cached_executables(&self) -> usize {
+            0
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use native_backend::RuntimeClient;

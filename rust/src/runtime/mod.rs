@@ -5,7 +5,9 @@ pub mod client;
 pub mod manifest;
 pub mod tensor;
 
-pub use client::{literal_to_tensor, tensor_to_literal, ClientStats, RuntimeClient};
+pub use client::{ClientStats, RuntimeClient};
+#[cfg(feature = "pjrt")]
+pub use client::{literal_to_tensor, tensor_to_literal};
 pub use manifest::{EntrySpec, Manifest, ModelSpec, SvgdSpec, TensorSpec};
 pub use tensor::{DType, Tensor, TensorData};
 

@@ -1,5 +1,7 @@
 //! Integration: the BDL algorithms (ensemble / multi-SWAG / SVGD) over real
 //! artifacts, plus Push-vs-baseline consistency (paper §5.1's comparison).
+//! Requires `make artifacts` and a `--features pjrt` build.
+#![cfg(feature = "pjrt")]
 
 use push::baselines::Baseline;
 use push::bench::{data_for, Method};

@@ -1,9 +1,12 @@
 //! Integration: NEL + PJRT runtime over real AOT artifacts (mlp_tiny).
 //!
-//! Requires `make artifacts`. These tests exercise the full paper
+//! Requires `make artifacts` and a `--features pjrt` build; without the
+//! feature this file compiles to an empty test binary so the default
+//! `cargo test` stays hermetic. These tests exercise the full paper
 //! machinery: particle creation (init artifact), message passing with
 //! handlers, device compute (step/fwd/grad artifacts), parameter views,
 //! cache pressure, and failure injection.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

@@ -1,6 +1,8 @@
 //! Concurrency stress tests: message storms, deep cache pressure, and
 //! deadlock containment over real artifacts. These are the failure modes
 //! the paper's NEL design (§4.2) must survive.
+//! Requires `make artifacts` and a `--features pjrt` build.
+#![cfg(feature = "pjrt")]
 
 use std::time::Duration;
 
