@@ -139,9 +139,12 @@ mod pjrt_backend {
                 .map(tensor_to_literal)
                 .collect::<Result<_>>()
                 .with_context(|| format!("args for {path:?}"))?;
-            self.load(path)?;
+            // `load` hands back the cached executable directly; the borrow
+            // ends once the (owned) result literal is fetched, so the stats
+            // update below needs no second cache probe. Compile time (first
+            // call) is charged to compile_secs inside `load`, not here.
+            let exe = self.load(path)?;
             let t0 = Instant::now();
-            let exe = &self.cache[path];
             let outs = exe
                 .execute::<Literal>(&lits)
                 .map_err(|e| anyhow!("executing {path:?}: {e:?}"))?;
