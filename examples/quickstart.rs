@@ -101,7 +101,7 @@ fn main() -> Result<()> {
             pid,
             e.kind.name(),
             e.bytes,
-            e.note
+            e.note_str()
         );
     }
 

@@ -94,7 +94,7 @@ impl Dataset {
         let y = match self.y_dtype {
             DType::I32 => {
                 let yb: Vec<i32> = idxs.iter().map(|&i| self.ys_i[i]).collect();
-                Tensor::new(vec![b], TensorData::I32(yb))
+                Tensor::new(vec![b], TensorData::i32(yb))
             }
             _ => {
                 let ys_stride = self.y_stride();

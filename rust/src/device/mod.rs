@@ -11,6 +11,12 @@
 //! Compute jobs must never block on other jobs' results (that is the
 //! particle control threads' job, see nel::particle) — device streams are
 //! kept deadlock-free by construction.
+//!
+//! Stats are published *on demand*: a `DeviceHandle::stats()` call enqueues
+//! a request on the device stream and the worker replies with its local
+//! counters. The request drains FIFO behind every previously submitted
+//! job, so readers see a consistent snapshot without the old
+//! clone-into-a-mutex-after-every-job publication on the hot path.
 
 pub mod cache;
 pub mod cost;
@@ -51,8 +57,9 @@ impl<'a> DeviceCtx<'a> {
     }
 
     /// Read-only snapshot of `pid`'s parameters (a *view* in the paper's
-    /// sense): the device copies them out, charging a device->host
-    /// transfer.
+    /// sense). Zero-copy: the clone shares the resident buffer and COW
+    /// isolates it from later mutation; the logical view bytes are still
+    /// counted so transfer accounting models a real device->host copy.
     pub fn params_view(&mut self, pid: Pid) -> Result<Tensor> {
         let dev = self.device_id;
         let t = self
@@ -69,6 +76,9 @@ type Job = Box<dyn FnOnce(&mut DeviceCtx<'_>) + Send + 'static>;
 
 enum Msg {
     Run(Job),
+    /// Reply with a snapshot of the worker's local counters. Drains FIFO
+    /// behind earlier jobs, so it doubles as a per-device barrier.
+    Stats(Sender<DeviceStats>),
     Shutdown,
 }
 
@@ -77,7 +87,6 @@ pub struct DeviceHandle {
     pub id: usize,
     tx: Sender<Msg>,
     join: Option<JoinHandle<()>>,
-    stats: Arc<Mutex<DeviceStats>>,
 }
 
 impl DeviceHandle {
@@ -88,8 +97,15 @@ impl DeviceHandle {
             .map_err(|_| anyhow!("device {} stream closed", self.id))
     }
 
+    /// Current counters, fetched from the worker thread on demand. Blocks
+    /// until every previously enqueued job has finished (FIFO). Returns
+    /// defaults if the worker died (e.g. PJRT client creation failed).
     pub fn stats(&self) -> DeviceStats {
-        self.stats.lock().unwrap().clone()
+        let (tx, rx) = channel();
+        if self.tx.send(Msg::Stats(tx)).is_err() {
+            return DeviceStats::default();
+        }
+        rx.recv().unwrap_or_default()
     }
 }
 
@@ -141,8 +157,6 @@ impl DevicePool {
 
     fn spawn(id: usize, cfg: DeviceConfig, host: HostStore, trace: Trace) -> Result<DeviceHandle> {
         let (tx, rx) = channel::<Msg>();
-        let stats = Arc::new(Mutex::new(DeviceStats::default()));
-        let stats_in = stats.clone();
         // RuntimeClient is created ON the worker thread (PJRT types are
         // !Send); creation failure is reported through the first join.
         let join = std::thread::Builder::new()
@@ -160,6 +174,10 @@ impl DevicePool {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Shutdown => break,
+                        Msg::Stats(reply) => {
+                            local.client = runtime.stats.clone();
+                            let _ = reply.send(local.clone());
+                        }
                         Msg::Run(job) => {
                             let _serial = cfg.serialize.as_ref().map(|l| l.lock().unwrap());
                             let t0 = Instant::now();
@@ -174,17 +192,14 @@ impl DevicePool {
                             job(&mut ctx);
                             local.jobs += 1;
                             local.busy_secs += t0.elapsed().as_secs_f64();
-                            local.client = runtime.stats.clone();
-                            *stats_in.lock().unwrap() = local.clone();
                         }
                     }
                 }
-                // final flush (also writes back nothing: host store sync is
-                // handled by explicit drains; residual copies just drop)
-                *stats_in.lock().unwrap() = local;
+                // residual resident copies just drop here; host store sync
+                // is handled by explicit drains
             })
             .map_err(|e| anyhow!("spawning device {id}: {e}"))?;
-        Ok(DeviceHandle { id, tx, join: Some(join), stats })
+        Ok(DeviceHandle { id, tx, join: Some(join) })
     }
 
     pub fn len(&self) -> usize {
@@ -230,4 +245,3 @@ impl Drop for DevicePool {
         }
     }
 }
-

@@ -78,12 +78,11 @@ pub fn dataset_mse(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::TensorData;
 
     #[test]
     fn accuracy_counts_argmax() {
         let scores = Tensor::f32(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
-        let labels = Tensor::new(vec![3], TensorData::I32(vec![0, 1, 1]));
+        let labels = Tensor::i32(vec![3], vec![0, 1, 1]);
         assert!((batch_accuracy(&scores, &labels) - 2.0 / 3.0).abs() < 1e-12);
     }
 

@@ -11,6 +11,12 @@
 //! updates applied concurrently via SVGD_FOLLOW. The optional Gaussian
 //! prior adds the score term of Eq. 26 (Appendix B.1).
 //!
+//! The round is zero-copy end to end on the coordinator (DESIGN.md
+//! §Zero-copy parameter plane): views share the owners' buffers, the only
+//! full copies are the two [n, d] stacks handed to the kernel, update rows
+//! are views into the kernel's output, and the final axpy mutates each
+//! particle's parameters in place.
+//!
 //! Sign convention: canonical descent-form SVGD — the paper's Appendix-B
 //! listing flips the repulsion term; see DESIGN.md §SVGD-sign.
 
@@ -104,7 +110,10 @@ impl Svgd {
             let y = args[1].as_tensor()?.clone();
             let n = fls.len() + 1;
 
-            // 1. every particle computes its gradient concurrently
+            // 1. every particle computes its gradient concurrently. The
+            //    futures are consumed by value: once each is dropped, the
+            //    extracted gradient tensor is uniquely owned, so the prior
+            //    axpy below mutates in place instead of COW-copying.
             let own = ctx.grad(x.clone(), y.clone());
             let futs: Vec<PFuture> = fls
                 .iter()
@@ -116,10 +125,15 @@ impl Svgd {
                     )
                 })
                 .collect();
-            let own_lg = own.wait()?.list()?;
-            let mut losses = vec![own_lg[0].as_tensor()?.scalar()];
-            let mut grads = vec![own_lg[1].as_tensor()?.clone()];
-            for f in &futs {
+            let mut losses = Vec::with_capacity(n);
+            let mut grads: Vec<Tensor> = Vec::with_capacity(n);
+            {
+                let lg = own.wait()?.list()?;
+                losses.push(lg[0].as_tensor()?.scalar());
+                grads.push(lg[1].as_tensor()?.clone());
+            }
+            drop(own);
+            for f in futs {
                 let lg = f.wait()?.list()?;
                 losses.push(lg[0].as_tensor()?.scalar());
                 grads.push(lg[1].as_tensor()?.clone());
@@ -131,16 +145,21 @@ impl Svgd {
                 return Ok(Value::F32(losses[0]));
             }
 
-            // 2. gather every particle's parameters (read-only views)
+            // 2. gather every particle's parameters as zero-copy views
+            //    (each shares its owner's resident buffer; COW keeps the
+            //    snapshot stable if the owner steps meanwhile).
             let own_params = ctx.own_params();
             let pfuts: Vec<PFuture> = fls.iter().map(|p| ctx.get(*p)).collect();
-            let mut params = vec![own_params.wait()?.tensor()?];
-            for f in &pfuts {
+            let mut params = Vec::with_capacity(n);
+            params.push(own_params.wait()?.tensor()?);
+            drop(own_params);
+            for f in pfuts {
                 params.push(f.wait()?.tensor()?);
             }
 
             // Appendix B.1: score-based posterior gradient adds the prior
-            // term  -grad log p(theta) = theta / sigma^2.
+            // term  -grad log p(theta) = theta / sigma^2. In place: the
+            // gradient buffers are uniquely owned here.
             if let Some(std) = lcfg.prior_std {
                 let inv_var = 1.0 / (std * std);
                 for (g, p) in grads.iter_mut().zip(&params) {
@@ -155,7 +174,11 @@ impl Svgd {
             };
 
             // 3. kernel-matrix update: Pallas artifact on the leader's
-            //    device when available, native O(n^2 d) otherwise.
+            //    device when available, native O(n^2 d) otherwise. The
+            //    [n, d] stacked inputs are built straight from the views —
+            //    one allocation each, no per-particle intermediates — and
+            //    the artifact's [n, d] output is split into zero-copy row
+            //    views for the scatter.
             let updates: Vec<Tensor> = match &artifact {
                 Some(path) => {
                     let prows: Vec<&Tensor> = params.iter().collect();
@@ -173,8 +196,15 @@ impl Svgd {
                     .map_err(|e| PushError::new(format!("{e:#}")))?,
             };
 
+            // Release the gathered views BEFORE the scatter: each particle's
+            // cache slot becomes uniquely owned again, so the followers'
+            // axpy applies in place instead of forcing a COW copy.
+            drop(params);
+            drop(grads);
+
             // 4. scatter: followers apply their rows concurrently; the
-            //    leader applies its own.
+            //    leader applies its own. Row views share the single update
+            //    buffer (payload accounting still counts d floats per row).
             let mut apply_futs = Vec::with_capacity(n);
             let mut it = updates.into_iter();
             let own_update = it.next().expect("leader row");

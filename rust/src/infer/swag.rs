@@ -115,6 +115,8 @@ impl MultiSwag {
             let seed = args[3].usize()? as u64;
             let classify = ctx.model().task == "classify";
 
+            // Zero-copy snapshot of the pre-draw parameters; restored at
+            // the end by moving the same buffer back (no copies either way).
             let backup = ctx.own_params().wait()?.tensor()?;
             let (mean, sq) = match (ctx.state_get(K_MEAN), ctx.state_get(K_SQ)) {
                 (Some(Value::Tensor(m)), Some(Value::Tensor(s))) => (m, s),
@@ -229,6 +231,9 @@ impl MultiSwag {
             })
             .collect();
         let preds = PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        // Drop the futures before accumulating: the first prediction then
+        // owns its buffer uniquely and the axpy chain runs in place.
+        drop(futs);
         let mut acc: Option<Tensor> = None;
         for p in preds {
             let t = p.tensor().map_err(|e| anyhow!("{e}"))?;

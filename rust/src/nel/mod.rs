@@ -91,7 +91,10 @@ pub struct NelStats {
 }
 
 struct Envelope {
-    msg: String,
+    /// Message label, interned once per `send` and shared (refcount bumps)
+    /// with every trace event it decorates — the old `String` form cloned
+    /// the label three times per send.
+    msg: Arc<str>,
     args: Vec<Value>,
     reply: PFuture,
 }
@@ -269,7 +272,7 @@ impl Nel {
                         model: model.clone(),
                         state: state.clone(),
                     };
-                    let result = match handlers.get(&env.msg) {
+                    let result = match handlers.get(&*env.msg) {
                         None => Err(PushError::new(format!(
                             "particle {pid} has no handler for {:?}",
                             env.msg
@@ -296,11 +299,16 @@ impl Nel {
 
     /// Asynchronously send `msg` to `pid` (paper: `particle.send` /
     /// `p_launch`). Returns the future of the handler's result.
+    ///
+    /// The label is interned into one `Arc<str>` shared by the envelope and
+    /// every trace event; tensor payloads ride along as zero-copy clones,
+    /// with `payload` counting their logical bytes for the transfer model.
     pub fn send(&self, from_device: Option<usize>, to: Pid, msg: &str, args: Vec<Value>) -> PFuture {
         let entry = match self.entry(to) {
             Ok(e) => e,
             Err(e) => return PFuture::ready(Err(e)),
         };
+        let msg: Arc<str> = Arc::from(msg);
         let payload: usize = args
             .iter()
             .map(|v| match v {
@@ -328,11 +336,11 @@ impl Nel {
         }
         self.inner.trace.record(
             Event::new(entry.device, Some(to), EventKind::MsgSend, payload)
-                .with_note(msg.to_string()),
+                .with_note(msg.clone()),
         );
         let reply = PFuture::new();
         let env = Envelope {
-            msg: msg.to_string(),
+            msg,
             args,
             reply: reply.clone(),
         };
@@ -510,6 +518,8 @@ impl Nel {
 
     /// Read-only view of a particle's parameters (paper: `get` + `view`).
     /// Runs on the owner's device; cross-device requests charge a transfer.
+    /// The returned tensor is a zero-copy COW snapshot: it shares the
+    /// resident buffer until either side writes.
     pub fn get_params(&self, requester_device: Option<usize>, pid: Pid) -> PFuture {
         let entry = match self.entry(pid) {
             Ok(e) => e,
@@ -572,7 +582,9 @@ impl Nel {
 
     /// Barrier: wait until every device has drained its queue, then flush
     /// all resident particles to the host store and return a snapshot of
-    /// every particle's parameters.
+    /// every particle's parameters. The snapshot tensors share storage
+    /// with the store (zero-copy); a later `axpy_params`/`set_params` on a
+    /// particle COW-detaches, so snapshots stay immutable.
     pub fn drain_params(&self) -> Result<BTreeMap<Pid, Tensor>, PushError> {
         let n = self.num_devices();
         let futs: Vec<PFuture> = (0..n)
@@ -593,15 +605,12 @@ impl Nel {
         Ok(out)
     }
 
-    /// Aggregate statistics. Barriers every device stream first so counters
-    /// from jobs whose futures already resolved are guaranteed published
-    /// (the worker publishes after the job closure returns, which races
-    /// with waiters otherwise).
+    /// Aggregate statistics. Each device answers its stats request on its
+    /// own stream (device::Msg::Stats), which drains FIFO behind every
+    /// previously submitted job — an implicit per-device barrier, so
+    /// counters from jobs whose futures already resolved are guaranteed
+    /// visible without extra barrier jobs or per-job publication.
     pub fn stats(&self) -> NelStats {
-        let barriers: Vec<PFuture> = (0..self.num_devices())
-            .map(|d| self.submit_job(d, |_| Ok(Value::Unit)))
-            .collect();
-        let _ = PFuture::wait_all(&barriers);
         let c = &self.inner.counters;
         NelStats {
             msgs_sent: c.msgs_sent.load(Ordering::Relaxed),

@@ -54,17 +54,25 @@ pub struct Event {
     pub pid: Option<Pid>,
     pub kind: EventKind,
     pub bytes: usize,
-    pub note: String,
+    /// Shared label (message name, usually). `Arc<str>` so the NEL can
+    /// attach the same interned label to many events without per-event
+    /// String allocations on the send hot path.
+    pub note: Option<Arc<str>>,
 }
 
 impl Event {
     pub fn new(device: usize, pid: Option<Pid>, kind: EventKind, bytes: usize) -> Event {
-        Event { t_us: 0, device, pid, kind, bytes, note: String::new() }
+        Event { t_us: 0, device, pid, kind, bytes, note: None }
     }
 
-    pub fn with_note(mut self, note: impl Into<String>) -> Event {
-        self.note = note.into();
+    pub fn with_note(mut self, note: impl Into<Arc<str>>) -> Event {
+        self.note = Some(note.into());
         self
+    }
+
+    /// The note text, or "" when unset.
+    pub fn note_str(&self) -> &str {
+        self.note.as_deref().unwrap_or("")
     }
 }
 
@@ -143,7 +151,7 @@ impl Trace {
                 pid,
                 e.kind.name(),
                 e.bytes,
-                e.note
+                e.note_str()
             ));
         }
         out

@@ -34,7 +34,9 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Snapshot a PD (drains device caches first).
+    /// Snapshot a PD (drains device caches first). The captured tensors
+    /// share storage with the live parameters (COW) — capturing costs no
+    /// parameter-sized copies, and later training steps detach on write.
     pub fn capture(pd: &PushDist) -> Result<Checkpoint> {
         let params = pd.drain_params().map_err(|e| anyhow!("{e}"))?;
         Ok(Checkpoint { model: pd.model().name.clone(), params })

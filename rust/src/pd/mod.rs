@@ -123,6 +123,9 @@ impl PushDist {
         }
         let futs: Vec<PFuture> = pids.iter().map(|p| self.forward(*p, x.clone())).collect();
         let mut acc: Option<Tensor> = None;
+        // Futures are consumed by value: each prediction ends up uniquely
+        // owned when its future drops, so the axpy accumulation below runs
+        // in place (no COW copies).
         for f in futs {
             let pred = f.wait().map_err(|e| anyhow!("{e}"))?.tensor().map_err(|e| anyhow!("{e}"))?;
             match &mut acc {
@@ -138,7 +141,8 @@ impl PushDist {
         Ok(a)
     }
 
-    /// Snapshot every particle's parameters (barrier + cache flush).
+    /// Snapshot every particle's parameters (barrier + cache flush). The
+    /// returned tensors are zero-copy COW snapshots of the host store.
     pub fn drain_params(&self) -> Result<BTreeMap<Pid, Tensor>, PushError> {
         self.nel.drain_params()
     }

@@ -12,6 +12,13 @@
 //! cache, tensor plane, native SVGD math, benches over them) stays fully
 //! functional and hermetic.
 //!
+//! Executables are keyed by *interned artifact id*: the first `load` of a
+//! path assigns a dense `ArtifactId` index, and the hot path (`execute`)
+//! does exactly one `HashMap<PathBuf>` probe to resolve it, then indexes a
+//! `Vec` — the previous path-keyed cache probed the map three times per
+//! job. Hot loops that hold an `ArtifactId` can call `execute_id` and skip
+//! the path probe entirely.
+//!
 //! Artifacts are HLO *text* (jax >= 0.5 serialized protos use 64-bit ids
 //! that xla_extension 0.5.1 rejects); `HloModuleProto::from_text_file`
 //! reassigns ids. All entries are lowered with return_tuple=True, so every
@@ -26,6 +33,17 @@ pub struct ClientStats {
     pub execute_secs: f64,
 }
 
+/// Dense per-client handle for a loaded artifact. Only meaningful for the
+/// `RuntimeClient` that issued it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactId(pub(crate) u32);
+
+impl ArtifactId {
+    fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
 #[cfg(feature = "pjrt")]
 mod pjrt_backend {
     use std::collections::HashMap;
@@ -37,7 +55,7 @@ mod pjrt_backend {
         ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation,
     };
 
-    use super::ClientStats;
+    use super::{ArtifactId, ClientStats};
     use crate::runtime::tensor::{DType, Tensor, TensorData};
 
     fn element_type(dt: DType) -> ElementType {
@@ -48,17 +66,22 @@ mod pjrt_backend {
         }
     }
 
-    fn to_bytes(data: &TensorData) -> &[u8] {
-        // All contract dtypes are 4-byte plain-old-data; reinterpret in place.
+    /// Reinterpret the tensor's logical window as raw bytes. All contract
+    /// dtypes are 4-byte plain-old-data; this also works for zero-copy row
+    /// views (the slice accessors apply the view offset).
+    fn to_bytes(t: &Tensor) -> &[u8] {
         unsafe {
-            match data {
-                TensorData::F32(v) => {
+            match t.dtype() {
+                DType::F32 => {
+                    let v = t.as_f32();
                     std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
                 }
-                TensorData::I32(v) => {
+                DType::I32 => {
+                    let v = t.as_i32();
                     std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
                 }
-                TensorData::U32(v) => {
+                DType::U32 => {
+                    let v = t.as_u32();
                     std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
                 }
             }
@@ -69,7 +92,7 @@ mod pjrt_backend {
         Literal::create_from_shape_and_untyped_data(
             element_type(t.dtype()),
             &t.shape,
-            to_bytes(&t.data),
+            to_bytes(t),
         )
         .map_err(|e| anyhow!("literal from tensor {:?}: {e:?}", t.shape))
     }
@@ -81,13 +104,13 @@ mod pjrt_backend {
         let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
         let ty = lit.ty().map_err(|e| anyhow!("literal ty: {e:?}"))?;
         let data = match ty {
-            ElementType::F32 => TensorData::F32(
+            ElementType::F32 => TensorData::f32(
                 lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
             ),
-            ElementType::S32 => TensorData::I32(
+            ElementType::S32 => TensorData::i32(
                 lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?,
             ),
-            ElementType::U32 => TensorData::U32(
+            ElementType::U32 => TensorData::u32(
                 lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e:?}"))?,
             ),
             other => bail!("dtype {other:?} outside the L2/L3 contract"),
@@ -95,77 +118,119 @@ mod pjrt_backend {
         Ok(Tensor::new(dims, data))
     }
 
-    /// A per-device PJRT CPU client with an executable cache keyed by artifact
-    /// path. NOT Send/Sync by construction — lives on one device thread.
+    struct Artifact {
+        path: PathBuf,
+        exe: Option<PjRtLoadedExecutable>,
+    }
+
+    /// A per-device PJRT CPU client with an executable cache keyed by
+    /// interned artifact id. NOT Send/Sync by construction — lives on one
+    /// device thread.
     pub struct RuntimeClient {
         client: PjRtClient,
-        cache: HashMap<PathBuf, PjRtLoadedExecutable>,
+        ids: HashMap<PathBuf, ArtifactId>,
+        arts: Vec<Artifact>,
         pub stats: ClientStats,
     }
 
     impl RuntimeClient {
         pub fn cpu() -> Result<RuntimeClient> {
             let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-            Ok(RuntimeClient { client, cache: HashMap::new(), stats: ClientStats::default() })
+            Ok(RuntimeClient {
+                client,
+                ids: HashMap::new(),
+                arts: Vec::new(),
+                stats: ClientStats::default(),
+            })
         }
 
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
-        /// Compile (or fetch from cache) the artifact at `path`.
-        pub fn load(&mut self, path: &Path) -> Result<&PjRtLoadedExecutable> {
-            if !self.cache.contains_key(path) {
-                let t0 = Instant::now();
-                let proto = HloModuleProto::from_text_file(path)
-                    .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
-                let comp = XlaComputation::from_proto(&proto);
-                let exe = self
-                    .client
-                    .compile(&comp)
-                    .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
-                self.stats.compiles += 1;
-                self.stats.compile_secs += t0.elapsed().as_secs_f64();
-                self.cache.insert(path.to_path_buf(), exe);
+        /// Intern `path` into a dense artifact id (no compilation yet).
+        /// The single `HashMap` probe on the execute hot path lives here.
+        pub fn intern(&mut self, path: &Path) -> ArtifactId {
+            if let Some(id) = self.ids.get(path) {
+                return *id;
             }
-            Ok(&self.cache[path])
+            let id = ArtifactId(self.arts.len() as u32);
+            self.ids.insert(path.to_path_buf(), id);
+            self.arts.push(Artifact { path: path.to_path_buf(), exe: None });
+            id
+        }
+
+        fn ensure_compiled(&mut self, id: ArtifactId) -> Result<()> {
+            if self.arts[id.index()].exe.is_some() {
+                return Ok(());
+            }
+            let path = self.arts[id.index()].path.clone();
+            let t0 = Instant::now();
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+            self.stats.compiles += 1;
+            self.stats.compile_secs += t0.elapsed().as_secs_f64();
+            self.arts[id.index()].exe = Some(exe);
+            Ok(())
+        }
+
+        /// Compile (or fetch from cache) the artifact at `path`, returning
+        /// its interned id for probe-free `execute_id` calls.
+        pub fn load(&mut self, path: &Path) -> Result<ArtifactId> {
+            let id = self.intern(path);
+            self.ensure_compiled(id)?;
+            Ok(id)
         }
 
         /// Execute the artifact at `path` with host tensors, returning host
-        /// tensors. The artifact's return_tuple=True output is decomposed.
+        /// tensors. One map probe (intern), then index by id.
         pub fn execute(&mut self, path: &Path, args: &[Tensor]) -> Result<Vec<Tensor>> {
+            let id = self.intern(path);
+            self.execute_id(id, args)
+        }
+
+        /// Execute a previously interned artifact. No `HashMap` probes.
+        /// The artifact's return_tuple=True output is decomposed.
+        pub fn execute_id(&mut self, id: ArtifactId, args: &[Tensor]) -> Result<Vec<Tensor>> {
+            self.ensure_compiled(id)?;
+            let art = &self.arts[id.index()];
             let lits: Vec<Literal> = args
                 .iter()
                 .map(tensor_to_literal)
                 .collect::<Result<_>>()
-                .with_context(|| format!("args for {path:?}"))?;
-            // `load` hands back the cached executable directly; the borrow
-            // ends once the (owned) result literal is fetched, so the stats
-            // update below needs no second cache probe. Compile time (first
-            // call) is charged to compile_secs inside `load`, not here.
-            let exe = self.load(path)?;
+                .with_context(|| format!("args for {:?}", art.path))?;
+            let exe = art.exe.as_ref().expect("compiled above");
             let t0 = Instant::now();
             let outs = exe
                 .execute::<Literal>(&lits)
-                .map_err(|e| anyhow!("executing {path:?}: {e:?}"))?;
+                .map_err(|e| anyhow!("executing {:?}: {e:?}", art.path))?;
             let result = outs[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("fetching result of {path:?}: {e:?}"))?;
+                .map_err(|e| anyhow!("fetching result of {:?}: {e:?}", art.path))?;
             self.stats.executions += 1;
             self.stats.execute_secs += t0.elapsed().as_secs_f64();
             let parts = result
                 .to_tuple()
-                .map_err(|e| anyhow!("decomposing tuple of {path:?}: {e:?}"))?;
+                .map_err(|e| anyhow!("decomposing tuple: {e:?}"))?;
             parts.iter().map(literal_to_tensor).collect()
         }
 
-        /// Drop a cached executable (used by cache-pressure tests).
+        /// Drop a cached executable (used by cache-pressure tests). The
+        /// interned id stays valid and recompiles on next use.
         pub fn evict(&mut self, path: &Path) -> bool {
-            self.cache.remove(path).is_some()
+            match self.ids.get(path) {
+                Some(id) => self.arts[id.index()].exe.take().is_some(),
+                None => false,
+            }
         }
 
         pub fn cached_executables(&self) -> usize {
-            self.cache.len()
+            self.arts.iter().filter(|a| a.exe.is_some()).count()
         }
     }
 }
@@ -175,11 +240,12 @@ pub use pjrt_backend::{literal_to_tensor, tensor_to_literal, RuntimeClient};
 
 #[cfg(not(feature = "pjrt"))]
 mod native_backend {
-    use std::path::Path;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
     use anyhow::Result;
 
-    use super::ClientStats;
+    use super::{ArtifactId, ClientStats};
     use crate::runtime::tensor::Tensor;
 
     fn unavailable(path: &Path) -> anyhow::Error {
@@ -190,29 +256,46 @@ mod native_backend {
         )
     }
 
-    /// Hermetic stand-in for the PJRT client: same API, no native deps.
-    /// Artifact execution fails with a clear message; everything else is a
-    /// no-op so the NEL/device machinery can be exercised without XLA.
+    /// Hermetic stand-in for the PJRT client: same API (including artifact
+    /// interning), no native deps. Artifact execution fails with a clear
+    /// message; everything else works so the NEL/device machinery and the
+    /// micro-benches can run without XLA.
     pub struct RuntimeClient {
+        ids: HashMap<PathBuf, ArtifactId>,
+        paths: Vec<PathBuf>,
         pub stats: ClientStats,
     }
 
     impl RuntimeClient {
         pub fn cpu() -> Result<RuntimeClient> {
-            Ok(RuntimeClient { stats: ClientStats::default() })
+            Ok(RuntimeClient { ids: HashMap::new(), paths: Vec::new(), stats: ClientStats::default() })
         }
 
         pub fn platform(&self) -> String {
             "native-stub (built without the `pjrt` feature)".to_string()
         }
 
-        /// Artifact loading always fails in the stub.
-        pub fn load(&mut self, path: &Path) -> Result<()> {
+        pub fn intern(&mut self, path: &Path) -> ArtifactId {
+            if let Some(id) = self.ids.get(path) {
+                return *id;
+            }
+            let id = ArtifactId(self.paths.len() as u32);
+            self.ids.insert(path.to_path_buf(), id);
+            self.paths.push(path.to_path_buf());
+            id
+        }
+
+        /// Artifact compilation always fails in the stub.
+        pub fn load(&mut self, path: &Path) -> Result<ArtifactId> {
             Err(unavailable(path))
         }
 
         pub fn execute(&mut self, path: &Path, _args: &[Tensor]) -> Result<Vec<Tensor>> {
             Err(unavailable(path))
+        }
+
+        pub fn execute_id(&mut self, id: ArtifactId, _args: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(unavailable(&self.paths[id.index()]))
         }
 
         pub fn evict(&mut self, _path: &Path) -> bool {
@@ -221,6 +304,22 @@ mod native_backend {
 
         pub fn cached_executables(&self) -> usize {
             0
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn intern_is_stable_and_dense() {
+            let mut c = RuntimeClient::cpu().unwrap();
+            let a = c.intern(Path::new("/tmp/a.hlo.txt"));
+            let b = c.intern(Path::new("/tmp/b.hlo.txt"));
+            assert_ne!(a, b);
+            assert_eq!(a, c.intern(Path::new("/tmp/a.hlo.txt")));
+            assert_eq!(c.cached_executables(), 0);
+            assert!(c.execute(Path::new("/tmp/a.hlo.txt"), &[]).is_err());
         }
     }
 }

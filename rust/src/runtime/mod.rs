@@ -5,7 +5,7 @@ pub mod client;
 pub mod manifest;
 pub mod tensor;
 
-pub use client::{ClientStats, RuntimeClient};
+pub use client::{ArtifactId, ClientStats, RuntimeClient};
 #[cfg(feature = "pjrt")]
 pub use client::{literal_to_tensor, tensor_to_literal};
 pub use manifest::{EntrySpec, Manifest, ModelSpec, SvgdSpec, TensorSpec};

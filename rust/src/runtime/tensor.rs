@@ -4,8 +4,23 @@
 //! their device thread (see device::worker); everything the coordinator
 //! routes between particles is a plain `Tensor` — shape + contiguous host
 //! data. Conversion to/from `xla::Literal` happens inside the device worker.
+//!
+//! # Zero-copy storage (DESIGN.md §Zero-copy parameter plane)
+//!
+//! Storage is `Arc`-backed with copy-on-write semantics:
+//!
+//! * `Tensor::clone()` is a refcount bump — parameter views, host-store
+//!   snapshots, future results, and message payloads share one buffer.
+//! * `as_*_mut` detaches first (`Arc::make_mut`), so mutating any clone
+//!   never aliases its siblings. Read paths never copy; the first write
+//!   after a share pays one buffer copy, and a uniquely-owned tensor
+//!   mutates strictly in place.
+//! * A tensor may be a *view*: a `[offset, offset+len)` window into a
+//!   larger shared buffer (`row_view`/`unstack_rows`). Views read
+//!   zero-copy; writing to a view first materializes just the window.
 
 use std::fmt;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
@@ -37,14 +52,30 @@ impl DType {
     }
 }
 
+/// Shared, immutable-until-detached backing buffer. Cloning bumps a
+/// refcount; `Tensor::as_*_mut` is the only detach point.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-    U32(Vec<u32>),
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
+    U32(Arc<Vec<u32>>),
 }
 
 impl TensorData {
+    pub fn f32(v: Vec<f32>) -> TensorData {
+        TensorData::F32(Arc::new(v))
+    }
+
+    pub fn i32(v: Vec<i32>) -> TensorData {
+        TensorData::I32(Arc::new(v))
+    }
+
+    pub fn u32(v: Vec<u32>) -> TensorData {
+        TensorData::U32(Arc::new(v))
+    }
+
+    /// Length of the *backing buffer* (>= the logical element count of a
+    /// view into it).
     pub fn len(&self) -> usize {
         match self {
             TensorData::F32(v) => v.len(),
@@ -64,32 +95,45 @@ impl TensorData {
             TensorData::U32(_) => DType::U32,
         }
     }
+
+    fn ptr_eq(&self, other: &TensorData) -> bool {
+        match (self, other) {
+            (TensorData::F32(a), TensorData::F32(b)) => Arc::ptr_eq(a, b),
+            (TensorData::I32(a), TensorData::I32(b)) => Arc::ptr_eq(a, b),
+            (TensorData::U32(a), TensorData::U32(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
 }
 
-/// A dense host tensor. Shape `[]` is a scalar with one element.
-#[derive(Clone, PartialEq)]
+/// A dense host tensor. Shape `[]` is a scalar with one element. Cheap to
+/// clone (refcount bump); see the module docs for the COW contract.
+#[derive(Clone)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: TensorData,
+    data: TensorData,
+    /// Element offset of this tensor's window into the backing buffer.
+    /// 0 for ordinary tensors; nonzero only for row views.
+    off: usize,
 }
 
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: TensorData) -> Tensor {
         let n: usize = shape.iter().product();
         assert_eq!(n, data.len(), "shape {shape:?} vs {} elements", data.len());
-        Tensor { shape, data }
+        Tensor { shape, data, off: 0 }
     }
 
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
-        Tensor::new(shape, TensorData::F32(data))
+        Tensor::new(shape, TensorData::f32(data))
     }
 
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
-        Tensor::new(shape, TensorData::I32(data))
+        Tensor::new(shape, TensorData::i32(data))
     }
 
     pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Tensor {
-        Tensor::new(shape, TensorData::U32(data))
+        Tensor::new(shape, TensorData::u32(data))
     }
 
     pub fn scalar_f32(v: f32) -> Tensor {
@@ -102,42 +146,63 @@ impl Tensor {
     }
 
     pub fn element_count(&self) -> usize {
-        self.data.len()
+        self.shape.iter().product()
     }
 
     pub fn size_bytes(&self) -> usize {
-        self.data.len() * self.dtype().size_bytes()
+        self.element_count() * self.dtype().size_bytes()
     }
 
     pub fn dtype(&self) -> DType {
         self.data.dtype()
     }
 
+    /// True if both tensors read from the same backing buffer — i.e. one is
+    /// a zero-copy clone or view of the other. Used by the COW tests and
+    /// the cache's no-copy-swap assertions.
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        self.data.ptr_eq(&other.data)
+    }
+
     /// Borrow as f32 slice; panics on dtype mismatch (programming error).
     pub fn as_f32(&self) -> &[f32] {
+        let n = self.element_count();
         match &self.data {
-            TensorData::F32(v) => v,
+            TensorData::F32(v) => &v[self.off..self.off + n],
             other => panic!("expected f32 tensor, got {:?}", other.dtype()),
         }
     }
 
+    /// Mutable borrow with copy-on-write: detaches from any sharers (and
+    /// materializes a view's window) before handing out `&mut`. A uniquely
+    /// owned, non-view tensor is mutated in place with zero copies.
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        let n = self.element_count();
         match &mut self.data {
-            TensorData::F32(v) => v,
+            TensorData::F32(a) => {
+                if self.off != 0 || a.len() != n {
+                    let window: Vec<f32> = a[self.off..self.off + n].to_vec();
+                    *a = Arc::new(window);
+                    self.off = 0;
+                }
+                Arc::make_mut(a).as_mut_slice()
+            }
             other => panic!("expected f32 tensor, got {:?}", other.dtype()),
         }
     }
 
     pub fn as_i32(&self) -> &[i32] {
+        let n = self.element_count();
         match &self.data {
-            TensorData::I32(v) => v,
+            TensorData::I32(v) => &v[self.off..self.off + n],
             other => panic!("expected i32 tensor, got {:?}", other.dtype()),
         }
     }
 
     pub fn as_u32(&self) -> &[u32] {
+        let n = self.element_count();
         match &self.data {
-            TensorData::U32(v) => v,
+            TensorData::U32(v) => &v[self.off..self.off + n],
             other => panic!("expected u32 tensor, got {:?}", other.dtype()),
         }
     }
@@ -148,8 +213,19 @@ impl Tensor {
         self.as_f32()[0]
     }
 
+    /// Zero-copy view of row `i` of a 2-D tensor: shares the backing
+    /// buffer, shape `[d]`. Reading is free; writing materializes only the
+    /// row (COW).
+    pub fn row_view(&self, i: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2, "row_view on shape {:?}", self.shape);
+        let (n, d) = (self.shape[0], self.shape[1]);
+        assert!(i < n, "row {i} out of {n}");
+        Tensor { shape: vec![d], data: self.data.clone(), off: self.off + i * d }
+    }
+
     /// Stack 1-D f32 tensors of equal length into an [n, d] tensor —
-    /// the layout the SVGD kernel artifact takes.
+    /// the layout the SVGD kernel artifact takes. One allocation; the only
+    /// full copy left on the SVGD leader's gather path.
     pub fn stack_rows(rows: &[&Tensor]) -> Tensor {
         assert!(!rows.is_empty());
         let d = rows[0].element_count();
@@ -161,14 +237,25 @@ impl Tensor {
         Tensor::f32(vec![rows.len(), d], data)
     }
 
-    /// Split an [n, d] f32 tensor back into n rows of d.
+    /// Split an [n, d] f32 tensor into n zero-copy row views of d.
     pub fn unstack_rows(&self) -> Vec<Tensor> {
         assert_eq!(self.shape.len(), 2, "unstack on shape {:?}", self.shape);
-        let (n, d) = (self.shape[0], self.shape[1]);
-        let data = self.as_f32();
-        (0..n)
-            .map(|i| Tensor::f32(vec![d], data[i * d..(i + 1) * d].to_vec()))
-            .collect()
+        (0..self.shape[0]).map(|i| self.row_view(i)).collect()
+    }
+}
+
+/// Logical equality: same shape and same window contents, regardless of
+/// whether the buffers are shared or where a view's window starts.
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        if self.shape != other.shape || self.dtype() != other.dtype() {
+            return false;
+        }
+        match self.dtype() {
+            DType::F32 => self.as_f32() == other.as_f32(),
+            DType::I32 => self.as_i32() == other.as_i32(),
+            DType::U32 => self.as_u32() == other.as_u32(),
+        }
     }
 }
 
@@ -176,10 +263,10 @@ impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor<{}>{:?}", self.dtype().name(), self.shape)?;
         if self.element_count() <= 8 {
-            match &self.data {
-                TensorData::F32(v) => write!(f, "{v:?}")?,
-                TensorData::I32(v) => write!(f, "{v:?}")?,
-                TensorData::U32(v) => write!(f, "{v:?}")?,
+            match self.dtype() {
+                DType::F32 => write!(f, "{:?}", self.as_f32())?,
+                DType::I32 => write!(f, "{:?}", self.as_i32())?,
+                DType::U32 => write!(f, "{:?}", self.as_u32())?,
             }
         }
         Ok(())
@@ -187,14 +274,17 @@ impl fmt::Debug for Tensor {
 }
 
 /// Axpy-style helpers used by the SWAG moment tracker and optimizers.
+/// All write through `as_f32_mut`, so they are COW-safe: a shared `y`
+/// detaches once; a uniquely-owned `y` updates strictly in place.
 pub mod ops {
     use super::Tensor;
 
     /// y += alpha * x (elementwise, f32).
     pub fn axpy(y: &mut Tensor, alpha: f32, x: &Tensor) {
-        let xs = x.as_f32();
+        let n = x.element_count();
+        assert_eq!(n, y.element_count());
         let ys = y.as_f32_mut();
-        assert_eq!(xs.len(), ys.len());
+        let xs = x.as_f32();
         for (yi, xi) in ys.iter_mut().zip(xs) {
             *yi += alpha * xi;
         }
@@ -202,9 +292,9 @@ pub mod ops {
 
     /// y = a*y + b*x.
     pub fn scale_add(y: &mut Tensor, a: f32, b: f32, x: &Tensor) {
-        let xs = x.as_f32();
+        assert_eq!(x.element_count(), y.element_count());
         let ys = y.as_f32_mut();
-        assert_eq!(xs.len(), ys.len());
+        let xs = x.as_f32();
         for (yi, xi) in ys.iter_mut().zip(xs) {
             *yi = a * *yi + b * xi;
         }
@@ -212,9 +302,9 @@ pub mod ops {
 
     /// Elementwise square accumulate: y = a*y + b*x^2.
     pub fn scale_add_sq(y: &mut Tensor, a: f32, b: f32, x: &Tensor) {
-        let xs = x.as_f32();
+        assert_eq!(x.element_count(), y.element_count());
         let ys = y.as_f32_mut();
-        assert_eq!(xs.len(), ys.len());
+        let xs = x.as_f32();
         for (yi, xi) in ys.iter_mut().zip(xs) {
             *yi = a * *yi + b * xi * xi;
         }
@@ -264,11 +354,66 @@ mod tests {
     }
 
     #[test]
+    fn clone_is_zero_copy_until_mutated() {
+        let a = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(a.shares_storage(&b), "clone must share the buffer");
+        b.as_f32_mut()[0] = 9.0;
+        assert!(!a.shares_storage(&b), "first write must detach");
+        assert_eq!(a.as_f32(), &[1.0, 2.0, 3.0], "source unchanged");
+        assert_eq!(b.as_f32(), &[9.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn unique_tensor_mutates_in_place() {
+        let mut a = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        let before = a.as_f32().as_ptr();
+        a.as_f32_mut()[0] = 5.0;
+        assert_eq!(a.as_f32().as_ptr(), before, "no sharers -> no copy");
+    }
+
+    #[test]
+    fn unstack_rows_are_views() {
+        let s = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let rows = s.unstack_rows();
+        assert!(rows[0].shares_storage(&s));
+        assert!(rows[1].shares_storage(&s));
+        assert_eq!(rows[1].as_f32(), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn view_write_materializes_window_only() {
+        let s = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut r1 = s.row_view(1);
+        r1.as_f32_mut()[0] = 9.0;
+        assert!(!r1.shares_storage(&s), "write detaches the view");
+        assert_eq!(r1.as_f32(), &[9.0, 4.0]);
+        assert_eq!(s.as_f32(), &[1.0, 2.0, 3.0, 4.0], "matrix untouched");
+    }
+
+    #[test]
+    fn view_equality_is_logical() {
+        let s = Tensor::f32(vec![2, 2], vec![7.0, 8.0, 7.0, 8.0]);
+        assert_eq!(s.row_view(0), s.row_view(1));
+        assert_eq!(s.row_view(0), Tensor::f32(vec![2], vec![7.0, 8.0]));
+    }
+
+    #[test]
     fn axpy_works() {
         let mut y = Tensor::f32(vec![2], vec![1.0, 2.0]);
         let x = Tensor::f32(vec![2], vec![10.0, 20.0]);
         ops::axpy(&mut y, 0.5, &x);
         assert_eq!(y.as_f32(), &[6.0, 12.0]);
+    }
+
+    #[test]
+    fn axpy_on_shared_detaches() {
+        let mut y = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        let snapshot = y.clone();
+        let x = Tensor::f32(vec![2], vec![1.0, 1.0]);
+        ops::axpy(&mut y, 1.0, &x);
+        assert_eq!(snapshot.as_f32(), &[1.0, 2.0], "snapshot immune");
+        assert_eq!(y.as_f32(), &[2.0, 3.0]);
     }
 
     #[test]
