@@ -5,16 +5,30 @@
 //! dispatch, context-switch (swap) cost under cache pressure, parameter
 //! views, and the native SVGD kernel math.
 //!
-//! Run: `cargo bench --bench l3_microbench` (needs `make artifacts`).
+//! Hermetic by default: the zero-copy-plane cases (params_view, SVGD
+//! stacking round, send-label interning) need no artifacts and no PJRT.
+//! The artifact-backed cases run only when `make artifacts` has produced a
+//! manifest (and the build has `--features pjrt`).
+//!
+//! Run: `cargo bench --bench l3_microbench`. Set `PUSH_BENCH_JSON=<path>`
+//! to also write the summaries as JSON (used to produce BENCH_l3.json).
+
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::sync::Arc;
 
 use push::bench::harness::{bench, bench_header};
-use push::device::CostModel;
-use push::infer::svgd_update_native;
+use push::device::stats::DeviceStats;
+use push::device::{CostModel, HostStore, ResidentCache};
+use push::nel::trace::Trace;
 use push::nel::CreateOpts;
 use push::particle::{handler, PFuture, Value};
-use push::runtime::{artifacts_dir, Manifest, Tensor};
+use push::runtime::tensor::ops;
+use push::runtime::{artifacts_dir, DType, Manifest, ModelSpec, Tensor};
+use push::util::json::Json;
 use push::util::rng::Rng;
-use push::{NelConfig, PushDist};
+use push::util::stats::Summary;
+use push::{Nel, NelConfig, Pid, PushDist};
 
 fn cfg(devices: usize, cache: usize) -> NelConfig {
     NelConfig {
@@ -26,86 +40,142 @@ fn cfg(devices: usize, cache: usize) -> NelConfig {
     }
 }
 
+/// A parameter-less model spec for NEL-only benches (no artifacts).
+fn dummy_model() -> Arc<ModelSpec> {
+    Arc::new(ModelSpec {
+        name: "bench_dummy".to_string(),
+        param_count: 0,
+        task: "regress".to_string(),
+        x_shape: vec![1],
+        y_shape: vec![1],
+        y_dtype: DType::F32,
+        arch: "none".to_string(),
+        meta: BTreeMap::new(),
+        entries: BTreeMap::new(),
+    })
+}
+
+fn run(
+    results: &mut Vec<(String, Summary)>,
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    f: impl FnMut(),
+) {
+    let s = bench(name, warmup, iters, f);
+    results.push((name.to_string(), s));
+}
+
 fn main() {
-    let manifest = Manifest::load(artifacts_dir()).expect("make artifacts first");
+    let manifest = Manifest::load(artifacts_dir()).ok();
+    let mut results: Vec<(String, Summary)> = Vec::new();
     bench_header();
 
     // ---- pure future round-trip (no NEL) --------------------------------
-    bench("pfuture_complete_wait", 100, 1000, || {
+    run(&mut results, "pfuture_complete_wait", 100, 1000, || {
         let f = PFuture::new();
         f.complete(Ok(Value::Unit));
         let _ = f.wait();
     });
 
     // ---- message -> handler -> reply through a control thread -----------
+    // The label is interned into one Arc<str> per send and shared with
+    // every trace event (previously three String clones per send).
     {
-        let pd = PushDist::new(&manifest, "mlp_tiny", cfg(1, 4)).unwrap();
-        let noop = handler(|_ctx, _| Ok(Value::Unit));
-        let p = pd
-            .p_create(CreateOpts {
-                receive: [("PING".to_string(), noop)].into_iter().collect(),
-                ..CreateOpts::default()
-            })
-            .unwrap();
-        pd.p_launch(p, "PING", vec![]).wait().unwrap();
-        bench("message_roundtrip_noop_handler", 100, 1000, || {
-            pd.p_launch(p, "PING", vec![]).wait().unwrap();
+        const LABEL: &str = "SEND_LABEL_INTERNING_BENCH_MESSAGE";
+        let mk_nel = |trace: bool| {
+            let nel = Nel::new(NelConfig { trace, ..cfg(1, 4) }).unwrap();
+            let noop = handler(|_ctx, _| Ok(Value::Unit));
+            let p = nel
+                .p_create(
+                    dummy_model(),
+                    CreateOpts {
+                        no_params: true,
+                        receive: [(LABEL.to_string(), noop)].into_iter().collect(),
+                        ..CreateOpts::default()
+                    },
+                )
+                .unwrap();
+            nel.send(None, p, LABEL, vec![]).wait().unwrap();
+            (nel, p)
+        };
+        let (nel, p) = mk_nel(false);
+        run(&mut results, "send_label_interning", 100, 2000, || {
+            nel.send(None, p, LABEL, vec![]).wait().unwrap();
+        });
+        let (nel, p) = mk_nel(true);
+        run(&mut results, "send_label_interning_traced", 100, 2000, || {
+            nel.send(None, p, LABEL, vec![]).wait().unwrap();
         });
     }
 
-    // ---- device job dispatch (queue + thread + reply) --------------------
+    // ---- parameter views at the cache layer ------------------------------
+    // zero_copy: what params_view does now — an Arc bump.
+    // deep_copy: the pre-refactor behavior — clone + forced detach, i.e. a
+    // full 4 MB memcpy per view. The gap is the win of the COW plane.
     {
-        let pd = PushDist::new(&manifest, "mlp_tiny", cfg(1, 4)).unwrap();
-        let p = pd.p_create(CreateOpts::default()).unwrap();
-        pd.get(p).wait().unwrap();
-        bench("device_job_param_view", 100, 1000, || {
-            pd.get(p).wait().unwrap();
+        let d = 1 << 20; // 1M f32 = 4 MB
+        let mut cache = ResidentCache::new(4, 1 << 30, CostModel::free());
+        let host = HostStore::default();
+        let mut st = DeviceStats::default();
+        let tr = Trace::disabled();
+        host.insert(Pid(0), Tensor::f32(vec![d], vec![1.0; d]));
+        cache.ensure_resident(Pid(0), &host, &mut st, &tr, 0).unwrap();
+        run(&mut results, "params_view_zero_copy_4MB", 20, 2000, || {
+            let v = cache
+                .ensure_resident(Pid(0), &host, &mut st, &tr, 0)
+                .unwrap()
+                .clone();
+            black_box(&v);
+        });
+        run(&mut results, "params_view_deep_copy_4MB", 20, 200, || {
+            let mut v = cache
+                .ensure_resident(Pid(0), &host, &mut st, &tr, 0)
+                .unwrap()
+                .clone();
+            black_box(v.as_f32_mut()[0]); // detach: the old memcpy cost
         });
     }
 
-    // ---- PJRT execute of the smallest entry ------------------------------
+    // ---- SVGD leader round data motion (no kernel math, no artifacts) ----
+    // Mirrors infer::svgd's gather/stack/unstack/apply round: zero-copy
+    // views in, one [n, d] allocation, row views out, in-place axpy apply.
     {
-        let pd = PushDist::new(&manifest, "mlp_tiny", cfg(1, 4)).unwrap();
-        let p = pd.p_create(CreateOpts::default()).unwrap();
-        let model = pd.model().clone();
-        let xn: usize = model.x_shape.iter().product();
-        let x = Tensor::f32(model.x_shape.clone(), vec![0.1; xn]);
-        pd.forward(p, x.clone()).wait().unwrap();
-        bench("pjrt_forward_mlp_tiny", 20, 150, || {
-            pd.forward(p, x.clone()).wait().unwrap();
+        let (n, d) = (16usize, 50_000usize);
+        let mut rng = Rng::new(5);
+        let mut parts: Vec<Tensor> =
+            (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+        run(&mut results, "svgd_round_stacked_16x50k", 10, 200, || {
+            // gather: zero-copy snapshots of every particle
+            let views: Vec<Tensor> = parts.iter().map(|t| t.clone()).collect();
+            let refs: Vec<&Tensor> = views.iter().collect();
+            let stacked = Tensor::stack_rows(&refs); // the one allocation
+            drop(refs);
+            drop(views); // release snapshots so the apply is in place
+            let rows = stacked.unstack_rows(); // zero-copy row views
+            for (p, u) in parts.iter_mut().zip(&rows) {
+                ops::axpy(p, -0.01, u);
+            }
         });
-    }
-
-    // ---- context switch: alternate two particles in a 1-slot cache ------
-    {
-        let pd = PushDist::new(&manifest, "mlp_small", cfg(1, 1)).unwrap();
-        let pids = pd.p_create_n(2, |_| CreateOpts::default()).unwrap();
-        pd.get(pids[0]).wait().unwrap();
-        let mut flip = 0usize;
-        bench("context_switch_swap_in_out", 50, 500, || {
-            // every access misses: swap-out + swap-in of ~21 KB params
-            pd.get(pids[flip % 2]).wait().unwrap();
-            flip += 1;
-        });
-        let stats = pd.stats();
-        println!(
-            "    (cache hits {} misses {} swapped {} MB)",
-            stats.devices[0].cache_hits,
-            stats.devices[0].cache_misses,
-            stats.devices[0].swap_bytes / (1 << 20)
-        );
-    }
-
-    // ---- cache hit path for comparison -----------------------------------
-    {
-        let pd = PushDist::new(&manifest, "mlp_small", cfg(1, 2)).unwrap();
-        let pids = pd.p_create_n(2, |_| CreateOpts::default()).unwrap();
-        pd.get(pids[0]).wait().unwrap();
-        pd.get(pids[1]).wait().unwrap();
-        let mut flip = 0usize;
-        bench("context_switch_cache_hit", 50, 500, || {
-            pd.get(pids[flip % 2]).wait().unwrap();
-            flip += 1;
+        // the pre-refactor shape of the same round: per-particle deep
+        // copies on gather and per-row allocations on unstack
+        run(&mut results, "svgd_round_deep_copy_16x50k", 10, 200, || {
+            let views: Vec<Tensor> = parts
+                .iter()
+                .map(|t| Tensor::f32(vec![d], t.as_f32().to_vec()))
+                .collect();
+            let refs: Vec<&Tensor> = views.iter().collect();
+            let stacked = Tensor::stack_rows(&refs);
+            drop(refs);
+            let rows: Vec<Tensor> = (0..n)
+                .map(|i| {
+                    let s = stacked.as_f32();
+                    Tensor::f32(vec![d], s[i * d..(i + 1) * d].to_vec())
+                })
+                .collect();
+            for (p, u) in parts.iter_mut().zip(&rows) {
+                ops::axpy(p, -0.01, u);
+            }
         });
     }
 
@@ -118,31 +188,8 @@ fn main() {
                 (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
             let g: Vec<Tensor> =
                 (0..n).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
-            bench(&format!("svgd_native_n{n}_d{d}"), 3, 30, || {
-                svgd_update_native(&p, &g, 10.0).unwrap();
-            });
-        }
-    }
-
-    // ---- SVGD Pallas artifact vs native (same shapes) ---------------------
-    {
-        let pd = PushDist::new(&manifest, "mlp_small", cfg(1, 4)).unwrap();
-        let d = pd.model().param_count;
-        let mut rng = Rng::new(4);
-        for n in [4usize, 16] {
-            let path = pd.svgd_artifact(n).expect("svgd artifact");
-            let p = Tensor::f32(vec![n, d], rng.normal_vec(n * d));
-            let g = Tensor::f32(vec![n, d], rng.normal_vec(n * d));
-            let h = Tensor::scalar_f32(10.0);
-            pd.nel()
-                .run_artifact(0, path.clone(), vec![p.clone(), g.clone(), h.clone()])
-                .wait()
-                .unwrap();
-            bench(&format!("svgd_artifact_n{n}_d{d}"), 5, 50, || {
-                pd.nel()
-                    .run_artifact(0, path.clone(), vec![p.clone(), g.clone(), h.clone()])
-                    .wait()
-                    .unwrap();
+            run(&mut results, &format!("svgd_native_n{n}_d{d}"), 3, 30, || {
+                push::infer::svgd_update_native(&p, &g, 10.0).unwrap();
             });
         }
     }
@@ -151,10 +198,129 @@ fn main() {
     {
         let d = 50_000;
         let mut rng = Rng::new(5);
-        let rows: Vec<Tensor> = (0..16).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
-        bench("stack_rows_16x50k", 20, 500, || {
+        let rows: Vec<Tensor> =
+            (0..16).map(|_| Tensor::f32(vec![d], rng.normal_vec(d))).collect();
+        run(&mut results, "stack_rows_16x50k", 20, 500, || {
             let refs: Vec<&Tensor> = rows.iter().collect();
             let _ = Tensor::stack_rows(&refs);
         });
+    }
+
+    // ---- artifact-backed cases (need `make artifacts` + --features pjrt) --
+    if let Some(manifest) = &manifest {
+        // message -> handler -> reply over a real model
+        {
+            let pd = PushDist::new(manifest, "mlp_tiny", cfg(1, 4)).unwrap();
+            let noop = handler(|_ctx, _| Ok(Value::Unit));
+            let p = pd
+                .p_create(CreateOpts {
+                    receive: [("PING".to_string(), noop)].into_iter().collect(),
+                    ..CreateOpts::default()
+                })
+                .unwrap();
+            pd.p_launch(p, "PING", vec![]).wait().unwrap();
+            run(&mut results, "message_roundtrip_noop_handler", 100, 1000, || {
+                pd.p_launch(p, "PING", vec![]).wait().unwrap();
+            });
+        }
+
+        // device job dispatch (queue + thread + zero-copy view reply)
+        {
+            let pd = PushDist::new(manifest, "mlp_tiny", cfg(1, 4)).unwrap();
+            let p = pd.p_create(CreateOpts::default()).unwrap();
+            pd.get(p).wait().unwrap();
+            run(&mut results, "device_job_param_view", 100, 1000, || {
+                pd.get(p).wait().unwrap();
+            });
+        }
+
+        // PJRT execute of the smallest entry
+        {
+            let pd = PushDist::new(manifest, "mlp_tiny", cfg(1, 4)).unwrap();
+            let p = pd.p_create(CreateOpts::default()).unwrap();
+            let model = pd.model().clone();
+            let xn: usize = model.x_shape.iter().product();
+            let x = Tensor::f32(model.x_shape.clone(), vec![0.1; xn]);
+            pd.forward(p, x.clone()).wait().unwrap();
+            run(&mut results, "pjrt_forward_mlp_tiny", 20, 150, || {
+                pd.forward(p, x.clone()).wait().unwrap();
+            });
+        }
+
+        // context switch: alternate two particles in a 1-slot cache
+        {
+            let pd = PushDist::new(manifest, "mlp_small", cfg(1, 1)).unwrap();
+            let pids = pd.p_create_n(2, |_| CreateOpts::default()).unwrap();
+            pd.get(pids[0]).wait().unwrap();
+            let mut flip = 0usize;
+            run(&mut results, "context_switch_swap_in_out", 50, 500, || {
+                // every access misses: Arc-moving swap-out + swap-in
+                pd.get(pids[flip % 2]).wait().unwrap();
+                flip += 1;
+            });
+            let stats = pd.stats();
+            println!(
+                "    (cache hits {} misses {} swapped {} MB)",
+                stats.devices[0].cache_hits,
+                stats.devices[0].cache_misses,
+                stats.devices[0].swap_bytes / (1 << 20)
+            );
+        }
+
+        // cache hit path for comparison
+        {
+            let pd = PushDist::new(manifest, "mlp_small", cfg(1, 2)).unwrap();
+            let pids = pd.p_create_n(2, |_| CreateOpts::default()).unwrap();
+            pd.get(pids[0]).wait().unwrap();
+            pd.get(pids[1]).wait().unwrap();
+            let mut flip = 0usize;
+            run(&mut results, "context_switch_cache_hit", 50, 500, || {
+                pd.get(pids[flip % 2]).wait().unwrap();
+                flip += 1;
+            });
+        }
+
+        // SVGD Pallas artifact vs native (same shapes)
+        {
+            let pd = PushDist::new(manifest, "mlp_small", cfg(1, 4)).unwrap();
+            let d = pd.model().param_count;
+            let mut rng = Rng::new(4);
+            for n in [4usize, 16] {
+                let path = pd.svgd_artifact(n).expect("svgd artifact");
+                let p = Tensor::f32(vec![n, d], rng.normal_vec(n * d));
+                let g = Tensor::f32(vec![n, d], rng.normal_vec(n * d));
+                let h = Tensor::scalar_f32(10.0);
+                pd.nel()
+                    .run_artifact(0, path.clone(), vec![p.clone(), g.clone(), h.clone()])
+                    .wait()
+                    .unwrap();
+                run(&mut results, &format!("svgd_artifact_n{n}_d{d}"), 5, 50, || {
+                    pd.nel()
+                        .run_artifact(0, path.clone(), vec![p.clone(), g.clone(), h.clone()])
+                        .wait()
+                        .unwrap();
+                });
+            }
+        }
+    } else {
+        println!("    (no artifacts manifest — skipping PJRT-backed cases)");
+    }
+
+    if let Ok(path) = std::env::var("PUSH_BENCH_JSON") {
+        let mut cases = BTreeMap::new();
+        for (name, s) in &results {
+            let mut o = BTreeMap::new();
+            o.insert("mean_us".to_string(), Json::Num(s.mean * 1e6));
+            o.insert("p50_us".to_string(), Json::Num(s.p50 * 1e6));
+            o.insert("p90_us".to_string(), Json::Num(s.p90 * 1e6));
+            o.insert("max_us".to_string(), Json::Num(s.max * 1e6));
+            o.insert("n".to_string(), Json::Num(s.n as f64));
+            cases.insert(name.clone(), Json::Obj(o));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str("l3_microbench".to_string()));
+        top.insert("cases".to_string(), Json::Obj(cases));
+        std::fs::write(&path, Json::Obj(top).pretty()).expect("writing bench json");
+        println!("\nwrote {path}");
     }
 }
