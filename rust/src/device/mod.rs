@@ -189,7 +189,17 @@ impl DevicePool {
                                 stats: &mut local,
                                 trace: &trace,
                             };
-                            job(&mut ctx);
+                            // Contain panics here so a faulty job cannot
+                            // kill the stream (NEL-submitted jobs catch
+                            // their own panics; raw submit()/run_blocking
+                            // jobs would otherwise take the worker — and
+                            // its accumulated stats — down with them).
+                            let caught = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| job(&mut ctx)),
+                            );
+                            if caught.is_err() {
+                                crate::log_error!("device {id}: compute job panicked");
+                            }
                             local.jobs += 1;
                             local.busy_secs += t0.elapsed().as_secs_f64();
                         }

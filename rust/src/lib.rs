@@ -16,8 +16,10 @@
 //!   lowered inside the L2 graphs.
 //!
 //! At run time the [`runtime`] module loads `artifacts/*.hlo.txt` through
-//! PJRT and Python is never on the path. See DESIGN.md for the experiment
-//! inventory and EXPERIMENTS.md for measured results.
+//! PJRT (`--features pjrt`; the default build substitutes a hermetic stub)
+//! and Python is never on the path. See DESIGN.md for the coordinator's
+//! zero-copy/single-authority invariants and EXPERIMENTS.md for measured
+//! results.
 
 #[macro_use]
 pub mod util;

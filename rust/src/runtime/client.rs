@@ -44,10 +44,44 @@ impl ArtifactId {
     }
 }
 
+/// Path -> dense-id interner shared by both backends, so their
+/// `ArtifactId` assignment can never drift apart.
+#[derive(Default)]
+struct PathInterner {
+    ids: std::collections::HashMap<std::path::PathBuf, ArtifactId>,
+    paths: Vec<std::path::PathBuf>,
+}
+
+// Which accessors are live depends on the active backend.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+impl PathInterner {
+    /// One map probe; assigns the next dense id on first sight.
+    fn intern(&mut self, path: &std::path::Path) -> ArtifactId {
+        if let Some(id) = self.ids.get(path) {
+            return *id;
+        }
+        let id = ArtifactId(self.paths.len() as u32);
+        self.ids.insert(path.to_path_buf(), id);
+        self.paths.push(path.to_path_buf());
+        id
+    }
+
+    fn get(&self, path: &std::path::Path) -> Option<ArtifactId> {
+        self.ids.get(path).copied()
+    }
+
+    fn path(&self, id: ArtifactId) -> &std::path::Path {
+        &self.paths[id.index()]
+    }
+
+    fn len(&self) -> usize {
+        self.paths.len()
+    }
+}
+
 #[cfg(feature = "pjrt")]
 mod pjrt_backend {
-    use std::collections::HashMap;
-    use std::path::{Path, PathBuf};
+    use std::path::Path;
     use std::time::Instant;
 
     use anyhow::{anyhow, bail, Context, Result};
@@ -118,18 +152,15 @@ mod pjrt_backend {
         Ok(Tensor::new(dims, data))
     }
 
-    struct Artifact {
-        path: PathBuf,
-        exe: Option<PjRtLoadedExecutable>,
-    }
-
     /// A per-device PJRT CPU client with an executable cache keyed by
     /// interned artifact id. NOT Send/Sync by construction — lives on one
     /// device thread.
     pub struct RuntimeClient {
         client: PjRtClient,
-        ids: HashMap<PathBuf, ArtifactId>,
-        arts: Vec<Artifact>,
+        interner: super::PathInterner,
+        /// Compiled executables, indexed by `ArtifactId` (parallel to the
+        /// interner's dense ids).
+        exes: Vec<Option<PjRtLoadedExecutable>>,
         pub stats: ClientStats,
     }
 
@@ -138,8 +169,8 @@ mod pjrt_backend {
             let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
             Ok(RuntimeClient {
                 client,
-                ids: HashMap::new(),
-                arts: Vec::new(),
+                interner: super::PathInterner::default(),
+                exes: Vec::new(),
                 stats: ClientStats::default(),
             })
         }
@@ -151,20 +182,18 @@ mod pjrt_backend {
         /// Intern `path` into a dense artifact id (no compilation yet).
         /// The single `HashMap` probe on the execute hot path lives here.
         pub fn intern(&mut self, path: &Path) -> ArtifactId {
-            if let Some(id) = self.ids.get(path) {
-                return *id;
+            let id = self.interner.intern(path);
+            if self.exes.len() < self.interner.len() {
+                self.exes.resize_with(self.interner.len(), || None);
             }
-            let id = ArtifactId(self.arts.len() as u32);
-            self.ids.insert(path.to_path_buf(), id);
-            self.arts.push(Artifact { path: path.to_path_buf(), exe: None });
             id
         }
 
         fn ensure_compiled(&mut self, id: ArtifactId) -> Result<()> {
-            if self.arts[id.index()].exe.is_some() {
+            if self.exes[id.index()].is_some() {
                 return Ok(());
             }
-            let path = self.arts[id.index()].path.clone();
+            let path = self.interner.path(id).to_path_buf();
             let t0 = Instant::now();
             let proto = HloModuleProto::from_text_file(&path)
                 .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
@@ -175,7 +204,7 @@ mod pjrt_backend {
                 .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
             self.stats.compiles += 1;
             self.stats.compile_secs += t0.elapsed().as_secs_f64();
-            self.arts[id.index()].exe = Some(exe);
+            self.exes[id.index()] = Some(exe);
             Ok(())
         }
 
@@ -198,20 +227,20 @@ mod pjrt_backend {
         /// The artifact's return_tuple=True output is decomposed.
         pub fn execute_id(&mut self, id: ArtifactId, args: &[Tensor]) -> Result<Vec<Tensor>> {
             self.ensure_compiled(id)?;
-            let art = &self.arts[id.index()];
+            let path = self.interner.path(id);
             let lits: Vec<Literal> = args
                 .iter()
                 .map(tensor_to_literal)
                 .collect::<Result<_>>()
-                .with_context(|| format!("args for {:?}", art.path))?;
-            let exe = art.exe.as_ref().expect("compiled above");
+                .with_context(|| format!("args for {path:?}"))?;
+            let exe = self.exes[id.index()].as_ref().expect("compiled above");
             let t0 = Instant::now();
             let outs = exe
                 .execute::<Literal>(&lits)
-                .map_err(|e| anyhow!("executing {:?}: {e:?}", art.path))?;
+                .map_err(|e| anyhow!("executing {path:?}: {e:?}"))?;
             let result = outs[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("fetching result of {:?}: {e:?}", art.path))?;
+                .map_err(|e| anyhow!("fetching result of {path:?}: {e:?}"))?;
             self.stats.executions += 1;
             self.stats.execute_secs += t0.elapsed().as_secs_f64();
             let parts = result
@@ -223,14 +252,14 @@ mod pjrt_backend {
         /// Drop a cached executable (used by cache-pressure tests). The
         /// interned id stays valid and recompiles on next use.
         pub fn evict(&mut self, path: &Path) -> bool {
-            match self.ids.get(path) {
-                Some(id) => self.arts[id.index()].exe.take().is_some(),
+            match self.interner.get(path) {
+                Some(id) => self.exes[id.index()].take().is_some(),
                 None => false,
             }
         }
 
         pub fn cached_executables(&self) -> usize {
-            self.arts.iter().filter(|a| a.exe.is_some()).count()
+            self.exes.iter().filter(|e| e.is_some()).count()
         }
     }
 }
@@ -240,8 +269,7 @@ pub use pjrt_backend::{literal_to_tensor, tensor_to_literal, RuntimeClient};
 
 #[cfg(not(feature = "pjrt"))]
 mod native_backend {
-    use std::collections::HashMap;
-    use std::path::{Path, PathBuf};
+    use std::path::Path;
 
     use anyhow::Result;
 
@@ -261,14 +289,16 @@ mod native_backend {
     /// message; everything else works so the NEL/device machinery and the
     /// micro-benches can run without XLA.
     pub struct RuntimeClient {
-        ids: HashMap<PathBuf, ArtifactId>,
-        paths: Vec<PathBuf>,
+        interner: super::PathInterner,
         pub stats: ClientStats,
     }
 
     impl RuntimeClient {
         pub fn cpu() -> Result<RuntimeClient> {
-            Ok(RuntimeClient { ids: HashMap::new(), paths: Vec::new(), stats: ClientStats::default() })
+            Ok(RuntimeClient {
+                interner: super::PathInterner::default(),
+                stats: ClientStats::default(),
+            })
         }
 
         pub fn platform(&self) -> String {
@@ -276,13 +306,7 @@ mod native_backend {
         }
 
         pub fn intern(&mut self, path: &Path) -> ArtifactId {
-            if let Some(id) = self.ids.get(path) {
-                return *id;
-            }
-            let id = ArtifactId(self.paths.len() as u32);
-            self.ids.insert(path.to_path_buf(), id);
-            self.paths.push(path.to_path_buf());
-            id
+            self.interner.intern(path)
         }
 
         /// Artifact compilation always fails in the stub.
@@ -295,7 +319,7 @@ mod native_backend {
         }
 
         pub fn execute_id(&mut self, id: ArtifactId, _args: &[Tensor]) -> Result<Vec<Tensor>> {
-            Err(unavailable(&self.paths[id.index()]))
+            Err(unavailable(self.interner.path(id)))
         }
 
         pub fn evict(&mut self, _path: &Path) -> bool {
