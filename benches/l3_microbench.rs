@@ -1,9 +1,10 @@
 //! L3 coordinator micro-benchmarks (criterion-less; see bench::harness).
 //!
 //! Measures the NEL primitives the perf pass optimizes: future round-trip,
-//! message dispatch through a particle control thread, device-job
-//! dispatch, context-switch (swap) cost under cache pressure, parameter
-//! views, and the native SVGD kernel math.
+//! message dispatch through the M:N scheduler, particle creation at 1k
+//! scale (vs a thread-per-particle control), broadcast fan-out (vs serial
+//! sends), device-job dispatch, context-switch (swap) cost under cache
+//! pressure, parameter views, and the native SVGD kernel math.
 //!
 //! Hermetic by default: the zero-copy-plane cases (params_view, SVGD
 //! stacking round, send-label interning) need no artifacts and no PJRT.
@@ -78,7 +79,7 @@ fn main() {
         let _ = f.wait();
     });
 
-    // ---- message -> handler -> reply through a control thread -----------
+    // ---- message -> handler -> reply through a scheduler worker ---------
     // The label is interned into one Arc<str> per send and shared with
     // every trace event (previously three String clones per send).
     {
@@ -106,6 +107,82 @@ fn main() {
         let (nel, p) = mk_nel(true);
         run(&mut results, "send_label_interning_traced", 100, 2000, || {
             nel.send(None, p, LABEL, vec![]).wait().unwrap();
+        });
+    }
+
+    // ---- M:N scheduler: 1k particle creation ----------------------------
+    // sched: Nel::new (fixed worker pool) + 1024 p_creates + teardown —
+    // creation is a mailbox alloc and a map insert, no thread spawn.
+    // thread_per control: the seed implementation's control plane, one OS
+    // thread + channel per particle, same create/teardown shape.
+    {
+        let model = dummy_model();
+        let noop = handler(|_ctx, _| Ok(Value::Unit));
+        run(&mut results, "spawn_1k_particles_sched", 1, 10, || {
+            let nel = Nel::new(cfg(2, 4)).unwrap();
+            for _ in 0..1024 {
+                nel.p_create(
+                    model.clone(),
+                    CreateOpts {
+                        no_params: true,
+                        receive: [("PING".to_string(), noop.clone())].into_iter().collect(),
+                        ..CreateOpts::default()
+                    },
+                )
+                .unwrap();
+            }
+            black_box(&nel);
+        });
+        run(&mut results, "spawn_1k_particles_thread_per", 1, 10, || {
+            let mut txs = Vec::with_capacity(1024);
+            let mut joins = Vec::with_capacity(1024);
+            for i in 0..1024 {
+                let (tx, rx) = std::sync::mpsc::channel::<()>();
+                joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("particle-{i}"))
+                        .spawn(move || while rx.recv().is_ok() {})
+                        .unwrap(),
+                );
+                txs.push(tx);
+            }
+            drop(txs);
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+    }
+
+    // ---- batched fan-out vs per-message sends ---------------------------
+    // broadcast: one label intern, one counter bump, one particle-map
+    // pass, one scheduling batch for all 256 targets + a join_all barrier.
+    // serial control: 256 independent sends + the old serial wait_all.
+    {
+        const FAN: usize = 256;
+        let nel = Nel::new(cfg(2, 4)).unwrap();
+        let noop = handler(|_ctx, _| Ok(Value::Unit));
+        let model = dummy_model();
+        let pids: Vec<Pid> = (0..FAN)
+            .map(|_| {
+                nel.p_create(
+                    model.clone(),
+                    CreateOpts {
+                        no_params: true,
+                        receive: [("FAN".to_string(), noop.clone())].into_iter().collect(),
+                        ..CreateOpts::default()
+                    },
+                )
+                .unwrap()
+            })
+            .collect();
+        PFuture::join_all(&nel.broadcast(None, &pids, "FAN", vec![])).wait().unwrap();
+        run(&mut results, "broadcast_fanout_256", 20, 200, || {
+            let futs = nel.broadcast(None, &pids, "FAN", vec![]);
+            PFuture::join_all(&futs).wait().unwrap();
+        });
+        run(&mut results, "send_fanout_serial_256", 20, 200, || {
+            let futs: Vec<PFuture> = pids.iter().map(|p| nel.send(None, *p, "FAN", vec![])).collect();
+            PFuture::wait_all(&futs).unwrap();
         });
     }
 

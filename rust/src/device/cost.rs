@@ -64,6 +64,22 @@ impl CostModel {
         self.maybe_sleep(secs);
     }
 
+    /// Charge `n` same-sized transfers at once (the broadcast fan-out
+    /// path submits ONE job per destination device instead of one per
+    /// message). Accounting is identical to `n` `charge_transfer` calls —
+    /// per-operation latency included — only the job-dispatch overhead is
+    /// amortized.
+    pub fn charge_transfer_batch(&self, n: usize, bytes: usize, stats: &mut DeviceStats) {
+        if n == 0 {
+            return;
+        }
+        let secs = self.model(bytes, self.transfer_bw) * n as f64;
+        stats.modeled_transfer_secs += secs;
+        stats.transfer_bytes += (bytes * n) as u64;
+        stats.transfers += n as u64;
+        self.maybe_sleep(secs);
+    }
+
     fn maybe_sleep(&self, secs: f64) {
         if self.simulate && secs > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(secs));
@@ -89,6 +105,27 @@ mod tests {
         m.charge_transfer(2_000_000, &mut st); // 5us + 1ms
         assert!((st.modeled_transfer_secs - 0.001005).abs() < 1e-9);
         assert_eq!(st.transfer_bytes, 2_000_000);
+    }
+
+    #[test]
+    fn batch_charge_equals_n_single_charges() {
+        let m = CostModel {
+            swap_bw: None,
+            transfer_bw: Some(1e9),
+            latency: Duration::from_micros(7),
+            simulate: false,
+        };
+        let mut single = DeviceStats::default();
+        for _ in 0..5 {
+            m.charge_transfer(1000, &mut single);
+        }
+        let mut batched = DeviceStats::default();
+        m.charge_transfer_batch(5, 1000, &mut batched);
+        assert_eq!(batched.transfers, single.transfers);
+        assert_eq!(batched.transfer_bytes, single.transfer_bytes);
+        assert!((batched.modeled_transfer_secs - single.modeled_transfer_secs).abs() < 1e-12);
+        m.charge_transfer_batch(0, 1000, &mut batched);
+        assert_eq!(batched.transfers, 5);
     }
 
     #[test]

@@ -8,9 +8,9 @@
 //! concurrent across devices — so contention and scheduling behave like the
 //! paper's multi-GPU node while numerics stay exact.
 //!
-//! Compute jobs must never block on other jobs' results (that is the
-//! particle control threads' job, see nel::particle) — device streams are
-//! kept deadlock-free by construction.
+//! Compute jobs must never block on other jobs' results (blocking waits
+//! belong in particle handlers on the control-worker pool, see nel::sched)
+//! — device streams are kept deadlock-free by construction.
 //!
 //! Stats are published *on demand*: a `DeviceHandle::stats()` call enqueues
 //! a request on the device stream and the worker replies with its local

@@ -59,25 +59,26 @@ impl DeepEnsemble {
     }
 
     /// One synchronized step of every particle on (x, y); returns the mean
-    /// loss. Exposed for the benches' per-batch timing.
+    /// loss. Exposed for the benches' per-batch timing. The fan-out is one
+    /// `broadcast` (label interned once, one scheduling batch) and the
+    /// barrier one `join_all` wait instead of a serial per-future
+    /// lock-step.
     pub fn step_all(&self, x: &Tensor, y: &Tensor) -> Result<f64> {
-        let futs: Vec<PFuture> = self
-            .pids
-            .iter()
-            .map(|p| {
-                self.pd.p_launch(
-                    *p,
-                    "STEP",
-                    vec![
-                        Value::Tensor(x.clone()),
-                        Value::Tensor(y.clone()),
-                        Value::F32(self.lr),
-                        Value::Bool(self.adam),
-                    ],
-                )
-            })
-            .collect();
-        let losses = PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        let futs = self.pd.broadcast(
+            &self.pids,
+            "STEP",
+            vec![
+                Value::Tensor(x.clone()),
+                Value::Tensor(y.clone()),
+                Value::F32(self.lr),
+                Value::Bool(self.adam),
+            ],
+        );
+        let losses = PFuture::join_all(&futs)
+            .wait()
+            .map_err(|e| anyhow!("{e}"))?
+            .list()
+            .map_err(|e| anyhow!("{e}"))?;
         let mut total = 0.0f64;
         for l in &losses {
             total += l.as_tensor().map_err(|e| anyhow!("{e}"))?.scalar() as f64;

@@ -110,33 +110,35 @@ impl Svgd {
             let y = args[1].as_tensor()?.clone();
             let n = fls.len() + 1;
 
-            // 1. every particle computes its gradient concurrently. The
-            //    futures are consumed by value: once each is dropped, the
-            //    extracted gradient tensor is uniquely owned, so the prior
-            //    axpy below mutates in place instead of COW-copying.
+            // 1. every particle computes its gradient concurrently: ONE
+            //    broadcast fan-out (label interned once, counters bumped
+            //    once, one scheduling batch) + one join_all barrier
+            //    instead of per-follower sends and a serial wait loop.
+            //    Futures and the join aggregate are dropped before the
+            //    prior term so the extracted gradients are uniquely owned
+            //    and the axpy below mutates in place.
             let own = ctx.grad(x.clone(), y.clone());
-            let futs: Vec<PFuture> = fls
-                .iter()
-                .map(|p| {
-                    ctx.send(
-                        *p,
-                        "SVGD_STEP",
-                        vec![Value::Tensor(x.clone()), Value::Tensor(y.clone())],
-                    )
-                })
-                .collect();
+            let step_futs = ctx.broadcast(
+                &fls,
+                "SVGD_STEP",
+                vec![Value::Tensor(x.clone()), Value::Tensor(y.clone())],
+            );
+            let step_joined = PFuture::join_all(&step_futs);
             let mut losses = Vec::with_capacity(n);
             let mut grads: Vec<Tensor> = Vec::with_capacity(n);
             {
-                let lg = own.wait()?.list()?;
+                let mut lg = own.wait()?.list()?;
                 losses.push(lg[0].as_tensor()?.scalar());
-                grads.push(lg[1].as_tensor()?.clone());
+                grads.push(lg.remove(1).tensor()?);
             }
             drop(own);
-            for f in futs {
-                let lg = f.wait()?.list()?;
+            let gathered_steps = step_joined.wait()?;
+            drop(step_joined);
+            drop(step_futs);
+            for lg in gathered_steps.list()? {
+                let mut lg = lg.list()?;
                 losses.push(lg[0].as_tensor()?.scalar());
-                grads.push(lg[1].as_tensor()?.clone());
+                grads.push(lg.remove(1).tensor()?);
             }
 
             // single-particle degenerate case: plain gradient descent
@@ -147,14 +149,21 @@ impl Svgd {
 
             // 2. gather every particle's parameters as zero-copy views
             //    (each shares its owner's resident buffer; COW keeps the
-            //    snapshot stable if the owner steps meanwhile).
+            //    snapshot stable if the owner steps meanwhile). join_all
+            //    resolves the whole gather at once; dropping the futures
+            //    right away matters — they hold view clones that would
+            //    otherwise force the scatter's axpy to COW-copy.
             let own_params = ctx.own_params();
             let pfuts: Vec<PFuture> = fls.iter().map(|p| ctx.get(*p)).collect();
+            let pjoined = PFuture::join_all(&pfuts);
             let mut params = Vec::with_capacity(n);
             params.push(own_params.wait()?.tensor()?);
             drop(own_params);
-            for f in pfuts {
-                params.push(f.wait()?.tensor()?);
+            let gathered = pjoined.wait()?;
+            drop(pjoined);
+            drop(pfuts);
+            for v in gathered.list()? {
+                params.push(v.tensor()?);
             }
 
             // Appendix B.1: score-based posterior gradient adds the prior
@@ -205,6 +214,8 @@ impl Svgd {
             // 4. scatter: followers apply their rows concurrently; the
             //    leader applies its own. Row views share the single update
             //    buffer (payload accounting still counts d floats per row).
+            //    Per-row args keep this on the send path (broadcast ships
+            //    ONE shared arg list); the barrier is a single join_all.
             let mut apply_futs = Vec::with_capacity(n);
             let mut it = updates.into_iter();
             let own_update = it.next().expect("leader row");
@@ -216,7 +227,7 @@ impl Svgd {
                 ));
             }
             apply_futs.push(ctx.axpy_params(-lcfg.lr, own_update));
-            PFuture::wait_all(&apply_futs)?;
+            PFuture::join_all(&apply_futs).wait()?;
 
             let mean_loss = losses.iter().sum::<f32>() / losses.len() as f32;
             Ok(Value::F32(mean_loss))

@@ -184,26 +184,25 @@ impl MultiSwag {
     }
 
     /// Synchronized step of all particles; `collect_moments` selects plain
-    /// SGD vs SWAG-moment mode. Returns mean loss.
+    /// SGD vs SWAG-moment mode. Returns mean loss. One broadcast fan-out,
+    /// one join_all barrier.
     pub fn step_all(&self, x: &Tensor, y: &Tensor, collect_moments: bool) -> Result<f64> {
         let msg = if collect_moments { "SWAG_STEP" } else { "STEP" };
-        let futs: Vec<PFuture> = self
-            .pids
-            .iter()
-            .map(|p| {
-                self.pd.p_launch(
-                    *p,
-                    msg,
-                    vec![
-                        Value::Tensor(x.clone()),
-                        Value::Tensor(y.clone()),
-                        Value::F32(self.cfg.lr),
-                        Value::Bool(self.cfg.adam),
-                    ],
-                )
-            })
-            .collect();
-        let losses = PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        let futs = self.pd.broadcast(
+            &self.pids,
+            msg,
+            vec![
+                Value::Tensor(x.clone()),
+                Value::Tensor(y.clone()),
+                Value::F32(self.cfg.lr),
+                Value::Bool(self.cfg.adam),
+            ],
+        );
+        let losses = PFuture::join_all(&futs)
+            .wait()
+            .map_err(|e| anyhow!("{e}"))?
+            .list()
+            .map_err(|e| anyhow!("{e}"))?;
         let mut total = 0.0;
         for l in &losses {
             total += l.as_tensor().map_err(|e| anyhow!("{e}"))?.scalar() as f64;
@@ -214,25 +213,23 @@ impl MultiSwag {
     /// Multi-SWAG prediction: summed class votes (classify) or averaged
     /// predictions (regress) across all samples of all particles.
     pub fn predict_swag(&self, x: &Tensor) -> Result<Tensor> {
-        let futs: Vec<PFuture> = self
-            .pids
-            .iter()
-            .map(|p| {
-                self.pd.p_launch(
-                    *p,
-                    "SWAG_PREDICT",
-                    vec![
-                        Value::Tensor(x.clone()),
-                        Value::Usize(self.cfg.n_samples),
-                        Value::F32(self.cfg.scale),
-                        Value::Usize(self.cfg.seed as usize),
-                    ],
-                )
-            })
-            .collect();
-        let preds = PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
-        // Drop the futures before accumulating: the first prediction then
-        // owns its buffer uniquely and the axpy chain runs in place.
+        let futs = self.pd.broadcast(
+            &self.pids,
+            "SWAG_PREDICT",
+            vec![
+                Value::Tensor(x.clone()),
+                Value::Usize(self.cfg.n_samples),
+                Value::F32(self.cfg.scale),
+                Value::Usize(self.cfg.seed as usize),
+            ],
+        );
+        let joined = PFuture::join_all(&futs);
+        let preds = joined.wait().map_err(|e| anyhow!("{e}"))?.list().map_err(|e| anyhow!("{e}"))?;
+        // Drop the futures (and the join aggregate) before accumulating:
+        // each still holds a clone of its prediction in its Ready state —
+        // releasing them leaves the first prediction uniquely owned so the
+        // axpy chain runs in place.
+        drop(joined);
         drop(futs);
         let mut acc: Option<Tensor> = None;
         for p in preds {

@@ -32,7 +32,7 @@ USAGE:
   push info
   push train --model <name> [--method ensemble|multi_swag|svgd]
              [--particles N] [--devices D] [--epochs E] [--batches B]
-             [--lr F] [--cache N] [--seed N]
+             [--lr F] [--cache N] [--seed N] [--workers N]
   push bench <fig4|fig7|table1|table2|table3|table4|stress|ablate>
              [--devices 1,2,4] [--particles 1,2,4,8] [--batches B]
              [--epochs E] [--no-baseline] [--full] [--cache N] [--seed N]
@@ -117,12 +117,15 @@ fn train(flags: &Flags) -> Result<()> {
     let batches = flags.usize_or("batches", 8).map_err(anyhow::Error::msg)?;
     let cache = flags.usize_or("cache", 8).map_err(anyhow::Error::msg)?;
     let seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
+    // 0 = auto (one control worker per available CPU)
+    let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
 
     let manifest = Manifest::load(artifacts_dir())?;
     let cfg = NelConfig {
         num_devices: devices,
         cache_size: cache,
         cost: CostModel::default(),
+        control_workers: workers,
         seed,
         ..NelConfig::default()
     };
@@ -160,6 +163,29 @@ fn train(flags: &Flags) -> Result<()> {
             rep.final_loss(),
             rep.mean_epoch_secs()
         );
+    }
+    let stats = algo.nel_stats();
+    let s = &stats.sched;
+    println!(
+        "\nmessages: {} ({} cross-device, {} payload bytes)",
+        stats.msgs_sent, stats.msgs_cross_device, stats.msg_payload_bytes
+    );
+    println!(
+        "sched: workers {}/{} (peak {}, cap {}), handler runs {} in {} turns, \
+         compensations {}, helps {}, steals {}, priority turns {}",
+        s.workers_live,
+        s.pool_target,
+        s.workers_peak,
+        s.max_workers,
+        s.handler_runs,
+        s.turns,
+        s.compensations,
+        s.helps,
+        s.steals,
+        s.priority_turns,
+    );
+    for (i, d) in stats.devices.iter().enumerate() {
+        println!("{}", d.summary(i));
     }
     Ok(())
 }

@@ -3,10 +3,14 @@
 //!
 //! Execution model (maps the paper's Figure 3b onto threads):
 //!
-//! * Each **particle** gets a *control thread* processing its mailbox
-//!   sequentially — the particle's "own logical thread of execution".
-//!   Handlers run here and MAY block on futures (actor + async-await
-//!   blend).
+//! * Each **particle** keeps "its own logical thread of execution" — a
+//!   FIFO mailbox whose handlers run sequentially and never concurrently
+//!   with themselves — but particles are multiplexed M:N onto a fixed
+//!   pool of control workers by the sharded scheduler in [`sched`]
+//!   (thread-per-particle capped the system at a few hundred particles).
+//!   Handlers MAY block on futures (actor + async-await blend); a blocked
+//!   worker is compensated for by a bounded spare so the pool never
+//!   starves.
 //! * Each **device** runs a *stream thread* (device::DevicePool) executing
 //!   compute jobs FIFO — the paper's "launch a thread to dispatch NN
 //!   computations" (T4c). Compute jobs never block on futures, so device
@@ -18,15 +22,20 @@
 //!
 //! Deadlock discipline for handlers: waits must form a DAG (the shipped
 //! algorithms use a leader/follower pattern — the leader waits on
-//! followers, never the reverse while holding a resource).
+//! followers, never the reverse while holding a resource). Non-cyclic
+//! wait DAGs of any width and depth make progress on a bounded pool: the
+//! dependency-first lane plus blocked-worker helping (see sched's module
+//! docs) guarantee a blocked handler's dependencies always get run.
 
+mod sched;
 pub mod trace;
+
+pub use sched::SchedStats;
 
 use std::collections::BTreeMap;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Result};
 
@@ -52,6 +61,10 @@ pub struct NelConfig {
     /// Serialize all device streams through one lock (measurement mode for
     /// 1-core hosts; see device::DeviceConfig::serialize).
     pub serialize_streams: bool,
+    /// Control workers in the M:N particle scheduler (0 = one per
+    /// available CPU). OS thread count stays O(workers + devices)
+    /// regardless of particle count.
+    pub control_workers: usize,
     /// Base seed for particle parameter initialization.
     pub seed: u64,
 }
@@ -66,6 +79,7 @@ impl Default for NelConfig {
             cost: CostModel::default(),
             trace: false,
             serialize_streams: false,
+            control_workers: 0,
             seed: 0,
         }
     }
@@ -87,16 +101,18 @@ pub struct NelStats {
     pub msgs_cross_device: u64,
     pub msg_payload_bytes: u64,
     pub handler_errors: u64,
+    pub sched: SchedStats,
     pub devices: Vec<DeviceStats>,
 }
 
-struct Envelope {
-    /// Message label, interned once per `send` and shared (refcount bumps)
-    /// with every trace event it decorates — the old `String` form cloned
-    /// the label three times per send.
-    msg: Arc<str>,
-    args: Vec<Value>,
-    reply: PFuture,
+pub(crate) struct Envelope {
+    /// Message label, interned once per `send` (once per *fan-out* for
+    /// `broadcast`) and shared (refcount bumps) with every trace event it
+    /// decorates — the old `String` form cloned the label three times per
+    /// send.
+    pub(crate) msg: Arc<str>,
+    pub(crate) args: Vec<Value>,
+    pub(crate) reply: PFuture,
 }
 
 pub(crate) struct ParticleEntry {
@@ -105,10 +121,11 @@ pub(crate) struct ParticleEntry {
     pub model: Arc<ModelSpec>,
     pub handlers: Arc<HandlerTable>,
     pub state: Arc<Mutex<BTreeMap<String, Value>>>,
-    tx: Sender<Envelope>,
+    mailbox: sched::Mailbox,
 }
 
 pub(crate) struct NelInner {
+    sched: sched::Scheduler,
     pool: DevicePool,
     pub trace: Trace,
     particles: RwLock<BTreeMap<Pid, Arc<ParticleEntry>>>,
@@ -117,8 +134,24 @@ pub(crate) struct NelInner {
     cfg: NelConfig,
 }
 
+impl Drop for NelInner {
+    /// Runs when the last `Nel` handle drops. A worker mid-handler holds a
+    /// temporary strong ref (the ctx's `Nel`), so no handler can be
+    /// running here: every worker is idle. Fail the undelivered envelopes,
+    /// then flag the pool down — workers exit at their next poll tick.
+    fn drop(&mut self) {
+        for entry in self.particles.get_mut().unwrap().values() {
+            for env in entry.mailbox.close() {
+                env.reply.complete(Err(PushError::new("NEL shut down")));
+            }
+        }
+        self.sched.shutdown();
+    }
+}
+
 /// Handle to the node event loop. Clone freely; the NEL shuts down when the
-/// last handle drops (control threads exit when their mailboxes close).
+/// last handle drops (undelivered messages fail, the worker pool winds
+/// down).
 #[derive(Clone)]
 pub struct Nel {
     inner: Arc<NelInner>,
@@ -149,16 +182,24 @@ impl Nel {
                 .then(|| std::sync::Arc::new(std::sync::Mutex::new(()))),
         };
         let pool = DevicePool::new(cfg.num_devices, dev_cfg, trace.clone())?;
-        Ok(Nel {
-            inner: Arc::new(NelInner {
-                pool,
-                trace,
-                particles: RwLock::new(BTreeMap::new()),
-                next_pid: AtomicU32::new(0),
-                counters: NelCounters::default(),
-                cfg,
-            }),
-        })
+        let workers = match cfg.control_workers {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            n => n,
+        };
+        // The scheduler's workers run handlers through a Weak back-ref so
+        // the pool cannot keep the NEL alive (new_cyclic hands us the Weak
+        // before the strong handle exists; upgrades fail until `new`
+        // returns, which is fine — nothing is scheduled yet).
+        let inner = Arc::new_cyclic(|weak| NelInner {
+            sched: sched::Scheduler::new(workers, weak.clone(), trace.clone()),
+            pool,
+            trace,
+            particles: RwLock::new(BTreeMap::new()),
+            next_pid: AtomicU32::new(0),
+            counters: NelCounters::default(),
+            cfg,
+        });
+        Ok(Nel { inner })
     }
 
     pub fn config(&self) -> &NelConfig {
@@ -192,9 +233,12 @@ impl Nel {
     }
 
     /// Create a particle of `model`, initialize its parameters on its
-    /// device (via the model's AOT `init` entry), register handlers, and
-    /// start its control thread. Returns the new pid immediately — device
-    /// FIFO ordering makes later jobs see the initialized parameters.
+    /// device (via the model's AOT `init` entry), and register handlers.
+    /// Creation is O(1) bookkeeping — a mailbox, a map insert, and (unless
+    /// `no_params`) one init job — no OS thread is spawned; the M:N
+    /// scheduler runs the particle's handlers on its shared worker pool.
+    /// Returns the new pid immediately — device FIFO ordering makes later
+    /// jobs see the initialized parameters.
     pub fn p_create(&self, model: Arc<ModelSpec>, opts: CreateOpts) -> Result<Pid> {
         let pid = Pid(self.inner.next_pid.fetch_add(1, Ordering::Relaxed));
         let device = match opts.device {
@@ -210,16 +254,15 @@ impl Nel {
             .trace
             .record(Event::new(device, Some(pid), EventKind::Create, 0));
 
-        let (tx, rx) = channel::<Envelope>();
         let entry = Arc::new(ParticleEntry {
             pid,
             device,
             model: model.clone(),
             handlers: Arc::new(opts.receive),
             state: Arc::new(Mutex::new(opts.state.into_iter().collect())),
-            tx,
+            mailbox: sched::Mailbox::new(),
         });
-        self.inner.particles.write().unwrap().insert(pid, entry.clone());
+        self.inner.particles.write().unwrap().insert(pid, entry);
 
         if !opts.no_params {
             // Initialize parameters on the particle's device; the job
@@ -237,64 +280,42 @@ impl Nel {
                 Ok(Value::Unit)
             });
         }
-
-        self.spawn_control_thread(entry, rx);
         Ok(pid)
     }
 
-    fn spawn_control_thread(&self, entry: Arc<ParticleEntry>, rx: Receiver<Envelope>) {
-        let weak: Weak<NelInner> = Arc::downgrade(&self.inner);
-        let pid = entry.pid;
-        let device = entry.device;
-        let model = entry.model.clone();
-        let handlers = entry.handlers.clone();
-        let state = entry.state.clone();
-        // The control thread must NOT keep `entry` alive (it holds the
-        // mailbox sender; holding it would prevent shutdown).
-        drop(entry);
-        std::thread::Builder::new()
-            .name(format!("particle-{}", pid.0))
-            .spawn(move || {
-                while let Ok(env) = rx.recv() {
-                    let Some(inner) = weak.upgrade() else {
-                        env.reply.complete(Err(PushError::new("NEL shut down")));
-                        break;
-                    };
-                    let nel = Nel { inner };
-                    nel.inner.trace.record(
-                        Event::new(device, Some(pid), EventKind::HandlerStart, 0)
-                            .with_note(env.msg.clone()),
-                    );
-                    let ctx = ParticleCtx {
-                        pid,
-                        device,
-                        nel: nel.clone(),
-                        model: model.clone(),
-                        state: state.clone(),
-                    };
-                    let result = match handlers.get(&*env.msg) {
-                        None => Err(PushError::new(format!(
-                            "particle {pid} has no handler for {:?}",
-                            env.msg
-                        ))),
-                        Some(h) => run_handler(h, &ctx, &env.args),
-                    };
-                    if result.is_err() {
-                        nel.inner.counters.handler_errors.fetch_add(1, Ordering::Relaxed);
-                        nel.inner.trace.record(
-                            Event::new(device, Some(pid), EventKind::Error, 0)
-                                .with_note(env.msg.clone()),
-                        );
-                    }
-                    nel.inner.trace.record(
-                        Event::new(device, Some(pid), EventKind::HandlerEnd, 0)
-                            .with_note(env.msg.clone()),
-                    );
-                    env.reply.complete(result);
-                    // `nel` (strong ref) drops here — no permanent cycle.
-                }
-            })
-            .expect("spawning particle control thread");
+    /// Run one envelope's handler for `entry`. Called by scheduler workers
+    /// only, with the particle's mailbox in the RUNNING state — the
+    /// scheduler guarantees no two invocations for one particle overlap.
+    pub(crate) fn process_envelope(&self, entry: &ParticleEntry, env: Envelope) {
+        let (pid, device) = (entry.pid, entry.device);
+        self.inner.trace.record(
+            Event::new(device, Some(pid), EventKind::HandlerStart, 0)
+                .with_note(env.msg.clone()),
+        );
+        let ctx = ParticleCtx {
+            pid,
+            device,
+            nel: self.clone(),
+            model: entry.model.clone(),
+            state: entry.state.clone(),
+        };
+        let result = match entry.handlers.get(&*env.msg) {
+            None => Err(PushError::new(format!(
+                "particle {pid} has no handler for {:?}",
+                env.msg
+            ))),
+            Some(h) => run_handler(h, &ctx, &env.args),
+        };
+        if result.is_err() {
+            self.inner.counters.handler_errors.fetch_add(1, Ordering::Relaxed);
+            self.inner.trace.record(
+                Event::new(device, Some(pid), EventKind::Error, 0).with_note(env.msg.clone()),
+            );
+        }
+        self.inner.trace.record(
+            Event::new(device, Some(pid), EventKind::HandlerEnd, 0).with_note(env.msg.clone()),
+        );
+        env.reply.complete(result);
     }
 
     /// Asynchronously send `msg` to `pid` (paper: `particle.send` /
@@ -303,6 +324,10 @@ impl Nel {
     /// The label is interned into one `Arc<str>` shared by the envelope and
     /// every trace event; tensor payloads ride along as zero-copy clones,
     /// with `payload` counting their logical bytes for the transfer model.
+    ///
+    /// Delivery happens BEFORE any accounting: a send to a dead particle
+    /// (closed mailbox) must not bump the messaging counters or charge a
+    /// phantom cross-device transfer — it used to do both.
     pub fn send(&self, from_device: Option<usize>, to: Pid, msg: &str, args: Vec<Value>) -> PFuture {
         let entry = match self.entry(to) {
             Ok(e) => e,
@@ -316,6 +341,17 @@ impl Nel {
                 _ => 0,
             })
             .sum();
+        let reply = PFuture::new();
+        let env = Envelope { msg: msg.clone(), args, reply: reply.clone() };
+        let outcome = entry.mailbox.push(env);
+        if matches!(outcome, sched::PushOutcome::Closed(_)) {
+            return PFuture::ready(Err(PushError::new(format!(
+                "particle {to} mailbox closed"
+            ))));
+        }
+        // Delivery succeeded: account + trace BEFORE making the particle
+        // runnable, so a timeline's msg_send precedes its handler_start
+        // whenever the mailbox was idle.
         self.inner.counters.msgs_sent.fetch_add(1, Ordering::Relaxed);
         self.inner
             .counters
@@ -338,18 +374,136 @@ impl Nel {
             Event::new(entry.device, Some(to), EventKind::MsgSend, payload)
                 .with_note(msg.clone()),
         );
-        let reply = PFuture::new();
-        let env = Envelope {
-            msg,
-            args,
-            reply: reply.clone(),
-        };
-        if entry.tx.send(env).is_err() {
-            return PFuture::ready(Err(PushError::new(format!(
-                "particle {to} mailbox closed"
-            ))));
+        if matches!(outcome, sched::PushOutcome::MustSchedule) {
+            // Sends from inside a handler go dependency-first: the sender
+            // will likely block on this reply (sched docs).
+            let from_handler = crate::particle::on_scheduler_worker();
+            self.inner.sched.schedule(entry.clone(), from_handler);
         }
         reply
+    }
+
+    /// Batched fan-out: send `msg` with (shared clones of) `args` to every
+    /// pid in `pids`, returning their reply futures in input order. One
+    /// label intern, one counter bump, one particle-map pass, one schedule
+    /// batch, and one transfer-charge job per destination device — where a
+    /// `send` loop pays each of those per message. Unknown pids yield
+    /// ready-error futures in their slot; they don't disturb accounting.
+    pub fn broadcast(
+        &self,
+        from_device: Option<usize>,
+        pids: &[Pid],
+        msg: &str,
+        args: Vec<Value>,
+    ) -> Vec<PFuture> {
+        if pids.is_empty() {
+            return Vec::new();
+        }
+        let msg: Arc<str> = Arc::from(msg);
+        let payload: usize = args
+            .iter()
+            .map(|v| match v {
+                Value::Tensor(t) => t.size_bytes(),
+                _ => 0,
+            })
+            .sum();
+
+        // Resolve every target under ONE read lock. For large fan-outs,
+        // merge-join the (sorted) request list against the BTreeMap's
+        // ordered iterator — O(n + m) total instead of n map probes.
+        let entries: Vec<Option<Arc<ParticleEntry>>> = {
+            let map = self.inner.particles.read().unwrap();
+            if pids.len() >= 8 && pids.len() * 4 >= map.len() {
+                let mut order: Vec<(Pid, usize)> =
+                    pids.iter().copied().enumerate().map(|(i, p)| (p, i)).collect();
+                order.sort_unstable();
+                let mut out: Vec<Option<Arc<ParticleEntry>>> = vec![None; pids.len()];
+                let mut iter = map.iter().peekable();
+                for (pid, ix) in order {
+                    while let Some((k, _)) = iter.peek() {
+                        if **k < pid {
+                            iter.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    if let Some((k, v)) = iter.peek() {
+                        if **k == pid {
+                            out[ix] = Some((*v).clone());
+                        }
+                    }
+                }
+                out
+            } else {
+                pids.iter().map(|p| map.get(p).cloned()).collect()
+            }
+        };
+
+        let mut futs = Vec::with_capacity(pids.len());
+        let mut to_schedule = Vec::new();
+        let mut delivered: u64 = 0;
+        // destination device -> cross-device message count (for the
+        // per-device aggregated transfer charge)
+        let mut cross: BTreeMap<usize, usize> = BTreeMap::new();
+        for (i, found) in entries.into_iter().enumerate() {
+            let Some(entry) = found else {
+                futs.push(PFuture::ready(Err(PushError::new(format!(
+                    "unknown particle {}",
+                    pids[i]
+                )))));
+                continue;
+            };
+            let reply = PFuture::new();
+            let env = Envelope { msg: msg.clone(), args: args.clone(), reply: reply.clone() };
+            match entry.mailbox.push(env) {
+                sched::PushOutcome::Closed(_) => {
+                    futs.push(PFuture::ready(Err(PushError::new(format!(
+                        "particle {} mailbox closed",
+                        pids[i]
+                    )))));
+                    continue;
+                }
+                sched::PushOutcome::MustSchedule => to_schedule.push(entry.clone()),
+                sched::PushOutcome::Delivered => {}
+            }
+            delivered += 1;
+            if let Some(fd) = from_device {
+                if fd != entry.device {
+                    *cross.entry(entry.device).or_insert(0) += 1;
+                }
+            }
+            self.inner.trace.record(
+                Event::new(entry.device, Some(entry.pid), EventKind::MsgSend, payload)
+                    .with_note(msg.clone()),
+            );
+            futs.push(reply);
+        }
+
+        self.inner.counters.msgs_sent.fetch_add(delivered, Ordering::Relaxed);
+        self.inner
+            .counters
+            .msg_payload_bytes
+            .fetch_add(delivered * payload as u64, Ordering::Relaxed);
+        let total_cross: usize = cross.values().sum();
+        if total_cross > 0 {
+            self.inner
+                .counters
+                .msgs_cross_device
+                .fetch_add(total_cross as u64, Ordering::Relaxed);
+            if payload > 0 {
+                for (dev, n) in cross {
+                    let cost = self.inner.cfg.cost.clone();
+                    let _ = self.submit_job(dev, move |ctx| {
+                        cost.charge_transfer_batch(n, payload, ctx.stats);
+                        Ok(Value::Unit)
+                    });
+                }
+            }
+        }
+        self.inner
+            .sched
+            .schedule_batch(to_schedule, crate::particle::on_scheduler_worker());
+        futs
     }
 
     /// Submit a compute job to a device stream, completing `reply` with its
@@ -479,7 +633,18 @@ impl Nel {
             let outs = match ctx.runtime.execute(&spec.file, &args) {
                 Ok(o) => o,
                 Err(e) => {
-                    *ctx.params_mut(pid)? = args.into_iter().next().unwrap();
+                    // Restore EVERYTHING the attempt moved out: the
+                    // parameter slot AND the optimizer moments — m/v were
+                    // `remove`d from particle state above, so dropping
+                    // them here would silently restart Adam from zeros on
+                    // the next step (the step count survives regardless:
+                    // it is only read, never removed).
+                    let mut it = args.into_iter();
+                    *ctx.params_mut(pid)? = it.next().unwrap();
+                    let (m, v) = (it.next().unwrap(), it.next().unwrap());
+                    let mut st = state.lock().unwrap();
+                    st.insert("adam_m".into(), Value::Tensor(m));
+                    st.insert("adam_v".into(), Value::Tensor(v));
                     return Err(e);
                 }
             };
@@ -617,6 +782,7 @@ impl Nel {
             msgs_cross_device: c.msgs_cross_device.load(Ordering::Relaxed),
             msg_payload_bytes: c.msg_payload_bytes.load(Ordering::Relaxed),
             handler_errors: c.handler_errors.load(Ordering::Relaxed),
+            sched: self.inner.sched.stats(),
             devices: self.inner.pool.stats(),
         }
     }
@@ -669,6 +835,12 @@ impl ParticleCtx {
     /// Async send (paper: `particle.send(pid, msg, *args)`).
     pub fn send(&self, to: Pid, msg: &str, args: Vec<Value>) -> PFuture {
         self.nel.send(Some(self.device), to, msg, args)
+    }
+
+    /// Batched fan-out of one message to many particles (the leader-round
+    /// hot path); see `Nel::broadcast`. Pair with `PFuture::join_all`.
+    pub fn broadcast(&self, pids: &[Pid], msg: &str, args: Vec<Value>) -> Vec<PFuture> {
+        self.nel.broadcast(Some(self.device), pids, msg, args)
     }
 
     /// Async read-only view of another particle's parameters (paper:
@@ -729,5 +901,273 @@ impl ParticleCtx {
 
     pub fn state_take(&self, key: &str) -> Option<Value> {
         self.state.lock().unwrap().remove(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::particle::handler;
+    use crate::runtime::{DType, EntrySpec};
+
+    fn free_cfg(devices: usize) -> NelConfig {
+        NelConfig {
+            num_devices: devices,
+            cost: CostModel::free(),
+            control_workers: 2,
+            ..NelConfig::default()
+        }
+    }
+
+    /// A parameter-less model; `entries` maps names to (nonexistent)
+    /// artifact files — in the default hermetic build every execute fails,
+    /// which is exactly what the error-path tests need.
+    fn test_model(entries: &[&str]) -> Arc<ModelSpec> {
+        Arc::new(ModelSpec {
+            name: "nel_test".to_string(),
+            param_count: 4,
+            task: "regress".to_string(),
+            x_shape: vec![1],
+            y_shape: vec![1],
+            y_dtype: DType::F32,
+            arch: "none".to_string(),
+            meta: BTreeMap::new(),
+            entries: entries
+                .iter()
+                .map(|e| {
+                    (
+                        e.to_string(),
+                        EntrySpec {
+                            file: std::path::PathBuf::from(format!("/nonexistent/{e}.hlo.txt")),
+                            args: Vec::new(),
+                            outs: Vec::new(),
+                        },
+                    )
+                })
+                .collect(),
+        })
+    }
+
+    #[test]
+    fn failed_adam_step_restores_moments_and_params() {
+        let nel = Nel::new(free_cfg(1)).unwrap();
+        let m0 = Tensor::f32(vec![4], vec![0.5, 0.5, 0.5, 0.5]);
+        let v0 = Tensor::f32(vec![4], vec![0.25, 0.25, 0.25, 0.25]);
+        let p = nel
+            .p_create(
+                test_model(&["adam"]),
+                CreateOpts {
+                    no_params: true,
+                    state: vec![
+                        ("adam_m".to_string(), Value::Tensor(m0.clone())),
+                        ("adam_v".to_string(), Value::Tensor(v0.clone())),
+                        ("adam_t".to_string(), Value::Usize(3)),
+                    ],
+                    ..CreateOpts::default()
+                },
+            )
+            .unwrap();
+        let params0 = Tensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        nel.inner.pool.host.insert(p, params0.clone());
+
+        // The hermetic stub fails every execute, driving the error path.
+        let x = Tensor::scalar_f32(0.0);
+        let y = Tensor::scalar_f32(0.0);
+        assert!(nel.run_adam(p, x, y, 1e-3).wait().is_err());
+
+        // Moments and step count survive the failed step...
+        let entry = nel.entry(p).unwrap();
+        let st = entry.state.lock().unwrap();
+        match st.get("adam_m") {
+            Some(Value::Tensor(t)) => assert_eq!(t, &m0, "adam_m lost on failed execute"),
+            other => panic!("adam_m missing after failed step: {other:?}"),
+        }
+        match st.get("adam_v") {
+            Some(Value::Tensor(t)) => assert_eq!(t, &v0, "adam_v lost on failed execute"),
+            other => panic!("adam_v missing after failed step: {other:?}"),
+        }
+        assert_eq!(st.get("adam_t"), Some(&Value::Usize(3)));
+        drop(st);
+        // ...and so do the parameters.
+        let after = nel.get_params(None, p).wait().unwrap().tensor().unwrap();
+        assert_eq!(after, params0);
+    }
+
+    #[test]
+    fn send_to_closed_mailbox_leaves_stats_untouched() {
+        let nel = Nel::new(free_cfg(2)).unwrap();
+        let noop = handler(|_ctx, _| Ok(Value::Unit));
+        let p = nel
+            .p_create(
+                test_model(&[]),
+                CreateOpts {
+                    no_params: true,
+                    device: Some(1),
+                    receive: [("PING".to_string(), noop)].into_iter().collect(),
+                    ..CreateOpts::default()
+                },
+            )
+            .unwrap();
+        // one live round first, with a cross-device payload
+        let payload = Tensor::f32(vec![4], vec![1.0; 4]);
+        nel.send(Some(0), p, "PING", vec![Value::Tensor(payload.clone())])
+            .wait()
+            .unwrap();
+        let before = nel.stats();
+        assert_eq!(before.msgs_sent, 1);
+        assert_eq!(before.msgs_cross_device, 1);
+        assert_eq!(before.devices[1].transfers, 1);
+
+        // Kill the mailbox (what shutdown does), then send again: the
+        // failure must not bump counters or charge a phantom transfer.
+        let entry = nel.entry(p).unwrap();
+        assert!(entry.mailbox.close().is_empty());
+        let err = nel
+            .send(Some(0), p, "PING", vec![Value::Tensor(payload)])
+            .wait()
+            .unwrap_err();
+        assert!(err.msg.contains("mailbox closed"), "{err}");
+        let after = nel.stats();
+        assert_eq!(after.msgs_sent, before.msgs_sent);
+        assert_eq!(after.msgs_cross_device, before.msgs_cross_device);
+        assert_eq!(after.msg_payload_bytes, before.msg_payload_bytes);
+        assert_eq!(after.devices[1].transfers, before.devices[1].transfers);
+        assert_eq!(after.devices[1].transfer_bytes, before.devices[1].transfer_bytes);
+    }
+
+    #[test]
+    fn broadcast_delivers_in_order_and_batches_accounting() {
+        let nel = Nel::new(free_cfg(2)).unwrap();
+        let who = handler(|ctx, _| Ok(Value::Usize(ctx.pid.0 as usize)));
+        let model = test_model(&[]);
+        let pids: Vec<Pid> = (0..10)
+            .map(|_| {
+                nel.p_create(
+                    model.clone(),
+                    CreateOpts {
+                        no_params: true,
+                        receive: [("WHO".to_string(), who.clone())].into_iter().collect(),
+                        ..CreateOpts::default()
+                    },
+                )
+                .unwrap()
+            })
+            .collect();
+
+        let payload = Tensor::f32(vec![4], vec![2.0; 4]); // 16 bytes
+        let futs = nel.broadcast(
+            Some(0),
+            &pids,
+            "WHO",
+            vec![Value::Tensor(payload)],
+        );
+        assert_eq!(futs.len(), pids.len());
+        let vals = PFuture::join_all(&futs).wait().unwrap().list().unwrap();
+        for (v, p) in vals.iter().zip(&pids) {
+            assert_eq!(*v, Value::Usize(p.0 as usize));
+        }
+
+        let stats = nel.stats();
+        assert_eq!(stats.msgs_sent, 10);
+        assert_eq!(stats.msg_payload_bytes, 160);
+        // round-robin placement: odd pids live on device 1 — 5 cross sends
+        assert_eq!(stats.msgs_cross_device, 5);
+        assert_eq!(stats.devices[1].transfers, 5);
+        assert_eq!(stats.devices[1].transfer_bytes, 5 * 16);
+        assert_eq!(stats.sched.handler_runs, 10);
+        assert!(stats.sched.workers_live <= stats.sched.max_workers);
+    }
+
+    #[test]
+    fn broadcast_unknown_pids_error_in_slot_without_accounting() {
+        let nel = Nel::new(free_cfg(1)).unwrap();
+        let noop = handler(|_ctx, _| Ok(Value::Unit));
+        let p = nel
+            .p_create(
+                test_model(&[]),
+                CreateOpts {
+                    no_params: true,
+                    receive: [("PING".to_string(), noop)].into_iter().collect(),
+                    ..CreateOpts::default()
+                },
+            )
+            .unwrap();
+        let futs = nel.broadcast(None, &[Pid(7777), p, Pid(8888)], "PING", vec![]);
+        assert_eq!(futs.len(), 3);
+        assert!(futs[0].wait().unwrap_err().msg.contains("unknown particle"));
+        assert!(futs[1].wait().is_ok());
+        assert!(futs[2].wait().unwrap_err().msg.contains("unknown particle"));
+        assert_eq!(nel.stats().msgs_sent, 1);
+    }
+
+    #[test]
+    fn broadcast_large_fanout_uses_merge_join_path() {
+        // >= 8 targets and >= map/4 triggers the merge-join resolve; give
+        // it duplicates and an unknown pid to chew on.
+        let nel = Nel::new(free_cfg(1)).unwrap();
+        let who = handler(|ctx, _| Ok(Value::Usize(ctx.pid.0 as usize)));
+        let model = test_model(&[]);
+        let pids: Vec<Pid> = (0..16)
+            .map(|_| {
+                nel.p_create(
+                    model.clone(),
+                    CreateOpts {
+                        no_params: true,
+                        receive: [("WHO".to_string(), who.clone())].into_iter().collect(),
+                        ..CreateOpts::default()
+                    },
+                )
+                .unwrap()
+            })
+            .collect();
+        // duplicates + unknown, deliberately out of order
+        let mut targets: Vec<Pid> = pids.iter().rev().copied().collect();
+        targets.push(pids[3]);
+        targets.push(Pid(4242));
+        let futs = nel.broadcast(None, &targets, "WHO", vec![]);
+        for (f, want) in futs.iter().zip(&targets) {
+            if want.0 == 4242 {
+                assert!(f.wait().is_err());
+            } else {
+                assert_eq!(f.wait().unwrap(), Value::Usize(want.0 as usize));
+            }
+        }
+        assert_eq!(nel.stats().msgs_sent, 17);
+    }
+
+    #[test]
+    fn shutdown_fails_undelivered_envelopes() {
+        // A particle whose handler parks long enough for more mail to pile
+        // up; dropping the NEL must fail the queued envelopes, not strand
+        // their futures.
+        let nel = Nel::new(free_cfg(1)).unwrap();
+        let slow = handler(|_ctx, _| {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            Ok(Value::Unit)
+        });
+        let p = nel
+            .p_create(
+                test_model(&[]),
+                CreateOpts {
+                    no_params: true,
+                    receive: [("SLOW".to_string(), slow)].into_iter().collect(),
+                    ..CreateOpts::default()
+                },
+            )
+            .unwrap();
+        let first = nel.send(None, p, "SLOW", vec![]);
+        let queued: Vec<PFuture> = (0..4).map(|_| nel.send(None, p, "SLOW", vec![])).collect();
+        // Wait for the first handler to start, then drop the NEL while the
+        // rest are still queued.
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        drop(nel);
+        // The in-flight handler finishes (its worker holds a strong ref);
+        // everything behind it resolves — OK or "NEL shut down" — within
+        // the timeout. Nothing may hang.
+        let d = std::time::Duration::from_secs(20);
+        assert!(first.wait_timeout(d).is_some(), "in-flight future hung");
+        for (i, f) in queued.iter().enumerate() {
+            assert!(f.wait_timeout(d).is_some(), "queued future {i} hung");
+        }
     }
 }

@@ -1,0 +1,633 @@
+//! Sharded M:N control-plane scheduler.
+//!
+//! The paper gives every particle "its own logical thread of execution";
+//! the seed implementation made that literal — one OS thread per particle
+//! — which caps the system at a few hundred particles (stack memory,
+//! spawn latency, context-switch pressure). This module decouples logical
+//! particles from OS threads:
+//!
+//! * **Mailboxes.** Each particle owns a FIFO [`Mailbox`] plus a 4-state
+//!   scheduling word (`IDLE / QUEUED / RUNNING / RUNNING_DIRTY`). A push
+//!   that finds the mailbox idle enqueues the particle on a run-queue
+//!   shard; all other pushes are just a queue append — the current owner
+//!   is guaranteed to observe them. Exactly one run-queue reference per
+//!   particle can exist (only the `IDLE -> QUEUED` edge enqueues), which
+//!   is what makes handler execution **non-reentrant** by construction.
+//! * **Worker pool.** A fixed pool of control workers (default
+//!   `available_parallelism`, `NelConfig::control_workers` to override)
+//!   pops particles from per-worker shards (`pid % shards` is a
+//!   particle's home shard) and steals from siblings when its own shard
+//!   is dry. Each scheduling turn drains at most [`MAILBOX_BATCH`]
+//!   envelopes so one chatty particle cannot starve a shard. Idle
+//!   workers park on a condvar (no polling); every enqueue wakes a
+//!   sleeper if one exists.
+//! * **Dependency-first lane.** A send issued from *inside a handler* is
+//!   one whose reply the sender will likely block on. Those targets go to
+//!   a global priority lane that every worker drains BEFORE its shard, so
+//!   a blocked handler's dependencies always run ahead of fresh root
+//!   work and wait DAGs unwind depth-first.
+//! * **Blocked-worker compensation + helping.** Handlers may block on
+//!   futures (the paper's actor + async-await blend). A worker entering
+//!   `PFuture::wait` on a pending future announces itself through the
+//!   [`BlockObserver`] hook. While the pool is under its cap
+//!   ([`Shared::max_workers`], the tokio `block_in_place` discipline) a
+//!   spare is spawned so runnable workers stay at the configured target,
+//!   and surplus workers retire after an idle grace period once blockers
+//!   resume. At the cap, the blocking worker switches to **helping**: it
+//!   runs pending tasks itself between short waits — lane first, then
+//!   shards, a full worker turn (bounded nesting, [`MAX_HELP_DEPTH`]) —
+//!   so no queued work, lane or shard, can be stranded by blocked
+//!   workers no matter how wide or deep the wait DAG is.
+//!   Progress invariant: after every block event there is either a
+//!   runnable worker or an actively-helping blocked one. Cyclic waits
+//!   (A's handler waits on B's while B's waits on A's) still deadlock,
+//!   exactly as they did with a thread per particle; the helping
+//!   backstop only runs out in the astronomically contrived case of more
+//!   than `max_workers * MAX_HELP_DEPTH` simultaneously nested blocking
+//!   handlers.
+//!
+//! Shutdown: dropping the last `Nel` handle fails every undelivered
+//! envelope with "NEL shut down" and flags the pool; workers wake and
+//! exit.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Duration;
+
+use crate::particle::{set_block_observer, BlockObserver, PushError};
+
+use super::trace::{Event, EventKind, Trace};
+use super::{Envelope, Nel, NelInner, ParticleEntry};
+
+/// Max envelopes one scheduling turn drains before handing the worker
+/// back (fairness under fan-in).
+const MAILBOX_BATCH: usize = 16;
+
+/// How long an idle worker parks before re-checking whether it is
+/// surplus and should retire. Work arrival wakes parked workers
+/// immediately; this is purely the retire-check cadence, so surplus
+/// compensation workers linger warm for one grace period and are reused
+/// by back-to-back blocking rounds instead of respawning.
+const IDLE_PARK: Duration = Duration::from_millis(100);
+
+/// Max nested `help` frames per worker stack (each frame is a full
+/// handler run for some other particle).
+const MAX_HELP_DEPTH: usize = 32;
+
+thread_local! {
+    static HELP_DEPTH: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+    /// Nested blocking-wait frames on this worker (outer wait + waits
+    /// inside helped handlers). Only the outermost frame counts toward
+    /// `Shared::blocked`, so that gauge means blocked THREADS and the
+    /// spawn/retire arithmetic sees true runnable coverage.
+    static BLOCK_FRAMES: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+// ---- mailbox ------------------------------------------------------------
+
+const IDLE: u8 = 0;
+/// On a run queue (or about to be — the pusher that won the
+/// `IDLE -> QUEUED` edge is responsible for enqueueing).
+const QUEUED: u8 = 1;
+/// A worker owns the mailbox and is draining it.
+const RUNNING: u8 = 2;
+/// A push landed while RUNNING; the owner must re-check before releasing.
+const RUNNING_DIRTY: u8 = 3;
+
+/// Per-particle FIFO message queue plus its scheduling state word.
+pub(crate) struct Mailbox {
+    queue: Mutex<VecDeque<Envelope>>,
+    sched_state: AtomicU8,
+    /// Set (under the queue lock) at NEL shutdown; later pushes bounce.
+    closed: AtomicBool,
+}
+
+pub(crate) enum PushOutcome {
+    /// Mailbox went non-empty while idle: the caller must enqueue the
+    /// particle on the run queue.
+    MustSchedule,
+    /// Already queued or running — the current owner will see the message.
+    Delivered,
+    /// Mailbox closed (NEL shut down); the envelope comes back.
+    Closed(Envelope),
+}
+
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox {
+            queue: Mutex::new(VecDeque::new()),
+            sched_state: AtomicU8::new(IDLE),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Append an envelope. The queue push happens strictly BEFORE the
+    /// scheduling-state transition, so an owner that observes its queue
+    /// empty and then fails the `RUNNING -> IDLE` release is guaranteed
+    /// to find this message on its re-check (no lost wakeups).
+    pub fn push(&self, env: Envelope) -> PushOutcome {
+        {
+            let mut q = self.queue.lock().unwrap();
+            if self.closed.load(Ordering::Relaxed) {
+                return PushOutcome::Closed(env);
+            }
+            q.push_back(env);
+        }
+        loop {
+            let s = self.sched_state.load(Ordering::Acquire);
+            match s {
+                IDLE => {
+                    if self
+                        .sched_state
+                        .compare_exchange(IDLE, QUEUED, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        return PushOutcome::MustSchedule;
+                    }
+                }
+                RUNNING => {
+                    if self
+                        .sched_state
+                        .compare_exchange(
+                            RUNNING,
+                            RUNNING_DIRTY,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    {
+                        return PushOutcome::Delivered;
+                    }
+                }
+                // QUEUED / RUNNING_DIRTY: someone is already on the hook.
+                _ => return PushOutcome::Delivered,
+            }
+        }
+    }
+
+    /// Close the mailbox and hand back every undelivered envelope
+    /// (shutdown path; the caller fails their reply futures).
+    pub fn close(&self) -> Vec<Envelope> {
+        let mut q = self.queue.lock().unwrap();
+        self.closed.store(true, Ordering::Relaxed);
+        q.drain(..).collect()
+    }
+
+    fn pop(&self) -> Option<Envelope> {
+        self.queue.lock().unwrap().pop_front()
+    }
+}
+
+// ---- scheduler ----------------------------------------------------------
+
+/// Point-in-time scheduler counters, surfaced via `NelStats::sched`.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    /// Configured pool size (runnable-worker target).
+    pub pool_target: usize,
+    /// Hard cap on live workers (pool + blocked-compensation spares).
+    pub max_workers: usize,
+    /// Live worker threads right now.
+    pub workers_live: usize,
+    /// Workers currently blocked inside `PFuture::wait`.
+    pub workers_blocked: usize,
+    /// High-water mark of live workers.
+    pub workers_peak: usize,
+    /// Worker threads ever spawned (initial pool + compensation).
+    pub spawns: u64,
+    /// Surplus workers retired after blockers resumed.
+    pub retires: u64,
+    /// Spares spawned because a worker blocked mid-handler.
+    pub compensations: u64,
+    /// Envelopes processed (handler invocations, including missing-handler
+    /// errors).
+    pub handler_runs: u64,
+    /// Scheduling turns (mailbox drains; `handler_runs / turns` is the
+    /// effective batching factor).
+    pub turns: u64,
+    /// Turns served off a foreign shard.
+    pub steals: u64,
+    /// Turns served off the dependency-first lane.
+    pub priority_turns: u64,
+    /// Scheduling turns run by BLOCKED workers in helping mode (pool at
+    /// its cap: no spare could be spawned).
+    pub helps: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    spawns: AtomicU64,
+    retires: AtomicU64,
+    compensations: AtomicU64,
+    handler_runs: AtomicU64,
+    turns: AtomicU64,
+    steals: AtomicU64,
+    priority_turns: AtomicU64,
+    helps: AtomicU64,
+}
+
+pub(crate) struct Shared {
+    me: Weak<Shared>,
+    nel: Weak<NelInner>,
+    trace: Trace,
+    shards: Vec<Mutex<VecDeque<Arc<ParticleEntry>>>>,
+    /// Dependency-first lane: particles activated by a mid-handler send.
+    /// Drained before any shard by every worker, and by blocked workers
+    /// in helping mode.
+    priority: Mutex<VecDeque<Arc<ParticleEntry>>>,
+    /// Count of workers parked on `idle_cv`. Guarded by its own mutex so
+    /// the register-then-recheck sleep protocol has no lost wakeups.
+    idle: Mutex<usize>,
+    idle_cv: Condvar,
+    shutdown: AtomicBool,
+    pool_target: usize,
+    max_workers: usize,
+    next_worker_id: AtomicUsize,
+    /// Live worker threads (monotonic id space is `next_worker_id`).
+    spawned: AtomicUsize,
+    /// Workers currently inside a blocking `wait`.
+    blocked: AtomicUsize,
+    peak: AtomicUsize,
+    c: Counters,
+}
+
+pub(crate) struct Scheduler {
+    shared: Arc<Shared>,
+}
+
+impl Scheduler {
+    /// Build the pool and spawn `pool_target` workers. `nel` is the
+    /// (still-cyclic) back-reference workers use to run handlers.
+    pub fn new(pool_target: usize, nel: Weak<NelInner>, trace: Trace) -> Scheduler {
+        let pool_target = pool_target.max(1);
+        // Compensation headroom: how many spares may back-fill blocked
+        // workers (tokio's blocking-thread cap, scaled to the pool).
+        // Beyond it, blocked workers switch to helping.
+        let max_workers = pool_target * 4 + 4;
+        let shards = (0..pool_target).map(|_| Mutex::new(VecDeque::new())).collect();
+        let shared = Arc::new_cyclic(|me| Shared {
+            me: me.clone(),
+            nel,
+            trace,
+            shards,
+            priority: Mutex::new(VecDeque::new()),
+            idle: Mutex::new(0),
+            idle_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            pool_target,
+            max_workers,
+            next_worker_id: AtomicUsize::new(0),
+            spawned: AtomicUsize::new(0),
+            blocked: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            c: Counters::default(),
+        });
+        for _ in 0..pool_target {
+            shared.spawn_worker(false);
+        }
+        Scheduler { shared }
+    }
+
+    /// Enqueue one newly-runnable particle. `dependency_first` (sends
+    /// issued mid-handler) routes it to the priority lane — see the module
+    /// docs for why that keeps bounded compensation deadlock-free.
+    pub fn schedule(&self, entry: Arc<ParticleEntry>, dependency_first: bool) {
+        if dependency_first {
+            self.shared.schedule_priority(entry);
+        } else {
+            self.shared.schedule(entry);
+        }
+    }
+
+    /// Enqueue a batch of newly-runnable particles: one lock acquisition
+    /// per *shard* (or one lane extend) and one sleeper sweep, not one
+    /// wakeup per particle — the fan-out path.
+    pub fn schedule_batch(&self, entries: Vec<Arc<ParticleEntry>>, dependency_first: bool) {
+        if entries.is_empty() {
+            return;
+        }
+        let many = entries.len() > 1;
+        if dependency_first {
+            self.shared.priority.lock().unwrap().extend(entries);
+        } else {
+            let n = self.shared.shards.len();
+            let mut buckets: Vec<Vec<Arc<ParticleEntry>>> = (0..n).map(|_| Vec::new()).collect();
+            for e in entries {
+                buckets[e.pid.0 as usize % n].push(e);
+            }
+            for (i, b) in buckets.into_iter().enumerate() {
+                if !b.is_empty() {
+                    self.shared.shards[i].lock().unwrap().extend(b);
+                }
+            }
+        }
+        if many {
+            self.shared.wake_all();
+        } else {
+            self.shared.wake_one();
+        }
+    }
+
+    /// Flag the pool down and wake every sleeper. Called from
+    /// `NelInner::drop` AFTER all mailboxes are closed and drained.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wake_all();
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        let sh = &self.shared;
+        SchedStats {
+            pool_target: sh.pool_target,
+            max_workers: sh.max_workers,
+            workers_live: sh.spawned.load(Ordering::Acquire),
+            workers_blocked: sh.blocked.load(Ordering::Acquire),
+            workers_peak: sh.peak.load(Ordering::Acquire),
+            spawns: sh.c.spawns.load(Ordering::Relaxed),
+            retires: sh.c.retires.load(Ordering::Relaxed),
+            compensations: sh.c.compensations.load(Ordering::Relaxed),
+            handler_runs: sh.c.handler_runs.load(Ordering::Relaxed),
+            turns: sh.c.turns.load(Ordering::Relaxed),
+            steals: sh.c.steals.load(Ordering::Relaxed),
+            priority_turns: sh.c.priority_turns.load(Ordering::Relaxed),
+            helps: sh.c.helps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Shared {
+    fn spawn_worker(self: &Arc<Self>, compensation: bool) -> bool {
+        let id = self.next_worker_id.fetch_add(1, Ordering::Relaxed);
+        let live = self.spawned.fetch_add(1, Ordering::AcqRel) + 1;
+        self.peak.fetch_max(live, Ordering::AcqRel);
+        self.c.spawns.fetch_add(1, Ordering::Relaxed);
+        if compensation {
+            self.c.compensations.fetch_add(1, Ordering::Relaxed);
+        }
+        self.trace.record(Event::new(0, None, EventKind::WorkerSpawn, 0));
+        let shared = self.clone();
+        let ok = std::thread::Builder::new()
+            .name(format!("nel-worker-{id}"))
+            .spawn(move || worker_loop(shared, id))
+            .is_ok();
+        if !ok {
+            self.spawned.fetch_sub(1, Ordering::AcqRel);
+            crate::log_error!("nel scheduler: failed to spawn worker {id}");
+        }
+        ok
+    }
+
+    /// Wake one parked worker, if any. Pushers call this AFTER releasing
+    /// the queue lock (idle and queue locks never nest pusher-side).
+    fn wake_one(&self) {
+        let sleepers = self.idle.lock().unwrap();
+        if *sleepers > 0 {
+            self.idle_cv.notify_one();
+        }
+    }
+
+    fn wake_all(&self) {
+        let _guard = self.idle.lock().unwrap();
+        self.idle_cv.notify_all();
+    }
+
+    fn schedule(&self, entry: Arc<ParticleEntry>) {
+        let i = entry.pid.0 as usize % self.shards.len();
+        self.shards[i].lock().unwrap().push_back(entry);
+        self.wake_one();
+    }
+
+    fn schedule_priority(&self, entry: Arc<ParticleEntry>) {
+        self.priority.lock().unwrap().push_back(entry);
+        self.wake_one();
+    }
+
+    /// Pop the dependency-first lane, then the home shard, then steal
+    /// round-robin from the siblings. Returns the task and whether it
+    /// came off the priority lane (its requeue destination).
+    fn find_task(&self, home: usize) -> Option<(Arc<ParticleEntry>, bool)> {
+        if let Some(e) = self.priority.lock().unwrap().pop_front() {
+            self.c.priority_turns.fetch_add(1, Ordering::Relaxed);
+            return Some((e, true));
+        }
+        if let Some(e) = self.shards[home].lock().unwrap().pop_front() {
+            return Some((e, false));
+        }
+        let n = self.shards.len();
+        for k in 1..n {
+            let i = (home + k) % n;
+            if let Some(e) = self.shards[i].lock().unwrap().pop_front() {
+                self.c.steals.fetch_add(1, Ordering::Relaxed);
+                return Some((e, false));
+            }
+        }
+        None
+    }
+
+    /// Cheap emptiness probe used by the sleep protocol (called with the
+    /// idle lock held; queue locks are only ever taken after it on this
+    /// path, and pushers never hold a queue lock while taking idle).
+    fn have_work(&self) -> bool {
+        if !self.priority.lock().unwrap().is_empty() {
+            return true;
+        }
+        self.shards.iter().any(|s| !s.lock().unwrap().is_empty())
+    }
+
+    /// Retire when removing this worker still leaves `pool_target`
+    /// runnable workers (surplus from blocked-worker compensation).
+    fn try_retire(&self) -> bool {
+        loop {
+            let s = self.spawned.load(Ordering::Acquire);
+            let b = self.blocked.load(Ordering::Acquire);
+            if s.saturating_sub(b) <= self.pool_target {
+                return false;
+            }
+            if self
+                .spawned
+                .compare_exchange(s, s - 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.c.retires.fetch_add(1, Ordering::Relaxed);
+                self.trace.record(Event::new(0, None, EventKind::WorkerRetire, 0));
+                return true;
+            }
+        }
+    }
+
+    /// Run one particle off a run queue for the scheduler (a worker's
+    /// normal turn, or a blocked worker helping). Returns false when no
+    /// task was available.
+    fn run_one(&self, home: usize) -> bool {
+        let Some((entry, from_priority)) = self.find_task(home) else {
+            return false;
+        };
+        self.c.turns.fetch_add(1, Ordering::Relaxed);
+        let requeue = match self.nel.upgrade() {
+            Some(inner) => {
+                let nel = Nel { inner };
+                run_mailbox(&nel, &entry, &self.c)
+            }
+            None => {
+                // NEL gone mid-flight: fail whatever is queued.
+                for env in entry.mailbox.close() {
+                    env.reply.complete(Err(PushError::new("NEL shut down")));
+                }
+                false
+            }
+        };
+        if requeue {
+            // Keep dependency work visible to helpers: anything that came
+            // off the lane goes back on the lane.
+            if from_priority {
+                self.schedule_priority(entry);
+            } else {
+                self.schedule(entry);
+            }
+        }
+        true
+    }
+}
+
+impl BlockObserver for Shared {
+    /// A worker is about to block inside a handler. Back-fill the pool so
+    /// runnable workers stay at `pool_target`; at the `max_workers` cap,
+    /// return false — the caller then helps drain the dependency lane
+    /// between waits, which is what makes wait DAGs of any width safe.
+    fn block_begin(&self) -> bool {
+        let outermost = BLOCK_FRAMES.with(|c| {
+            let n = c.get();
+            c.set(n + 1);
+            n == 0
+        });
+        if outermost {
+            self.blocked.fetch_add(1, Ordering::AcqRel);
+        }
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                return true;
+            }
+            let s = self.spawned.load(Ordering::Acquire);
+            let b = self.blocked.load(Ordering::Acquire);
+            if s.saturating_sub(b) >= self.pool_target {
+                return true;
+            }
+            if s >= self.max_workers {
+                return false;
+            }
+            match self.me.upgrade() {
+                Some(me) => {
+                    if !me.spawn_worker(true) {
+                        // cannot grow (OS limit): fall back to helping
+                        return false;
+                    }
+                }
+                None => return true,
+            }
+        }
+    }
+
+    fn block_end(&self) {
+        let outermost = BLOCK_FRAMES.with(|c| {
+            let n = c.get() - 1;
+            c.set(n);
+            n == 0
+        });
+        if outermost {
+            self.blocked.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// One helping turn for a blocked worker: run one pending task —
+    /// lane first, then shards, exactly like a runnable worker's turn
+    /// (`run_one`). Draining shards too matters: a dependency that is
+    /// already QUEUED on a shard (scheduled earlier by a driver send, or
+    /// put back by the fairness requeue) would otherwise be invisible to
+    /// helpers and strand behind a saturated pool. Nested helping is
+    /// bounded — each frame is a full handler run on this worker's stack.
+    fn help(&self) -> bool {
+        let depth = HELP_DEPTH.with(|d| d.get());
+        if depth >= MAX_HELP_DEPTH {
+            return false;
+        }
+        HELP_DEPTH.with(|d| d.set(depth + 1));
+        let ran = self.run_one(0);
+        HELP_DEPTH.with(|d| d.set(depth));
+        if ran {
+            self.c.helps.fetch_add(1, Ordering::Relaxed);
+        }
+        ran
+    }
+}
+
+/// Drain one particle's mailbox (up to `MAILBOX_BATCH` envelopes).
+/// Returns true when the particle must be re-enqueued.
+fn run_mailbox(nel: &Nel, entry: &Arc<ParticleEntry>, c: &Counters) -> bool {
+    let mb = &entry.mailbox;
+    // We hold the only run-queue reference, so we own the QUEUED state.
+    mb.sched_state.store(RUNNING, Ordering::Release);
+    let mut drained = 0;
+    while let Some(env) = mb.pop() {
+        nel.process_envelope(entry, env);
+        c.handler_runs.fetch_add(1, Ordering::Relaxed);
+        drained += 1;
+        if drained >= MAILBOX_BATCH {
+            // Fairness yield: keep ownership as QUEUED and go back to the
+            // run queue. Racing pushers see QUEUED and stay out.
+            mb.sched_state.store(QUEUED, Ordering::Release);
+            return true;
+        }
+    }
+    // Queue observed empty: release unless a push raced in after our last
+    // pop (it would have flipped RUNNING -> RUNNING_DIRTY).
+    match mb
+        .sched_state
+        .compare_exchange(RUNNING, IDLE, Ordering::AcqRel, Ordering::Acquire)
+    {
+        Ok(_) => false,
+        Err(_) => {
+            mb.sched_state.store(QUEUED, Ordering::Release);
+            true
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    let home = id % shared.shards.len();
+    set_block_observer(Some(shared.clone() as Arc<dyn BlockObserver>));
+    let mut retired = false;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        if shared.run_one(home) {
+            continue;
+        }
+        // Nothing runnable: park. Register as a sleeper, re-check for
+        // work that raced in (pushers bump queues BEFORE peeking the
+        // sleeper count, and never hold a queue lock while doing so — so
+        // this recheck-under-idle-lock cannot miss a wakeup), then wait.
+        let mut sleepers = shared.idle.lock().unwrap();
+        if shared.shutdown.load(Ordering::Acquire) || shared.have_work() {
+            continue;
+        }
+        *sleepers += 1;
+        let (guard, res) = shared.idle_cv.wait_timeout(sleepers, IDLE_PARK).unwrap();
+        sleepers = guard;
+        *sleepers -= 1;
+        let timed_out = res.timed_out();
+        drop(sleepers);
+        // A full quiet park with surplus capacity = this compensation
+        // worker is no longer needed (grace period: back-to-back blocking
+        // rounds reuse warm spares instead of respawning threads).
+        if timed_out && shared.try_retire() {
+            retired = true;
+            break;
+        }
+    }
+    if !retired {
+        shared.spawned.fetch_sub(1, Ordering::AcqRel);
+    }
+    set_block_observer(None);
+}

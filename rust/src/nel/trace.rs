@@ -12,7 +12,7 @@ use crate::particle::Pid;
 pub enum EventKind {
     /// A message was enqueued to a particle's mailbox.
     MsgSend,
-    /// A particle's control thread began a handler.
+    /// A scheduler worker began one of the particle's handlers.
     HandlerStart,
     HandlerEnd,
     /// A compute job began executing on a device stream.
@@ -27,6 +27,10 @@ pub enum EventKind {
     Create,
     /// Handler panic / failure surfaced to a future.
     Error,
+    /// Control-plane worker lifecycle (nel::sched): pool growth from
+    /// blocked-worker compensation and surplus retirement.
+    WorkerSpawn,
+    WorkerRetire,
 }
 
 impl EventKind {
@@ -42,6 +46,8 @@ impl EventKind {
             EventKind::Transfer => "transfer",
             EventKind::Create => "create",
             EventKind::Error => "error",
+            EventKind::WorkerSpawn => "worker_spawn",
+            EventKind::WorkerRetire => "worker_retire",
         }
     }
 }

@@ -2,13 +2,17 @@
 //! the async-await future type that `send`/`get` return.
 //!
 //! A particle wraps a NN (its flat parameter vector, managed by the device
-//! layer), a logical thread of execution (nel::particle spawns one control
-//! thread per particle processing its mailbox sequentially), and message
-//! passing (handlers registered per message name). This module holds the
-//! plain data types; the machinery lives in nel.
+//! layer), a logical thread of execution (the M:N scheduler in nel::sched
+//! runs its mailbox sequentially on a fixed worker pool, never two
+//! handlers of one particle at once), and message passing (handlers
+//! registered per message name). This module holds the plain data types —
+//! including the continuation-capable `PFuture` — the machinery lives in
+//! nel.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -104,8 +108,63 @@ impl From<anyhow::Error> for PushError {
 
 pub type PResult = Result<Value, PushError>;
 
+/// Observer for threads that may block inside `PFuture::wait`. The M:N
+/// control-plane scheduler (nel::sched) registers one per worker thread so
+/// a handler entering a blocking wait can be compensated for (a spare
+/// worker keeps the pool from starving — the tokio `block_in_place`
+/// pattern). Threads without an observer (drivers, device streams) block
+/// plain.
+pub trait BlockObserver: Send + Sync {
+    /// The current thread is about to block on a pending future. Returns
+    /// true when the pool has (or just spawned) runnable coverage — the
+    /// caller may park. Returns false when no more spares are allowed
+    /// (worker cap): the caller must actively `help` between short waits
+    /// so pending dependency work cannot be stranded by blocked workers.
+    fn block_begin(&self) -> bool;
+    /// The current thread resumed.
+    fn block_end(&self);
+    /// Run one unit of pending scheduler work, if any. Called by a
+    /// blocked worker when `block_begin` returned false. Returns whether
+    /// anything was run.
+    fn help(&self) -> bool;
+}
+
+/// Tick between `help` attempts for a blocked worker in helping mode.
+const HELP_TICK: Duration = Duration::from_millis(1);
+
+thread_local! {
+    static BLOCK_OBSERVER: RefCell<Option<Arc<dyn BlockObserver>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear) the blocking observer for the current thread.
+pub fn set_block_observer(obs: Option<Arc<dyn BlockObserver>>) {
+    BLOCK_OBSERVER.with(|o| *o.borrow_mut() = obs);
+}
+
+/// True when the current thread is a scheduler worker (it has a block
+/// observer installed). The NEL uses this to route sends issued from
+/// inside handlers — whose reply the sender is likely to block on — into
+/// the scheduler's dependency-first lane.
+pub(crate) fn on_scheduler_worker() -> bool {
+    BLOCK_OBSERVER.with(|o| o.borrow().is_some())
+}
+
+/// RAII half of a blocking scope: `block_end` on drop (the paired
+/// `block_begin` already ran).
+struct BlockEndGuard<'a>(&'a Arc<dyn BlockObserver>);
+
+impl Drop for BlockEndGuard<'_> {
+    fn drop(&mut self) {
+        self.0.block_end();
+    }
+}
+
+/// Continuation attached to a pending future; runs on the completer's
+/// thread, so keep it small (the shipped ones flip an atomic or enqueue).
+type Continuation = Box<dyn FnOnce(&PResult) + Send + 'static>;
+
 enum FutureState {
-    Pending,
+    Pending(Vec<Continuation>),
     Ready(PResult),
 }
 
@@ -131,7 +190,7 @@ impl PFuture {
     pub fn new() -> PFuture {
         PFuture {
             inner: Arc::new(FutureInner {
-                state: Mutex::new(FutureState::Pending),
+                state: Mutex::new(FutureState::Pending(Vec::new())),
                 cv: Condvar::new(),
             }),
         }
@@ -146,54 +205,149 @@ impl PFuture {
 
     /// Resolve the future. Second completion is ignored (the first result
     /// wins — matters when a panic unwinds past an already-completed job).
+    /// Continuations registered via `on_ready` fire here, on the
+    /// completer's thread, strictly AFTER the state lock is released —
+    /// a continuation may itself wait on / complete other futures.
     pub fn complete(&self, v: PResult) {
         let mut st = self.inner.state.lock().unwrap();
-        if matches!(*st, FutureState::Pending) {
-            *st = FutureState::Ready(v);
-            self.inner.cv.notify_all();
+        match std::mem::replace(&mut *st, FutureState::Ready(v)) {
+            FutureState::Pending(cbs) => {
+                self.inner.cv.notify_all();
+                if cbs.is_empty() {
+                    return;
+                }
+                // clone the just-stored result for the continuations (one
+                // lock acquisition total; tensor payloads are Arc bumps)
+                let v = match &*st {
+                    FutureState::Ready(v) => v.clone(),
+                    FutureState::Pending(_) => unreachable!("stored Ready above"),
+                };
+                drop(st);
+                for cb in cbs {
+                    cb(&v);
+                }
+            }
+            FutureState::Ready(first) => {
+                // already resolved: restore the first result
+                *st = FutureState::Ready(first);
+            }
         }
     }
 
-    /// Block until resolved (paper: `future.wait()`).
-    pub fn wait(&self) -> PResult {
-        let mut st = self.inner.state.lock().unwrap();
-        loop {
-            match &*st {
-                FutureState::Ready(v) => return v.clone(),
-                FutureState::Pending => st = self.inner.cv.wait(st).unwrap(),
+    /// Register a continuation. If the future is already resolved the
+    /// callback runs immediately on the calling thread; otherwise it runs
+    /// on whichever thread calls `complete` (without the state lock held).
+    pub fn on_ready<F>(&self, f: F)
+    where
+        F: FnOnce(&PResult) + Send + 'static,
+    {
+        let mut f = Some(f);
+        let ready = {
+            let mut st = self.inner.state.lock().unwrap();
+            match &mut *st {
+                FutureState::Pending(cbs) => {
+                    cbs.push(Box::new(f.take().unwrap()));
+                    None
+                }
+                FutureState::Ready(v) => Some(v.clone()),
             }
+        };
+        if let Some(v) = ready {
+            (f.take().unwrap())(&v);
         }
+    }
+
+    /// Block until resolved (paper: `future.wait()`). A scheduler worker
+    /// blocking here announces itself (see `BlockObserver`) so the pool
+    /// can compensate with a spare worker — or, when the pool is at its
+    /// worker cap, the blocked worker itself drains pending dependency
+    /// work between short waits so progress never depends on a thread
+    /// that cannot be spawned.
+    pub fn wait(&self) -> PResult {
+        if let Some(v) = self.try_get() {
+            return v;
+        }
+        self.block_until(None).expect("deadline-less wait resolves")
     }
 
     /// Non-blocking poll.
     pub fn try_get(&self) -> Option<PResult> {
         match &*self.inner.state.lock().unwrap() {
             FutureState::Ready(v) => Some(v.clone()),
-            FutureState::Pending => None,
+            FutureState::Pending(_) => None,
         }
     }
 
     /// Wait with a timeout (deadlock containment in tests).
     pub fn wait_timeout(&self, d: Duration) -> Option<PResult> {
+        if let Some(v) = self.try_get() {
+            return Some(v);
+        }
+        self.block_until(Some(std::time::Instant::now() + d))
+    }
+
+    /// Shared blocking path: plain parking for observer-less threads,
+    /// park-with-compensation or help-while-waiting for scheduler
+    /// workers. `None` deadline = wait forever.
+    fn block_until(&self, deadline: Option<std::time::Instant>) -> Option<PResult> {
+        let obs = BLOCK_OBSERVER.with(|o| o.borrow().clone());
+        let Some(obs) = obs else {
+            return self.park_until(deadline);
+        };
+        let compensated = obs.block_begin();
+        let _end = BlockEndGuard(&obs);
+        if compensated {
+            return self.park_until(deadline);
+        }
+        // Worker cap reached: help at full speed while we block — drain
+        // queued work back-to-back, re-checking our future between tasks,
+        // and only park (briefly) once the scheduler has nothing runnable.
+        loop {
+            if let Some(v) = self.try_get() {
+                return Some(v);
+            }
+            if obs.help() {
+                continue;
+            }
+            let now = std::time::Instant::now();
+            if let Some(dl) = deadline {
+                if now >= dl {
+                    return None;
+                }
+            }
+            let tick = match deadline {
+                Some(dl) => HELP_TICK.min(dl - now),
+                None => HELP_TICK,
+            };
+            if let Some(v) = self.park_until(Some(now + tick)) {
+                return Some(v);
+            }
+        }
+    }
+
+    /// Condvar park until resolved or `deadline`.
+    fn park_until(&self, deadline: Option<std::time::Instant>) -> Option<PResult> {
         let mut st = self.inner.state.lock().unwrap();
-        let deadline = std::time::Instant::now() + d;
         loop {
             match &*st {
                 FutureState::Ready(v) => return Some(v.clone()),
-                FutureState::Pending => {
-                    let now = std::time::Instant::now();
-                    if now >= deadline {
-                        return None;
-                    }
-                    let (g, res) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
-                    st = g;
-                    if res.timed_out() {
-                        if let FutureState::Ready(v) = &*st {
-                            return Some(v.clone());
+                FutureState::Pending(_) => match deadline {
+                    None => st = self.inner.cv.wait(st).unwrap(),
+                    Some(dl) => {
+                        let now = std::time::Instant::now();
+                        if now >= dl {
+                            return None;
                         }
-                        return None;
+                        let (g, res) = self.inner.cv.wait_timeout(st, dl - now).unwrap();
+                        st = g;
+                        if res.timed_out() {
+                            if let FutureState::Ready(v) = &*st {
+                                return Some(v.clone());
+                            }
+                            return None;
+                        }
                     }
-                }
+                },
             }
         }
     }
@@ -202,11 +356,58 @@ impl PFuture {
     pub fn wait_all(futs: &[PFuture]) -> Result<Vec<Value>, PushError> {
         futs.iter().map(|f| f.wait()).collect()
     }
+
+    /// Aggregate a batch into ONE future that resolves when every input
+    /// has (atomic countdown, no per-future lock-step): to
+    /// `Value::List(results)` in input order, or to the first error by
+    /// input position. The whole batch always runs to completion — unlike
+    /// a serial `wait_all` loop, a late error never leaves earlier futures
+    /// unobserved.
+    pub fn join_all(futs: &[PFuture]) -> PFuture {
+        if futs.is_empty() {
+            return PFuture::ready(Ok(Value::List(Vec::new())));
+        }
+        let out = PFuture::new();
+        let n = futs.len();
+        let slots: Arc<Mutex<Vec<Option<PResult>>>> = Arc::new(Mutex::new(vec![None; n]));
+        let remaining = Arc::new(AtomicUsize::new(n));
+        for (i, f) in futs.iter().enumerate() {
+            let slots = slots.clone();
+            let remaining = remaining.clone();
+            let out = out.clone();
+            f.on_ready(move |r| {
+                slots.lock().unwrap()[i] = Some(r.clone());
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    // last input resolved: aggregate outside the lock so
+                    // out's own continuations never run under it
+                    let resolved: Vec<Option<PResult>> =
+                        std::mem::take(&mut *slots.lock().unwrap());
+                    let mut vals = Vec::with_capacity(resolved.len());
+                    let mut err = None;
+                    for s in resolved {
+                        match s.expect("all inputs resolved") {
+                            Ok(v) => vals.push(v),
+                            Err(e) => {
+                                err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    out.complete(match err {
+                        Some(e) => Err(e),
+                        None => Ok(Value::List(vals)),
+                    });
+                }
+            });
+        }
+        out
+    }
 }
 
 /// A particle's per-message handler table (paper: the `receive` dict).
-/// Handlers run on the particle's control thread with a `ParticleCtx`
-/// (defined in nel) and may block on futures from other particles.
+/// Handlers run (non-reentrantly per particle) on the scheduler's worker
+/// pool with a `ParticleCtx` (defined in nel) and may block on futures
+/// from other particles.
 pub type Handler =
     Arc<dyn Fn(&crate::nel::ParticleCtx, &[Value]) -> PResult + Send + Sync + 'static>;
 
@@ -275,5 +476,116 @@ mod tests {
         let bad = PFuture::ready(Err(PushError::new("x")));
         assert!(PFuture::wait_all(&[ok.clone()]).is_ok());
         assert!(PFuture::wait_all(&[ok, bad]).is_err());
+    }
+
+    #[test]
+    fn on_ready_fires_for_pending_and_resolved() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        // registered before completion: fires from complete()
+        let f = PFuture::new();
+        let h = hits.clone();
+        f.on_ready(move |r| {
+            assert!(r.is_ok());
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+        f.complete(Ok(Value::Unit));
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        // registered after completion: fires inline
+        let h = hits.clone();
+        f.on_ready(move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn second_complete_does_not_refire_continuations() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let f = PFuture::new();
+        let h = hits.clone();
+        f.on_ready(move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        f.complete(Ok(Value::Usize(1)));
+        f.complete(Ok(Value::Usize(2)));
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        assert_eq!(f.wait().unwrap(), Value::Usize(1));
+    }
+
+    #[test]
+    fn join_all_preserves_order_across_threads() {
+        let futs: Vec<PFuture> = (0..8).map(|_| PFuture::new()).collect();
+        let joined = PFuture::join_all(&futs);
+        assert!(joined.try_get().is_none());
+        // complete in reverse order from another thread
+        let futs2 = futs.clone();
+        let h = std::thread::spawn(move || {
+            for (i, f) in futs2.iter().enumerate().rev() {
+                f.complete(Ok(Value::Usize(i)));
+            }
+        });
+        let vals = joined.wait().unwrap().list().unwrap();
+        h.join().unwrap();
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(*v, Value::Usize(i));
+        }
+    }
+
+    #[test]
+    fn join_all_first_error_by_position_wins() {
+        let a = PFuture::new();
+        let b = PFuture::new();
+        let c = PFuture::new();
+        let joined = PFuture::join_all(&[a.clone(), b.clone(), c.clone()]);
+        c.complete(Err(PushError::new("late")));
+        b.complete(Err(PushError::new("early")));
+        a.complete(Ok(Value::Unit));
+        // b is the first error in input order even though c resolved first
+        assert_eq!(joined.wait().unwrap_err().msg, "early");
+    }
+
+    #[test]
+    fn join_all_empty_resolves_immediately() {
+        let joined = PFuture::join_all(&[]);
+        assert_eq!(joined.wait().unwrap(), Value::List(Vec::new()));
+    }
+
+    #[test]
+    fn block_observer_scopes_waits() {
+        struct Counter {
+            begin: AtomicUsize,
+            end: AtomicUsize,
+        }
+        impl BlockObserver for Counter {
+            fn block_begin(&self) -> bool {
+                self.begin.fetch_add(1, Ordering::SeqCst);
+                true // park mode; helping is exercised by the sched tests
+            }
+            fn block_end(&self) {
+                self.end.fetch_add(1, Ordering::SeqCst);
+            }
+            fn help(&self) -> bool {
+                false
+            }
+        }
+        let c = Arc::new(Counter { begin: AtomicUsize::new(0), end: AtomicUsize::new(0) });
+        let f = PFuture::new();
+        let f2 = f.clone();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            set_block_observer(Some(c2 as Arc<dyn BlockObserver>));
+            // resolved future: no blocking, no observer calls
+            let r = PFuture::ready(Ok(Value::Unit)).wait();
+            assert!(r.is_ok());
+            let out = f2.wait();
+            set_block_observer(None);
+            out
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        f.complete(Ok(Value::F32(1.0)));
+        h.join().unwrap().unwrap();
+        assert_eq!(c.begin.load(Ordering::SeqCst), 1);
+        assert_eq!(c.end.load(Ordering::SeqCst), 1);
     }
 }

@@ -78,6 +78,14 @@ impl PushDist {
         self.nel.send(None, pid, msg, args)
     }
 
+    /// Batched `p_launch` of one message to many particles: the label is
+    /// interned once, counters bump once, and the scheduler enqueues the
+    /// whole fan-out in one pass (see `Nel::broadcast`). The returned
+    /// futures are in `pids` order; aggregate with `PFuture::join_all`.
+    pub fn broadcast(&self, pids: &[Pid], msg: &str, args: Vec<Value>) -> Vec<PFuture> {
+        self.nel.broadcast(None, pids, msg, args)
+    }
+
     /// Wait on futures (paper: `p_wait`).
     pub fn p_wait(&self, futs: &[PFuture]) -> Result<Vec<Value>, PushError> {
         PFuture::wait_all(futs)

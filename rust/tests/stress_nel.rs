@@ -1,214 +1,629 @@
 //! Concurrency stress tests: message storms, deep cache pressure, and
-//! deadlock containment over real artifacts. These are the failure modes
-//! the paper's NEL design (§4.2) must survive.
-//! Requires `make artifacts` and a `--features pjrt` build.
-#![cfg(feature = "pjrt")]
+//! deadlock containment. These are the failure modes the paper's NEL
+//! design (§4.2) must survive.
+//!
+//! The scheduler tests (top half) are hermetic — parameter-less particles,
+//! no artifacts, no PJRT — and pin down the M:N control plane's contract:
+//! OS thread count stays O(workers + devices) for O(1000) particles,
+//! per-particle mailbox FIFO, handler non-reentrancy, and blocked-worker
+//! compensation for leader/follower wait DAGs on a small pool.
+//!
+//! The artifact-backed tests (bottom) additionally require `make
+//! artifacts` and a `--features pjrt` build.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use push::device::CostModel;
 use push::nel::CreateOpts;
 use push::particle::{handler, PFuture, Value};
-use push::runtime::{artifacts_dir, Manifest, Tensor};
-use push::util::rng::Rng;
-use push::{NelConfig, PushDist};
+use push::runtime::{DType, ModelSpec};
+use push::{Nel, NelConfig, Pid};
 
-fn manifest() -> Manifest {
-    Manifest::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
-}
-
-fn cfg(devices: usize, cache: usize) -> NelConfig {
+fn sched_cfg(devices: usize, workers: usize) -> NelConfig {
     NelConfig {
         num_devices: devices,
-        cache_size: cache,
+        cache_size: 4,
         cost: CostModel::free(),
+        control_workers: workers,
         seed: 1,
         ..NelConfig::default()
     }
 }
 
-#[test]
-fn many_particles_tiny_cache_message_storm() {
-    // 24 particles on 2 devices with 2 cache slots each; fire interleaved
-    // STEP and GET messages from the driver and random cross-particle GETs
-    // from handlers. Everything must resolve; parameters stay intact.
-    let m = manifest();
-    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 2)).unwrap();
-    let peek = handler(|ctx, args| {
-        // read a random other particle's params (cross-particle traffic)
-        let target = push::Pid(args[0].usize()? as u32);
-        let t = ctx.get(target).wait()?.tensor()?;
-        Ok(Value::Usize(t.element_count()))
-    });
-    let step = handler(|ctx, args| {
-        let x = args[0].as_tensor()?.clone();
-        let y = args[1].as_tensor()?.clone();
-        ctx.step(x, y, 0.01).wait()
-    });
-    let n = 24usize;
-    let pids = pd
-        .p_create_n(n, |_| CreateOpts {
-            receive: [
-                ("PEEK".to_string(), peek.clone()),
-                ("STEP".to_string(), step.clone()),
-            ]
-            .into_iter()
-            .collect(),
+/// A parameter-less model spec: the scheduler tests exercise the control
+/// plane only, so no artifacts are involved.
+fn dummy_model() -> Arc<ModelSpec> {
+    Arc::new(ModelSpec {
+        name: "sched_stress_dummy".to_string(),
+        param_count: 0,
+        task: "regress".to_string(),
+        x_shape: vec![1],
+        y_shape: vec![1],
+        y_dtype: DType::F32,
+        arch: "none".to_string(),
+        meta: BTreeMap::new(),
+        entries: BTreeMap::new(),
+    })
+}
+
+/// Current OS thread count of this process (Linux); None elsewhere.
+fn os_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+fn no_params_particle(nel: &Nel, model: &Arc<ModelSpec>, msg: &str, h: push::particle::Handler) -> Pid {
+    nel.p_create(
+        model.clone(),
+        CreateOpts {
+            no_params: true,
+            receive: [(msg.to_string(), h)].into_iter().collect(),
             ..CreateOpts::default()
-        })
+        },
+    )
+    .unwrap()
+}
+
+/// The headline scale test: 1024 particles on a 16-worker pool across 2
+/// devices run a full broadcast round. With thread-per-particle this
+/// process would gain ~1024 threads; the M:N scheduler keeps the delta at
+/// O(workers) (bounds below are generous because other tests in this
+/// binary run concurrently and own their own pools).
+#[test]
+fn thousand_particles_bounded_threads_full_round() {
+    const N: usize = 1024;
+    const WORKERS: usize = 16;
+    let nel = Nel::new(sched_cfg(2, WORKERS)).unwrap();
+    let after_pool = os_threads();
+
+    let hits = Arc::new(AtomicUsize::new(0));
+    let h = hits.clone();
+    let ping = handler(move |ctx, _| {
+        h.fetch_add(1, Ordering::Relaxed);
+        Ok(Value::Usize(ctx.pid.0 as usize))
+    });
+    let model = dummy_model();
+    let pids: Vec<Pid> = (0..N)
+        .map(|_| no_params_particle(&nel, &model, "PING", ping.clone()))
+        .collect();
+
+    // Particle creation spawns NO threads. (Noise tolerance: sibling
+    // tests may be mid-setup; thread-per-particle would add exactly N.)
+    if let (Some(t1), Some(t2)) = (after_pool, os_threads()) {
+        let delta = t2.saturating_sub(t1);
+        assert!(
+            delta < N / 4,
+            "creating {N} particles grew the process by {delta} threads — \
+             particle creation must not spawn threads"
+        );
+    }
+
+    // Full message round via batched fan-out; everything must resolve.
+    let futs = nel.broadcast(None, &pids, "PING", vec![]);
+    assert_eq!(futs.len(), N);
+    let vals = PFuture::join_all(&futs)
+        .wait_timeout(Duration::from_secs(120))
+        .expect("broadcast round deadlocked")
+        .unwrap()
+        .list()
+        .unwrap();
+    for (v, p) in vals.iter().zip(&pids) {
+        assert_eq!(*v, Value::Usize(p.0 as usize));
+    }
+    assert_eq!(hits.load(Ordering::Relaxed), N);
+
+    // The worker pool is bounded even after the round: live workers never
+    // exceed the compensation cap, and the OS thread delta stays
+    // O(workers + devices), not O(particles).
+    let stats = nel.stats();
+    assert_eq!(stats.msgs_sent, N as u64);
+    assert_eq!(stats.sched.handler_runs, N as u64);
+    assert_eq!(stats.sched.pool_target, WORKERS);
+    assert!(
+        stats.sched.workers_peak <= stats.sched.max_workers,
+        "peak {} exceeded cap {}",
+        stats.sched.workers_peak,
+        stats.sched.max_workers
+    );
+    if let (Some(t1), Some(t3)) = (after_pool, os_threads()) {
+        let delta = t3.saturating_sub(t1);
+        assert!(
+            delta < N / 4,
+            "after the round the process grew by {delta} threads for {N} particles"
+        );
+    }
+}
+
+/// Leader/follower wait DAG on a deliberately tiny pool: the leader's
+/// handler blocks mid-execution on all 256 followers' replies, so the
+/// scheduler MUST compensate for the blocked worker or the round
+/// deadlocks (followers could never be scheduled on a saturated pool).
+#[test]
+fn leader_follower_wait_dag_on_small_pool() {
+    let nel = Nel::new(sched_cfg(2, 4)).unwrap();
+    let model = dummy_model();
+    let work = handler(|ctx, _| {
+        // busy (not future-blocked) long enough that the leader's wait
+        // reliably observes a pending join
+        std::thread::sleep(Duration::from_micros(200));
+        Ok(Value::Usize(ctx.pid.0 as usize))
+    });
+    let followers: Vec<Pid> = (0..256)
+        .map(|_| no_params_particle(&nel, &model, "WORK", work.clone()))
+        .collect();
+    let fls = followers.clone();
+    let round = handler(move |ctx, _| {
+        let futs = ctx.broadcast(&fls, "WORK", vec![]);
+        let vals = PFuture::join_all(&futs).wait()?.list()?;
+        Ok(Value::Usize(vals.len()))
+    });
+    let leader = no_params_particle(&nel, &model, "ROUND", round);
+
+    for r in 0..3 {
+        let got = nel
+            .send(None, leader, "ROUND", vec![])
+            .wait_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|| panic!("wait-DAG round {r} deadlocked"))
+            .unwrap();
+        assert_eq!(got, Value::Usize(followers.len()));
+    }
+    let stats = nel.stats();
+    assert!(
+        stats.sched.compensations >= 1,
+        "blocked leader never triggered compensation: {:?}",
+        stats.sched
+    );
+    assert!(stats.sched.workers_peak <= stats.sched.max_workers);
+}
+
+/// Per-particle mailbox FIFO survives the M:N scheduler: 500 sequenced
+/// messages from one sender arrive in order (batched drains included).
+#[test]
+fn mailbox_fifo_per_particle_preserved() {
+    let nel = Nel::new(sched_cfg(1, 8)).unwrap();
+    let model = dummy_model();
+    let seq = handler(|ctx, args| {
+        let i = args[0].usize()?;
+        let mut got = match ctx.state_take("seq") {
+            Some(Value::List(v)) => v,
+            _ => Vec::new(),
+        };
+        got.push(Value::Usize(i));
+        ctx.state_set("seq", Value::List(got));
+        Ok(Value::Unit)
+    });
+    let read = handler(|ctx, _| Ok(ctx.state_get("seq").unwrap_or(Value::List(Vec::new()))));
+    let p = nel
+        .p_create(
+            model,
+            CreateOpts {
+                no_params: true,
+                receive: [
+                    ("SEQ".to_string(), seq),
+                    ("READ".to_string(), read),
+                ]
+                .into_iter()
+                .collect(),
+                ..CreateOpts::default()
+            },
+        )
         .unwrap();
 
-    let model = pd.model().clone();
-    let mut rng = Rng::new(7);
-    let xn: usize = model.x_shape.iter().product();
-    let yn: usize = model.y_shape.iter().product();
-    let x = Tensor::f32(model.x_shape.clone(), rng.normal_vec(xn));
-    let y = Tensor::f32(model.y_shape.clone(), rng.normal_vec(yn));
+    const N: usize = 500;
+    let futs: Vec<PFuture> = (0..N)
+        .map(|i| nel.send(None, p, "SEQ", vec![Value::Usize(i)]))
+        .collect();
+    PFuture::join_all(&futs)
+        .wait_timeout(Duration::from_secs(60))
+        .expect("sequence stalled")
+        .unwrap();
+    let got = nel.send(None, p, "READ", vec![]).wait().unwrap().list().unwrap();
+    assert_eq!(got.len(), N);
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(*v, Value::Usize(i), "mailbox FIFO violated at {i}");
+    }
+}
 
-    let mut futs: Vec<PFuture> = Vec::new();
-    for round in 0..6 {
-        for (i, p) in pids.iter().enumerate() {
-            if (i + round) % 3 == 0 {
-                let target = pids[rng.below(n)];
-                futs.push(pd.p_launch(*p, "PEEK", vec![Value::Usize(target.0 as usize)]));
-            } else {
-                futs.push(pd.p_launch(
-                    *p,
-                    "STEP",
-                    vec![Value::Tensor(x.clone()), Value::Tensor(y.clone()), Value::F32(0.01)],
-                ));
+/// Handler non-reentrancy: a 4-thread driver storm against ONE particle
+/// must never observe two of its handlers in flight at once.
+#[test]
+fn handlers_never_run_concurrently_for_one_particle() {
+    let nel = Nel::new(sched_cfg(2, 8)).unwrap();
+    let model = dummy_model();
+    let active = Arc::new(AtomicUsize::new(0));
+    let violations = Arc::new(AtomicUsize::new(0));
+    let (a, v) = (active.clone(), violations.clone());
+    let h = handler(move |_ctx, _| {
+        if a.fetch_add(1, Ordering::SeqCst) != 0 {
+            v.fetch_add(1, Ordering::SeqCst);
+        }
+        std::thread::sleep(Duration::from_micros(100));
+        a.fetch_sub(1, Ordering::SeqCst);
+        Ok(Value::Unit)
+    });
+    let p = no_params_particle(&nel, &model, "HIT", h);
+
+    let mut drivers = Vec::new();
+    for _ in 0..4 {
+        let nel2 = nel.clone();
+        drivers.push(std::thread::spawn(move || {
+            let futs: Vec<PFuture> =
+                (0..100).map(|_| nel2.send(None, p, "HIT", vec![])).collect();
+            PFuture::join_all(&futs)
+                .wait_timeout(Duration::from_secs(60))
+                .expect("storm deadlocked")
+                .unwrap();
+        }));
+    }
+    for d in drivers {
+        d.join().unwrap();
+    }
+    assert_eq!(violations.load(Ordering::SeqCst), 0, "handler ran reentrantly");
+    assert_eq!(nel.stats().sched.handler_runs, 400);
+}
+
+/// Handlers blocking on device-job futures (the common `ctx.step().wait()`
+/// shape, here simulated with cross-particle sends) drain fully on a tiny
+/// pool — compensation keeps the pool live without ballooning past its cap.
+#[test]
+fn chained_sends_on_tiny_pool_resolve() {
+    let nel = Nel::new(sched_cfg(1, 2)).unwrap();
+    let model = dummy_model();
+    let sink = handler(|_ctx, _| Ok(Value::Usize(1)));
+    let sinks: Vec<Pid> = (0..8)
+        .map(|_| no_params_particle(&nel, &model, "SINK", sink.clone()))
+        .collect();
+    let targets = sinks.clone();
+    let relay = handler(move |ctx, args| {
+        // block mid-handler on another particle's handler (depth-1 DAG)
+        let i = args[0].usize()?;
+        ctx.send(targets[i % targets.len()], "SINK", vec![]).wait()
+    });
+    let relays: Vec<Pid> = (0..64)
+        .map(|_| no_params_particle(&nel, &model, "RELAY", relay.clone()))
+        .collect();
+
+    let futs: Vec<PFuture> = relays
+        .iter()
+        .enumerate()
+        .map(|(i, p)| nel.send(None, *p, "RELAY", vec![Value::Usize(i)]))
+        .collect();
+    let vals = PFuture::join_all(&futs)
+        .wait_timeout(Duration::from_secs(60))
+        .expect("relay storm deadlocked")
+        .unwrap()
+        .list()
+        .unwrap();
+    assert_eq!(vals.len(), 64);
+    let stats = nel.stats();
+    assert!(stats.sched.workers_peak <= stats.sched.max_workers);
+}
+
+/// The adversarial shape for bounded compensation: 32 chains of depth 2
+/// (root waits on mid, mid waits on leaf), far wider than the worker cap
+/// of a 2-worker pool (2*4+4 = 12). Once every live worker is blocked the
+/// pool cannot grow; blocked workers must HELP drain the dependency lane
+/// themselves or the leaves strand and this hangs forever. Slow leaves
+/// keep chains in flight so the cap is actually reached.
+#[test]
+fn deep_wide_wait_chains_resolve_at_worker_cap() {
+    const W: usize = 32;
+    let nel = Nel::new(sched_cfg(1, 2)).unwrap();
+    let model = dummy_model();
+    let leaf = handler(|ctx, _| {
+        std::thread::sleep(Duration::from_millis(5));
+        Ok(Value::Usize(ctx.pid.0 as usize))
+    });
+    let leaves: Vec<Pid> = (0..W)
+        .map(|_| no_params_particle(&nel, &model, "LEAF", leaf.clone()))
+        .collect();
+    let l2 = leaves.clone();
+    let mid = handler(move |ctx, args| {
+        let i = args[0].usize()?;
+        ctx.send(l2[i], "LEAF", vec![]).wait()
+    });
+    let mids: Vec<Pid> = (0..W)
+        .map(|_| no_params_particle(&nel, &model, "MID", mid.clone()))
+        .collect();
+    let m2 = mids.clone();
+    let root = handler(move |ctx, args| {
+        let i = args[0].usize()?;
+        ctx.send(m2[i], "MID", vec![Value::Usize(i)]).wait()
+    });
+    let roots: Vec<Pid> = (0..W)
+        .map(|_| no_params_particle(&nel, &model, "ROOT", root.clone()))
+        .collect();
+
+    let futs: Vec<PFuture> = roots
+        .iter()
+        .enumerate()
+        .map(|(i, p)| nel.send(None, *p, "ROOT", vec![Value::Usize(i)]))
+        .collect();
+    let vals = PFuture::join_all(&futs)
+        .wait_timeout(Duration::from_secs(120))
+        .expect("depth-2 chain wave deadlocked at the worker cap")
+        .unwrap()
+        .list()
+        .unwrap();
+    for (v, c) in vals.iter().zip(&leaves) {
+        assert_eq!(*v, Value::Usize(c.0 as usize));
+    }
+    let stats = nel.stats();
+    assert!(
+        stats.sched.workers_peak <= stats.sched.max_workers,
+        "pool grew past its cap: {:?}",
+        stats.sched
+    );
+}
+
+/// A dependency that lives on a SHARD (driver-scheduled, not in the
+/// priority lane) must stay reachable when every live worker is blocked:
+/// 20 roots on a 1-worker pool (cap 8) all block on one shared gate
+/// future; the particle that completes the gate is then scheduled by a
+/// driver send. Shard FIFO admits every root before the release particle,
+/// so by the time it can run, the pool is saturated — only a blocked
+/// worker in helping mode can pop it off the shard.
+#[test]
+fn shard_queued_dependency_reachable_at_worker_cap() {
+    const ROOTS: usize = 20;
+    let nel = Nel::new(sched_cfg(1, 1)).unwrap();
+    let model = dummy_model();
+    let gate = PFuture::new();
+    let g = gate.clone();
+    let waiter = handler(move |_ctx, _| g.wait());
+    let roots: Vec<Pid> = (0..ROOTS)
+        .map(|_| no_params_particle(&nel, &model, "WAIT", waiter.clone()))
+        .collect();
+    let g = gate.clone();
+    let release = handler(move |_ctx, _| {
+        g.complete(Ok(Value::Usize(42)));
+        Ok(Value::Unit)
+    });
+    let releaser = no_params_particle(&nel, &model, "RELEASE", release);
+
+    let futs: Vec<PFuture> = roots
+        .iter()
+        .map(|p| nel.send(None, *p, "WAIT", vec![]))
+        .collect();
+    // Give the pool time to saturate on the gate, then schedule the
+    // releasing particle through the normal (shard) path.
+    std::thread::sleep(Duration::from_millis(50));
+    let rel = nel.send(None, releaser, "RELEASE", vec![]);
+    let vals = PFuture::join_all(&futs)
+        .wait_timeout(Duration::from_secs(60))
+        .expect("shard-queued dependency stranded behind a saturated pool")
+        .unwrap()
+        .list()
+        .unwrap();
+    assert_eq!(vals.len(), ROOTS);
+    for v in vals {
+        assert_eq!(v, Value::Usize(42));
+    }
+    rel.wait_timeout(Duration::from_secs(10)).expect("release hung").unwrap();
+    let stats = nel.stats();
+    assert!(
+        stats.sched.helps >= 1,
+        "saturated pool resolved without helping — scheduling hole: {:?}",
+        stats.sched
+    );
+}
+
+// ---- artifact-backed stress (requires `make artifacts` + --features pjrt)
+
+#[cfg(feature = "pjrt")]
+mod with_artifacts {
+    use std::time::Duration;
+
+    use push::device::CostModel;
+    use push::nel::CreateOpts;
+    use push::particle::{handler, PFuture, Value};
+    use push::runtime::{artifacts_dir, Manifest, Tensor};
+    use push::util::rng::Rng;
+    use push::{NelConfig, PushDist};
+
+    fn manifest() -> Manifest {
+        Manifest::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    fn cfg(devices: usize, cache: usize) -> NelConfig {
+        NelConfig {
+            num_devices: devices,
+            cache_size: cache,
+            cost: CostModel::free(),
+            seed: 1,
+            ..NelConfig::default()
+        }
+    }
+
+    #[test]
+    fn many_particles_tiny_cache_message_storm() {
+        // 24 particles on 2 devices with 2 cache slots each; fire interleaved
+        // STEP and GET messages from the driver and random cross-particle GETs
+        // from handlers. Everything must resolve; parameters stay intact.
+        let m = manifest();
+        let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 2)).unwrap();
+        let peek = handler(|ctx, args| {
+            // read a random other particle's params (cross-particle traffic)
+            let target = push::Pid(args[0].usize()? as u32);
+            let t = ctx.get(target).wait()?.tensor()?;
+            Ok(Value::Usize(t.element_count()))
+        });
+        let step = handler(|ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let y = args[1].as_tensor()?.clone();
+            ctx.step(x, y, 0.01).wait()
+        });
+        let n = 24usize;
+        let pids = pd
+            .p_create_n(n, |_| CreateOpts {
+                receive: [
+                    ("PEEK".to_string(), peek.clone()),
+                    ("STEP".to_string(), step.clone()),
+                ]
+                .into_iter()
+                .collect(),
+                ..CreateOpts::default()
+            })
+            .unwrap();
+
+        let model = pd.model().clone();
+        let mut rng = Rng::new(7);
+        let xn: usize = model.x_shape.iter().product();
+        let yn: usize = model.y_shape.iter().product();
+        let x = Tensor::f32(model.x_shape.clone(), rng.normal_vec(xn));
+        let y = Tensor::f32(model.y_shape.clone(), rng.normal_vec(yn));
+
+        let mut futs: Vec<PFuture> = Vec::new();
+        for round in 0..6 {
+            for (i, p) in pids.iter().enumerate() {
+                if (i + round) % 3 == 0 {
+                    let target = pids[rng.below(n)];
+                    futs.push(pd.p_launch(*p, "PEEK", vec![Value::Usize(target.0 as usize)]));
+                } else {
+                    futs.push(pd.p_launch(
+                        *p,
+                        "STEP",
+                        vec![Value::Tensor(x.clone()), Value::Tensor(y.clone()), Value::F32(0.01)],
+                    ));
+                }
             }
         }
-    }
-    for (i, f) in futs.iter().enumerate() {
-        let r = f
-            .wait_timeout(Duration::from_secs(120))
-            .unwrap_or_else(|| panic!("future {i} did not resolve (deadlock?)"));
-        r.unwrap();
-    }
-    let stats = pd.stats();
-    let d0 = &stats.devices[0];
-    assert!(d0.swaps_out > 0, "expected heavy cache churn");
-    // all parameters intact after the storm
-    let snap = pd.drain_params().unwrap();
-    assert_eq!(snap.len(), n);
-    for t in snap.values() {
-        assert!(t.as_f32().iter().all(|v| v.is_finite()));
-    }
-}
-
-#[test]
-fn handler_chains_across_devices_resolve() {
-    // A -> B -> C chained sends across 3 devices (waits form a DAG).
-    let m = manifest();
-    let pd = PushDist::new(&m, "mlp_tiny", cfg(3, 2)).unwrap();
-    let hop = handler(|ctx, args| {
-        let chain = args[0].clone().list()?;
-        if chain.is_empty() {
-            return Ok(Value::Usize(ctx.pid.0 as usize));
+        for (i, f) in futs.iter().enumerate() {
+            let r = f
+                .wait_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|| panic!("future {i} did not resolve (deadlock?)"));
+            r.unwrap();
         }
-        let next = push::Pid(chain[0].usize()? as u32);
-        let rest = Value::List(chain[1..].to_vec());
-        let got = ctx.send(next, "HOP", vec![rest]).wait()?;
-        Ok(Value::List(vec![Value::Usize(ctx.pid.0 as usize), got]))
-    });
-    let pids = pd
-        .p_create_n(3, |_| CreateOpts {
-            receive: [("HOP".to_string(), hop.clone())].into_iter().collect(),
-            ..CreateOpts::default()
-        })
-        .unwrap();
-    let chain = Value::List(vec![
-        Value::Usize(pids[1].0 as usize),
-        Value::Usize(pids[2].0 as usize),
-    ]);
-    let out = pd
-        .p_launch(pids[0], "HOP", vec![chain])
-        .wait_timeout(Duration::from_secs(60))
-        .expect("chain deadlocked")
-        .unwrap();
-    // nested [0, [1, 2]]
-    let lvl0 = out.list().unwrap();
-    assert_eq!(lvl0[0], Value::Usize(pids[0].0 as usize));
-    let lvl1 = lvl0[1].clone().list().unwrap();
-    assert_eq!(lvl1[0], Value::Usize(pids[1].0 as usize));
-    assert_eq!(lvl1[1], Value::Usize(pids[2].0 as usize));
-}
-
-#[test]
-fn failures_do_not_poison_other_particles() {
-    // One particle panics on every message; its neighbors keep training.
-    let m = manifest();
-    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
-    let boom = handler(|_ctx, _| panic!("chaos"));
-    let step = handler(|ctx, args| {
-        let x = args[0].as_tensor()?.clone();
-        let y = args[1].as_tensor()?.clone();
-        ctx.step(x, y, 0.01).wait()
-    });
-    let bad = pd
-        .p_create(CreateOpts {
-            receive: [("STEP".to_string(), boom)].into_iter().collect(),
-            ..CreateOpts::default()
-        })
-        .unwrap();
-    let good = pd
-        .p_create(CreateOpts {
-            receive: [("STEP".to_string(), step)].into_iter().collect(),
-            ..CreateOpts::default()
-        })
-        .unwrap();
-    let model = pd.model().clone();
-    let mut rng = Rng::new(3);
-    let xn: usize = model.x_shape.iter().product();
-    let yn: usize = model.y_shape.iter().product();
-    let x = Tensor::f32(model.x_shape.clone(), rng.normal_vec(xn));
-    let y = Tensor::f32(model.y_shape.clone(), rng.normal_vec(yn));
-    let args = || vec![Value::Tensor(x.clone()), Value::Tensor(y.clone()), Value::F32(0.01)];
-
-    for _ in 0..5 {
-        assert!(pd.p_launch(bad, "STEP", args()).wait().is_err());
-        assert!(pd.p_launch(good, "STEP", args()).wait().is_ok());
+        let stats = pd.stats();
+        let d0 = &stats.devices[0];
+        assert!(d0.swaps_out > 0, "expected heavy cache churn");
+        // all parameters intact after the storm
+        let snap = pd.drain_params().unwrap();
+        assert_eq!(snap.len(), n);
+        for t in snap.values() {
+            assert!(t.as_f32().iter().all(|v| v.is_finite()));
+        }
     }
-    assert_eq!(pd.stats().handler_errors, 5);
-}
 
-#[test]
-fn device_pinning_respected_and_out_of_range_rejected() {
-    let m = manifest();
-    let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 2)).unwrap();
-    let a = pd.p_create(CreateOpts { device: Some(1), ..CreateOpts::default() }).unwrap();
-    assert_eq!(pd.nel().device_of(a), Some(1));
-    let err = pd.p_create(CreateOpts { device: Some(9), ..CreateOpts::default() });
-    assert!(err.is_err());
-}
-
-#[test]
-fn no_params_particles_carry_state_only() {
-    // The paper §C.2 floats encoding SWAG moments as extra particles; a
-    // particle can be created without parameters and still serve messages.
-    let m = manifest();
-    let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
-    let bump = handler(|ctx, _| {
-        let n = match ctx.state_get("count") {
-            Some(Value::Usize(n)) => n,
-            _ => 0,
-        };
-        ctx.state_set("count", Value::Usize(n + 1));
-        Ok(Value::Usize(n + 1))
-    });
-    let p = pd
-        .p_create(CreateOpts {
-            no_params: true,
-            receive: [("BUMP".to_string(), bump)].into_iter().collect(),
-            state: vec![("count".to_string(), Value::Usize(10))],
-            ..CreateOpts::default()
-        })
-        .unwrap();
-    for want in 11..=13 {
-        let got = pd.p_launch(p, "BUMP", vec![]).wait().unwrap();
-        assert_eq!(got, Value::Usize(want));
+    #[test]
+    fn handler_chains_across_devices_resolve() {
+        // A -> B -> C chained sends across 3 devices (waits form a DAG).
+        let m = manifest();
+        let pd = PushDist::new(&m, "mlp_tiny", cfg(3, 2)).unwrap();
+        let hop = handler(|ctx, args| {
+            let chain = args[0].clone().list()?;
+            if chain.is_empty() {
+                return Ok(Value::Usize(ctx.pid.0 as usize));
+            }
+            let next = push::Pid(chain[0].usize()? as u32);
+            let rest = Value::List(chain[1..].to_vec());
+            let got = ctx.send(next, "HOP", vec![rest]).wait()?;
+            Ok(Value::List(vec![Value::Usize(ctx.pid.0 as usize), got]))
+        });
+        let pids = pd
+            .p_create_n(3, |_| CreateOpts {
+                receive: [("HOP".to_string(), hop.clone())].into_iter().collect(),
+                ..CreateOpts::default()
+            })
+            .unwrap();
+        let chain = Value::List(vec![
+            Value::Usize(pids[1].0 as usize),
+            Value::Usize(pids[2].0 as usize),
+        ]);
+        let out = pd
+            .p_launch(pids[0], "HOP", vec![chain])
+            .wait_timeout(Duration::from_secs(60))
+            .expect("chain deadlocked")
+            .unwrap();
+        // nested [0, [1, 2]]
+        let lvl0 = out.list().unwrap();
+        assert_eq!(lvl0[0], Value::Usize(pids[0].0 as usize));
+        let lvl1 = lvl0[1].clone().list().unwrap();
+        assert_eq!(lvl1[0], Value::Usize(pids[1].0 as usize));
+        assert_eq!(lvl1[1], Value::Usize(pids[2].0 as usize));
     }
-    // reading its (nonexistent) params errors but does not crash
-    assert!(pd.get(p).wait().is_err());
+
+    #[test]
+    fn failures_do_not_poison_other_particles() {
+        // One particle panics on every message; its neighbors keep training.
+        let m = manifest();
+        let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
+        let boom = handler(|_ctx, _| panic!("chaos"));
+        let step = handler(|ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let y = args[1].as_tensor()?.clone();
+            ctx.step(x, y, 0.01).wait()
+        });
+        let bad = pd
+            .p_create(CreateOpts {
+                receive: [("STEP".to_string(), boom)].into_iter().collect(),
+                ..CreateOpts::default()
+            })
+            .unwrap();
+        let good = pd
+            .p_create(CreateOpts {
+                receive: [("STEP".to_string(), step)].into_iter().collect(),
+                ..CreateOpts::default()
+            })
+            .unwrap();
+        let model = pd.model().clone();
+        let mut rng = Rng::new(3);
+        let xn: usize = model.x_shape.iter().product();
+        let yn: usize = model.y_shape.iter().product();
+        let x = Tensor::f32(model.x_shape.clone(), rng.normal_vec(xn));
+        let y = Tensor::f32(model.y_shape.clone(), rng.normal_vec(yn));
+        let args = || vec![Value::Tensor(x.clone()), Value::Tensor(y.clone()), Value::F32(0.01)];
+
+        for _ in 0..5 {
+            assert!(pd.p_launch(bad, "STEP", args()).wait().is_err());
+            assert!(pd.p_launch(good, "STEP", args()).wait().is_ok());
+        }
+        assert_eq!(pd.stats().handler_errors, 5);
+    }
+
+    #[test]
+    fn device_pinning_respected_and_out_of_range_rejected() {
+        let m = manifest();
+        let pd = PushDist::new(&m, "mlp_tiny", cfg(2, 2)).unwrap();
+        let a = pd.p_create(CreateOpts { device: Some(1), ..CreateOpts::default() }).unwrap();
+        assert_eq!(pd.nel().device_of(a), Some(1));
+        let err = pd.p_create(CreateOpts { device: Some(9), ..CreateOpts::default() });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn no_params_particles_carry_state_only() {
+        // The paper §C.2 floats encoding SWAG moments as extra particles; a
+        // particle can be created without parameters and still serve messages.
+        let m = manifest();
+        let pd = PushDist::new(&m, "mlp_tiny", cfg(1, 2)).unwrap();
+        let bump = handler(|ctx, _| {
+            let n = match ctx.state_get("count") {
+                Some(Value::Usize(n)) => n,
+                _ => 0,
+            };
+            ctx.state_set("count", Value::Usize(n + 1));
+            Ok(Value::Usize(n + 1))
+        });
+        let p = pd
+            .p_create(CreateOpts {
+                no_params: true,
+                receive: [("BUMP".to_string(), bump)].into_iter().collect(),
+                state: vec![("count".to_string(), Value::Usize(10))],
+                ..CreateOpts::default()
+            })
+            .unwrap();
+        for want in 11..=13 {
+            let got = pd.p_launch(p, "BUMP", vec![]).wait().unwrap();
+            assert_eq!(got, Value::Usize(want));
+        }
+        // reading its (nonexistent) params errors but does not crash
+        assert!(pd.get(p).wait().is_err());
+    }
 }
