@@ -1,7 +1,9 @@
 //! Figures 4 & 7 regeneration (scaled): particle scaling across simulated
 //! devices for {ViT/MNIST-like, CGCNN/MD17-like, UNet/advection} (+ the
-//! Figure-7 extras with PUSH_BENCH_FULL=1) under ensemble / multi-SWAG /
-//! SVGD, plus the handwritten 1-device baselines.
+//! Figure-7 extras with PUSH_BENCH_FULL=1) under all four algorithm
+//! families — ensemble / multi-SWAG / SVGD / SGMCMC (SGLD and SGHMC
+//! chains) — plus the handwritten 1-device baselines, so the scaling
+//! curves compare every family on the same grid.
 //!
 //! `cargo bench --bench fig4_scaling` runs a fast grid by default
 //! (2 batches/epoch, particles {1,2,4} x devices {1,2,4}); set

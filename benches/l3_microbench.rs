@@ -4,7 +4,8 @@
 //! message dispatch through the M:N scheduler, particle creation at 1k
 //! scale (vs a thread-per-particle control), broadcast fan-out (vs serial
 //! sends), device-job dispatch, context-switch (swap) cost under cache
-//! pressure, parameter views, and the native SVGD kernel math.
+//! pressure, parameter views, the native SVGD kernel math, and the SGMCMC
+//! chain-step body (SGLD update + native linear gradient).
 //!
 //! Hermetic by default: the zero-copy-plane cases (params_view, SVGD
 //! stacking round, send-label interning) need no artifacts and no PJRT.
@@ -181,7 +182,8 @@ fn main() {
             PFuture::join_all(&futs).wait().unwrap();
         });
         run(&mut results, "send_fanout_serial_256", 20, 200, || {
-            let futs: Vec<PFuture> = pids.iter().map(|p| nel.send(None, *p, "FAN", vec![])).collect();
+            let futs: Vec<PFuture> =
+                pids.iter().map(|p| nel.send(None, *p, "FAN", vec![])).collect();
             PFuture::wait_all(&futs).unwrap();
         });
     }
@@ -269,6 +271,44 @@ fn main() {
                 push::infer::svgd_update_native(&p, &g, 10.0).unwrap();
             });
         }
+    }
+
+    // ---- SGMCMC native update math (hermetic) -----------------------------
+    // The per-particle chain-step body: detach the gradient, scale by -eps,
+    // inject Gaussian noise, apply in place. Plus the closed-form linear
+    // gradient the hermetic tests and the sgmcmc_regression example drive.
+    {
+        use push::infer::sgmcmc::{linear_native_model, noise_rng, ModelSource};
+        let d = 50_000usize;
+        let mut rng = Rng::new(9);
+        let mut params = Tensor::f32(vec![d], rng.normal_vec(d));
+        let grad = Tensor::f32(vec![d], rng.normal_vec(d));
+        let mut t = 0u64;
+        run(&mut results, "sgld_native_step_50k", 10, 300, || {
+            let mut u = grad.clone();
+            let s = u.as_f32_mut(); // COW detach, like the handler's grad
+            for v in s.iter_mut() {
+                *v *= -1e-3;
+            }
+            let sigma = (2.0f32 * 1e-3 * 1e-4).sqrt();
+            let mut nrng = noise_rng(1, 0, t);
+            for v in u.as_f32_mut() {
+                *v += sigma * nrng.normal();
+            }
+            ops::axpy(&mut params, 1.0, &u);
+            t += 1;
+        });
+
+        let (gb, gd) = (16usize, 64usize);
+        let model = linear_native_model();
+        let ModelSource::Native { grad: gfn, .. } = model else { unreachable!() };
+        let mut rng = Rng::new(11);
+        let w = Tensor::f32(vec![gd], rng.normal_vec(gd));
+        let x = Tensor::f32(vec![gb, gd], rng.normal_vec(gb * gd));
+        let y = Tensor::f32(vec![gb, 1], rng.normal_vec(gb));
+        run(&mut results, "sgmcmc_linear_grad_16x64", 20, 1000, || {
+            let _ = gfn(&w, &x, &y).unwrap();
+        });
     }
 
     // ---- tensor stacking (leader-side gather cost) ------------------------

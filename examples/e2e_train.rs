@@ -48,11 +48,15 @@ fn main() -> Result<()> {
     let model = pd.model().clone();
     let lr = lr_for(&model);
     println!(
-        "e2e: {model_name} ({} params x {particles} particles = {:.1}M effective) on {devices} devices",
+        "e2e: {model_name} ({} params x {particles} particles = {:.1}M effective) \
+         on {devices} devices",
         model.param_count,
         (model.param_count * particles) as f64 / 1e6
     );
-    println!("     {steps} steps = {epochs} epochs x {batches_per_epoch} batches, batch {}, lr {lr}", model.batch());
+    println!(
+        "     {steps} steps = {epochs} epochs x {batches_per_epoch} batches, batch {}, lr {lr}",
+        model.batch()
+    );
 
     // train/test split of the synthetic-MNIST substitute
     let n_train = model.batch() * batches_per_epoch;
@@ -115,7 +119,9 @@ fn main() -> Result<()> {
     let std_acc = dataset_accuracy(&test, model.batch(), |x| std_algo.predict_mean(x))?;
 
     println!("\n== e2e results ==");
-    println!("training wall time      : {train_secs:.1}s for {step_count} steps x {particles} particles");
+    println!(
+        "training wall time      : {train_secs:.1}s for {step_count} steps x {particles} particles"
+    );
     println!("multi-SWAG test accuracy: {:.2}%  (majority vote, 5 draws/particle)", 100.0 * ms_acc);
     println!("standard test accuracy  : {:.2}%  (single network, same steps)", 100.0 * std_acc);
     let stats = algo.pd().stats();

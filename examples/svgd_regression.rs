@@ -104,7 +104,9 @@ fn main() -> Result<()> {
     let div_svgd = diversity(&svgd_params);
     let div_ens = diversity(&ens_params);
     println!("\n== particle diversity ==");
-    println!("parameter space (mean pairwise distance): svgd {div_svgd:.3} vs ensemble {div_ens:.3}");
+    println!(
+        "parameter space (mean pairwise distance): svgd {div_svgd:.3} vs ensemble {div_ens:.3}"
+    );
 
     // kernel interaction strength under the median heuristic: off-diagonal
     // k values ~ exp(-0.5 log n) — the repulsion term is ACTIVE, unlike a

@@ -18,8 +18,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::data::DataLoader;
+use crate::infer::sgmcmc::{noise_rng, Schedule, SgmcmcAlgo};
 use crate::infer::svgd::svgd_update_native;
 use crate::infer::TrainReport;
+use crate::runtime::tensor::ops;
 use crate::runtime::{Manifest, ModelSpec, RuntimeClient, Tensor};
 
 /// Shared state of a sequential baseline run.
@@ -132,8 +134,8 @@ impl Baseline {
                         let (mean, sq, n) = &mut moments[i];
                         let w_old = *n as f32 / (*n as f32 + 1.0);
                         let w_new = 1.0 / (*n as f32 + 1.0);
-                        crate::runtime::tensor::ops::scale_add(mean, w_old, w_new, &self.params[i]);
-                        crate::runtime::tensor::ops::scale_add_sq(sq, w_old, w_new, &self.params[i]);
+                        ops::scale_add(mean, w_old, w_new, &self.params[i]);
+                        ops::scale_add_sq(sq, w_old, w_new, &self.params[i]);
                         *n += 1;
                     }
                 }
@@ -171,6 +173,71 @@ impl Baseline {
                 let updates = svgd_update_native(&self.params, &grads, lengthscale)?;
                 for (p, u) in self.params.iter_mut().zip(&updates) {
                     crate::runtime::tensor::ops::axpy(p, -lr, u);
+                }
+            }
+            report.push(
+                loss / (batches.len() * self.n()).max(1) as f64,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        Ok(report)
+    }
+
+    /// Sequential SGMCMC (SGLD / SGHMC): one chain per member, host-side
+    /// momentum, same update math and noise streams as the Push version
+    /// (infer::sgmcmc) with member index as the chain id. The baseline is
+    /// a timing control, so it skips the O(1)-per-step reservoir
+    /// bookkeeping.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_sgmcmc(
+        &mut self,
+        loader: &mut DataLoader,
+        epochs: usize,
+        algo: SgmcmcAlgo,
+        schedule: &Schedule,
+        temperature: f32,
+        friction: f32,
+        seed: u64,
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport::new(match algo {
+            SgmcmcAlgo::Sgld => "baseline_sgld",
+            SgmcmcAlgo::Sghmc => "baseline_sghmc",
+        });
+        let d = self.model.param_count;
+        let mut momenta: Vec<Tensor> = (0..self.n()).map(|_| Tensor::zeros(vec![d])).collect();
+        let mut clocks = vec![0usize; self.n()];
+        for _ in 0..epochs {
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0f64;
+            for b in &batches {
+                for i in 0..self.n() {
+                    let (l, g) = self.grad_one(i, &b.x, &b.y)?;
+                    loss += l as f64;
+                    let t = clocks[i];
+                    let eps = schedule.step_size(t);
+                    let mut rng = noise_rng(seed, i as u64, t as u64);
+                    // Same operation order as the particle handler:
+                    // u = −ε g + noise (then += (1−α) v for SGHMC).
+                    let mut u = g;
+                    for uv in u.as_f32_mut() {
+                        *uv *= -eps;
+                    }
+                    let sigma = match algo {
+                        SgmcmcAlgo::Sgld => (2.0 * eps * temperature).sqrt(),
+                        SgmcmcAlgo::Sghmc => (2.0 * friction * temperature * eps).sqrt(),
+                    };
+                    if sigma > 0.0 {
+                        for uv in u.as_f32_mut() {
+                            *uv += sigma * rng.normal();
+                        }
+                    }
+                    if algo == SgmcmcAlgo::Sghmc {
+                        ops::scale_add(&mut u, 1.0, 1.0 - friction, &momenta[i]);
+                        momenta[i] = u.clone();
+                    }
+                    ops::axpy(&mut self.params[i], 1.0, &u);
+                    clocks[i] = t + 1;
                 }
             }
             report.push(

@@ -42,9 +42,12 @@ pub fn bench_header() {
     );
 }
 
-/// Human-scale duration formatting.
+/// Human-scale duration formatting. NaN (an unmeasured duration, e.g.
+/// `TrainReport::mean_epoch_secs` of an empty report) renders as "n/a".
 pub fn fmt_secs(s: f64) -> String {
-    if s >= 1.0 {
+    if s.is_nan() {
+        "n/a".to_string()
+    } else if s >= 1.0 {
         format!("{s:.3}s")
     } else if s >= 1e-3 {
         format!("{:.3}ms", s * 1e3)
@@ -70,5 +73,6 @@ mod tests {
         assert!(fmt_secs(2.0).ends_with('s'));
         assert!(fmt_secs(0.002).ends_with("ms"));
         assert!(fmt_secs(2e-6).ends_with("us"));
+        assert_eq!(fmt_secs(f64::NAN), "n/a");
     }
 }

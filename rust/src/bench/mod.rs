@@ -26,12 +26,16 @@ use anyhow::Result;
 use crate::data::{synth, Dataset};
 use crate::runtime::ModelSpec;
 
-/// Inference method selector shared by the drivers.
+/// Inference method selector shared by the drivers. Covers the four
+/// algorithm families: deep ensembles, (multi-)SWAG, SVGD, and the SGMCMC
+/// chains (SGLD / SGHMC).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
     Ensemble,
     MultiSwag,
     Svgd,
+    Sgld,
+    Sghmc,
 }
 
 impl Method {
@@ -40,6 +44,8 @@ impl Method {
             Method::Ensemble => "ensemble",
             Method::MultiSwag => "multi_swag",
             Method::Svgd => "svgd",
+            Method::Sgld => "sgld",
+            Method::Sghmc => "sghmc",
         }
     }
 
@@ -48,12 +54,23 @@ impl Method {
             "ensemble" => Some(Method::Ensemble),
             "multi_swag" | "multiswag" | "swag" => Some(Method::MultiSwag),
             "svgd" => Some(Method::Svgd),
+            "sgld" => Some(Method::Sgld),
+            "sghmc" => Some(Method::Sghmc),
             _ => None,
         }
     }
 
-    pub fn all() -> [Method; 3] {
-        [Method::Ensemble, Method::MultiSwag, Method::Svgd]
+    /// One representative per algorithm family (the scaling figures'
+    /// method axis): ensemble, multi-SWAG, SVGD, and SGLD + SGHMC for the
+    /// SGMCMC family.
+    pub fn all() -> [Method; 5] {
+        [
+            Method::Ensemble,
+            Method::MultiSwag,
+            Method::Svgd,
+            Method::Sgld,
+            Method::Sghmc,
+        ]
     }
 }
 

@@ -37,6 +37,11 @@ impl Row {
             if key == k {
                 return match v {
                     Json::Str(s) => s.clone(),
+                    // NaN means "this metric was never measured" (e.g.
+                    // TrainReport::final_loss of an empty report) — render
+                    // it honestly instead of a bare "NaN" leaking into
+                    // tables.
+                    Json::Num(n) if n.is_nan() => "n/a".to_string(),
                     Json::Num(n) if n.fract() == 0.0 && n.abs() < 1e12 => {
                         format!("{}", *n as i64)
                     }
@@ -60,11 +65,22 @@ impl Default for Row {
 pub struct Report {
     pub name: String,
     pub rows: Vec<Row>,
+    /// When set, `print` renders a per-column mean row with this label
+    /// under the table and `save` writes it as a separate top-level
+    /// `aggregate` object — NEVER as a data row, so grid consumers don't
+    /// pick up a bogus point whose axis columns are averaged coordinates.
+    pub aggregate_label: Option<String>,
 }
 
 impl Report {
     pub fn new(name: &str) -> Report {
-        Report { name: name.to_string(), rows: Vec::new() }
+        Report { name: name.to_string(), rows: Vec::new(), aggregate_label: None }
+    }
+
+    /// Enable the aggregate mean row (see `aggregate_label`).
+    pub fn with_aggregate(mut self, label: &str) -> Report {
+        self.aggregate_label = Some(label.to_string());
+        self
     }
 
     pub fn push(&mut self, row: Row) {
@@ -100,37 +116,90 @@ impl Report {
                 widths[i] = widths[i].max(c.len());
             }
         }
+        let agg_cells: Option<Vec<String>> = self.aggregate_label.as_ref().map(|label| {
+            let agg = self.aggregate_row(label);
+            cols.iter().map(|c| agg.cell(c)).collect()
+        });
+        if let Some(row) = &agg_cells {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
         println!("== {} ==", self.name);
-        let header: Vec<String> = cols
-            .iter()
-            .zip(&widths)
-            .map(|(c, w)| format!("{c:>w$}"))
-            .collect();
-        println!("{}", header.join("  "));
-        for row in &cells {
-            let line: Vec<String> = row
-                .iter()
+        let fmt_line = |row: &[String]| {
+            row.iter()
                 .zip(&widths)
                 .map(|(c, w)| format!("{c:>w$}"))
-                .collect();
-            println!("{}", line.join("  "));
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_line(&cols));
+        for row in &cells {
+            println!("{}", fmt_line(row));
+        }
+        if let Some(row) = &agg_cells {
+            println!("{}", fmt_line(row));
         }
     }
 
-    /// Write `bench_results/<name>.json`.
+    /// Column-wise mean over all rows, skipping NaN (and non-finite)
+    /// cells per column instead of letting one unmeasured value poison
+    /// the aggregate. String columns are skipped except the first, which
+    /// carries `label`; columns with no finite values come out NaN (and
+    /// render as "n/a").
+    pub fn aggregate_row(&self, label: &str) -> Row {
+        let mut agg = Row::new();
+        let mut labeled = false;
+        for col in self.columns() {
+            let mut sum = 0.0f64;
+            let mut n = 0usize;
+            let mut numeric = false;
+            for r in &self.rows {
+                for (k, v) in &r.0 {
+                    if k == &col {
+                        if let Json::Num(x) = v {
+                            numeric = true;
+                            if x.is_finite() {
+                                sum += x;
+                                n += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            if numeric {
+                agg = agg.num(&col, if n > 0 { sum / n as f64 } else { f64::NAN });
+            } else if !labeled {
+                agg = agg.str(&col, label);
+                labeled = true;
+            }
+        }
+        agg
+    }
+
+    /// Write `bench_results/<name>.json`. NaN cells are serialized as
+    /// `null` (bare NaN is not valid JSON and used to silently corrupt
+    /// the output file).
     pub fn save(&self, dir: impl Into<PathBuf>) -> Result<PathBuf> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
         let path = dir.join(format!("{}.json", self.name));
-        let rows: Vec<Json> = self
-            .rows
-            .iter()
-            .map(|r| Json::Obj(r.0.iter().cloned().collect()))
-            .collect();
-        let j = obj(vec![
+        let sanitize = |v: &Json| match v {
+            Json::Num(n) if !n.is_finite() => Json::Null,
+            other => other.clone(),
+        };
+        let to_obj = |r: &Row| {
+            Json::Obj(r.0.iter().map(|(k, v)| (k.clone(), sanitize(v))).collect())
+        };
+        let rows: Vec<Json> = self.rows.iter().map(to_obj).collect();
+        let mut fields = vec![
             ("experiment", Json::Str(self.name.clone())),
             ("rows", Json::Arr(rows)),
-        ]);
+        ];
+        if let Some(label) = &self.aggregate_label {
+            fields.push(("aggregate", to_obj(&self.aggregate_row(label))));
+        }
+        let j = obj(fields);
         let mut f = std::fs::File::create(&path)?;
         f.write_all(j.pretty().as_bytes())?;
         Ok(path)
@@ -160,6 +229,58 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         let j = Json::parse(&text).unwrap();
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nan_renders_na_and_saves_as_null() {
+        let mut rep = Report::new("unit_test_nan");
+        rep.push(Row::new().str("arch", "vit").num("loss", f64::NAN).num("secs", 1.0));
+        assert_eq!(rep.rows[0].cell("loss"), "n/a");
+        assert_eq!(rep.rows[0].cell("secs"), "1");
+        let dir = std::env::temp_dir().join(format!("push-bench-nan-{}", std::process::id()));
+        let p = rep.save(&dir).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        // Bare NaN is not valid JSON — the file must still parse, with the
+        // unmeasured cell as null.
+        let j = Json::parse(&text).expect("NaN must not corrupt the JSON output");
+        let row = &j.get("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("loss"), Some(&Json::Null));
+        assert_eq!(row.get("secs"), Some(&Json::Num(1.0)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn aggregate_skips_nan_cells() {
+        let mut rep = Report::new("unit_test_agg");
+        rep.push(Row::new().str("arch", "a").num("loss", 1.0).num("secs", 2.0));
+        rep.push(Row::new().str("arch", "b").num("loss", f64::NAN).num("secs", 4.0));
+        rep.push(Row::new().str("arch", "c").num("loss", 3.0).num("secs", f64::NAN));
+        let agg = rep.aggregate_row("mean");
+        assert_eq!(agg.cell("arch"), "mean");
+        assert_eq!(agg.cell("loss"), "2", "NaN excluded: (1 + 3) / 2");
+        assert_eq!(agg.cell("secs"), "3", "NaN excluded: (2 + 4) / 2");
+        // a column that is all-NaN aggregates to n/a, not a poisoned mean
+        let mut rep2 = Report::new("unit_test_agg2");
+        rep2.push(Row::new().str("arch", "a").num("loss", f64::NAN));
+        assert_eq!(rep2.aggregate_row("mean").cell("loss"), "n/a");
+    }
+
+    #[test]
+    fn aggregate_saves_separately_not_as_a_row() {
+        let mut rep = Report::new("unit_test_agg_save").with_aggregate("mean");
+        rep.push(Row::new().str("arch", "a").int("particles", 2).num("secs", 1.0));
+        rep.push(Row::new().str("arch", "b").int("particles", 4).num("secs", 3.0));
+        rep.print();
+        let dir = std::env::temp_dir().join(format!("push-bench-agg-{}", std::process::id()));
+        let p = rep.save(&dir).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        // data rows stay clean (no synthetic "mean" grid point)...
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        // ...and the aggregate lands in its own top-level object
+        let agg = j.get("aggregate").expect("aggregate object present");
+        assert_eq!(agg.get("arch").unwrap().as_str(), Some("mean"));
+        assert_eq!(agg.get("secs").unwrap().as_f64(), Some(2.0));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

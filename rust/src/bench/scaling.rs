@@ -7,7 +7,10 @@ use crate::bench::report::{Report, Row};
 use crate::bench::{data_for, lr_for, Method};
 use crate::data::DataLoader;
 use crate::device::CostModel;
-use crate::infer::{DeepEnsemble, Infer, MultiSwag, Svgd, SvgdConfig, SwagConfig};
+use crate::infer::{
+    DeepEnsemble, Infer, MultiSwag, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Svgd,
+    SvgdConfig, SwagConfig,
+};
 use crate::nel::NelConfig;
 use crate::pd::PushDist;
 use crate::runtime::Manifest;
@@ -107,6 +110,23 @@ pub fn run_one(
             pd,
             SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() },
         )?),
+        Method::Sgld | Method::Sghmc => {
+            let algo = if method == Method::Sgld { SgmcmcAlgo::Sgld } else { SgmcmcAlgo::Sghmc };
+            Box::new(SgMcmc::new(
+                pd,
+                SgmcmcConfig {
+                    particles,
+                    algo,
+                    schedule: Schedule::Constant { eps: lr },
+                    temperature: 1e-4,
+                    burn_in: opts.batches, // one epoch of burn-in
+                    thin: 1,
+                    max_samples: 16,
+                    seed: opts.seed,
+                    ..SgmcmcConfig::default()
+                },
+            )?)
+        }
     };
     // warmup epoch (PJRT compiles) excluded from both metrics
     let (warmup, measured) = if opts.epochs > 1 { (1, opts.epochs - 1) } else { (0, opts.epochs) };
@@ -155,6 +175,24 @@ pub fn run_baseline(
         Method::Ensemble => b.train_ensemble(&mut loader, opts.epochs, lr)?,
         Method::MultiSwag => b.train_multiswag(&mut loader, opts.epochs, 0, lr)?.0,
         Method::Svgd => b.train_svgd(&mut loader, opts.epochs, lr, 10.0)?,
+        Method::Sgld => b.train_sgmcmc(
+            &mut loader,
+            opts.epochs,
+            SgmcmcAlgo::Sgld,
+            &Schedule::Constant { eps: lr },
+            1e-4,
+            0.1,
+            opts.seed,
+        )?,
+        Method::Sghmc => b.train_sgmcmc(
+            &mut loader,
+            opts.epochs,
+            SgmcmcAlgo::Sghmc,
+            &Schedule::Constant { eps: lr },
+            1e-4,
+            0.1,
+            opts.seed,
+        )?,
     };
     let secs = if report.epochs.len() > 1 {
         report.epochs[1..].iter().map(|e| e.secs).sum::<f64>() / (report.epochs.len() - 1) as f64
@@ -173,7 +211,9 @@ pub fn run_figure(
     methods: &[Method],
     opts: &ScaleOpts,
 ) -> Result<Report> {
-    let mut rep = Report::new(name);
+    // The per-column mean (NaN cells skipped) renders under the table and
+    // saves as a separate "aggregate" object — not as a data row.
+    let mut rep = Report::new(name).with_aggregate("mean");
     for arch in archs {
         for method in methods {
             for &dev in &opts.devices {
@@ -232,7 +272,7 @@ pub fn run_stress(
     particles_base: &[usize],
     opts: &ScaleOpts,
 ) -> Result<Report> {
-    let mut rep = Report::new("stress_c3");
+    let mut rep = Report::new("stress_c3").with_aggregate("mean");
     for &dev in devices {
         for &base in particles_base {
             let particles = base * dev;

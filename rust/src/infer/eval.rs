@@ -1,9 +1,12 @@
-//! Evaluation metrics: classification accuracy (Tables 3/4) and regression
-//! MSE, computed over a dataset in artifact-sized batches.
+//! Evaluation metrics and posterior-predictive combinators: classification
+//! accuracy (Tables 3/4), regression MSE, and the accumulate/finalize pair
+//! that multi-SWAG and SGMCMC use to average predictions over posterior
+//! samples (sum of one-hot votes for classify, running mean for regress).
 
 use anyhow::Result;
 
 use crate::data::{DataLoader, Dataset};
+use crate::runtime::tensor::ops;
 use crate::runtime::Tensor;
 
 /// Fraction of rows whose argmax matches the label. `scores` is [B, C]
@@ -40,6 +43,70 @@ pub fn batch_mse(pred: &Tensor, target: &Tensor) -> f64 {
         .map(|(a, b)| ((a - b) as f64).powi(2))
         .sum::<f64>()
         / p.len() as f64
+}
+
+/// One-hot argmax votes of a [B, C] logit tensor (the §C.4 majority-vote
+/// protocol's per-sample ballot).
+pub fn one_hot_votes(logits: &Tensor) -> Tensor {
+    assert_eq!(logits.shape.len(), 2, "votes need [B, C] logits");
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    let l = logits.as_f32();
+    let mut v = vec![0.0f32; b * c];
+    for i in 0..b {
+        let row = &l[i * c..(i + 1) * c];
+        let mut best = 0;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        v[i * c + best] = 1.0;
+    }
+    Tensor::f32(vec![b, c], v)
+}
+
+/// Fold one posterior-sample prediction into a running accumulator:
+/// classify sums one-hot votes, regress sums raw predictions (divide by
+/// the count via [`finalize_mean`]). In-place when `acc` is uniquely
+/// owned (COW detaches otherwise).
+pub fn accumulate_prediction(acc: &mut Option<Tensor>, pred: Tensor, classify: bool) {
+    let p = if classify { one_hot_votes(&pred) } else { pred };
+    match acc {
+        None => *acc = Some(p),
+        Some(a) => ops::axpy(a, 1.0, &p),
+    }
+}
+
+/// Finish an [`accumulate_prediction`] run: vote sums pass through
+/// unchanged (argmax-invariant), regression sums become means. None when
+/// nothing was accumulated.
+pub fn finalize_mean(acc: Option<Tensor>, n: usize, classify: bool) -> Option<Tensor> {
+    let mut out = acc?;
+    if n == 0 {
+        return None;
+    }
+    if !classify {
+        for v in out.as_f32_mut() {
+            *v /= n as f32;
+        }
+    }
+    Some(out)
+}
+
+/// Per-point standard deviation across a set of predictions — the
+/// epistemic-uncertainty readout of a posterior-predictive set.
+pub fn predictive_std(preds: &[Tensor]) -> Result<Tensor> {
+    let n = preds.len();
+    anyhow::ensure!(n > 0, "predictive_std over zero predictions");
+    let len = preds[0].element_count();
+    let mut out = vec![0.0f32; len];
+    for (i, o) in out.iter_mut().enumerate() {
+        let m: f64 = preds.iter().map(|p| p.as_f32()[i] as f64).sum::<f64>() / n as f64;
+        let v: f64 =
+            preds.iter().map(|p| (p.as_f32()[i] as f64 - m).powi(2)).sum::<f64>() / n as f64;
+        *o = v.sqrt() as f32;
+    }
+    Ok(Tensor::f32(preds[0].shape.clone(), out))
 }
 
 /// Dataset-level accuracy of a predictor `f(x) -> scores` evaluated in
@@ -91,5 +158,50 @@ mod tests {
         let a = Tensor::f32(vec![2], vec![1.0, 3.0]);
         let b = Tensor::f32(vec![2], vec![0.0, 1.0]);
         assert!((batch_mse(&a, &b) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn votes_pick_argmax() {
+        let logits = Tensor::f32(vec![2, 3], vec![0.1, 2.0, -1.0, 5.0, 0.0, 4.9]);
+        let v = one_hot_votes(&logits);
+        assert_eq!(v.as_f32(), &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn accumulate_regress_means() {
+        let mut acc = None;
+        accumulate_prediction(&mut acc, Tensor::f32(vec![2], vec![1.0, 4.0]), false);
+        accumulate_prediction(&mut acc, Tensor::f32(vec![2], vec![3.0, 0.0]), false);
+        let m = finalize_mean(acc, 2, false).unwrap();
+        assert_eq!(m.as_f32(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn accumulate_classify_sums_votes() {
+        let mut acc = None;
+        // two samples vote class 1, one votes class 0
+        accumulate_prediction(&mut acc, Tensor::f32(vec![1, 2], vec![0.0, 1.0]), true);
+        accumulate_prediction(&mut acc, Tensor::f32(vec![1, 2], vec![0.2, 0.9]), true);
+        accumulate_prediction(&mut acc, Tensor::f32(vec![1, 2], vec![2.0, 0.0]), true);
+        let votes = finalize_mean(acc, 3, true).unwrap();
+        assert_eq!(votes.as_f32(), &[1.0, 2.0], "vote sums, not means");
+    }
+
+    #[test]
+    fn finalize_empty_is_none() {
+        assert!(finalize_mean(None, 0, false).is_none());
+        assert!(finalize_mean(Some(Tensor::zeros(vec![1])), 0, true).is_none());
+    }
+
+    #[test]
+    fn predictive_std_measures_spread() {
+        let preds = vec![
+            Tensor::f32(vec![2], vec![1.0, 5.0]),
+            Tensor::f32(vec![2], vec![3.0, 5.0]),
+        ];
+        let s = predictive_std(&preds).unwrap();
+        assert!((s.as_f32()[0] - 1.0).abs() < 1e-6);
+        assert!(s.as_f32()[1].abs() < 1e-6);
+        assert!(predictive_std(&[]).is_err());
     }
 }

@@ -1,5 +1,7 @@
 //! BDL inference algorithms written against the particle abstraction
-//! (paper §3.4, Appendix B): deep ensembles, SWAG / multi-SWAG, and SVGD.
+//! (paper §3.4, Appendix B): deep ensembles, SWAG / multi-SWAG, SVGD, and
+//! the stochastic-gradient MCMC family (SGLD / SGHMC with cyclical
+//! schedules).
 //!
 //! Each algorithm is a struct owning a [`PushDist`] whose particles carry
 //! the algorithm's message handlers; `train` drives epochs by launching
@@ -9,6 +11,7 @@
 
 pub mod ensemble;
 pub mod eval;
+pub mod sgmcmc;
 pub mod svgd;
 pub mod swag;
 
@@ -18,6 +21,7 @@ use crate::data::DataLoader;
 use crate::runtime::Tensor;
 
 pub use ensemble::DeepEnsemble;
+pub use sgmcmc::{ModelSource, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig};
 pub use svgd::{svgd_update_native, Svgd, SvgdConfig};
 pub use swag::{MultiSwag, SwagConfig};
 

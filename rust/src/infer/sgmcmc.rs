@@ -1,0 +1,743 @@
+//! Stochastic-gradient MCMC on particles: SGLD (Welling & Teh 2011) and
+//! SGHMC (Chen et al. 2014), with the cyclical step-size schedule of
+//! cSG-MCMC (Zhang et al. 2020).
+//!
+//! This is the sampling end of the paper's algorithm spectrum (§3.4 calls
+//! the particle abstraction out as expressing "a variety of parameter
+//! updates, including common BDL algorithms"): every particle runs an
+//! independent chain — one MCMC trajectory per particle, no cross-particle
+//! communication — so the encoding is ensemble-shaped (broadcast fan-out +
+//! join_all barrier per batch) while the per-particle state is richer:
+//!
+//! * **Chain clock** (`sgmcmc_t`): the step count driving the schedule.
+//! * **Momentum** (`sgmcmc_mom`, SGHMC only): carried in particle-local
+//!   state exactly like `run_adam` carries its moments.
+//! * **Posterior-sample reservoir** (`sgmcmc_samples` / `sgmcmc_seen`):
+//!   a bounded, uniformly-subsampled set of post-burn-in parameter
+//!   snapshots (Vitter's Algorithm R over the thinned chain). Snapshots
+//!   are zero-copy `Tensor` Arc clones of the resident parameters; the
+//!   next update COW-detaches, so captured samples are immutable for free
+//!   (DESIGN.md §SGMCMC chain state).
+//!
+//! Updates (U = minibatch loss, optionally + the Gaussian prior's score
+//! term θ/σ², mirroring SVGD's Appendix-B.1 treatment; T = temperature):
+//!
+//! ```text
+//! SGLD:   θ ← θ − ε ∇U(θ) + N(0, 2 ε T)
+//! SGHMC:  v ← (1−α) v − ε ∇U(θ) + N(0, 2 α T ε);   θ ← θ + v
+//! ```
+//!
+//! With `temperature = 0` no noise is drawn at all, so SGLD is *exactly*
+//! SGD and SGHMC is heavy-ball momentum SGD — the deterministic-seed
+//! equivalence the hermetic tests pin down.
+//!
+//! Gradients come from the model's AOT `grad` artifact by default; a
+//! [`ModelSource::Native`] plugs in closed-form (loss, grad) and forward
+//! closures instead, which keeps the entire subsystem — training,
+//! reservoir, posterior prediction, checkpointing — runnable in the
+//! hermetic no-PJRT build (see [`linear_native_model`]).
+
+use std::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DataLoader;
+use crate::infer::{eval, Infer, TrainReport};
+use crate::nel::{CreateOpts, ParticleCtx};
+use crate::particle::{handler, PFuture, PushError, Value};
+use crate::pd::PushDist;
+use crate::runtime::tensor::ops;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+use crate::Pid;
+
+/// Particle-state keys of one chain. Public so checkpoint-aware tests and
+/// tools can interpret a PD snapshot (pd::checkpoint serializes the whole
+/// state map generically and needs no knowledge of these).
+pub const K_STEP: &str = "sgmcmc_t";
+pub const K_SEEN: &str = "sgmcmc_seen";
+pub const K_MOM: &str = "sgmcmc_mom";
+pub const K_SAMPLES: &str = "sgmcmc_samples";
+
+/// Salt folded into the per-step noise stream (vs data/init streams).
+const NOISE_SALT: u64 = 0x5347_4d43_6e6f;
+/// Salt folded into the reservoir's acceptance stream.
+const RESERVOIR_SALT: u64 = 0x5347_4d43_7265;
+
+/// The per-(seed, chain, step) Gaussian-noise stream. Shared by the
+/// particle handler and the sequential baseline so that 1-device
+/// trajectories are comparable when chain ids align with pids.
+pub fn noise_rng(seed: u64, chain: u64, t: u64) -> Rng {
+    Rng::new(seed ^ NOISE_SALT).fold_in(chain).fold_in(t)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SgmcmcAlgo {
+    Sgld,
+    Sghmc,
+}
+
+impl SgmcmcAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SgmcmcAlgo::Sgld => "sgld",
+            SgmcmcAlgo::Sghmc => "sghmc",
+        }
+    }
+}
+
+/// Step-size / temperature schedule. One config covers constant chains,
+/// polynomially decayed chains (Welling & Teh's ε_t = a (b + t)^−γ), and
+/// cSG-MCMC warm restarts (cosine within a cycle, samples collected only
+/// in the low-step-size tail of each cycle).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    Constant { eps: f32 },
+    /// ε_t = a · (b + t)^(−γ)
+    PolyDecay { a: f32, b: f32, gamma: f32 },
+    /// ε_t = ε₀/2 · (cos(π · (t mod M)/M) + 1) with cycle length M;
+    /// sampling is enabled only in the final `sample_frac` of each cycle
+    /// (the "sampling stage" of cSG-MCMC).
+    Cyclical { eps0: f32, cycle_len: usize, sample_frac: f32 },
+}
+
+impl Schedule {
+    pub fn step_size(&self, t: usize) -> f32 {
+        match self {
+            Schedule::Constant { eps } => *eps,
+            Schedule::PolyDecay { a, b, gamma } => a * (b + t as f32).powf(-gamma),
+            Schedule::Cyclical { eps0, cycle_len, .. } => {
+                let m = (*cycle_len).max(1);
+                let pos = (t % m) as f32 / m as f32;
+                eps0 / 2.0 * ((std::f32::consts::PI * pos).cos() + 1.0)
+            }
+        }
+    }
+
+    /// Whether step `t` is inside a sampling phase. Always true except for
+    /// the exploration stage of a cyclical schedule.
+    pub fn samples_at(&self, t: usize) -> bool {
+        match self {
+            Schedule::Cyclical { cycle_len, sample_frac, .. } => {
+                let m = (*cycle_len).max(1);
+                (t % m) as f32 >= (1.0 - sample_frac.clamp(0.0, 1.0)) * m as f32
+            }
+            _ => true,
+        }
+    }
+}
+
+/// (loss, flat gradient) of the minibatch potential at `params`.
+pub type NativeGradFn =
+    Arc<dyn Fn(&Tensor, &Tensor, &Tensor) -> Result<(f32, Tensor), PushError> + Send + Sync>;
+/// Prediction at `x` under `params`.
+pub type NativeForwardFn =
+    Arc<dyn Fn(&Tensor, &Tensor) -> Result<Tensor, PushError> + Send + Sync>;
+
+/// Where gradients and forwards come from: the model's AOT artifacts
+/// (`grad`/`fwd` entries through PJRT) or native closures — the latter
+/// keeps SGMCMC fully functional in the hermetic no-PJRT build and is what
+/// the deterministic equivalence tests drive.
+#[derive(Clone)]
+pub enum ModelSource {
+    Artifact,
+    Native { grad: NativeGradFn, forward: NativeForwardFn },
+}
+
+impl fmt::Debug for ModelSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelSource::Artifact => write!(f, "Artifact"),
+            ModelSource::Native { .. } => write!(f, "Native"),
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct SgmcmcConfig {
+    pub particles: usize,
+    pub algo: SgmcmcAlgo,
+    pub schedule: Schedule,
+    /// Posterior temperature T. 0 disables noise entirely (SGLD ≡ SGD,
+    /// SGHMC ≡ momentum SGD); 1 is the Bayesian posterior; small values
+    /// (cold posteriors) are the common BDL practice.
+    pub temperature: f32,
+    /// SGHMC friction α (momentum decay). Ignored by SGLD.
+    pub friction: f32,
+    /// Steps before the reservoir starts collecting.
+    pub burn_in: usize,
+    /// Keep every `thin`-th post-burn-in step as a sample candidate.
+    pub thin: usize,
+    /// Reservoir capacity per particle (bounded memory regardless of chain
+    /// length; Algorithm R keeps the kept set uniform over candidates).
+    pub max_samples: usize,
+    /// Gaussian prior std; adds the score term θ/σ² to the gradient.
+    pub prior_std: Option<f32>,
+    pub seed: u64,
+    pub model: ModelSource,
+    /// Per-particle initial parameters (index → tensor). None uses the
+    /// model's AOT `init` artifact; Some makes creation hermetic.
+    pub init: Option<Arc<dyn Fn(usize) -> Tensor + Send + Sync>>,
+}
+
+// Manual Debug: `init` holds an Arc'd closure, which has no Debug impl.
+impl fmt::Debug for SgmcmcConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SgmcmcConfig")
+            .field("particles", &self.particles)
+            .field("algo", &self.algo)
+            .field("schedule", &self.schedule)
+            .field("temperature", &self.temperature)
+            .field("friction", &self.friction)
+            .field("burn_in", &self.burn_in)
+            .field("thin", &self.thin)
+            .field("max_samples", &self.max_samples)
+            .field("prior_std", &self.prior_std)
+            .field("seed", &self.seed)
+            .field("model", &self.model)
+            .field("init", &self.init.as_ref().map(|_| "<fn>"))
+            .finish()
+    }
+}
+
+impl Default for SgmcmcConfig {
+    fn default() -> Self {
+        SgmcmcConfig {
+            particles: 4,
+            algo: SgmcmcAlgo::Sgld,
+            schedule: Schedule::Constant { eps: 1e-2 },
+            temperature: 1e-4,
+            friction: 0.1,
+            burn_in: 10,
+            thin: 2,
+            max_samples: 32,
+            prior_std: None,
+            seed: 0,
+            model: ModelSource::Artifact,
+            init: None,
+        }
+    }
+}
+
+/// True when completing step `t` (0-based, pre-increment) should offer the
+/// post-update parameters to the reservoir.
+pub fn is_sample_step(schedule: &Schedule, t: usize, burn_in: usize, thin: usize) -> bool {
+    let thin = thin.max(1);
+    t >= burn_in && (t - burn_in) % thin == 0 && schedule.samples_at(t)
+}
+
+/// Number of reservoir candidates after `steps` completed steps, for
+/// schedules without a sampling-phase gate (constant / poly decay).
+pub fn expected_candidates(steps: usize, burn_in: usize, thin: usize) -> usize {
+    let thin = thin.max(1);
+    if steps <= burn_in {
+        0
+    } else {
+        // ceil((steps - burn_in) / thin) without usize::div_ceil (MSRV 1.72)
+        (steps - burn_in + thin - 1) / thin
+    }
+}
+
+/// u += N(0, sigma²) elementwise; no-op (and no RNG draws) at sigma == 0.
+fn add_noise(u: &mut Tensor, sigma: f32, rng: &mut Rng) {
+    if sigma <= 0.0 {
+        return;
+    }
+    for v in u.as_f32_mut() {
+        *v += sigma * rng.normal();
+    }
+}
+
+/// Offer `snap` to the particle's bounded reservoir (Algorithm R over the
+/// thinned post-burn-in chain). Deterministic in (seed, pid, candidate #).
+fn reservoir_add(ctx: &ParticleCtx, snap: Tensor, seed: u64, cap: usize) {
+    if cap == 0 {
+        return;
+    }
+    let seen = match ctx.state_get(K_SEEN) {
+        Some(Value::Usize(n)) => n,
+        _ => 0,
+    };
+    let mut samples = match ctx.state_take(K_SAMPLES) {
+        Some(Value::List(v)) => v,
+        _ => Vec::new(),
+    };
+    if samples.len() < cap {
+        samples.push(Value::Tensor(snap));
+    } else {
+        let j = Rng::new(seed ^ RESERVOIR_SALT)
+            .fold_in(ctx.pid.0 as u64)
+            .fold_in(seen as u64)
+            .below(seen + 1);
+        if j < cap {
+            samples[j] = Value::Tensor(snap);
+        }
+    }
+    ctx.state_set(K_SAMPLES, Value::List(samples));
+    ctx.state_set(K_SEEN, Value::Usize(seen + 1));
+}
+
+/// A read-only snapshot of one particle's chain (for tests, tools, and the
+/// example's reporting). Tensors are zero-copy clones.
+#[derive(Debug, Clone, Default)]
+pub struct ChainSnapshot {
+    pub step: usize,
+    pub seen: usize,
+    pub momentum: Option<Tensor>,
+    pub samples: Vec<Tensor>,
+}
+
+pub struct SgMcmc {
+    pd: PushDist,
+    pids: Vec<Pid>,
+    pub cfg: SgmcmcConfig,
+}
+
+impl SgMcmc {
+    /// Create `cfg.particles` independent chains. Each particle answers
+    /// `MCMC_STEP(x, y)` with one SGLD/SGHMC update (plus reservoir
+    /// bookkeeping) and `MCMC_PREDICT(x)` with its posterior-predictive
+    /// mean over reservoir samples.
+    pub fn new(pd: PushDist, cfg: SgmcmcConfig) -> Result<SgMcmc> {
+        assert!(cfg.particles > 0);
+
+        let scfg = cfg.clone();
+        let step = handler(move |ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let y = args[1].as_tensor()?.clone();
+            let t = match ctx.state_get(K_STEP) {
+                Some(Value::Usize(t)) => t,
+                _ => 0,
+            };
+            let eps = scfg.schedule.step_size(t);
+
+            // 1. gradient of the minibatch potential. One parameter
+            //    snapshot serves both the native gradient and the prior
+            //    term (it is a zero-copy Arc clone either way).
+            let needs_params =
+                matches!(&scfg.model, ModelSource::Native { .. }) || scfg.prior_std.is_some();
+            let params = if needs_params {
+                Some(ctx.own_params().wait()?.tensor()?)
+            } else {
+                None
+            };
+            let (loss, mut grad) = match &scfg.model {
+                ModelSource::Artifact => {
+                    let mut lg = ctx.grad(x, y).wait()?.list()?;
+                    let loss = lg[0].as_tensor()?.scalar();
+                    (loss, lg.remove(1).tensor()?)
+                }
+                ModelSource::Native { grad, .. } => {
+                    grad(params.as_ref().expect("fetched above"), &x, &y)?
+                }
+            };
+            // Gaussian prior score term (Appendix B.1's treatment):
+            // ∇U gains θ/σ². In place — the gradient is uniquely owned.
+            if let Some(std) = scfg.prior_std {
+                ops::axpy(&mut grad, 1.0 / (std * std), params.as_ref().expect("fetched above"));
+            }
+            // Release the snapshot BEFORE the apply so axpy_params mutates
+            // the resident parameters in place instead of COW-detaching.
+            drop(params);
+
+            // 2. the update, with noise from a per-(seed, pid, t) stream so
+            //    trajectories are reproducible under any scheduling order.
+            //    SGHMC builds the new momentum WITHOUT mutating the stored
+            //    one (u = −ε g + noise, then u += (1−α) v), so a failed
+            //    apply below can put the old momentum back untouched.
+            let mut rng = noise_rng(scfg.seed, ctx.pid.0 as u64, t as u64);
+            let mut u = grad;
+            for v in u.as_f32_mut() {
+                *v *= -eps;
+            }
+            let old_momentum = match scfg.algo {
+                SgmcmcAlgo::Sgld => {
+                    // u = −ε g + N(0, 2 ε T)
+                    add_noise(&mut u, (2.0 * eps * scfg.temperature).sqrt(), &mut rng);
+                    None
+                }
+                SgmcmcAlgo::Sghmc => {
+                    // v' = −ε g + N(0, 2 α T ε) + (1−α) v
+                    add_noise(
+                        &mut u,
+                        (2.0 * scfg.friction * scfg.temperature * eps).sqrt(),
+                        &mut rng,
+                    );
+                    let v_old = match ctx.state_take(K_MOM) {
+                        Some(Value::Tensor(t)) => t,
+                        _ => Tensor::zeros(vec![u.element_count()]),
+                    };
+                    ops::scale_add(&mut u, 1.0, 1.0 - scfg.friction, &v_old);
+                    Some(v_old)
+                }
+            };
+            let update = u;
+
+            // 3. θ += update on the particle's device; chain state only
+            //    advances if the apply succeeded (run_adam discipline): a
+            //    failed apply restores the momentum it took.
+            if let Err(e) = ctx.axpy_params(1.0, update.clone()).wait() {
+                if let Some(v_old) = old_momentum {
+                    ctx.state_set(K_MOM, Value::Tensor(v_old));
+                }
+                return Err(e);
+            }
+            if scfg.algo == SgmcmcAlgo::Sghmc {
+                ctx.state_set(K_MOM, Value::Tensor(update));
+            }
+            ctx.state_set(K_STEP, Value::Usize(t + 1));
+
+            // 4. reservoir: offer a zero-copy snapshot of the post-update
+            //    parameters (later steps COW-detach, so it stays immutable)
+            if is_sample_step(&scfg.schedule, t, scfg.burn_in, scfg.thin) {
+                let snap = ctx.own_params().wait()?.tensor()?;
+                reservoir_add(ctx, snap, scfg.seed, scfg.max_samples);
+            }
+            Ok(Value::F32(loss))
+        });
+
+        let pcfg = cfg.clone();
+        let predict = handler(move |ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let classify = ctx.model().task == "classify";
+            let samples: Vec<Tensor> = match ctx.state_get(K_SAMPLES) {
+                Some(Value::List(v)) => {
+                    v.into_iter().filter_map(|s| s.tensor().ok()).collect()
+                }
+                _ => Vec::new(),
+            };
+            let mut acc: Option<Tensor> = None;
+            let mut n = 0usize;
+            match &pcfg.model {
+                ModelSource::Native { forward, .. } => {
+                    if samples.is_empty() {
+                        // empty reservoir: fall back to the current params
+                        // (pre-burn-in chain == plain point prediction)
+                        let params = ctx.own_params().wait()?.tensor()?;
+                        eval::accumulate_prediction(&mut acc, forward(&params, &x)?, classify);
+                        n = 1;
+                    } else {
+                        for s in &samples {
+                            eval::accumulate_prediction(&mut acc, forward(s, &x)?, classify);
+                            n += 1;
+                        }
+                    }
+                }
+                ModelSource::Artifact => {
+                    if samples.is_empty() {
+                        let pred = ctx.forward(x).wait()?.tensor()?;
+                        eval::accumulate_prediction(&mut acc, pred, classify);
+                        n = 1;
+                    } else {
+                        // Zero-copy backup of the live params; each sample
+                        // is swapped in (refcount bump), forwarded, and the
+                        // backup moved back — ALWAYS, even when a forward
+                        // fails mid-loop, so a transient predict error can
+                        // never leave the chain running on a stale sample.
+                        let backup = ctx.own_params().wait()?.tensor()?;
+                        let mut failure = None;
+                        for s in &samples {
+                            let pred = ctx
+                                .set_params(s.clone())
+                                .wait()
+                                .and_then(|_| ctx.forward(x.clone()).wait())
+                                .and_then(|v| v.tensor());
+                            match pred {
+                                Ok(p) => {
+                                    eval::accumulate_prediction(&mut acc, p, classify);
+                                    n += 1;
+                                }
+                                Err(e) => {
+                                    failure = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        ctx.set_params(backup).wait()?;
+                        if let Some(e) = failure {
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+            eval::finalize_mean(acc, n, classify)
+                .map(Value::Tensor)
+                .ok_or_else(|| PushError::new("MCMC_PREDICT over zero predictions"))
+        });
+
+        let table = || {
+            [
+                ("MCMC_STEP".to_string(), step.clone()),
+                ("MCMC_PREDICT".to_string(), predict.clone()),
+            ]
+            .into_iter()
+            .collect()
+        };
+        let init = cfg.init.clone();
+        let pids = pd.p_create_n(cfg.particles, |i| CreateOpts {
+            receive: table(),
+            init_params: init.as_ref().map(|f| f(i)),
+            ..CreateOpts::default()
+        })?;
+        Ok(SgMcmc { pd, pids, cfg })
+    }
+
+    pub fn pd(&self) -> &PushDist {
+        &self.pd
+    }
+
+    /// One synchronized chain step of every particle on (x, y); returns
+    /// the mean minibatch loss. One broadcast fan-out, one join_all
+    /// barrier (the ensemble-shaped round).
+    pub fn step_all(&self, x: &Tensor, y: &Tensor) -> Result<f64> {
+        let futs = self.pd.broadcast(
+            &self.pids,
+            "MCMC_STEP",
+            vec![Value::Tensor(x.clone()), Value::Tensor(y.clone())],
+        );
+        let losses = PFuture::join_all(&futs)
+            .wait()
+            .map_err(|e| anyhow!("{e}"))?
+            .list()
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut total = 0.0f64;
+        for l in &losses {
+            total += l.f32().map_err(|e| anyhow!("{e}"))? as f64;
+        }
+        Ok(total / losses.len() as f64)
+    }
+
+    /// Read one chain's clock / momentum / reservoir (zero-copy clones).
+    pub fn chain(&self, pid: Pid) -> ChainSnapshot {
+        let mut snap = ChainSnapshot::default();
+        if let Some(entries) = self.pd.particle_state(pid) {
+            for (k, v) in entries {
+                match (k.as_str(), v) {
+                    (K_STEP, Value::Usize(t)) => snap.step = t,
+                    (K_SEEN, Value::Usize(n)) => snap.seen = n,
+                    (K_MOM, Value::Tensor(t)) => snap.momentum = Some(t),
+                    (K_SAMPLES, Value::List(vs)) => {
+                        snap.samples =
+                            vs.into_iter().filter_map(|s| s.tensor().ok()).collect();
+                    }
+                    _ => {}
+                }
+            }
+        }
+        snap
+    }
+}
+
+impl Infer for SgMcmc {
+    fn name(&self) -> &str {
+        self.cfg.algo.name()
+    }
+
+    fn pids(&self) -> Vec<Pid> {
+        self.pids.clone()
+    }
+
+    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport> {
+        let mut report = TrainReport::new(self.name());
+        for _ in 0..epochs {
+            let batches = loader.epoch();
+            let t0 = Instant::now();
+            let mut loss = 0.0;
+            for b in &batches {
+                loss += self.step_all(&b.x, &b.y)?;
+            }
+            report.push(loss / batches.len().max(1) as f64, t0.elapsed().as_secs_f64());
+        }
+        Ok(report)
+    }
+
+    /// Posterior-predictive mean: each particle averages predictions over
+    /// its reservoir samples (majority votes for classify), then particle
+    /// outputs are averaged — the multi-chain analogue of §3.4.
+    fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
+        let futs = self
+            .pd
+            .broadcast(&self.pids, "MCMC_PREDICT", vec![Value::Tensor(x.clone())]);
+        let joined = PFuture::join_all(&futs);
+        let preds = joined
+            .wait()
+            .map_err(|e| anyhow!("{e}"))?
+            .list()
+            .map_err(|e| anyhow!("{e}"))?;
+        // Release the futures before accumulating so the first prediction
+        // is uniquely owned and the axpy chain runs in place.
+        drop(joined);
+        drop(futs);
+        let classify = self.pd.model().task == "classify";
+        let mut acc: Option<Tensor> = None;
+        let mut n = 0usize;
+        for p in preds {
+            // Particle outputs are already per-chain vote sums / means —
+            // accumulate raw (re-voting would erase the vote weights).
+            let t = p.tensor().map_err(|e| anyhow!("{e}"))?;
+            match &mut acc {
+                None => acc = Some(t),
+                Some(a) => ops::axpy(a, 1.0, &t),
+            }
+            n += 1;
+        }
+        let mut out = acc.ok_or_else(|| anyhow!("predict over zero particles"))?;
+        if !classify {
+            for v in out.as_f32_mut() {
+                *v /= n as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    fn nel_stats(&self) -> crate::nel::NelStats {
+        self.pd.stats()
+    }
+}
+
+/// Closed-form linear least-squares model for the synthetic regression
+/// task (`data::synth::linear`): loss = mean((x·θ − y)²) over the batch,
+/// grad = 2/B · Xᵀ(Xθ − y), forward = Xθ. Used by the hermetic tests, the
+/// `sgmcmc_regression` example, and the micro-benches — no artifacts, no
+/// PJRT.
+pub fn linear_native_model() -> ModelSource {
+    let grad: NativeGradFn = Arc::new(|params, x, y| {
+        let d = params.element_count();
+        let b = x.shape.first().copied().unwrap_or(0);
+        if b == 0 || x.element_count() != b * d || y.element_count() != b {
+            return Err(PushError::new(format!(
+                "linear grad: x {:?} / y {:?} incompatible with {d} params",
+                x.shape, y.shape
+            )));
+        }
+        let w = params.as_f32();
+        let xs = x.as_f32();
+        let ys = y.as_f32();
+        let mut g = vec![0.0f32; d];
+        let mut loss = 0.0f32;
+        for i in 0..b {
+            let row = &xs[i * d..(i + 1) * d];
+            let pred: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+            let err = pred - ys[i];
+            loss += err * err;
+            for (gj, xj) in g.iter_mut().zip(row) {
+                *gj += 2.0 * err * xj;
+            }
+        }
+        let inv_b = 1.0 / b as f32;
+        for gj in g.iter_mut() {
+            *gj *= inv_b;
+        }
+        Ok((loss * inv_b, Tensor::f32(vec![d], g)))
+    });
+    let forward: NativeForwardFn = Arc::new(|params, x| {
+        let d = params.element_count();
+        let b = x.shape.first().copied().unwrap_or(0);
+        if x.element_count() != b * d {
+            return Err(PushError::new(format!(
+                "linear forward: x {:?} incompatible with {d} params",
+                x.shape
+            )));
+        }
+        let w = params.as_f32();
+        let xs = x.as_f32();
+        let preds: Vec<f32> = (0..b)
+            .map(|i| xs[i * d..(i + 1) * d].iter().zip(w).map(|(a, b)| a * b).sum())
+            .collect();
+        Ok(Tensor::f32(vec![b, 1], preds))
+    });
+    ModelSource::Native { grad, forward }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_and_poly_schedules() {
+        let c = Schedule::Constant { eps: 0.5 };
+        assert_eq!(c.step_size(0), 0.5);
+        assert_eq!(c.step_size(1000), 0.5);
+        assert!(c.samples_at(0));
+
+        let p = Schedule::PolyDecay { a: 1.0, b: 1.0, gamma: 1.0 };
+        assert!((p.step_size(0) - 1.0).abs() < 1e-6);
+        assert!((p.step_size(3) - 0.25).abs() < 1e-6);
+        assert!(p.step_size(10) < p.step_size(9), "monotone decay");
+        assert!(p.samples_at(7));
+    }
+
+    #[test]
+    fn cyclical_schedule_restarts_and_gates_sampling() {
+        let s = Schedule::Cyclical { eps0: 1.0, cycle_len: 10, sample_frac: 0.3 };
+        // cosine: max at cycle start, ~0 at cycle end, restarts at t = M
+        assert!((s.step_size(0) - 1.0).abs() < 1e-6);
+        assert!(s.step_size(9) < 0.1);
+        assert!((s.step_size(10) - 1.0).abs() < 1e-6, "warm restart");
+        // sampling only in the final 30% of each cycle: t mod 10 >= 7
+        for t in 0..7 {
+            assert!(!s.samples_at(t), "t={t} is exploration");
+        }
+        for t in 7..10 {
+            assert!(s.samples_at(t), "t={t} is sampling");
+        }
+        assert!(!s.samples_at(10), "restart re-enters exploration");
+    }
+
+    #[test]
+    fn candidate_counting() {
+        assert_eq!(expected_candidates(0, 4, 2), 0);
+        assert_eq!(expected_candidates(4, 4, 2), 0);
+        assert_eq!(expected_candidates(5, 4, 2), 1); // t = 4
+        assert_eq!(expected_candidates(6, 4, 2), 1);
+        assert_eq!(expected_candidates(7, 4, 2), 2); // t = 4, 6
+        assert_eq!(expected_candidates(10, 0, 1), 10);
+        // is_sample_step agrees with the closed form
+        let s = Schedule::Constant { eps: 1.0 };
+        let n = (0..10).filter(|&t| is_sample_step(&s, t, 4, 2)).count();
+        assert_eq!(n, expected_candidates(10, 4, 2));
+        // thin = 0 is treated as 1, not a panic
+        assert_eq!(expected_candidates(3, 0, 0), 3);
+    }
+
+    #[test]
+    fn linear_grad_matches_finite_difference() {
+        let model = linear_native_model();
+        let ModelSource::Native { grad, forward } = model else {
+            panic!("linear model is native")
+        };
+        let d = 4;
+        let params = Tensor::f32(vec![d], vec![0.3, -0.7, 1.1, 0.05]);
+        let x = Tensor::f32(vec![3, d], (0..3 * d).map(|i| (i as f32) * 0.1 - 0.5).collect());
+        let y = Tensor::f32(vec![3, 1], vec![0.2, -0.4, 1.0]);
+        let (l0, g) = grad(&params, &x, &y).unwrap();
+        assert!(l0.is_finite());
+        let h = 1e-3f32;
+        for j in 0..d {
+            let mut p2 = params.clone();
+            p2.as_f32_mut()[j] += h;
+            let (l2, _) = grad(&p2, &x, &y).unwrap();
+            let fd = (l2 - l0) / h;
+            assert!(
+                (fd - g.as_f32()[j]).abs() < 2e-2,
+                "grad[{j}] {} vs fd {fd}",
+                g.as_f32()[j]
+            );
+        }
+        // forward shape contract
+        let pred = forward(&params, &x).unwrap();
+        assert_eq!(pred.shape, vec![3, 1]);
+    }
+
+    #[test]
+    fn zero_temperature_draws_no_noise() {
+        let mut rng = Rng::new(7);
+        let mut u = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        add_noise(&mut u, 0.0, &mut rng);
+        assert_eq!(u.as_f32(), &[1.0, 2.0, 3.0]);
+        let mut check = Rng::new(7);
+        assert_eq!(rng.next_u64(), check.next_u64(), "rng untouched at T=0");
+    }
+}

@@ -70,7 +70,8 @@ impl MultiSwag {
         assert!(cfg.particles > 0);
         // Optimizer step (pretraining phase): SGD or Adam by message arg.
         let step = handler(|ctx, args| {
-            let (x, y, lr) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone(), args[2].f32()?);
+            let (x, y) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone());
+            let lr = args[2].f32()?;
             if matches!(args.get(3), Some(Value::Bool(true))) {
                 ctx.adam_step(x, y, lr).wait()
             } else {
@@ -79,7 +80,8 @@ impl MultiSwag {
         });
         // SGD step + first/second moment update in particle-local state.
         let swag_step = handler(|ctx, args| {
-            let (x, y, lr) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone(), args[2].f32()?);
+            let (x, y) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone());
+            let lr = args[2].f32()?;
             let loss = if matches!(args.get(3), Some(Value::Bool(true))) {
                 ctx.adam_step(x, y, lr).wait()?
             } else {
@@ -133,6 +135,10 @@ impl MultiSwag {
             };
             let mut rng = Rng::new(seed).fold_in(ctx.pid.0 as u64);
             let mut acc: Option<Tensor> = None;
+            // The pre-draw params are restored even when a forward fails
+            // mid-loop — a transient predict error must never leave the
+            // particle running on a posterior draw.
+            let mut failure = None;
             for _ in 0..n_samples {
                 // theta = mean + scale * sqrt(max(sq - mean^2, 0)) * eps
                 let mut theta = mean.clone();
@@ -144,26 +150,26 @@ impl MultiSwag {
                         *t = m[i] + scale * var.sqrt() * rng.normal();
                     }
                 }
-                ctx.set_params(theta).wait()?;
-                let pred = ctx.forward(x.clone()).wait()?.tensor()?;
-                match (&mut acc, classify) {
-                    (None, true) => acc = Some(votes_of(&pred)),
-                    (Some(a), true) => {
-                        let v = votes_of(&pred);
-                        crate::runtime::tensor::ops::axpy(a, 1.0, &v);
+                let pred = ctx
+                    .set_params(theta)
+                    .wait()
+                    .and_then(|_| ctx.forward(x.clone()).wait())
+                    .and_then(|v| v.tensor());
+                match pred {
+                    Ok(p) => crate::infer::eval::accumulate_prediction(&mut acc, p, classify),
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
                     }
-                    (None, false) => acc = Some(pred),
-                    (Some(a), false) => crate::runtime::tensor::ops::axpy(a, 1.0, &pred),
                 }
             }
             ctx.set_params(backup).wait()?;
-            let mut out = acc.ok_or_else(|| crate::PushError::new("n_samples == 0"))?;
-            if !classify {
-                for v in out.as_f32_mut() {
-                    *v /= n_samples as f32;
-                }
+            if let Some(e) = failure {
+                return Err(e);
             }
-            Ok(Value::Tensor(out))
+            crate::infer::eval::finalize_mean(acc, n_samples, classify)
+                .map(Value::Tensor)
+                .ok_or_else(|| crate::PushError::new("n_samples == 0"))
         });
 
         let pids = pd.p_create_n(cfg.particles, |_| CreateOpts {
@@ -250,25 +256,6 @@ impl MultiSwag {
     }
 }
 
-/// One-hot argmax votes of a [B, C] logit tensor.
-fn votes_of(logits: &Tensor) -> Tensor {
-    assert_eq!(logits.shape.len(), 2, "votes need [B, C] logits");
-    let (b, c) = (logits.shape[0], logits.shape[1]);
-    let l = logits.as_f32();
-    let mut v = vec![0.0f32; b * c];
-    for i in 0..b {
-        let row = &l[i * c..(i + 1) * c];
-        let mut best = 0;
-        for j in 1..c {
-            if row[j] > row[best] {
-                best = j;
-            }
-        }
-        v[i * c + best] = 1.0;
-    }
-    Tensor::f32(vec![b, c], v)
-}
-
 impl Infer for MultiSwag {
     fn name(&self) -> &str {
         "multi_swag"
@@ -301,17 +288,5 @@ impl Infer for MultiSwag {
 
     fn nel_stats(&self) -> crate::nel::NelStats {
         self.pd.stats()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn votes_pick_argmax() {
-        let logits = Tensor::f32(vec![2, 3], vec![0.1, 2.0, -1.0, 5.0, 0.0, 4.9]);
-        let v = votes_of(&logits);
-        assert_eq!(v.as_f32(), &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
     }
 }

@@ -18,7 +18,10 @@ use push::bench::scaling::ScaleOpts;
 use push::bench::{accuracy, depth_width, scaling, Method};
 use push::data::DataLoader;
 use push::device::CostModel;
-use push::infer::{DeepEnsemble, Infer, MultiSwag, Svgd, SvgdConfig, SwagConfig};
+use push::infer::{
+    DeepEnsemble, Infer, MultiSwag, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Svgd,
+    SvgdConfig, SwagConfig,
+};
 use push::nel::CreateOpts;
 use push::particle::{handler, Value};
 use push::runtime::{artifacts_dir, Manifest};
@@ -30,9 +33,12 @@ push — concurrent probabilistic programming for Bayesian deep learning
 
 USAGE:
   push info
-  push train --model <name> [--method ensemble|multi_swag|svgd]
+  push train --model <name> [--algo ensemble|multi_swag|svgd|sgld|sghmc]
              [--particles N] [--devices D] [--epochs E] [--batches B]
              [--lr F] [--cache N] [--seed N] [--workers N]
+             [--temp T] [--friction A] [--burn-in N] [--thin N]
+             [--samples N]                      (sgld/sghmc chain options;
+                                                 --method is an alias of --algo)
   push bench <fig4|fig7|table1|table2|table3|table4|stress|ablate>
              [--devices 1,2,4] [--particles 1,2,4,8] [--batches B]
              [--epochs E] [--no-baseline] [--full] [--cache N] [--seed N]
@@ -109,8 +115,14 @@ fn train(flags: &Flags) -> Result<()> {
     let model_name = flags
         .str("model")
         .ok_or_else(|| anyhow!("--model is required (see `push info`)"))?;
-    let method = Method::parse(&flags.str_or("method", "ensemble"))
-        .ok_or_else(|| anyhow!("--method must be ensemble|multi_swag|svgd"))?;
+    // --algo is the canonical spelling; --method stays as an alias.
+    let algo_name = flags
+        .str("algo")
+        .or_else(|| flags.str("method"))
+        .unwrap_or("ensemble")
+        .to_string();
+    let method = Method::parse(&algo_name)
+        .ok_or_else(|| anyhow!("--algo must be ensemble|multi_swag|svgd|sgld|sghmc"))?;
     let particles = flags.usize_or("particles", 4).map_err(anyhow::Error::msg)?;
     let devices = flags.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
     let epochs = flags.usize_or("epochs", 5).map_err(anyhow::Error::msg)?;
@@ -155,6 +167,30 @@ fn train(flags: &Flags) -> Result<()> {
             pd,
             SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() },
         )?),
+        Method::Sgld | Method::Sghmc => {
+            let algo =
+                if method == Method::Sgld { SgmcmcAlgo::Sgld } else { SgmcmcAlgo::Sghmc };
+            let temp = flags.f64_or("temp", 1e-4).map_err(anyhow::Error::msg)? as f32;
+            let friction = flags.f64_or("friction", 0.1).map_err(anyhow::Error::msg)? as f32;
+            let burn_in = flags.usize_or("burn-in", batches).map_err(anyhow::Error::msg)?;
+            let thin = flags.usize_or("thin", 2).map_err(anyhow::Error::msg)?;
+            let max_samples = flags.usize_or("samples", 32).map_err(anyhow::Error::msg)?;
+            Box::new(SgMcmc::new(
+                pd,
+                SgmcmcConfig {
+                    particles,
+                    algo,
+                    schedule: Schedule::Constant { eps: lr },
+                    temperature: temp,
+                    friction,
+                    burn_in,
+                    thin,
+                    max_samples,
+                    seed,
+                    ..SgmcmcConfig::default()
+                },
+            )?)
+        }
     };
     for e in 0..epochs {
         let rep = algo.train(&mut loader, 1)?;
@@ -195,7 +231,9 @@ fn bench(flags: &Flags) -> Result<()> {
         .positional
         .get(1)
         .map(String::as_str)
-        .ok_or_else(|| anyhow!("bench needs a target (fig4|fig7|table1|table2|table3|table4|stress)"))?;
+        .ok_or_else(|| {
+            anyhow!("bench needs a target (fig4|fig7|table1|table2|table3|table4|stress)")
+        })?;
     let manifest = Manifest::load(artifacts_dir())?;
     let opts = scale_opts(flags)?;
     let full = flags.has("full");

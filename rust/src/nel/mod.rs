@@ -168,6 +168,12 @@ pub struct CreateOpts {
     /// Skip parameter initialization (moment/scratch particles that only
     /// carry state — the multi-SWAG-as-particles encoding, §C.2).
     pub no_params: bool,
+    /// Caller-provided initial parameters: inserted into the host store
+    /// directly instead of running the model's AOT `init` entry. Makes
+    /// particle creation hermetic (no artifacts, no PJRT) — the SGMCMC
+    /// native-model path and checkpoint-restore flows rely on this.
+    /// Takes precedence over both the init artifact and `no_params`.
+    pub init_params: Option<Tensor>,
 }
 
 impl Nel {
@@ -264,7 +270,11 @@ impl Nel {
         });
         self.inner.particles.write().unwrap().insert(pid, entry);
 
-        if !opts.no_params {
+        if let Some(t) = opts.init_params {
+            // Direct insert: the pid is brand new, so nothing can be
+            // resident anywhere — single authority holds trivially.
+            self.inner.pool.host.insert(pid, t);
+        } else if !opts.no_params {
             // Initialize parameters on the particle's device; the job
             // inserts into the host store, first use swaps in.
             let init = model.entry("init")?.clone();
@@ -328,7 +338,13 @@ impl Nel {
     /// Delivery happens BEFORE any accounting: a send to a dead particle
     /// (closed mailbox) must not bump the messaging counters or charge a
     /// phantom cross-device transfer — it used to do both.
-    pub fn send(&self, from_device: Option<usize>, to: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+    pub fn send(
+        &self,
+        from_device: Option<usize>,
+        to: Pid,
+        msg: &str,
+        args: Vec<Value>,
+    ) -> PFuture {
         let entry = match self.entry(to) {
             Ok(e) => e,
             Err(e) => return PFuture::ready(Err(e)),
@@ -517,8 +533,9 @@ impl Nel {
         let trace = self.inner.trace.clone();
         let res = self.inner.pool.device(device).submit(Box::new(move |ctx| {
             trace.record(Event::new(ctx.device_id, None, EventKind::JobStart, 0));
-            let out = std::panic::catch_unwind(AssertUnwindSafe(|| f(ctx)))
-                .unwrap_or_else(|p| Err(anyhow!("compute job panicked: {}", panic_msg(p.as_ref()))));
+            let out = std::panic::catch_unwind(AssertUnwindSafe(|| f(ctx))).unwrap_or_else(|p| {
+                Err(anyhow!("compute job panicked: {}", panic_msg(p.as_ref())))
+            });
             trace.record(Event::new(ctx.device_id, None, EventKind::JobEnd, 0));
             r2.complete(out.map_err(PushError::from));
         }));
@@ -770,6 +787,34 @@ impl Nel {
         Ok(out)
     }
 
+    /// Clone a particle's local state map (the `state=` dict of p_create
+    /// plus whatever its handlers stored: Adam moments, SWAG moments,
+    /// SGMCMC chain state). Tensor values are zero-copy COW clones.
+    /// Intended for quiescent points (checkpoint capture after a drain):
+    /// reading while a handler writes is safe (mutex) but may observe a
+    /// mid-update mix of keys.
+    pub fn particle_state(&self, pid: Pid) -> Option<Vec<(String, Value)>> {
+        let entry = self.inner.particles.read().unwrap().get(&pid).cloned()?;
+        let st = entry.state.lock().unwrap();
+        Some(st.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+    }
+
+    /// Merge `entries` into a particle's local state (checkpoint restore).
+    /// Existing keys are overwritten; keys absent from `entries` are left
+    /// untouched. Same quiescence caveat as [`Nel::particle_state`].
+    pub fn restore_particle_state(
+        &self,
+        pid: Pid,
+        entries: Vec<(String, Value)>,
+    ) -> Result<(), PushError> {
+        let entry = self.entry(pid)?;
+        let mut st = entry.state.lock().unwrap();
+        for (k, v) in entries {
+            st.insert(k, v);
+        }
+        Ok(())
+    }
+
     /// Aggregate statistics. Each device answers its stats request on its
     /// own stream (device::Msg::Stats), which drains FIFO behind every
     /// previously submitted job — an implicit per-device barrier, so
@@ -789,8 +834,9 @@ impl Nel {
 }
 
 fn run_handler(h: &Handler, ctx: &ParticleCtx, args: &[Value]) -> PResult {
-    std::panic::catch_unwind(AssertUnwindSafe(|| h(ctx, args)))
-        .unwrap_or_else(|p| Err(PushError::new(format!("handler panicked: {}", panic_msg(p.as_ref())))))
+    std::panic::catch_unwind(AssertUnwindSafe(|| h(ctx, args))).unwrap_or_else(|p| {
+        Err(PushError::new(format!("handler panicked: {}", panic_msg(p.as_ref()))))
+    })
 }
 
 fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {

@@ -1,17 +1,29 @@
-//! PD checkpointing: save/restore every particle's parameters (and the
-//! model identity) to a single binary file.
+//! PD checkpointing: save/restore every particle's parameters, the model
+//! identity, and (since v2) each particle's local *state* — Adam moments,
+//! SWAG moments, SGMCMC chain state (step clock, SGHMC momentum, the
+//! posterior-sample reservoir) — to a single binary file.
 //!
 //! Format (little-endian, versioned):
 //!
 //! ```text
-//! magic  u32 = 0x50555348 ("PUSH")      version u32 = 1
+//! magic  u32 = 0x50555348 ("PUSH")      version u32 = 2
 //! model-name len u32 + utf8 bytes
 //! particle count u32
 //! per particle: pid u32, elem count u64, f32 data
+//! -- v2 only --
+//! state count u32
+//! per state entry: pid u32, key count u32,
+//!   per key: key len u32 + utf8 bytes, value (tagged, recursive)
 //! ```
 //!
+//! Value encoding (tag u8): 0 Unit; 1 Bool(u8); 2 F32(f32); 3 Usize(u64);
+//! 4 Str(len u32 + utf8); 5 Tensor(dtype u8 {0 f32, 1 i32, 2 u32},
+//! rank u32, dims u64 each, raw 4-byte elements); 6 List(count u32 +
+//! values). Version-1 files (params only) still load, with empty state.
+//!
 //! No serde/npy in the vendored crate set, so the codec is hand-rolled and
-//! round-trip tested.
+//! round-trip tested. Capture is zero-copy (COW snapshots); restore merges
+//! state keys into live particles without touching unrelated keys.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -19,33 +31,52 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::particle::Pid;
+use crate::particle::{Pid, Value};
 use crate::pd::PushDist;
-use crate::runtime::Tensor;
+use crate::runtime::{DType, Tensor, TensorData};
 
 const MAGIC: u32 = 0x5055_5348;
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Deepest Value::List nesting the codec accepts (defensive bound; real
+/// state is depth <= 2: a list of tensors).
+const MAX_DEPTH: usize = 32;
+/// Max elements per decoded tensor (1 GiB of f32): a corrupt length field
+/// must produce a clean error, not a multi-GB allocation or an overflowed
+/// shape product.
+const MAX_ELEMS: u64 = 1 << 28;
 
 /// A saved PD snapshot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub model: String,
     pub params: BTreeMap<Pid, Tensor>,
+    /// Per-particle local state (only particles with non-empty state).
+    pub state: BTreeMap<Pid, Vec<(String, Value)>>,
 }
 
 impl Checkpoint {
-    /// Snapshot a PD (drains device caches first). The captured tensors
-    /// share storage with the live parameters (COW) — capturing costs no
-    /// parameter-sized copies, and later training steps detach on write.
+    /// Snapshot a PD (drains device caches first). Captured tensors —
+    /// parameters AND tensor-valued state entries — share storage with the
+    /// live values (COW): capturing costs no parameter-sized copies, and
+    /// later training steps detach on write. Call at a quiescent point
+    /// (no in-flight training round), as with `drain_params`.
     pub fn capture(pd: &PushDist) -> Result<Checkpoint> {
         let params = pd.drain_params().map_err(|e| anyhow!("{e}"))?;
-        Ok(Checkpoint { model: pd.model().name.clone(), params })
+        let mut state = BTreeMap::new();
+        for pid in pd.particles() {
+            if let Some(entries) = pd.particle_state(pid) {
+                if !entries.is_empty() {
+                    state.insert(pid, entries);
+                }
+            }
+        }
+        Ok(Checkpoint { model: pd.model().name.clone(), params, state })
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
-        let mut w =
-            std::io::BufWriter::new(std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
+        let file = std::fs::File::create(path).with_context(|| format!("{path:?}"))?;
+        let mut w = std::io::BufWriter::new(file);
         w.write_all(&MAGIC.to_le_bytes())?;
         w.write_all(&VERSION.to_le_bytes())?;
         let name = self.model.as_bytes();
@@ -59,24 +90,30 @@ impl Checkpoint {
                 w.write_all(&v.to_le_bytes())?;
             }
         }
+        w.write_all(&(self.state.len() as u32).to_le_bytes())?;
+        for (pid, entries) in &self.state {
+            w.write_all(&pid.0.to_le_bytes())?;
+            w.write_all(&(entries.len() as u32).to_le_bytes())?;
+            for (key, value) in entries {
+                let kb = key.as_bytes();
+                w.write_all(&(kb.len() as u32).to_le_bytes())?;
+                w.write_all(kb)?;
+                write_value(&mut w, value, 0)
+                    .with_context(|| format!("state key {key:?} of {pid}"))?;
+            }
+        }
         Ok(())
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let path = path.as_ref();
-        let mut r =
-            std::io::BufReader::new(std::fs::File::open(path).with_context(|| format!("{path:?}"))?);
-        let mut u32buf = [0u8; 4];
-        let mut u64buf = [0u8; 8];
-        let mut read_u32 = |r: &mut dyn Read| -> Result<u32> {
-            r.read_exact(&mut u32buf)?;
-            Ok(u32::from_le_bytes(u32buf))
-        };
+        let file = std::fs::File::open(path).with_context(|| format!("{path:?}"))?;
+        let mut r = std::io::BufReader::new(file);
         if read_u32(&mut r)? != MAGIC {
             bail!("{path:?} is not a Push checkpoint (bad magic)");
         }
         let version = read_u32(&mut r)?;
-        if version != VERSION {
+        if version != 1 && version != VERSION {
             bail!("{path:?}: unsupported checkpoint version {version}");
         }
         let name_len = read_u32(&mut r)? as usize;
@@ -90,22 +127,47 @@ impl Checkpoint {
         let mut params = BTreeMap::new();
         for _ in 0..count {
             let pid = Pid(read_u32(&mut r)?);
-            r.read_exact(&mut u64buf)?;
-            let n = u64::from_le_bytes(u64buf) as usize;
-            let mut data = vec![0f32; n];
-            // bulk read as bytes, then reinterpret
-            let mut bytes = vec![0u8; n * 4];
-            r.read_exact(&mut bytes)?;
-            for (i, c) in bytes.chunks_exact(4).enumerate() {
-                data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let n = read_u64(&mut r)?;
+            if n > MAX_ELEMS {
+                bail!("{path:?}: implausible parameter count {n} for {pid}");
             }
-            params.insert(pid, Tensor::f32(vec![n], data));
+            let n = n as usize;
+            params.insert(pid, Tensor::f32(vec![n], read_f32s(&mut r, n)?));
         }
-        Ok(Checkpoint { model, params })
+        let mut state = BTreeMap::new();
+        if version >= 2 {
+            let n_state = read_u32(&mut r)? as usize;
+            if n_state > 1 << 20 {
+                bail!("{path:?}: implausible state-entry count {n_state}");
+            }
+            for _ in 0..n_state {
+                let pid = Pid(read_u32(&mut r)?);
+                let n_keys = read_u32(&mut r)? as usize;
+                if n_keys > 1 << 16 {
+                    bail!("{path:?}: implausible key count {n_keys} for {pid}");
+                }
+                let mut entries = Vec::with_capacity(n_keys);
+                for _ in 0..n_keys {
+                    let klen = read_u32(&mut r)? as usize;
+                    if klen > 4096 {
+                        bail!("{path:?}: implausible state-key length {klen}");
+                    }
+                    let mut kb = vec![0u8; klen];
+                    r.read_exact(&mut kb)?;
+                    let key = String::from_utf8(kb).context("state key not utf-8")?;
+                    let value = read_value(&mut r, 0)
+                        .with_context(|| format!("state key {key:?} of {pid}"))?;
+                    entries.push((key, value));
+                }
+                state.insert(pid, entries);
+            }
+        }
+        Ok(Checkpoint { model, params, state })
     }
 
-    /// Restore parameters into a PD whose particles were created in the
-    /// same order (pids must match; model name must match).
+    /// Restore parameters and particle state into a PD whose particles
+    /// were created in the same order (pids must match; model name must
+    /// match). State keys merge over the live state; parameters overwrite.
     pub fn restore(&self, pd: &PushDist) -> Result<()> {
         if pd.model().name != self.model {
             bail!(
@@ -120,22 +182,234 @@ impl Checkpoint {
             .map(|(pid, t)| pd.set(*pid, t.clone()))
             .collect();
         crate::PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        for (pid, entries) in &self.state {
+            pd.restore_particle_state(*pid, entries.clone())
+                .map_err(|e| anyhow!("{e}"))?;
+        }
         Ok(())
     }
+}
+
+// ---- primitive readers --------------------------------------------------
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ---- Value codec --------------------------------------------------------
+
+fn write_value(w: &mut impl Write, v: &Value, depth: usize) -> Result<()> {
+    if depth > MAX_DEPTH {
+        bail!("state value nesting exceeds {MAX_DEPTH}");
+    }
+    match v {
+        Value::Unit => w.write_all(&[0u8])?,
+        Value::Bool(b) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&[*b as u8])?;
+        }
+        Value::F32(f) => {
+            w.write_all(&[2u8])?;
+            w.write_all(&f.to_le_bytes())?;
+        }
+        Value::Usize(n) => {
+            w.write_all(&[3u8])?;
+            w.write_all(&(*n as u64).to_le_bytes())?;
+        }
+        Value::Str(s) => {
+            w.write_all(&[4u8])?;
+            let b = s.as_bytes();
+            w.write_all(&(b.len() as u32).to_le_bytes())?;
+            w.write_all(b)?;
+        }
+        Value::Tensor(t) => {
+            w.write_all(&[5u8])?;
+            let tag = match t.dtype() {
+                DType::F32 => 0u8,
+                DType::I32 => 1u8,
+                DType::U32 => 2u8,
+            };
+            w.write_all(&[tag])?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for d in &t.shape {
+                w.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            match t.dtype() {
+                DType::F32 => {
+                    for v in t.as_f32() {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                DType::I32 => {
+                    for v in t.as_i32() {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                DType::U32 => {
+                    for v in t.as_u32() {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Value::List(vs) => {
+            w.write_all(&[6u8])?;
+            w.write_all(&(vs.len() as u32).to_le_bytes())?;
+            for v in vs {
+                write_value(w, v, depth + 1)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_value(r: &mut impl Read, depth: usize) -> Result<Value> {
+    if depth > MAX_DEPTH {
+        bail!("state value nesting exceeds {MAX_DEPTH}");
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    Ok(match tag[0] {
+        0 => Value::Unit,
+        1 => {
+            let mut b = [0u8; 1];
+            r.read_exact(&mut b)?;
+            Value::Bool(b[0] != 0)
+        }
+        2 => {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            Value::F32(f32::from_le_bytes(b))
+        }
+        3 => Value::Usize(read_u64(r)? as usize),
+        4 => {
+            let len = read_u32(r)? as usize;
+            if len > 1 << 20 {
+                bail!("implausible string length {len}");
+            }
+            let mut b = vec![0u8; len];
+            r.read_exact(&mut b)?;
+            Value::Str(String::from_utf8(b).context("state string not utf-8")?)
+        }
+        5 => {
+            let mut dt = [0u8; 1];
+            r.read_exact(&mut dt)?;
+            let rank = read_u32(r)? as usize;
+            if rank > 32 {
+                bail!("implausible tensor rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            let mut elems: u64 = 1;
+            for _ in 0..rank {
+                let dim = read_u64(r)?;
+                elems = elems.saturating_mul(dim.max(1));
+                if dim > MAX_ELEMS || elems > MAX_ELEMS {
+                    bail!("implausible tensor shape (dim {dim}, {elems}+ elements)");
+                }
+                shape.push(dim as usize);
+            }
+            let n: usize = shape.iter().product();
+            let data = match dt[0] {
+                0 => TensorData::f32(read_f32s(r, n)?),
+                1 => {
+                    let mut bytes = vec![0u8; n * 4];
+                    r.read_exact(&mut bytes)?;
+                    TensorData::i32(
+                        bytes
+                            .chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                2 => {
+                    let mut bytes = vec![0u8; n * 4];
+                    r.read_exact(&mut bytes)?;
+                    TensorData::u32(
+                        bytes
+                            .chunks_exact(4)
+                            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                other => bail!("unknown tensor dtype tag {other}"),
+            };
+            Value::Tensor(Tensor::new(shape, data))
+        }
+        6 => {
+            let len = read_u32(r)? as usize;
+            if len > 1 << 24 {
+                bail!("implausible list length {len}");
+            }
+            let mut vs = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                vs.push(read_value(r, depth + 1)?);
+            }
+            Value::List(vs)
+        }
+        other => bail!("unknown value tag {other}"),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tmp_dir(label: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("push-ckpt-{label}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip_in_memory_format() {
         let mut params = BTreeMap::new();
         params.insert(Pid(0), Tensor::f32(vec![3], vec![1.0, -2.0, 3.5]));
         params.insert(Pid(7), Tensor::f32(vec![2], vec![0.25, f32::MIN_POSITIVE]));
-        let ck = Checkpoint { model: "mlp_tiny".into(), params };
-        let dir = std::env::temp_dir().join(format!("push-ckpt-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let mut state = BTreeMap::new();
+        // a chain-shaped state: clock + momentum + reservoir + extras of
+        // every codec type
+        state.insert(
+            Pid(0),
+            vec![
+                ("sgmcmc_t".to_string(), Value::Usize(42)),
+                (
+                    "sgmcmc_mom".to_string(),
+                    Value::Tensor(Tensor::f32(vec![3], vec![0.1, 0.2, -0.3])),
+                ),
+                (
+                    "sgmcmc_samples".to_string(),
+                    Value::List(vec![
+                        Value::Tensor(Tensor::f32(vec![3], vec![1.0, 2.0, 3.0])),
+                        Value::Tensor(Tensor::f32(vec![3], vec![4.0, 5.0, 6.0])),
+                    ]),
+                ),
+                ("flag".to_string(), Value::Bool(true)),
+                ("note".to_string(), Value::Str("chain".to_string())),
+                ("nil".to_string(), Value::Unit),
+                ("lr".to_string(), Value::F32(0.125)),
+                ("labels".to_string(), Value::Tensor(Tensor::i32(vec![2], vec![-1, 7]))),
+                ("key".to_string(), Value::Tensor(Tensor::u32(vec![2], vec![0, 9]))),
+            ],
+        );
+        let ck = Checkpoint { model: "mlp_tiny".into(), params, state };
+        let dir = tmp_dir("rt");
         let path = dir.join("t.ckpt");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
@@ -144,12 +418,47 @@ mod tests {
     }
 
     #[test]
+    fn loads_version1_files_with_empty_state() {
+        // Hand-rolled v1 bytes: magic, version 1, name, one particle.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(4u32).to_le_bytes());
+        bytes.extend_from_slice(b"mlp1");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // pid 3
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // 2 elems
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&(-2.5f32).to_le_bytes());
+        let dir = tmp_dir("v1");
+        let path = dir.join("v1.ckpt");
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.model, "mlp1");
+        assert_eq!(ck.params[&Pid(3)], Tensor::f32(vec![2], vec![1.5, -2.5]));
+        assert!(ck.state.is_empty(), "v1 has no state section");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join(format!("push-ckpt2-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("bad");
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        let dir = tmp_dir("v99");
+        let path = dir.join("v99.ckpt");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -155,6 +155,21 @@ impl PushDist {
         self.nel.drain_params()
     }
 
+    /// Clone one particle's local state (Adam moments, SWAG moments,
+    /// SGMCMC chain state, ...). Zero-copy for tensor values.
+    pub fn particle_state(&self, pid: Pid) -> Option<Vec<(String, Value)>> {
+        self.nel.particle_state(pid)
+    }
+
+    /// Merge state entries back into a particle (checkpoint restore).
+    pub fn restore_particle_state(
+        &self,
+        pid: Pid,
+        entries: Vec<(String, Value)>,
+    ) -> Result<(), PushError> {
+        self.nel.restore_particle_state(pid, entries)
+    }
+
     pub fn stats(&self) -> NelStats {
         self.nel.stats()
     }

@@ -1,0 +1,312 @@
+//! Hermetic SGMCMC integration tests (no artifacts, no PJRT): the native
+//! linear ModelSource drives full particle-machinery chains — broadcast
+//! fan-outs, device jobs, COW snapshots — so the deterministic properties
+//! below hold on the default feature set.
+//!
+//! * SGLD at temperature 0 IS plain SGD: trajectories match a sequential
+//!   reference loop bit-for-bit (and diverge once noise is on).
+//! * SGHMC at temperature 0 is heavy-ball momentum SGD, and its momentum +
+//!   chain clock + reservoir round-trip through pd::checkpoint (v2 state
+//!   section), so a restored chain continues exactly where it left off.
+//! * The bounded reservoir respects burn-in / thinning / capacity under a
+//!   1024-particle stress round.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use push::data::{synth, Batch, DataLoader};
+use push::device::CostModel;
+use push::infer::sgmcmc::{
+    expected_candidates, linear_native_model, ModelSource, Schedule, SgMcmc, SgmcmcAlgo,
+    SgmcmcConfig,
+};
+use push::infer::Infer;
+use push::pd::checkpoint::Checkpoint;
+use push::runtime::tensor::ops;
+use push::runtime::{DType, Manifest, ModelSpec, Tensor};
+use push::util::rng::Rng;
+use push::{NelConfig, PushDist};
+
+const D: usize = 6;
+const BATCH: usize = 8;
+
+fn native_manifest() -> Manifest {
+    let spec = ModelSpec {
+        name: "linear_native".to_string(),
+        param_count: D,
+        task: "regress".to_string(),
+        x_shape: vec![BATCH, D],
+        y_shape: vec![BATCH, 1],
+        y_dtype: DType::F32,
+        arch: "mlp".to_string(),
+        meta: BTreeMap::new(),
+        entries: BTreeMap::new(),
+    };
+    Manifest {
+        dir: std::path::PathBuf::from("."),
+        models: [("linear_native".to_string(), spec)].into_iter().collect(),
+        svgd: Vec::new(),
+    }
+}
+
+fn pd(devices: usize, workers: usize) -> PushDist {
+    let cfg = NelConfig {
+        num_devices: devices,
+        cache_size: 4,
+        cost: CostModel::free(),
+        control_workers: workers,
+        seed: 7,
+        ..NelConfig::default()
+    };
+    PushDist::new(&native_manifest(), "linear_native", cfg).unwrap()
+}
+
+fn init_params(i: usize) -> Tensor {
+    Tensor::f32(vec![D], Rng::new(0xBEEF).fold_in(i as u64).normal_vec(D))
+}
+
+fn chain_cfg(particles: usize, algo: SgmcmcAlgo, temperature: f32) -> SgmcmcConfig {
+    SgmcmcConfig {
+        particles,
+        algo,
+        schedule: Schedule::Constant { eps: 2e-2 },
+        temperature,
+        friction: 0.2,
+        burn_in: 3,
+        thin: 2,
+        max_samples: 4,
+        prior_std: None,
+        seed: 21,
+        model: linear_native_model(),
+        init: Some(Arc::new(init_params)),
+    }
+}
+
+fn fixed_batches(n_batches: usize, seed: u64) -> Vec<Batch> {
+    let data = synth::linear(BATCH * n_batches, D, 0.05, seed);
+    DataLoader::new(data, BATCH, false, 0).epoch()
+}
+
+/// Native (loss, grad) closure used both by the chains and the reference
+/// loops, so any divergence is in the particle machinery, not the math.
+fn native_grad(params: &Tensor, x: &Tensor, y: &Tensor) -> Tensor {
+    let ModelSource::Native { grad, .. } = linear_native_model() else { unreachable!() };
+    grad(params, x, y).unwrap().1
+}
+
+fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    a.as_f32()
+        .iter()
+        .zip(b.as_f32())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn sgld_zero_noise_matches_sgd_trajectory() {
+    let n = 3;
+    let eps = 2e-2f32;
+    let batches = fixed_batches(5, 11);
+    let algo = SgMcmc::new(pd(2, 2), chain_cfg(n, SgmcmcAlgo::Sgld, 0.0)).unwrap();
+    for b in &batches {
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    let chained: Vec<Tensor> = algo.pd().drain_params().unwrap().into_values().collect();
+
+    // sequential SGD reference: θ ← θ − ε ∇U(θ), same init, same batches
+    let mut reference: Vec<Tensor> = (0..n).map(init_params).collect();
+    for b in &batches {
+        for p in reference.iter_mut() {
+            let g = native_grad(p, &b.x, &b.y);
+            ops::axpy(p, -eps, &g);
+        }
+    }
+    assert_eq!(chained.len(), reference.len());
+    for (i, (c, r)) in chained.iter().zip(&reference).enumerate() {
+        let diff = max_abs_diff(c, r);
+        assert!(diff < 1e-6, "chain {i} diverged from SGD: {diff}");
+    }
+}
+
+#[test]
+fn sgld_positive_temperature_injects_noise() {
+    let batches = fixed_batches(3, 11);
+    let noisy = SgMcmc::new(pd(1, 2), chain_cfg(2, SgmcmcAlgo::Sgld, 1e-2)).unwrap();
+    let cold = SgMcmc::new(pd(1, 2), chain_cfg(2, SgmcmcAlgo::Sgld, 0.0)).unwrap();
+    for b in &batches {
+        noisy.step_all(&b.x, &b.y).unwrap();
+        cold.step_all(&b.x, &b.y).unwrap();
+    }
+    let a: Vec<Tensor> = noisy.pd().drain_params().unwrap().into_values().collect();
+    let b: Vec<Tensor> = cold.pd().drain_params().unwrap().into_values().collect();
+    let moved = a.iter().zip(&b).any(|(x, y)| max_abs_diff(x, y) > 1e-7);
+    assert!(moved, "temperature > 0 must perturb the trajectory");
+}
+
+#[test]
+fn sghmc_zero_noise_is_heavy_ball_momentum() {
+    let n = 2;
+    let (eps, friction) = (2e-2f32, 0.2f32);
+    let batches = fixed_batches(4, 12);
+    let algo = SgMcmc::new(pd(2, 2), chain_cfg(n, SgmcmcAlgo::Sghmc, 0.0)).unwrap();
+    for b in &batches {
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    let chained: Vec<Tensor> = algo.pd().drain_params().unwrap().into_values().collect();
+
+    // reference: v ← (1−α) v − ε g;  θ ← θ + v
+    let mut reference: Vec<Tensor> = (0..n).map(init_params).collect();
+    let mut momenta: Vec<Tensor> = (0..n).map(|_| Tensor::zeros(vec![D])).collect();
+    for b in &batches {
+        for (p, v) in reference.iter_mut().zip(momenta.iter_mut()) {
+            let g = native_grad(p, &b.x, &b.y);
+            ops::scale_add(v, 1.0 - friction, -eps, &g);
+            ops::axpy(p, 1.0, v);
+        }
+    }
+    for (i, (c, r)) in chained.iter().zip(&reference).enumerate() {
+        let diff = max_abs_diff(c, r);
+        assert!(diff < 1e-6, "chain {i} diverged from momentum SGD: {diff}");
+    }
+}
+
+#[test]
+fn sghmc_momentum_roundtrips_through_checkpoint() {
+    let n = 2;
+    // temperature > 0: continuation only matches if the restored chain
+    // clock re-aligns the per-step noise streams.
+    let mk = || SgMcmc::new(pd(2, 2), chain_cfg(n, SgmcmcAlgo::Sghmc, 1e-3)).unwrap();
+    let first = fixed_batches(6, 13);
+    let second = fixed_batches(3, 14);
+
+    let original = mk();
+    for b in &first {
+        original.step_all(&b.x, &b.y).unwrap();
+    }
+    let ck = Checkpoint::capture(original.pd()).unwrap();
+    // captured state carries the chain: clock, momentum, reservoir
+    for pid in original.pids() {
+        let entries = &ck.state[&pid];
+        let momentum = entries.iter().find(|(k, _)| k == push::infer::sgmcmc::K_MOM);
+        assert!(momentum.is_some(), "{pid} momentum missing from checkpoint");
+        let c = original.chain(pid);
+        assert_eq!(c.step, first.len());
+        assert!(c.momentum.is_some());
+    }
+
+    // file round-trip preserves everything, including the state section
+    let dir = std::env::temp_dir().join(format!("push-sgmcmc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("chain.ckpt");
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck, loaded);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // restore into a fresh PD (fresh pids 0..n, fresh init) and continue:
+    // both runs must produce identical parameters and momenta
+    let restored = mk();
+    loaded.restore(restored.pd()).unwrap();
+    for b in &second {
+        original.step_all(&b.x, &b.y).unwrap();
+        restored.step_all(&b.x, &b.y).unwrap();
+    }
+    let a = original.pd().drain_params().unwrap();
+    let b = restored.pd().drain_params().unwrap();
+    for (pid, pa) in &a {
+        let diff = max_abs_diff(pa, &b[pid]);
+        assert!(diff < 1e-6, "{pid} diverged after restore: {diff}");
+        let (ca, cb) = (original.chain(*pid), restored.chain(*pid));
+        assert_eq!(ca.step, cb.step, "{pid} chain clock diverged");
+        let (ma, mb) = (ca.momentum.unwrap(), cb.momentum.unwrap());
+        assert!(max_abs_diff(&ma, &mb) < 1e-6, "{pid} momentum diverged");
+        assert_eq!(ca.samples.len(), cb.samples.len());
+    }
+}
+
+#[test]
+fn reservoir_respects_burn_in_and_thinning_at_1024_particles() {
+    let particles = 1024;
+    let steps = 10;
+    let (burn_in, thin, cap) = (3usize, 2usize, 2usize);
+    let cfg = SgmcmcConfig {
+        max_samples: cap,
+        ..chain_cfg(particles, SgmcmcAlgo::Sgld, 1e-3)
+    };
+    assert_eq!(cfg.burn_in, burn_in);
+    assert_eq!(cfg.thin, thin);
+    let algo = SgMcmc::new(pd(2, 8), cfg).unwrap();
+    let batches = fixed_batches(steps, 15);
+    for b in &batches {
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    // candidates at t = 3, 5, 7, 9 → seen = 4, kept = min(cap, 4) = 2
+    let want_seen = expected_candidates(steps, burn_in, thin);
+    assert_eq!(want_seen, 4);
+    let pids = algo.pids();
+    assert_eq!(pids.len(), particles);
+    for pid in pids {
+        let c = algo.chain(pid);
+        assert_eq!(c.step, steps, "{pid} chain clock");
+        assert_eq!(c.seen, want_seen, "{pid} candidate count");
+        assert_eq!(c.samples.len(), want_seen.min(cap), "{pid} reservoir size");
+        for s in &c.samples {
+            assert_eq!(s.element_count(), D);
+            assert!(s.as_f32().iter().all(|v| v.is_finite()), "{pid} sample not finite");
+        }
+    }
+}
+
+#[test]
+fn reservoir_stays_bounded_past_capacity() {
+    // long chain, tiny reservoir: seen grows, kept stays at capacity
+    let cfg = SgmcmcConfig {
+        burn_in: 0,
+        thin: 1,
+        max_samples: 3,
+        ..chain_cfg(2, SgmcmcAlgo::Sgld, 0.0)
+    };
+    let algo = SgMcmc::new(pd(1, 2), cfg).unwrap();
+    let batches = fixed_batches(2, 16);
+    let steps = 12;
+    for i in 0..steps {
+        let b = &batches[i % batches.len()];
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    for pid in algo.pids() {
+        let c = algo.chain(pid);
+        assert_eq!(c.seen, steps);
+        assert_eq!(c.samples.len(), 3, "reservoir must stay at capacity");
+    }
+}
+
+#[test]
+fn posterior_predict_averages_reservoir_samples() {
+    let algo = SgMcmc::new(
+        pd(2, 2),
+        SgmcmcConfig { burn_in: 2, thin: 1, ..chain_cfg(4, SgmcmcAlgo::Sgld, 1e-3) },
+    )
+    .unwrap();
+    let batches = fixed_batches(4, 17);
+    let b0 = batches[0].clone();
+
+    // before any training: empty reservoir falls back to current params
+    let cold = algo.predict_mean(&b0.x).unwrap();
+    assert_eq!(cold.element_count(), b0.y.element_count());
+
+    for _ in 0..3 {
+        for b in &batches {
+            algo.step_all(&b.x, &b.y).unwrap();
+        }
+    }
+    for pid in algo.pids() {
+        assert!(!algo.chain(pid).samples.is_empty(), "reservoir filled");
+    }
+    let pred = algo.predict_mean(&b0.x).unwrap();
+    assert_eq!(pred.shape, b0.y.shape);
+    assert!(pred.as_f32().iter().all(|v| v.is_finite()));
+    // training toward the linear target must beat the cold prediction
+    let before = push::infer::eval::batch_mse(&cold, &b0.y);
+    let after = push::infer::eval::batch_mse(&pred, &b0.y);
+    assert!(after < before, "posterior predictive did not improve: {before} -> {after}");
+}

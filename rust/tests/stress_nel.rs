@@ -58,7 +58,12 @@ fn os_threads() -> Option<usize> {
         .and_then(|v| v.trim().parse().ok())
 }
 
-fn no_params_particle(nel: &Nel, model: &Arc<ModelSpec>, msg: &str, h: push::particle::Handler) -> Pid {
+fn no_params_particle(
+    nel: &Nel,
+    model: &Arc<ModelSpec>,
+    msg: &str,
+    h: push::particle::Handler,
+) -> Pid {
     nel.p_create(
         model.clone(),
         CreateOpts {

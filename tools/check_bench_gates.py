@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Bench-smoke regression gate (CI).
+
+Compares a fresh l3_microbench run (the JSON written via PUSH_BENCH_JSON)
+against the analytic accounting committed in BENCH_l3.json: every entry in
+its `gates` array asserts
+
+    mean(slow case) / mean(fast case)  >=  min_ratio
+
+where min_ratio is the conservative analytic advantage divided by 2 — i.e.
+the build fails only when an optimized path has regressed by more than 2x
+relative to what the byte/op accounting says it must beat. Gated cases are
+all hermetic, so the check needs no artifacts and no PJRT.
+
+Usage: check_bench_gates.py BENCH_l3.json measured.json
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        measured = json.load(f)
+
+    gates = baseline.get("gates", [])
+    if not gates:
+        print(f"error: no gates defined in {sys.argv[1]}")
+        return 1
+    cases = measured.get("cases", {})
+
+    failures = []
+    print(f"{'gate (slow / fast)':<64} {'ratio':>8} {'min':>6}  verdict")
+    for gate in gates:
+        fast, slow = gate["fast"], gate["slow"]
+        min_ratio = float(gate["min_ratio"])
+        missing = [name for name in (fast, slow) if name not in cases]
+        if missing:
+            failures.append(f"missing case(s) {missing} for gate {slow}/{fast}")
+            print(f"{slow + ' / ' + fast:<64} {'-':>8} {min_ratio:>6}  MISSING")
+            continue
+        fast_us = float(cases[fast]["mean_us"])
+        slow_us = float(cases[slow]["mean_us"])
+        if fast_us <= 0:
+            failures.append(f"non-positive mean for {fast}: {fast_us}")
+            continue
+        ratio = slow_us / fast_us
+        ok = ratio >= min_ratio
+        print(f"{slow + ' / ' + fast:<64} {ratio:>8.2f} {min_ratio:>6}  {'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(
+                f"{fast} regressed: {slow}/{fast} = {ratio:.2f}x < required {min_ratio}x "
+                f"(fast {fast_us:.1f}us, slow {slow_us:.1f}us)"
+            )
+
+    if failures:
+        print("\nbench gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nall {len(gates)} bench gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
