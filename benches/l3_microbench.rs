@@ -3,9 +3,12 @@
 //! Measures the NEL primitives the perf pass optimizes: future round-trip,
 //! message dispatch through the M:N scheduler, particle creation at 1k
 //! scale (vs a thread-per-particle control), broadcast fan-out (vs serial
-//! sends), device-job dispatch, context-switch (swap) cost under cache
-//! pressure, parameter views, the native SVGD kernel math, and the SGMCMC
-//! chain-step body (SGLD update + native linear gradient).
+//! sends), the PD fabric seam (single-node InProc vs the raw NEL path, and
+//! a 2-node TCP-loopback broadcast over real sockets), wire-codec
+//! encode/decode throughput, device-job dispatch, context-switch (swap)
+//! cost under cache pressure, parameter views, the native SVGD kernel
+//! math, and the SGMCMC chain-step body (SGLD update + native linear
+//! gradient).
 //!
 //! Hermetic by default: the zero-copy-plane cases (params_view, SVGD
 //! stacking round, send-label interning) need no artifacts and no PJRT.
@@ -25,6 +28,7 @@ use push::device::{CostModel, HostStore, ResidentCache};
 use push::nel::trace::Trace;
 use push::nel::CreateOpts;
 use push::particle::{handler, PFuture, Value};
+use push::pd::{wire, SpecOpts, Topology, TransportKind};
 use push::runtime::tensor::ops;
 use push::runtime::{artifacts_dir, DType, Manifest, ModelSpec, Tensor};
 use push::util::json::Json;
@@ -55,6 +59,17 @@ fn dummy_model() -> Arc<ModelSpec> {
         meta: BTreeMap::new(),
         entries: BTreeMap::new(),
     })
+}
+
+/// The same dummy model wrapped as a manifest, for PD-fabric benches.
+fn dummy_manifest() -> Manifest {
+    Manifest {
+        dir: std::path::PathBuf::from("."),
+        models: [("bench_dummy".to_string(), (*dummy_model()).clone())]
+            .into_iter()
+            .collect(),
+        svgd: Vec::new(),
+    }
 }
 
 fn run(
@@ -185,6 +200,69 @@ fn main() {
             let futs: Vec<PFuture> =
                 pids.iter().map(|p| nel.send(None, *p, "FAN", vec![])).collect();
             PFuture::wait_all(&futs).unwrap();
+        });
+    }
+
+    // ---- PD fabric: seam overhead + real-socket broadcast -----------------
+    // broadcast_256_inproc: the SAME 256-wide fan-out as broadcast_fanout_256
+    // but through the PD's transport seam (single-node InProc fabric) — the
+    // refactor must not tax the single-node hot path (gated at 1.1x).
+    // broadcast_256_tcp_loopback: two loopback node servers behind real
+    // sockets; one request frame per destination node, one batched response.
+    {
+        const FAN: usize = 256;
+        let mk = |nodes: usize, transport: TransportKind| {
+            let pd = PushDist::with_topology(
+                &dummy_manifest(),
+                "bench_dummy",
+                cfg(2, 4),
+                &Topology { nodes, transport },
+            )
+            .unwrap();
+            let pids = pd
+                .p_create_spec_n(FAN, |_| SpecOpts {
+                    program: Some(("echo".to_string(), Value::Unit)),
+                    no_params: true,
+                    ..SpecOpts::default()
+                })
+                .unwrap();
+            PFuture::join_all(&pd.broadcast(&pids, "PING", vec![])).wait().unwrap();
+            (pd, pids)
+        };
+        let (pd, pids) = mk(1, TransportKind::InProc);
+        run(&mut results, "broadcast_256_inproc", 20, 200, || {
+            PFuture::join_all(&pd.broadcast(&pids, "PING", vec![])).wait().unwrap();
+        });
+        let (pd, pids) = mk(2, TransportKind::TcpLoopback);
+        run(&mut results, "broadcast_256_tcp_loopback", 10, 100, || {
+            PFuture::join_all(&pd.broadcast(&pids, "PING", vec![])).wait().unwrap();
+        });
+        let frames = pd.transport_counters();
+        println!(
+            "    (tcp fabric: {} frames out / {} in per node-0 link)",
+            frames[0].frames_sent, frames[0].frames_received
+        );
+    }
+
+    // ---- wire codec throughput (encode/decode a 1 MB tensor value) --------
+    {
+        let mut rng = Rng::new(13);
+        let d = 1 << 18; // 256k f32 = 1 MB payload
+        let v = Value::List(vec![
+            Value::Tensor(Tensor::f32(vec![d], rng.normal_vec(d))),
+            Value::Usize(7),
+            Value::Str("frame".to_string()),
+        ]);
+        let mut encoded = Vec::new();
+        wire::write_value(&mut encoded, &v, 0).unwrap();
+        run(&mut results, "wire_codec_encode_1MB", 5, 100, || {
+            let mut buf = Vec::with_capacity(encoded.len());
+            wire::write_value(&mut buf, &v, 0).unwrap();
+            black_box(&buf);
+        });
+        run(&mut results, "wire_codec_decode_1MB", 5, 100, || {
+            let got = wire::read_value(&mut encoded.as_slice(), 0).unwrap();
+            black_box(&got);
         });
     }
 

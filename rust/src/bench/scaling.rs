@@ -75,6 +75,9 @@ pub struct ScalePoint {
     /// what the same schedule costs when devices truly overlap.
     pub modeled_secs: f64,
     pub final_loss: f64,
+    /// Cross-chain diagnostics (SGMCMC methods only; None otherwise).
+    /// NaN fields serialize as JSON null and render "n/a".
+    pub diag: Option<crate::infer::eval::ChainDiag>,
 }
 
 /// Train `method` with `particles` on `devices`. Uses the substitute
@@ -149,7 +152,12 @@ pub fn run_one(
         })
         .fold(0.0f64, f64::max)
         / measured as f64;
-    Ok(ScalePoint { wall_secs: wall, modeled_secs: modeled, final_loss: report.final_loss() })
+    Ok(ScalePoint {
+        wall_secs: wall,
+        modeled_secs: modeled,
+        final_loss: report.final_loss(),
+        diag: algo.diagnostics(),
+    })
 }
 
 fn stats_snapshot(algo: &dyn Infer) -> Vec<crate::device::DeviceStats> {
@@ -200,7 +208,12 @@ pub fn run_baseline(
         report.mean_epoch_secs()
     };
     // The baseline is a single sequential stream: modeled == wall.
-    Ok(ScalePoint { wall_secs: secs, modeled_secs: secs, final_loss: report.final_loss() })
+    Ok(ScalePoint {
+        wall_secs: secs,
+        modeled_secs: secs,
+        final_loss: report.final_loss(),
+        diag: None,
+    })
 }
 
 /// Figure 4 / Figure 7 grid: archs x methods x devices x particles.
@@ -226,16 +239,19 @@ pub fn run_figure(
                         pt.wall_secs,
                         pt.modeled_secs
                     );
-                    rep.push(
-                        Row::new()
-                            .str("arch", arch)
-                            .str("method", method.name())
-                            .int("devices", dev)
-                            .int("particles", particles)
-                            .num("wall_secs_per_epoch", pt.wall_secs)
-                            .num("modeled_secs_per_epoch", pt.modeled_secs)
-                            .num("final_loss", pt.final_loss),
-                    );
+                    let mut row = Row::new()
+                        .str("arch", arch)
+                        .str("method", method.name())
+                        .int("devices", dev)
+                        .int("particles", particles)
+                        .num("wall_secs_per_epoch", pt.wall_secs)
+                        .num("modeled_secs_per_epoch", pt.modeled_secs)
+                        .num("final_loss", pt.final_loss);
+                    if let Some(diag) = &pt.diag {
+                        // NaN (undiagnosable) saves as null, renders n/a
+                        row = row.num("r_hat", diag.r_hat).num("ess", diag.ess);
+                    }
+                    rep.push(row);
                 }
             }
             if opts.baseline {

@@ -1,7 +1,9 @@
 //! Evaluation metrics and posterior-predictive combinators: classification
-//! accuracy (Tables 3/4), regression MSE, and the accumulate/finalize pair
+//! accuracy (Tables 3/4), regression MSE, the accumulate/finalize pair
 //! that multi-SWAG and SGMCMC use to average predictions over posterior
-//! samples (sum of one-hot votes for classify, running mean for regress).
+//! samples (sum of one-hot votes for classify, running mean for regress),
+//! and cross-chain MCMC diagnostics (split R-hat and a Geyer-truncated
+//! effective sample size over the particle-chains' reservoirs).
 
 use anyhow::Result;
 
@@ -109,6 +111,171 @@ pub fn predictive_std(preds: &[Tensor]) -> Result<Tensor> {
     Ok(Tensor::f32(preds[0].shape.clone(), out))
 }
 
+// ---- cross-chain MCMC diagnostics ---------------------------------------
+
+/// Cross-chain convergence summary of an SGMCMC run (ROADMAP: "chain
+/// diagnostics (R-hat / ESS across particle-chains)"). Computed per
+/// parameter dimension and reported worst-case: the MAX split R-hat and
+/// the MIN effective sample size over dimensions. NaN means "not
+/// diagnosable" (fewer than 2 chains, fewer than 4 samples per chain, or
+/// zero variance everywhere) and renders as "n/a" downstream.
+#[derive(Debug, Clone, Copy)]
+pub struct ChainDiag {
+    pub r_hat: f64,
+    pub ess: f64,
+    /// Chains (particles) that contributed samples.
+    pub chains: usize,
+    /// Samples per chain used (chains are truncated to the shortest).
+    pub samples_per_chain: usize,
+}
+
+impl ChainDiag {
+    pub fn undiagnosable() -> ChainDiag {
+        ChainDiag { r_hat: f64::NAN, ess: f64::NAN, chains: 0, samples_per_chain: 0 }
+    }
+}
+
+/// Split R-hat (Gelman et al.): each chain of scalars is halved, then
+/// the potential scale reduction sqrt(((n-1)/n W + B/n) / W) is computed
+/// over the 2m half-chains. NaN when undiagnosable (W <= 0 with spread
+/// means, < 2 chains, or < 4 samples).
+pub fn split_r_hat(chains: &[Vec<f64>]) -> f64 {
+    let n_full = chains.iter().map(Vec::len).min().unwrap_or(0);
+    if chains.len() < 2 || n_full < 4 {
+        return f64::NAN;
+    }
+    let half = n_full / 2;
+    let halves: Vec<&[f64]> = chains
+        .iter()
+        .flat_map(|c| [&c[..half], &c[n_full - half..n_full]])
+        .collect();
+    let n = half as f64;
+    let m = halves.len() as f64;
+    let means: Vec<f64> = halves.iter().map(|h| h.iter().sum::<f64>() / n).collect();
+    let grand = means.iter().sum::<f64>() / m;
+    let b = n / (m - 1.0) * means.iter().map(|mu| (mu - grand).powi(2)).sum::<f64>();
+    let w = halves
+        .iter()
+        .zip(&means)
+        .map(|(h, mu)| h.iter().map(|x| (x - mu).powi(2)).sum::<f64>() / (n - 1.0))
+        .sum::<f64>()
+        / m;
+    if w <= 0.0 || w.is_nan() {
+        // all half-chains constant: identical means converge trivially
+        return if b > 0.0 { f64::INFINITY } else { 1.0 };
+    }
+    let var_plus = (n - 1.0) / n * w + b / n;
+    (var_plus / w).sqrt()
+}
+
+/// Effective sample size across chains: m*n / (1 + 2 Σρ_t) with combined
+/// autocorrelations ρ_t = 1 − (W − mean-autocovariance_t)/var⁺ and the
+/// Geyer initial-positive truncation (stop at the first non-positive
+/// paired sum). NaN when undiagnosable.
+pub fn ess(chains: &[Vec<f64>]) -> f64 {
+    let n = chains.iter().map(Vec::len).min().unwrap_or(0);
+    let m = chains.len();
+    if m < 2 || n < 4 {
+        return f64::NAN;
+    }
+    let nf = n as f64;
+    let means: Vec<f64> = chains.iter().map(|c| c[..n].iter().sum::<f64>() / nf).collect();
+    let vars: Vec<f64> = chains
+        .iter()
+        .zip(&means)
+        .map(|(c, mu)| c[..n].iter().map(|x| (x - mu).powi(2)).sum::<f64>() / (nf - 1.0))
+        .collect();
+    let w = vars.iter().sum::<f64>() / m as f64;
+    let grand = means.iter().sum::<f64>() / m as f64;
+    let b_over_n = means.iter().map(|mu| (mu - grand).powi(2)).sum::<f64>() / (m as f64 - 1.0);
+    let var_plus = (nf - 1.0) / nf * w + b_over_n;
+    if var_plus <= 0.0 || var_plus.is_nan() {
+        return f64::NAN;
+    }
+    // mean autocovariance at lag t across chains
+    let acov = |t: usize| -> f64 {
+        chains
+            .iter()
+            .zip(&means)
+            .map(|(c, mu)| {
+                c[..n - t]
+                    .iter()
+                    .zip(&c[t..n])
+                    .map(|(a, b)| (a - mu) * (b - mu))
+                    .sum::<f64>()
+                    / (nf - 1.0)
+            })
+            .sum::<f64>()
+            / m as f64
+    };
+    let rho = |t: usize| 1.0 - (w - acov(t)) / var_plus;
+    let mut sum = 0.0;
+    let mut t = 1;
+    while t + 1 < n {
+        let pair = rho(t) + rho(t + 1);
+        if pair <= 0.0 {
+            break;
+        }
+        sum += pair;
+        t += 2;
+    }
+    let total = (m * n) as f64;
+    (total / (1.0 + 2.0 * sum)).min(total)
+}
+
+/// Dimensions diagnosed at most per call: beyond this, a deterministic
+/// stride subsamples the parameter vector. Chains are reservoir-bounded
+/// (`max_samples`), but d can be in the tens of thousands for artifact
+/// models, and the per-dimension ESS is O(chains * samples^2) — a
+/// strided few-hundred-dimension worst case is statistically adequate
+/// and keeps post-train diagnostics O(ms), not O(s).
+const MAX_DIAG_DIMS: usize = 256;
+
+/// Worst-case-over-dimensions diagnostics of a set of particle-chains,
+/// each a sequence of flat parameter snapshots (the SGMCMC reservoirs).
+/// Dimensions with non-finite values are skipped (large vectors are
+/// sampled at a deterministic stride, see [`MAX_DIAG_DIMS`]); if nothing
+/// is diagnosable the result is NaN (rendered "n/a").
+pub fn chain_diagnostics(chains: &[Vec<Tensor>]) -> ChainDiag {
+    let usable: Vec<&Vec<Tensor>> = chains.iter().filter(|c| !c.is_empty()).collect();
+    let n = usable.iter().map(|c| c.len()).min().unwrap_or(0);
+    if usable.len() < 2 || n < 4 {
+        return ChainDiag::undiagnosable();
+    }
+    let d = usable[0][0].element_count();
+    // ceil(d / MAX_DIAG_DIMS) without div_ceil (MSRV 1.72)
+    let stride = ((d + MAX_DIAG_DIMS - 1) / MAX_DIAG_DIMS).max(1);
+    let mut worst_r = f64::NAN;
+    let mut worst_ess = f64::NAN;
+    for dim in (0..d).step_by(stride) {
+        let series: Vec<Vec<f64>> = usable
+            .iter()
+            .map(|c| c[..n].iter().map(|t| t.as_f32()[dim] as f64).collect())
+            .collect();
+        if series.iter().flatten().any(|v| !v.is_finite()) {
+            continue;
+        }
+        let r = split_r_hat(&series);
+        let e = ess(&series);
+        if r.is_finite() && (worst_r.is_nan() || r > worst_r) {
+            worst_r = r;
+        }
+        if e.is_finite() && (worst_ess.is_nan() || e < worst_ess) {
+            worst_ess = e;
+        }
+    }
+    ChainDiag { r_hat: worst_r, ess: worst_ess, chains: usable.len(), samples_per_chain: n }
+}
+
+/// Render a diagnostic value the way reports render NaN: honestly.
+pub fn fmt_diag(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "n/a".to_string()
+    }
+}
+
 /// Dataset-level accuracy of a predictor `f(x) -> scores` evaluated in
 /// fixed-size batches (artifacts are shape-specialized).
 pub fn dataset_accuracy(
@@ -191,6 +358,70 @@ mod tests {
     fn finalize_empty_is_none() {
         assert!(finalize_mean(None, 0, false).is_none());
         assert!(finalize_mean(Some(Tensor::zeros(vec![1])), 0, true).is_none());
+    }
+
+    #[test]
+    fn r_hat_near_one_for_mixed_chains_and_large_for_split_ones() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        let mixed: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..200).map(|_| rng.normal() as f64).collect())
+            .collect();
+        let r = split_r_hat(&mixed);
+        assert!(r.is_finite() && (r - 1.0).abs() < 0.1, "mixed chains r_hat {r}");
+        let e = ess(&mixed);
+        assert!(e.is_finite() && e > 100.0, "mixed chains ess {e}");
+
+        // chains stuck in different modes: r_hat must flag divergence
+        let split: Vec<Vec<f64>> = (0..4)
+            .map(|c| (0..200).map(|_| rng.normal() as f64 + 10.0 * c as f64).collect())
+            .collect();
+        let r = split_r_hat(&split);
+        assert!(r > 1.5, "split chains r_hat {r}");
+        assert!(ess(&split) < e, "split chains must lose effective samples");
+    }
+
+    #[test]
+    fn diagnostics_are_nan_safe() {
+        // too few chains / samples -> NaN, rendered n/a
+        assert!(split_r_hat(&[vec![1.0, 2.0, 3.0, 4.0]]).is_nan());
+        assert!(split_r_hat(&[vec![1.0], vec![2.0]]).is_nan());
+        assert!(ess(&[vec![1.0, 2.0]]).is_nan());
+        assert_eq!(fmt_diag(f64::NAN), "n/a");
+        assert_eq!(fmt_diag(1.25), "1.250");
+        // constant identical chains converge trivially
+        let flat = vec![vec![2.0; 8], vec![2.0; 8]];
+        assert_eq!(split_r_hat(&flat), 1.0);
+
+        let none = chain_diagnostics(&[]);
+        assert!(none.r_hat.is_nan() && none.ess.is_nan());
+        let short = chain_diagnostics(&[vec![Tensor::zeros(vec![2])], Vec::new()]);
+        assert!(short.r_hat.is_nan());
+    }
+
+    #[test]
+    fn tensor_chain_diagnostics_report_worst_dimension() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        // dim 0 mixes across chains; dim 1 is split by chain -> worst-case
+        // r_hat must reflect dim 1
+        let chains: Vec<Vec<Tensor>> = (0..3)
+            .map(|c| {
+                (0..64)
+                    .map(|_| {
+                        Tensor::f32(
+                            vec![2],
+                            vec![rng.normal(), rng.normal() + 8.0 * c as f32],
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let diag = chain_diagnostics(&chains);
+        assert_eq!(diag.chains, 3);
+        assert_eq!(diag.samples_per_chain, 64);
+        assert!(diag.r_hat > 1.5, "worst-dim r_hat {}", diag.r_hat);
+        assert!(diag.ess.is_finite() && diag.ess > 0.0);
     }
 
     #[test]

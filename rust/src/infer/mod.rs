@@ -76,6 +76,21 @@ pub trait Infer {
     fn predict_mean(&self, x: &Tensor) -> Result<Tensor>;
 
     /// NEL statistics of the backing PD (device busy time, swaps,
-    /// messages) — the scaling benches' modeled-makespan source.
+    /// messages) — the scaling benches' modeled-makespan source. For a
+    /// multi-node PD this is the fabric-wide merge (summed once).
     fn nel_stats(&self) -> crate::nel::NelStats;
+
+    /// Cross-chain convergence diagnostics (split R-hat / ESS over the
+    /// particle-chains), when the algorithm keeps posterior samples.
+    /// None for non-sampling algorithms; NaN fields (rendered "n/a")
+    /// when the chains are not diagnosable yet.
+    fn diagnostics(&self) -> Option<eval::ChainDiag> {
+        None
+    }
+
+    /// Per-node transport frame/byte counters of the backing PD (empty
+    /// for algorithms that don't surface them; all-zero in-process).
+    fn transport_counters(&self) -> Vec<crate::pd::transport::TransportCounters> {
+        Vec::new()
+    }
 }

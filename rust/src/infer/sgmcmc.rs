@@ -140,18 +140,34 @@ pub type NativeForwardFn =
 /// (`grad`/`fwd` entries through PJRT) or native closures — the latter
 /// keeps SGMCMC fully functional in the hermetic no-PJRT build and is what
 /// the deterministic equivalence tests drive.
+///
+/// Native sources carry a `name` so a chain config can cross the PD wire:
+/// closures never serialize — the NAME does, and the receiving node
+/// rebuilds the same source via [`model_source_by_name`]. An empty name
+/// marks an ad-hoc closure source that is in-process only.
 #[derive(Clone)]
 pub enum ModelSource {
     Artifact,
-    Native { grad: NativeGradFn, forward: NativeForwardFn },
+    Native { name: &'static str, grad: NativeGradFn, forward: NativeForwardFn },
 }
 
 impl fmt::Debug for ModelSource {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             ModelSource::Artifact => write!(f, "Artifact"),
-            ModelSource::Native { .. } => write!(f, "Native"),
+            ModelSource::Native { name, .. } => write!(f, "Native({name:?})"),
         }
+    }
+}
+
+/// Resolve a wire-named model source node-locally ("artifact" or a
+/// registered native source). The inverse of the name carried by
+/// [`SgmcmcConfig::to_wire`].
+pub fn model_source_by_name(name: &str) -> Option<ModelSource> {
+    match name {
+        "artifact" => Some(ModelSource::Artifact),
+        "linear" => Some(linear_native_model()),
+        _ => None,
     }
 }
 
@@ -289,10 +305,307 @@ pub struct ChainSnapshot {
     pub samples: Vec<Tensor>,
 }
 
+impl SgmcmcConfig {
+    /// Serialize the chain config to a wire `Value` so a remote node can
+    /// rebuild the exact same handlers (`pd::programs` program "sgmcmc").
+    /// The model source crosses as a NAME (closures never serialize);
+    /// anonymous native sources are in-process only and error here. The
+    /// per-particle `init` closure is not carried either — initial
+    /// parameters ship per particle in the `CreateSpec`.
+    pub fn to_wire(&self) -> Result<Value, PushError> {
+        let model = match &self.model {
+            ModelSource::Artifact => "artifact",
+            ModelSource::Native { name, .. } if !name.is_empty() => *name,
+            ModelSource::Native { .. } => {
+                return Err(PushError::new(
+                    "anonymous native ModelSource cannot cross the wire; \
+                     use a named source (see model_source_by_name)",
+                ))
+            }
+        };
+        let schedule = match &self.schedule {
+            Schedule::Constant { eps } => {
+                Value::List(vec![Value::Usize(0), Value::F32(*eps)])
+            }
+            Schedule::PolyDecay { a, b, gamma } => Value::List(vec![
+                Value::Usize(1),
+                Value::F32(*a),
+                Value::F32(*b),
+                Value::F32(*gamma),
+            ]),
+            Schedule::Cyclical { eps0, cycle_len, sample_frac } => Value::List(vec![
+                Value::Usize(2),
+                Value::F32(*eps0),
+                Value::Usize(*cycle_len),
+                Value::F32(*sample_frac),
+            ]),
+        };
+        Ok(Value::List(vec![
+            Value::Str(model.to_string()),
+            Value::Str(self.algo.name().to_string()),
+            schedule,
+            Value::F32(self.temperature),
+            Value::F32(self.friction),
+            Value::Usize(self.burn_in),
+            Value::Usize(self.thin),
+            Value::Usize(self.max_samples),
+            match self.prior_std {
+                Some(s) => Value::F32(s),
+                None => Value::Unit,
+            },
+            Value::Usize(self.seed as usize),
+        ]))
+    }
+
+    /// Decode a [`SgmcmcConfig::to_wire`] value. `particles` is set to 1
+    /// and `init` to None: neither matters to the handlers — placement
+    /// and initial parameters are the fabric's business.
+    pub fn from_wire(v: &Value) -> Result<SgmcmcConfig, PushError> {
+        let items = match v {
+            Value::List(vs) if vs.len() == 10 => vs,
+            other => {
+                return Err(PushError::new(format!(
+                    "malformed sgmcmc wire config: {other:?}"
+                )))
+            }
+        };
+        let str_at = |i: usize| -> Result<&str, PushError> {
+            match &items[i] {
+                Value::Str(s) => Ok(s),
+                other => Err(PushError::new(format!("wire config [{i}]: {other:?}"))),
+            }
+        };
+        let model = model_source_by_name(str_at(0)?).ok_or_else(|| {
+            PushError::new(format!("unknown wire model source {:?}", str_at(0).unwrap()))
+        })?;
+        let algo = match str_at(1)? {
+            "sgld" => SgmcmcAlgo::Sgld,
+            "sghmc" => SgmcmcAlgo::Sghmc,
+            other => return Err(PushError::new(format!("unknown sgmcmc algo {other:?}"))),
+        };
+        // Tags are validated explicitly: a future schedule variant (or a
+        // version-skewed peer) must fail cleanly, never silently decode
+        // as a different schedule with reinterpreted fields.
+        let schedule = match &items[2] {
+            Value::List(s) if s.len() == 2 && s[0] == Value::Usize(0) => {
+                Schedule::Constant { eps: s[1].f32()? }
+            }
+            Value::List(s) if s.len() == 4 && s[0] == Value::Usize(1) => Schedule::PolyDecay {
+                a: s[1].f32()?,
+                b: s[2].f32()?,
+                gamma: s[3].f32()?,
+            },
+            Value::List(s) if s.len() == 4 && s[0] == Value::Usize(2) => Schedule::Cyclical {
+                eps0: s[1].f32()?,
+                cycle_len: s[2].usize()?,
+                sample_frac: s[3].f32()?,
+            },
+            other => {
+                return Err(PushError::new(format!("malformed wire schedule: {other:?}")))
+            }
+        };
+        Ok(SgmcmcConfig {
+            particles: 1,
+            algo,
+            schedule,
+            temperature: items[3].f32()?,
+            friction: items[4].f32()?,
+            burn_in: items[5].usize()?,
+            thin: items[6].usize()?,
+            max_samples: items[7].usize()?,
+            prior_std: match &items[8] {
+                Value::Unit => None,
+                other => Some(other.f32()?),
+            },
+            seed: items[9].usize()? as u64,
+            model,
+            init: None,
+        })
+    }
+}
+
 pub struct SgMcmc {
     pd: PushDist,
     pids: Vec<Pid>,
     pub cfg: SgmcmcConfig,
+}
+
+/// Build the `MCMC_STEP` / `MCMC_PREDICT` handler table for one chain
+/// config. Shared by the in-process constructor and the node-local
+/// "sgmcmc" program (`pd::programs`), so a particle created over the wire
+/// runs EXACTLY the handlers a local one does — the algorithm is
+/// transport-oblivious by construction.
+pub fn chain_handler_table(cfg: &SgmcmcConfig) -> crate::particle::HandlerTable {
+    let scfg = cfg.clone();
+    let step = handler(move |ctx, args| {
+        let x = args[0].as_tensor()?.clone();
+        let y = args[1].as_tensor()?.clone();
+        let t = match ctx.state_get(K_STEP) {
+            Some(Value::Usize(t)) => t,
+            _ => 0,
+        };
+        let eps = scfg.schedule.step_size(t);
+
+        // 1. gradient of the minibatch potential. One parameter
+        //    snapshot serves both the native gradient and the prior
+        //    term (it is a zero-copy Arc clone either way).
+        let needs_params =
+            matches!(&scfg.model, ModelSource::Native { .. }) || scfg.prior_std.is_some();
+        let params = if needs_params {
+            Some(ctx.own_params().wait()?.tensor()?)
+        } else {
+            None
+        };
+        let (loss, mut grad) = match &scfg.model {
+            ModelSource::Artifact => {
+                let mut lg = ctx.grad(x, y).wait()?.list()?;
+                let loss = lg[0].as_tensor()?.scalar();
+                (loss, lg.remove(1).tensor()?)
+            }
+            ModelSource::Native { grad, .. } => {
+                grad(params.as_ref().expect("fetched above"), &x, &y)?
+            }
+        };
+        // Gaussian prior score term (Appendix B.1's treatment):
+        // ∇U gains θ/σ². In place — the gradient is uniquely owned.
+        if let Some(std) = scfg.prior_std {
+            ops::axpy(&mut grad, 1.0 / (std * std), params.as_ref().expect("fetched above"));
+        }
+        // Release the snapshot BEFORE the apply so axpy_params mutates
+        // the resident parameters in place instead of COW-detaching.
+        drop(params);
+
+        // 2. the update, with noise from a per-(seed, pid, t) stream so
+        //    trajectories are reproducible under any scheduling order.
+        //    SGHMC builds the new momentum WITHOUT mutating the stored
+        //    one (u = −ε g + noise, then u += (1−α) v), so a failed
+        //    apply below can put the old momentum back untouched.
+        let mut rng = noise_rng(scfg.seed, ctx.pid.0 as u64, t as u64);
+        let mut u = grad;
+        for v in u.as_f32_mut() {
+            *v *= -eps;
+        }
+        let old_momentum = match scfg.algo {
+            SgmcmcAlgo::Sgld => {
+                // u = −ε g + N(0, 2 ε T)
+                add_noise(&mut u, (2.0 * eps * scfg.temperature).sqrt(), &mut rng);
+                None
+            }
+            SgmcmcAlgo::Sghmc => {
+                // v' = −ε g + N(0, 2 α T ε) + (1−α) v
+                add_noise(
+                    &mut u,
+                    (2.0 * scfg.friction * scfg.temperature * eps).sqrt(),
+                    &mut rng,
+                );
+                let v_old = match ctx.state_take(K_MOM) {
+                    Some(Value::Tensor(t)) => t,
+                    _ => Tensor::zeros(vec![u.element_count()]),
+                };
+                ops::scale_add(&mut u, 1.0, 1.0 - scfg.friction, &v_old);
+                Some(v_old)
+            }
+        };
+        let update = u;
+
+        // 3. θ += update on the particle's device; chain state only
+        //    advances if the apply succeeded (run_adam discipline): a
+        //    failed apply restores the momentum it took.
+        if let Err(e) = ctx.axpy_params(1.0, update.clone()).wait() {
+            if let Some(v_old) = old_momentum {
+                ctx.state_set(K_MOM, Value::Tensor(v_old));
+            }
+            return Err(e);
+        }
+        if scfg.algo == SgmcmcAlgo::Sghmc {
+            ctx.state_set(K_MOM, Value::Tensor(update));
+        }
+        ctx.state_set(K_STEP, Value::Usize(t + 1));
+
+        // 4. reservoir: offer a zero-copy snapshot of the post-update
+        //    parameters (later steps COW-detach, so it stays immutable)
+        if is_sample_step(&scfg.schedule, t, scfg.burn_in, scfg.thin) {
+            let snap = ctx.own_params().wait()?.tensor()?;
+            reservoir_add(ctx, snap, scfg.seed, scfg.max_samples);
+        }
+        Ok(Value::F32(loss))
+    });
+
+    let pcfg = cfg.clone();
+    let predict = handler(move |ctx, args| {
+        let x = args[0].as_tensor()?.clone();
+        let classify = ctx.model().task == "classify";
+        let samples: Vec<Tensor> = match ctx.state_get(K_SAMPLES) {
+            Some(Value::List(v)) => {
+                v.into_iter().filter_map(|s| s.tensor().ok()).collect()
+            }
+            _ => Vec::new(),
+        };
+        let mut acc: Option<Tensor> = None;
+        let mut n = 0usize;
+        match &pcfg.model {
+            ModelSource::Native { forward, .. } => {
+                if samples.is_empty() {
+                    // empty reservoir: fall back to the current params
+                    // (pre-burn-in chain == plain point prediction)
+                    let params = ctx.own_params().wait()?.tensor()?;
+                    eval::accumulate_prediction(&mut acc, forward(&params, &x)?, classify);
+                    n = 1;
+                } else {
+                    for s in &samples {
+                        eval::accumulate_prediction(&mut acc, forward(s, &x)?, classify);
+                        n += 1;
+                    }
+                }
+            }
+            ModelSource::Artifact => {
+                if samples.is_empty() {
+                    let pred = ctx.forward(x).wait()?.tensor()?;
+                    eval::accumulate_prediction(&mut acc, pred, classify);
+                    n = 1;
+                } else {
+                    // Zero-copy backup of the live params; each sample
+                    // is swapped in (refcount bump), forwarded, and the
+                    // backup moved back — ALWAYS, even when a forward
+                    // fails mid-loop, so a transient predict error can
+                    // never leave the chain running on a stale sample.
+                    let backup = ctx.own_params().wait()?.tensor()?;
+                    let mut failure = None;
+                    for s in &samples {
+                        let pred = ctx
+                            .set_params(s.clone())
+                            .wait()
+                            .and_then(|_| ctx.forward(x.clone()).wait())
+                            .and_then(|v| v.tensor());
+                        match pred {
+                            Ok(p) => {
+                                eval::accumulate_prediction(&mut acc, p, classify);
+                                n += 1;
+                            }
+                            Err(e) => {
+                                failure = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    ctx.set_params(backup).wait()?;
+                    if let Some(e) = failure {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        eval::finalize_mean(acc, n, classify)
+            .map(Value::Tensor)
+            .ok_or_else(|| PushError::new("MCMC_PREDICT over zero predictions"))
+    });
+
+    [
+        ("MCMC_STEP".to_string(), step),
+        ("MCMC_PREDICT".to_string(), predict),
+    ]
+    .into_iter()
+    .collect()
 }
 
 impl SgMcmc {
@@ -300,187 +613,32 @@ impl SgMcmc {
     /// `MCMC_STEP(x, y)` with one SGLD/SGHMC update (plus reservoir
     /// bookkeeping) and `MCMC_PREDICT(x)` with its posterior-predictive
     /// mean over reservoir samples.
+    ///
+    /// On a single-node PD, particles are created in-process with handler
+    /// closures — byte-for-byte the pre-fabric behavior. On a multi-node
+    /// PD the same chains are created through the transport from a
+    /// serializable spec: the "sgmcmc" handler program plus the wire
+    /// config, with per-particle init parameters shipped explicitly. The
+    /// chains themselves cannot tell the difference — every deterministic
+    /// stream is keyed by (seed, GLOBAL pid, step), never by node.
     pub fn new(pd: PushDist, cfg: SgmcmcConfig) -> Result<SgMcmc> {
         assert!(cfg.particles > 0);
-
-        let scfg = cfg.clone();
-        let step = handler(move |ctx, args| {
-            let x = args[0].as_tensor()?.clone();
-            let y = args[1].as_tensor()?.clone();
-            let t = match ctx.state_get(K_STEP) {
-                Some(Value::Usize(t)) => t,
-                _ => 0,
-            };
-            let eps = scfg.schedule.step_size(t);
-
-            // 1. gradient of the minibatch potential. One parameter
-            //    snapshot serves both the native gradient and the prior
-            //    term (it is a zero-copy Arc clone either way).
-            let needs_params =
-                matches!(&scfg.model, ModelSource::Native { .. }) || scfg.prior_std.is_some();
-            let params = if needs_params {
-                Some(ctx.own_params().wait()?.tensor()?)
-            } else {
-                None
-            };
-            let (loss, mut grad) = match &scfg.model {
-                ModelSource::Artifact => {
-                    let mut lg = ctx.grad(x, y).wait()?.list()?;
-                    let loss = lg[0].as_tensor()?.scalar();
-                    (loss, lg.remove(1).tensor()?)
-                }
-                ModelSource::Native { grad, .. } => {
-                    grad(params.as_ref().expect("fetched above"), &x, &y)?
-                }
-            };
-            // Gaussian prior score term (Appendix B.1's treatment):
-            // ∇U gains θ/σ². In place — the gradient is uniquely owned.
-            if let Some(std) = scfg.prior_std {
-                ops::axpy(&mut grad, 1.0 / (std * std), params.as_ref().expect("fetched above"));
-            }
-            // Release the snapshot BEFORE the apply so axpy_params mutates
-            // the resident parameters in place instead of COW-detaching.
-            drop(params);
-
-            // 2. the update, with noise from a per-(seed, pid, t) stream so
-            //    trajectories are reproducible under any scheduling order.
-            //    SGHMC builds the new momentum WITHOUT mutating the stored
-            //    one (u = −ε g + noise, then u += (1−α) v), so a failed
-            //    apply below can put the old momentum back untouched.
-            let mut rng = noise_rng(scfg.seed, ctx.pid.0 as u64, t as u64);
-            let mut u = grad;
-            for v in u.as_f32_mut() {
-                *v *= -eps;
-            }
-            let old_momentum = match scfg.algo {
-                SgmcmcAlgo::Sgld => {
-                    // u = −ε g + N(0, 2 ε T)
-                    add_noise(&mut u, (2.0 * eps * scfg.temperature).sqrt(), &mut rng);
-                    None
-                }
-                SgmcmcAlgo::Sghmc => {
-                    // v' = −ε g + N(0, 2 α T ε) + (1−α) v
-                    add_noise(
-                        &mut u,
-                        (2.0 * scfg.friction * scfg.temperature * eps).sqrt(),
-                        &mut rng,
-                    );
-                    let v_old = match ctx.state_take(K_MOM) {
-                        Some(Value::Tensor(t)) => t,
-                        _ => Tensor::zeros(vec![u.element_count()]),
-                    };
-                    ops::scale_add(&mut u, 1.0, 1.0 - scfg.friction, &v_old);
-                    Some(v_old)
-                }
-            };
-            let update = u;
-
-            // 3. θ += update on the particle's device; chain state only
-            //    advances if the apply succeeded (run_adam discipline): a
-            //    failed apply restores the momentum it took.
-            if let Err(e) = ctx.axpy_params(1.0, update.clone()).wait() {
-                if let Some(v_old) = old_momentum {
-                    ctx.state_set(K_MOM, Value::Tensor(v_old));
-                }
-                return Err(e);
-            }
-            if scfg.algo == SgmcmcAlgo::Sghmc {
-                ctx.state_set(K_MOM, Value::Tensor(update));
-            }
-            ctx.state_set(K_STEP, Value::Usize(t + 1));
-
-            // 4. reservoir: offer a zero-copy snapshot of the post-update
-            //    parameters (later steps COW-detach, so it stays immutable)
-            if is_sample_step(&scfg.schedule, t, scfg.burn_in, scfg.thin) {
-                let snap = ctx.own_params().wait()?.tensor()?;
-                reservoir_add(ctx, snap, scfg.seed, scfg.max_samples);
-            }
-            Ok(Value::F32(loss))
-        });
-
-        let pcfg = cfg.clone();
-        let predict = handler(move |ctx, args| {
-            let x = args[0].as_tensor()?.clone();
-            let classify = ctx.model().task == "classify";
-            let samples: Vec<Tensor> = match ctx.state_get(K_SAMPLES) {
-                Some(Value::List(v)) => {
-                    v.into_iter().filter_map(|s| s.tensor().ok()).collect()
-                }
-                _ => Vec::new(),
-            };
-            let mut acc: Option<Tensor> = None;
-            let mut n = 0usize;
-            match &pcfg.model {
-                ModelSource::Native { forward, .. } => {
-                    if samples.is_empty() {
-                        // empty reservoir: fall back to the current params
-                        // (pre-burn-in chain == plain point prediction)
-                        let params = ctx.own_params().wait()?.tensor()?;
-                        eval::accumulate_prediction(&mut acc, forward(&params, &x)?, classify);
-                        n = 1;
-                    } else {
-                        for s in &samples {
-                            eval::accumulate_prediction(&mut acc, forward(s, &x)?, classify);
-                            n += 1;
-                        }
-                    }
-                }
-                ModelSource::Artifact => {
-                    if samples.is_empty() {
-                        let pred = ctx.forward(x).wait()?.tensor()?;
-                        eval::accumulate_prediction(&mut acc, pred, classify);
-                        n = 1;
-                    } else {
-                        // Zero-copy backup of the live params; each sample
-                        // is swapped in (refcount bump), forwarded, and the
-                        // backup moved back — ALWAYS, even when a forward
-                        // fails mid-loop, so a transient predict error can
-                        // never leave the chain running on a stale sample.
-                        let backup = ctx.own_params().wait()?.tensor()?;
-                        let mut failure = None;
-                        for s in &samples {
-                            let pred = ctx
-                                .set_params(s.clone())
-                                .wait()
-                                .and_then(|_| ctx.forward(x.clone()).wait())
-                                .and_then(|v| v.tensor());
-                            match pred {
-                                Ok(p) => {
-                                    eval::accumulate_prediction(&mut acc, p, classify);
-                                    n += 1;
-                                }
-                                Err(e) => {
-                                    failure = Some(e);
-                                    break;
-                                }
-                            }
-                        }
-                        ctx.set_params(backup).wait()?;
-                        if let Some(e) = failure {
-                            return Err(e);
-                        }
-                    }
-                }
-            }
-            eval::finalize_mean(acc, n, classify)
-                .map(Value::Tensor)
-                .ok_or_else(|| PushError::new("MCMC_PREDICT over zero predictions"))
-        });
-
-        let table = || {
-            [
-                ("MCMC_STEP".to_string(), step.clone()),
-                ("MCMC_PREDICT".to_string(), predict.clone()),
-            ]
-            .into_iter()
-            .collect()
-        };
         let init = cfg.init.clone();
-        let pids = pd.p_create_n(cfg.particles, |i| CreateOpts {
-            receive: table(),
-            init_params: init.as_ref().map(|f| f(i)),
-            ..CreateOpts::default()
-        })?;
+        let pids = if pd.nodes() > 1 {
+            let wire = cfg.to_wire().map_err(|e| anyhow!("{e}"))?;
+            pd.p_create_spec_n(cfg.particles, |i| crate::pd::SpecOpts {
+                program: Some(("sgmcmc".to_string(), wire.clone())),
+                init_params: init.as_ref().map(|f| f(i)),
+                ..crate::pd::SpecOpts::default()
+            })?
+        } else {
+            let table = chain_handler_table(&cfg);
+            pd.p_create_n(cfg.particles, |i| CreateOpts {
+                receive: table.clone(),
+                init_params: init.as_ref().map(|f| f(i)),
+                ..CreateOpts::default()
+            })?
+        };
         Ok(SgMcmc { pd, pids, cfg })
     }
 
@@ -595,6 +753,19 @@ impl Infer for SgMcmc {
     fn nel_stats(&self) -> crate::nel::NelStats {
         self.pd.stats()
     }
+
+    /// Split R-hat / ESS across the particle-chains' reservoirs (worst
+    /// parameter dimension). NaN-safe: undiagnosable chains (pre-burn-in,
+    /// too few samples) come back NaN and render "n/a".
+    fn diagnostics(&self) -> Option<eval::ChainDiag> {
+        let chains: Vec<Vec<Tensor>> =
+            self.pids.iter().map(|p| self.chain(*p).samples).collect();
+        Some(eval::chain_diagnostics(&chains))
+    }
+
+    fn transport_counters(&self) -> Vec<crate::pd::transport::TransportCounters> {
+        self.pd.transport_counters()
+    }
 }
 
 /// Closed-form linear least-squares model for the synthetic regression
@@ -648,7 +819,7 @@ pub fn linear_native_model() -> ModelSource {
             .collect();
         Ok(Tensor::f32(vec![b, 1], preds))
     });
-    ModelSource::Native { grad, forward }
+    ModelSource::Native { name: "linear", grad, forward }
 }
 
 #[cfg(test)]
@@ -705,7 +876,7 @@ mod tests {
     #[test]
     fn linear_grad_matches_finite_difference() {
         let model = linear_native_model();
-        let ModelSource::Native { grad, forward } = model else {
+        let ModelSource::Native { grad, forward, .. } = model else {
             panic!("linear model is native")
         };
         let d = 4;
@@ -729,6 +900,57 @@ mod tests {
         // forward shape contract
         let pred = forward(&params, &x).unwrap();
         assert_eq!(pred.shape, vec![3, 1]);
+    }
+
+    #[test]
+    fn wire_config_roundtrips() {
+        let cfg = SgmcmcConfig {
+            particles: 8,
+            algo: SgmcmcAlgo::Sghmc,
+            schedule: Schedule::Cyclical { eps0: 0.5, cycle_len: 20, sample_frac: 0.25 },
+            temperature: 0.125,
+            friction: 0.25,
+            burn_in: 7,
+            thin: 3,
+            max_samples: 9,
+            prior_std: Some(2.0),
+            seed: 77,
+            model: linear_native_model(),
+            init: None,
+        };
+        let back = SgmcmcConfig::from_wire(&cfg.to_wire().unwrap()).unwrap();
+        assert_eq!(back.algo, SgmcmcAlgo::Sghmc);
+        assert_eq!(back.schedule, cfg.schedule);
+        assert_eq!(back.temperature, cfg.temperature);
+        assert_eq!(back.friction, cfg.friction);
+        assert_eq!((back.burn_in, back.thin, back.max_samples), (7, 3, 9));
+        assert_eq!(back.prior_std, Some(2.0));
+        assert_eq!(back.seed, 77);
+        assert!(matches!(back.model, ModelSource::Native { name: "linear", .. }));
+
+        let cfg2 = SgmcmcConfig {
+            model: ModelSource::Artifact,
+            prior_std: None,
+            schedule: Schedule::PolyDecay { a: 1.0, b: 2.0, gamma: 0.5 },
+            ..cfg
+        };
+        let back2 = SgmcmcConfig::from_wire(&cfg2.to_wire().unwrap()).unwrap();
+        assert!(matches!(back2.model, ModelSource::Artifact));
+        assert_eq!(back2.prior_std, None);
+        assert_eq!(back2.schedule, cfg2.schedule);
+
+        // anonymous native sources cannot cross the wire
+        let ModelSource::Native { grad, forward, .. } = linear_native_model() else {
+            unreachable!()
+        };
+        let anon = SgmcmcConfig {
+            model: ModelSource::Native { name: "", grad, forward },
+            ..SgmcmcConfig::default()
+        };
+        assert!(anon.to_wire().is_err());
+        // garbage rejects cleanly
+        assert!(SgmcmcConfig::from_wire(&Value::Unit).is_err());
+        assert!(SgmcmcConfig::from_wire(&Value::List(vec![Value::Unit; 10])).is_err());
     }
 
     #[test]

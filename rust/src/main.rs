@@ -10,6 +10,15 @@
 //! Every `bench` subcommand regenerates one of the paper's tables/figures
 //! (scaled per DESIGN.md §Hardware-Adaptation) and writes JSON under
 //! `bench_results/`.
+//!
+//! There is also a hidden `push node-worker` subcommand: the standalone
+//! node server of the distributed NEL (DESIGN.md §Distributed NEL) that
+//! `push train --transport tcp` connects to via $PUSH_NODES. Without
+//! $PUSH_NODES, `--transport tcp` spawns hermetic loopback node servers
+//! in-process (real sockets on 127.0.0.1 ephemeral ports).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -19,14 +28,16 @@ use push::bench::{accuracy, depth_width, scaling, Method};
 use push::data::DataLoader;
 use push::device::CostModel;
 use push::infer::{
-    DeepEnsemble, Infer, MultiSwag, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Svgd,
+    eval, DeepEnsemble, Infer, MultiSwag, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Svgd,
     SvgdConfig, SwagConfig,
 };
 use push::nel::CreateOpts;
 use push::particle::{handler, Value};
-use push::runtime::{artifacts_dir, Manifest};
+use push::pd::{Topology, TransportKind};
+use push::runtime::{artifacts_dir, DType, Manifest, ModelSpec};
 use push::util::flags::Flags;
-use push::{NelConfig, PushDist};
+use push::util::rng::Rng;
+use push::{NelConfig, PushDist, Tensor};
 
 const USAGE: &str = "\
 push — concurrent probabilistic programming for Bayesian deep learning
@@ -36,6 +47,7 @@ USAGE:
   push train --model <name> [--algo ensemble|multi_swag|svgd|sgld|sghmc]
              [--particles N] [--devices D] [--epochs E] [--batches B]
              [--lr F] [--cache N] [--seed N] [--workers N]
+             [--nodes N] [--transport inproc|tcp]
              [--temp T] [--friction A] [--burn-in N] [--thin N]
              [--samples N]                      (sgld/sghmc chain options;
                                                  --method is an alias of --algo)
@@ -43,6 +55,13 @@ USAGE:
              [--devices 1,2,4] [--particles 1,2,4,8] [--batches B]
              [--epochs E] [--no-baseline] [--full] [--cache N] [--seed N]
   push trace [--model <name>]
+
+Distributed NEL: --nodes N splits particles across N nodes (each with its
+own NEL, scheduler, and --devices devices). --transport tcp runs every
+node behind a real socket — hermetic 127.0.0.1 loopback servers, or the
+addresses in $PUSH_NODES (host:port,host:port — launched via the node
+worker). sgld/sghmc span nodes; --model linear_native trains the
+closed-form linear model with no artifacts at all.
 
 Artifacts are read from $PUSH_ARTIFACTS or <repo>/artifacts (make artifacts).
 Bench JSON is written to $PUSH_BENCH_DIR or <repo>/bench_results.
@@ -63,12 +82,76 @@ fn run() -> Result<()> {
         "train" => train(&flags),
         "bench" => bench(&flags),
         "trace" => trace(&flags),
+        // hidden: the standalone distributed-NEL node server
+        "node-worker" => node_worker(&flags),
         "help" | "--help" => {
             print!("{USAGE}");
             Ok(())
         }
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
     }
+}
+
+/// The hermetic built-in model: closed-form linear least squares over a
+/// flat weight vector (no artifacts, no PJRT) — the same ModelSpec shape
+/// the sgmcmc tests use. Trains only via sgld/sghmc (whose native
+/// ModelSource supplies grad/forward closures).
+const NATIVE_D: usize = 8;
+const NATIVE_BATCH: usize = 16;
+
+fn native_linear_manifest() -> Manifest {
+    let spec = ModelSpec {
+        name: "linear_native".to_string(),
+        param_count: NATIVE_D,
+        task: "regress".to_string(),
+        x_shape: vec![NATIVE_BATCH, NATIVE_D],
+        y_shape: vec![NATIVE_BATCH, 1],
+        y_dtype: DType::F32,
+        arch: "mlp".to_string(),
+        meta: BTreeMap::new(),
+        entries: BTreeMap::new(),
+    };
+    Manifest {
+        dir: std::path::PathBuf::from("."),
+        models: [("linear_native".to_string(), spec)].into_iter().collect(),
+        svgd: Vec::new(),
+    }
+}
+
+/// Deterministic per-particle init for the native model: keyed by
+/// (seed, particle index), so runs reproduce across node counts.
+fn native_init(seed: u64, i: usize) -> Tensor {
+    Tensor::f32(vec![NATIVE_D], Rng::new(seed ^ 0x1217).fold_in(i as u64).normal_vec(NATIVE_D))
+}
+
+fn load_manifest(model_name: &str) -> Result<Manifest> {
+    if model_name == "linear_native" {
+        Ok(native_linear_manifest())
+    } else {
+        Manifest::load(artifacts_dir())
+    }
+}
+
+fn parse_topology(flags: &Flags) -> Result<Topology> {
+    let nodes = flags.usize_or("nodes", 1).map_err(anyhow::Error::msg)?;
+    if nodes == 0 {
+        bail!("--nodes must be >= 1");
+    }
+    let transport = match flags.str_or("transport", "inproc").as_str() {
+        "inproc" => TransportKind::InProc,
+        "tcp" => match std::env::var("PUSH_NODES") {
+            Ok(spec) if !spec.trim().is_empty() => {
+                let addrs = spec
+                    .split(',')
+                    .map(|a| a.trim().parse().map_err(|e| anyhow!("$PUSH_NODES {a:?}: {e}")))
+                    .collect::<Result<Vec<_>>>()?;
+                TransportKind::TcpConnect(addrs)
+            }
+            _ => TransportKind::TcpLoopback,
+        },
+        other => bail!("--transport must be inproc|tcp, got {other:?}"),
+    };
+    Ok(Topology { nodes, transport })
 }
 
 fn scale_opts(flags: &Flags) -> Result<ScaleOpts> {
@@ -132,7 +215,23 @@ fn train(flags: &Flags) -> Result<()> {
     // 0 = auto (one control worker per available CPU)
     let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
 
-    let manifest = Manifest::load(artifacts_dir())?;
+    let topology = parse_topology(flags)?;
+    let is_sgmcmc = matches!(method, Method::Sgld | Method::Sghmc);
+    let tcp = !matches!(topology.transport, TransportKind::InProc);
+    // Which algorithms can span this topology: wire transports need
+    // spec-based creation (handler programs), which sgld/sghmc provide;
+    // SVGD's leader cross-sends to followers inside handlers, which is
+    // node-local by design — route it through the fabric later.
+    if tcp && !is_sgmcmc {
+        bail!("--transport tcp currently supports --algo sgld|sghmc (spec-based creation)");
+    }
+    if topology.nodes > 1 && method == Method::Svgd {
+        bail!("--nodes > 1 does not support svgd (its leader messages followers directly)");
+    }
+    if model_name == "linear_native" && !is_sgmcmc {
+        bail!("--model linear_native trains via --algo sgld|sghmc (closed-form native model)");
+    }
+    let manifest = load_manifest(model_name)?;
     let cfg = NelConfig {
         num_devices: devices,
         cache_size: cache,
@@ -141,7 +240,7 @@ fn train(flags: &Flags) -> Result<()> {
         seed,
         ..NelConfig::default()
     };
-    let pd = PushDist::new(&manifest, model_name, cfg)?;
+    let pd = PushDist::with_topology(&manifest, model_name, cfg, &topology)?;
     let model = pd.model().clone();
     let lr = flags
         .f64("lr")
@@ -154,8 +253,11 @@ fn train(flags: &Flags) -> Result<()> {
         DataLoader::new(data, model.batch(), true, seed + 2).with_max_batches(batches);
 
     println!(
-        "training {model_name} via {} — {particles} particles on {devices} devices, lr {lr}",
-        method.name()
+        "training {model_name} via {} — {particles} particles on {} node(s) x {devices} \
+         device(s) ({} transport), lr {lr}",
+        method.name(),
+        topology.nodes,
+        if tcp { "tcp" } else { "inproc" },
     );
     let mut algo: Box<dyn Infer> = match method {
         Method::Ensemble => Box::new(DeepEnsemble::new(pd, particles, lr)?),
@@ -175,21 +277,25 @@ fn train(flags: &Flags) -> Result<()> {
             let burn_in = flags.usize_or("burn-in", batches).map_err(anyhow::Error::msg)?;
             let thin = flags.usize_or("thin", 2).map_err(anyhow::Error::msg)?;
             let max_samples = flags.usize_or("samples", 32).map_err(anyhow::Error::msg)?;
-            Box::new(SgMcmc::new(
-                pd,
-                SgmcmcConfig {
-                    particles,
-                    algo,
-                    schedule: Schedule::Constant { eps: lr },
-                    temperature: temp,
-                    friction,
-                    burn_in,
-                    thin,
-                    max_samples,
-                    seed,
-                    ..SgmcmcConfig::default()
-                },
-            )?)
+            let mut chain_cfg = SgmcmcConfig {
+                particles,
+                algo,
+                schedule: Schedule::Constant { eps: lr },
+                temperature: temp,
+                friction,
+                burn_in,
+                thin,
+                max_samples,
+                seed,
+                ..SgmcmcConfig::default()
+            };
+            if model_name == "linear_native" {
+                // fully hermetic: native closed-form grad/forward plus
+                // explicit init parameters — no artifacts on any node
+                chain_cfg.model = push::infer::sgmcmc::linear_native_model();
+                chain_cfg.init = Some(Arc::new(move |i| native_init(seed, i)));
+            }
+            Box::new(SgMcmc::new(pd, chain_cfg)?)
         }
     };
     for e in 0..epochs {
@@ -223,7 +329,55 @@ fn train(flags: &Flags) -> Result<()> {
     for (i, d) in stats.devices.iter().enumerate() {
         println!("{}", d.summary(i));
     }
+    if let Some(diag) = algo.diagnostics() {
+        println!(
+            "chain diag: R-hat {} | ESS {} ({} chains x {} samples)",
+            eval::fmt_diag(diag.r_hat),
+            eval::fmt_diag(diag.ess),
+            diag.chains,
+            diag.samples_per_chain,
+        );
+    }
+    let transport = algo.transport_counters();
+    if transport.iter().any(|c| c.frames_sent > 0 || c.frames_received > 0) {
+        for (i, c) in transport.iter().enumerate() {
+            println!(
+                "node {i} transport: {} frames out ({} B), {} frames in ({} B)",
+                c.frames_sent, c.bytes_sent, c.frames_received, c.bytes_received,
+            );
+        }
+    }
     Ok(())
+}
+
+/// Hidden subcommand: one distributed-NEL node server. Binds
+/// --host:--port (default 127.0.0.1, ephemeral), prints the address, and
+/// serves connections — one NEL per connection — until killed (or after
+/// one connection with --once). `push train --transport tcp` reaches
+/// workers via $PUSH_NODES=host:port,host:port.
+fn node_worker(flags: &Flags) -> Result<()> {
+    let model_name = flags.str_or("model", "linear_native");
+    let manifest = load_manifest(&model_name)?;
+    let model = Arc::new(manifest.model(&model_name)?.clone());
+    let host = flags.str_or("host", "127.0.0.1");
+    let port = flags.usize_or("port", 0).map_err(anyhow::Error::msg)? as u16;
+    let cfg = NelConfig {
+        num_devices: flags.usize_or("devices", 1).map_err(anyhow::Error::msg)?,
+        cache_size: flags.usize_or("cache", 8).map_err(anyhow::Error::msg)?,
+        control_workers: flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?,
+        seed: flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64,
+        node: flags.usize("node").map_err(anyhow::Error::msg)?,
+        cost: CostModel::default(),
+        ..NelConfig::default()
+    };
+    let listener = std::net::TcpListener::bind((host.as_str(), port))?;
+    println!("node-worker listening on {} (model {model_name})", listener.local_addr()?);
+    loop {
+        push::pd::transport::serve_one(&listener, cfg.clone(), model.clone())?;
+        if flags.has("once") {
+            return Ok(());
+        }
+    }
 }
 
 fn bench(flags: &Flags) -> Result<()> {

@@ -67,6 +67,12 @@ pub struct NelConfig {
     pub control_workers: usize,
     /// Base seed for particle parameter initialization.
     pub seed: u64,
+    /// Node id when this NEL is one node of a multi-node fabric
+    /// (DESIGN.md §Distributed NEL). Only used to label unknown-particle
+    /// errors so a handler-side send to a remote pid says WHY it failed:
+    /// particles are registered node-locally, and cross-node traffic must
+    /// route through the PD fabric, not through a node's own NEL.
+    pub node: Option<usize>,
 }
 
 impl Default for NelConfig {
@@ -81,6 +87,7 @@ impl Default for NelConfig {
             serialize_streams: false,
             control_workers: 0,
             seed: 0,
+            node: None,
         }
     }
 }
@@ -103,6 +110,41 @@ pub struct NelStats {
     pub handler_errors: u64,
     pub sched: SchedStats,
     pub devices: Vec<DeviceStats>,
+}
+
+impl NelStats {
+    /// Sum per-node stats into ONE fabric-wide view. This is the single
+    /// aggregation point multi-node reports go through — summing here and
+    /// never again is what keeps bench rows from double-counting when a
+    /// run spans nodes. Counters add; scheduler gauges (pool target, cap,
+    /// live/blocked/peak workers) add across nodes (each node owns a
+    /// disjoint worker pool, so totals are exact and per-node peaks sum
+    /// to an upper bound of the simultaneous fabric peak); device stats
+    /// concatenate in node order, so per-device breakdowns survive.
+    pub fn merged<'a>(parts: impl IntoIterator<Item = &'a NelStats>) -> NelStats {
+        let mut out = NelStats::default();
+        for s in parts {
+            out.msgs_sent += s.msgs_sent;
+            out.msgs_cross_device += s.msgs_cross_device;
+            out.msg_payload_bytes += s.msg_payload_bytes;
+            out.handler_errors += s.handler_errors;
+            out.sched.pool_target += s.sched.pool_target;
+            out.sched.max_workers += s.sched.max_workers;
+            out.sched.workers_live += s.sched.workers_live;
+            out.sched.workers_blocked += s.sched.workers_blocked;
+            out.sched.workers_peak += s.sched.workers_peak;
+            out.sched.spawns += s.sched.spawns;
+            out.sched.retires += s.sched.retires;
+            out.sched.compensations += s.sched.compensations;
+            out.sched.handler_runs += s.sched.handler_runs;
+            out.sched.turns += s.sched.turns;
+            out.sched.steals += s.sched.steals;
+            out.sched.priority_turns += s.sched.priority_turns;
+            out.sched.helps += s.sched.helps;
+            out.devices.extend(s.devices.iter().cloned());
+        }
+        out
+    }
 }
 
 pub(crate) struct Envelope {
@@ -161,6 +203,14 @@ pub struct Nel {
 /// state=)`).
 #[derive(Default)]
 pub struct CreateOpts {
+    /// Register under this pid instead of the NEL's own allocator — the
+    /// node-local half of fabric-assigned GLOBAL pids: in a multi-node
+    /// run the PD fabric is the sole pid authority, so a particle's pid
+    /// (and every (seed, pid, step) deterministic stream keyed by it) is
+    /// the same no matter which node it lands on. The NEL's allocator is
+    /// kept ahead of externally assigned pids, so mixing both modes on
+    /// one NEL cannot collide.
+    pub pid: Option<Pid>,
     /// Pin to a device; default round-robin by pid.
     pub device: Option<usize>,
     pub receive: HandlerTable,
@@ -228,6 +278,19 @@ impl Nel {
         self.inner.particles.read().unwrap().get(&pid).map(|e| e.device)
     }
 
+    /// The unknown-pid error, labeled with this NEL's node when it is one
+    /// node of a fabric: a remote pid is not a bug in the pid, it is a
+    /// routing fact — node NELs only know node-local particles.
+    fn unknown_particle(&self, pid: Pid) -> PushError {
+        match self.inner.cfg.node {
+            Some(n) => PushError::new(format!(
+                "unknown particle {pid} on node {n} (particles register node-locally; \
+                 cross-node sends route through the PD fabric)"
+            )),
+            None => PushError::new(format!("unknown particle {pid}")),
+        }
+    }
+
     fn entry(&self, pid: Pid) -> Result<Arc<ParticleEntry>, PushError> {
         self.inner
             .particles
@@ -235,7 +298,7 @@ impl Nel {
             .unwrap()
             .get(&pid)
             .cloned()
-            .ok_or_else(|| PushError::new(format!("unknown particle {pid}")))
+            .ok_or_else(|| self.unknown_particle(pid))
     }
 
     /// Create a particle of `model`, initialize its parameters on its
@@ -246,7 +309,18 @@ impl Nel {
     /// Returns the new pid immediately — device FIFO ordering makes later
     /// jobs see the initialized parameters.
     pub fn p_create(&self, model: Arc<ModelSpec>, opts: CreateOpts) -> Result<Pid> {
-        let pid = Pid(self.inner.next_pid.fetch_add(1, Ordering::Relaxed));
+        let pid = match opts.pid {
+            Some(p) => {
+                // External (fabric) pid: keep the local allocator strictly
+                // ahead so NEL-allocated pids can never collide with it.
+                self.inner.next_pid.fetch_max(p.0 + 1, Ordering::Relaxed);
+                if self.inner.particles.read().unwrap().contains_key(&p) {
+                    return Err(anyhow!("particle {p} already registered on this node"));
+                }
+                p
+            }
+            None => Pid(self.inner.next_pid.fetch_add(1, Ordering::Relaxed)),
+        };
         let device = match opts.device {
             Some(d) => {
                 if d >= self.num_devices() {
@@ -463,10 +537,7 @@ impl Nel {
         let mut cross: BTreeMap<usize, usize> = BTreeMap::new();
         for (i, found) in entries.into_iter().enumerate() {
             let Some(entry) = found else {
-                futs.push(PFuture::ready(Err(PushError::new(format!(
-                    "unknown particle {}",
-                    pids[i]
-                )))));
+                futs.push(PFuture::ready(Err(self.unknown_particle(pids[i]))));
                 continue;
             };
             let reply = PFuture::new();
@@ -1179,6 +1250,87 @@ mod tests {
             }
         }
         assert_eq!(nel.stats().msgs_sent, 17);
+    }
+
+    #[test]
+    fn explicit_pid_creation_keeps_allocator_ahead() {
+        let nel = Nel::new(free_cfg(1)).unwrap();
+        let model = test_model(&[]);
+        let p5 = nel
+            .p_create(
+                model.clone(),
+                CreateOpts { no_params: true, pid: Some(Pid(5)), ..CreateOpts::default() },
+            )
+            .unwrap();
+        assert_eq!(p5, Pid(5));
+        // the local allocator skipped past the externally assigned pid
+        let next = nel
+            .p_create(model.clone(), CreateOpts { no_params: true, ..CreateOpts::default() })
+            .unwrap();
+        assert_eq!(next, Pid(6));
+        // re-registering an existing pid is rejected
+        let err = nel
+            .p_create(
+                model,
+                CreateOpts { no_params: true, pid: Some(Pid(5)), ..CreateOpts::default() },
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"), "{err:#}");
+    }
+
+    #[test]
+    fn node_labels_unknown_particle_errors() {
+        let nel = Nel::new(NelConfig { node: Some(3), ..free_cfg(1) }).unwrap();
+        let err = nel.send(None, Pid(42), "PING", vec![]).wait().unwrap_err();
+        assert!(err.msg.contains("unknown particle P42"), "{err}");
+        assert!(err.msg.contains("node 3"), "{err}");
+        assert!(err.msg.contains("fabric"), "{err}");
+        // without a node id the message stays exactly as before
+        let plain = Nel::new(free_cfg(1)).unwrap();
+        let err = plain.send(None, Pid(7), "PING", vec![]).wait().unwrap_err();
+        assert_eq!(err.msg, "unknown particle P7");
+    }
+
+    #[test]
+    fn nel_stats_merge_sums_each_node_once() {
+        let mut a = NelStats {
+            msgs_sent: 10,
+            msgs_cross_device: 2,
+            msg_payload_bytes: 100,
+            handler_errors: 1,
+            ..NelStats::default()
+        };
+        a.sched.handler_runs = 5;
+        a.sched.pool_target = 4;
+        a.sched.workers_peak = 6;
+        a.devices.push(DeviceStats { jobs: 3, busy_secs: 0.5, ..DeviceStats::default() });
+        let mut b = NelStats { msgs_sent: 7, ..NelStats::default() };
+        b.sched.handler_runs = 9;
+        b.sched.pool_target = 2;
+        b.sched.workers_peak = 1;
+        b.devices.push(DeviceStats { jobs: 4, busy_secs: 0.25, ..DeviceStats::default() });
+        b.devices.push(DeviceStats::default());
+
+        // merging one node is the identity on every summed field
+        let solo = NelStats::merged([&a]);
+        assert_eq!(solo.msgs_sent, a.msgs_sent);
+        assert_eq!(solo.sched.handler_runs, a.sched.handler_runs);
+        assert_eq!(solo.devices.len(), 1);
+
+        // two nodes: every counter appears exactly once in the total
+        let m = NelStats::merged([&a, &b]);
+        assert_eq!(m.msgs_sent, 17);
+        assert_eq!(m.msgs_cross_device, 2);
+        assert_eq!(m.msg_payload_bytes, 100);
+        assert_eq!(m.handler_errors, 1);
+        assert_eq!(m.sched.handler_runs, 14);
+        assert_eq!(m.sched.pool_target, 6);
+        assert_eq!(m.sched.workers_peak, 7);
+        // device breakdowns concatenate in node order — never re-summed
+        assert_eq!(m.devices.len(), 3);
+        assert_eq!(m.devices[0].jobs, 3);
+        assert_eq!(m.devices[1].jobs, 4);
+        assert!((m.devices[0].busy_secs - 0.5).abs() < 1e-12);
     }
 
     #[test]

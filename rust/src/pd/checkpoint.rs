@@ -16,10 +16,12 @@
 //!   per key: key len u32 + utf8 bytes, value (tagged, recursive)
 //! ```
 //!
-//! Value encoding (tag u8): 0 Unit; 1 Bool(u8); 2 F32(f32); 3 Usize(u64);
-//! 4 Str(len u32 + utf8); 5 Tensor(dtype u8 {0 f32, 1 i32, 2 u32},
-//! rank u32, dims u64 each, raw 4-byte elements); 6 List(count u32 +
-//! values). Version-1 files (params only) still load, with empty state.
+//! The tagged Value encoding is the SHARED wire codec in [`crate::pd::wire`]
+//! (tag u8: 0 Unit; 1 Bool(u8); 2 F32(f32); 3 Usize(u64); 4 Str(len u32 +
+//! utf8); 5 Tensor(dtype u8 {0 f32, 1 i32, 2 u32}, rank u32, dims u64
+//! each, raw 4-byte elements); 6 List(count u32 + values)) — checkpoint
+//! files and transport frames speak one dialect, so the v1/v2 tests here
+//! pin both. Version-1 files (params only) still load, with empty state.
 //!
 //! No serde/npy in the vendored crate set, so the codec is hand-rolled and
 //! round-trip tested. Capture is zero-copy (COW snapshots); restore merges
@@ -32,18 +34,12 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::particle::{Pid, Value};
+use crate::pd::wire::{read_f32s, read_u32, read_u64, read_value, write_value, MAX_ELEMS};
 use crate::pd::PushDist;
-use crate::runtime::{DType, Tensor, TensorData};
+use crate::runtime::Tensor;
 
 const MAGIC: u32 = 0x5055_5348;
 const VERSION: u32 = 2;
-/// Deepest Value::List nesting the codec accepts (defensive bound; real
-/// state is depth <= 2: a list of tensors).
-const MAX_DEPTH: usize = 32;
-/// Max elements per decoded tensor (1 GiB of f32): a corrupt length field
-/// must produce a clean error, not a multi-GB allocation or an overflowed
-/// shape product.
-const MAX_ELEMS: u64 = 1 << 28;
 
 /// A saved PD snapshot.
 #[derive(Debug, Clone, PartialEq)]
@@ -64,7 +60,9 @@ impl Checkpoint {
         let params = pd.drain_params().map_err(|e| anyhow!("{e}"))?;
         let mut state = BTreeMap::new();
         for pid in pd.particles() {
-            if let Some(entries) = pd.particle_state(pid) {
+            // checked: a transport failure must fail the capture, not
+            // silently drop one node's chain state from the snapshot
+            if let Some(entries) = pd.particle_state_checked(pid).map_err(|e| anyhow!("{e}"))? {
                 if !entries.is_empty() {
                     state.insert(pid, entries);
                 }
@@ -188,183 +186,6 @@ impl Checkpoint {
         }
         Ok(())
     }
-}
-
-// ---- primitive readers --------------------------------------------------
-
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
-}
-
-// ---- Value codec --------------------------------------------------------
-
-fn write_value(w: &mut impl Write, v: &Value, depth: usize) -> Result<()> {
-    if depth > MAX_DEPTH {
-        bail!("state value nesting exceeds {MAX_DEPTH}");
-    }
-    match v {
-        Value::Unit => w.write_all(&[0u8])?,
-        Value::Bool(b) => {
-            w.write_all(&[1u8])?;
-            w.write_all(&[*b as u8])?;
-        }
-        Value::F32(f) => {
-            w.write_all(&[2u8])?;
-            w.write_all(&f.to_le_bytes())?;
-        }
-        Value::Usize(n) => {
-            w.write_all(&[3u8])?;
-            w.write_all(&(*n as u64).to_le_bytes())?;
-        }
-        Value::Str(s) => {
-            w.write_all(&[4u8])?;
-            let b = s.as_bytes();
-            w.write_all(&(b.len() as u32).to_le_bytes())?;
-            w.write_all(b)?;
-        }
-        Value::Tensor(t) => {
-            w.write_all(&[5u8])?;
-            let tag = match t.dtype() {
-                DType::F32 => 0u8,
-                DType::I32 => 1u8,
-                DType::U32 => 2u8,
-            };
-            w.write_all(&[tag])?;
-            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-            for d in &t.shape {
-                w.write_all(&(*d as u64).to_le_bytes())?;
-            }
-            match t.dtype() {
-                DType::F32 => {
-                    for v in t.as_f32() {
-                        w.write_all(&v.to_le_bytes())?;
-                    }
-                }
-                DType::I32 => {
-                    for v in t.as_i32() {
-                        w.write_all(&v.to_le_bytes())?;
-                    }
-                }
-                DType::U32 => {
-                    for v in t.as_u32() {
-                        w.write_all(&v.to_le_bytes())?;
-                    }
-                }
-            }
-        }
-        Value::List(vs) => {
-            w.write_all(&[6u8])?;
-            w.write_all(&(vs.len() as u32).to_le_bytes())?;
-            for v in vs {
-                write_value(w, v, depth + 1)?;
-            }
-        }
-    }
-    Ok(())
-}
-
-fn read_value(r: &mut impl Read, depth: usize) -> Result<Value> {
-    if depth > MAX_DEPTH {
-        bail!("state value nesting exceeds {MAX_DEPTH}");
-    }
-    let mut tag = [0u8; 1];
-    r.read_exact(&mut tag)?;
-    Ok(match tag[0] {
-        0 => Value::Unit,
-        1 => {
-            let mut b = [0u8; 1];
-            r.read_exact(&mut b)?;
-            Value::Bool(b[0] != 0)
-        }
-        2 => {
-            let mut b = [0u8; 4];
-            r.read_exact(&mut b)?;
-            Value::F32(f32::from_le_bytes(b))
-        }
-        3 => Value::Usize(read_u64(r)? as usize),
-        4 => {
-            let len = read_u32(r)? as usize;
-            if len > 1 << 20 {
-                bail!("implausible string length {len}");
-            }
-            let mut b = vec![0u8; len];
-            r.read_exact(&mut b)?;
-            Value::Str(String::from_utf8(b).context("state string not utf-8")?)
-        }
-        5 => {
-            let mut dt = [0u8; 1];
-            r.read_exact(&mut dt)?;
-            let rank = read_u32(r)? as usize;
-            if rank > 32 {
-                bail!("implausible tensor rank {rank}");
-            }
-            let mut shape = Vec::with_capacity(rank);
-            let mut elems: u64 = 1;
-            for _ in 0..rank {
-                let dim = read_u64(r)?;
-                elems = elems.saturating_mul(dim.max(1));
-                if dim > MAX_ELEMS || elems > MAX_ELEMS {
-                    bail!("implausible tensor shape (dim {dim}, {elems}+ elements)");
-                }
-                shape.push(dim as usize);
-            }
-            let n: usize = shape.iter().product();
-            let data = match dt[0] {
-                0 => TensorData::f32(read_f32s(r, n)?),
-                1 => {
-                    let mut bytes = vec![0u8; n * 4];
-                    r.read_exact(&mut bytes)?;
-                    TensorData::i32(
-                        bytes
-                            .chunks_exact(4)
-                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                            .collect(),
-                    )
-                }
-                2 => {
-                    let mut bytes = vec![0u8; n * 4];
-                    r.read_exact(&mut bytes)?;
-                    TensorData::u32(
-                        bytes
-                            .chunks_exact(4)
-                            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                            .collect(),
-                    )
-                }
-                other => bail!("unknown tensor dtype tag {other}"),
-            };
-            Value::Tensor(Tensor::new(shape, data))
-        }
-        6 => {
-            let len = read_u32(r)? as usize;
-            if len > 1 << 24 {
-                bail!("implausible list length {len}");
-            }
-            let mut vs = Vec::with_capacity(len.min(1 << 16));
-            for _ in 0..len {
-                vs.push(read_value(r, depth + 1)?);
-            }
-            Value::List(vs)
-        }
-        other => bail!("unknown value tag {other}"),
-    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,329 @@
+//! The node fabric: the PD's router over one or more node transports
+//! (DESIGN.md §Distributed NEL).
+//!
+//! The fabric is the ONLY pid authority in a multi-node PD: it allocates
+//! global pids monotonically, places particles round-robin across nodes
+//! (pid stripes — `pid % nodes` under pure round-robin creation), and
+//! keeps a range-compressed pid→node table for O(log ranges) routing.
+//! Because nodes register particles under the fabric's GLOBAL pid
+//! ([`CreateOpts::pid`]), every deterministic stream keyed by
+//! (seed, pid, step) — SGMCMC noise, reservoir acceptance, init — is
+//! placement-invariant: a 2-node run reproduces a 1-node run exactly.
+//!
+//! Cross-node batching: `broadcast` groups the target pids by owning
+//! node, issues ONE transport broadcast per destination node (one frame
+//! on a wire transport — the node-level mirror of the device layer's
+//! `charge_transfer_batch` aggregation), and reassembles the reply
+//! futures in input order, so `PFuture::join_all`'s
+//! first-error-by-position semantics are preserved verbatim across the
+//! wire. Barriers (`drain_params`) and stats union over nodes; stats are
+//! summed ONCE via [`NelStats::merged`].
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
+use crate::particle::{PFuture, Pid, PushError, Value};
+use crate::pd::transport::{
+    loopback_node, InProc, NodeTransport, TcpNode, TransportCounters,
+};
+use crate::pd::wire::{CreateSpec, DirectOp};
+use crate::runtime::{ModelSpec, Tensor};
+
+/// How the PD reaches its nodes.
+#[derive(Debug, Clone)]
+pub enum TransportKind {
+    /// Every node is an in-process NEL (today's behavior; with 1 node it
+    /// is bitwise-identical to the pre-fabric PD).
+    InProc,
+    /// Every node is a real-socket server on 127.0.0.1 (spawned
+    /// in-process on ephemeral ports — hermetic, but all serialization
+    /// and scheduling is the real distributed path).
+    TcpLoopback,
+    /// Connect to externally launched `push node-worker` servers; one
+    /// address per node.
+    TcpConnect(Vec<SocketAddr>),
+}
+
+/// Node topology of a PD.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub transport: TransportKind,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { nodes: 1, transport: TransportKind::InProc }
+    }
+}
+
+/// Serializable creation options (the fabric adds the pid). The
+/// spec-based twin of [`CreateOpts`] for particles that may land on any
+/// node: handlers come from a registered program instead of closures.
+#[derive(Debug, Clone, Default)]
+pub struct SpecOpts {
+    pub device: Option<usize>,
+    pub program: Option<(String, Value)>,
+    pub state: Vec<(String, Value)>,
+    pub no_params: bool,
+    pub init_params: Option<Tensor>,
+}
+
+/// A contiguous run of pids owned by one node. Pids are allocated
+/// monotonically, so the table stays sorted by construction and
+/// consecutive same-node creations merge into one range.
+#[derive(Debug, Clone, Copy)]
+struct PidRange {
+    start: u32,
+    /// exclusive
+    end: u32,
+    node: usize,
+}
+
+pub struct NodeFabric {
+    links: Vec<Box<dyn NodeTransport>>,
+    /// Name of the model every node must serve; stamped into each
+    /// `CreateSpec` so a mis-pointed node worker fails at creation.
+    model_name: String,
+    ranges: Mutex<Vec<PidRange>>,
+    next_pid: AtomicU32,
+    next_node: AtomicUsize,
+}
+
+impl NodeFabric {
+    pub fn new(topology: &Topology, cfg: &NelConfig, model: Arc<ModelSpec>) -> Result<NodeFabric> {
+        ensure!(topology.nodes >= 1, "a PD needs at least one node");
+        let mut links: Vec<Box<dyn NodeTransport>> = Vec::with_capacity(topology.nodes);
+        for i in 0..topology.nodes {
+            // Single-node fabrics keep node: None so every error message
+            // (and everything else) matches the pre-fabric PD exactly.
+            let node = (topology.nodes > 1).then_some(i);
+            let node_cfg = NelConfig { node, ..cfg.clone() };
+            match &topology.transport {
+                TransportKind::InProc => {
+                    links.push(Box::new(InProc::new(node_cfg, model.clone())?));
+                }
+                TransportKind::TcpLoopback => {
+                    links.push(Box::new(loopback_node(node_cfg, model.clone())?));
+                }
+                TransportKind::TcpConnect(addrs) => {
+                    ensure!(
+                        addrs.len() == topology.nodes,
+                        "need {} node addresses, got {}",
+                        topology.nodes,
+                        addrs.len()
+                    );
+                    links.push(Box::new(TcpNode::connect(addrs[i])?));
+                }
+            }
+        }
+        Ok(NodeFabric {
+            links,
+            model_name: model.name.clone(),
+            ranges: Mutex::new(Vec::new()),
+            next_pid: AtomicU32::new(0),
+            next_node: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.links[0].kind()
+    }
+
+    /// The in-process NEL of node 0, when it has one.
+    pub fn nel(&self) -> Option<&Nel> {
+        self.links[0].nel()
+    }
+
+    /// Which node owns `pid` (None for pids this fabric never created).
+    pub fn node_of(&self, pid: Pid) -> Option<usize> {
+        let ranges = self.ranges.lock().unwrap();
+        ranges
+            .binary_search_by(|r| {
+                if pid.0 < r.start {
+                    std::cmp::Ordering::Greater
+                } else if pid.0 >= r.end {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .ok()
+            .map(|i| ranges[i].node)
+    }
+
+    /// All pids in creation order (ranges are sorted by start).
+    pub fn particle_ids(&self) -> Vec<Pid> {
+        self.ranges
+            .lock()
+            .unwrap()
+            .iter()
+            .flat_map(|r| (r.start..r.end).map(Pid))
+            .collect()
+    }
+
+    fn record(&self, pid: u32, node: usize) {
+        let mut ranges = self.ranges.lock().unwrap();
+        // Sorted insert: creations usually arrive in pid order (the common
+        // case extends the last range), but concurrent creators may finish
+        // out of order — the table must stay sorted for the binary search.
+        let pos = ranges.partition_point(|r| r.start < pid);
+        if pos > 0 {
+            let prev = &mut ranges[pos - 1];
+            if prev.node == node && prev.end == pid {
+                prev.end = pid + 1;
+                return;
+            }
+        }
+        ranges.insert(pos, PidRange { start: pid, end: pid + 1, node });
+    }
+
+    fn alloc(&self) -> (Pid, usize) {
+        let pid = Pid(self.next_pid.fetch_add(1, Ordering::Relaxed));
+        let node = self.next_node.fetch_add(1, Ordering::Relaxed) % self.links.len();
+        (pid, node)
+    }
+
+    fn unknown(&self, pid: Pid) -> PushError {
+        PushError::new(format!("unknown particle {pid}"))
+    }
+
+    /// In-process creation with closure handlers. Routes round-robin;
+    /// wire transports reject it (closures cannot cross the wire).
+    pub fn create_local(&self, opts: CreateOpts) -> Result<Pid> {
+        let (pid, node) = self.alloc();
+        let created = self.links[node]
+            .create_local(CreateOpts { pid: Some(pid), ..opts })
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        debug_assert_eq!(created, pid);
+        self.record(pid.0, node);
+        Ok(pid)
+    }
+
+    /// Spec-based creation (program-resolved handlers); works on every
+    /// transport.
+    pub fn create_spec(&self, opts: SpecOpts) -> Result<Pid> {
+        let (pid, node) = self.alloc();
+        let spec = CreateSpec {
+            pid,
+            device: opts.device,
+            program: opts.program,
+            state: opts.state,
+            no_params: opts.no_params,
+            init_params: opts.init_params,
+            model: self.model_name.clone(),
+        };
+        let created =
+            self.links[node].create_spec(spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+        debug_assert_eq!(created, pid);
+        self.record(pid.0, node);
+        Ok(pid)
+    }
+
+    pub fn send(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+        match self.node_of(pid) {
+            Some(n) => self.links[n].send(pid, msg, args),
+            None => PFuture::ready(Err(self.unknown(pid))),
+        }
+    }
+
+    /// Batched fan-out: one transport broadcast (= one frame on a wire
+    /// link) per destination node; reply futures in input order.
+    pub fn broadcast(&self, pids: &[Pid], msg: &str, args: Vec<Value>) -> Vec<PFuture> {
+        if pids.is_empty() {
+            return Vec::new();
+        }
+        if self.links.len() == 1 {
+            // Single node: hand the whole batch straight down — the
+            // in-process path stays exactly `Nel::broadcast`.
+            return self.links[0].broadcast(pids, msg, args);
+        }
+        let mut groups: BTreeMap<usize, (Vec<usize>, Vec<Pid>)> = BTreeMap::new();
+        let mut slots: Vec<Option<PFuture>> = Vec::with_capacity(pids.len());
+        for (i, pid) in pids.iter().enumerate() {
+            match self.node_of(*pid) {
+                Some(n) => {
+                    let g = groups.entry(n).or_default();
+                    g.0.push(i);
+                    g.1.push(*pid);
+                    slots.push(None);
+                }
+                None => slots.push(Some(PFuture::ready(Err(self.unknown(*pid))))),
+            }
+        }
+        for (n, (positions, node_pids)) in groups {
+            let futs = self.links[n].broadcast(&node_pids, msg, args.clone());
+            for (pos, fut) in positions.into_iter().zip(futs) {
+                slots[pos] = Some(fut);
+            }
+        }
+        slots.into_iter().map(|f| f.expect("every slot filled")).collect()
+    }
+
+    pub fn direct(&self, op: DirectOp) -> PFuture {
+        match self.node_of(op.pid()) {
+            Some(n) => self.links[n].direct(op),
+            None => {
+                let pid = op.pid();
+                PFuture::ready(Err(self.unknown(pid)))
+            }
+        }
+    }
+
+    /// Barrier + snapshot across every node.
+    pub fn drain_params(&self) -> Result<BTreeMap<Pid, Tensor>, PushError> {
+        let mut out = BTreeMap::new();
+        for link in &self.links {
+            for (pid, t) in link.drain_params()? {
+                out.insert(pid, t);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn particle_state(
+        &self,
+        pid: Pid,
+    ) -> Result<Option<Vec<(String, Value)>>, PushError> {
+        match self.node_of(pid) {
+            Some(n) => self.links[n].particle_state(pid),
+            None => Ok(None),
+        }
+    }
+
+    pub fn restore_particle_state(
+        &self,
+        pid: Pid,
+        entries: Vec<(String, Value)>,
+    ) -> Result<(), PushError> {
+        match self.node_of(pid) {
+            Some(n) => self.links[n].restore_particle_state(pid, entries),
+            None => Err(self.unknown(pid)),
+        }
+    }
+
+    /// Per-node stats, in node order.
+    pub fn node_stats(&self) -> Result<Vec<NelStats>, PushError> {
+        self.links.iter().map(|l| l.stats()).collect()
+    }
+
+    /// Fabric-wide stats: per-node stats summed exactly once.
+    pub fn stats(&self) -> Result<NelStats, PushError> {
+        let per_node = self.node_stats()?;
+        Ok(NelStats::merged(per_node.iter()))
+    }
+
+    /// Per-node transport frame/byte counters, in node order.
+    pub fn transport_counters(&self) -> Vec<TransportCounters> {
+        self.links.iter().map(|l| l.counters()).collect()
+    }
+}

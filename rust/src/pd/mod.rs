@@ -2,12 +2,23 @@
 //! architecture plus the set of particles that form its empirical
 //! (Dirac-mixture) approximation.
 //!
-//! The paper runs the PD in a separate OS process from its NEL to prepare
-//! for a distributed implementation; here the PD is an in-process facade
-//! over one NEL (process isolation is an explicit non-goal, DESIGN.md §9 —
-//! the seam is this type's API, which only moves plain `Value`s).
+//! The paper runs the PD in a separate OS process from its NEL; this PD
+//! realizes that seam as a transport-backed node fabric (DESIGN.md
+//! §Distributed NEL): every call routes through [`fabric::NodeFabric`],
+//! whose nodes are reached either in-process ([`transport::InProc`] —
+//! the degenerate single-node case, bitwise-identical to the old
+//! in-process facade) or over real sockets ([`transport::TcpNode`]).
+//! The API still only moves plain `Value`s, which is exactly what makes
+//! the seam wire-able; inference algorithms cannot tell transports
+//! apart.
 
 pub mod checkpoint;
+pub mod fabric;
+pub mod programs;
+pub mod transport;
+pub mod wire;
+
+pub use fabric::{SpecOpts, Topology, TransportKind};
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -16,22 +27,39 @@ use anyhow::{anyhow, Result};
 
 use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
 use crate::particle::{PFuture, Pid, PushError, Value};
+use crate::pd::transport::TransportCounters;
+use crate::pd::wire::DirectOp;
 use crate::runtime::{Manifest, ModelSpec, Tensor};
 
 pub struct PushDist {
-    nel: Nel,
+    fabric: fabric::NodeFabric,
     model: Arc<ModelSpec>,
     manifest_dir: std::path::PathBuf,
     svgd: Vec<crate::runtime::SvgdSpec>,
 }
 
 impl PushDist {
-    /// Wrap `model_name` from the manifest into a PD backed by a fresh NEL.
+    /// Wrap `model_name` from the manifest into a PD backed by a fresh
+    /// single-node in-process NEL — the pre-fabric behavior, unchanged.
     pub fn new(manifest: &Manifest, model_name: &str, cfg: NelConfig) -> Result<PushDist> {
+        Self::with_topology(manifest, model_name, cfg, &Topology::default())
+    }
+
+    /// Wrap `model_name` into a PD spanning `topology.nodes` nodes. Each
+    /// node owns one NEL (with `cfg.num_devices` devices and its own M:N
+    /// scheduler); particles are placed round-robin under fabric-assigned
+    /// GLOBAL pids, so (seed, pid, step)-keyed determinism is
+    /// placement-invariant.
+    pub fn with_topology(
+        manifest: &Manifest,
+        model_name: &str,
+        cfg: NelConfig,
+        topology: &Topology,
+    ) -> Result<PushDist> {
         let model = Arc::new(manifest.model(model_name)?.clone());
-        let nel = Nel::new(cfg)?;
+        let fabric = fabric::NodeFabric::new(topology, &cfg, model.clone())?;
         Ok(PushDist {
-            nel,
+            fabric,
             model,
             manifest_dir: manifest.dir.clone(),
             svgd: manifest.svgd.clone(),
@@ -42,8 +70,24 @@ impl PushDist {
         &self.model
     }
 
+    /// Node count of the backing fabric (1 = the degenerate in-process
+    /// case).
+    pub fn nodes(&self) -> usize {
+        self.fabric.nodes()
+    }
+
+    /// Which node owns `pid`.
+    pub fn node_of(&self, pid: Pid) -> Option<usize> {
+        self.fabric.node_of(pid)
+    }
+
+    /// The node-0 in-process NEL. Single-node in-process PDs always have
+    /// one (trace example, artifact benches); a wire-transport PD has no
+    /// local NEL and this panics — route through the PD API instead.
     pub fn nel(&self) -> &Nel {
-        &self.nel
+        self.fabric
+            .nel()
+            .expect("no in-process NEL: this PD runs behind a wire transport")
     }
 
     pub fn manifest_dir(&self) -> &std::path::Path {
@@ -59,12 +103,14 @@ impl PushDist {
             .map(|s| s.file.clone())
     }
 
-    /// Create one particle (paper: `p_create`).
+    /// Create one particle (paper: `p_create`). Closure handlers stay
+    /// in-process; on a wire transport use [`PushDist::p_create_spec`].
     pub fn p_create(&self, opts: CreateOpts) -> Result<Pid> {
-        self.nel.p_create(self.model.clone(), opts)
+        self.fabric.create_local(opts)
     }
 
-    /// Create `n` particles round-robin across devices with shared handlers.
+    /// Create `n` particles round-robin across nodes/devices with shared
+    /// handlers.
     pub fn p_create_n(
         &self,
         n: usize,
@@ -73,17 +119,35 @@ impl PushDist {
         (0..n).map(|i| self.p_create(mk_opts(i))).collect()
     }
 
-    /// Asynchronously trigger `msg` on `pid` (paper: `p_launch`).
-    pub fn p_launch(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture {
-        self.nel.send(None, pid, msg, args)
+    /// Create one particle from a serializable spec: handlers resolve
+    /// node-locally from a registered program (`pd::programs`), so this
+    /// works on every transport.
+    pub fn p_create_spec(&self, opts: SpecOpts) -> Result<Pid> {
+        self.fabric.create_spec(opts)
     }
 
-    /// Batched `p_launch` of one message to many particles: the label is
-    /// interned once, counters bump once, and the scheduler enqueues the
-    /// whole fan-out in one pass (see `Nel::broadcast`). The returned
-    /// futures are in `pids` order; aggregate with `PFuture::join_all`.
+    /// Spec-based twin of [`PushDist::p_create_n`].
+    pub fn p_create_spec_n(
+        &self,
+        n: usize,
+        mk_opts: impl Fn(usize) -> SpecOpts,
+    ) -> Result<Vec<Pid>> {
+        (0..n).map(|i| self.p_create_spec(mk_opts(i))).collect()
+    }
+
+    /// Asynchronously trigger `msg` on `pid` (paper: `p_launch`).
+    pub fn p_launch(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+        self.fabric.send(pid, msg, args)
+    }
+
+    /// Batched `p_launch` of one message to many particles: the fabric
+    /// issues ONE transport broadcast per destination node (one frame on
+    /// a wire link — the node-level `charge_transfer_batch`), and each
+    /// node's NEL runs its usual batched fan-out. The returned futures
+    /// are in `pids` order; aggregate with `PFuture::join_all` — error
+    /// ordering is by input position, transports included.
     pub fn broadcast(&self, pids: &[Pid], msg: &str, args: Vec<Value>) -> Vec<PFuture> {
-        self.nel.broadcast(None, pids, msg, args)
+        self.fabric.broadcast(pids, msg, args)
     }
 
     /// Wait on futures (paper: `p_wait`).
@@ -92,39 +156,38 @@ impl PushDist {
     }
 
     pub fn particles(&self) -> Vec<Pid> {
-        self.nel.particle_ids()
+        self.fabric.particle_ids()
     }
 
     // ---- direct (handler-less) particle operations, used by inference
     //      drivers and baselines ----
 
     pub fn step(&self, pid: Pid, x: Tensor, y: Tensor, lr: f32) -> PFuture {
-        self.nel
-            .run_entry(pid, "step", vec![x, y, Tensor::scalar_f32(lr)], Some(1))
+        self.fabric.direct(DirectOp::Step { pid, x, y, lr })
     }
 
     pub fn adam_step(&self, pid: Pid, x: Tensor, y: Tensor, lr: f32) -> PFuture {
-        self.nel.run_adam(pid, x, y, lr)
+        self.fabric.direct(DirectOp::AdamStep { pid, x, y, lr })
     }
 
     pub fn forward(&self, pid: Pid, x: Tensor) -> PFuture {
-        self.nel.run_entry(pid, "fwd", vec![x], None)
+        self.fabric.direct(DirectOp::Forward { pid, x })
     }
 
     pub fn grad(&self, pid: Pid, x: Tensor, y: Tensor) -> PFuture {
-        self.nel.run_entry(pid, "grad", vec![x, y], None)
+        self.fabric.direct(DirectOp::Grad { pid, x, y })
     }
 
     pub fn get(&self, pid: Pid) -> PFuture {
-        self.nel.get_params(None, pid)
+        self.fabric.direct(DirectOp::Get { pid })
     }
 
     pub fn set(&self, pid: Pid, t: Tensor) -> PFuture {
-        self.nel.set_params(pid, t)
+        self.fabric.direct(DirectOp::Set { pid, t })
     }
 
     /// Posterior-mean prediction `f̂(x) = (1/n) Σ_i nn_θi(x)` (paper §3.4).
-    /// Forward passes run concurrently across devices.
+    /// Forward passes run concurrently across devices (and nodes).
     pub fn mean_forward(&self, pids: &[Pid], x: &Tensor) -> Result<Tensor> {
         if pids.is_empty() {
             return Err(anyhow!("mean_forward over zero particles"));
@@ -149,16 +212,30 @@ impl PushDist {
         Ok(a)
     }
 
-    /// Snapshot every particle's parameters (barrier + cache flush). The
-    /// returned tensors are zero-copy COW snapshots of the host store.
+    /// Snapshot every particle's parameters (barrier + cache flush on
+    /// every node). On the in-process path the returned tensors are
+    /// zero-copy COW snapshots of the host store; over a wire transport
+    /// they are owned decodes of the nodes' snapshots.
     pub fn drain_params(&self) -> Result<BTreeMap<Pid, Tensor>, PushError> {
-        self.nel.drain_params()
+        self.fabric.drain_params()
     }
 
     /// Clone one particle's local state (Adam moments, SWAG moments,
-    /// SGMCMC chain state, ...). Zero-copy for tensor values.
+    /// SGMCMC chain state, ...). Zero-copy for tensor values in-process.
+    /// None for unknown pids — and, for API compatibility, on transport
+    /// failure; checkpoint capture uses the checked variant.
     pub fn particle_state(&self, pid: Pid) -> Option<Vec<(String, Value)>> {
-        self.nel.particle_state(pid)
+        self.fabric.particle_state(pid).ok().flatten()
+    }
+
+    /// [`PushDist::particle_state`] with transport errors surfaced
+    /// (checkpointing must fail loudly rather than silently drop a
+    /// node's chain state).
+    pub fn particle_state_checked(
+        &self,
+        pid: Pid,
+    ) -> Result<Option<Vec<(String, Value)>>, PushError> {
+        self.fabric.particle_state(pid)
     }
 
     /// Merge state entries back into a particle (checkpoint restore).
@@ -167,10 +244,39 @@ impl PushDist {
         pid: Pid,
         entries: Vec<(String, Value)>,
     ) -> Result<(), PushError> {
-        self.nel.restore_particle_state(pid, entries)
+        self.fabric.restore_particle_state(pid, entries)
     }
 
+    /// Fabric-wide statistics: per-node `NelStats` summed exactly once
+    /// (see [`NelStats::merged`]); device breakdowns concatenate in node
+    /// order. The single-node result is identical to the old direct NEL
+    /// read. A transport failure (dead node link) cannot be signalled
+    /// through this infallible signature, so it is reported on stderr and
+    /// zeros are returned — callers that must distinguish "no traffic"
+    /// from "node unreachable" use [`PushDist::stats_checked`].
     pub fn stats(&self) -> NelStats {
-        self.nel.stats()
+        match self.fabric.stats() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("warning: fabric stats unavailable ({e}); reporting zeros");
+                NelStats::default()
+            }
+        }
+    }
+
+    /// [`PushDist::stats`] with transport errors surfaced.
+    pub fn stats_checked(&self) -> Result<NelStats, PushError> {
+        self.fabric.stats()
+    }
+
+    /// Per-node stats, in node order (the un-merged inputs of
+    /// [`PushDist::stats`]).
+    pub fn node_stats(&self) -> Result<Vec<NelStats>, PushError> {
+        self.fabric.node_stats()
+    }
+
+    /// Per-node transport frame/byte counters (all zero in-process).
+    pub fn transport_counters(&self) -> Vec<TransportCounters> {
+        self.fabric.transport_counters()
     }
 }

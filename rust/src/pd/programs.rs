@@ -1,0 +1,143 @@
+//! Node-local handler programs (DESIGN.md §Distributed NEL).
+//!
+//! Handler tables are closures and can never cross the wire. What crosses
+//! instead is a PROGRAM NAME plus a serializable config `Value`
+//! ([`crate::pd::wire::CreateSpec`]); every node resolves the name in
+//! this registry and builds the handler table locally — so an algorithm's
+//! handlers are constructed from the same code on every node, and the
+//! algorithm itself stays transport-oblivious (the Edward2/ZhuSuan
+//! lesson: distribution is a property of the runtime seam, not of the
+//! inference code).
+//!
+//! Built-ins:
+//! * `"sgmcmc"` — the SGLD/SGHMC chain handlers
+//!   (`infer::sgmcmc::chain_handler_table` from a wire config).
+//! * `"echo"` — a tiny diagnostic program (PING/WHO/FAIL) used by the
+//!   transport tests and micro-benches.
+//!
+//! Algorithms that want to span nodes register theirs via
+//! [`register_program`] (last registration wins, so tests can shadow).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::particle::{handler, HandlerTable, PushError, Value};
+use crate::runtime::ModelSpec;
+
+/// Builds a particle's handler table from a wire config, node-locally.
+pub type ProgramBuilder =
+    Arc<dyn Fn(&Value, &ModelSpec) -> Result<HandlerTable, PushError> + Send + Sync>;
+
+fn registry() -> &'static RwLock<BTreeMap<String, ProgramBuilder>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, ProgramBuilder>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: BTreeMap<String, ProgramBuilder> = BTreeMap::new();
+        m.insert(
+            "sgmcmc".to_string(),
+            Arc::new(|cfg, _model| {
+                let cfg = crate::infer::sgmcmc::SgmcmcConfig::from_wire(cfg)?;
+                Ok(crate::infer::sgmcmc::chain_handler_table(&cfg))
+            }),
+        );
+        m.insert("echo".to_string(), Arc::new(|_cfg, _model| Ok(echo_handlers())));
+        RwLock::new(m)
+    })
+}
+
+/// Register (or shadow) a handler program under `name` on this node.
+pub fn register_program(name: &str, builder: ProgramBuilder) {
+    registry().write().unwrap().insert(name.to_string(), builder);
+}
+
+/// Resolve `name` and build its handler table for a particle of `model`.
+pub fn build_handlers(
+    name: &str,
+    cfg: &Value,
+    model: &ModelSpec,
+) -> Result<HandlerTable, PushError> {
+    let builder = registry().read().unwrap().get(name).cloned();
+    match builder {
+        Some(b) => b(cfg, model),
+        None => {
+            let known: Vec<String> = registry().read().unwrap().keys().cloned().collect();
+            Err(PushError::new(format!(
+                "unknown handler program {name:?} on this node (registered: {})",
+                known.join(", ")
+            )))
+        }
+    }
+}
+
+/// The diagnostic program: `PING` -> Unit, `WHO` -> Usize(pid),
+/// `FAIL` -> an error naming the particle (exercises per-position error
+/// propagation through broadcast batches and join_all ordering).
+fn echo_handlers() -> HandlerTable {
+    let ping = handler(|_ctx, _args| Ok(Value::Unit));
+    let who = handler(|ctx, _args| Ok(Value::Usize(ctx.pid.0 as usize)));
+    let fail = handler(|ctx, _args| {
+        Err(PushError::new(format!("echo FAIL on {}", ctx.pid)))
+    });
+    [
+        ("PING".to_string(), ping),
+        ("WHO".to_string(), who),
+        ("FAIL".to_string(), fail),
+    ]
+    .into_iter()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap as Map;
+    use crate::runtime::DType;
+
+    fn model() -> ModelSpec {
+        ModelSpec {
+            name: "programs_test".to_string(),
+            param_count: 1,
+            task: "regress".to_string(),
+            x_shape: vec![1],
+            y_shape: vec![1],
+            y_dtype: DType::F32,
+            arch: "none".to_string(),
+            meta: Map::new(),
+            entries: Map::new(),
+        }
+    }
+
+    #[test]
+    fn builtin_programs_resolve() {
+        let m = model();
+        let echo = build_handlers("echo", &Value::Unit, &m).unwrap();
+        assert!(echo.contains_key("PING"));
+        assert!(echo.contains_key("WHO"));
+        assert!(echo.contains_key("FAIL"));
+
+        let cfg = crate::infer::sgmcmc::SgmcmcConfig {
+            model: crate::infer::sgmcmc::linear_native_model(),
+            ..crate::infer::sgmcmc::SgmcmcConfig::default()
+        };
+        let chains = build_handlers("sgmcmc", &cfg.to_wire().unwrap(), &m).unwrap();
+        assert!(chains.contains_key("MCMC_STEP"));
+        assert!(chains.contains_key("MCMC_PREDICT"));
+    }
+
+    #[test]
+    fn unknown_program_lists_known_names() {
+        let err = build_handlers("nope", &Value::Unit, &model()).unwrap_err();
+        assert!(err.msg.contains("unknown handler program"), "{err}");
+        assert!(err.msg.contains("sgmcmc"), "{err}");
+    }
+
+    #[test]
+    fn registration_shadows() {
+        register_program(
+            "programs_test_shadow",
+            Arc::new(|_c, _m| Ok(HandlerTable::new())),
+        );
+        assert!(build_handlers("programs_test_shadow", &Value::Unit, &model())
+            .unwrap()
+            .is_empty());
+    }
+}

@@ -1,0 +1,754 @@
+//! Node transports behind the PD seam (DESIGN.md §Distributed NEL).
+//!
+//! A [`NodeTransport`] is the PD's view of ONE node: a NEL plus its M:N
+//! scheduler and devices, reachable either in-process ([`InProc`] — the
+//! degenerate case, bitwise-identical to the pre-fabric PD) or over a
+//! real socket ([`TcpNode`] — length-prefixed [`wire`] frames on a
+//! loopback or remote TCP connection, one server loop owning one NEL per
+//! node). The inference algorithms never see this layer; they talk to
+//! [`crate::pd::PushDist`], which routes through the
+//! [`crate::pd::fabric::NodeFabric`].
+//!
+//! Protocol (client side):
+//! * every request is ONE frame carrying a fresh `req_id`;
+//! * a reader thread demultiplexes responses back to parked futures via
+//!   a pending map, so any number of requests pipeline on one socket;
+//! * a broadcast is ONE frame out regardless of fan-out and ONE batched
+//!   response back with a result per pid in input order — per-position
+//!   errors survive the wire, so `PFuture::join_all`'s
+//!   first-error-by-position semantics are preserved unchanged.
+//!
+//! Server side, each connection gets: one NEL (created with the node's
+//! config), a reader loop that dispatches ops without blocking on
+//! handler completion (responses are sent from `on_ready` continuations
+//! through a writer thread), and FIFO write-out of completed responses.
+//! Everything binds 127.0.0.1 ephemeral ports in tests/benches, so CI
+//! exercises real serialization and real sockets hermetically.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
+use crate::particle::{HandlerTable, PFuture, Pid, PushError, Value};
+use crate::pd::wire::{self, CreateSpec, DirectOp, Request, Response};
+use crate::pd::programs;
+use crate::runtime::{ModelSpec, Tensor};
+
+/// Frame/byte counters of one node link. The in-process link never
+/// frames anything (zero-copy Arc handoff), so its counters stay zero —
+/// which is itself the invariant the single-node perf gate pins.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TransportCounters {
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+#[derive(Default)]
+struct CounterCells {
+    frames_sent: AtomicU64,
+    frames_received: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
+}
+
+impl CounterCells {
+    fn snapshot(&self) -> TransportCounters {
+        TransportCounters {
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_received: self.frames_received.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_received: self.bytes_received.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The PD seam's per-node contract. Everything the PD can ask of a node
+/// goes through here; `Value`s are the only payload type, exactly as the
+/// paper's PD API prescribes.
+pub trait NodeTransport: Send + Sync {
+    fn kind(&self) -> &'static str;
+
+    /// In-process creation with closure handlers. Only the local
+    /// transport can do this — closures cannot cross the wire; remote
+    /// nodes need [`NodeTransport::create_spec`] with a registered
+    /// handler program.
+    fn create_local(&self, opts: CreateOpts) -> Result<Pid, PushError>;
+
+    /// Creation from a serializable spec (fabric-assigned global pid,
+    /// node-locally resolved handler program).
+    fn create_spec(&self, spec: CreateSpec) -> Result<Pid, PushError>;
+
+    fn send(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture;
+
+    /// Batched fan-out to pids ON THIS NODE: exactly one frame on a wire
+    /// transport. Returned futures are in `pids` order.
+    fn broadcast(&self, pids: &[Pid], msg: &str, args: Vec<Value>) -> Vec<PFuture>;
+
+    fn direct(&self, op: DirectOp) -> PFuture;
+
+    fn drain_params(&self) -> Result<Vec<(Pid, Tensor)>, PushError>;
+
+    fn particle_state(&self, pid: Pid) -> Result<Option<Vec<(String, Value)>>, PushError>;
+
+    fn restore_particle_state(
+        &self,
+        pid: Pid,
+        entries: Vec<(String, Value)>,
+    ) -> Result<(), PushError>;
+
+    fn stats(&self) -> Result<NelStats, PushError>;
+
+    fn counters(&self) -> TransportCounters;
+
+    /// The node-local NEL, when there is one in this process (used by the
+    /// trace example and artifact-backed benches; None over the wire).
+    fn nel(&self) -> Option<&Nel> {
+        None
+    }
+}
+
+// ---- in-process transport ------------------------------------------------
+
+/// Today's behavior as the degenerate transport: direct calls into one
+/// in-process NEL, no serialization, payloads move as zero-copy Arc
+/// clones through the parameter plane.
+pub struct InProc {
+    nel: Nel,
+    model: Arc<ModelSpec>,
+}
+
+impl InProc {
+    pub fn new(cfg: NelConfig, model: Arc<ModelSpec>) -> Result<InProc> {
+        Ok(InProc { nel: Nel::new(cfg)?, model })
+    }
+}
+
+impl NodeTransport for InProc {
+    fn kind(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn create_local(&self, opts: CreateOpts) -> Result<Pid, PushError> {
+        self.nel.p_create(self.model.clone(), opts).map_err(PushError::from)
+    }
+
+    fn create_spec(&self, spec: CreateSpec) -> Result<Pid, PushError> {
+        check_model(&spec, &self.model)?;
+        let receive = match &spec.program {
+            Some((name, cfg)) => programs::build_handlers(name, cfg, &self.model)?,
+            None => HandlerTable::new(),
+        };
+        self.nel
+            .p_create(
+                self.model.clone(),
+                CreateOpts {
+                    pid: Some(spec.pid),
+                    device: spec.device,
+                    receive,
+                    state: spec.state,
+                    no_params: spec.no_params,
+                    init_params: spec.init_params,
+                },
+            )
+            .map_err(PushError::from)
+    }
+
+    fn send(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+        self.nel.send(None, pid, msg, args)
+    }
+
+    fn broadcast(&self, pids: &[Pid], msg: &str, args: Vec<Value>) -> Vec<PFuture> {
+        self.nel.broadcast(None, pids, msg, args)
+    }
+
+    fn direct(&self, op: DirectOp) -> PFuture {
+        dispatch_direct(&self.nel, op)
+    }
+
+    fn drain_params(&self) -> Result<Vec<(Pid, Tensor)>, PushError> {
+        Ok(self.nel.drain_params()?.into_iter().collect())
+    }
+
+    fn particle_state(&self, pid: Pid) -> Result<Option<Vec<(String, Value)>>, PushError> {
+        Ok(self.nel.particle_state(pid))
+    }
+
+    fn restore_particle_state(
+        &self,
+        pid: Pid,
+        entries: Vec<(String, Value)>,
+    ) -> Result<(), PushError> {
+        self.nel.restore_particle_state(pid, entries)
+    }
+
+    fn stats(&self) -> Result<NelStats, PushError> {
+        Ok(self.nel.stats())
+    }
+
+    fn counters(&self) -> TransportCounters {
+        TransportCounters::default()
+    }
+
+    fn nel(&self) -> Option<&Nel> {
+        Some(&self.nel)
+    }
+}
+
+/// Run one direct (handler-less) op on a NEL — the single dispatch point
+/// shared by the in-process transport and the node server, so both sides
+/// of the wire execute identical code paths.
+pub(crate) fn dispatch_direct(nel: &Nel, op: DirectOp) -> PFuture {
+    match op {
+        DirectOp::Step { pid, x, y, lr } => {
+            nel.run_entry(pid, "step", vec![x, y, Tensor::scalar_f32(lr)], Some(1))
+        }
+        DirectOp::AdamStep { pid, x, y, lr } => nel.run_adam(pid, x, y, lr),
+        DirectOp::Forward { pid, x } => nel.run_entry(pid, "fwd", vec![x], None),
+        DirectOp::Grad { pid, x, y } => nel.run_entry(pid, "grad", vec![x, y], None),
+        DirectOp::Get { pid } => nel.get_params(None, pid),
+        DirectOp::Set { pid, t } => nel.set_params(pid, t),
+    }
+}
+
+// ---- TCP transport: client -----------------------------------------------
+
+enum Pending {
+    One(PFuture),
+    Many(Vec<PFuture>),
+    Stats(mpsc::Sender<Result<NelStats, PushError>>),
+}
+
+/// A node reached over TCP. Cloned per fabric; owns the write half of the
+/// connection plus a reader thread that demultiplexes responses.
+pub struct TcpNode {
+    stream: TcpStream,
+    writer: Mutex<BufWriter<TcpStream>>,
+    pending: Arc<Mutex<HashMap<u64, Pending>>>,
+    /// Set by the reader thread when the connection dies. Checked around
+    /// every pending-map insert: a request registered after the reader
+    /// exited would otherwise wait forever on a map nobody drains (TCP
+    /// writes to a dead peer can still "succeed").
+    closed: Arc<std::sync::atomic::AtomicBool>,
+    next_id: AtomicU64,
+    counters: Arc<CounterCells>,
+    peer: SocketAddr,
+}
+
+impl TcpNode {
+    /// Connect to a node server at `addr`.
+    pub fn connect(addr: SocketAddr) -> Result<TcpNode> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let writer = Mutex::new(BufWriter::new(stream.try_clone()?));
+        let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
+        let closed = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let counters = Arc::new(CounterCells::default());
+        let rstream = stream.try_clone()?;
+        {
+            let pending = pending.clone();
+            let closed = closed.clone();
+            let counters = counters.clone();
+            std::thread::Builder::new()
+                .name(format!("push-tcp-client-{addr}"))
+                .spawn(move || reader_loop(rstream, pending, closed, counters))?;
+        }
+        Ok(TcpNode {
+            stream,
+            writer,
+            pending,
+            closed,
+            next_id: AtomicU64::new(0),
+            counters,
+            peer: addr,
+        })
+    }
+
+    pub fn peer(&self) -> SocketAddr {
+        self.peer
+    }
+
+    /// Send one request frame, registering `pending` for its response.
+    /// On a write failure the pending entry is removed and the error
+    /// returned — the caller owns failing any futures it handed in.
+    fn request(&self, req: &Request, pending: Pending) -> Result<u64, PushError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let buf = wire::encode_request(id, req).map_err(PushError::from)?;
+        if self.closed.load(Ordering::Acquire) {
+            return Err(PushError::new(format!("node {}: connection closed", self.peer)));
+        }
+        self.pending.lock().unwrap().insert(id, pending);
+        // Re-check AFTER the insert: the reader sets `closed` BEFORE its
+        // final drain, so an entry that slipped in after the drain is
+        // caught here, and one that slipped in before it is drained.
+        if self.closed.load(Ordering::Acquire) {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(PushError::new(format!("node {}: connection closed", self.peer)));
+        }
+        let sent = {
+            let mut w = self.writer.lock().unwrap();
+            let written = wire::write_frame(&mut *w, &buf);
+            match written {
+                Ok(()) => w.flush().map_err(anyhow::Error::from),
+                Err(e) => Err(e),
+            }
+        };
+        if let Err(e) = sent {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(PushError::new(format!("node {}: {e:#}", self.peer)));
+        }
+        self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_sent.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Fire a request whose reply resolves ONE future.
+    fn call(&self, req: &Request) -> PFuture {
+        let fut = PFuture::new();
+        if let Err(e) = self.request(req, Pending::One(fut.clone())) {
+            fut.complete(Err(e));
+        }
+        fut
+    }
+
+    /// Blocking call for the synchronous PD surface (create, drain,
+    /// state capture/restore).
+    fn call_wait(&self, req: &Request) -> Result<Value, PushError> {
+        self.call(req).wait()
+    }
+}
+
+impl Drop for TcpNode {
+    fn drop(&mut self) {
+        // Politely tell the server to wind down its NEL, then drop the
+        // connection: shutdown unblocks our reader thread AND the server's
+        // read loop even though both hold socket dups.
+        let _ = self.request(&Request::Shutdown, Pending::One(PFuture::new()));
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+fn reader_loop(
+    stream: TcpStream,
+    pending: Arc<Mutex<HashMap<u64, Pending>>>,
+    closed: Arc<std::sync::atomic::AtomicBool>,
+    counters: Arc<CounterCells>,
+) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let buf = match wire::read_frame(&mut r) {
+            Ok(b) => b,
+            Err(_) => break, // EOF or a framing error: connection is done
+        };
+        counters.frames_received.fetch_add(1, Ordering::Relaxed);
+        counters.bytes_received.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
+        let (id, resp) = match wire::decode_response(&buf) {
+            Ok(x) => x,
+            Err(_) => break,
+        };
+        let entry = pending.lock().unwrap().remove(&id);
+        match (entry, resp) {
+            (Some(Pending::One(fut)), Response::One(res)) => {
+                fut.complete(res.map_err(PushError::new));
+            }
+            (Some(Pending::Many(futs)), Response::Many(results)) => {
+                let n = results.len();
+                for (fut, res) in futs.iter().zip(results) {
+                    fut.complete(res.map_err(PushError::new));
+                }
+                // a short batch (protocol bug) must not strand futures
+                for fut in futs.iter().skip(n) {
+                    fut.complete(Err(PushError::new("short broadcast response")));
+                }
+            }
+            (Some(Pending::Stats(tx)), Response::Stats(stats)) => {
+                let _ = tx.send(Ok(*stats));
+            }
+            (Some(Pending::One(fut)), _) => {
+                fut.complete(Err(PushError::new("mismatched response kind")));
+            }
+            (Some(Pending::Many(futs)), _) => {
+                for fut in futs {
+                    fut.complete(Err(PushError::new("mismatched response kind")));
+                }
+            }
+            (Some(Pending::Stats(tx)), _) => {
+                let _ = tx.send(Err(PushError::new("mismatched response kind")));
+            }
+            (None, _) => {} // response for an abandoned request
+        }
+    }
+    // Connection gone. Flag first, THEN drain: `request` re-checks the
+    // flag after its insert, so every pending entry is either drained
+    // here or rejected there — nothing can wait on an unwatched map.
+    closed.store(true, Ordering::Release);
+    let drained: Vec<Pending> = pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+    for p in drained {
+        let err = PushError::new("node connection closed");
+        match p {
+            Pending::One(fut) => fut.complete(Err(err)),
+            Pending::Many(futs) => {
+                for fut in futs {
+                    fut.complete(Err(err.clone()));
+                }
+            }
+            Pending::Stats(tx) => {
+                let _ = tx.send(Err(err));
+            }
+        }
+    }
+}
+
+impl NodeTransport for TcpNode {
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn create_local(&self, _opts: CreateOpts) -> Result<Pid, PushError> {
+        Err(PushError::new(format!(
+            "node {}: handler closures cannot cross the wire — create remote particles \
+             from a registered handler program (CreateSpec)",
+            self.peer
+        )))
+    }
+
+    fn create_spec(&self, spec: CreateSpec) -> Result<Pid, PushError> {
+        match self.call_wait(&Request::Create(spec))? {
+            Value::Usize(pid) => Ok(Pid(pid as u32)),
+            other => Err(PushError::new(format!("create returned {other:?}"))),
+        }
+    }
+
+    fn send(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture {
+        self.call(&Request::Send { pid, msg: msg.to_string(), args })
+    }
+
+    fn broadcast(&self, pids: &[Pid], msg: &str, args: Vec<Value>) -> Vec<PFuture> {
+        let futs: Vec<PFuture> = pids.iter().map(|_| PFuture::new()).collect();
+        if pids.is_empty() {
+            return futs;
+        }
+        let req = Request::Broadcast {
+            pids: pids.to_vec(),
+            msg: msg.to_string(),
+            args,
+        };
+        if let Err(e) = self.request(&req, Pending::Many(futs.clone())) {
+            for fut in &futs {
+                fut.complete(Err(e.clone()));
+            }
+        }
+        futs
+    }
+
+    fn direct(&self, op: DirectOp) -> PFuture {
+        self.call(&Request::Direct(op))
+    }
+
+    fn drain_params(&self) -> Result<Vec<(Pid, Tensor)>, PushError> {
+        let v = self.call_wait(&Request::DrainParams)?;
+        let items = v.list()?;
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            let mut pair = item.list()?;
+            if pair.len() != 2 {
+                return Err(PushError::new("malformed drain_params pair"));
+            }
+            let t = pair.remove(1).tensor()?;
+            let pid = pair[0].usize()?;
+            out.push((Pid(pid as u32), t));
+        }
+        Ok(out)
+    }
+
+    fn particle_state(&self, pid: Pid) -> Result<Option<Vec<(String, Value)>>, PushError> {
+        match self.call_wait(&Request::ParticleState { pid })? {
+            Value::Unit => Ok(None),
+            Value::List(items) => {
+                let mut entries = Vec::with_capacity(items.len());
+                for item in items {
+                    let mut pair = item.list()?;
+                    if pair.len() != 2 {
+                        return Err(PushError::new("malformed state entry"));
+                    }
+                    let v = pair.remove(1);
+                    let k = match pair.remove(0) {
+                        Value::Str(s) => s,
+                        other => {
+                            return Err(PushError::new(format!("state key {other:?}")))
+                        }
+                    };
+                    entries.push((k, v));
+                }
+                Ok(Some(entries))
+            }
+            other => Err(PushError::new(format!("particle_state returned {other:?}"))),
+        }
+    }
+
+    fn restore_particle_state(
+        &self,
+        pid: Pid,
+        entries: Vec<(String, Value)>,
+    ) -> Result<(), PushError> {
+        self.call_wait(&Request::RestoreState { pid, entries }).map(|_| ())
+    }
+
+    fn stats(&self) -> Result<NelStats, PushError> {
+        let (tx, rx) = mpsc::channel();
+        self.request(&Request::Stats, Pending::Stats(tx))?;
+        rx.recv()
+            .map_err(|_| PushError::new("node connection closed during stats"))?
+    }
+
+    fn counters(&self) -> TransportCounters {
+        self.counters.snapshot()
+    }
+}
+
+// ---- TCP transport: server -----------------------------------------------
+
+/// Bind 127.0.0.1 on an ephemeral port and serve ONE connection on a
+/// background thread (the hermetic loopback-node shape used by tests,
+/// benches, and `push train --transport tcp`). Returns the address to
+/// connect to.
+pub fn spawn_loopback_node(
+    cfg: NelConfig,
+    model: Arc<ModelSpec>,
+) -> Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let handle = std::thread::Builder::new()
+        .name(format!("push-node-{addr}"))
+        .spawn(move || {
+            let _ = serve_one(&listener, cfg, model);
+        })?;
+    Ok((addr, handle))
+}
+
+/// Accept one connection and serve it to completion. The standalone
+/// `push node-worker` subcommand loops over this.
+pub fn serve_one(listener: &TcpListener, cfg: NelConfig, model: Arc<ModelSpec>) -> Result<()> {
+    let (stream, _peer) = listener.accept()?;
+    serve_connection(stream, cfg, model)
+}
+
+/// The per-connection node server: one fresh NEL (this node's scheduler +
+/// devices), a read loop that never blocks on handler completion, and a
+/// writer thread draining completed responses FIFO.
+pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let nel = Nel::new(cfg)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let (tx, rx) = mpsc::channel::<Vec<u8>>();
+    let writer = std::thread::Builder::new()
+        .name("push-node-writer".to_string())
+        .spawn(move || {
+            let mut w = BufWriter::new(stream);
+            while let Ok(buf) = rx.recv() {
+                if wire::write_frame(&mut w, &buf).is_err() || w.flush().is_err() {
+                    // A dead write half must kill the WHOLE connection:
+                    // otherwise the read loop keeps accepting requests
+                    // whose responses can never be delivered, and the
+                    // client's matching futures hang instead of failing
+                    // through its reader's connection-closed drain.
+                    let _ = w.get_ref().shutdown(std::net::Shutdown::Both);
+                    break;
+                }
+            }
+        })?;
+
+    loop {
+        let buf = match wire::read_frame(&mut reader) {
+            Ok(b) => b,
+            Err(_) => break, // client hung up
+        };
+        let (id, req) = match wire::decode_request(&buf) {
+            Ok(x) => x,
+            // Undecodable frame: we cannot even know the req_id, so the
+            // connection is unrecoverable. Drop it.
+            Err(_) => break,
+        };
+        match req {
+            Request::Shutdown => {
+                respond(&tx, id, Response::One(Ok(Value::Unit)));
+                break;
+            }
+            Request::Create(spec) => {
+                let res = create_from_spec(&nel, &model, spec);
+                respond(&tx, id, Response::One(res));
+            }
+            Request::Send { pid, msg, args } => {
+                complete_async(&tx, id, nel.send(None, pid, &msg, args));
+            }
+            Request::Broadcast { pids, msg, args } => {
+                let futs = nel.broadcast(None, &pids, &msg, args);
+                respond_batch(&tx, id, &futs);
+            }
+            Request::Direct(op) => {
+                complete_async(&tx, id, dispatch_direct(&nel, op));
+            }
+            Request::DrainParams => {
+                let res = nel.drain_params().map(|params| {
+                    Value::List(
+                        params
+                            .into_iter()
+                            .map(|(pid, t)| {
+                                Value::List(vec![
+                                    Value::Usize(pid.0 as usize),
+                                    Value::Tensor(t),
+                                ])
+                            })
+                            .collect(),
+                    )
+                });
+                respond(&tx, id, Response::One(res.map_err(|e| e.msg)));
+            }
+            Request::ParticleState { pid } => {
+                let res = match nel.particle_state(pid) {
+                    None => Value::Unit,
+                    Some(entries) => Value::List(
+                        entries
+                            .into_iter()
+                            .map(|(k, v)| Value::List(vec![Value::Str(k), v]))
+                            .collect(),
+                    ),
+                };
+                respond(&tx, id, Response::One(Ok(res)));
+            }
+            Request::RestoreState { pid, entries } => {
+                let res = nel
+                    .restore_particle_state(pid, entries)
+                    .map(|_| Value::Unit)
+                    .map_err(|e| e.msg);
+                respond(&tx, id, Response::One(res));
+            }
+            Request::Stats => {
+                let msg = Response::Stats(Box::new(nel.stats()));
+                respond_raw(&tx, id, &msg);
+            }
+        }
+    }
+    drop(tx); // writer drains queued responses, then exits
+    drop(nel); // fail any undelivered envelopes, wind the node down
+    let _ = writer.join();
+    Ok(())
+}
+
+/// The model handshake: the client's fabric stamps every CreateSpec with
+/// the model name it is training; a node serving a different model (a
+/// mis-pointed `push node-worker`) must reject at creation, not surface
+/// as a shape error deep inside the NEL.
+fn check_model(spec: &CreateSpec, model: &ModelSpec) -> Result<(), PushError> {
+    if spec.model != model.name {
+        return Err(PushError::new(format!(
+            "model mismatch: client is training {:?} but this node serves {:?}",
+            spec.model, model.name
+        )));
+    }
+    Ok(())
+}
+
+fn create_from_spec(
+    nel: &Nel,
+    model: &Arc<ModelSpec>,
+    spec: CreateSpec,
+) -> Result<Value, String> {
+    check_model(&spec, model).map_err(|e| e.msg)?;
+    let receive = match &spec.program {
+        Some((name, cfg)) => {
+            programs::build_handlers(name, cfg, model).map_err(|e| e.msg)?
+        }
+        None => HandlerTable::new(),
+    };
+    let pid = nel
+        .p_create(
+            model.clone(),
+            CreateOpts {
+                pid: Some(spec.pid),
+                device: spec.device,
+                receive,
+                state: spec.state,
+                no_params: spec.no_params,
+                init_params: spec.init_params,
+            },
+        )
+        .map_err(|e| format!("{e:#}"))?;
+    Ok(Value::Usize(pid.0 as usize))
+}
+
+fn respond(tx: &mpsc::Sender<Vec<u8>>, id: u64, resp: Response) {
+    respond_raw(tx, id, &resp);
+}
+
+fn respond_raw(tx: &mpsc::Sender<Vec<u8>>, id: u64, resp: &Response) {
+    // An unencodable response (e.g. a Value nested past MAX_DEPTH) must
+    // still answer the request — as an error — or the client's future for
+    // this req_id would wait until the connection dies.
+    let buf = wire::encode_response(id, resp).or_else(|e| {
+        wire::encode_response(
+            id,
+            &Response::One(Err(format!("node: response encoding failed: {e:#}"))),
+        )
+    });
+    if let Ok(buf) = buf {
+        let _ = tx.send(buf);
+    }
+}
+
+/// Answer `id` with `fut`'s result once it resolves — from the
+/// completer's thread, never blocking the read loop.
+fn complete_async(tx: &mpsc::Sender<Vec<u8>>, id: u64, fut: PFuture) {
+    let tx = tx.clone();
+    fut.on_ready(move |r| {
+        let res = r.clone().map_err(|e| e.msg);
+        respond_raw(&tx, id, &Response::One(res));
+    });
+}
+
+/// Aggregate a broadcast's futures into ONE `Response::Many` preserving
+/// per-position results (errors included), sent when the last future
+/// resolves. This is join_all's countdown shape, but keeping EVERY
+/// result instead of collapsing to the first error — the collapse
+/// happens client-side so cross-node batches and in-process batches
+/// agree on error ordering.
+type BatchSlots = Arc<Mutex<Vec<Option<Result<Value, String>>>>>;
+
+fn respond_batch(tx: &mpsc::Sender<Vec<u8>>, id: u64, futs: &[PFuture]) {
+    let n = futs.len();
+    if n == 0 {
+        respond(tx, id, Response::Many(Vec::new()));
+        return;
+    }
+    let slots: BatchSlots = Arc::new(Mutex::new(vec![None; n]));
+    let remaining = Arc::new(AtomicUsize::new(n));
+    for (i, fut) in futs.iter().enumerate() {
+        let slots = slots.clone();
+        let remaining = remaining.clone();
+        let tx = tx.clone();
+        fut.on_ready(move |r| {
+            slots.lock().unwrap()[i] = Some(r.clone().map_err(|e| e.msg));
+            if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let resolved = std::mem::take(&mut *slots.lock().unwrap());
+                let results: Vec<Result<Value, String>> =
+                    resolved.into_iter().map(|s| s.expect("all resolved")).collect();
+                respond_raw(&tx, id, &Response::Many(results));
+            }
+        });
+    }
+}
+
+// ---- loopback convenience -------------------------------------------------
+
+/// Spawn a loopback node server and connect to it: the one-call way to
+/// stand up a real-socket node inside this process.
+pub fn loopback_node(cfg: NelConfig, model: Arc<ModelSpec>) -> Result<TcpNode> {
+    let (addr, _handle) = spawn_loopback_node(cfg, model)?;
+    TcpNode::connect(addr).map_err(|e| anyhow!("connecting to loopback node {addr}: {e:#}"))
+}

@@ -1,0 +1,1040 @@
+//! The PD seam's wire representation, shared by checkpointing and the
+//! node transports (DESIGN.md §Distributed NEL).
+//!
+//! Three layers, all hand-rolled (no serde in the vendored crate set) and
+//! round-trip/property tested:
+//!
+//! * **Value codec** — the tagged recursive encoding of [`Value`]
+//!   (tag u8: 0 Unit; 1 Bool; 2 F32; 3 Usize(u64); 4 Str; 5 Tensor
+//!   (dtype u8, rank u32, dims u64, raw 4-byte elements); 6 List).
+//!   Extracted from `pd::checkpoint` v2 byte-for-byte, so checkpoint
+//!   files and transport frames speak the same dialect and the v1/v2
+//!   compatibility tests pin both at once.
+//! * **Frames** — length-prefixed (`len u32 | payload`), bounded by
+//!   [`MAX_FRAME`]; a truncated or oversized frame is a clean decode
+//!   error, never a multi-GB allocation.
+//! * **Messages** — versioned request/response payloads
+//!   (`version u8 | kind u8 | req_id u64 | body`) covering every
+//!   operation the PD API moves across the seam: particle creation from
+//!   a serializable [`CreateSpec`], sends, batched broadcasts (ONE frame
+//!   per destination node regardless of fan-out), the handler-less
+//!   direct ops, parameter drains, particle-state capture/restore, and
+//!   stats.
+//!
+//! Tensor payloads are decoded into freshly owned buffers (the wire is a
+//! copy by nature); on the in-process path the transport never touches
+//! this module — `Value`s move as zero-copy Arc clones through the
+//! existing parameter plane.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::DeviceStats;
+use crate::nel::{NelStats, SchedStats};
+use crate::particle::{Pid, Value};
+use crate::runtime::{DType, Tensor, TensorData};
+
+/// Wire protocol version of the request/response framing. Bumped when the
+/// message layout changes; the Value codec itself is versioned by the
+/// checkpoint header (v1/v2) and must stay stable.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Deepest `Value::List` nesting the codec accepts (defensive bound; real
+/// state is depth <= 2: a list of tensors).
+pub const MAX_DEPTH: usize = 32;
+
+/// Max elements per decoded tensor (1 GiB of f32): a corrupt length field
+/// must produce a clean error, not a multi-GB allocation or an overflowed
+/// shape product.
+pub const MAX_ELEMS: u64 = 1 << 28;
+
+/// Max frame payload (2 GiB): bounds the single allocation a frame header
+/// can demand before any of its content is validated.
+pub const MAX_FRAME: usize = 1 << 31;
+
+// ---- primitive readers/writers ------------------------------------------
+
+pub fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    w.write_all(&(b.len() as u32).to_le_bytes())?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 20 {
+        bail!("implausible string length {len}");
+    }
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).context("wire string not utf-8")
+}
+
+// ---- Value codec (byte-identical to the checkpoint v2 encoding) ---------
+
+pub fn write_value(w: &mut impl Write, v: &Value, depth: usize) -> Result<()> {
+    if depth > MAX_DEPTH {
+        bail!("value nesting exceeds {MAX_DEPTH}");
+    }
+    match v {
+        Value::Unit => w.write_all(&[0u8])?,
+        Value::Bool(b) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&[*b as u8])?;
+        }
+        Value::F32(f) => {
+            w.write_all(&[2u8])?;
+            w.write_all(&f.to_le_bytes())?;
+        }
+        Value::Usize(n) => {
+            w.write_all(&[3u8])?;
+            w.write_all(&(*n as u64).to_le_bytes())?;
+        }
+        Value::Str(s) => {
+            w.write_all(&[4u8])?;
+            write_str(w, s)?;
+        }
+        Value::Tensor(t) => {
+            w.write_all(&[5u8])?;
+            let tag = match t.dtype() {
+                DType::F32 => 0u8,
+                DType::I32 => 1u8,
+                DType::U32 => 2u8,
+            };
+            w.write_all(&[tag])?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for d in &t.shape {
+                w.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            match t.dtype() {
+                DType::F32 => {
+                    for v in t.as_f32() {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                DType::I32 => {
+                    for v in t.as_i32() {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                DType::U32 => {
+                    for v in t.as_u32() {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Value::List(vs) => {
+            w.write_all(&[6u8])?;
+            w.write_all(&(vs.len() as u32).to_le_bytes())?;
+            for v in vs {
+                write_value(w, v, depth + 1)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn read_value(r: &mut impl Read, depth: usize) -> Result<Value> {
+    if depth > MAX_DEPTH {
+        bail!("value nesting exceeds {MAX_DEPTH}");
+    }
+    let tag = read_u8(r)?;
+    Ok(match tag {
+        0 => Value::Unit,
+        1 => Value::Bool(read_u8(r)? != 0),
+        2 => {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            Value::F32(f32::from_le_bytes(b))
+        }
+        3 => Value::Usize(read_u64(r)? as usize),
+        4 => Value::Str(read_str(r)?),
+        5 => {
+            let dt = read_u8(r)?;
+            let rank = read_u32(r)? as usize;
+            if rank > 32 {
+                bail!("implausible tensor rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            let mut elems: u64 = 1;
+            for _ in 0..rank {
+                let dim = read_u64(r)?;
+                elems = elems.saturating_mul(dim.max(1));
+                if dim > MAX_ELEMS || elems > MAX_ELEMS {
+                    bail!("implausible tensor shape (dim {dim}, {elems}+ elements)");
+                }
+                shape.push(dim as usize);
+            }
+            let n: usize = shape.iter().product();
+            let data = match dt {
+                0 => TensorData::f32(read_f32s(r, n)?),
+                1 => {
+                    let mut bytes = vec![0u8; n * 4];
+                    r.read_exact(&mut bytes)?;
+                    TensorData::i32(
+                        bytes
+                            .chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                2 => {
+                    let mut bytes = vec![0u8; n * 4];
+                    r.read_exact(&mut bytes)?;
+                    TensorData::u32(
+                        bytes
+                            .chunks_exact(4)
+                            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                other => bail!("unknown tensor dtype tag {other}"),
+            };
+            Value::Tensor(Tensor::new(shape, data))
+        }
+        6 => {
+            let len = read_u32(r)? as usize;
+            if len > 1 << 24 {
+                bail!("implausible list length {len}");
+            }
+            let mut vs = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                vs.push(read_value(r, depth + 1)?);
+            }
+            Value::List(vs)
+        }
+        other => bail!("unknown value tag {other}"),
+    })
+}
+
+fn write_values(w: &mut impl Write, vs: &[Value]) -> Result<()> {
+    w.write_all(&(vs.len() as u32).to_le_bytes())?;
+    for v in vs {
+        write_value(w, v, 0)?;
+    }
+    Ok(())
+}
+
+fn read_values(r: &mut impl Read) -> Result<Vec<Value>> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 24 {
+        bail!("implausible value count {n}");
+    }
+    let mut vs = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        vs.push(read_value(r, 0)?);
+    }
+    Ok(vs)
+}
+
+fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    write_value(w, &Value::Tensor(t.clone()), 0)
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
+    match read_value(r, 0)? {
+        Value::Tensor(t) => Ok(t),
+        other => bail!("expected tensor on the wire, got {other:?}"),
+    }
+}
+
+fn write_entries(w: &mut impl Write, entries: &[(String, Value)]) -> Result<()> {
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (k, v) in entries {
+        write_str(w, k)?;
+        write_value(w, v, 0)?;
+    }
+    Ok(())
+}
+
+fn read_entries(r: &mut impl Read) -> Result<Vec<(String, Value)>> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 16 {
+        bail!("implausible entry count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = read_str(r)?;
+        let v = read_value(r, 0)?;
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+// ---- frames --------------------------------------------------------------
+
+/// Write one length-prefixed frame. The caller flushes.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame of {} bytes exceeds MAX_FRAME", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. Oversized lengths error before any
+/// payload allocation; a short read (truncated frame) errors cleanly.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let len = read_u32(r)? as usize;
+    if len > MAX_FRAME {
+        bail!("frame header claims {len} bytes (> MAX_FRAME)");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("truncated frame")?;
+    Ok(buf)
+}
+
+// ---- messages ------------------------------------------------------------
+
+/// Everything needed to create a particle on a remote node. Handlers are
+/// NOT closures here: `program` names a node-locally registered handler
+/// program (see `pd::programs`) plus its serializable config — the
+/// ZhuSuan/Edward2 lesson that algorithms must stay transport-oblivious
+/// while the runtime owns distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CreateSpec {
+    /// Fabric-assigned GLOBAL pid — the node registers the particle under
+    /// exactly this id, so pids (and every (seed, pid, step) random
+    /// stream) are identical no matter how particles are placed.
+    pub pid: Pid,
+    /// Pin to a device on the owning node; default round-robin by pid.
+    pub device: Option<usize>,
+    /// Handler program name + config; None registers no handlers (the
+    /// particle only answers direct ops).
+    pub program: Option<(String, Value)>,
+    pub state: Vec<(String, Value)>,
+    pub no_params: bool,
+    pub init_params: Option<Tensor>,
+    /// Model the client believes this node serves. The node rejects a
+    /// mismatch: a standalone `push node-worker` loads its OWN manifest,
+    /// and training a different model against it must fail loudly at
+    /// creation, not as a shape error deep inside the NEL.
+    pub model: String,
+}
+
+/// Handler-less particle operations (the PD's direct API).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DirectOp {
+    Step { pid: Pid, x: Tensor, y: Tensor, lr: f32 },
+    AdamStep { pid: Pid, x: Tensor, y: Tensor, lr: f32 },
+    Forward { pid: Pid, x: Tensor },
+    Grad { pid: Pid, x: Tensor, y: Tensor },
+    Get { pid: Pid },
+    Set { pid: Pid, t: Tensor },
+}
+
+impl DirectOp {
+    pub fn pid(&self) -> Pid {
+        match self {
+            DirectOp::Step { pid, .. }
+            | DirectOp::AdamStep { pid, .. }
+            | DirectOp::Forward { pid, .. }
+            | DirectOp::Grad { pid, .. }
+            | DirectOp::Get { pid }
+            | DirectOp::Set { pid, .. } => *pid,
+        }
+    }
+}
+
+/// One client->server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Create(CreateSpec),
+    Send { pid: Pid, msg: String, args: Vec<Value> },
+    /// Batched fan-out: ONE frame for the whole pid set; the response is
+    /// one `Response::Many` with a result per pid in input order.
+    Broadcast { pids: Vec<Pid>, msg: String, args: Vec<Value> },
+    Direct(DirectOp),
+    DrainParams,
+    ParticleState { pid: Pid },
+    RestoreState { pid: Pid, entries: Vec<(String, Value)> },
+    Stats,
+    Shutdown,
+}
+
+/// One server->client message, tagged with the request id it answers.
+#[derive(Debug, Clone)]
+pub enum Response {
+    One(Result<Value, String>),
+    /// Per-position results of a broadcast; individual positions may fail
+    /// without failing the batch (join_all's first-error-by-position
+    /// semantics are applied client-side, exactly as in-process).
+    Many(Vec<Result<Value, String>>),
+    Stats(Box<NelStats>),
+}
+
+const K_CREATE: u8 = 1;
+const K_SEND: u8 = 2;
+const K_BROADCAST: u8 = 3;
+const K_DIRECT: u8 = 4;
+const K_DRAIN: u8 = 5;
+const K_STATE: u8 = 6;
+const K_RESTORE: u8 = 7;
+const K_STATS: u8 = 8;
+const K_SHUTDOWN: u8 = 9;
+
+const R_ONE: u8 = 1;
+const R_MANY: u8 = 2;
+const R_STATS: u8 = 3;
+
+fn write_opt_tensor(w: &mut impl Write, t: &Option<Tensor>) -> Result<()> {
+    match t {
+        None => w.write_all(&[0u8])?,
+        Some(t) => {
+            w.write_all(&[1u8])?;
+            write_tensor(w, t)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_opt_tensor(r: &mut impl Read) -> Result<Option<Tensor>> {
+    Ok(match read_u8(r)? {
+        0 => None,
+        _ => Some(read_tensor(r)?),
+    })
+}
+
+pub fn encode_request(req_id: u64, req: &Request) -> Result<Vec<u8>> {
+    let mut w = Vec::new();
+    w.write_all(&[WIRE_VERSION])?;
+    let kind = match req {
+        Request::Create(_) => K_CREATE,
+        Request::Send { .. } => K_SEND,
+        Request::Broadcast { .. } => K_BROADCAST,
+        Request::Direct(_) => K_DIRECT,
+        Request::DrainParams => K_DRAIN,
+        Request::ParticleState { .. } => K_STATE,
+        Request::RestoreState { .. } => K_RESTORE,
+        Request::Stats => K_STATS,
+        Request::Shutdown => K_SHUTDOWN,
+    };
+    w.write_all(&[kind])?;
+    w.write_all(&req_id.to_le_bytes())?;
+    match req {
+        Request::Create(spec) => {
+            w.write_all(&spec.pid.0.to_le_bytes())?;
+            match spec.device {
+                None => w.write_all(&[0u8])?,
+                Some(d) => {
+                    w.write_all(&[1u8])?;
+                    w.write_all(&(d as u64).to_le_bytes())?;
+                }
+            }
+            match &spec.program {
+                None => w.write_all(&[0u8])?,
+                Some((name, cfg)) => {
+                    w.write_all(&[1u8])?;
+                    write_str(&mut w, name)?;
+                    write_value(&mut w, cfg, 0)?;
+                }
+            }
+            write_entries(&mut w, &spec.state)?;
+            w.write_all(&[spec.no_params as u8])?;
+            write_opt_tensor(&mut w, &spec.init_params)?;
+            write_str(&mut w, &spec.model)?;
+        }
+        Request::Send { pid, msg, args } => {
+            w.write_all(&pid.0.to_le_bytes())?;
+            write_str(&mut w, msg)?;
+            write_values(&mut w, args)?;
+        }
+        Request::Broadcast { pids, msg, args } => {
+            w.write_all(&(pids.len() as u32).to_le_bytes())?;
+            for p in pids {
+                w.write_all(&p.0.to_le_bytes())?;
+            }
+            write_str(&mut w, msg)?;
+            write_values(&mut w, args)?;
+        }
+        Request::Direct(op) => {
+            let (tag, pid) = match op {
+                DirectOp::Step { pid, .. } => (1u8, pid),
+                DirectOp::AdamStep { pid, .. } => (2u8, pid),
+                DirectOp::Forward { pid, .. } => (3u8, pid),
+                DirectOp::Grad { pid, .. } => (4u8, pid),
+                DirectOp::Get { pid } => (5u8, pid),
+                DirectOp::Set { pid, .. } => (6u8, pid),
+            };
+            w.write_all(&[tag])?;
+            w.write_all(&pid.0.to_le_bytes())?;
+            match op {
+                DirectOp::Step { x, y, lr, .. } | DirectOp::AdamStep { x, y, lr, .. } => {
+                    w.write_all(&lr.to_le_bytes())?;
+                    write_tensor(&mut w, x)?;
+                    write_tensor(&mut w, y)?;
+                }
+                DirectOp::Forward { x, .. } => write_tensor(&mut w, x)?,
+                DirectOp::Grad { x, y, .. } => {
+                    write_tensor(&mut w, x)?;
+                    write_tensor(&mut w, y)?;
+                }
+                DirectOp::Get { .. } => {}
+                DirectOp::Set { t, .. } => write_tensor(&mut w, t)?,
+            }
+        }
+        Request::DrainParams | Request::Stats | Request::Shutdown => {}
+        Request::ParticleState { pid } => w.write_all(&pid.0.to_le_bytes())?,
+        Request::RestoreState { pid, entries } => {
+            w.write_all(&pid.0.to_le_bytes())?;
+            write_entries(&mut w, entries)?;
+        }
+    }
+    Ok(w)
+}
+
+pub fn decode_request(buf: &[u8]) -> Result<(u64, Request)> {
+    let mut r = buf;
+    let version = read_u8(&mut r)?;
+    if version != WIRE_VERSION {
+        bail!("unsupported wire version {version} (have {WIRE_VERSION})");
+    }
+    let kind = read_u8(&mut r)?;
+    let req_id = read_u64(&mut r)?;
+    let req = match kind {
+        K_CREATE => {
+            let pid = Pid(read_u32(&mut r)?);
+            let device = match read_u8(&mut r)? {
+                0 => None,
+                _ => Some(read_u64(&mut r)? as usize),
+            };
+            let program = match read_u8(&mut r)? {
+                0 => None,
+                _ => {
+                    let name = read_str(&mut r)?;
+                    let cfg = read_value(&mut r, 0)?;
+                    Some((name, cfg))
+                }
+            };
+            let state = read_entries(&mut r)?;
+            let no_params = read_u8(&mut r)? != 0;
+            let init_params = read_opt_tensor(&mut r)?;
+            let model = read_str(&mut r)?;
+            Request::Create(CreateSpec {
+                pid,
+                device,
+                program,
+                state,
+                no_params,
+                init_params,
+                model,
+            })
+        }
+        K_SEND => {
+            let pid = Pid(read_u32(&mut r)?);
+            let msg = read_str(&mut r)?;
+            let args = read_values(&mut r)?;
+            Request::Send { pid, msg, args }
+        }
+        K_BROADCAST => {
+            let n = read_u32(&mut r)? as usize;
+            if n > 1 << 24 {
+                bail!("implausible broadcast fan-out {n}");
+            }
+            let mut pids = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                pids.push(Pid(read_u32(&mut r)?));
+            }
+            let msg = read_str(&mut r)?;
+            let args = read_values(&mut r)?;
+            Request::Broadcast { pids, msg, args }
+        }
+        K_DIRECT => {
+            let tag = read_u8(&mut r)?;
+            let pid = Pid(read_u32(&mut r)?);
+            let op = match tag {
+                1 | 2 => {
+                    let mut lrb = [0u8; 4];
+                    r.read_exact(&mut lrb)?;
+                    let lr = f32::from_le_bytes(lrb);
+                    let x = read_tensor(&mut r)?;
+                    let y = read_tensor(&mut r)?;
+                    if tag == 1 {
+                        DirectOp::Step { pid, x, y, lr }
+                    } else {
+                        DirectOp::AdamStep { pid, x, y, lr }
+                    }
+                }
+                3 => DirectOp::Forward { pid, x: read_tensor(&mut r)? },
+                4 => {
+                    let x = read_tensor(&mut r)?;
+                    let y = read_tensor(&mut r)?;
+                    DirectOp::Grad { pid, x, y }
+                }
+                5 => DirectOp::Get { pid },
+                6 => DirectOp::Set { pid, t: read_tensor(&mut r)? },
+                other => bail!("unknown direct-op tag {other}"),
+            };
+            Request::Direct(op)
+        }
+        K_DRAIN => Request::DrainParams,
+        K_STATE => Request::ParticleState { pid: Pid(read_u32(&mut r)?) },
+        K_RESTORE => {
+            let pid = Pid(read_u32(&mut r)?);
+            let entries = read_entries(&mut r)?;
+            Request::RestoreState { pid, entries }
+        }
+        K_STATS => Request::Stats,
+        K_SHUTDOWN => Request::Shutdown,
+        other => bail!("unknown request kind {other}"),
+    };
+    Ok((req_id, req))
+}
+
+fn write_result(w: &mut impl Write, res: &Result<Value, String>) -> Result<()> {
+    match res {
+        Ok(v) => {
+            w.write_all(&[0u8])?;
+            write_value(w, v, 0)?;
+        }
+        Err(e) => {
+            w.write_all(&[1u8])?;
+            write_str(w, e)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_result(r: &mut impl Read) -> Result<Result<Value, String>> {
+    Ok(match read_u8(r)? {
+        0 => Ok(read_value(r, 0)?),
+        _ => Err(read_str(r)?),
+    })
+}
+
+pub fn encode_response(req_id: u64, resp: &Response) -> Result<Vec<u8>> {
+    let mut w = Vec::new();
+    w.write_all(&[WIRE_VERSION])?;
+    let kind = match resp {
+        Response::One(_) => R_ONE,
+        Response::Many(_) => R_MANY,
+        Response::Stats(_) => R_STATS,
+    };
+    w.write_all(&[kind])?;
+    w.write_all(&req_id.to_le_bytes())?;
+    match resp {
+        Response::One(res) => write_result(&mut w, res)?,
+        Response::Many(results) => {
+            w.write_all(&(results.len() as u32).to_le_bytes())?;
+            for res in results {
+                write_result(&mut w, res)?;
+            }
+        }
+        Response::Stats(stats) => write_nel_stats(&mut w, stats)?,
+    }
+    Ok(w)
+}
+
+pub fn decode_response(buf: &[u8]) -> Result<(u64, Response)> {
+    let mut r = buf;
+    let version = read_u8(&mut r)?;
+    if version != WIRE_VERSION {
+        bail!("unsupported wire version {version} (have {WIRE_VERSION})");
+    }
+    let kind = read_u8(&mut r)?;
+    let req_id = read_u64(&mut r)?;
+    let resp = match kind {
+        R_ONE => Response::One(read_result(&mut r)?),
+        R_MANY => {
+            let n = read_u32(&mut r)? as usize;
+            if n > 1 << 24 {
+                bail!("implausible response batch {n}");
+            }
+            let mut results = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                results.push(read_result(&mut r)?);
+            }
+            Response::Many(results)
+        }
+        R_STATS => Response::Stats(Box::new(read_nel_stats(&mut r)?)),
+        other => bail!("unknown response kind {other}"),
+    };
+    Ok((req_id, resp))
+}
+
+// ---- NelStats codec (exact: u64/f64 fields, no Value round-off) ----------
+
+fn write_nel_stats(w: &mut impl Write, s: &NelStats) -> Result<()> {
+    for v in [s.msgs_sent, s.msgs_cross_device, s.msg_payload_bytes, s.handler_errors] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    let sc = &s.sched;
+    for v in [
+        sc.pool_target as u64,
+        sc.max_workers as u64,
+        sc.workers_live as u64,
+        sc.workers_blocked as u64,
+        sc.workers_peak as u64,
+        sc.spawns,
+        sc.retires,
+        sc.compensations,
+        sc.handler_runs,
+        sc.turns,
+        sc.steals,
+        sc.priority_turns,
+        sc.helps,
+    ] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.write_all(&(s.devices.len() as u32).to_le_bytes())?;
+    for d in &s.devices {
+        for v in [
+            d.jobs,
+            d.cache_hits,
+            d.cache_misses,
+            d.swaps_in,
+            d.swaps_out,
+            d.swap_bytes,
+            d.views,
+            d.view_bytes,
+            d.transfers,
+            d.transfer_bytes,
+            d.client.compiles,
+            d.client.executions,
+        ] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for v in [
+            d.busy_secs,
+            d.modeled_swap_secs,
+            d.modeled_transfer_secs,
+            d.client.compile_secs,
+            d.client.execute_secs,
+        ] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_nel_stats(r: &mut impl Read) -> Result<NelStats> {
+    let msgs_sent = read_u64(r)?;
+    let msgs_cross_device = read_u64(r)?;
+    let msg_payload_bytes = read_u64(r)?;
+    let handler_errors = read_u64(r)?;
+    let sched = SchedStats {
+        pool_target: read_u64(r)? as usize,
+        max_workers: read_u64(r)? as usize,
+        workers_live: read_u64(r)? as usize,
+        workers_blocked: read_u64(r)? as usize,
+        workers_peak: read_u64(r)? as usize,
+        spawns: read_u64(r)?,
+        retires: read_u64(r)?,
+        compensations: read_u64(r)?,
+        handler_runs: read_u64(r)?,
+        turns: read_u64(r)?,
+        steals: read_u64(r)?,
+        priority_turns: read_u64(r)?,
+        helps: read_u64(r)?,
+    };
+    let n_dev = read_u32(r)? as usize;
+    if n_dev > 1 << 16 {
+        bail!("implausible device count {n_dev}");
+    }
+    let mut devices = Vec::with_capacity(n_dev);
+    for _ in 0..n_dev {
+        let mut d = DeviceStats {
+            jobs: read_u64(r)?,
+            cache_hits: read_u64(r)?,
+            cache_misses: read_u64(r)?,
+            swaps_in: read_u64(r)?,
+            swaps_out: read_u64(r)?,
+            swap_bytes: read_u64(r)?,
+            views: read_u64(r)?,
+            view_bytes: read_u64(r)?,
+            transfers: read_u64(r)?,
+            transfer_bytes: read_u64(r)?,
+            ..DeviceStats::default()
+        };
+        d.client.compiles = read_u64(r)?;
+        d.client.executions = read_u64(r)?;
+        d.busy_secs = read_f64(r)?;
+        d.modeled_swap_secs = read_f64(r)?;
+        d.modeled_transfer_secs = read_f64(r)?;
+        d.client.compile_secs = read_f64(r)?;
+        d.client.execute_secs = read_f64(r)?;
+        devices.push(d);
+    }
+    Ok(NelStats {
+        msgs_sent,
+        msgs_cross_device,
+        msg_payload_bytes,
+        handler_errors,
+        sched,
+        devices,
+    })
+}
+
+// ---- test/bench support ---------------------------------------------------
+
+/// Seeded generator of arbitrary nested `Value`s (no proptest in the
+/// vendored crate set). Used by the codec property tests and the wire
+/// throughput micro-bench.
+pub fn arbitrary_value(rng: &mut crate::util::rng::Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.below(6) } else { rng.below(7) } {
+        0 => Value::Unit,
+        1 => Value::Bool(rng.below(2) == 0),
+        2 => Value::F32(rng.normal() * 100.0),
+        3 => Value::Usize(rng.below(1 << 20)),
+        4 => {
+            let n = rng.below(12);
+            Value::Str((0..n).map(|_| (rng.below(94) as u8 + 33) as char).collect())
+        }
+        5 => {
+            let n = 1 + rng.below(16);
+            match rng.below(3) {
+                0 => Value::Tensor(Tensor::f32(vec![n], rng.normal_vec(n))),
+                1 => Value::Tensor(Tensor::i32(
+                    vec![n],
+                    (0..n).map(|_| rng.next_u32() as i32).collect(),
+                )),
+                _ => Value::Tensor(Tensor::u32(
+                    vec![n],
+                    (0..n).map(|_| rng.next_u32()).collect(),
+                )),
+            }
+        }
+        _ => {
+            let n = rng.below(5);
+            Value::List((0..n).map(|_| arbitrary_value(rng, depth - 1)).collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip_value(v: &Value) -> Value {
+        let mut buf = Vec::new();
+        write_value(&mut buf, v, 0).unwrap();
+        let got = read_value(&mut buf.as_slice(), 0).unwrap();
+        // every byte must be consumed
+        assert_eq!(
+            {
+                let mut r = buf.as_slice();
+                let _ = read_value(&mut r, 0).unwrap();
+                r.len()
+            },
+            0,
+            "trailing bytes after decode"
+        );
+        got
+    }
+
+    #[test]
+    fn prop_value_codec_roundtrip() {
+        for seed in 0..120u64 {
+            let mut rng = Rng::new(seed ^ 0x31e3);
+            let v = arbitrary_value(&mut rng, 3);
+            assert_eq!(roundtrip_value(&v), v, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn prop_truncated_values_rejected() {
+        for seed in 0..120u64 {
+            let mut rng = Rng::new(seed ^ 0x7a11);
+            let v = arbitrary_value(&mut rng, 3);
+            let mut buf = Vec::new();
+            write_value(&mut buf, &v, 0).unwrap();
+            if buf.len() <= 1 {
+                continue; // Unit: 1 byte, nothing to truncate meaningfully
+            }
+            let cut = 1 + rng.below(buf.len() - 1);
+            let truncated = &buf[..cut];
+            let mut r = truncated;
+            // decoding may legitimately succeed on a PREFIX value only if
+            // the remainder would then be trailing garbage — for a single
+            // value write, any strict prefix must fail to decode fully.
+            if let Ok(prefix) = read_value(&mut r, 0) {
+                assert!(
+                    !r.is_empty() || prefix != v,
+                    "seed {seed}: truncation to {cut}/{} bytes went unnoticed",
+                    buf.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_bounds() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let got = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, b"hello");
+
+        // truncated payload
+        let mut short = buf.clone();
+        short.truncate(buf.len() - 2);
+        let err = read_frame(&mut short.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+        // oversized header must error before allocating
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_frame(&mut huge.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("MAX_FRAME"), "{err:#}");
+    }
+
+    #[test]
+    fn request_roundtrip_all_kinds() {
+        let spec = CreateSpec {
+            pid: Pid(7),
+            device: Some(1),
+            program: Some(("sgmcmc".to_string(), Value::Usize(3))),
+            state: vec![("k".to_string(), Value::F32(1.5))],
+            no_params: false,
+            init_params: Some(Tensor::f32(vec![2], vec![0.5, -0.5])),
+            model: "mlp_tiny".to_string(),
+        };
+        let reqs = vec![
+            Request::Create(spec),
+            Request::Send {
+                pid: Pid(3),
+                msg: "STEP".to_string(),
+                args: vec![Value::Unit, Value::Tensor(Tensor::scalar_f32(2.0))],
+            },
+            Request::Broadcast {
+                pids: vec![Pid(1), Pid(4), Pid(2)],
+                msg: "MCMC_STEP".to_string(),
+                args: vec![Value::Bool(true)],
+            },
+            Request::Direct(DirectOp::Step {
+                pid: Pid(0),
+                x: Tensor::f32(vec![2], vec![1.0, 2.0]),
+                y: Tensor::f32(vec![1], vec![3.0]),
+                lr: 1e-2,
+            }),
+            Request::Direct(DirectOp::AdamStep {
+                pid: Pid(1),
+                x: Tensor::scalar_f32(0.0),
+                y: Tensor::scalar_f32(1.0),
+                lr: 1e-3,
+            }),
+            Request::Direct(DirectOp::Forward { pid: Pid(2), x: Tensor::scalar_f32(4.0) }),
+            Request::Direct(DirectOp::Grad {
+                pid: Pid(3),
+                x: Tensor::scalar_f32(4.0),
+                y: Tensor::scalar_f32(5.0),
+            }),
+            Request::Direct(DirectOp::Get { pid: Pid(4) }),
+            Request::Direct(DirectOp::Set { pid: Pid(5), t: Tensor::zeros(vec![3]) }),
+            Request::DrainParams,
+            Request::ParticleState { pid: Pid(9) },
+            Request::RestoreState {
+                pid: Pid(9),
+                entries: vec![("t".to_string(), Value::Usize(11))],
+            },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for (i, req) in reqs.into_iter().enumerate() {
+            let buf = encode_request(i as u64, &req).unwrap();
+            let (id, back) = decode_request(&buf).unwrap();
+            assert_eq!(id, i as u64);
+            assert_eq!(back, req, "request kind {i}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_and_error_positions() {
+        let resp = Response::Many(vec![
+            Ok(Value::Usize(1)),
+            Err("boom at 1".to_string()),
+            Ok(Value::Unit),
+            Err("boom at 3".to_string()),
+        ]);
+        let buf = encode_response(42, &resp).unwrap();
+        let (id, back) = decode_response(&buf).unwrap();
+        assert_eq!(id, 42);
+        let Response::Many(results) = back else { panic!("expected Many") };
+        assert_eq!(results.len(), 4);
+        assert_eq!(results[0], Ok(Value::Usize(1)));
+        assert_eq!(results[1], Err("boom at 1".to_string()));
+        assert_eq!(results[3], Err("boom at 3".to_string()));
+    }
+
+    #[test]
+    fn stats_roundtrip_exact() {
+        let mut s = NelStats {
+            msgs_sent: 10,
+            msgs_cross_device: 3,
+            msg_payload_bytes: 1 << 33,
+            handler_errors: 1,
+            ..NelStats::default()
+        };
+        s.sched.pool_target = 4;
+        s.sched.handler_runs = 99;
+        s.sched.workers_peak = 7;
+        let mut d = DeviceStats {
+            jobs: 17,
+            busy_secs: 0.123456789012345,
+            swap_bytes: 1 << 40,
+            ..DeviceStats::default()
+        };
+        d.client.executions = 5;
+        d.client.execute_secs = 1e-9;
+        s.devices.push(d);
+        let buf = encode_response(1, &Response::Stats(Box::new(s.clone()))).unwrap();
+        let (_, back) = decode_response(&buf).unwrap();
+        let Response::Stats(got) = back else { panic!("expected Stats") };
+        assert_eq!(got.msgs_sent, s.msgs_sent);
+        assert_eq!(got.msg_payload_bytes, s.msg_payload_bytes);
+        assert_eq!(got.sched.handler_runs, 99);
+        assert_eq!(got.sched.workers_peak, 7);
+        assert_eq!(got.devices.len(), 1);
+        assert_eq!(got.devices[0].jobs, 17);
+        assert_eq!(got.devices[0].busy_secs, 0.123456789012345, "f64 must be exact");
+        assert_eq!(got.devices[0].swap_bytes, 1 << 40);
+        assert_eq!(got.devices[0].client.execute_secs, 1e-9);
+    }
+
+    #[test]
+    fn unknown_version_and_kind_rejected() {
+        let mut buf = encode_request(0, &Request::Stats).unwrap();
+        buf[0] = 99; // version
+        assert!(decode_request(&buf).is_err());
+        let mut buf = encode_request(0, &Request::Stats).unwrap();
+        buf[1] = 250; // kind
+        assert!(decode_request(&buf).is_err());
+    }
+}

@@ -9,6 +9,9 @@
 //! * svgd_update_native: permutation equivariance, large-h limit
 //! * SWAG streaming moments match batch recomputation
 //! * DataLoader epochs cover each sample at most once
+//! * Wire codec: arbitrary nested Value round-trip, truncated/oversized
+//!   frame rejection, and checkpoint-file/wire-codec byte identity (the
+//!   v1/v2 checkpoint compatibility seam)
 
 use std::collections::BTreeMap;
 
@@ -254,4 +257,91 @@ fn prop_loader_no_repeats_within_epoch() {
             assert_eq!(seen.len(), len_before, "seed {seed}: repeated sample");
         }
     }
+}
+
+// ---------------------------------------------------------------- wire
+#[test]
+fn prop_wire_value_roundtrip_arbitrary_nested() {
+    use push::pd::wire;
+    for seed in 0..CASES * 2 {
+        let mut rng = Rng::new(seed ^ 0x3173c0de);
+        let v = wire::arbitrary_value(&mut rng, 3);
+        let mut buf = Vec::new();
+        wire::write_value(&mut buf, &v, 0).unwrap();
+        let mut r = buf.as_slice();
+        let back = wire::read_value(&mut r, 0).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert!(r.is_empty(), "seed {seed}: {} trailing bytes", r.len());
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_truncated_and_oversized_frames_rejected() {
+    use push::pd::wire;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x7c47);
+        let v = wire::arbitrary_value(&mut rng, 2);
+        let mut payload = Vec::new();
+        wire::write_value(&mut payload, &v, 0).unwrap();
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &payload).unwrap();
+        // whole frame decodes
+        let back = wire::read_frame(&mut framed.as_slice()).unwrap();
+        assert_eq!(back, payload, "seed {seed}");
+        // any strict prefix of the frame must fail to decode as a frame
+        let cut = rng.below(framed.len().max(1));
+        if cut < framed.len() {
+            assert!(
+                wire::read_frame(&mut &framed[..cut]).is_err(),
+                "seed {seed}: truncation to {cut}/{} accepted",
+                framed.len()
+            );
+        }
+    }
+    // a frame header claiming more than MAX_FRAME errors without allocating
+    let huge = (u32::MAX).to_le_bytes();
+    assert!(wire::read_frame(&mut &huge[..]).is_err());
+}
+
+#[test]
+fn checkpoint_state_section_uses_the_shared_wire_codec_bytes() {
+    use push::pd::checkpoint::Checkpoint;
+    use push::pd::wire;
+    use push::particle::Value;
+
+    // one particle, one state entry with a distinctive nested value
+    let value = Value::List(vec![
+        Value::Usize(0xA5A5),
+        Value::Tensor(Tensor::f32(vec![3], vec![1.5, -2.5, 3.25])),
+        Value::Str("codec-seam".to_string()),
+    ]);
+    let mut params = BTreeMap::new();
+    params.insert(Pid(0), Tensor::f32(vec![2], vec![0.5, 1.0]));
+    let mut state = BTreeMap::new();
+    state.insert(Pid(0), vec![("k".to_string(), value.clone())]);
+    let ck = Checkpoint { model: "m".into(), params, state };
+
+    let dir = std::env::temp_dir().join(format!("push-prop-wire-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("seam.ckpt");
+    ck.save(&path).unwrap();
+    let file_bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    // the v2 state section must embed EXACTLY the wire codec's bytes for
+    // the value — checkpoint files and transport frames speak one dialect
+    let mut wire_bytes = Vec::new();
+    wire::write_value(&mut wire_bytes, &value, 0).unwrap();
+    let found = file_bytes
+        .windows(wire_bytes.len())
+        .any(|w| w == wire_bytes.as_slice());
+    assert!(found, "checkpoint file does not contain the wire-codec encoding");
+
+    // and the file still round-trips through the checkpoint loader
+    let dir = std::env::temp_dir().join(format!("push-prop-wire2-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("seam2.ckpt");
+    std::fs::write(&path, &file_bytes).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+    std::fs::remove_dir_all(&dir).ok();
 }
