@@ -7,8 +7,10 @@
 //! a 2-node TCP-loopback broadcast over real sockets), wire-codec
 //! encode/decode throughput, device-job dispatch, context-switch (swap)
 //! cost under cache pressure, parameter views, the native SVGD kernel
-//! math, and the SGMCMC chain-step body (SGLD update + native linear
-//! gradient).
+//! math, the SGMCMC chain-step body (SGLD update + native linear
+//! gradient), the prefetching data pipeline (a 40-batch epoch with the
+//! gathers overlapped vs synchronous), and posterior serving under
+//! training load (SGLD rounds with vs without hammering readers).
 //!
 //! Hermetic by default: the zero-copy-plane cases (params_view, SVGD
 //! stacking round, send-label interning) need no artifacts and no PJRT.
@@ -23,6 +25,7 @@ use std::hint::black_box;
 use std::sync::Arc;
 
 use push::bench::harness::{bench, bench_header};
+use push::data::{Batch, BatchSource, DataLoader, Dataset, PrefetchLoader};
 use push::device::stats::DeviceStats;
 use push::device::{CostModel, HostStore, ResidentCache};
 use push::nel::trace::Trace;
@@ -387,6 +390,144 @@ fn main() {
         run(&mut results, "sgmcmc_linear_grad_16x64", 20, 1000, || {
             let _ = gfn(&w, &x, &y).unwrap();
         });
+    }
+
+    // ---- pipelined data loading: 40-batch epoch, prefetch vs sync ---------
+    // The paper fixes 40 batches/epoch (§5.1). Each batch gather is a
+    // B*d-float memcpy (+ the Tensor alloc); the consumer's work here is
+    // two O(B*d) reduction passes — comparable cost — so the prefetch
+    // pipeline can hide most of the gather behind the consume while the
+    // synchronous loader pays gather + consume serially. Batch contents
+    // are bit-identical either way (tests/properties.rs pins it).
+    {
+        let (bsz, d, nb) = (64usize, 4096usize, 40usize);
+        let mk_data = || {
+            let mut ds = Dataset::new_f32(vec![d], vec![1]);
+            let mut row = vec![0.0f32; d];
+            for i in 0..bsz * nb {
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r = ((i * 31 + j) % 997) as f32 * 1e-3;
+                }
+                ds.push_f32(&row, &[i as f32]);
+            }
+            ds
+        };
+        let consume = |b: &Batch| -> f32 {
+            let xs = b.x.as_f32();
+            let s: f32 = xs.iter().sum();
+            let q: f32 = xs.iter().map(|v| v * v).sum();
+            s + q
+        };
+        let mut sync = DataLoader::new(mk_data(), bsz, true, 3);
+        run(&mut results, "sync_epoch_40x", 2, 30, || {
+            let mut acc = 0.0f32;
+            for b in sync.epoch_stream() {
+                acc += consume(&b);
+            }
+            black_box(acc);
+        });
+        let mut pre = PrefetchLoader::new(DataLoader::new(mk_data(), bsz, true, 3));
+        run(&mut results, "prefetch_overlap_40x", 2, 30, || {
+            let mut acc = 0.0f32;
+            for b in pre.epoch_stream() {
+                acc += consume(&b);
+            }
+            black_box(acc);
+        });
+    }
+
+    // ---- posterior serving under training load ----------------------------
+    // One training round = 20 SGLD chain steps (8 particles, native linear
+    // model). The serve case runs the SAME rounds while 2 reader threads
+    // drive PosteriorServer::refresh + predict_mean at a ~200us cadence;
+    // the gate bounds the serving tax on training wall-clock at 1.15x
+    // (BENCH_l3.json, inverted-ratio form like the PR-4 seam gate).
+    {
+        use push::infer::sgmcmc::{
+            linear_native_manifest, linear_native_model, SgMcmc, SgmcmcAlgo, SgmcmcConfig,
+        };
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        const SD: usize = 32;
+        const SB: usize = 16;
+        let serve_manifest = linear_native_manifest(SD, SB);
+        let chain_cfg = || SgmcmcConfig {
+            particles: 8,
+            algo: SgmcmcAlgo::Sgld,
+            schedule: push::infer::Schedule::Constant { eps: 1e-2 },
+            temperature: 0.0,
+            burn_in: 0,
+            thin: 1,
+            max_samples: 8,
+            seed: 5,
+            model: linear_native_model(),
+            init: Some(Arc::new(|i| {
+                Tensor::f32(vec![SD], Rng::new(0xbe).fold_in(i as u64).normal_vec(SD))
+            })),
+            ..SgmcmcConfig::default()
+        };
+        let mk_algo = || {
+            let pd = PushDist::new(
+                &serve_manifest,
+                "linear_native",
+                NelConfig { control_workers: 2, ..cfg(2, 4) },
+            )
+            .unwrap();
+            SgMcmc::new(pd, chain_cfg()).unwrap()
+        };
+        let mut rng = Rng::new(17);
+        let rounds: Vec<(Tensor, Tensor)> = (0..20)
+            .map(|_| {
+                (
+                    Tensor::f32(vec![SB, SD], rng.normal_vec(SB * SD)),
+                    Tensor::f32(vec![SB, 1], rng.normal_vec(SB)),
+                )
+            })
+            .collect();
+
+        let algo = mk_algo();
+        run(&mut results, "serve_training_no_traffic", 2, 30, || {
+            for (x, y) in &rounds {
+                algo.step_all(x, y).unwrap();
+            }
+        });
+
+        let algo = mk_algo();
+        let server = Arc::new(algo.serve_handle().unwrap());
+        algo.step_all(&rounds[0].0, &rounds[0].1).unwrap(); // fill reservoirs
+        server.refresh(0).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..2usize)
+            .map(|t| {
+                let server = server.clone();
+                let stop = stop.clone();
+                let x = rounds[0].0.clone();
+                std::thread::spawn(move || {
+                    let mut stamp = t;
+                    while !stop.load(Ordering::Relaxed) {
+                        server.refresh(stamp).unwrap();
+                        stamp += 2;
+                        let _ = server.predict_mean(&x);
+                        // Realistic query cadence, not a busy spin: the
+                        // gate measures the serving path's cost to
+                        // training (locks + snapshot clones), not raw
+                        // core stealing on a 2-vCPU CI runner.
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                })
+            })
+            .collect();
+        run(&mut results, "serve_under_training_load", 2, 30, || {
+            for (x, y) in &rounds {
+                algo.step_all(x, y).unwrap();
+            }
+        });
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+        let (refreshes, queries) = server.stats();
+        println!("    (serve load: {refreshes} refreshes, {queries} queries during the case)");
     }
 
     // ---- tensor stacking (leader-side gather cost) ------------------------

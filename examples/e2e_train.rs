@@ -33,7 +33,8 @@ fn main() -> Result<()> {
     let particles = flags.usize_or("particles", 4).map_err(anyhow::Error::msg)?;
     let devices = flags.usize_or("devices", 2).map_err(anyhow::Error::msg)?;
     let batches_per_epoch = 10usize;
-    let epochs = steps.div_ceil(batches_per_epoch);
+    // ceil(steps / batches_per_epoch) without usize::div_ceil (MSRV 1.72)
+    let epochs = (steps + batches_per_epoch - 1) / batches_per_epoch;
     let pretrain = (epochs * 7) / 10; // the paper's 7:3 pretrain/SWAG split
 
     let manifest = Manifest::load(artifacts_dir())?;

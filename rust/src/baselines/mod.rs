@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::data::DataLoader;
+use crate::data::{BatchSource, DataLoader};
 use crate::infer::sgmcmc::{noise_rng, Schedule, SgmcmcAlgo};
 use crate::infer::svgd::svgd_update_native;
 use crate::infer::TrainReport;
@@ -92,16 +92,21 @@ impl Baseline {
     ) -> Result<TrainReport> {
         let mut report = TrainReport::new("baseline_ensemble");
         for _ in 0..epochs {
-            let batches = loader.epoch();
+            // Stream batches inside the timed region, exactly like the
+            // Infer train loops — both sides of every push-vs-baseline
+            // comparison charge batch materialization the same way.
+            let stream = loader.epoch_stream();
             let t0 = Instant::now();
             let mut loss = 0.0f64;
-            for b in &batches {
+            let mut nb = 0usize;
+            for b in stream {
                 for i in 0..self.n() {
                     loss += self.step_one(i, &b.x, &b.y, lr)? as f64;
                 }
+                nb += 1;
             }
             report.push(
-                loss / (batches.len() * self.n()).max(1) as f64,
+                loss / (nb * self.n()).max(1) as f64,
                 t0.elapsed().as_secs_f64(),
             );
         }
@@ -124,10 +129,11 @@ impl Baseline {
             .collect();
         for e in 0..epochs {
             let collect = e >= pretrain_epochs;
-            let batches = loader.epoch();
+            let stream = loader.epoch_stream();
             let t0 = Instant::now();
             let mut loss = 0.0f64;
-            for b in &batches {
+            let mut nb = 0usize;
+            for b in stream {
                 for i in 0..self.n() {
                     loss += self.step_one(i, &b.x, &b.y, lr)? as f64;
                     if collect {
@@ -139,9 +145,10 @@ impl Baseline {
                         *n += 1;
                     }
                 }
+                nb += 1;
             }
             report.push(
-                loss / (batches.len() * self.n()).max(1) as f64,
+                loss / (nb * self.n()).max(1) as f64,
                 t0.elapsed().as_secs_f64(),
             );
         }
@@ -160,10 +167,11 @@ impl Baseline {
     ) -> Result<TrainReport> {
         let mut report = TrainReport::new("baseline_svgd");
         for _ in 0..epochs {
-            let batches = loader.epoch();
+            let stream = loader.epoch_stream();
             let t0 = Instant::now();
             let mut loss = 0.0f64;
-            for b in &batches {
+            let mut nb = 0usize;
+            for b in stream {
                 let mut grads = Vec::with_capacity(self.n());
                 for i in 0..self.n() {
                     let (l, g) = self.grad_one(i, &b.x, &b.y)?;
@@ -174,9 +182,10 @@ impl Baseline {
                 for (p, u) in self.params.iter_mut().zip(&updates) {
                     crate::runtime::tensor::ops::axpy(p, -lr, u);
                 }
+                nb += 1;
             }
             report.push(
-                loss / (batches.len() * self.n()).max(1) as f64,
+                loss / (nb * self.n()).max(1) as f64,
                 t0.elapsed().as_secs_f64(),
             );
         }
@@ -207,10 +216,11 @@ impl Baseline {
         let mut momenta: Vec<Tensor> = (0..self.n()).map(|_| Tensor::zeros(vec![d])).collect();
         let mut clocks = vec![0usize; self.n()];
         for _ in 0..epochs {
-            let batches = loader.epoch();
+            let stream = loader.epoch_stream();
             let t0 = Instant::now();
             let mut loss = 0.0f64;
-            for b in &batches {
+            let mut nb = 0usize;
+            for b in stream {
                 for i in 0..self.n() {
                     let (l, g) = self.grad_one(i, &b.x, &b.y)?;
                     loss += l as f64;
@@ -239,9 +249,10 @@ impl Baseline {
                     ops::axpy(&mut self.params[i], 1.0, &u);
                     clocks[i] = t + 1;
                 }
+                nb += 1;
             }
             report.push(
-                loss / (batches.len() * self.n()).max(1) as f64,
+                loss / (nb * self.n()).max(1) as f64,
                 t0.elapsed().as_secs_f64(),
             );
         }

@@ -1,9 +1,23 @@
-//! Dataset container + batching DataLoader.
+//! Dataset container + batching DataLoader, synchronous or pipelined.
 //!
 //! Samples are stored row-major in one contiguous buffer per split; the
 //! loader materializes `Tensor` batches matching the model's AOT example
 //! shapes (fixed batch size — artifacts are shape-specialized, so trailing
 //! ragged batches are dropped, mirroring `drop_last=True`).
+//!
+//! Train loops consume batches through the pull-based [`BatchStream`]
+//! (one epoch at a time, one batch per `next`), obtained from any
+//! [`BatchSource`]: the plain [`DataLoader`] gathers lazily on the
+//! caller's thread, and [`PrefetchLoader`] wraps a `DataLoader` in a
+//! bounded-depth double-buffered pipeline that materializes batch `t+1`
+//! on a background producer while batch `t` is being consumed
+//! (DESIGN.md §10). The shuffle/index stream is keyed by `(seed, epoch)`
+//! and the producer runs the *same* shuffle/gather code as the
+//! synchronous path, so the prefetched batch sequence is bit-identical
+//! to `DataLoader::epoch()` — asynchrony changes timing, never data
+//! (pinned by `tests/properties.rs::prop_prefetch_stream_equals_sync`).
+
+use std::sync::{mpsc, Arc};
 
 use crate::runtime::{DType, Tensor, TensorData};
 use crate::util::rng::Rng;
@@ -110,9 +124,13 @@ impl Dataset {
         Batch { x, y }
     }
 
-    /// Split off the last `frac` of samples as a test set.
+    /// Split off the last `frac` of samples as a test set. `frac` is
+    /// clamped to [0, 1] (NaN reads as 0), so `n_train + n_test == n`
+    /// holds for every input — an out-of-range fraction used to make
+    /// `n - n_test` underflow straight into `split_off` panics.
     pub fn split(mut self, frac: f32) -> (Dataset, Dataset) {
-        let n_test = ((self.n as f32) * frac).round() as usize;
+        let frac = frac.clamp(0.0, 1.0);
+        let n_test = (((self.n as f32) * frac).round() as usize).min(self.n);
         let n_train = self.n - n_test;
         let xs_stride = self.x_stride();
         let ys_stride = self.y_stride();
@@ -131,11 +149,88 @@ impl Dataset {
     }
 }
 
+/// Anything a train loop can pull epochs of batches from: the plain
+/// synchronous [`DataLoader`] or the pipelined [`PrefetchLoader`]. The
+/// shuffle stream advances exactly once per `epoch_stream` call, so two
+/// sources built from the same `(data, batch_size, shuffle, seed)` yield
+/// bit-identical batch sequences regardless of which implementation (or
+/// how much of each epoch) is consumed.
+pub trait BatchSource {
+    /// Batches each epoch yields (fixed: ragged tails are dropped).
+    fn batches_per_epoch(&self) -> usize;
+
+    /// Advance to the next epoch and return its pull-based stream.
+    fn epoch_stream(&mut self) -> BatchStream;
+}
+
+/// One epoch's pull-based batch stream (`next() -> Option<Batch>`).
+/// Either gathers lazily on the calling thread (sync) or pulls from a
+/// bounded channel fed by a background producer (prefetch).
+pub struct BatchStream {
+    inner: StreamInner,
+    /// Batches this epoch yields in total.
+    nb: usize,
+    taken: usize,
+}
+
+enum StreamInner {
+    /// Lazily gathered from a dataset snapshot + this epoch's index order.
+    Sync { data: Arc<Dataset>, order: Vec<usize>, batch_size: usize },
+    /// Fed by a [`PrefetchLoader`] producer thread.
+    Prefetch { rx: mpsc::Receiver<Batch> },
+}
+
+impl BatchStream {
+    /// Total batches this epoch yields.
+    pub fn len(&self) -> usize {
+        self.nb
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nb == 0
+    }
+}
+
+impl Iterator for BatchStream {
+    type Item = Batch;
+
+    /// The next batch, or None once the epoch is exhausted.
+    fn next(&mut self) -> Option<Batch> {
+        if self.taken >= self.nb {
+            return None;
+        }
+        let b = match &mut self.inner {
+            StreamInner::Sync { data, order, batch_size } => {
+                let (bs, i) = (*batch_size, self.taken);
+                Some(data.gather(&order[i * bs..(i + 1) * bs]))
+            }
+            // A dead producer (panicked gather) ends the epoch early; the
+            // consumer sees a short epoch, never a hang.
+            StreamInner::Prefetch { rx } => rx.recv().ok(),
+        };
+        if b.is_some() {
+            self.taken += 1;
+        }
+        b
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.nb - self.taken;
+        // a prefetch producer may die early, so only the sync stream's
+        // lower bound is exact
+        match self.inner {
+            StreamInner::Sync { .. } => (left, Some(left)),
+            StreamInner::Prefetch { .. } => (0, Some(left)),
+        }
+    }
+}
+
 /// Epoch iterator producing fixed-size batches, optionally shuffled and
 /// optionally capped at `max_batches` per epoch (the paper fixes 40
-/// batches/epoch across tasks, §5.1).
+/// batches/epoch across tasks, §5.1). The dataset is Arc-shared so every
+/// epoch stream is a refcount bump, not a data copy.
 pub struct DataLoader {
-    pub data: Dataset,
+    pub data: Arc<Dataset>,
     pub batch_size: usize,
     pub shuffle: bool,
     pub max_batches: Option<usize>,
@@ -149,7 +244,7 @@ impl DataLoader {
                 "dataset of {} can't fill a batch of {batch_size}", data.n);
         let order = (0..data.n).collect();
         DataLoader {
-            data,
+            data: Arc::new(data),
             batch_size,
             shuffle,
             max_batches: None,
@@ -163,7 +258,15 @@ impl DataLoader {
         self
     }
 
-    pub fn batches_per_epoch(&self) -> usize {
+    /// Materialize one epoch of batches (tests, baselines, and the
+    /// prefetch-equivalence property; train loops stream instead).
+    pub fn epoch(&mut self) -> Vec<Batch> {
+        self.epoch_stream().collect()
+    }
+}
+
+impl BatchSource for DataLoader {
+    fn batches_per_epoch(&self) -> usize {
         let full = self.data.n / self.batch_size;
         match self.max_batches {
             Some(m) => full.min(m),
@@ -171,18 +274,130 @@ impl DataLoader {
         }
     }
 
-    /// Materialize one epoch of batches.
-    pub fn epoch(&mut self) -> Vec<Batch> {
+    fn epoch_stream(&mut self) -> BatchStream {
         if self.shuffle {
             self.rng.shuffle(&mut self.order);
         }
         let nb = self.batches_per_epoch();
-        (0..nb)
-            .map(|b| {
-                let idxs = &self.order[b * self.batch_size..(b + 1) * self.batch_size];
-                self.data.gather(idxs)
+        BatchStream {
+            inner: StreamInner::Sync {
+                data: self.data.clone(),
+                order: self.order[..nb * self.batch_size].to_vec(),
+                batch_size: self.batch_size,
+            },
+            nb,
+            taken: 0,
+        }
+    }
+}
+
+/// Default channel depth of a [`PrefetchLoader`]: double buffering (the
+/// producer keeps up to 2 batches ahead of the consumer).
+pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
+
+/// A double-buffered pipeline over a [`DataLoader`]: each epoch hands the
+/// loader to a background producer that shuffles and gathers batches into
+/// a bounded channel (`depth`, default 2) while the consumer computes on
+/// the previous batch. The producer runs the loader's own
+/// `epoch_stream`, so shuffle order, RNG advancement, and batch contents
+/// are bit-identical to the synchronous path — prefetching changes WHEN a
+/// batch is materialized, never WHICH batch it is.
+///
+/// Epochs are sequential: starting a new epoch first reclaims the loader
+/// from the previous producer (which exits as soon as its epoch is fully
+/// sent or its stream is dropped). Dropping a partially-consumed
+/// `BatchStream` cancels the rest of that epoch's gathers; the RNG has
+/// already advanced for the epoch, exactly as a discarded
+/// `DataLoader::epoch()` result would have.
+pub struct PrefetchLoader {
+    loader: Option<DataLoader>,
+    pending: Option<PendingEpoch>,
+    depth: usize,
+    nb: usize,
+}
+
+struct PendingEpoch {
+    /// The producer returns the loader here when its epoch ends.
+    ret: mpsc::Receiver<DataLoader>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl PrefetchLoader {
+    pub fn new(loader: DataLoader) -> PrefetchLoader {
+        let nb = loader.batches_per_epoch();
+        PrefetchLoader {
+            loader: Some(loader),
+            pending: None,
+            depth: DEFAULT_PREFETCH_DEPTH,
+            nb,
+        }
+    }
+
+    /// Set the pipeline depth (>= 1): how many materialized batches may
+    /// sit between producer and consumer.
+    pub fn with_depth(mut self, depth: usize) -> PrefetchLoader {
+        assert!(depth >= 1, "prefetch depth must be >= 1");
+        self.depth = depth;
+        self
+    }
+
+    /// Wait for the in-flight epoch's producer (if any) and take the
+    /// loader back. The producer exits as soon as its epoch is drained OR
+    /// its stream is dropped (its next send fails), so the only way this
+    /// wait can stall is a STILL-ALIVE, undrained previous stream parking
+    /// the producer on the bounded channel — a caller bug (drop the old
+    /// stream before starting a new epoch), surfaced as a panic after a
+    /// generous timeout rather than a silent deadlock.
+    fn reclaim(&mut self) {
+        if let Some(p) = self.pending.take() {
+            let loader = match p.ret.recv_timeout(std::time::Duration::from_secs(30)) {
+                Ok(l) => l,
+                Err(mpsc::RecvTimeoutError::Timeout) => panic!(
+                    "PrefetchLoader: the previous epoch's BatchStream is still alive and \
+                     undrained; drop it before starting a new epoch"
+                ),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    panic!("prefetch producer died (gather panicked?)")
+                }
+            };
+            let _ = p.thread.join();
+            self.loader = Some(loader);
+        }
+    }
+
+    /// Recover the wrapped loader (joins the in-flight epoch first).
+    pub fn into_inner(mut self) -> DataLoader {
+        self.reclaim();
+        self.loader.take().expect("loader present after reclaim")
+    }
+}
+
+impl BatchSource for PrefetchLoader {
+    fn batches_per_epoch(&self) -> usize {
+        self.nb
+    }
+
+    fn epoch_stream(&mut self) -> BatchStream {
+        self.reclaim();
+        let mut loader = self.loader.take().expect("loader present after reclaim");
+        let (tx, rx) = mpsc::sync_channel::<Batch>(self.depth);
+        let (ret_tx, ret_rx) = mpsc::channel::<DataLoader>();
+        let thread = std::thread::Builder::new()
+            .name("push-prefetch".to_string())
+            .spawn(move || {
+                // The exact synchronous epoch, materialized ahead of the
+                // consumer; a send error means the consumer dropped the
+                // stream — stop gathering, the epoch is abandoned.
+                for b in loader.epoch_stream() {
+                    if tx.send(b).is_err() {
+                        break;
+                    }
+                }
+                let _ = ret_tx.send(loader);
             })
-            .collect()
+            .expect("spawning prefetch producer");
+        self.pending = Some(PendingEpoch { ret: ret_rx, thread });
+        BatchStream { inner: StreamInner::Prefetch { rx }, nb: self.nb, taken: 0 }
     }
 }
 
@@ -253,5 +468,117 @@ mod tests {
         assert_eq!(tr.n, 7);
         assert_eq!(te.n, 3);
         assert_eq!(te.xs[0], 7.0);
+    }
+
+    #[test]
+    fn split_extremes_keep_every_sample() {
+        // frac = 0: everything stays in train
+        let (tr, te) = toy(5).split(0.0);
+        assert_eq!((tr.n, te.n), (5, 0));
+        assert_eq!(tr.xs.len(), 5 * 2);
+        assert!(te.xs.is_empty() && te.ys_f.is_empty());
+
+        // frac = 1: everything moves to test
+        let (tr, te) = toy(5).split(1.0);
+        assert_eq!((tr.n, te.n), (0, 5));
+        assert!(tr.xs.is_empty() && tr.ys_f.is_empty());
+        assert_eq!(te.xs[0], 0.0);
+
+        // out-of-range fractions clamp instead of underflowing
+        let (tr, te) = toy(4).split(2.5);
+        assert_eq!((tr.n, te.n), (0, 4));
+        let (tr, te) = toy(4).split(-1.0);
+        assert_eq!((tr.n, te.n), (4, 0));
+        let (tr, te) = toy(4).split(f32::NAN);
+        assert_eq!((tr.n, te.n), (4, 0));
+    }
+
+    #[test]
+    fn split_single_sample_conserves_n() {
+        for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let (tr, te) = toy(1).split(frac);
+            assert_eq!(tr.n + te.n, 1, "frac {frac}");
+            assert_eq!(tr.xs.len() + te.xs.len(), 2, "frac {frac}: x rows lost");
+            assert_eq!(tr.ys_f.len() + te.ys_f.len(), 1, "frac {frac}: y rows lost");
+        }
+    }
+
+    #[test]
+    fn split_clears_the_unused_label_side() {
+        // classify: ys_f must stay empty on BOTH halves, ys_i partitions
+        let mut c = Dataset::new_classify(vec![2]);
+        for i in 0..6 {
+            c.push_classify(&[i as f32, 0.0], i % 3);
+        }
+        let (tr, te) = c.split(0.5);
+        assert_eq!((tr.n, te.n), (3, 3));
+        assert!(tr.ys_f.is_empty() && te.ys_f.is_empty());
+        assert_eq!(tr.ys_i, vec![0, 1, 2]);
+        assert_eq!(te.ys_i, vec![0, 1, 2]);
+
+        // regression: ys_i must stay empty on both halves
+        let (tr, te) = toy(6).split(0.5);
+        assert!(tr.ys_i.is_empty() && te.ys_i.is_empty());
+        assert_eq!(tr.ys_f.len(), 3);
+        assert_eq!(te.ys_f.len(), 3);
+    }
+
+    #[test]
+    fn sync_stream_equals_epoch() {
+        let mut a = DataLoader::new(toy(10), 3, true, 7);
+        let mut b = DataLoader::new(toy(10), 3, true, 7);
+        for _ in 0..3 {
+            let want = a.epoch();
+            let got: Vec<Batch> = b.epoch_stream().collect();
+            assert_eq!(want.len(), got.len());
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.x, g.x);
+                assert_eq!(w.y, g.y);
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_stream_matches_sync_including_ragged_tail() {
+        // 10 % 3 != 0: the ragged tail drops identically on both paths
+        let mut sync = DataLoader::new(toy(10), 3, true, 42);
+        let mut pre = PrefetchLoader::new(DataLoader::new(toy(10), 3, true, 42));
+        assert_eq!(pre.batches_per_epoch(), 3);
+        for epoch in 0..3 {
+            let want = sync.epoch();
+            let stream = pre.epoch_stream();
+            assert_eq!(stream.len(), want.len());
+            let got: Vec<Batch> = stream.collect();
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(w.x, g.x, "epoch {epoch} batch {i}");
+                assert_eq!(w.y, g.y, "epoch {epoch} batch {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_abandoned_epoch_still_advances_the_shuffle() {
+        // consuming only part of an epoch (dropping the stream) must leave
+        // the NEXT epoch identical to the synchronous loader's next epoch
+        let mut sync = DataLoader::new(toy(12), 4, true, 9);
+        let mut pre = PrefetchLoader::new(DataLoader::new(toy(12), 4, true, 9));
+        let _ = sync.epoch();
+        {
+            let mut stream = pre.epoch_stream();
+            let _ = stream.next(); // take one batch, drop the rest
+        }
+        let want = sync.epoch();
+        let got: Vec<Batch> = pre.epoch_stream().collect();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.x, g.x);
+        }
+    }
+
+    #[test]
+    fn prefetch_into_inner_returns_the_loader() {
+        let mut pre = PrefetchLoader::new(DataLoader::new(toy(9), 3, false, 0)).with_depth(1);
+        assert_eq!(pre.epoch_stream().count(), 3);
+        let mut loader = pre.into_inner();
+        assert_eq!(loader.epoch().len(), 3);
     }
 }

@@ -19,4 +19,4 @@
 pub mod loader;
 pub mod synth;
 
-pub use loader::{Batch, DataLoader, Dataset};
+pub use loader::{Batch, BatchSource, BatchStream, DataLoader, Dataset, PrefetchLoader};

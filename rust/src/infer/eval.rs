@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::data::{DataLoader, Dataset};
+use crate::data::{BatchSource, DataLoader, Dataset};
 use crate::runtime::tensor::ops;
 use crate::runtime::Tensor;
 
@@ -284,13 +284,14 @@ pub fn dataset_accuracy(
     mut f: impl FnMut(&Tensor) -> Result<Tensor>,
 ) -> Result<f64> {
     let mut loader = DataLoader::new(data.clone(), batch_size, false, 0);
-    let batches = loader.epoch();
     let mut acc = 0.0;
-    for b in &batches {
+    let mut nb = 0usize;
+    for b in loader.epoch_stream() {
         let scores = f(&b.x)?;
         acc += batch_accuracy(&scores, &b.y);
+        nb += 1;
     }
-    Ok(acc / batches.len().max(1) as f64)
+    Ok(acc / nb.max(1) as f64)
 }
 
 /// Dataset-level MSE of a predictor.
@@ -300,13 +301,14 @@ pub fn dataset_mse(
     mut f: impl FnMut(&Tensor) -> Result<Tensor>,
 ) -> Result<f64> {
     let mut loader = DataLoader::new(data.clone(), batch_size, false, 0);
-    let batches = loader.epoch();
     let mut e = 0.0;
-    for b in &batches {
+    let mut nb = 0usize;
+    for b in loader.epoch_stream() {
         let pred = f(&b.x)?;
         e += batch_mse(&pred, &b.y);
+        nb += 1;
     }
-    Ok(e / batches.len().max(1) as f64)
+    Ok(e / nb.max(1) as f64)
 }
 
 #[cfg(test)]

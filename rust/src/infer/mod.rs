@@ -11,16 +11,18 @@
 
 pub mod ensemble;
 pub mod eval;
+pub mod serve;
 pub mod sgmcmc;
 pub mod svgd;
 pub mod swag;
 
 use anyhow::Result;
 
-use crate::data::DataLoader;
+use crate::data::BatchSource;
 use crate::runtime::Tensor;
 
 pub use ensemble::DeepEnsemble;
+pub use serve::{PosteriorServer, PosteriorSnapshot, ReservoirSnapshot};
 pub use sgmcmc::{ModelSource, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig};
 pub use svgd::{svgd_update_native, Svgd, SvgdConfig};
 pub use swag::{MultiSwag, SwagConfig};
@@ -68,8 +70,12 @@ pub trait Infer {
     /// Particle ids participating in inference.
     fn pids(&self) -> Vec<crate::Pid>;
 
-    /// Run `epochs` of Bayesian inference over the loader's data.
-    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport>;
+    /// Run `epochs` of Bayesian inference over the source's data. Batches
+    /// are pulled one at a time through a [`crate::data::BatchStream`], so
+    /// a [`crate::data::PrefetchLoader`] overlaps batch materialization
+    /// with the round's device compute; a plain `DataLoader` gathers
+    /// synchronously. Either way the batch sequence is identical.
+    fn train(&mut self, source: &mut dyn BatchSource, epochs: usize) -> Result<TrainReport>;
 
     /// Posterior-mean prediction at `x` (paper §3.4: the average of
     /// particle predictions).

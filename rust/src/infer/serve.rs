@@ -1,0 +1,334 @@
+//! Posterior-predictive serving under training load (DESIGN.md §10).
+//!
+//! The paper's serving half ("statistical models as ordinary, queryable
+//! functions" — Tran et al.'s framing) applied to SGMCMC particle chains:
+//! a [`PosteriorServer`] snapshots each chain's posterior-sample
+//! reservoir (`sgmcmc_samples` / `sgmcmc_seen`) and answers
+//! `predict_mean` / `predictive_std` from the snapshot on the CALLER's
+//! thread, so queries
+//!
+//! * never enter the M:N scheduler (no broadcast round, no handler turn,
+//!   no device job — training keeps every worker),
+//! * never block training: a refresh holds each particle's state mutex
+//!   exactly as long as one map clone (tensor values are Arc bumps in
+//!   process, owned decodes over a wire transport), and
+//! * always see a COMPLETE reservoir version: the chain handler commits
+//!   `(samples, seen)` atomically (`state_set_many`), and the state map
+//!   is cloned under one lock, so every [`ReservoirSnapshot`] satisfies
+//!   `samples.len() == min(seen, cap)` — the no-torn-snapshot invariant
+//!   `rust/tests/serve.rs` hammers from 8 threads.
+//!
+//! Snapshots are versioned by `(pid, sgmcmc_seen)` and stamped with the
+//! training epoch that refreshed them ([`PosteriorServer::refresh_at`]
+//! refreshes at most once per stamp — the `--serve-every N` cadence).
+//! On a multi-node PD the snapshot crosses the fabric as ordinary
+//! `ParticleState` wire frames; the serving math is transport-oblivious.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::infer::eval;
+use crate::infer::sgmcmc::{ModelSource, NativeForwardFn, SgmcmcConfig, K_SAMPLES, K_SEEN};
+use crate::particle::Value;
+use crate::pd::PushDist;
+use crate::runtime::tensor::ops;
+use crate::runtime::Tensor;
+use crate::Pid;
+
+/// One chain's reservoir at a point in time. `seen` is the version: the
+/// number of candidates the chain has offered so far — it only grows, so
+/// `(pid, seen)` identifies the reservoir state exactly.
+#[derive(Debug, Clone)]
+pub struct ReservoirSnapshot {
+    pub pid: Pid,
+    pub seen: usize,
+    /// Zero-copy clones of the chain's kept posterior samples (immutable:
+    /// the chain COW-detaches on its next update).
+    pub samples: Vec<Tensor>,
+}
+
+/// A consistent view over every chain's reservoir, stamped with the
+/// training epoch that refreshed it.
+#[derive(Debug, Clone)]
+pub struct PosteriorSnapshot {
+    /// Refresh stamp (`usize::MAX` = never refreshed).
+    pub epoch: usize,
+    pub chains: Vec<ReservoirSnapshot>,
+}
+
+impl PosteriorSnapshot {
+    fn empty() -> PosteriorSnapshot {
+        PosteriorSnapshot { epoch: usize::MAX, chains: Vec::new() }
+    }
+
+    /// Kept samples across all chains.
+    pub fn total_samples(&self) -> usize {
+        self.chains.iter().map(|c| c.samples.len()).sum()
+    }
+
+    /// The `(pid, seen)` version vector of this snapshot.
+    pub fn versions(&self) -> Vec<(Pid, usize)> {
+        self.chains.iter().map(|c| (c.pid, c.seen)).collect()
+    }
+}
+
+/// Serves posterior-predictive queries from reservoir snapshots while the
+/// chains keep training. Build one via [`crate::infer::SgMcmc::serve_handle`]
+/// (or [`PosteriorServer::new`] with a PD serve handle directly); share it
+/// across query threads — every method takes `&self`.
+pub struct PosteriorServer {
+    pd: PushDist,
+    pids: Vec<Pid>,
+    forward: NativeForwardFn,
+    classify: bool,
+    snap: RwLock<Arc<PosteriorSnapshot>>,
+    /// Serializes refreshes: the state read and the publish must be one
+    /// unit, or a preempted refresh could overwrite a fresher snapshot
+    /// with an older one — published versions must only grow. Readers
+    /// (`snapshot`/`predict_*`) never touch this lock.
+    refresh_gate: Mutex<()>,
+    refreshes: AtomicU64,
+    queries: AtomicU64,
+}
+
+impl PosteriorServer {
+    /// `pd` must be a serve handle onto the fabric that owns `pids`
+    /// ([`PushDist::serve_handle`]). The chain config supplies the native
+    /// forward closure — serving computes on the caller's thread, outside
+    /// the device layer, so an artifact-only model cannot serve.
+    pub fn new(pd: PushDist, pids: Vec<Pid>, cfg: &SgmcmcConfig) -> Result<PosteriorServer> {
+        ensure!(!pids.is_empty(), "a posterior server needs at least one chain");
+        let forward = match &cfg.model {
+            ModelSource::Native { forward, .. } => forward.clone(),
+            ModelSource::Artifact => {
+                return Err(anyhow!(
+                    "posterior serving needs a native ModelSource (forwards run on the \
+                     caller's thread, not the device layer); use e.g. linear_native_model()"
+                ))
+            }
+        };
+        let classify = pd.model().task == "classify";
+        Ok(PosteriorServer {
+            pd,
+            pids,
+            forward,
+            classify,
+            snap: RwLock::new(Arc::new(PosteriorSnapshot::empty())),
+            refresh_gate: Mutex::new(()),
+            refreshes: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+        })
+    }
+
+    /// Chains served.
+    pub fn pids(&self) -> &[Pid] {
+        &self.pids
+    }
+
+    /// The current snapshot (an Arc bump; queries keep using the version
+    /// they started with even if a refresh lands mid-query).
+    pub fn snapshot(&self) -> Arc<PosteriorSnapshot> {
+        self.snap.read().unwrap().clone()
+    }
+
+    /// Re-snapshot every chain's reservoir and stamp the result with
+    /// `epoch`. In-process this is per-particle map clones (tensor values
+    /// are Arc bumps); on a wire transport it is one `ParticleState`
+    /// request per chain, decoded as owned tensors. Transport errors
+    /// surface — a serving tier must not silently answer from a node it
+    /// can no longer reach. Concurrent refreshes serialize on the gate,
+    /// so a slow refresh can never publish over a fresher snapshot.
+    pub fn refresh(&self, epoch: usize) -> Result<Arc<PosteriorSnapshot>> {
+        let _gate = self.refresh_gate.lock().unwrap();
+        self.refresh_locked(epoch)
+    }
+
+    /// The body of [`PosteriorServer::refresh`]; callers hold the gate.
+    fn refresh_locked(&self, epoch: usize) -> Result<Arc<PosteriorSnapshot>> {
+        let mut chains = Vec::with_capacity(self.pids.len());
+        for pid in &self.pids {
+            let entries = self
+                .pd
+                .particle_state_checked(*pid)
+                .map_err(|e| anyhow!("snapshotting {pid}: {e}"))?
+                .ok_or_else(|| anyhow!("snapshotting {pid}: unknown particle"))?;
+            let mut seen = 0usize;
+            let mut samples = Vec::new();
+            for (k, v) in entries {
+                match (k.as_str(), v) {
+                    (K_SEEN, Value::Usize(n)) => seen = n,
+                    (K_SAMPLES, Value::List(vs)) => {
+                        samples = vs.into_iter().filter_map(|s| s.tensor().ok()).collect();
+                    }
+                    _ => {}
+                }
+            }
+            chains.push(ReservoirSnapshot { pid: *pid, seen, samples });
+        }
+        let snap = Arc::new(PosteriorSnapshot { epoch, chains });
+        *self.snap.write().unwrap() = snap.clone();
+        self.refreshes.fetch_add(1, Ordering::Relaxed);
+        Ok(snap)
+    }
+
+    /// The epoch-stamped refresh policy: refresh at most once per stamp.
+    /// Callers on a `--serve-every N` cadence pass the training epoch;
+    /// repeated calls with the current stamp return the cached snapshot
+    /// without touching the particles. Racing callers with the same new
+    /// stamp are serialized by the gate and re-checked under it, so
+    /// exactly one of them performs the snapshot.
+    pub fn refresh_at(&self, epoch: usize) -> Result<Arc<PosteriorSnapshot>> {
+        if epoch == usize::MAX {
+            // usize::MAX is the never-refreshed sentinel stamp: treating
+            // it as cached would hand back the empty initial snapshot
+            // forever. Always snapshot instead.
+            return self.refresh(epoch);
+        }
+        {
+            let cur = self.snap.read().unwrap();
+            if cur.epoch == epoch {
+                return Ok(cur.clone());
+            }
+        }
+        let _gate = self.refresh_gate.lock().unwrap();
+        {
+            // re-check under the gate: a racing caller may have refreshed
+            // this stamp while we waited
+            let cur = self.snap.read().unwrap();
+            if cur.epoch == epoch {
+                return Ok(cur.clone());
+            }
+        }
+        self.refresh_locked(epoch)
+    }
+
+    /// Posterior-mean prediction at `x` from the current snapshot: each
+    /// chain averages its reservoir samples' forwards (vote sums for
+    /// classify) via the shared [`eval`] combinators, then chain outputs
+    /// average — exactly `SgMcmc::predict_mean`'s math, minus the message
+    /// round. Chains whose reservoir is still empty are skipped; an
+    /// entirely empty snapshot is an error (refresh after burn-in), never
+    /// a silently-wrong answer from pre-posterior parameters.
+    pub fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let snap = self.snapshot();
+        let mut acc: Option<Tensor> = None;
+        let mut chains_used = 0usize;
+        for chain in &snap.chains {
+            if chain.samples.is_empty() {
+                continue;
+            }
+            let mut cacc: Option<Tensor> = None;
+            for s in &chain.samples {
+                let pred = (self.forward)(s, x).map_err(|e| anyhow!("{e}"))?;
+                eval::accumulate_prediction(&mut cacc, pred, self.classify);
+            }
+            let per_chain = eval::finalize_mean(cacc, chain.samples.len(), self.classify)
+                .expect("non-empty chain accumulated");
+            // chain outputs are vote sums / means — accumulate raw
+            match &mut acc {
+                None => acc = Some(per_chain),
+                Some(a) => ops::axpy(a, 1.0, &per_chain),
+            }
+            chains_used += 1;
+        }
+        let mut out = acc.ok_or_else(|| {
+            anyhow!(
+                "posterior snapshot holds no samples yet (epoch stamp {}); \
+                 refresh after burn-in",
+                snap.epoch
+            )
+        })?;
+        if !self.classify && chains_used > 1 {
+            for v in out.as_f32_mut() {
+                *v /= chains_used as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-point epistemic std across ALL snapshot samples' forwards
+    /// (regression only — vote one-hots have no meaningful std).
+    pub fn predictive_std(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(!self.classify, "predictive_std serves regression tasks only");
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let snap = self.snapshot();
+        let mut preds = Vec::with_capacity(snap.total_samples());
+        for chain in &snap.chains {
+            for s in &chain.samples {
+                preds.push((self.forward)(s, x).map_err(|e| anyhow!("{e}"))?);
+            }
+        }
+        ensure!(
+            !preds.is_empty(),
+            "posterior snapshot holds no samples yet; refresh after burn-in"
+        );
+        eval::predictive_std(&preds)
+    }
+
+    /// (refreshes, queries) served so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.refreshes.load(Ordering::Relaxed),
+            self.queries.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::sgmcmc::linear_native_model;
+
+    fn cfg() -> SgmcmcConfig {
+        SgmcmcConfig { model: linear_native_model(), ..SgmcmcConfig::default() }
+    }
+
+    #[test]
+    fn artifact_models_cannot_serve() {
+        // A server over an artifact-only source must be refused up front:
+        // its forwards live behind the device layer.
+        let manifest = crate::infer::sgmcmc::linear_native_manifest(2, 1);
+        let pd = PushDist::new(
+            &manifest,
+            "linear_native",
+            crate::NelConfig {
+                cost: crate::device::CostModel::free(),
+                control_workers: 1,
+                ..crate::NelConfig::default()
+            },
+        )
+        .unwrap();
+        let artifact_cfg = SgmcmcConfig { model: ModelSource::Artifact, ..cfg() };
+        // .err(): PosteriorServer has no Debug impl for unwrap_err
+        let err = PosteriorServer::new(pd.serve_handle(), vec![Pid(0)], &artifact_cfg)
+            .err()
+            .expect("artifact source must be refused");
+        assert!(format!("{err:#}").contains("native ModelSource"), "{err:#}");
+
+        let err = PosteriorServer::new(pd.serve_handle(), vec![], &cfg())
+            .err()
+            .expect("zero chains must be refused");
+        assert!(format!("{err:#}").contains("at least one chain"), "{err:#}");
+    }
+
+    #[test]
+    fn snapshot_versions_and_totals() {
+        let snap = PosteriorSnapshot {
+            epoch: 3,
+            chains: vec![
+                ReservoirSnapshot {
+                    pid: Pid(0),
+                    seen: 5,
+                    samples: vec![Tensor::zeros(vec![2]); 3],
+                },
+                ReservoirSnapshot { pid: Pid(1), seen: 0, samples: vec![] },
+            ],
+        };
+        assert_eq!(snap.total_samples(), 3);
+        assert_eq!(snap.versions(), vec![(Pid(0), 5), (Pid(1), 0)]);
+        assert_eq!(PosteriorSnapshot::empty().epoch, usize::MAX);
+    }
+}

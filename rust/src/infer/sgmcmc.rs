@@ -43,7 +43,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::data::DataLoader;
+use crate::data::BatchSource;
 use crate::infer::{eval, Infer, TrainReport};
 use crate::nel::{CreateOpts, ParticleCtx};
 use crate::particle::{handler, PFuture, PushError, Value};
@@ -268,6 +268,14 @@ fn add_noise(u: &mut Tensor, sigma: f32, rng: &mut Rng) {
 
 /// Offer `snap` to the particle's bounded reservoir (Algorithm R over the
 /// thinned post-burn-in chain). Deterministic in (seed, pid, candidate #).
+///
+/// The new `(samples, seen)` pair is committed in ONE `state_set_many`,
+/// and `samples` is read (cloned — Arc bumps) rather than taken, so the
+/// state map ALWAYS holds a consistent reservoir version:
+/// `samples.len() == min(seen, cap)`. A concurrent snapshot
+/// (`PosteriorServer::refresh`, which clones the map under the same lock)
+/// can therefore never observe a torn reservoir — the invariant
+/// `rust/tests/serve.rs` hammers.
 fn reservoir_add(ctx: &ParticleCtx, snap: Tensor, seed: u64, cap: usize) {
     if cap == 0 {
         return;
@@ -276,7 +284,7 @@ fn reservoir_add(ctx: &ParticleCtx, snap: Tensor, seed: u64, cap: usize) {
         Some(Value::Usize(n)) => n,
         _ => 0,
     };
-    let mut samples = match ctx.state_take(K_SAMPLES) {
+    let mut samples = match ctx.state_get(K_SAMPLES) {
         Some(Value::List(v)) => v,
         _ => Vec::new(),
     };
@@ -291,8 +299,10 @@ fn reservoir_add(ctx: &ParticleCtx, snap: Tensor, seed: u64, cap: usize) {
             samples[j] = Value::Tensor(snap);
         }
     }
-    ctx.state_set(K_SAMPLES, Value::List(samples));
-    ctx.state_set(K_SEEN, Value::Usize(seen + 1));
+    ctx.state_set_many(vec![
+        (K_SAMPLES.to_string(), Value::List(samples)),
+        (K_SEEN.to_string(), Value::Usize(seen + 1)),
+    ]);
 }
 
 /// A read-only snapshot of one particle's chain (for tests, tools, and the
@@ -667,6 +677,15 @@ impl SgMcmc {
         Ok(total / losses.len() as f64)
     }
 
+    /// A [`crate::infer::PosteriorServer`] over this run's chains: answers
+    /// posterior-predictive queries from versioned reservoir snapshots on
+    /// the CALLER's thread while training keeps stepping (no broadcast
+    /// round, no scheduler occupancy — DESIGN.md §10). Requires a native
+    /// model source (serving forwards run outside the device layer).
+    pub fn serve_handle(&self) -> Result<crate::infer::PosteriorServer> {
+        crate::infer::PosteriorServer::new(self.pd.serve_handle(), self.pids.clone(), &self.cfg)
+    }
+
     /// Read one chain's clock / momentum / reservoir (zero-copy clones).
     pub fn chain(&self, pid: Pid) -> ChainSnapshot {
         let mut snap = ChainSnapshot::default();
@@ -697,16 +716,18 @@ impl Infer for SgMcmc {
         self.pids.clone()
     }
 
-    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport> {
+    fn train(&mut self, source: &mut dyn BatchSource, epochs: usize) -> Result<TrainReport> {
         let mut report = TrainReport::new(self.name());
         for _ in 0..epochs {
-            let batches = loader.epoch();
+            let stream = source.epoch_stream();
             let t0 = Instant::now();
             let mut loss = 0.0;
-            for b in &batches {
+            let mut nb = 0usize;
+            for b in stream {
                 loss += self.step_all(&b.x, &b.y)?;
+                nb += 1;
             }
-            report.push(loss / batches.len().max(1) as f64, t0.elapsed().as_secs_f64());
+            report.push(loss / nb.max(1) as f64, t0.elapsed().as_secs_f64());
         }
         Ok(report)
     }
@@ -765,6 +786,31 @@ impl Infer for SgMcmc {
 
     fn transport_counters(&self) -> Vec<crate::pd::transport::TransportCounters> {
         self.pd.transport_counters()
+    }
+}
+
+/// A manifest holding ONLY the hermetic `linear_native` model spec
+/// (`d` flat weights, `[batch, d] → [batch, 1]` regression, no artifact
+/// entries). The one shared constructor behind `push train/serve
+/// --model linear_native`, the transport/serve/sgmcmc test suites, and
+/// the serving micro-benches — the spec lives in one place instead of a
+/// hand-rolled copy per crate.
+pub fn linear_native_manifest(d: usize, batch: usize) -> crate::runtime::Manifest {
+    let spec = crate::runtime::ModelSpec {
+        name: "linear_native".to_string(),
+        param_count: d,
+        task: "regress".to_string(),
+        x_shape: vec![batch, d],
+        y_shape: vec![batch, 1],
+        y_dtype: crate::runtime::DType::F32,
+        arch: "mlp".to_string(),
+        meta: std::collections::BTreeMap::new(),
+        entries: std::collections::BTreeMap::new(),
+    };
+    crate::runtime::Manifest {
+        dir: std::path::PathBuf::from("."),
+        models: [("linear_native".to_string(), spec)].into_iter().collect(),
+        svgd: Vec::new(),
     }
 }
 

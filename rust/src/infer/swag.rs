@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::data::DataLoader;
+use crate::data::BatchSource;
 use crate::infer::{Infer, TrainReport};
 use crate::nel::CreateOpts;
 use crate::particle::{handler, PFuture, Value};
@@ -267,17 +267,19 @@ impl Infer for MultiSwag {
 
     /// `epochs` total: the first `cfg.pretrain_epochs` run plain SGD, the
     /// remainder collect SWAG moments (paper §C.4's 7 + 3 split).
-    fn train(&mut self, loader: &mut DataLoader, epochs: usize) -> Result<TrainReport> {
+    fn train(&mut self, source: &mut dyn BatchSource, epochs: usize) -> Result<TrainReport> {
         let mut report = TrainReport::new(self.name());
         for e in 0..epochs {
             let collect = e >= self.cfg.pretrain_epochs;
-            let batches = loader.epoch();
+            let stream = source.epoch_stream();
             let t0 = Instant::now();
             let mut loss = 0.0;
-            for b in &batches {
+            let mut nb = 0usize;
+            for b in stream {
                 loss += self.step_all(&b.x, &b.y, collect)?;
+                nb += 1;
             }
-            report.push(loss / batches.len().max(1) as f64, t0.elapsed().as_secs_f64());
+            report.push(loss / nb.max(1) as f64, t0.elapsed().as_secs_f64());
         }
         Ok(report)
     }

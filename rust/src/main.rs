@@ -3,6 +3,7 @@
 //! ```text
 //! push info                          manifest + runtime summary
 //! push train  --model M --method A   train one configuration
+//! push serve                         train WHILE serving posterior queries
 //! push bench  fig4|fig7|table1|table2|table3|table4|stress
 //! push trace                         two-particle Figure-3b timeline
 //! ```
@@ -17,7 +18,6 @@
 //! $PUSH_NODES, `--transport tcp` spawns hermetic loopback node servers
 //! in-process (real sockets on 127.0.0.1 ephemeral ports).
 
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
@@ -25,16 +25,16 @@ use anyhow::{anyhow, bail, Result};
 use push::bench::report::results_dir;
 use push::bench::scaling::ScaleOpts;
 use push::bench::{accuracy, depth_width, scaling, Method};
-use push::data::DataLoader;
+use push::data::{DataLoader, PrefetchLoader};
 use push::device::CostModel;
 use push::infer::{
-    eval, DeepEnsemble, Infer, MultiSwag, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Svgd,
-    SvgdConfig, SwagConfig,
+    eval, DeepEnsemble, Infer, MultiSwag, PosteriorServer, Schedule, SgMcmc, SgmcmcAlgo,
+    SgmcmcConfig, Svgd, SvgdConfig, SwagConfig,
 };
 use push::nel::CreateOpts;
 use push::particle::{handler, Value};
 use push::pd::{Topology, TransportKind};
-use push::runtime::{artifacts_dir, DType, Manifest, ModelSpec};
+use push::runtime::{artifacts_dir, Manifest};
 use push::util::flags::Flags;
 use push::util::rng::Rng;
 use push::{NelConfig, PushDist, Tensor};
@@ -49,12 +49,22 @@ USAGE:
              [--lr F] [--cache N] [--seed N] [--workers N]
              [--nodes N] [--transport inproc|tcp]
              [--temp T] [--friction A] [--burn-in N] [--thin N]
-             [--samples N]                      (sgld/sghmc chain options;
+             [--samples N] [--serve-every N]    (sgld/sghmc chain options;
                                                  --method is an alias of --algo)
+  push serve [--algo sgld|sghmc] [--particles N] [--devices D] [--epochs E]
+             [--batches B] [--clients C] [--serve-every N]
+             [--nodes N] [--transport inproc|tcp] [... chain options]
   push bench <fig4|fig7|table1|table2|table3|table4|stress|ablate>
              [--devices 1,2,4] [--particles 1,2,4,8] [--batches B]
              [--epochs E] [--no-baseline] [--full] [--cache N] [--seed N]
   push trace [--model <name>]
+
+Serving: --serve-every N refreshes a PosteriorServer snapshot every N
+epochs during `push train` (sgld/sghmc on a native model) and answers a
+posterior-predictive probe from it. `push serve` is the full demo: it
+trains the hermetic linear_native model through a prefetching loader
+while --clients C threads hammer predict_mean concurrently — queries are
+answered from versioned reservoir snapshots and never pause training.
 
 Distributed NEL: --nodes N splits particles across N nodes (each with its
 own NEL, scheduler, and --devices devices). --transport tcp runs every
@@ -80,6 +90,7 @@ fn run() -> Result<()> {
     match cmd {
         "info" => info(),
         "train" => train(&flags),
+        "serve" => serve(&flags),
         "bench" => bench(&flags),
         "trace" => trace(&flags),
         // hidden: the standalone distributed-NEL node server
@@ -100,22 +111,7 @@ const NATIVE_D: usize = 8;
 const NATIVE_BATCH: usize = 16;
 
 fn native_linear_manifest() -> Manifest {
-    let spec = ModelSpec {
-        name: "linear_native".to_string(),
-        param_count: NATIVE_D,
-        task: "regress".to_string(),
-        x_shape: vec![NATIVE_BATCH, NATIVE_D],
-        y_shape: vec![NATIVE_BATCH, 1],
-        y_dtype: DType::F32,
-        arch: "mlp".to_string(),
-        meta: BTreeMap::new(),
-        entries: BTreeMap::new(),
-    };
-    Manifest {
-        dir: std::path::PathBuf::from("."),
-        models: [("linear_native".to_string(), spec)].into_iter().collect(),
-        svgd: Vec::new(),
-    }
+    push::infer::sgmcmc::linear_native_manifest(NATIVE_D, NATIVE_BATCH)
 }
 
 /// Deterministic per-particle init for the native model: keyed by
@@ -214,6 +210,8 @@ fn train(flags: &Flags) -> Result<()> {
     let seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
     // 0 = auto (one control worker per available CPU)
     let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
+    // 0 = no serving; N refreshes the posterior snapshot every N epochs
+    let serve_every = flags.usize_or("serve-every", 0).map_err(anyhow::Error::msg)?;
 
     let topology = parse_topology(flags)?;
     let is_sgmcmc = matches!(method, Method::Sgld | Method::Sghmc);
@@ -230,6 +228,11 @@ fn train(flags: &Flags) -> Result<()> {
     }
     if model_name == "linear_native" && !is_sgmcmc {
         bail!("--model linear_native trains via --algo sgld|sghmc (closed-form native model)");
+    }
+    // Validate BEFORE building the fabric: serving reads SGMCMC reservoirs
+    // through a native forward, so the non-sgmcmc case can never serve.
+    if serve_every > 0 && !is_sgmcmc {
+        bail!("--serve-every needs --algo sgld|sghmc (posterior serving reads SGMCMC reservoirs)");
     }
     let manifest = load_manifest(model_name)?;
     let cfg = NelConfig {
@@ -249,8 +252,17 @@ fn train(flags: &Flags) -> Result<()> {
         .unwrap_or_else(|| push::bench::lr_for(&model));
 
     let data = push::bench::data_for(&model, model.batch() * batches, seed + 1)?;
-    let mut loader =
-        DataLoader::new(data, model.batch(), true, seed + 2).with_max_batches(batches);
+    // Fixed probe batch for --serve-every posterior queries (the first
+    // batch-size samples, gathered before the loader takes the data);
+    // non-serving runs skip the gather entirely.
+    let probe = (serve_every > 0)
+        .then(|| data.gather(&(0..model.batch().min(data.n)).collect::<Vec<_>>()));
+    // Double-buffered pipeline: batch t+1 materializes on a background
+    // producer while the round for batch t runs on the devices; the batch
+    // sequence is bit-identical to the synchronous DataLoader.
+    let mut loader = PrefetchLoader::new(
+        DataLoader::new(data, model.batch(), true, seed + 2).with_max_batches(batches),
+    );
 
     println!(
         "training {model_name} via {} — {particles} particles on {} node(s) x {devices} \
@@ -259,6 +271,7 @@ fn train(flags: &Flags) -> Result<()> {
         topology.nodes,
         if tcp { "tcp" } else { "inproc" },
     );
+    let mut server: Option<PosteriorServer> = None;
     let mut algo: Box<dyn Infer> = match method {
         Method::Ensemble => Box::new(DeepEnsemble::new(pd, particles, lr)?),
         Method::MultiSwag => Box::new(MultiSwag::new(
@@ -295,7 +308,14 @@ fn train(flags: &Flags) -> Result<()> {
                 chain_cfg.model = push::infer::sgmcmc::linear_native_model();
                 chain_cfg.init = Some(Arc::new(move |i| native_init(seed, i)));
             }
-            Box::new(SgMcmc::new(pd, chain_cfg)?)
+            let m = SgMcmc::new(pd, chain_cfg)?;
+            if serve_every > 0 {
+                // errors here name the real constraint: serving needs a
+                // native ModelSource (artifact forwards live behind the
+                // device layer)
+                server = Some(m.serve_handle()?);
+            }
+            Box::new(m)
         }
     };
     for e in 0..epochs {
@@ -305,6 +325,22 @@ fn train(flags: &Flags) -> Result<()> {
             rep.final_loss(),
             rep.mean_epoch_secs()
         );
+        if let (Some(srv), Some(probe)) = (&server, &probe) {
+            if (e + 1) % serve_every == 0 {
+                let snap = srv.refresh_at(e + 1)?;
+                match srv.predict_mean(&probe.x) {
+                    Ok(pred) => println!(
+                        "  serve: snapshot @epoch {} ({} chains, {} samples) \
+                         probe mse {:.4}",
+                        e + 1,
+                        snap.chains.len(),
+                        snap.total_samples(),
+                        eval::batch_mse(&pred, &probe.y),
+                    ),
+                    Err(err) => println!("  serve: snapshot @epoch {} — {err}", e + 1),
+                }
+            }
+        }
     }
     let stats = algo.nel_stats();
     let s = &stats.sched;
@@ -347,6 +383,158 @@ fn train(flags: &Flags) -> Result<()> {
             );
         }
     }
+    if let Some(srv) = &server {
+        let (refreshes, queries) = srv.stats();
+        println!("serve: {refreshes} snapshot refreshes, {queries} posterior queries");
+    }
+    Ok(())
+}
+
+/// Train the hermetic linear_native model WHILE serving posterior
+/// predictions: `--clients C` threads hammer `PosteriorServer::predict_mean`
+/// against epoch-stamped reservoir snapshots as training steps — the
+/// pipelined-data + serving demo (DESIGN.md §10). Works over every
+/// transport (`--nodes`/`--transport` as in train); queries are answered
+/// on the client threads, never through the scheduler.
+fn serve(flags: &Flags) -> Result<()> {
+    let model_name = flags.str_or("model", "linear_native");
+    if model_name != "linear_native" {
+        bail!("push serve is hermetic: only --model linear_native has a native forward");
+    }
+    let algo_name = flags.str_or("algo", "sgld");
+    let method = Method::parse(&algo_name)
+        .filter(|m| matches!(*m, Method::Sgld | Method::Sghmc))
+        .ok_or_else(|| anyhow!("push serve needs --algo sgld|sghmc"))?;
+    let particles = flags.usize_or("particles", 8).map_err(anyhow::Error::msg)?;
+    let devices = flags.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
+    let epochs = flags.usize_or("epochs", 6).map_err(anyhow::Error::msg)?;
+    let batches = flags.usize_or("batches", 8).map_err(anyhow::Error::msg)?;
+    let clients = flags.usize_or("clients", 4).map_err(anyhow::Error::msg)?;
+    let serve_every = flags.usize_or("serve-every", 1).map_err(anyhow::Error::msg)?.max(1);
+    let seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
+    let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
+    let topology = parse_topology(flags)?;
+
+    let manifest = load_manifest(&model_name)?;
+    let cfg = NelConfig {
+        num_devices: devices,
+        cache_size: flags.usize_or("cache", 8).map_err(anyhow::Error::msg)?,
+        cost: CostModel::default(),
+        control_workers: workers,
+        seed,
+        ..NelConfig::default()
+    };
+    let pd = PushDist::with_topology(&manifest, &model_name, cfg, &topology)?;
+    let model = pd.model().clone();
+    let lr = flags
+        .f64("lr")
+        .map_err(anyhow::Error::msg)?
+        .map(|v| v as f32)
+        .unwrap_or(1e-2);
+    let chain_cfg = SgmcmcConfig {
+        particles,
+        algo: if method == Method::Sgld { SgmcmcAlgo::Sgld } else { SgmcmcAlgo::Sghmc },
+        schedule: Schedule::Constant { eps: lr },
+        temperature: flags.f64_or("temp", 1e-4).map_err(anyhow::Error::msg)? as f32,
+        friction: flags.f64_or("friction", 0.1).map_err(anyhow::Error::msg)? as f32,
+        // serve as early as possible by default: no burn-in, thin 1
+        burn_in: flags.usize_or("burn-in", 0).map_err(anyhow::Error::msg)?,
+        thin: flags.usize_or("thin", 1).map_err(anyhow::Error::msg)?,
+        max_samples: flags.usize_or("samples", 32).map_err(anyhow::Error::msg)?,
+        seed,
+        model: push::infer::sgmcmc::linear_native_model(),
+        init: Some(Arc::new(move |i| native_init(seed, i))),
+        ..SgmcmcConfig::default()
+    };
+    let mut algo = SgMcmc::new(pd, chain_cfg)?;
+    let server = Arc::new(algo.serve_handle()?);
+
+    let data = push::bench::data_for(&model, model.batch() * batches, seed + 1)?;
+    let probe = data.gather(&(0..model.batch().min(data.n)).collect::<Vec<_>>());
+    let mut loader = PrefetchLoader::new(
+        DataLoader::new(data, model.batch(), true, seed + 2).with_max_batches(batches),
+    );
+
+    println!(
+        "serving {model_name} while training via {} — {particles} chains on {} node(s) x \
+         {devices} device(s), {clients} client thread(s), snapshot every {serve_every} epoch(s)",
+        method.name(),
+        topology.nodes,
+    );
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let t0 = std::time::Instant::now();
+    let client_handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let server = server.clone();
+            let stop = stop.clone();
+            let x = probe.x.clone();
+            std::thread::spawn(move || {
+                let (mut ok, mut empty) = (0u64, 0u64);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    match server.predict_mean(&x) {
+                        Ok(_) => ok += 1,
+                        Err(_) => empty += 1, // pre-burn-in snapshot
+                    }
+                }
+                (ok, empty)
+            })
+        })
+        .collect();
+
+    for e in 0..epochs {
+        let rep = algo.train(&mut loader, 1)?;
+        let mut line = format!(
+            "epoch {e:>3}: loss {:>9.4}  ({:.3}s)",
+            rep.final_loss(),
+            rep.mean_epoch_secs()
+        );
+        if (e + 1) % serve_every == 0 {
+            let snap = server.refresh_at(e + 1)?;
+            line.push_str(&format!(
+                "  [snapshot @{}: {} samples across {} chains]",
+                e + 1,
+                snap.total_samples(),
+                snap.chains.len()
+            ));
+        }
+        println!("{line}");
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (mut ok, mut empty) = (0u64, 0u64);
+    for h in client_handles {
+        let (o, e) = h.join().map_err(|_| anyhow!("serve client thread panicked"))?;
+        ok += o;
+        empty += e;
+    }
+    let (refreshes, queries) = server.stats();
+    println!(
+        "\nserved {ok} posterior queries ({empty} before samples existed) in {elapsed:.2}s \
+         — {:.0} q/s across {clients} client(s); {refreshes} snapshot refreshes, \
+         {queries} total",
+        ok as f64 / elapsed.max(1e-9),
+    );
+    match server.predict_mean(&probe.x) {
+        Ok(pred) => {
+            let spread = server.predictive_std(&probe.x)?;
+            let mean_std = spread.as_f32().iter().map(|v| *v as f64).sum::<f64>()
+                / spread.element_count() as f64;
+            println!(
+                "final snapshot: probe mse {:.4}, mean epistemic std {mean_std:.4}",
+                eval::batch_mse(&pred, &probe.y),
+            );
+        }
+        Err(err) => println!("final snapshot answered no queries: {err}"),
+    }
+    let versions = server.snapshot().versions();
+    let shown: Vec<String> =
+        versions.iter().take(4).map(|(p, s)| format!("{p}:{s}")).collect();
+    println!(
+        "reservoir versions (pid:seen): {}{}",
+        shown.join(" "),
+        if versions.len() > 4 { " …" } else { "" }
+    );
     Ok(())
 }
 

@@ -861,9 +861,12 @@ impl Nel {
     /// Clone a particle's local state map (the `state=` dict of p_create
     /// plus whatever its handlers stored: Adam moments, SWAG moments,
     /// SGMCMC chain state). Tensor values are zero-copy COW clones.
-    /// Intended for quiescent points (checkpoint capture after a drain):
-    /// reading while a handler writes is safe (mutex) but may observe a
-    /// mid-update mix of keys.
+    /// The whole map is cloned under one state-lock acquisition, so the
+    /// snapshot is atomic with respect to any single `state_set` /
+    /// `state_set_many` — which is what lets the posterior serving path
+    /// read live reservoirs mid-training (DESIGN.md §10). Keys written
+    /// through SEPARATE state calls may still be observed mid-update;
+    /// checkpoint capture therefore still quiesces (drain) first.
     pub fn particle_state(&self, pid: Pid) -> Option<Vec<(String, Value)>> {
         let entry = self.inner.particles.read().unwrap().get(&pid).cloned()?;
         let st = entry.state.lock().unwrap();
@@ -1014,6 +1017,18 @@ impl ParticleCtx {
 
     pub fn state_set(&self, key: &str, v: Value) {
         self.state.lock().unwrap().insert(key.to_string(), v);
+    }
+
+    /// Set several entries under ONE lock acquisition. `Nel::particle_state`
+    /// clones the whole map under the same lock, so a concurrent state
+    /// reader (the posterior-predictive serving path, DESIGN.md §10) sees
+    /// either none or all of these keys — a multi-key update committed
+    /// through separate `state_set` calls could be observed torn.
+    pub fn state_set_many(&self, entries: Vec<(String, Value)>) {
+        let mut st = self.state.lock().unwrap();
+        for (k, v) in entries {
+            st.insert(k, v);
+        }
     }
 
     pub fn state_take(&self, key: &str) -> Option<Value> {

@@ -31,8 +31,13 @@ use crate::pd::transport::TransportCounters;
 use crate::pd::wire::DirectOp;
 use crate::runtime::{Manifest, ModelSpec, Tensor};
 
+/// Clone = an Arc bump of the shared fabric, not a new fabric: every
+/// clone sees the same nodes, pids, and particles. This is what makes a
+/// PD handle shareable with serving-side readers ([`PushDist::serve_handle`])
+/// while the training side keeps driving the same particles.
+#[derive(Clone)]
 pub struct PushDist {
-    fabric: fabric::NodeFabric,
+    fabric: Arc<fabric::NodeFabric>,
     model: Arc<ModelSpec>,
     manifest_dir: std::path::PathBuf,
     svgd: Vec<crate::runtime::SvgdSpec>,
@@ -57,7 +62,7 @@ impl PushDist {
         topology: &Topology,
     ) -> Result<PushDist> {
         let model = Arc::new(manifest.model(model_name)?.clone());
-        let fabric = fabric::NodeFabric::new(topology, &cfg, model.clone())?;
+        let fabric = Arc::new(fabric::NodeFabric::new(topology, &cfg, model.clone())?);
         Ok(PushDist {
             fabric,
             model,
@@ -74,6 +79,16 @@ impl PushDist {
     /// case).
     pub fn nodes(&self) -> usize {
         self.fabric.nodes()
+    }
+
+    /// A shareable handle for serving-side readers: an Arc bump of the
+    /// fabric (see the `Clone` note above). Snapshots taken through the
+    /// handle — in-process zero-copy state clones, or `ParticleState`
+    /// frames over a wire transport — observe exactly the particles the
+    /// training side owns, and never block training beyond a brief
+    /// per-particle state-mutex hold.
+    pub fn serve_handle(&self) -> PushDist {
+        self.clone()
     }
 
     /// Which node owns `pid`.

@@ -9,6 +9,9 @@
 //! * svgd_update_native: permutation equivariance, large-h limit
 //! * SWAG streaming moments match batch recomputation
 //! * DataLoader epochs cover each sample at most once
+//! * PrefetchLoader batch streams are byte-identical to the synchronous
+//!   DataLoader epochs across a (seed, batch_size, max_batches, shuffle)
+//!   grid — asynchrony changes timing, never data (DESIGN.md §10)
 //! * Wire codec: arbitrary nested Value round-trip, truncated/oversized
 //!   frame rejection, and checkpoint-file/wire-codec byte identity (the
 //!   v1/v2 checkpoint compatibility seam)
@@ -255,6 +258,111 @@ fn prop_loader_no_repeats_within_epoch() {
             seen.sort_unstable();
             seen.dedup();
             assert_eq!(seen.len(), len_before, "seed {seed}: repeated sample");
+        }
+    }
+}
+
+/// Bit-level equality of two batches (stricter than Tensor's PartialEq:
+/// f32 payloads are compared by bit pattern, i32 labels exactly).
+fn batch_bits_equal(a: &push::data::Batch, b: &push::data::Batch) -> bool {
+    use push::runtime::DType;
+    if a.x.shape != b.x.shape || a.y.shape != b.y.shape {
+        return false;
+    }
+    let x_same = a
+        .x
+        .as_f32()
+        .iter()
+        .zip(b.x.as_f32())
+        .all(|(p, q)| p.to_bits() == q.to_bits());
+    let y_same = match a.y.dtype() {
+        DType::I32 => a.y.as_i32() == b.y.as_i32(),
+        _ => a
+            .y
+            .as_f32()
+            .iter()
+            .zip(b.y.as_f32())
+            .all(|(p, q)| p.to_bits() == q.to_bits()),
+    };
+    x_same && y_same
+}
+
+#[test]
+fn prop_prefetch_stream_equals_sync() {
+    use push::data::{BatchSource, DataLoader, Dataset, PrefetchLoader};
+
+    // (n, batch_size, max_batches, classify): covers the ragged-tail-drop
+    // edge (n % batch_size != 0), the single-full-batch edge
+    // (n == batch_size), a max_batches cap tighter than the data, a cap
+    // looser than the data, and an i32-label dataset.
+    let cases: &[(usize, usize, Option<usize>, bool)] = &[
+        (13, 4, None, false),       // ragged tail: 13 % 4 != 0
+        (8, 8, None, false),        // n == batch_size: exactly one batch
+        (24, 4, Some(3), false),    // cap below the 6 available batches
+        (20, 5, Some(99), false),   // cap above the 4 available batches
+        (10, 3, None, true),        // classify labels + ragged tail
+        (9, 2, Some(2), true),      // classify + cap + ragged tail
+    ];
+    let mk_data = |n: usize, classify: bool| -> Dataset {
+        if classify {
+            let mut d = Dataset::new_classify(vec![3]);
+            for i in 0..n {
+                let f = i as f32;
+                d.push_classify(&[f, -f, 0.5 * f], (i % 4) as i32);
+            }
+            d
+        } else {
+            let mut d = Dataset::new_f32(vec![2], vec![1]);
+            for i in 0..n {
+                let f = i as f32;
+                d.push_f32(&[f, -f], &[2.0 * f]);
+            }
+            d
+        }
+    };
+
+    for seed in 0..6u64 {
+        for &shuffle in &[false, true] {
+            for (ci, &(n, bsz, cap, classify)) in cases.iter().enumerate() {
+                let mk_loader = || {
+                    let mut l = DataLoader::new(mk_data(n, classify), bsz, shuffle, seed);
+                    if let Some(m) = cap {
+                        l = l.with_max_batches(m);
+                    }
+                    l
+                };
+                let mut sync = mk_loader();
+                let mut pre = PrefetchLoader::new(mk_loader());
+                assert_eq!(pre.batches_per_epoch(), sync.batches_per_epoch());
+                // 3 epochs: the shuffle stream must advance identically
+                // epoch over epoch on both paths
+                for epoch in 0..3 {
+                    let want = sync.epoch();
+                    let stream = pre.epoch_stream();
+                    assert_eq!(
+                        stream.len(),
+                        want.len(),
+                        "seed {seed} case {ci} epoch {epoch}: stream length"
+                    );
+                    let mut got = Vec::new();
+                    for b in stream {
+                        got.push(b);
+                    }
+                    assert_eq!(
+                        got.len(),
+                        want.len(),
+                        "seed {seed} case {ci} epoch {epoch}: batch count"
+                    );
+                    for (bi, (w, g)) in want.iter().zip(&got).enumerate() {
+                        assert!(
+                            batch_bits_equal(w, g),
+                            "seed {seed} case {ci} (n={n} bsz={bsz} cap={cap:?} \
+                             classify={classify} shuffle={shuffle}) epoch {epoch} \
+                             batch {bi}: prefetch diverged from sync"
+                        );
+                    }
+                }
+            }
         }
     }
 }

@@ -1,0 +1,282 @@
+//! Serving-under-load stress tests (hermetic: native linear model, no
+//! artifacts, no PJRT; the TCP case uses real 127.0.0.1 sockets).
+//!
+//! The acceptance bar of the pipelined-data + serving subsystem
+//! (DESIGN.md §10):
+//! * hammering `PosteriorServer::predict_mean` from 8 threads while SGLD
+//!   trains 64 particles on the M:N scheduler neither panics nor
+//!   deadlocks;
+//! * every snapshot a reader takes is a COMPLETE reservoir version —
+//!   `samples.len() == min(seen, cap)` for every chain, never a torn
+//!   mid-commit mix (the chain handler commits `(samples, seen)`
+//!   atomically);
+//! * training under full serve traffic produces BIT-IDENTICAL losses and
+//!   final parameters to a run with zero traffic — serving reads
+//!   snapshots, it never perturbs chains;
+//! * a snapshot taken over TCP (`spawn_loopback_node`-backed fabric)
+//!   equals the in-process snapshot: same versions, same sample bytes,
+//!   same served predictions.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use push::data::{synth, Batch, DataLoader};
+use push::device::CostModel;
+use push::infer::sgmcmc::{
+    linear_native_manifest, linear_native_model, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Schedule,
+};
+use push::pd::{Topology, TransportKind};
+use push::runtime::Tensor;
+use push::util::rng::Rng;
+use push::{NelConfig, PushDist};
+
+const D: usize = 6;
+const BATCH: usize = 8;
+const CAP: usize = 8;
+
+fn pd_with(nodes: usize, transport: TransportKind) -> PushDist {
+    let cfg = NelConfig {
+        num_devices: 2,
+        cache_size: 4,
+        cost: CostModel::free(),
+        control_workers: 4,
+        seed: 7,
+        ..NelConfig::default()
+    };
+    PushDist::with_topology(
+        &linear_native_manifest(D, BATCH),
+        "linear_native",
+        cfg,
+        &Topology { nodes, transport },
+    )
+    .unwrap()
+}
+
+fn init_params(i: usize) -> Tensor {
+    Tensor::f32(vec![D], Rng::new(0xD1CE).fold_in(i as u64).normal_vec(D))
+}
+
+fn chain_cfg(particles: usize, algo: SgmcmcAlgo, temperature: f32) -> SgmcmcConfig {
+    SgmcmcConfig {
+        particles,
+        algo,
+        schedule: Schedule::Constant { eps: 2e-2 },
+        temperature,
+        friction: 0.2,
+        // no burn-in, thin 1: reservoirs fill from step 0, and 30 steps
+        // against CAP = 8 drive Algorithm R's replacement path too
+        burn_in: 0,
+        thin: 1,
+        max_samples: CAP,
+        prior_std: None,
+        seed: 33,
+        model: linear_native_model(),
+        init: Some(Arc::new(init_params)),
+    }
+}
+
+fn fixed_batches(n_batches: usize, seed: u64) -> Vec<Batch> {
+    let data = synth::linear(BATCH * n_batches, D, 0.05, seed);
+    DataLoader::new(data, BATCH, false, 0).epoch()
+}
+
+fn probe_x() -> Tensor {
+    Tensor::f32(vec![BATCH, D], Rng::new(0x9a0b).normal_vec(BATCH * D))
+}
+
+/// (a) no panic/deadlock, (b) no torn reservoir versions, (c) training is
+/// bit-identical with vs without serve traffic — all in one run pair.
+#[test]
+fn serving_under_load_never_tears_or_perturbs_training() {
+    let particles = 64;
+    let batches = fixed_batches(30, 5);
+    let x = probe_x();
+
+    // ---- run 1: SGLD training with 8 reader threads hammering ----------
+    let cfg = chain_cfg(particles, SgmcmcAlgo::Sgld, 0.0);
+    let algo = SgMcmc::new(pd_with(1, TransportKind::InProc), cfg).unwrap();
+    let server = Arc::new(algo.serve_handle().unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..8)
+        .map(|t| {
+            let server = server.clone();
+            let stop = stop.clone();
+            let x = x.clone();
+            std::thread::spawn(move || {
+                let (mut answered, mut empty) = (0u64, 0u64);
+                let mut stamp = t as usize; // distinct stamps per thread
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = server.refresh(stamp).expect("refresh failed");
+                    stamp += 8;
+                    for chain in &snap.chains {
+                        // the no-torn-snapshot invariant: a version is
+                        // COMPLETE — kept set size matches its seen count
+                        assert_eq!(
+                            chain.samples.len(),
+                            chain.seen.min(CAP),
+                            "{}: torn reservoir (seen {}, kept {})",
+                            chain.pid,
+                            chain.seen,
+                            chain.samples.len()
+                        );
+                        for s in &chain.samples {
+                            assert_eq!(s.element_count(), D, "{}: torn sample", chain.pid);
+                        }
+                    }
+                    match server.predict_mean(&x) {
+                        Ok(pred) => {
+                            assert_eq!(pred.shape, vec![BATCH, 1]);
+                            assert!(pred.as_f32().iter().all(|v| v.is_finite()));
+                            answered += 1;
+                        }
+                        Err(e) => {
+                            assert!(
+                                format!("{e:#}").contains("no samples"),
+                                "unexpected serve error: {e:#}"
+                            );
+                            empty += 1;
+                        }
+                    }
+                }
+                (answered, empty)
+            })
+        })
+        .collect();
+
+    let mut losses = Vec::with_capacity(batches.len());
+    for b in &batches {
+        losses.push(algo.step_all(&b.x, &b.y).unwrap());
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut answered = 0u64;
+    for h in readers {
+        let (ok, _empty) = h.join().expect("serve reader thread panicked");
+        answered += ok;
+    }
+
+    // the serving path must actually have answered under load (reservoirs
+    // fill from the very first step: burn_in 0, thin 1), and must answer
+    // now that training is done
+    let snap = server.refresh(usize::MAX - 1).unwrap();
+    assert_eq!(snap.chains.len(), particles);
+    assert!(snap.total_samples() >= particles, "reservoirs never filled");
+    server.predict_mean(&x).expect("post-training predict");
+    assert!(answered > 0, "8 hammering readers never got one answer");
+    let (refreshes, queries) = server.stats();
+    assert!(refreshes > 0 && queries > 0);
+
+    // ---- run 2: identical training, zero serve traffic -----------------
+    let cfg = chain_cfg(particles, SgmcmcAlgo::Sgld, 0.0);
+    let quiet = SgMcmc::new(pd_with(1, TransportKind::InProc), cfg).unwrap();
+    let mut quiet_losses = Vec::with_capacity(batches.len());
+    for b in &batches {
+        quiet_losses.push(quiet.step_all(&b.x, &b.y).unwrap());
+    }
+
+    // (c) bit-identical: per-step losses AND final parameters
+    assert_eq!(losses.len(), quiet_losses.len());
+    for (i, (a, b)) in losses.iter().zip(&quiet_losses).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "step {i}: loss diverged under serve traffic ({a} vs {b})"
+        );
+    }
+    let served = algo.pd().drain_params().unwrap();
+    let untouched = quiet.pd().drain_params().unwrap();
+    assert_eq!(served.len(), untouched.len());
+    for (pid, want) in &untouched {
+        assert_eq!(&served[pid], want, "{pid}: params diverged under serve traffic");
+    }
+}
+
+/// (d) a snapshot taken through a TCP fabric (loopback node servers on
+/// real sockets) equals the in-process snapshot — versions, sample bytes,
+/// and served predictions.
+#[test]
+fn snapshot_over_tcp_matches_in_process() {
+    let particles = 6;
+    let batches = fixed_batches(8, 9);
+    let x = probe_x();
+
+    let run = |pd: PushDist| -> SgMcmc {
+        let algo = SgMcmc::new(pd, chain_cfg(particles, SgmcmcAlgo::Sghmc, 1e-3)).unwrap();
+        for b in &batches {
+            algo.step_all(&b.x, &b.y).unwrap();
+        }
+        algo
+    };
+    let local = run(pd_with(1, TransportKind::InProc));
+    let tcp = run(pd_with(2, TransportKind::TcpLoopback));
+
+    let s_local = local.serve_handle().unwrap();
+    let s_tcp = tcp.serve_handle().unwrap();
+    let snap_local = s_local.refresh(1).unwrap();
+    let snap_tcp = s_tcp.refresh(1).unwrap();
+
+    assert_eq!(snap_local.versions(), snap_tcp.versions(), "versions diverged over TCP");
+    assert!(snap_local.total_samples() > 0);
+    for (a, b) in snap_local.chains.iter().zip(&snap_tcp.chains) {
+        assert_eq!(a.pid, b.pid);
+        assert_eq!(a.samples.len(), b.samples.len(), "{}: kept-set size", a.pid);
+        for (sa, sb) in a.samples.iter().zip(&b.samples) {
+            // owned wire decode vs zero-copy clone: same bytes exactly
+            assert_eq!(sa, sb, "{}: sample bytes diverged over the wire", a.pid);
+        }
+    }
+
+    // served answers are the same function of the same snapshot
+    let pa = s_local.predict_mean(&x).unwrap();
+    let pb = s_tcp.predict_mean(&x).unwrap();
+    assert_eq!(pa, pb, "served prediction diverged over TCP");
+    let va = s_local.predictive_std(&x).unwrap();
+    let vb = s_tcp.predictive_std(&x).unwrap();
+    assert_eq!(va, vb, "served predictive std diverged over TCP");
+
+    // tcp fabric actually framed the snapshot requests
+    let counters = tcp.pd().transport_counters();
+    assert!(
+        counters.iter().any(|c| c.frames_sent > 0),
+        "tcp snapshot produced no frames"
+    );
+}
+
+/// The epoch-stamped refresh policy: refresh_at is a no-op on the current
+/// stamp (same Arc back), a real refresh on a new stamp, and versions
+/// only grow.
+#[test]
+fn refresh_at_caches_by_epoch_stamp_and_versions_grow() {
+    let particles = 4;
+    let batches = fixed_batches(6, 11);
+    let cfg = chain_cfg(particles, SgmcmcAlgo::Sgld, 0.0);
+    let algo = SgMcmc::new(pd_with(1, TransportKind::InProc), cfg).unwrap();
+    let server = algo.serve_handle().unwrap();
+
+    // before any refresh: the empty snapshot answers nothing
+    let err = server.predict_mean(&probe_x()).unwrap_err();
+    assert!(format!("{err:#}").contains("no samples"), "{err:#}");
+
+    for b in &batches[..3] {
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    let first = server.refresh_at(1).unwrap();
+    let cached = server.refresh_at(1).unwrap();
+    assert!(Arc::ptr_eq(&first, &cached), "same stamp must reuse the snapshot");
+
+    for b in &batches[3..] {
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    let second = server.refresh_at(2).unwrap();
+    assert!(!Arc::ptr_eq(&first, &second), "new stamp must re-snapshot");
+    for (a, b) in first.versions().iter().zip(second.versions()) {
+        assert_eq!(a.0, b.0);
+        assert!(a.1 <= b.1, "{}: version went backwards ({} -> {})", a.0, a.1, b.1);
+    }
+    assert_eq!(second.versions().iter().map(|v| v.1).max(), Some(6), "6 candidates seen");
+
+    // the never-refreshed sentinel stamp must SNAPSHOT, not hand back the
+    // empty initial snapshot as a cache hit
+    let sentinel = server.refresh_at(usize::MAX).unwrap();
+    assert_eq!(sentinel.chains.len(), particles);
+    assert!(sentinel.total_samples() > 0, "sentinel stamp returned the empty snapshot");
+}

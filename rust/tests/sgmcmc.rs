@@ -11,7 +11,6 @@
 //! * The bounded reservoir respects burn-in / thinning / capacity under a
 //!   1024-particle stress round.
 
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use push::data::{synth, Batch, DataLoader};
@@ -23,7 +22,7 @@ use push::infer::sgmcmc::{
 use push::infer::Infer;
 use push::pd::checkpoint::Checkpoint;
 use push::runtime::tensor::ops;
-use push::runtime::{DType, Manifest, ModelSpec, Tensor};
+use push::runtime::{Manifest, Tensor};
 use push::util::rng::Rng;
 use push::{NelConfig, PushDist};
 
@@ -31,22 +30,7 @@ const D: usize = 6;
 const BATCH: usize = 8;
 
 fn native_manifest() -> Manifest {
-    let spec = ModelSpec {
-        name: "linear_native".to_string(),
-        param_count: D,
-        task: "regress".to_string(),
-        x_shape: vec![BATCH, D],
-        y_shape: vec![BATCH, 1],
-        y_dtype: DType::F32,
-        arch: "mlp".to_string(),
-        meta: BTreeMap::new(),
-        entries: BTreeMap::new(),
-    };
-    Manifest {
-        dir: std::path::PathBuf::from("."),
-        models: [("linear_native".to_string(), spec)].into_iter().collect(),
-        svgd: Vec::new(),
-    }
+    push::infer::sgmcmc::linear_native_manifest(D, BATCH)
 }
 
 fn pd(devices: usize, workers: usize) -> PushDist {

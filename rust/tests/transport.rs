@@ -27,7 +27,7 @@ use push::nel::CreateOpts;
 use push::particle::{handler, PFuture, Value};
 use push::pd::checkpoint::Checkpoint;
 use push::pd::{SpecOpts, Topology, TransportKind};
-use push::runtime::{DType, Manifest, ModelSpec, Tensor};
+use push::runtime::{Manifest, Tensor};
 use push::util::rng::Rng;
 use push::{NelConfig, Pid, PushDist};
 
@@ -35,22 +35,7 @@ const D: usize = 6;
 const BATCH: usize = 8;
 
 fn native_manifest() -> Manifest {
-    let spec = ModelSpec {
-        name: "linear_native".to_string(),
-        param_count: D,
-        task: "regress".to_string(),
-        x_shape: vec![BATCH, D],
-        y_shape: vec![BATCH, 1],
-        y_dtype: DType::F32,
-        arch: "mlp".to_string(),
-        meta: BTreeMap::new(),
-        entries: BTreeMap::new(),
-    };
-    Manifest {
-        dir: std::path::PathBuf::from("."),
-        models: [("linear_native".to_string(), spec)].into_iter().collect(),
-        svgd: Vec::new(),
-    }
+    push::infer::sgmcmc::linear_native_manifest(D, BATCH)
 }
 
 fn pd_with(nodes: usize, transport: TransportKind) -> PushDist {
