@@ -9,8 +9,11 @@
 //! cost under cache pressure, parameter views, the native SVGD kernel
 //! math, the SGMCMC chain-step body (SGLD update + native linear
 //! gradient), the prefetching data pipeline (a 40-batch epoch with the
-//! gathers overlapped vs synchronous), and posterior serving under
-//! training load (SGLD rounds with vs without hammering readers).
+//! gathers overlapped vs synchronous), posterior serving under training
+//! load (SGLD rounds with vs without hammering readers), and the
+//! heartbeat monitor's tax on a 2-node training loop (SGLD rounds over
+//! TCP loopback with the liveness monitor at an aggressive 2ms cadence
+//! vs no monitor).
 //!
 //! Hermetic by default: the zero-copy-plane cases (params_view, SVGD
 //! stacking round, send-label interning) need no artifacts and no PJRT.
@@ -31,7 +34,7 @@ use push::device::{CostModel, HostStore, ResidentCache};
 use push::nel::trace::Trace;
 use push::nel::CreateOpts;
 use push::particle::{handler, PFuture, Value};
-use push::pd::{wire, SpecOpts, Topology, TransportKind};
+use push::pd::{wire, FabricConfig, SpecOpts, Topology, TransportKind};
 use push::runtime::tensor::ops;
 use push::runtime::{artifacts_dir, DType, Manifest, ModelSpec, Tensor};
 use push::util::json::Json;
@@ -528,6 +531,81 @@ fn main() {
         }
         let (refreshes, queries) = server.stats();
         println!("    (serve load: {refreshes} refreshes, {queries} queries during the case)");
+    }
+
+    // ---- heartbeat monitor tax on a 2-node training loop ------------------
+    // One training round = 20 SGLD chain steps (8 particles, native linear
+    // model) over a REAL 2-node TCP-loopback fabric. The monitored case
+    // runs the SAME rounds with the liveness monitor probing both links at
+    // a 2ms cadence — far hotter than any production setting — and the
+    // gate bounds the tax at 1.05x (BENCH_l3.json, inverted-ratio form):
+    // heartbeat frames are ~18 bytes, never carry tensors, and bypass the
+    // data-path counters, so the only shared cost is socket write
+    // interleaving on the link's writer mutex.
+    {
+        use push::infer::sgmcmc::{
+            linear_native_manifest, linear_native_model, SgMcmc, SgmcmcAlgo, SgmcmcConfig,
+        };
+        const HD: usize = 32;
+        const HB: usize = 16;
+        let hb_manifest = linear_native_manifest(HD, HB);
+        let chain_cfg = || SgmcmcConfig {
+            particles: 8,
+            algo: SgmcmcAlgo::Sgld,
+            schedule: push::infer::Schedule::Constant { eps: 1e-2 },
+            temperature: 0.0,
+            burn_in: 0,
+            thin: 1,
+            max_samples: 8,
+            seed: 5,
+            model: linear_native_model(),
+            init: Some(Arc::new(|i| {
+                Tensor::f32(vec![HD], Rng::new(0x4b).fold_in(i as u64).normal_vec(HD))
+            })),
+            ..SgmcmcConfig::default()
+        };
+        let mk_algo = |fabric: &FabricConfig| {
+            let pd = PushDist::with_topology_and_fabric(
+                &hb_manifest,
+                "linear_native",
+                NelConfig { control_workers: 2, ..cfg(2, 4) },
+                &Topology { nodes: 2, transport: TransportKind::TcpLoopback },
+                fabric,
+            )
+            .unwrap();
+            SgMcmc::new(pd, chain_cfg()).unwrap()
+        };
+        let mut rng = Rng::new(23);
+        let rounds: Vec<(Tensor, Tensor)> = (0..20)
+            .map(|_| {
+                (
+                    Tensor::f32(vec![HB, HD], rng.normal_vec(HB * HD)),
+                    Tensor::f32(vec![HB, 1], rng.normal_vec(HB)),
+                )
+            })
+            .collect();
+
+        let algo = mk_algo(&FabricConfig::default()); // no monitor thread
+        run(&mut results, "heartbeat_overhead_2node_off", 2, 30, || {
+            for (x, y) in &rounds {
+                algo.step_all(x, y).unwrap();
+            }
+        });
+
+        let fabric = FabricConfig {
+            heartbeat_every: Some(std::time::Duration::from_millis(2)),
+            dead_after: std::time::Duration::from_millis(500),
+        };
+        let algo = mk_algo(&fabric);
+        run(&mut results, "heartbeat_overhead_2node", 2, 30, || {
+            for (x, y) in &rounds {
+                algo.step_all(x, y).unwrap();
+            }
+        });
+        let counters = algo.pd().transport_counters();
+        let probes: u64 = counters.iter().map(|c| c.heartbeats).sum();
+        let errors: u64 = counters.iter().map(|c| c.errors).sum();
+        println!("    (monitor: {probes} probes sent, {errors} link errors during the case)");
     }
 
     // ---- tensor stacking (leader-side gather cost) ------------------------

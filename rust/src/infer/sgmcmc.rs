@@ -47,6 +47,7 @@ use crate::data::BatchSource;
 use crate::infer::{eval, Infer, TrainReport};
 use crate::nel::{CreateOpts, ParticleCtx};
 use crate::particle::{handler, PFuture, PushError, Value};
+use crate::pd::checkpoint::Checkpoint;
 use crate::pd::PushDist;
 use crate::runtime::tensor::ops;
 use crate::runtime::Tensor;
@@ -438,6 +439,11 @@ pub struct SgMcmc {
     pd: PushDist,
     pids: Vec<Pid>,
     pub cfg: SgmcmcConfig,
+    /// Node-death recovery budget of [`Infer::train`]: how many rounds may
+    /// be replayed-after-migration before the run fails loudly. 0 (the
+    /// default) disables the checkpoint-and-retry wrapper entirely — the
+    /// driver behaves exactly as before this field existed.
+    recover_rounds: usize,
 }
 
 /// Build the `MCMC_STEP` / `MCMC_PREDICT` handler table for one chain
@@ -649,7 +655,17 @@ impl SgMcmc {
                 ..CreateOpts::default()
             })?
         };
-        Ok(SgMcmc { pd, pids, cfg })
+        Ok(SgMcmc { pd, pids, cfg, recover_rounds: 0 })
+    }
+
+    /// Arm the bounded checkpoint-and-retry wrapper: up to `rounds` rounds
+    /// may be recovered (migrate the dead node's chains from the last
+    /// checkpoint, rewind survivors, replay the round) before training
+    /// fails loudly naming the dead node(s). See DESIGN.md §Elastic
+    /// fabric.
+    pub fn with_recovery(mut self, rounds: usize) -> Self {
+        self.recover_rounds = rounds;
+        self
     }
 
     pub fn pd(&self) -> &PushDist {
@@ -675,6 +691,97 @@ impl SgMcmc {
             total += l.f32().map_err(|e| anyhow!("{e}"))? as f64;
         }
         Ok(total / losses.len() as f64)
+    }
+
+    /// [`SgMcmc::step_all`] wrapped in bounded node-death recovery: on
+    /// success the checkpoint advances to the post-round state; on a
+    /// failure caused by a DEAD link (any other failure propagates as-is)
+    /// the dead node's chains are migrated onto survivors from `ckpt`,
+    /// the survivors are rewound to `ckpt`, and the SAME round replays —
+    /// deterministic streams are keyed by (seed, global pid, step), so the
+    /// replayed round is bit-identical to the one the dead node
+    /// interrupted. `used` counts recoveries across the whole run; once it
+    /// would exceed the budget, the error names the dead node(s) — a loud
+    /// failure, never a hang.
+    pub fn step_all_recovering(
+        &self,
+        x: &Tensor,
+        y: &Tensor,
+        ckpt: &mut Checkpoint,
+        used: &mut usize,
+    ) -> Result<f64> {
+        loop {
+            // The capture is part of the round: a node dying between the
+            // barrier and the capture is recovered exactly like one dying
+            // mid-round (`ckpt` still holds the pre-round state either way).
+            let round = self
+                .step_all(x, y)
+                .and_then(|loss| Checkpoint::capture(&self.pd).map(|c| (loss, c)));
+            match round {
+                Ok((loss, c)) => {
+                    *ckpt = c;
+                    return Ok(loss);
+                }
+                Err(e) => {
+                    let dead = self.pd.dead_nodes();
+                    if dead.is_empty() {
+                        return Err(e);
+                    }
+                    let names: Vec<String> = dead
+                        .iter()
+                        .map(|n| match self.pd.peer_addr(*n) {
+                            Some(a) => format!("node {n} ({a})"),
+                            None => format!("node {n}"),
+                        })
+                        .collect();
+                    if *used >= self.recover_rounds {
+                        return Err(anyhow!(
+                            "recover budget ({}) exhausted; dead node(s): {}; last error: {e:#}",
+                            self.recover_rounds,
+                            names.join(", ")
+                        ));
+                    }
+                    *used += 1;
+                    crate::log_warn!(
+                        "dead node(s) {}; migrating chains and replaying round (recovery {}/{})",
+                        names.join(", "),
+                        used,
+                        self.recover_rounds
+                    );
+                    self.pd.recover(ckpt)?;
+                    // Restore MERGES state keys, so it cannot delete a key
+                    // the failed round added but `ckpt` predates (e.g. the
+                    // reservoir of a chain's first sample step). Reset
+                    // such keys to their pre-round defaults explicitly —
+                    // each default is read identically to the key being
+                    // absent — so the replay is bit-identical for ANY
+                    // kill step, not just post-first-sample ones.
+                    for pid in &self.pids {
+                        let have = ckpt.state.get(pid);
+                        let has = |k: &str| {
+                            have.map(|e| e.iter().any(|(key, _)| key == k)).unwrap_or(false)
+                        };
+                        let mut reset: Vec<(String, Value)> = Vec::new();
+                        if !has(K_STEP) {
+                            reset.push((K_STEP.to_string(), Value::Usize(0)));
+                        }
+                        if !has(K_SEEN) {
+                            reset.push((K_SEEN.to_string(), Value::Usize(0)));
+                            reset.push((K_SAMPLES.to_string(), Value::List(Vec::new())));
+                        }
+                        if self.cfg.algo == SgmcmcAlgo::Sghmc && !has(K_MOM) {
+                            let d = self.pd.model().param_count;
+                            reset.push((K_MOM.to_string(), Value::Tensor(Tensor::zeros(vec![d]))));
+                        }
+                        if !reset.is_empty() {
+                            self.pd
+                                .restore_particle_state(*pid, reset)
+                                .map_err(|e| anyhow!("{e}"))?;
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// A [`crate::infer::PosteriorServer`] over this run's chains: answers
@@ -718,6 +825,25 @@ impl Infer for SgMcmc {
 
     fn train(&mut self, source: &mut dyn BatchSource, epochs: usize) -> Result<TrainReport> {
         let mut report = TrainReport::new(self.name());
+        if self.recover_rounds > 0 && self.pd.nodes() > 1 {
+            // Elastic path: per-round checkpoint (COW — no parameter-sized
+            // copies) so a node death mid-round migrates + replays instead
+            // of killing the run. The budget spans the whole run.
+            let mut ckpt = Checkpoint::capture(&self.pd)?;
+            let mut used = 0usize;
+            for _ in 0..epochs {
+                let stream = source.epoch_stream();
+                let t0 = Instant::now();
+                let mut loss = 0.0;
+                let mut nb = 0usize;
+                for b in stream {
+                    loss += self.step_all_recovering(&b.x, &b.y, &mut ckpt, &mut used)?;
+                    nb += 1;
+                }
+                report.push(loss / nb.max(1) as f64, t0.elapsed().as_secs_f64());
+            }
+            return Ok(report);
+        }
         for _ in 0..epochs {
             let stream = source.epoch_stream();
             let t0 = Instant::now();

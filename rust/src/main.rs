@@ -33,7 +33,7 @@ use push::infer::{
 };
 use push::nel::CreateOpts;
 use push::particle::{handler, Value};
-use push::pd::{Topology, TransportKind};
+use push::pd::{FabricConfig, Topology, TransportKind};
 use push::runtime::{artifacts_dir, Manifest};
 use push::util::flags::Flags;
 use push::util::rng::Rng;
@@ -48,6 +48,7 @@ USAGE:
              [--particles N] [--devices D] [--epochs E] [--batches B]
              [--lr F] [--cache N] [--seed N] [--workers N]
              [--nodes N] [--transport inproc|tcp]
+             [--heartbeat-every MS] [--dead-after MS] [--recover N]
              [--temp T] [--friction A] [--burn-in N] [--thin N]
              [--samples N] [--serve-every N]    (sgld/sghmc chain options;
                                                  --method is an alias of --algo)
@@ -72,6 +73,15 @@ node behind a real socket — hermetic 127.0.0.1 loopback servers, or the
 addresses in $PUSH_NODES (host:port,host:port — launched via the node
 worker). sgld/sghmc span nodes; --model linear_native trains the
 closed-form linear model with no artifacts at all.
+
+Elastic fabric: --heartbeat-every MS pings every node link on that
+cadence and declares a link dead after --dead-after MS of silence
+(default 4x the cadence), failing its pending futures instead of
+hanging. --recover N arms sgld/sghmc with a bounded checkpoint-and-retry
+budget: up to N rounds survive a node death by migrating the dead
+node's chains onto survivors (original pids — the replayed run is
+bit-identical to an uninterrupted one); an exhausted budget fails
+loudly naming the dead node.
 
 Artifacts are read from $PUSH_ARTIFACTS or <repo>/artifacts (make artifacts).
 Bench JSON is written to $PUSH_BENCH_DIR or <repo>/bench_results.
@@ -212,6 +222,11 @@ fn train(flags: &Flags) -> Result<()> {
     let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
     // 0 = no serving; N refreshes the posterior snapshot every N epochs
     let serve_every = flags.usize_or("serve-every", 0).map_err(anyhow::Error::msg)?;
+    // elastic fabric: 0 disables the heartbeat monitor / recovery budget
+    let heartbeat_ms = flags.usize_or("heartbeat-every", 0).map_err(anyhow::Error::msg)?;
+    let dead_after_ms =
+        flags.usize_or("dead-after", heartbeat_ms * 4).map_err(anyhow::Error::msg)?;
+    let recover = flags.usize_or("recover", 0).map_err(anyhow::Error::msg)?;
 
     let topology = parse_topology(flags)?;
     let is_sgmcmc = matches!(method, Method::Sgld | Method::Sghmc);
@@ -234,6 +249,9 @@ fn train(flags: &Flags) -> Result<()> {
     if serve_every > 0 && !is_sgmcmc {
         bail!("--serve-every needs --algo sgld|sghmc (posterior serving reads SGMCMC reservoirs)");
     }
+    if recover > 0 && !is_sgmcmc {
+        bail!("--recover needs --algo sgld|sghmc (chain migration replays SGMCMC rounds)");
+    }
     let manifest = load_manifest(model_name)?;
     let cfg = NelConfig {
         num_devices: devices,
@@ -243,7 +261,16 @@ fn train(flags: &Flags) -> Result<()> {
         seed,
         ..NelConfig::default()
     };
-    let pd = PushDist::with_topology(&manifest, model_name, cfg, &topology)?;
+    let fabric_cfg = if heartbeat_ms > 0 {
+        FabricConfig {
+            heartbeat_every: Some(std::time::Duration::from_millis(heartbeat_ms as u64)),
+            dead_after: std::time::Duration::from_millis(dead_after_ms.max(1) as u64),
+        }
+    } else {
+        FabricConfig::default()
+    };
+    let pd =
+        PushDist::with_topology_and_fabric(&manifest, model_name, cfg, &topology, &fabric_cfg)?;
     let model = pd.model().clone();
     let lr = flags
         .f64("lr")
@@ -308,7 +335,7 @@ fn train(flags: &Flags) -> Result<()> {
                 chain_cfg.model = push::infer::sgmcmc::linear_native_model();
                 chain_cfg.init = Some(Arc::new(move |i| native_init(seed, i)));
             }
-            let m = SgMcmc::new(pd, chain_cfg)?;
+            let m = SgMcmc::new(pd, chain_cfg)?.with_recovery(recover);
             if serve_every > 0 {
                 // errors here name the real constraint: serving needs a
                 // native ModelSource (artifact forwards live behind the

@@ -21,15 +21,16 @@
 
 use std::collections::BTreeMap;
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
 use crate::particle::{PFuture, Pid, PushError, Value};
 use crate::pd::transport::{
-    loopback_node, InProc, NodeTransport, TcpNode, TransportCounters,
+    loopback_node, InProc, LinkHealth, NodeTransport, TcpNode, TransportCounters,
 };
 use crate::pd::wire::{CreateSpec, DirectOp};
 use crate::runtime::{ModelSpec, Tensor};
@@ -62,6 +63,26 @@ impl Default for Topology {
     }
 }
 
+/// Liveness configuration of the fabric (DESIGN.md §Elastic fabric),
+/// deliberately separate from [`Topology`]: WHERE the nodes are is
+/// orthogonal to HOW their liveness is watched.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Heartbeat-probe cadence of the monitor thread; `None` (the
+    /// default) disables the monitor — a dead link is then only noticed
+    /// when a request on it fails.
+    pub heartbeat_every: Option<Duration>,
+    /// Silence threshold past which a link is declared dead and severed,
+    /// failing its pending futures promptly instead of hanging `wait()`.
+    pub dead_after: Duration,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig { heartbeat_every: None, dead_after: Duration::from_secs(2) }
+    }
+}
+
 /// Serializable creation options (the fabric adds the pid). The
 /// spec-based twin of [`CreateOpts`] for particles that may land on any
 /// node: handlers come from a registered program instead of closures.
@@ -85,20 +106,40 @@ struct PidRange {
     node: usize,
 }
 
+/// The re-creation recipe of one spec-created particle, kept so a dead
+/// node's particles can be migrated: the original [`SpecOpts`] minus the
+/// volatile parts (params/state come from the caller's checkpoint, not
+/// from creation time). Closure-created particles have no recipe and are
+/// non-migratable by construction.
+#[derive(Debug, Clone)]
+struct RecreateSpec {
+    device: Option<usize>,
+    program: Option<(String, Value)>,
+    no_params: bool,
+}
+
 pub struct NodeFabric {
-    links: Vec<Box<dyn NodeTransport>>,
+    links: Vec<Arc<dyn NodeTransport>>,
     /// Name of the model every node must serve; stamped into each
     /// `CreateSpec` so a mis-pointed node worker fails at creation.
     model_name: String,
     ranges: Mutex<Vec<PidRange>>,
     next_pid: AtomicU32,
     next_node: AtomicUsize,
+    recreate: Mutex<BTreeMap<u32, RecreateSpec>>,
+    monitor_stop: Arc<AtomicBool>,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl NodeFabric {
-    pub fn new(topology: &Topology, cfg: &NelConfig, model: Arc<ModelSpec>) -> Result<NodeFabric> {
+    pub fn new(
+        topology: &Topology,
+        cfg: &NelConfig,
+        model: Arc<ModelSpec>,
+        fabric_cfg: &FabricConfig,
+    ) -> Result<NodeFabric> {
         ensure!(topology.nodes >= 1, "a PD needs at least one node");
-        let mut links: Vec<Box<dyn NodeTransport>> = Vec::with_capacity(topology.nodes);
+        let mut links: Vec<Arc<dyn NodeTransport>> = Vec::with_capacity(topology.nodes);
         for i in 0..topology.nodes {
             // Single-node fabrics keep node: None so every error message
             // (and everything else) matches the pre-fabric PD exactly.
@@ -106,10 +147,10 @@ impl NodeFabric {
             let node_cfg = NelConfig { node, ..cfg.clone() };
             match &topology.transport {
                 TransportKind::InProc => {
-                    links.push(Box::new(InProc::new(node_cfg, model.clone())?));
+                    links.push(Arc::new(InProc::new(node_cfg, model.clone())?));
                 }
                 TransportKind::TcpLoopback => {
-                    links.push(Box::new(loopback_node(node_cfg, model.clone())?));
+                    links.push(Arc::new(loopback_node(node_cfg, model.clone())?));
                 }
                 TransportKind::TcpConnect(addrs) => {
                     ensure!(
@@ -118,21 +159,58 @@ impl NodeFabric {
                         topology.nodes,
                         addrs.len()
                     );
-                    links.push(Box::new(TcpNode::connect(addrs[i])?));
+                    // Backoff: externally launched node workers may still
+                    // be binding their ports — launch order must not
+                    // matter (6 tries over ~3 s).
+                    links.push(Arc::new(TcpNode::connect_with_backoff(addrs[i], 6)?));
                 }
             }
         }
+        let monitor_stop = Arc::new(AtomicBool::new(false));
+        let monitor = match fabric_cfg.heartbeat_every {
+            None => None,
+            Some(every) => Some(spawn_monitor(
+                links.clone(),
+                every,
+                fabric_cfg.dead_after,
+                monitor_stop.clone(),
+            )?),
+        };
         Ok(NodeFabric {
             links,
             model_name: model.name.clone(),
             ranges: Mutex::new(Vec::new()),
             next_pid: AtomicU32::new(0),
             next_node: AtomicUsize::new(0),
+            recreate: Mutex::new(BTreeMap::new()),
+            monitor_stop,
+            monitor: Mutex::new(monitor),
         })
     }
 
     pub fn nodes(&self) -> usize {
         self.links.len()
+    }
+
+    /// Per-link liveness verdicts, in node order. With the monitor off,
+    /// a wire link still reports `Dead` once its connection closed.
+    pub fn link_health(&self) -> Vec<LinkHealth> {
+        self.links.iter().map(|l| l.health()).collect()
+    }
+
+    /// Nodes whose links are dead (particles there need migration).
+    pub fn dead_nodes(&self) -> Vec<usize> {
+        self.links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.health() == LinkHealth::Dead)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Peer address of a wire link (None in-process).
+    pub fn peer_addr(&self, node: usize) -> Option<SocketAddr> {
+        self.links.get(node).and_then(|l| l.peer_addr())
     }
 
     pub fn kind(&self) -> &'static str {
@@ -210,9 +288,15 @@ impl NodeFabric {
     }
 
     /// Spec-based creation (program-resolved handlers); works on every
-    /// transport.
+    /// transport. The spec's non-volatile parts are remembered as the
+    /// particle's re-creation recipe, making it migratable on node death.
     pub fn create_spec(&self, opts: SpecOpts) -> Result<Pid> {
         let (pid, node) = self.alloc();
+        let recipe = RecreateSpec {
+            device: opts.device,
+            program: opts.program.clone(),
+            no_params: opts.no_params,
+        };
         let spec = CreateSpec {
             pid,
             device: opts.device,
@@ -225,8 +309,89 @@ impl NodeFabric {
         let created =
             self.links[node].create_spec(spec).map_err(|e| anyhow::anyhow!("{e}"))?;
         debug_assert_eq!(created, pid);
+        self.recreate.lock().unwrap().insert(pid.0, recipe);
         self.record(pid.0, node);
         Ok(pid)
+    }
+
+    /// Move every particle owned by `dead` nodes onto the surviving
+    /// links, re-created from the caller's last checkpoint (`params` /
+    /// `state`) under their ORIGINAL global pids — so every
+    /// (seed, pid, step)-keyed deterministic stream continues unperturbed
+    /// and a migrated run stays bit-identical to an uninterrupted one.
+    /// ONE `Migrate` frame goes to each destination node. Returns the
+    /// moved pids; the pid→node table is repointed on success.
+    pub fn migrate(
+        &self,
+        dead: &[usize],
+        params: &BTreeMap<Pid, Tensor>,
+        state: &BTreeMap<Pid, Vec<(String, Value)>>,
+    ) -> Result<Vec<Pid>> {
+        ensure!(!dead.is_empty(), "no dead nodes to migrate from");
+        let survivors: Vec<usize> = (0..self.links.len())
+            .filter(|n| !dead.contains(n) && self.links[*n].health() != LinkHealth::Dead)
+            .collect();
+        ensure!(!survivors.is_empty(), "no surviving nodes to migrate to");
+        let lost: Vec<Pid> = {
+            let ranges = self.ranges.lock().unwrap();
+            ranges
+                .iter()
+                .filter(|r| dead.contains(&r.node))
+                .flat_map(|r| (r.start..r.end).map(Pid))
+                .collect()
+        };
+        let recreate = self.recreate.lock().unwrap();
+        let mut batches: BTreeMap<usize, Vec<CreateSpec>> = BTreeMap::new();
+        let mut moves: Vec<(u32, usize)> = Vec::with_capacity(lost.len());
+        for (i, pid) in lost.iter().enumerate() {
+            let recipe = recreate.get(&pid.0).ok_or_else(|| {
+                anyhow!(
+                    "cannot migrate {pid}: created from closures, not a spec \
+                     (no re-creation recipe survives the node)"
+                )
+            })?;
+            let target = survivors[i % survivors.len()];
+            batches.entry(target).or_default().push(CreateSpec {
+                pid: *pid,
+                device: recipe.device,
+                program: recipe.program.clone(),
+                state: state.get(pid).cloned().unwrap_or_default(),
+                no_params: recipe.no_params,
+                init_params: params.get(pid).cloned(),
+                model: self.model_name.clone(),
+            });
+            moves.push((pid.0, target));
+        }
+        drop(recreate);
+        for (target, specs) in batches {
+            self.links[target].migrate(specs).map_err(|e| anyhow!("node {target}: {e}"))?;
+        }
+        self.repoint(&moves);
+        Ok(moves.into_iter().map(|(p, _)| Pid(p)).collect())
+    }
+
+    /// Rewrite the pid→node table after a migration: flatten, apply the
+    /// moves, re-compress (the flat list is already sorted by pid, so the
+    /// compressed table stays sorted for the binary search).
+    fn repoint(&self, moves: &[(u32, usize)]) {
+        let mut ranges = self.ranges.lock().unwrap();
+        let mut flat: Vec<(u32, usize)> = ranges
+            .iter()
+            .flat_map(|r| (r.start..r.end).map(|p| (p, r.node)))
+            .collect();
+        for (pid, node) in moves {
+            if let Some(entry) = flat.iter_mut().find(|(p, _)| p == pid) {
+                entry.1 = *node;
+            }
+        }
+        let mut out: Vec<PidRange> = Vec::new();
+        for (pid, node) in flat {
+            match out.last_mut() {
+                Some(last) if last.node == node && last.end == pid => last.end = pid + 1,
+                _ => out.push(PidRange { start: pid, end: pid + 1, node }),
+            }
+        }
+        *ranges = out;
     }
 
     pub fn send(&self, pid: Pid, msg: &str, args: Vec<Value>) -> PFuture {
@@ -279,10 +444,16 @@ impl NodeFabric {
         }
     }
 
-    /// Barrier + snapshot across every node.
+    /// Barrier + snapshot across every node. Dead links are skipped: after
+    /// a migration the dead node owns no pids, so asking it would only
+    /// fail the barrier; a node that dies WHILE still owning pids fails
+    /// the capture anyway when its particles' state is fetched.
     pub fn drain_params(&self) -> Result<BTreeMap<Pid, Tensor>, PushError> {
         let mut out = BTreeMap::new();
         for link in &self.links {
+            if link.health() == LinkHealth::Dead {
+                continue;
+            }
             for (pid, t) in link.drain_params()? {
                 out.insert(pid, t);
             }
@@ -311,9 +482,20 @@ impl NodeFabric {
         }
     }
 
-    /// Per-node stats, in node order.
+    /// Per-node stats, in node order. Dead links report default (zero)
+    /// stats instead of failing the whole read — a recovered run can still
+    /// print its survivors' numbers.
     pub fn node_stats(&self) -> Result<Vec<NelStats>, PushError> {
-        self.links.iter().map(|l| l.stats()).collect()
+        self.links
+            .iter()
+            .map(|l| {
+                if l.health() == LinkHealth::Dead {
+                    Ok(NelStats::default())
+                } else {
+                    l.stats()
+                }
+            })
+            .collect()
     }
 
     /// Fabric-wide stats: per-node stats summed exactly once.
@@ -326,4 +508,40 @@ impl NodeFabric {
     pub fn transport_counters(&self) -> Vec<TransportCounters> {
         self.links.iter().map(|l| l.counters()).collect()
     }
+}
+
+impl Drop for NodeFabric {
+    fn drop(&mut self) {
+        self.monitor_stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.monitor.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The heartbeat monitor: one background thread ticking every link on the
+/// configured cadence. Sleeps in small slices so fabric drop never waits
+/// a full period for the thread to notice the stop flag.
+fn spawn_monitor(
+    links: Vec<Arc<dyn NodeTransport>>,
+    every: Duration,
+    dead_after: Duration,
+    stop: Arc<AtomicBool>,
+) -> Result<std::thread::JoinHandle<()>> {
+    let handle = std::thread::Builder::new()
+        .name("push-heartbeat".to_string())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for link in &links {
+                    link.heartbeat_tick(dead_after);
+                }
+                let mut slept = Duration::from_millis(0);
+                while slept < every && !stop.load(Ordering::Relaxed) {
+                    let chunk = (every - slept).min(Duration::from_millis(20));
+                    std::thread::sleep(chunk);
+                    slept += chunk;
+                }
+            }
+        })?;
+    Ok(handle)
 }

@@ -18,7 +18,8 @@ pub mod programs;
 pub mod transport;
 pub mod wire;
 
-pub use fabric::{SpecOpts, Topology, TransportKind};
+pub use fabric::{FabricConfig, SpecOpts, Topology, TransportKind};
+pub use transport::LinkHealth;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -61,8 +62,29 @@ impl PushDist {
         cfg: NelConfig,
         topology: &Topology,
     ) -> Result<PushDist> {
+        Self::with_topology_and_fabric(
+            manifest,
+            model_name,
+            cfg,
+            topology,
+            &FabricConfig::default(),
+        )
+    }
+
+    /// [`PushDist::with_topology`] with explicit liveness configuration:
+    /// `fabric_cfg.heartbeat_every` turns on the heartbeat monitor, which
+    /// declares links dead after `fabric_cfg.dead_after` of silence and
+    /// fails their pending futures promptly (DESIGN.md §Elastic fabric).
+    pub fn with_topology_and_fabric(
+        manifest: &Manifest,
+        model_name: &str,
+        cfg: NelConfig,
+        topology: &Topology,
+        fabric_cfg: &FabricConfig,
+    ) -> Result<PushDist> {
         let model = Arc::new(manifest.model(model_name)?.clone());
-        let fabric = Arc::new(fabric::NodeFabric::new(topology, &cfg, model.clone())?);
+        let fabric =
+            Arc::new(fabric::NodeFabric::new(topology, &cfg, model.clone(), fabric_cfg)?);
         Ok(PushDist {
             fabric,
             model,
@@ -273,7 +295,7 @@ impl PushDist {
         match self.fabric.stats() {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("warning: fabric stats unavailable ({e}); reporting zeros");
+                crate::log_warn!("fabric stats unavailable ({e}); reporting zeros");
                 NelStats::default()
             }
         }
@@ -293,5 +315,61 @@ impl PushDist {
     /// Per-node transport frame/byte counters (all zero in-process).
     pub fn transport_counters(&self) -> Vec<TransportCounters> {
         self.fabric.transport_counters()
+    }
+
+    /// Per-link liveness, in node order (in-process links are always
+    /// `Healthy`). See DESIGN.md §Elastic fabric.
+    pub fn link_health(&self) -> Vec<LinkHealth> {
+        self.fabric.link_health()
+    }
+
+    /// Nodes whose links are dead (their particles need migration).
+    pub fn dead_nodes(&self) -> Vec<usize> {
+        self.fabric.dead_nodes()
+    }
+
+    /// Peer socket address of a wire link (None in-process).
+    pub fn peer_addr(&self, node: usize) -> Option<std::net::SocketAddr> {
+        self.fabric.peer_addr(node)
+    }
+
+    /// Recover from dead node(s): migrate their particles onto survivors
+    /// (re-created from `ckpt` under their ORIGINAL global pids, so every
+    /// deterministic stream continues unperturbed), then rewind the
+    /// SURVIVING particles to the same checkpoint — after which the whole
+    /// ensemble sits at one consistent round and the caller replays from
+    /// there. Errors if no link is actually dead: recovery is a response
+    /// to detected node death, not a general rollback.
+    pub fn recover(&self, ckpt: &checkpoint::Checkpoint) -> Result<()> {
+        if self.model.name != ckpt.model {
+            return Err(anyhow!(
+                "checkpoint is for model {:?}, PD wraps {:?}",
+                ckpt.model,
+                self.model.name
+            ));
+        }
+        let dead = self.fabric.dead_nodes();
+        if dead.is_empty() {
+            return Err(anyhow!("recover called but every node link is alive"));
+        }
+        let moved: std::collections::BTreeSet<Pid> =
+            self.fabric.migrate(&dead, &ckpt.params, &ckpt.state)?.into_iter().collect();
+        // Migrated particles were re-created directly from the checkpoint;
+        // only the survivors still hold post-checkpoint params/state and
+        // need the explicit rewind.
+        let futs: Vec<PFuture> = ckpt
+            .params
+            .iter()
+            .filter(|(pid, _)| !moved.contains(pid))
+            .map(|(pid, t)| self.set(*pid, t.clone()))
+            .collect();
+        PFuture::wait_all(&futs).map_err(|e| anyhow!("{e}"))?;
+        for (pid, entries) in &ckpt.state {
+            if !moved.contains(pid) {
+                self.restore_particle_state(*pid, entries.clone())
+                    .map_err(|e| anyhow!("{e}"))?;
+            }
+        }
+        Ok(())
     }
 }

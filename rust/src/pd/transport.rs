@@ -24,12 +24,21 @@
 //! through a writer thread), and FIFO write-out of completed responses.
 //! Everything binds 127.0.0.1 ephemeral ports in tests/benches, so CI
 //! exercises real serialization and real sockets hermetically.
+//!
+//! Liveness (DESIGN.md §Elastic fabric): the fabric's monitor calls
+//! [`NodeTransport::heartbeat_tick`] on a cadence; a TCP link tracks
+//! [`LinkHealth`] from heartbeat pongs, and a link silent past
+//! `dead_after` is severed so its pending futures fail promptly instead
+//! of hanging. Heartbeat frames never carry tensors and never touch the
+//! data-path counters. The [`fault`] module (tests and the `faultinject`
+//! feature only) kills chosen links deterministically.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -48,6 +57,14 @@ pub struct TransportCounters {
     pub frames_received: u64,
     pub bytes_sent: u64,
     pub bytes_received: u64,
+    /// Link failures observed on this node link: failed sends, futures
+    /// failed by a connection-closed drain, and dead-link declarations.
+    /// Monitoring sees link trouble here, not just on stderr.
+    pub errors: u64,
+    /// Heartbeat probes sent on this link. Heartbeats are accounted HERE
+    /// only — they never touch the data-path frame/byte counters above,
+    /// so frame-accounting invariants hold with the monitor running.
+    pub heartbeats: u64,
 }
 
 #[derive(Default)]
@@ -56,6 +73,8 @@ struct CounterCells {
     frames_received: AtomicU64,
     bytes_sent: AtomicU64,
     bytes_received: AtomicU64,
+    errors: AtomicU64,
+    heartbeats: AtomicU64,
 }
 
 impl CounterCells {
@@ -65,8 +84,25 @@ impl CounterCells {
             frames_received: self.frames_received.load(Ordering::Relaxed),
             bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
             bytes_received: self.bytes_received.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            heartbeats: self.heartbeats.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Liveness verdict of one node link, driven by the fabric's heartbeat
+/// monitor (see `crate::pd::fabric::FabricConfig`). Links without a wire
+/// ([`InProc`]) are trivially always healthy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkHealth {
+    Healthy,
+    /// No pong for more than half of `dead_after`: the link is slow or
+    /// the peer is gone; not yet actionable.
+    Suspect,
+    /// The link is closed, or silent past `dead_after` and severed by the
+    /// monitor. Every pending future on it has been failed promptly; the
+    /// node's particles need migration.
+    Dead,
 }
 
 /// The PD seam's per-node contract. Everything the PD can ask of a node
@@ -111,6 +147,38 @@ pub trait NodeTransport: Send + Sync {
     /// trace example and artifact-backed benches; None over the wire).
     fn nel(&self) -> Option<&Nel> {
         None
+    }
+
+    /// One monitor tick: assess liveness against `dead_after` and, on a
+    /// wire link, send one heartbeat probe. A link silent past
+    /// `dead_after` is declared [`LinkHealth::Dead`] and severed so every
+    /// pending future fails promptly instead of hanging. Links without a
+    /// wire are always healthy and probe-free.
+    fn heartbeat_tick(&self, dead_after: Duration) -> LinkHealth {
+        let _ = dead_after;
+        LinkHealth::Healthy
+    }
+
+    /// Last known liveness verdict (no probe). A closed wire link reports
+    /// [`LinkHealth::Dead`] even when no monitor is running.
+    fn health(&self) -> LinkHealth {
+        LinkHealth::Healthy
+    }
+
+    /// Peer address of a wire link (None in-process): lets the fabric and
+    /// tests name links in fault plans and recovery errors.
+    fn peer_addr(&self) -> Option<SocketAddr> {
+        None
+    }
+
+    /// Batched re-creation of migrated particles on this node. A wire
+    /// transport sends ONE `Migrate` frame for the whole batch; the
+    /// default simply loops [`NodeTransport::create_spec`].
+    fn migrate(&self, specs: Vec<CreateSpec>) -> Result<(), PushError> {
+        for spec in specs {
+            self.create_spec(spec)?;
+        }
+        Ok(())
     }
 }
 
@@ -223,6 +291,43 @@ enum Pending {
     One(PFuture),
     Many(Vec<PFuture>),
     Stats(mpsc::Sender<Result<NelStats, PushError>>),
+    /// A heartbeat probe in flight. The pong refreshes the link's health
+    /// from the reader thread; no caller waits on it, and neither
+    /// direction touches the data-path frame counters.
+    Heartbeat,
+}
+
+/// Per-link liveness cells: verdict + time of the last pong (or, before
+/// the first probe, the connect time).
+struct HealthCells {
+    state: AtomicU8,
+    last_pong: Mutex<Instant>,
+}
+
+impl HealthCells {
+    fn fresh() -> HealthCells {
+        HealthCells {
+            state: AtomicU8::new(LinkHealth::Healthy as u8),
+            last_pong: Mutex::new(Instant::now()),
+        }
+    }
+
+    fn set(&self, h: LinkHealth) {
+        self.state.store(h as u8, Ordering::Relaxed);
+    }
+
+    fn get(&self) -> LinkHealth {
+        match self.state.load(Ordering::Relaxed) {
+            0 => LinkHealth::Healthy,
+            1 => LinkHealth::Suspect,
+            _ => LinkHealth::Dead,
+        }
+    }
+
+    fn pong(&self) {
+        *self.last_pong.lock().unwrap() = Instant::now();
+        self.set(LinkHealth::Healthy);
+    }
 }
 
 /// A node reached over TCP. Cloned per fabric; owns the write half of the
@@ -238,26 +343,31 @@ pub struct TcpNode {
     closed: Arc<std::sync::atomic::AtomicBool>,
     next_id: AtomicU64,
     counters: Arc<CounterCells>,
+    health: Arc<HealthCells>,
     peer: SocketAddr,
 }
 
 impl TcpNode {
     /// Connect to a node server at `addr`.
     pub fn connect(addr: SocketAddr) -> Result<TcpNode> {
+        #[cfg(any(test, feature = "faultinject"))]
+        fault::on_connect(addr)?;
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         let writer = Mutex::new(BufWriter::new(stream.try_clone()?));
         let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
         let closed = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let counters = Arc::new(CounterCells::default());
+        let health = Arc::new(HealthCells::fresh());
         let rstream = stream.try_clone()?;
         {
             let pending = pending.clone();
             let closed = closed.clone();
             let counters = counters.clone();
+            let health = health.clone();
             std::thread::Builder::new()
                 .name(format!("push-tcp-client-{addr}"))
-                .spawn(move || reader_loop(rstream, pending, closed, counters))?;
+                .spawn(move || reader_loop(rstream, pending, closed, counters, health))?;
         }
         Ok(TcpNode {
             stream,
@@ -266,8 +376,41 @@ impl TcpNode {
             closed,
             next_id: AtomicU64::new(0),
             counters,
+            health,
             peer: addr,
         })
+    }
+
+    /// [`TcpNode::connect`] with bounded exponential backoff + jitter:
+    /// `attempts` tries spread over ~3 s for the default 6, so the launch
+    /// order of `push node-worker` processes and the coordinator stops
+    /// mattering (the worker may still be binding its port).
+    pub fn connect_with_backoff(addr: SocketAddr, attempts: u32) -> Result<TcpNode> {
+        let attempts = attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            match TcpNode::connect(addr) {
+                Ok(node) => return Ok(node),
+                Err(e) => {
+                    crate::log_debug!(
+                        "node {addr}: connect attempt {}/{attempts} failed ({e:#})",
+                        attempt + 1
+                    );
+                    last = Some(e);
+                }
+            }
+            if attempt + 1 < attempts {
+                // 100ms * 2^attempt, +-25% deterministic jitter keyed by
+                // (port, attempt) — the vendored crate set has no rand
+                let base_ms: u64 = 100u64 << attempt.min(8);
+                let mut rng = crate::util::rng::Rng::new(0x636f_6e6e ^ addr.port() as u64)
+                    .fold_in(attempt as u64);
+                let jitter = rng.below((base_ms / 2 + 1) as usize) as u64;
+                std::thread::sleep(Duration::from_millis(base_ms - base_ms / 4 + jitter));
+            }
+        }
+        let e = last.expect("at least one attempt");
+        Err(anyhow!("node {addr}: unreachable after {attempts} attempts: {e:#}"))
     }
 
     pub fn peer(&self) -> SocketAddr {
@@ -278,10 +421,49 @@ impl TcpNode {
     /// On a write failure the pending entry is removed and the error
     /// returned — the caller owns failing any futures it handed in.
     fn request(&self, req: &Request, pending: Pending) -> Result<u64, PushError> {
+        self.request_inner(req, pending, true)
+    }
+
+    /// `request` with the data-path frame/byte counting made optional:
+    /// heartbeat probes pass `count: false` so the monitor's background
+    /// traffic never perturbs frame-accounting invariants (a broadcast is
+    /// still exactly one counted frame per destination node).
+    fn request_inner(
+        &self,
+        req: &Request,
+        pending: Pending,
+        count: bool,
+    ) -> Result<u64, PushError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let buf = wire::encode_request(id, req).map_err(PushError::from)?;
         if self.closed.load(Ordering::Acquire) {
+            self.counters.errors.fetch_add(1, Ordering::Relaxed);
             return Err(PushError::new(format!("node {}: connection closed", self.peer)));
+        }
+        #[cfg(any(test, feature = "faultinject"))]
+        {
+            if count {
+                let verdict =
+                    fault::on_send(self.peer, self.counters.frames_sent.load(Ordering::Relaxed));
+                if let Some(delay) = verdict.delay {
+                    std::thread::sleep(delay);
+                }
+                if verdict.kill {
+                    // Sever both halves: the reader thread wakes on EOF
+                    // and drains every pending future — exactly the code
+                    // path a real mid-run node death takes. Health flips
+                    // Dead HERE (not just in the reader's exit path) so
+                    // the caller sees the verdict as soon as its request
+                    // fails, without racing the reader thread.
+                    self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                    self.health.set(LinkHealth::Dead);
+                    let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                    return Err(PushError::new(format!(
+                        "node {}: connection closed (fault injected)",
+                        self.peer
+                    )));
+                }
+            }
         }
         self.pending.lock().unwrap().insert(id, pending);
         // Re-check AFTER the insert: the reader sets `closed` BEFORE its
@@ -289,6 +471,7 @@ impl TcpNode {
         // caught here, and one that slipped in before it is drained.
         if self.closed.load(Ordering::Acquire) {
             self.pending.lock().unwrap().remove(&id);
+            self.counters.errors.fetch_add(1, Ordering::Relaxed);
             return Err(PushError::new(format!("node {}: connection closed", self.peer)));
         }
         let sent = {
@@ -301,10 +484,15 @@ impl TcpNode {
         };
         if let Err(e) = sent {
             self.pending.lock().unwrap().remove(&id);
+            self.counters.errors.fetch_add(1, Ordering::Relaxed);
             return Err(PushError::new(format!("node {}: {e:#}", self.peer)));
         }
-        self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
-        self.counters.bytes_sent.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
+        if count {
+            self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
+            self.counters.bytes_sent.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
+        } else {
+            self.counters.heartbeats.fetch_add(1, Ordering::Relaxed);
+        }
         Ok(id)
     }
 
@@ -339,6 +527,7 @@ fn reader_loop(
     pending: Arc<Mutex<HashMap<u64, Pending>>>,
     closed: Arc<std::sync::atomic::AtomicBool>,
     counters: Arc<CounterCells>,
+    health: Arc<HealthCells>,
 ) {
     let mut r = BufReader::new(stream);
     loop {
@@ -346,14 +535,19 @@ fn reader_loop(
             Ok(b) => b,
             Err(_) => break, // EOF or a framing error: connection is done
         };
-        counters.frames_received.fetch_add(1, Ordering::Relaxed);
-        counters.bytes_received.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
         let (id, resp) = match wire::decode_response(&buf) {
             Ok(x) => x,
             Err(_) => break,
         };
         let entry = pending.lock().unwrap().remove(&id);
+        // Heartbeat pongs stay off the data-path counters, mirroring the
+        // uncounted send side.
+        if !matches!(entry, Some(Pending::Heartbeat)) {
+            counters.frames_received.fetch_add(1, Ordering::Relaxed);
+            counters.bytes_received.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
+        }
         match (entry, resp) {
+            (Some(Pending::Heartbeat), _) => health.pong(),
             (Some(Pending::One(fut)), Response::One(res)) => {
                 fut.complete(res.map_err(PushError::new));
             }
@@ -388,19 +582,26 @@ fn reader_loop(
     // flag after its insert, so every pending entry is either drained
     // here or rejected there — nothing can wait on an unwatched map.
     closed.store(true, Ordering::Release);
+    health.set(LinkHealth::Dead);
     let drained: Vec<Pending> = pending.lock().unwrap().drain().map(|(_, p)| p).collect();
     for p in drained {
         let err = PushError::new("node connection closed");
         match p {
-            Pending::One(fut) => fut.complete(Err(err)),
+            Pending::One(fut) => {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                fut.complete(Err(err));
+            }
             Pending::Many(futs) => {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
                 for fut in futs {
                     fut.complete(Err(err.clone()));
                 }
             }
             Pending::Stats(tx) => {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = tx.send(Err(err));
             }
+            Pending::Heartbeat => {}
         }
     }
 }
@@ -509,6 +710,71 @@ impl NodeTransport for TcpNode {
 
     fn counters(&self) -> TransportCounters {
         self.counters.snapshot()
+    }
+
+    fn heartbeat_tick(&self, dead_after: Duration) -> LinkHealth {
+        if self.closed.load(Ordering::Acquire) {
+            self.health.set(LinkHealth::Dead);
+            return LinkHealth::Dead;
+        }
+        let silent = self.health.last_pong.lock().unwrap().elapsed();
+        if silent > dead_after {
+            // Declare the link dead and sever it: the shutdown wakes the
+            // reader thread, whose exit path fails every pending future
+            // promptly — `wait()` never hangs on a dead node.
+            self.health.set(LinkHealth::Dead);
+            self.counters.errors.fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!(
+                "node {}: silent for {:.0?} (> dead_after {:.0?}); declaring link dead",
+                self.peer,
+                silent,
+                dead_after
+            );
+            let _ = self.stream.shutdown(std::net::Shutdown::Both);
+            return LinkHealth::Dead;
+        }
+        let verdict = if silent > dead_after / 2 {
+            LinkHealth::Suspect
+        } else {
+            LinkHealth::Healthy
+        };
+        self.health.set(verdict);
+        // Fire one probe; the pong refreshes `last_pong` from the reader
+        // thread. Probe failures surface as `closed` on the next tick.
+        let nonce = self.counters.heartbeats.load(Ordering::Relaxed);
+        let _ = self.request_inner(&Request::Heartbeat { nonce }, Pending::Heartbeat, false);
+        verdict
+    }
+
+    fn health(&self) -> LinkHealth {
+        if self.closed.load(Ordering::Acquire) {
+            return LinkHealth::Dead;
+        }
+        self.health.get()
+    }
+
+    fn peer_addr(&self) -> Option<SocketAddr> {
+        Some(self.peer)
+    }
+
+    fn migrate(&self, specs: Vec<CreateSpec>) -> Result<(), PushError> {
+        if specs.is_empty() {
+            return Ok(());
+        }
+        let futs: Vec<PFuture> = specs.iter().map(|_| PFuture::new()).collect();
+        let n = specs.len();
+        self.request(&Request::Migrate { specs }, Pending::Many(futs.clone()))?;
+        for (i, fut) in futs.into_iter().enumerate() {
+            fut.wait().map_err(|e| {
+                PushError::new(format!(
+                    "migrating particle {}/{n} to node {}: {}",
+                    i + 1,
+                    self.peer,
+                    e.msg
+                ))
+            })?;
+        }
+        Ok(())
     }
 }
 
@@ -633,6 +899,18 @@ pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>
                 let msg = Response::Stats(Box::new(nel.stats()));
                 respond_raw(&tx, id, &msg);
             }
+            Request::Heartbeat { nonce } => {
+                // Echo the nonce straight from the read loop: a loaded
+                // node still pongs promptly (liveness, not readiness).
+                respond(&tx, id, Response::One(Ok(Value::Usize(nonce as usize))));
+            }
+            Request::Migrate { specs } => {
+                let results: Vec<Result<Value, String>> = specs
+                    .into_iter()
+                    .map(|spec| create_from_spec(&nel, &model, spec))
+                    .collect();
+                respond(&tx, id, Response::Many(results));
+            }
         }
     }
     drop(tx); // writer drains queued responses, then exits
@@ -741,6 +1019,84 @@ fn respond_batch(tx: &mpsc::Sender<Vec<u8>>, id: u64, futs: &[PFuture]) {
                 respond_raw(&tx, id, &Response::Many(results));
             }
         });
+    }
+}
+
+// ---- fault injection ------------------------------------------------------
+
+/// Deterministic fault injection for the wire transport, compiled in only
+/// for tests and the `faultinject` feature. Plans are keyed by the peer
+/// address a `TcpNode` connects to, so a test can kill PRECISELY one link
+/// at a precisely chosen frame — no sleeps, no signal races:
+///
+/// * `drop_after_frames: Some(n)` severs the connection when the link has
+///   already sent `n` data frames (0 = kill on the next send);
+/// * `delay` sleeps before every data frame (slow-link simulation);
+/// * `refuse_connects` fails that many `connect` attempts first
+///   (exercising the startup backoff deterministically).
+#[cfg(any(test, feature = "faultinject"))]
+pub mod fault {
+    use std::collections::HashMap;
+    use std::net::SocketAddr;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    #[derive(Debug, Clone, Default)]
+    pub struct FaultPlan {
+        /// Sever the connection once this many data frames have been sent
+        /// on the link (heartbeat probes don't count).
+        pub drop_after_frames: Option<u64>,
+        /// Sleep this long before every data-frame write.
+        pub delay: Option<Duration>,
+        /// Fail this many connection attempts with ECONNREFUSED first.
+        pub refuse_connects: u32,
+    }
+
+    static PLANS: OnceLock<Mutex<HashMap<SocketAddr, FaultPlan>>> = OnceLock::new();
+
+    fn plans() -> &'static Mutex<HashMap<SocketAddr, FaultPlan>> {
+        PLANS.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Install `plan` for every future connect/send touching `addr`.
+    pub fn set_plan(addr: SocketAddr, plan: FaultPlan) {
+        plans().lock().unwrap().insert(addr, plan);
+    }
+
+    /// Remove the plan for `addr` (tests clean up after themselves;
+    /// loopback ports are ephemeral, so plans never collide anyway).
+    pub fn clear(addr: SocketAddr) {
+        plans().lock().unwrap().remove(&addr);
+    }
+
+    pub(super) fn on_connect(addr: SocketAddr) -> std::io::Result<()> {
+        if let Some(plan) = plans().lock().unwrap().get_mut(&addr) {
+            if plan.refuse_connects > 0 {
+                plan.refuse_connects -= 1;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionRefused,
+                    format!("fault injection: connection to {addr} refused"),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    #[derive(Debug, Default)]
+    pub(super) struct SendVerdict {
+        pub delay: Option<Duration>,
+        pub kill: bool,
+    }
+
+    /// Consulted with the link's data-frame count BEFORE this write.
+    pub(super) fn on_send(addr: SocketAddr, frames_sent: u64) -> SendVerdict {
+        match plans().lock().unwrap().get(&addr) {
+            None => SendVerdict::default(),
+            Some(plan) => SendVerdict {
+                delay: plan.delay,
+                kill: plan.drop_after_frames.map(|n| frames_sent >= n).unwrap_or(false),
+            },
+        }
     }
 }
 

@@ -387,6 +387,17 @@ pub enum Request {
     RestoreState { pid: Pid, entries: Vec<(String, Value)> },
     Stats,
     Shutdown,
+    /// Liveness probe from the fabric's heartbeat monitor. A fixed-size
+    /// message that NEVER carries tensors; the node echoes the nonce back
+    /// as `Response::One(Ok(Usize(nonce)))`. Heartbeat frames bypass the
+    /// data-path transport counters so frame accounting stays exact.
+    Heartbeat { nonce: u64 },
+    /// Batched re-creation of a dead node's particles on a survivor: ONE
+    /// frame per destination node carrying every migrated spec (original
+    /// global pids, checkpointed params as `init_params`, checkpointed
+    /// chain state). The response is one `Response::Many` with a result
+    /// per spec in input order.
+    Migrate { specs: Vec<CreateSpec> },
 }
 
 /// One server->client message, tagged with the request id it answers.
@@ -409,6 +420,8 @@ const K_STATE: u8 = 6;
 const K_RESTORE: u8 = 7;
 const K_STATS: u8 = 8;
 const K_SHUTDOWN: u8 = 9;
+const K_HEARTBEAT: u8 = 10;
+const K_MIGRATE: u8 = 11;
 
 const R_ONE: u8 = 1;
 const R_MANY: u8 = 2;
@@ -432,6 +445,55 @@ fn read_opt_tensor(r: &mut impl Read) -> Result<Option<Tensor>> {
     })
 }
 
+// The CreateSpec body is shared by K_CREATE (one spec) and K_MIGRATE (a
+// batch of specs) — one codec, so migrated particles are re-created from
+// byte-identical material.
+
+fn write_create_spec(w: &mut impl Write, spec: &CreateSpec) -> Result<()> {
+    w.write_all(&spec.pid.0.to_le_bytes())?;
+    match spec.device {
+        None => w.write_all(&[0u8])?,
+        Some(d) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+    }
+    match &spec.program {
+        None => w.write_all(&[0u8])?,
+        Some((name, cfg)) => {
+            w.write_all(&[1u8])?;
+            write_str(w, name)?;
+            write_value(w, cfg, 0)?;
+        }
+    }
+    write_entries(w, &spec.state)?;
+    w.write_all(&[spec.no_params as u8])?;
+    write_opt_tensor(w, &spec.init_params)?;
+    write_str(w, &spec.model)?;
+    Ok(())
+}
+
+fn read_create_spec(r: &mut impl Read) -> Result<CreateSpec> {
+    let pid = Pid(read_u32(r)?);
+    let device = match read_u8(r)? {
+        0 => None,
+        _ => Some(read_u64(r)? as usize),
+    };
+    let program = match read_u8(r)? {
+        0 => None,
+        _ => {
+            let name = read_str(r)?;
+            let cfg = read_value(r, 0)?;
+            Some((name, cfg))
+        }
+    };
+    let state = read_entries(r)?;
+    let no_params = read_u8(r)? != 0;
+    let init_params = read_opt_tensor(r)?;
+    let model = read_str(r)?;
+    Ok(CreateSpec { pid, device, program, state, no_params, init_params, model })
+}
+
 pub fn encode_request(req_id: u64, req: &Request) -> Result<Vec<u8>> {
     let mut w = Vec::new();
     w.write_all(&[WIRE_VERSION])?;
@@ -445,32 +507,13 @@ pub fn encode_request(req_id: u64, req: &Request) -> Result<Vec<u8>> {
         Request::RestoreState { .. } => K_RESTORE,
         Request::Stats => K_STATS,
         Request::Shutdown => K_SHUTDOWN,
+        Request::Heartbeat { .. } => K_HEARTBEAT,
+        Request::Migrate { .. } => K_MIGRATE,
     };
     w.write_all(&[kind])?;
     w.write_all(&req_id.to_le_bytes())?;
     match req {
-        Request::Create(spec) => {
-            w.write_all(&spec.pid.0.to_le_bytes())?;
-            match spec.device {
-                None => w.write_all(&[0u8])?,
-                Some(d) => {
-                    w.write_all(&[1u8])?;
-                    w.write_all(&(d as u64).to_le_bytes())?;
-                }
-            }
-            match &spec.program {
-                None => w.write_all(&[0u8])?,
-                Some((name, cfg)) => {
-                    w.write_all(&[1u8])?;
-                    write_str(&mut w, name)?;
-                    write_value(&mut w, cfg, 0)?;
-                }
-            }
-            write_entries(&mut w, &spec.state)?;
-            w.write_all(&[spec.no_params as u8])?;
-            write_opt_tensor(&mut w, &spec.init_params)?;
-            write_str(&mut w, &spec.model)?;
-        }
+        Request::Create(spec) => write_create_spec(&mut w, spec)?,
         Request::Send { pid, msg, args } => {
             w.write_all(&pid.0.to_le_bytes())?;
             write_str(&mut w, msg)?;
@@ -516,6 +559,13 @@ pub fn encode_request(req_id: u64, req: &Request) -> Result<Vec<u8>> {
             w.write_all(&pid.0.to_le_bytes())?;
             write_entries(&mut w, entries)?;
         }
+        Request::Heartbeat { nonce } => w.write_all(&nonce.to_le_bytes())?,
+        Request::Migrate { specs } => {
+            w.write_all(&(specs.len() as u32).to_le_bytes())?;
+            for spec in specs {
+                write_create_spec(&mut w, spec)?;
+            }
+        }
     }
     Ok(w)
 }
@@ -529,34 +579,7 @@ pub fn decode_request(buf: &[u8]) -> Result<(u64, Request)> {
     let kind = read_u8(&mut r)?;
     let req_id = read_u64(&mut r)?;
     let req = match kind {
-        K_CREATE => {
-            let pid = Pid(read_u32(&mut r)?);
-            let device = match read_u8(&mut r)? {
-                0 => None,
-                _ => Some(read_u64(&mut r)? as usize),
-            };
-            let program = match read_u8(&mut r)? {
-                0 => None,
-                _ => {
-                    let name = read_str(&mut r)?;
-                    let cfg = read_value(&mut r, 0)?;
-                    Some((name, cfg))
-                }
-            };
-            let state = read_entries(&mut r)?;
-            let no_params = read_u8(&mut r)? != 0;
-            let init_params = read_opt_tensor(&mut r)?;
-            let model = read_str(&mut r)?;
-            Request::Create(CreateSpec {
-                pid,
-                device,
-                program,
-                state,
-                no_params,
-                init_params,
-                model,
-            })
-        }
+        K_CREATE => Request::Create(read_create_spec(&mut r)?),
         K_SEND => {
             let pid = Pid(read_u32(&mut r)?);
             let msg = read_str(&mut r)?;
@@ -613,6 +636,18 @@ pub fn decode_request(buf: &[u8]) -> Result<(u64, Request)> {
         }
         K_STATS => Request::Stats,
         K_SHUTDOWN => Request::Shutdown,
+        K_HEARTBEAT => Request::Heartbeat { nonce: read_u64(&mut r)? },
+        K_MIGRATE => {
+            let n = read_u32(&mut r)? as usize;
+            if n > 1 << 16 {
+                bail!("implausible migration batch {n}");
+            }
+            let mut specs = Vec::with_capacity(n);
+            for _ in 0..n {
+                specs.push(read_create_spec(&mut r)?);
+            }
+            Request::Migrate { specs }
+        }
         other => bail!("unknown request kind {other}"),
     };
     Ok((req_id, req))
@@ -927,7 +962,7 @@ mod tests {
             model: "mlp_tiny".to_string(),
         };
         let reqs = vec![
-            Request::Create(spec),
+            Request::Create(spec.clone()),
             Request::Send {
                 pid: Pid(3),
                 msg: "STEP".to_string(),
@@ -966,6 +1001,21 @@ mod tests {
             },
             Request::Stats,
             Request::Shutdown,
+            Request::Heartbeat { nonce: 0xDEAD_BEEF_0042 },
+            Request::Migrate {
+                specs: vec![
+                    spec,
+                    CreateSpec {
+                        pid: Pid(11),
+                        device: None,
+                        program: None,
+                        state: vec![("sgmcmc_t".to_string(), Value::Usize(6))],
+                        no_params: true,
+                        init_params: None,
+                        model: "mlp_tiny".to_string(),
+                    },
+                ],
+            },
         ];
         for (i, req) in reqs.into_iter().enumerate() {
             let buf = encode_request(i as u64, &req).unwrap();

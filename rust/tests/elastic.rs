@@ -1,0 +1,312 @@
+//! Elastic-fabric integration tests (DESIGN.md §Elastic fabric): node
+//! death, deterministic fault injection, and bit-checkable chain
+//! migration. Hermetic — real TCP sockets on 127.0.0.1 ephemeral ports,
+//! no artifacts, no PJRT.
+//!
+//! The acceptance bar:
+//! * a 2-node TcpLoopback SGLD run whose node 1 is killed mid-run by a
+//!   fault plan recovers via migration and finishes with BIT-IDENTICAL
+//!   final params, reservoir samples, and per-step losses to an
+//!   uninterrupted 1-node run;
+//! * dead-link detection fails pending futures within `dead_after`
+//!   instead of hanging `wait()`, passing through `Suspect` on the way;
+//! * an exhausted `recover_rounds` budget fails loudly, naming the dead
+//!   node — never a hang;
+//! * a running heartbeat monitor never perturbs the data-path frame
+//!   counters (a broadcast is still exactly ONE frame per node);
+//! * `connect_with_backoff` survives refused connection attempts and
+//!   gives up loudly when the peer never appears.
+//!
+//! The whole file needs the transport's fault hooks, which integration
+//! tests only see under `--features faultinject` (cfg(test) does not
+//! apply across the crate boundary).
+#![cfg(feature = "faultinject")]
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use push::data::{synth, Batch, DataLoader};
+use push::device::CostModel;
+use push::infer::sgmcmc::{
+    linear_native_model, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Schedule,
+};
+use push::infer::Infer;
+use push::particle::{PFuture, Value};
+use push::pd::checkpoint::Checkpoint;
+use push::pd::transport::fault::{self, FaultPlan};
+use push::pd::transport::{spawn_loopback_node, NodeTransport, TcpNode};
+use push::pd::wire::CreateSpec;
+use push::pd::{FabricConfig, LinkHealth, SpecOpts, Topology, TransportKind};
+use push::runtime::{Manifest, Tensor};
+use push::util::rng::Rng;
+use push::{NelConfig, Pid, PushDist};
+
+const D: usize = 6;
+const BATCH: usize = 8;
+
+fn native_manifest() -> Manifest {
+    push::infer::sgmcmc::linear_native_manifest(D, BATCH)
+}
+
+fn nel_cfg() -> NelConfig {
+    NelConfig {
+        num_devices: 2,
+        cache_size: 4,
+        cost: CostModel::free(),
+        control_workers: 2,
+        seed: 7,
+        ..NelConfig::default()
+    }
+}
+
+fn pd_with(nodes: usize, transport: TransportKind, fabric: &FabricConfig) -> PushDist {
+    PushDist::with_topology_and_fabric(
+        &native_manifest(),
+        "linear_native",
+        nel_cfg(),
+        &Topology { nodes, transport },
+        fabric,
+    )
+    .unwrap()
+}
+
+fn init_params(i: usize) -> Tensor {
+    Tensor::f32(vec![D], Rng::new(0xBEEF).fold_in(i as u64).normal_vec(D))
+}
+
+fn chain_cfg(particles: usize, algo: SgmcmcAlgo, temperature: f32) -> SgmcmcConfig {
+    SgmcmcConfig {
+        particles,
+        algo,
+        schedule: Schedule::Constant { eps: 2e-2 },
+        temperature,
+        friction: 0.2,
+        burn_in: 2,
+        thin: 1,
+        max_samples: 8,
+        prior_std: None,
+        seed: 21,
+        model: linear_native_model(),
+        init: Some(Arc::new(init_params)),
+    }
+}
+
+fn fixed_batches(n_batches: usize, seed: u64) -> Vec<Batch> {
+    let data = synth::linear(BATCH * n_batches, D, 0.05, seed);
+    DataLoader::new(data, BATCH, false, 0).epoch()
+}
+
+// ---- bit-checkable chain migration ---------------------------------------
+
+#[test]
+fn node_death_recovers_bit_identically_to_uninterrupted_run() {
+    let n = 4;
+    let batches = fixed_batches(6, 11);
+    let kill_step = 3; // post-burn-in: the reservoir already has content
+
+    // control: an uninterrupted 1-node in-process run (T > 0 so the
+    // deterministic noise streams are exercised too)
+    let control = SgMcmc::new(
+        pd_with(1, TransportKind::InProc, &FabricConfig::default()),
+        chain_cfg(n, SgmcmcAlgo::Sgld, 1e-3),
+    )
+    .unwrap();
+    let mut control_losses = Vec::new();
+    for b in &batches {
+        control_losses.push(control.step_all(&b.x, &b.y).unwrap());
+    }
+    let control_params = control.pd().drain_params().unwrap();
+
+    // elastic: 2-node tcp run; a fault plan kills node 1's link on its
+    // next data frame — i.e. deterministically at round `kill_step`
+    let pd = pd_with(2, TransportKind::TcpLoopback, &FabricConfig::default());
+    let addr = pd.peer_addr(1).expect("node 1 is a wire link");
+    let algo =
+        SgMcmc::new(pd, chain_cfg(n, SgmcmcAlgo::Sgld, 1e-3)).unwrap().with_recovery(1);
+    let mut ckpt = Checkpoint::capture(algo.pd()).unwrap();
+    let mut used = 0usize;
+    let mut losses = Vec::new();
+    for (i, b) in batches.iter().enumerate() {
+        if i == kill_step {
+            fault::set_plan(
+                addr,
+                FaultPlan { drop_after_frames: Some(0), ..FaultPlan::default() },
+            );
+        }
+        losses.push(algo.step_all_recovering(&b.x, &b.y, &mut ckpt, &mut used).unwrap());
+    }
+    fault::clear(addr);
+
+    assert_eq!(used, 1, "exactly one recovery round");
+    assert_eq!(algo.pd().dead_nodes(), vec![1]);
+    // the dead node's particles (round-robin: pids 1 and 3) moved to node 0
+    assert_eq!(algo.pd().node_of(Pid(1)), Some(0), "pid 1 not migrated");
+    assert_eq!(algo.pd().node_of(Pid(3)), Some(0), "pid 3 not migrated");
+
+    // BIT-IDENTICAL: per-step losses, final params, reservoirs
+    assert_eq!(losses, control_losses, "per-step losses diverged across the kill");
+    let params: BTreeMap<Pid, Tensor> = algo.pd().drain_params().unwrap();
+    assert_eq!(params.len(), n);
+    for (pid, want) in &control_params {
+        assert_eq!(&params[pid], want, "{pid} params diverged after migration");
+    }
+    for pid in control.pids() {
+        let a = control.chain(pid);
+        let b = algo.chain(pid);
+        assert_eq!(a.step, b.step, "{pid} chain clock diverged");
+        assert_eq!(a.seen, b.seen, "{pid} reservoir candidate count diverged");
+        assert_eq!(a.samples, b.samples, "{pid} reservoir samples diverged");
+    }
+}
+
+// ---- dead-link detection --------------------------------------------------
+
+#[test]
+fn dead_link_detection_fails_pending_futures_within_dead_after() {
+    // A peer that accepts (kernel backlog) but never speaks the protocol:
+    // no pongs, no responses — the silent-death shape heartbeats exist for.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let node = TcpNode::connect(addr).unwrap();
+    let dead_after = Duration::from_millis(300);
+
+    let fut = node.send(Pid(0), "PING", vec![]);
+    let t0 = Instant::now();
+    let mut saw_suspect = false;
+    // hand-driven monitor ticks (the fabric's thread does exactly this)
+    loop {
+        match node.heartbeat_tick(dead_after) {
+            LinkHealth::Dead => break,
+            LinkHealth::Suspect => saw_suspect = true,
+            LinkHealth::Healthy => {}
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "monitor never declared the silent link dead"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(t0.elapsed() >= dead_after, "declared dead before the silence threshold");
+    assert!(saw_suspect, "Suspect must precede Dead on a silent link");
+
+    // severing the link failed the pending future promptly — no hang
+    let err = fut.wait().unwrap_err();
+    assert!(err.msg.contains("connection closed"), "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "pending future took {:?} to fail",
+        t0.elapsed()
+    );
+    assert_eq!(node.health(), LinkHealth::Dead);
+    assert!(node.counters().errors >= 1, "link failures must be counted");
+}
+
+// ---- bounded recovery -----------------------------------------------------
+
+#[test]
+fn exhausted_recover_budget_fails_loudly_naming_the_dead_node() {
+    let batches = fixed_batches(1, 17);
+    let pd = pd_with(2, TransportKind::TcpLoopback, &FabricConfig::default());
+    let addr = pd.peer_addr(1).unwrap();
+    // budget 0: the first node death must fail the run, not hang it
+    let algo = SgMcmc::new(pd, chain_cfg(2, SgmcmcAlgo::Sgld, 0.0)).unwrap();
+    let mut ckpt = Checkpoint::capture(algo.pd()).unwrap();
+    let mut used = 0usize;
+    fault::set_plan(addr, FaultPlan { drop_after_frames: Some(0), ..FaultPlan::default() });
+    let err = algo
+        .step_all_recovering(&batches[0].x, &batches[0].y, &mut ckpt, &mut used)
+        .unwrap_err();
+    fault::clear(addr);
+    let msg = format!("{err:#}");
+    assert!(msg.contains("recover budget (0)"), "budget not named: {msg}");
+    assert!(msg.contains("node 1"), "dead node not named: {msg}");
+    assert!(msg.contains(&addr.to_string()), "dead node address not named: {msg}");
+}
+
+// ---- heartbeats stay off the data path ------------------------------------
+
+#[test]
+fn heartbeat_monitor_does_not_perturb_data_path_counters() {
+    let fabric = FabricConfig {
+        heartbeat_every: Some(Duration::from_millis(2)),
+        dead_after: Duration::from_millis(500),
+    };
+    let pd = pd_with(2, TransportKind::TcpLoopback, &fabric);
+    let pids = pd
+        .p_create_spec_n(6, |_| SpecOpts {
+            program: Some(("echo".to_string(), Value::Unit)),
+            no_params: true,
+            ..SpecOpts::default()
+        })
+        .unwrap();
+    // let a burst of probes flow before measuring the data path
+    std::thread::sleep(Duration::from_millis(80));
+
+    let before = pd.transport_counters();
+    let futs = pd.broadcast(&pids, "PING", vec![]);
+    PFuture::join_all(&futs).wait().unwrap();
+    let after = pd.transport_counters();
+    for node in 0..2 {
+        assert_eq!(
+            after[node].frames_sent - before[node].frames_sent,
+            1,
+            "node {node}: heartbeat probes must not count as data frames"
+        );
+        assert_eq!(
+            after[node].frames_received - before[node].frames_received,
+            1,
+            "node {node}: pongs must not count as data frames"
+        );
+        assert_eq!(after[node].errors, 0, "node {node}: healthy link reported errors");
+    }
+    // ...while the probes themselves ARE accounted, in their own counter
+    for (i, c) in pd.transport_counters().iter().enumerate() {
+        assert!(c.heartbeats > 0, "node {i}: monitor sent no probes");
+    }
+    assert!(
+        pd.link_health().iter().all(|h| *h != LinkHealth::Dead),
+        "healthy links declared dead: {:?}",
+        pd.link_health()
+    );
+}
+
+// ---- startup backoff ------------------------------------------------------
+
+#[test]
+fn connect_backoff_survives_refused_attempts() {
+    let model = Arc::new(native_manifest().model("linear_native").unwrap().clone());
+    let (addr, _server) = spawn_loopback_node(nel_cfg(), model).unwrap();
+    // the first two connects are refused (a worker still binding its port)
+    fault::set_plan(addr, FaultPlan { refuse_connects: 2, ..FaultPlan::default() });
+    let node = TcpNode::connect_with_backoff(addr, 6).unwrap();
+    fault::clear(addr);
+    assert_eq!(node.peer_addr(), Some(addr));
+    // the surviving link actually works
+    let pid = node
+        .create_spec(CreateSpec {
+            pid: Pid(0),
+            device: None,
+            program: Some(("echo".to_string(), Value::Unit)),
+            state: Vec::new(),
+            no_params: true,
+            init_params: None,
+            model: "linear_native".to_string(),
+        })
+        .unwrap();
+    assert_eq!(pid, Pid(0));
+    assert_eq!(node.send(pid, "WHO", vec![]).wait().unwrap(), Value::Usize(0));
+}
+
+#[test]
+fn connect_backoff_gives_up_loudly() {
+    // bind a port and immediately free it: nothing ever listens there
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let err = TcpNode::connect_with_backoff(addr, 2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("after 2 attempts"), "{msg}");
+    assert!(msg.contains(&addr.to_string()), "{msg}");
+}

@@ -15,6 +15,10 @@
 //! * Wire codec: arbitrary nested Value round-trip, truncated/oversized
 //!   frame rejection, and checkpoint-file/wire-codec byte identity (the
 //!   v1/v2 checkpoint compatibility seam)
+//! * Elastic-fabric messages: Heartbeat/Migrate round-trip with arbitrary
+//!   nested chain state, strict-prefix truncation of any encoded request
+//!   fails to decode, and unknown kind bytes error cleanly (a v-next peer
+//!   can't wedge a v1 node)
 
 use std::collections::BTreeMap;
 
@@ -409,6 +413,124 @@ fn prop_wire_truncated_and_oversized_frames_rejected() {
     // a frame header claiming more than MAX_FRAME errors without allocating
     let huge = (u32::MAX).to_le_bytes();
     assert!(wire::read_frame(&mut &huge[..]).is_err());
+}
+
+#[test]
+fn prop_wire_heartbeat_and_migrate_roundtrip() {
+    use push::pd::wire::{self, CreateSpec, Request};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xe1a57);
+
+        // heartbeats: fixed-size, tensor-free, nonce echoed exactly
+        let nonce = rng.below(1 << 30) as u64 ^ (seed << 32);
+        let hb = Request::Heartbeat { nonce };
+        let buf = wire::encode_request(seed, &hb).unwrap();
+        assert!(
+            buf.len() < 64,
+            "seed {seed}: a heartbeat encoded to {} bytes (must never carry payload)",
+            buf.len()
+        );
+        let (id, back) = wire::decode_request(&buf).unwrap();
+        assert_eq!(id, seed, "seed {seed}");
+        assert_eq!(back, hb, "seed {seed}");
+
+        // migrate batches: every spec field crosses intact, arbitrary
+        // nested chain state included (reservoirs are lists of tensors)
+        let n = 1 + rng.below(4);
+        let specs: Vec<CreateSpec> = (0..n)
+            .map(|i| {
+                let d = 1 + rng.below(8);
+                CreateSpec {
+                    pid: Pid(rng.below(1 << 16) as u32),
+                    device: if rng.below(2) == 0 { None } else { Some(rng.below(4)) },
+                    program: Some((
+                        "sgmcmc".to_string(),
+                        wire::arbitrary_value(&mut rng, 2),
+                    )),
+                    state: (0..rng.below(3))
+                        .map(|k| (format!("k{k}"), wire::arbitrary_value(&mut rng, 2)))
+                        .collect(),
+                    no_params: rng.below(2) == 0,
+                    init_params: if i % 2 == 0 {
+                        Some(Tensor::f32(vec![d], rng.normal_vec(d)))
+                    } else {
+                        None
+                    },
+                    model: "linear_native".to_string(),
+                }
+            })
+            .collect();
+        let mig = Request::Migrate { specs };
+        let buf = wire::encode_request(seed + 1, &mig).unwrap();
+        let (id, back) = wire::decode_request(&buf).unwrap();
+        assert_eq!(id, seed + 1, "seed {seed}");
+        assert_eq!(back, mig, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_request_strict_prefix_fails_to_decode() {
+    use push::pd::wire::{self, CreateSpec, Request};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x7afc);
+        // cycle through every request shape, including zero-body ones
+        // (where the prefix must die on the header reads)
+        let req = match rng.below(6) {
+            0 => Request::Heartbeat { nonce: seed },
+            1 => Request::Migrate {
+                specs: vec![CreateSpec {
+                    pid: Pid(7),
+                    device: None,
+                    program: None,
+                    state: vec![("s".to_string(), wire::arbitrary_value(&mut rng, 2))],
+                    no_params: false,
+                    init_params: Some(Tensor::f32(vec![3], rng.normal_vec(3))),
+                    model: "m".to_string(),
+                }],
+            },
+            2 => Request::Send {
+                pid: Pid(rng.below(99) as u32),
+                msg: "MCMC_STEP".to_string(),
+                args: vec![wire::arbitrary_value(&mut rng, 2)],
+            },
+            3 => Request::Stats,
+            4 => Request::ParticleState { pid: Pid(3) },
+            _ => Request::RestoreState {
+                pid: Pid(1),
+                entries: vec![("k".to_string(), wire::arbitrary_value(&mut rng, 1))],
+            },
+        };
+        let buf = wire::encode_request(seed, &req).unwrap();
+        assert_eq!(wire::decode_request(&buf).unwrap().1, req, "seed {seed}");
+        // EVERY strict prefix must fail: each field is read eagerly, so a
+        // cut anywhere leaves a read wanting bytes — no prefix may alias
+        // to a shorter valid request
+        for cut in 0..buf.len() {
+            assert!(
+                wire::decode_request(&buf[..cut]).is_err(),
+                "seed {seed}: prefix {cut}/{} decoded as a request",
+                buf.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_wire_unknown_request_kind_errors_cleanly() {
+    use push::pd::wire::{self, Request};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xbadc0de);
+        // a valid header whose kind byte is from the future: K_MIGRATE=11
+        // is the newest kind, so 12..=255 must all be rejected by name
+        let mut buf = wire::encode_request(seed, &Request::Heartbeat { nonce: 9 }).unwrap();
+        let bogus = 12 + rng.below(244) as u8;
+        buf[1] = bogus;
+        let err = wire::decode_request(&buf).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown request kind"),
+            "seed {seed}: kind {bogus}: {err:#}"
+        );
+    }
 }
 
 #[test]
