@@ -533,6 +533,63 @@ fn main() {
         println!("    (serve load: {refreshes} refreshes, {queries} queries during the case)");
     }
 
+    // ---- batched vs sequential snapshot refresh over a 2-node fabric ------
+    // A refresh used to cost one blocking ParticleState round-trip per
+    // chain; the batched SnapshotNode protocol costs ONE frame per node
+    // with every frame in flight before the first wait. At 16 chains over
+    // 2 real loopback nodes the gate requires batched <= 0.6x sequential
+    // wall-clock (BENCH_l3.json, min_ratio 1.67 sequential/batched).
+    {
+        use push::infer::sgmcmc::{
+            linear_native_manifest, linear_native_model, SgMcmc, SgmcmcAlgo, SgmcmcConfig,
+        };
+
+        const SD: usize = 32;
+        const SB: usize = 16;
+        let manifest = linear_native_manifest(SD, SB);
+        let pd = PushDist::with_topology(
+            &manifest,
+            "linear_native",
+            NelConfig { control_workers: 2, ..cfg(2, 4) },
+            &Topology { nodes: 2, transport: TransportKind::TcpLoopback },
+        )
+        .unwrap();
+        let algo = SgMcmc::new(
+            pd,
+            SgmcmcConfig {
+                particles: 16,
+                algo: SgmcmcAlgo::Sgld,
+                schedule: push::infer::Schedule::Constant { eps: 1e-2 },
+                temperature: 0.0,
+                burn_in: 0,
+                thin: 1,
+                max_samples: 8,
+                seed: 5,
+                model: linear_native_model(),
+                init: Some(Arc::new(|i| {
+                    Tensor::f32(vec![SD], Rng::new(0xbe).fold_in(i as u64).normal_vec(SD))
+                })),
+                ..SgmcmcConfig::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(23);
+        for _ in 0..4 {
+            let x = Tensor::f32(vec![SB, SD], rng.normal_vec(SB * SD));
+            let y = Tensor::f32(vec![SB, 1], rng.normal_vec(SB));
+            algo.step_all(&x, &y).unwrap();
+        }
+        let server = algo.serve_handle().unwrap();
+        run(&mut results, "snapshot_refresh_sequential_2node", 5, 60, || {
+            server.refresh_sequential(1).unwrap();
+        });
+        run(&mut results, "snapshot_refresh_batched_2node", 5, 60, || {
+            server.refresh(2).unwrap();
+        });
+        let full = server.snapshot();
+        assert!(full.staleness.is_complete() && full.total_samples() > 0);
+    }
+
     // ---- heartbeat monitor tax on a 2-node training loop ------------------
     // One training round = 20 SGLD chain steps (8 particles, native linear
     // model) over a REAL 2-node TCP-loopback fabric. The monitored case

@@ -22,7 +22,10 @@ use crate::data::BatchSource;
 use crate::runtime::Tensor;
 
 pub use ensemble::DeepEnsemble;
-pub use serve::{PosteriorServer, PosteriorSnapshot, ReservoirSnapshot};
+pub use serve::{
+    Overloaded, PosteriorServer, PosteriorSnapshot, QueryResult, ReservoirSnapshot, ServeConfig,
+    ServeStats, Staleness,
+};
 pub use sgmcmc::{ModelSource, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig};
 pub use svgd::{svgd_update_native, Svgd, SvgdConfig};
 pub use swag::{MultiSwag, SwagConfig};

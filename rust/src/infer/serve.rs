@@ -1,4 +1,5 @@
-//! Posterior-predictive serving under training load (DESIGN.md §10).
+//! Posterior-predictive serving under training load and partial failure
+//! (DESIGN.md §10, §12).
 //!
 //! The paper's serving half ("statistical models as ordinary, queryable
 //! functions" — Tran et al.'s framing) applied to SGMCMC particle chains:
@@ -21,18 +22,32 @@
 //! Snapshots are versioned by `(pid, sgmcmc_seen)` and stamped with the
 //! training epoch that refreshed them ([`PosteriorServer::refresh_at`]
 //! refreshes at most once per stamp — the `--serve-every N` cadence).
-//! On a multi-node PD the snapshot crosses the fabric as ordinary
-//! `ParticleState` wire frames; the serving math is transport-oblivious.
+//! On a multi-node PD a refresh is exactly ONE batched `SnapshotNode`
+//! frame per node ([`PushDist::snapshot_chains`]), bounded by the
+//! configured deadline and retried with jittered backoff; the serving
+//! math is transport-oblivious.
+//!
+//! Failure posture (DESIGN.md §12): a refresh against a dead or slow
+//! node degrades to the freshest complete-or-partial snapshot instead of
+//! failing the tier — missing chains are carried forward from the last
+//! good snapshot and recorded in [`Staleness`] (surfaced per query via
+//! [`PosteriorServer::query_mean`] and in [`ServeStats`]); a refresh
+//! after `PushDist::recover` heals back to complete. Published versions
+//! only grow, even across degraded refreshes. Overload is explicit: a
+//! bounded in-flight admission gate sheds excess queries with a typed
+//! [`Overloaded`] error rather than queueing without bound.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::infer::eval;
 use crate::infer::sgmcmc::{ModelSource, NativeForwardFn, SgmcmcConfig, K_SAMPLES, K_SEEN};
 use crate::particle::Value;
-use crate::pd::PushDist;
+use crate::pd::{LinkHealth, PushDist};
 use crate::runtime::tensor::ops;
 use crate::runtime::Tensor;
 use crate::Pid;
@@ -49,18 +64,39 @@ pub struct ReservoirSnapshot {
     pub samples: Vec<Tensor>,
 }
 
+/// What a snapshot is missing and how old its carried-over data is. An
+/// empty `missing` list means the snapshot is complete.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Staleness {
+    /// Chains whose reservoirs could not be refreshed (dead or slow
+    /// node); their entries in the snapshot — if any — are carried
+    /// forward from the last snapshot that had them.
+    pub missing: Vec<Pid>,
+    /// Refresh stamps between this snapshot's stamp and the oldest data
+    /// it carries (0 when complete, or when there was nothing to carry).
+    pub epoch_lag: usize,
+}
+
+impl Staleness {
+    pub fn is_complete(&self) -> bool {
+        self.missing.is_empty()
+    }
+}
+
 /// A consistent view over every chain's reservoir, stamped with the
 /// training epoch that refreshed it.
 #[derive(Debug, Clone)]
 pub struct PosteriorSnapshot {
-    /// Refresh stamp (`usize::MAX` = never refreshed).
-    pub epoch: usize,
+    /// Refresh stamp (`None` = never refreshed).
+    pub epoch: Option<usize>,
     pub chains: Vec<ReservoirSnapshot>,
+    /// Which chains this snapshot could not refresh (see [`Staleness`]).
+    pub staleness: Staleness,
 }
 
 impl PosteriorSnapshot {
     fn empty() -> PosteriorSnapshot {
-        PosteriorSnapshot { epoch: usize::MAX, chains: Vec::new() }
+        PosteriorSnapshot { epoch: None, chains: Vec::new(), staleness: Staleness::default() }
     }
 
     /// Kept samples across all chains.
@@ -72,33 +108,214 @@ impl PosteriorSnapshot {
     pub fn versions(&self) -> Vec<(Pid, usize)> {
         self.chains.iter().map(|c| (c.pid, c.seen)).collect()
     }
+
+    fn epoch_label(&self) -> String {
+        match self.epoch {
+            Some(e) => format!("epoch stamp {e}"),
+            None => "never refreshed".to_string(),
+        }
+    }
+}
+
+/// Serving-tier policy knobs (refresh deadlines/retries and query
+/// admission). The defaults reproduce the pre-hardening behavior: wait
+/// indefinitely, retry twice, admit everything.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Deadline for one refresh attempt across ALL nodes (the budget is
+    /// shared — every node's single `SnapshotNode` frame is in flight
+    /// before the first wait). `None` waits until the transport fails,
+    /// which against a silent link means the heartbeat monitor's
+    /// `dead_after`.
+    pub refresh_deadline: Option<Duration>,
+    /// How many times a refresh re-asks chains that failed, against
+    /// surviving (non-Dead) links only.
+    pub refresh_retries: u32,
+    /// Base backoff before the first retry; doubles per retry with ±25%
+    /// deterministic jitter.
+    pub refresh_backoff: Duration,
+    /// Maximum queries in flight at once; excess queries are shed with a
+    /// typed [`Overloaded`] error. `0` = unbounded (no admission gate).
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            refresh_deadline: None,
+            refresh_retries: 2,
+            refresh_backoff: Duration::from_millis(50),
+            max_inflight: 0,
+        }
+    }
+}
+
+/// The typed shedding error: the admission gate was full. Callers
+/// distinguish overload from real failures via
+/// `err.downcast_ref::<Overloaded>()` and retry later — an admitted
+/// query is never corrupted by shedding (it reads a complete published
+/// snapshot version either way).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// The configured in-flight limit that was hit.
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "overloaded: query shed ({} queries already in flight)", self.limit)
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Fixed log2 latency buckets in microseconds: bucket 0 is sub-µs,
+/// bucket `b >= 1` covers `[2^(b-1), 2^b) µs`, and the last bucket
+/// absorbs everything slower (~2.1 s and up).
+pub const LAT_BUCKETS: usize = 22;
+
+struct LatencyCells {
+    buckets: [AtomicU64; LAT_BUCKETS],
+}
+
+impl LatencyCells {
+    fn new() -> LatencyCells {
+        LatencyCells { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// A point-in-time read of the per-query latency histogram.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySnapshot {
+    /// Counts per log2 bucket (see [`LAT_BUCKETS`] for the bucket map).
+    pub buckets: Vec<u64>,
+}
+
+impl LatencySnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Upper bound (µs) of the bucket holding the `q`-quantile query
+    /// (`q` in [0, 1]). Log2 buckets make this a factor-of-two estimate,
+    /// which is what an overload dashboard needs.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (LAT_BUCKETS - 1)
+    }
+
+    /// `p50/p99` one-liner for CLI output, e.g. `"p50<=128us p99<=1024us"`.
+    pub fn render(&self) -> String {
+        if self.count() == 0 {
+            return "no queries".to_string();
+        }
+        format!("p50<={}us p99<={}us", self.quantile_us(0.5), self.quantile_us(0.99))
+    }
+}
+
+/// Every serving-tier counter in one read (the `(refreshes, queries)`
+/// pair of [`PosteriorServer::stats`] plus the failure/overload story).
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Snapshots published (complete or degraded).
+    pub refreshes: u64,
+    /// Published snapshots that were missing at least one chain.
+    pub degraded_refreshes: u64,
+    /// Refresh retry rounds taken against surviving nodes.
+    pub retries: u64,
+    /// Queries admitted past the gate.
+    pub queries: u64,
+    /// Admitted queries answered successfully.
+    pub served: u64,
+    /// Admitted queries answered from a degraded (stale) snapshot.
+    pub stale_served: u64,
+    /// Queries shed by the admission gate ([`Overloaded`]).
+    pub shed: u64,
+    /// Per-query latency histogram over admitted queries.
+    pub latency: LatencySnapshot,
+}
+
+/// A query answer plus the staleness of the snapshot that produced it —
+/// a caller serving "millions of users" needs to know when an answer
+/// comes from a degraded view, not just that an answer exists.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub value: Tensor,
+    /// Stamp of the snapshot that answered.
+    pub epoch: Option<usize>,
+    pub staleness: Staleness,
 }
 
 /// Serves posterior-predictive queries from reservoir snapshots while the
 /// chains keep training. Build one via [`crate::infer::SgMcmc::serve_handle`]
-/// (or [`PosteriorServer::new`] with a PD serve handle directly); share it
-/// across query threads — every method takes `&self`.
+/// (or [`PosteriorServer::new`] / [`PosteriorServer::with_config`] with a
+/// PD serve handle directly); share it across query threads — every
+/// method takes `&self`.
 pub struct PosteriorServer {
     pd: PushDist,
     pids: Vec<Pid>,
+    cfg: ServeConfig,
     forward: NativeForwardFn,
     classify: bool,
     snap: RwLock<Arc<PosteriorSnapshot>>,
-    /// Serializes refreshes: the state read and the publish must be one
-    /// unit, or a preempted refresh could overwrite a fresher snapshot
-    /// with an older one — published versions must only grow. Readers
+    /// Serializes PUBLISHES only (the remote snapshot phase runs outside
+    /// it, so a stalled node never blocks other refreshers): under the
+    /// gate the candidate is merged per-pid against the published
+    /// snapshot, keeping every published version monotone. Readers
     /// (`snapshot`/`predict_*`) never touch this lock.
     refresh_gate: Mutex<()>,
+    inflight: AtomicUsize,
     refreshes: AtomicU64,
+    degraded_refreshes: AtomicU64,
+    retries: AtomicU64,
     queries: AtomicU64,
+    served: AtomicU64,
+    stale_served: AtomicU64,
+    shed: AtomicU64,
+    latency: LatencyCells,
 }
 
 impl PosteriorServer {
     /// `pd` must be a serve handle onto the fabric that owns `pids`
     /// ([`PushDist::serve_handle`]). The chain config supplies the native
     /// forward closure — serving computes on the caller's thread, outside
-    /// the device layer, so an artifact-only model cannot serve.
+    /// the device layer, so an artifact-only model cannot serve. Uses
+    /// [`ServeConfig::default`]; see [`PosteriorServer::with_config`].
     pub fn new(pd: PushDist, pids: Vec<Pid>, cfg: &SgmcmcConfig) -> Result<PosteriorServer> {
+        Self::with_config(pd, pids, cfg, ServeConfig::default())
+    }
+
+    /// [`PosteriorServer::new`] with explicit serving policy (refresh
+    /// deadline/retries, admission limit).
+    pub fn with_config(
+        pd: PushDist,
+        pids: Vec<Pid>,
+        cfg: &SgmcmcConfig,
+        serve_cfg: ServeConfig,
+    ) -> Result<PosteriorServer> {
         ensure!(!pids.is_empty(), "a posterior server needs at least one chain");
         let forward = match &cfg.model {
             ModelSource::Native { forward, .. } => forward.clone(),
@@ -113,12 +330,20 @@ impl PosteriorServer {
         Ok(PosteriorServer {
             pd,
             pids,
+            cfg: serve_cfg,
             forward,
             classify,
             snap: RwLock::new(Arc::new(PosteriorSnapshot::empty())),
             refresh_gate: Mutex::new(()),
+            inflight: AtomicUsize::new(0),
             refreshes: AtomicU64::new(0),
+            degraded_refreshes: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
             queries: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            stale_served: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            latency: LatencyCells::new(),
         })
     }
 
@@ -133,43 +358,188 @@ impl PosteriorServer {
         self.snap.read().unwrap().clone()
     }
 
-    /// Re-snapshot every chain's reservoir and stamp the result with
-    /// `epoch`. In-process this is per-particle map clones (tensor values
-    /// are Arc bumps); on a wire transport it is one `ParticleState`
-    /// request per chain, decoded as owned tensors. Transport errors
-    /// surface — a serving tier must not silently answer from a node it
-    /// can no longer reach. Concurrent refreshes serialize on the gate,
-    /// so a slow refresh can never publish over a fresher snapshot.
+    /// Re-snapshot every chain's reservoir and stamp the result `epoch`.
+    ///
+    /// The remote phase — ONE batched `SnapshotNode` frame per node,
+    /// bounded by the configured deadline, retried against surviving
+    /// links with jittered backoff — runs with NO server lock held, so a
+    /// stalled node blocks neither training nor other refreshers. The
+    /// publish phase then merges the candidate per-pid against the
+    /// published snapshot under the gate: chains that could not be
+    /// refreshed are carried forward from the last good snapshot and
+    /// recorded in [`Staleness`], and a chain for which a racing
+    /// refresher already published a fresher `(pid, seen)` version keeps
+    /// the fresher one — published versions only grow.
+    ///
+    /// Only a TOTAL failure with nothing ever published errors; any
+    /// partial result degrades loudly (warn log + staleness + counters)
+    /// and keeps serving.
     pub fn refresh(&self, epoch: usize) -> Result<Arc<PosteriorSnapshot>> {
-        let _gate = self.refresh_gate.lock().unwrap();
-        self.refresh_locked(epoch)
+        let (fresh, errs) = self.collect_batched();
+        self.finish(epoch, fresh, errs)
     }
 
-    /// The body of [`PosteriorServer::refresh`]; callers hold the gate.
-    fn refresh_locked(&self, epoch: usize) -> Result<Arc<PosteriorSnapshot>> {
-        let mut chains = Vec::with_capacity(self.pids.len());
+    /// The pre-batching refresh path — one blocking `ParticleState`
+    /// round-trip per chain — kept callable for the
+    /// `snapshot_refresh_{batched,sequential}_2node` microbench pair and
+    /// as the degenerate reference; the serving tier itself always
+    /// refreshes through the batched protocol.
+    pub fn refresh_sequential(&self, epoch: usize) -> Result<Arc<PosteriorSnapshot>> {
+        let mut fresh = BTreeMap::new();
+        let mut errs: Vec<(Pid, String)> = Vec::new();
         for pid in &self.pids {
-            let entries = self
-                .pd
-                .particle_state_checked(*pid)
-                .map_err(|e| anyhow!("snapshotting {pid}: {e}"))?
-                .ok_or_else(|| anyhow!("snapshotting {pid}: unknown particle"))?;
-            let mut seen = 0usize;
-            let mut samples = Vec::new();
-            for (k, v) in entries {
-                match (k.as_str(), v) {
-                    (K_SEEN, Value::Usize(n)) => seen = n,
-                    (K_SAMPLES, Value::List(vs)) => {
-                        samples = vs.into_iter().filter_map(|s| s.tensor().ok()).collect();
+            match self.pd.particle_state_checked(*pid) {
+                Ok(Some(entries)) => {
+                    fresh.insert(*pid, parse_reservoir(*pid, entries));
+                }
+                Ok(None) => errs.push((*pid, "unknown particle".to_string())),
+                Err(e) => errs.push((*pid, e.msg)),
+            }
+        }
+        self.finish(epoch, fresh, errs)
+    }
+
+    /// The remote phase: batched snapshots with deadline + bounded
+    /// jittered retry. Returns fresh reservoirs per pid and the last
+    /// error per still-missing pid. No locks held.
+    fn collect_batched(&self) -> (BTreeMap<Pid, ReservoirSnapshot>, Vec<(Pid, String)>) {
+        let mut fresh: BTreeMap<Pid, ReservoirSnapshot> = BTreeMap::new();
+        let mut last_err: BTreeMap<Pid, String> = BTreeMap::new();
+        let mut want: Vec<Pid> = self.pids.clone();
+        for attempt in 0..=self.cfg.refresh_retries {
+            if attempt > 0 {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                // 2^(attempt-1) * base, ±25% deterministic jitter (the
+                // vendored crate set has no rand) — bounded, loud, and
+                // reproducible under test.
+                let base_ms =
+                    (self.cfg.refresh_backoff.as_millis() as u64).max(1) << (attempt - 1).min(8);
+                let mut rng =
+                    crate::util::rng::Rng::new(0x5e57_4e5e).fold_in(attempt as u64);
+                let jitter = rng.below((base_ms / 2 + 1) as usize) as u64;
+                std::thread::sleep(Duration::from_millis(base_ms - base_ms / 4 + jitter));
+            }
+            for (pid, res) in self.pd.snapshot_chains(&want, self.cfg.refresh_deadline) {
+                match res {
+                    Ok(Some(entries)) => {
+                        fresh.insert(pid, parse_reservoir(pid, entries));
+                        last_err.remove(&pid);
                     }
-                    _ => {}
+                    Ok(None) => {
+                        last_err.insert(pid, "unknown particle".to_string());
+                    }
+                    Err(e) => {
+                        last_err.insert(pid, e.msg);
+                    }
                 }
             }
-            chains.push(ReservoirSnapshot { pid: *pid, seen, samples });
+            // Retry only chains on links still worth asking: a Dead link
+            // stays dead until migration re-homes its pids.
+            let health = self.pd.link_health();
+            want = self
+                .pids
+                .iter()
+                .copied()
+                .filter(|p| !fresh.contains_key(p))
+                .filter(|p| {
+                    self.pd
+                        .node_of(*p)
+                        .map(|n| health.get(n) != Some(&LinkHealth::Dead))
+                        .unwrap_or(false)
+                })
+                .collect();
+            if want.is_empty() {
+                break;
+            }
         }
-        let snap = Arc::new(PosteriorSnapshot { epoch, chains });
+        (fresh, last_err.into_iter().collect())
+    }
+
+    /// The publish phase shared by both refresh paths: merge, degrade,
+    /// stamp, publish. Holds the gate only here — never across RPC.
+    fn finish(
+        &self,
+        epoch: usize,
+        fresh: BTreeMap<Pid, ReservoirSnapshot>,
+        errs: Vec<(Pid, String)>,
+    ) -> Result<Arc<PosteriorSnapshot>> {
+        if fresh.is_empty() {
+            // Total failure: fail over to the last good snapshot instead
+            // of publishing an all-stale one — leaving the stamp untouched
+            // means `refresh_at` keeps re-trying on later stamps.
+            let prev = self.snapshot();
+            let detail = errs
+                .first()
+                .map(|(pid, e)| format!("{pid}: {e}"))
+                .unwrap_or_else(|| "no chains".to_string());
+            if prev.chains.is_empty() {
+                return Err(anyhow!(
+                    "posterior refresh failed for every chain ({detail}) and no snapshot \
+                     has ever been published"
+                ));
+            }
+            self.degraded_refreshes.fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!(
+                "posterior refresh failed for every chain ({detail}); serving last good \
+                 snapshot ({})",
+                prev.epoch_label()
+            );
+            return Ok(prev);
+        }
+        for (pid, e) in &errs {
+            crate::log_warn!("posterior refresh degraded: {pid} unavailable ({e})");
+        }
+
+        let _gate = self.refresh_gate.lock().unwrap();
+        let prev = self.snap.read().unwrap().clone();
+        let prev_by_pid: BTreeMap<Pid, &ReservoirSnapshot> =
+            prev.chains.iter().map(|c| (c.pid, c)).collect();
+        let mut chains = Vec::with_capacity(self.pids.len());
+        let mut missing = Vec::new();
+        let mut carried = false;
+        for pid in &self.pids {
+            match (fresh.get(pid), prev_by_pid.get(pid)) {
+                // A racing refresher already published a fresher version
+                // of this chain while our RPC phase ran: keep it —
+                // published (pid, seen) versions only grow.
+                (Some(f), Some(p)) if p.seen > f.seen => chains.push((*p).clone()),
+                (Some(f), _) => chains.push(f.clone()),
+                // Unreachable chain with prior data: carry it, stale.
+                (None, Some(p)) => {
+                    missing.push(*pid);
+                    carried = true;
+                    chains.push((*p).clone());
+                }
+                // Unreachable chain that has never been snapshotted.
+                (None, None) => missing.push(*pid),
+            }
+        }
+        // Stamps are monotone too: a racing refresher with a later stamp
+        // must not be rewound by a slower one publishing afterwards.
+        let epoch = prev.epoch.map_or(epoch, |pe| pe.max(epoch));
+        let epoch_lag = if carried {
+            match prev.epoch {
+                Some(pe) => {
+                    let compounded =
+                        missing.iter().any(|p| prev.staleness.missing.contains(p));
+                    epoch.saturating_sub(pe)
+                        + if compounded { prev.staleness.epoch_lag } else { 0 }
+                }
+                None => 0,
+            }
+        } else {
+            0
+        };
+        let snap = Arc::new(PosteriorSnapshot {
+            epoch: Some(epoch),
+            chains,
+            staleness: Staleness { missing, epoch_lag },
+        });
         *self.snap.write().unwrap() = snap.clone();
         self.refreshes.fetch_add(1, Ordering::Relaxed);
+        if !snap.staleness.is_complete() {
+            self.degraded_refreshes.fetch_add(1, Ordering::Relaxed);
+        }
         Ok(snap)
     }
 
@@ -177,31 +547,29 @@ impl PosteriorServer {
     /// Callers on a `--serve-every N` cadence pass the training epoch;
     /// repeated calls with the current stamp return the cached snapshot
     /// without touching the particles. Racing callers with the same new
-    /// stamp are serialized by the gate and re-checked under it, so
-    /// exactly one of them performs the snapshot.
+    /// stamp re-check under the gate before publishing, so the published
+    /// snapshot still advances once per stamp (a racer that already paid
+    /// for its RPC phase merges harmlessly — versions only grow).
     pub fn refresh_at(&self, epoch: usize) -> Result<Arc<PosteriorSnapshot>> {
-        if epoch == usize::MAX {
-            // usize::MAX is the never-refreshed sentinel stamp: treating
-            // it as cached would hand back the empty initial snapshot
-            // forever. Always snapshot instead.
-            return self.refresh(epoch);
-        }
         {
             let cur = self.snap.read().unwrap();
-            if cur.epoch == epoch {
+            if cur.epoch == Some(epoch) {
                 return Ok(cur.clone());
             }
         }
-        let _gate = self.refresh_gate.lock().unwrap();
-        {
-            // re-check under the gate: a racing caller may have refreshed
-            // this stamp while we waited
-            let cur = self.snap.read().unwrap();
-            if cur.epoch == epoch {
-                return Ok(cur.clone());
-            }
+        self.refresh(epoch)
+    }
+
+    /// Admission gate: reserve an in-flight slot or shed. The guard
+    /// releases the slot on drop (success and error paths alike).
+    fn admit(&self) -> Result<InflightGuard<'_>> {
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if self.cfg.max_inflight > 0 && prev >= self.cfg.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(Overloaded { limit: self.cfg.max_inflight }));
         }
-        self.refresh_locked(epoch)
+        Ok(InflightGuard { inflight: &self.inflight })
     }
 
     /// Posterior-mean prediction at `x` from the current snapshot: each
@@ -212,6 +580,15 @@ impl PosteriorServer {
     /// entirely empty snapshot is an error (refresh after burn-in), never
     /// a silently-wrong answer from pre-posterior parameters.
     pub fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
+        self.query_mean(x).map(|r| r.value)
+    }
+
+    /// [`PosteriorServer::predict_mean`] with the answering snapshot's
+    /// stamp and [`Staleness`] attached — the query-side surface of the
+    /// degrade-to-stale story.
+    pub fn query_mean(&self, x: &Tensor) -> Result<QueryResult> {
+        let _guard = self.admit()?;
+        let t0 = Instant::now();
         self.queries.fetch_add(1, Ordering::Relaxed);
         let snap = self.snapshot();
         let mut acc: Option<Tensor> = None;
@@ -236,9 +613,8 @@ impl PosteriorServer {
         }
         let mut out = acc.ok_or_else(|| {
             anyhow!(
-                "posterior snapshot holds no samples yet (epoch stamp {}); \
-                 refresh after burn-in",
-                snap.epoch
+                "posterior snapshot holds no samples yet ({}); refresh after burn-in",
+                snap.epoch_label()
             )
         })?;
         if !self.classify && chains_used > 1 {
@@ -246,13 +622,20 @@ impl PosteriorServer {
                 *v /= chains_used as f32;
             }
         }
-        Ok(out)
+        self.served.fetch_add(1, Ordering::Relaxed);
+        if !snap.staleness.is_complete() {
+            self.stale_served.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency.record(t0.elapsed());
+        Ok(QueryResult { value: out, epoch: snap.epoch, staleness: snap.staleness.clone() })
     }
 
     /// Per-point epistemic std across ALL snapshot samples' forwards
     /// (regression only — vote one-hots have no meaningful std).
     pub fn predictive_std(&self, x: &Tensor) -> Result<Tensor> {
         ensure!(!self.classify, "predictive_std serves regression tasks only");
+        let _guard = self.admit()?;
+        let t0 = Instant::now();
         self.queries.fetch_add(1, Ordering::Relaxed);
         let snap = self.snapshot();
         let mut preds = Vec::with_capacity(snap.total_samples());
@@ -265,16 +648,64 @@ impl PosteriorServer {
             !preds.is_empty(),
             "posterior snapshot holds no samples yet; refresh after burn-in"
         );
-        eval::predictive_std(&preds)
+        let out = eval::predictive_std(&preds)?;
+        self.served.fetch_add(1, Ordering::Relaxed);
+        if !snap.staleness.is_complete() {
+            self.stale_served.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency.record(t0.elapsed());
+        Ok(out)
     }
 
-    /// (refreshes, queries) served so far.
+    /// (refreshes, queries) served so far — the original two counters,
+    /// kept for callers that only dashboard throughput. The full story
+    /// (degraded/stale/shed/retry + latency) is
+    /// [`PosteriorServer::serve_stats`].
     pub fn stats(&self) -> (u64, u64) {
         (
             self.refreshes.load(Ordering::Relaxed),
             self.queries.load(Ordering::Relaxed),
         )
     }
+
+    /// Every serving-tier counter plus the latency histogram.
+    pub fn serve_stats(&self) -> ServeStats {
+        ServeStats {
+            refreshes: self.refreshes.load(Ordering::Relaxed),
+            degraded_refreshes: self.degraded_refreshes.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            stale_served: self.stale_served.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            latency: self.latency.snapshot(),
+        }
+    }
+}
+
+struct InflightGuard<'a> {
+    inflight: &'a AtomicUsize,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn parse_reservoir(pid: Pid, entries: Vec<(String, Value)>) -> ReservoirSnapshot {
+    let mut seen = 0usize;
+    let mut samples = Vec::new();
+    for (k, v) in entries {
+        match (k.as_str(), v) {
+            (K_SEEN, Value::Usize(n)) => seen = n,
+            (K_SAMPLES, Value::List(vs)) => {
+                samples = vs.into_iter().filter_map(|s| s.tensor().ok()).collect();
+            }
+            _ => {}
+        }
+    }
+    ReservoirSnapshot { pid, seen, samples }
 }
 
 #[cfg(test)]
@@ -317,7 +748,7 @@ mod tests {
     #[test]
     fn snapshot_versions_and_totals() {
         let snap = PosteriorSnapshot {
-            epoch: 3,
+            epoch: Some(3),
             chains: vec![
                 ReservoirSnapshot {
                     pid: Pid(0),
@@ -326,9 +757,47 @@ mod tests {
                 },
                 ReservoirSnapshot { pid: Pid(1), seen: 0, samples: vec![] },
             ],
+            staleness: Staleness::default(),
         };
         assert_eq!(snap.total_samples(), 3);
         assert_eq!(snap.versions(), vec![(Pid(0), 5), (Pid(1), 0)]);
-        assert_eq!(PosteriorSnapshot::empty().epoch, usize::MAX);
+        // Option<usize> replaced the old usize::MAX never-refreshed
+        // sentinel: an empty server snapshot simply has no stamp.
+        assert_eq!(PosteriorSnapshot::empty().epoch, None);
+        assert!(snap.staleness.is_complete());
+    }
+
+    #[test]
+    fn latency_histogram_buckets_and_quantiles() {
+        let cells = LatencyCells::new();
+        assert_eq!(cells.snapshot().count(), 0);
+        assert_eq!(cells.snapshot().quantile_us(0.5), 0);
+        assert_eq!(cells.snapshot().render(), "no queries");
+        // 0µs lands in bucket 0; [2^(b-1), 2^b) µs lands in bucket b.
+        cells.record(Duration::from_micros(0));
+        cells.record(Duration::from_micros(1));
+        cells.record(Duration::from_micros(2));
+        cells.record(Duration::from_micros(3));
+        cells.record(Duration::from_micros(4));
+        let snap = cells.snapshot();
+        assert_eq!(snap.buckets[0], 1);
+        assert_eq!(snap.buckets[1], 1); // 1µs
+        assert_eq!(snap.buckets[2], 2); // 2, 3µs
+        assert_eq!(snap.buckets[3], 1); // 4µs
+        assert_eq!(snap.count(), 5);
+        // p50 of {0,1,2,3,4} sits in the [2,4) bucket -> upper bound 4.
+        assert_eq!(snap.quantile_us(0.5), 4);
+        assert_eq!(snap.quantile_us(1.0), 8);
+        // The overflow bucket absorbs multi-second queries.
+        cells.record(Duration::from_secs(30));
+        assert_eq!(cells.snapshot().buckets[LAT_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn overloaded_error_is_typed_and_displayed() {
+        let e = anyhow::Error::new(Overloaded { limit: 4 });
+        assert!(e.downcast_ref::<Overloaded>().is_some());
+        assert_eq!(e.downcast_ref::<Overloaded>().unwrap().limit, 4);
+        assert!(format!("{e}").contains("overloaded"), "{e}");
     }
 }

@@ -793,6 +793,20 @@ impl SgMcmc {
         crate::infer::PosteriorServer::new(self.pd.serve_handle(), self.pids.clone(), &self.cfg)
     }
 
+    /// [`SgMcmc::serve_handle`] with explicit serving policy (refresh
+    /// deadline/retries, admission limit — DESIGN.md §12).
+    pub fn serve_handle_with(
+        &self,
+        serve_cfg: crate::infer::ServeConfig,
+    ) -> Result<crate::infer::PosteriorServer> {
+        crate::infer::PosteriorServer::with_config(
+            self.pd.serve_handle(),
+            self.pids.clone(),
+            &self.cfg,
+            serve_cfg,
+        )
+    }
+
     /// Read one chain's clock / momentum / reservoir (zero-copy clones).
     pub fn chain(&self, pid: Pid) -> ChainSnapshot {
         let mut snap = ChainSnapshot::default();

@@ -54,7 +54,9 @@ USAGE:
                                                  --method is an alias of --algo)
   push serve [--algo sgld|sghmc] [--particles N] [--devices D] [--epochs E]
              [--batches B] [--clients C] [--serve-every N]
-             [--nodes N] [--transport inproc|tcp] [... chain options]
+             [--deadline-ms MS] [--retries N] [--max-inflight N]
+             [--nodes N] [--transport inproc|tcp]
+             [--heartbeat-every MS] [--dead-after MS] [... chain options]
   push bench <fig4|fig7|table1|table2|table3|table4|stress|ablate>
              [--devices 1,2,4] [--particles 1,2,4,8] [--batches B]
              [--epochs E] [--no-baseline] [--full] [--cache N] [--seed N]
@@ -73,6 +75,14 @@ node behind a real socket — hermetic 127.0.0.1 loopback servers, or the
 addresses in $PUSH_NODES (host:port,host:port — launched via the node
 worker). sgld/sghmc span nodes; --model linear_native trains the
 closed-form linear model with no artifacts at all.
+
+Serving under failure: a refresh is ONE batched SnapshotNode frame per
+node, bounded by --deadline-ms (0 = wait for the transport) and retried
+--retries times against surviving links. A node death mid-traffic
+degrades the snapshot to the surviving chains (staleness is reported per
+refresh and in the final stats) instead of failing the tier; a refresh
+after recovery heals back to complete. --max-inflight N sheds queries
+beyond N in flight with a typed Overloaded error (0 = admit everything).
 
 Elastic fabric: --heartbeat-every MS pings every node link on that
 cadence and declares a link dead after --dead-after MS of silence
@@ -354,17 +364,32 @@ fn train(flags: &Flags) -> Result<()> {
         );
         if let (Some(srv), Some(probe)) = (&server, &probe) {
             if (e + 1) % serve_every == 0 {
-                let snap = srv.refresh_at(e + 1)?;
-                match srv.predict_mean(&probe.x) {
-                    Ok(pred) => println!(
-                        "  serve: snapshot @epoch {} ({} chains, {} samples) \
-                         probe mse {:.4}",
-                        e + 1,
-                        snap.chains.len(),
-                        snap.total_samples(),
-                        eval::batch_mse(&pred, &probe.y),
-                    ),
-                    Err(err) => println!("  serve: snapshot @epoch {} — {err}", e + 1),
+                match srv.refresh_at(e + 1) {
+                    Ok(snap) => {
+                        let stale = if snap.staleness.is_complete() {
+                            String::new()
+                        } else {
+                            format!(
+                                ", DEGRADED: {} chain(s) stale, lag {}",
+                                snap.staleness.missing.len(),
+                                snap.staleness.epoch_lag
+                            )
+                        };
+                        match srv.predict_mean(&probe.x) {
+                            Ok(pred) => println!(
+                                "  serve: snapshot @epoch {} ({} chains, {} samples{stale}) \
+                                 probe mse {:.4}",
+                                e + 1,
+                                snap.chains.len(),
+                                snap.total_samples(),
+                                eval::batch_mse(&pred, &probe.y),
+                            ),
+                            Err(err) => println!("  serve: snapshot @epoch {} — {err}", e + 1),
+                        }
+                    }
+                    // degrade-to-stale: a failed refresh keeps the tier
+                    // up on the last good snapshot; report and move on
+                    Err(err) => println!("  serve: refresh @epoch {} failed — {err}", e + 1),
                 }
             }
         }
@@ -411,8 +436,19 @@ fn train(flags: &Flags) -> Result<()> {
         }
     }
     if let Some(srv) = &server {
-        let (refreshes, queries) = srv.stats();
-        println!("serve: {refreshes} snapshot refreshes, {queries} posterior queries");
+        let st = srv.serve_stats();
+        println!(
+            "serve: {} snapshot refreshes ({} degraded, {} retries), {} posterior queries \
+             ({} served, {} stale, {} shed); latency {}",
+            st.refreshes,
+            st.degraded_refreshes,
+            st.retries,
+            st.queries,
+            st.served,
+            st.stale_served,
+            st.shed,
+            st.latency.render(),
+        );
     }
     Ok(())
 }
@@ -440,6 +476,14 @@ fn serve(flags: &Flags) -> Result<()> {
     let serve_every = flags.usize_or("serve-every", 1).map_err(anyhow::Error::msg)?.max(1);
     let seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
     let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
+    // serving policy: 0 = wait for the transport / admit everything
+    let deadline_ms = flags.usize_or("deadline-ms", 0).map_err(anyhow::Error::msg)?;
+    let retries = flags.usize_or("retries", 2).map_err(anyhow::Error::msg)?;
+    let max_inflight = flags.usize_or("max-inflight", 0).map_err(anyhow::Error::msg)?;
+    // elastic fabric: 0 disables the heartbeat monitor
+    let heartbeat_ms = flags.usize_or("heartbeat-every", 0).map_err(anyhow::Error::msg)?;
+    let dead_after_ms =
+        flags.usize_or("dead-after", heartbeat_ms * 4).map_err(anyhow::Error::msg)?;
     let topology = parse_topology(flags)?;
 
     let manifest = load_manifest(&model_name)?;
@@ -451,7 +495,16 @@ fn serve(flags: &Flags) -> Result<()> {
         seed,
         ..NelConfig::default()
     };
-    let pd = PushDist::with_topology(&manifest, &model_name, cfg, &topology)?;
+    let fabric_cfg = if heartbeat_ms > 0 {
+        FabricConfig {
+            heartbeat_every: Some(std::time::Duration::from_millis(heartbeat_ms as u64)),
+            dead_after: std::time::Duration::from_millis(dead_after_ms.max(1) as u64),
+        }
+    } else {
+        FabricConfig::default()
+    };
+    let pd =
+        PushDist::with_topology_and_fabric(&manifest, &model_name, cfg, &topology, &fabric_cfg)?;
     let model = pd.model().clone();
     let lr = flags
         .f64("lr")
@@ -474,7 +527,14 @@ fn serve(flags: &Flags) -> Result<()> {
         ..SgmcmcConfig::default()
     };
     let mut algo = SgMcmc::new(pd, chain_cfg)?;
-    let server = Arc::new(algo.serve_handle()?);
+    let serve_cfg = push::infer::ServeConfig {
+        refresh_deadline: (deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(deadline_ms as u64)),
+        refresh_retries: retries as u32,
+        max_inflight,
+        ..push::infer::ServeConfig::default()
+    };
+    let server = Arc::new(algo.serve_handle_with(serve_cfg)?);
 
     let data = push::bench::data_for(&model, model.batch() * batches, seed + 1)?;
     let probe = data.gather(&(0..model.batch().min(data.n)).collect::<Vec<_>>());
@@ -510,20 +570,58 @@ fn serve(flags: &Flags) -> Result<()> {
         .collect();
 
     for e in 0..epochs {
-        let rep = algo.train(&mut loader, 1)?;
+        // The serving tier outlives training: if a node dies mid-epoch the
+        // train step fails, but the tier must keep answering from the last
+        // published snapshot (DESIGN.md §12) — log, take one final refresh
+        // so the staleness record names the lost chains, drain briefly so
+        // in-flight clients observe the degraded snapshot, and exit clean.
+        let rep = match algo.train(&mut loader, 1) {
+            Ok(rep) => rep,
+            Err(err) => {
+                println!("epoch {e:>3}: training halted — {err}");
+                match server.refresh_at(e + 1) {
+                    Ok(snap) if !snap.staleness.is_complete() => println!(
+                        "degrading to stale: serving continues, {} chain(s) DEGRADED \
+                         ({} epoch lag)",
+                        snap.staleness.missing.len(),
+                        snap.staleness.epoch_lag
+                    ),
+                    Ok(_) => println!("degrading to stale: serving continues (snapshot intact)"),
+                    Err(rerr) => println!("degrading to stale: refresh also failed — {rerr}"),
+                }
+                std::thread::sleep(std::time::Duration::from_millis(300));
+                break;
+            }
+        };
         let mut line = format!(
             "epoch {e:>3}: loss {:>9.4}  ({:.3}s)",
             rep.final_loss(),
             rep.mean_epoch_secs()
         );
         if (e + 1) % serve_every == 0 {
-            let snap = server.refresh_at(e + 1)?;
-            line.push_str(&format!(
-                "  [snapshot @{}: {} samples across {} chains]",
-                e + 1,
-                snap.total_samples(),
-                snap.chains.len()
-            ));
+            // degrade-to-stale: a refresh against a dead node publishes a
+            // partial snapshot (or keeps the last good one) and the tier
+            // keeps answering — never take the process down mid-traffic
+            match server.refresh_at(e + 1) {
+                Ok(snap) => {
+                    let stale = if snap.staleness.is_complete() {
+                        String::new()
+                    } else {
+                        format!(
+                            ", DEGRADED: {} chain(s) stale ({} epoch lag)",
+                            snap.staleness.missing.len(),
+                            snap.staleness.epoch_lag
+                        )
+                    };
+                    line.push_str(&format!(
+                        "  [snapshot @{}: {} samples across {} chains{stale}]",
+                        e + 1,
+                        snap.total_samples(),
+                        snap.chains.len()
+                    ));
+                }
+                Err(err) => line.push_str(&format!("  [refresh @{} failed: {err}]", e + 1)),
+            }
         }
         println!("{line}");
     }
@@ -535,13 +633,34 @@ fn serve(flags: &Flags) -> Result<()> {
         ok += o;
         empty += e;
     }
-    let (refreshes, queries) = server.stats();
+    let st = server.serve_stats();
     println!(
-        "\nserved {ok} posterior queries ({empty} before samples existed) in {elapsed:.2}s \
-         — {:.0} q/s across {clients} client(s); {refreshes} snapshot refreshes, \
-         {queries} total",
+        "\nserved {ok} posterior queries ({empty} errored or shed) in {elapsed:.2}s \
+         — {:.0} q/s across {clients} client(s)",
         ok as f64 / elapsed.max(1e-9),
     );
+    println!(
+        "serve stats: {} refreshes ({} degraded, {} retries), {} admitted ({} served, \
+         {} stale, {} shed); latency {}",
+        st.refreshes,
+        st.degraded_refreshes,
+        st.retries,
+        st.queries,
+        st.served,
+        st.stale_served,
+        st.shed,
+        st.latency.render(),
+    );
+    let final_snap = server.snapshot();
+    if !final_snap.staleness.is_complete() {
+        let missing: Vec<String> =
+            final_snap.staleness.missing.iter().map(|p| format!("{p}")).collect();
+        println!(
+            "final snapshot DEGRADED: missing {} (epoch lag {})",
+            missing.join(" "),
+            final_snap.staleness.epoch_lag
+        );
+    }
     match server.predict_mean(&probe.x) {
         Ok(pred) => {
             let spread = server.predictive_std(&probe.x)?;

@@ -23,14 +23,15 @@ use std::collections::BTreeMap;
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
 use crate::particle::{PFuture, Pid, PushError, Value};
 use crate::pd::transport::{
-    loopback_node, InProc, LinkHealth, NodeTransport, TcpNode, TransportCounters,
+    decode_state_value, loopback_node, wait_deadline, InProc, LinkHealth, NodeTransport,
+    TcpNode, TransportCounters,
 };
 use crate::pd::wire::{CreateSpec, DirectOp};
 use crate::runtime::{ModelSpec, Tensor};
@@ -56,6 +57,11 @@ pub struct Topology {
     pub nodes: usize,
     pub transport: TransportKind,
 }
+
+/// One pid's position in a batched reservoir snapshot
+/// ([`NodeFabric::snapshot_chains`]): the particle's state entries
+/// (`None` = no such particle) or the transport error that lost it.
+pub type ChainStateResult = (Pid, Result<Option<Vec<(String, Value)>>, PushError>);
 
 impl Default for Topology {
     fn default() -> Self {
@@ -480,6 +486,67 @@ impl NodeFabric {
             Some(n) => self.links[n].restore_particle_state(pid, entries),
             None => Err(self.unknown(pid)),
         }
+    }
+
+    /// One serving refresh's worth of reservoir snapshots (one
+    /// [`ChainStateResult`] per input pid): group `pids`
+    /// by owning node, issue exactly ONE `SnapshotNode` request per
+    /// destination node (one data frame on a wire link, regardless of
+    /// chain count), then wait every reply under one SHARED `deadline`
+    /// budget — all frames are in flight before the first wait, so the
+    /// budget is paid once, not per node. Results come back per pid in
+    /// input order; a dead or slow node fails only its own pids'
+    /// positions (loudly naming the node and its address), leaving the
+    /// caller to retry survivors or degrade to a stale snapshot.
+    pub fn snapshot_chains(
+        &self,
+        pids: &[Pid],
+        deadline: Option<Duration>,
+    ) -> Vec<ChainStateResult> {
+        if pids.is_empty() {
+            return Vec::new();
+        }
+        let mut groups: BTreeMap<usize, (Vec<usize>, Vec<Pid>)> = BTreeMap::new();
+        let mut slots: Vec<Option<PFuture>> = Vec::with_capacity(pids.len());
+        for (i, pid) in pids.iter().enumerate() {
+            match self.node_of(*pid) {
+                Some(n) => {
+                    let g = groups.entry(n).or_default();
+                    g.0.push(i);
+                    g.1.push(*pid);
+                    slots.push(None);
+                }
+                None => slots.push(Some(PFuture::ready(Err(self.unknown(*pid))))),
+            }
+        }
+        for (n, (positions, node_pids)) in groups {
+            let futs = self.links[n].snapshot_node(&node_pids);
+            for (pos, fut) in positions.into_iter().zip(futs) {
+                slots[pos] = Some(fut);
+            }
+        }
+        let expiry = deadline.map(|d| Instant::now() + d);
+        pids.iter()
+            .zip(slots)
+            .map(|(pid, fut)| {
+                let fut = fut.expect("every slot filled");
+                let res = wait_deadline(&fut, expiry)
+                    .map_err(|e| {
+                        let n = self.node_of(*pid);
+                        match (n, n.and_then(|n| self.peer_addr(n))) {
+                            (Some(n), Some(a)) => {
+                                PushError::new(format!("node {n} ({a}): {}", e.msg))
+                            }
+                            (Some(n), None) => {
+                                PushError::new(format!("node {n}: {}", e.msg))
+                            }
+                            (None, _) => e,
+                        }
+                    })
+                    .and_then(decode_state_value);
+                (*pid, res)
+            })
+            .collect()
     }
 
     /// Per-node stats, in node order. Dead links report default (zero)

@@ -18,7 +18,7 @@ pub mod programs;
 pub mod transport;
 pub mod wire;
 
-pub use fabric::{FabricConfig, SpecOpts, Topology, TransportKind};
+pub use fabric::{ChainStateResult, FabricConfig, SpecOpts, Topology, TransportKind};
 pub use transport::LinkHealth;
 
 use std::collections::BTreeMap;
@@ -273,6 +273,21 @@ impl PushDist {
         pid: Pid,
     ) -> Result<Option<Vec<(String, Value)>>, PushError> {
         self.fabric.particle_state(pid)
+    }
+
+    /// Batched state snapshot of many particles for the serving tier:
+    /// exactly ONE `SnapshotNode` frame per destination node (vs one
+    /// `ParticleState` round-trip per pid), all frames in flight before
+    /// the first wait, and one SHARED `deadline` budget across nodes. A
+    /// dead or slow node fails only its own pids' positions — per-pid
+    /// results let the caller serve what survived and record what is
+    /// missing. See DESIGN.md §Serving under failure.
+    pub fn snapshot_chains(
+        &self,
+        pids: &[Pid],
+        deadline: Option<std::time::Duration>,
+    ) -> Vec<ChainStateResult> {
+        self.fabric.snapshot_chains(pids, deadline)
     }
 
     /// Merge state entries back into a particle (checkpoint restore).

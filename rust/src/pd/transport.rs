@@ -180,6 +180,90 @@ pub trait NodeTransport: Send + Sync {
         }
         Ok(())
     }
+
+    /// Batched reservoir snapshot of `pids` ON THIS NODE: exactly one
+    /// data frame on a wire transport regardless of chain count (the
+    /// serving tier's refresh is one `SnapshotNode` frame per node, not
+    /// O(chains) `ParticleState` round-trips). Each returned future — in
+    /// `pids` order — resolves to the particle's state encoded exactly
+    /// like a `ParticleState` response (`Unit` = no such particle, else a
+    /// List of `[key, value]` pairs; decode with [`decode_state_value`]).
+    /// The default (in-process) implementation answers from the local NEL
+    /// with already-completed futures.
+    fn snapshot_node(&self, pids: &[Pid]) -> Vec<PFuture> {
+        pids.iter()
+            .map(|pid| {
+                let fut = PFuture::new();
+                fut.complete(self.particle_state(*pid).map(encode_state_value));
+                fut
+            })
+            .collect()
+    }
+}
+
+/// Wait on a transport future no longer than `expiry` allows. `None`
+/// waits indefinitely (the pre-deadline behavior); a lapsed deadline
+/// fails LOUDLY with a deadline error instead of blocking until the
+/// heartbeat monitor declares the link dead — the caller owns retry and
+/// failover policy. The future itself stays registered with the reader
+/// demux; a late response completes it harmlessly with nobody waiting.
+pub fn wait_deadline(fut: &PFuture, expiry: Option<Instant>) -> Result<Value, PushError> {
+    match expiry {
+        None => fut.wait(),
+        Some(t) => {
+            let remaining = t.saturating_duration_since(Instant::now());
+            match fut.wait_timeout(remaining) {
+                Some(res) => res,
+                None => Err(PushError::new(format!(
+                    "request deadline expired after {remaining:?} (node slow or unreachable)"
+                ))),
+            }
+        }
+    }
+}
+
+/// Encode a particle's state entries the way `ParticleState` responses
+/// always have: `Unit` for a missing particle, a List of `[key, value]`
+/// pairs otherwise. Shared by the per-chain and batched snapshot paths
+/// (both sides of the wire), so the two snapshot shapes speak one
+/// dialect.
+pub(crate) fn encode_state_value(entries: Option<Vec<(String, Value)>>) -> Value {
+    match entries {
+        None => Value::Unit,
+        Some(entries) => Value::List(
+            entries
+                .into_iter()
+                .map(|(k, v)| Value::List(vec![Value::Str(k), v]))
+                .collect(),
+        ),
+    }
+}
+
+/// Inverse of [`encode_state_value`]: the client-side decode of one
+/// particle's snapshot position.
+pub(crate) fn decode_state_value(
+    v: Value,
+) -> Result<Option<Vec<(String, Value)>>, PushError> {
+    match v {
+        Value::Unit => Ok(None),
+        Value::List(items) => {
+            let mut entries = Vec::with_capacity(items.len());
+            for item in items {
+                let mut pair = item.list()?;
+                if pair.len() != 2 {
+                    return Err(PushError::new("malformed state entry"));
+                }
+                let v = pair.remove(1);
+                let k = match pair.remove(0) {
+                    Value::Str(s) => s,
+                    other => return Err(PushError::new(format!("state key {other:?}"))),
+                };
+                entries.push((k, v));
+            }
+            Ok(Some(entries))
+        }
+        other => Err(PushError::new(format!("particle state returned {other:?}"))),
+    }
 }
 
 // ---- in-process transport ------------------------------------------------
@@ -669,28 +753,7 @@ impl NodeTransport for TcpNode {
     }
 
     fn particle_state(&self, pid: Pid) -> Result<Option<Vec<(String, Value)>>, PushError> {
-        match self.call_wait(&Request::ParticleState { pid })? {
-            Value::Unit => Ok(None),
-            Value::List(items) => {
-                let mut entries = Vec::with_capacity(items.len());
-                for item in items {
-                    let mut pair = item.list()?;
-                    if pair.len() != 2 {
-                        return Err(PushError::new("malformed state entry"));
-                    }
-                    let v = pair.remove(1);
-                    let k = match pair.remove(0) {
-                        Value::Str(s) => s,
-                        other => {
-                            return Err(PushError::new(format!("state key {other:?}")))
-                        }
-                    };
-                    entries.push((k, v));
-                }
-                Ok(Some(entries))
-            }
-            other => Err(PushError::new(format!("particle_state returned {other:?}"))),
-        }
+        decode_state_value(self.call_wait(&Request::ParticleState { pid })?)
     }
 
     fn restore_particle_state(
@@ -775,6 +838,20 @@ impl NodeTransport for TcpNode {
             })?;
         }
         Ok(())
+    }
+
+    fn snapshot_node(&self, pids: &[Pid]) -> Vec<PFuture> {
+        let futs: Vec<PFuture> = pids.iter().map(|_| PFuture::new()).collect();
+        if pids.is_empty() {
+            return futs;
+        }
+        let req = Request::SnapshotNode { pids: pids.to_vec() };
+        if let Err(e) = self.request(&req, Pending::Many(futs.clone())) {
+            for fut in &futs {
+                fut.complete(Err(e.clone()));
+            }
+        }
+        futs
     }
 }
 
@@ -877,15 +954,7 @@ pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>
                 respond(&tx, id, Response::One(res.map_err(|e| e.msg)));
             }
             Request::ParticleState { pid } => {
-                let res = match nel.particle_state(pid) {
-                    None => Value::Unit,
-                    Some(entries) => Value::List(
-                        entries
-                            .into_iter()
-                            .map(|(k, v)| Value::List(vec![Value::Str(k), v]))
-                            .collect(),
-                    ),
-                };
+                let res = encode_state_value(nel.particle_state(pid));
                 respond(&tx, id, Response::One(Ok(res)));
             }
             Request::RestoreState { pid, entries } => {
@@ -908,6 +977,17 @@ pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>
                 let results: Vec<Result<Value, String>> = specs
                     .into_iter()
                     .map(|spec| create_from_spec(&nel, &model, spec))
+                    .collect();
+                respond(&tx, id, Response::Many(results));
+            }
+            Request::SnapshotNode { pids } => {
+                // Answered straight from the read loop: `particle_state`
+                // is one map clone per pid (atomic wrt any state commit,
+                // so reservoir versions are never torn), and the batch
+                // goes back as ONE `Response::Many` in input order.
+                let results: Vec<Result<Value, String>> = pids
+                    .into_iter()
+                    .map(|pid| Ok(encode_state_value(nel.particle_state(pid))))
                     .collect();
                 respond(&tx, id, Response::Many(results));
             }

@@ -398,6 +398,14 @@ pub enum Request {
     /// chain state). The response is one `Response::Many` with a result
     /// per spec in input order.
     Migrate { specs: Vec<CreateSpec> },
+    /// Batched posterior-reservoir snapshot: ONE frame per node carrying
+    /// that node's local pid set, replacing the per-chain `ParticleState`
+    /// round-trip loop in `PosteriorServer::refresh`. The response is one
+    /// `Response::Many` with, per pid in input order, the particle's
+    /// state entries re-encoded through the shared Value codec (the same
+    /// dialect checkpoint files use), so a refresh costs exactly one
+    /// frame per node regardless of chain count.
+    SnapshotNode { pids: Vec<Pid> },
 }
 
 /// One server->client message, tagged with the request id it answers.
@@ -422,6 +430,7 @@ const K_STATS: u8 = 8;
 const K_SHUTDOWN: u8 = 9;
 const K_HEARTBEAT: u8 = 10;
 const K_MIGRATE: u8 = 11;
+const K_SNAPSHOT_NODE: u8 = 12;
 
 const R_ONE: u8 = 1;
 const R_MANY: u8 = 2;
@@ -509,6 +518,7 @@ pub fn encode_request(req_id: u64, req: &Request) -> Result<Vec<u8>> {
         Request::Shutdown => K_SHUTDOWN,
         Request::Heartbeat { .. } => K_HEARTBEAT,
         Request::Migrate { .. } => K_MIGRATE,
+        Request::SnapshotNode { .. } => K_SNAPSHOT_NODE,
     };
     w.write_all(&[kind])?;
     w.write_all(&req_id.to_le_bytes())?;
@@ -564,6 +574,12 @@ pub fn encode_request(req_id: u64, req: &Request) -> Result<Vec<u8>> {
             w.write_all(&(specs.len() as u32).to_le_bytes())?;
             for spec in specs {
                 write_create_spec(&mut w, spec)?;
+            }
+        }
+        Request::SnapshotNode { pids } => {
+            w.write_all(&(pids.len() as u32).to_le_bytes())?;
+            for p in pids {
+                w.write_all(&p.0.to_le_bytes())?;
             }
         }
     }
@@ -647,6 +663,17 @@ pub fn decode_request(buf: &[u8]) -> Result<(u64, Request)> {
                 specs.push(read_create_spec(&mut r)?);
             }
             Request::Migrate { specs }
+        }
+        K_SNAPSHOT_NODE => {
+            let n = read_u32(&mut r)? as usize;
+            if n > 1 << 24 {
+                bail!("implausible snapshot fan-out {n}");
+            }
+            let mut pids = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                pids.push(Pid(read_u32(&mut r)?));
+            }
+            Request::SnapshotNode { pids }
         }
         other => bail!("unknown request kind {other}"),
     };
@@ -1016,6 +1043,8 @@ mod tests {
                     },
                 ],
             },
+            Request::SnapshotNode { pids: vec![Pid(2), Pid(0), Pid(5)] },
+            Request::SnapshotNode { pids: vec![] },
         ];
         for (i, req) in reqs.into_iter().enumerate() {
             let buf = encode_request(i as u64, &req).unwrap();

@@ -475,8 +475,11 @@ fn prop_wire_request_strict_prefix_fails_to_decode() {
         let mut rng = Rng::new(seed ^ 0x7afc);
         // cycle through every request shape, including zero-body ones
         // (where the prefix must die on the header reads)
-        let req = match rng.below(6) {
+        let req = match rng.below(7) {
             0 => Request::Heartbeat { nonce: seed },
+            6 => Request::SnapshotNode {
+                pids: (0..1 + rng.below(5)).map(|_| Pid(rng.below(1 << 10) as u32)).collect(),
+            },
             1 => Request::Migrate {
                 specs: vec![CreateSpec {
                     pid: Pid(7),
@@ -520,15 +523,47 @@ fn prop_wire_unknown_request_kind_errors_cleanly() {
     use push::pd::wire::{self, Request};
     for seed in 0..CASES {
         let mut rng = Rng::new(seed ^ 0xbadc0de);
-        // a valid header whose kind byte is from the future: K_MIGRATE=11
-        // is the newest kind, so 12..=255 must all be rejected by name
+        // a valid header whose kind byte is from the future:
+        // K_SNAPSHOT_NODE=12 is the newest kind, so 13..=255 must all be
+        // rejected by name
         let mut buf = wire::encode_request(seed, &Request::Heartbeat { nonce: 9 }).unwrap();
-        let bogus = 12 + rng.below(244) as u8;
+        let bogus = 13 + rng.below(243) as u8;
         buf[1] = bogus;
         let err = wire::decode_request(&buf).unwrap_err();
         assert!(
             format!("{err:#}").contains("unknown request kind"),
             "seed {seed}: kind {bogus}: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn prop_wire_snapshot_node_roundtrip_and_fanout_bound() {
+    use push::pd::wire::{self, Request};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x54a9);
+        // arbitrary pid sets round-trip exactly, in order, empty included
+        // (an empty batch is legal on the wire; the fabric just never
+        // sends one)
+        let n = rng.below(32);
+        let pids: Vec<Pid> = (0..n).map(|_| Pid(rng.below(1 << 20) as u32)).collect();
+        let req = Request::SnapshotNode { pids };
+        let buf = wire::encode_request(seed, &req).unwrap();
+        let (id, back) = wire::decode_request(&buf).unwrap();
+        assert_eq!(id, seed, "seed {seed}");
+        assert_eq!(back, req, "seed {seed}");
+        // a batch is one small frame: header + 4 bytes + 4 bytes per pid
+        assert_eq!(buf.len(), 1 + 1 + 8 + 4 + 4 * n, "seed {seed}: encoding grew");
+
+        // a tampered count claiming an implausible fan-out is rejected
+        // BEFORE any allocation, by name
+        let mut evil = buf.clone();
+        let count_at = 1 + 1 + 8;
+        evil[count_at..count_at + 4].copy_from_slice(&(1u32 << 30).to_le_bytes());
+        let err = wire::decode_request(&evil).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("implausible snapshot fan-out"),
+            "seed {seed}: {err:#}"
         );
     }
 }

@@ -19,16 +19,19 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use push::data::{synth, Batch, DataLoader};
 use push::device::CostModel;
 use push::infer::sgmcmc::{
     linear_native_manifest, linear_native_model, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Schedule,
 };
+use push::infer::{Overloaded, ServeConfig};
+use push::pd::transport::{wait_deadline, NodeTransport, TcpNode};
 use push::pd::{Topology, TransportKind};
 use push::runtime::Tensor;
 use push::util::rng::Rng;
-use push::{NelConfig, PushDist};
+use push::{NelConfig, Pid, PushDist};
 
 const D: usize = 6;
 const BATCH: usize = 8;
@@ -274,9 +277,245 @@ fn refresh_at_caches_by_epoch_stamp_and_versions_grow() {
     }
     assert_eq!(second.versions().iter().map(|v| v.1).max(), Some(6), "6 candidates seen");
 
-    // the never-refreshed sentinel stamp must SNAPSHOT, not hand back the
-    // empty initial snapshot as a cache hit
-    let sentinel = server.refresh_at(usize::MAX).unwrap();
-    assert_eq!(sentinel.chains.len(), particles);
-    assert!(sentinel.total_samples() > 0, "sentinel stamp returned the empty snapshot");
+    // the old usize::MAX never-refreshed sentinel is gone: the empty
+    // snapshot is simply unstamped (epoch None), so EVERY stamp —
+    // usize::MAX included — caches like any other stamp
+    let third = server.refresh_at(usize::MAX).unwrap();
+    assert_eq!(third.epoch, Some(usize::MAX));
+    assert_eq!(third.chains.len(), particles);
+    assert!(third.total_samples() > 0);
+    let cached = server.refresh_at(usize::MAX).unwrap();
+    assert!(Arc::ptr_eq(&third, &cached), "same stamp must reuse the snapshot");
+}
+
+/// The batched snapshot protocol's acceptance bar: a refresh is exactly
+/// ONE `SnapshotNode` frame per node, regardless of chain count
+/// (transport-counter asserted — 16 chains over 2 TCP nodes used to cost
+/// 16 `ParticleState` round-trips).
+#[test]
+fn refresh_is_one_snapshot_frame_per_node() {
+    let particles = 16;
+    let algo = SgMcmc::new(
+        pd_with(2, TransportKind::TcpLoopback),
+        chain_cfg(particles, SgmcmcAlgo::Sgld, 0.0),
+    )
+    .unwrap();
+    for b in &fixed_batches(4, 13) {
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    let server = algo.serve_handle().unwrap();
+    let before: Vec<u64> =
+        algo.pd().transport_counters().iter().map(|c| c.frames_sent).collect();
+    let snap = server.refresh(1).unwrap();
+    assert_eq!(snap.chains.len(), particles);
+    assert!(snap.staleness.is_complete());
+    assert!(snap.total_samples() > 0);
+    let after: Vec<u64> =
+        algo.pd().transport_counters().iter().map(|c| c.frames_sent).collect();
+    for (n, (b, a)) in before.iter().zip(&after).enumerate() {
+        assert_eq!(
+            a - b,
+            1,
+            "node {n}: a refresh must cost exactly ONE SnapshotNode frame, saw {}",
+            a - b
+        );
+    }
+}
+
+/// A refresh deadline binds the wait itself, not the heartbeat monitor's
+/// `dead_after`: against a peer that accepts but never answers (the
+/// silent-death shape), the batched snapshot's futures fail within ~2x
+/// the deadline instead of hanging. The deadline budget is SHARED — the
+/// first wait consumes it and every later future fails immediately.
+#[test]
+fn snapshot_deadline_expires_against_mute_peer() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let node = TcpNode::connect(addr).unwrap();
+    let deadline = Duration::from_millis(150);
+
+    let futs = node.snapshot_node(&[Pid(0), Pid(1), Pid(2)]);
+    assert_eq!(futs.len(), 3);
+    let t0 = Instant::now();
+    let expiry = Some(Instant::now() + deadline);
+    for fut in &futs {
+        let err = wait_deadline(fut, expiry).unwrap_err();
+        assert!(err.msg.contains("deadline"), "not a deadline failure: {}", err.msg);
+    }
+    let waited = t0.elapsed();
+    assert!(waited >= Duration::from_millis(100), "deadline cut short: {waited:?}");
+    assert!(waited < deadline * 2, "deadline {deadline:?} but waited {waited:?}");
+    drop(listener);
+}
+
+/// Admission control: with a 1-slot gate, concurrent hammering sheds with
+/// the typed [`Overloaded`] error — and shedding never corrupts: every
+/// ADMITTED answer is bit-identical to an unloaded server reading the
+/// same snapshot.
+#[test]
+fn admission_gate_sheds_with_typed_overloaded() {
+    let particles = 16;
+    let algo = SgMcmc::new(
+        pd_with(1, TransportKind::InProc),
+        chain_cfg(particles, SgmcmcAlgo::Sgld, 0.0),
+    )
+    .unwrap();
+    for b in &fixed_batches(6, 17) {
+        algo.step_all(&b.x, &b.y).unwrap();
+    }
+    let limited = Arc::new(
+        algo.serve_handle_with(ServeConfig { max_inflight: 1, ..ServeConfig::default() })
+            .unwrap(),
+    );
+    let unloaded = algo.serve_handle().unwrap();
+    limited.refresh(1).unwrap();
+    unloaded.refresh(1).unwrap();
+    let x = probe_x();
+    let want = unloaded.predict_mean(&x).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let srv = limited.clone();
+            let stop = stop.clone();
+            let x = x.clone();
+            let want = want.clone();
+            std::thread::spawn(move || {
+                let mut sheds = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    match srv.predict_mean(&x) {
+                        Ok(pred) => {
+                            assert_eq!(pred, want, "admitted answer diverged under shedding")
+                        }
+                        Err(e) => {
+                            let o = e
+                                .downcast_ref::<Overloaded>()
+                                .unwrap_or_else(|| panic!("non-overload serve error: {e:#}"));
+                            assert_eq!(o.limit, 1);
+                            sheds += 1;
+                        }
+                    }
+                }
+                sheds
+            })
+        })
+        .collect();
+    // run until shedding has provably happened (4 threads on a 1-slot
+    // gate collide almost immediately; the bound is for slow machines)
+    let t0 = Instant::now();
+    while limited.serve_stats().shed == 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::yield_now();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let shed_seen: u64 =
+        threads.into_iter().map(|h| h.join().expect("query thread panicked")).sum();
+    let st = limited.serve_stats();
+    assert!(st.shed > 0 && shed_seen > 0, "4 threads on a 1-slot gate never shed");
+    assert_eq!(st.shed, shed_seen, "server shed count != typed Overloaded errors seen");
+    assert!(st.served > 0, "a 1-slot gate must still admit");
+    assert_eq!(st.queries, st.served, "admitted queries all had samples to answer from");
+    assert!(st.latency.count() > 0, "admitted queries must be histogrammed");
+    assert_eq!(st.stale_served, 0, "complete snapshot served as stale");
+}
+
+/// Deterministic fault-plan cases (the transport's fault hooks are only
+/// compiled under `--features faultinject` for integration tests).
+#[cfg(feature = "faultinject")]
+mod faults {
+    use super::*;
+    use push::pd::checkpoint::Checkpoint;
+    use push::pd::transport::fault::{self, FaultPlan};
+
+    /// The degrade-to-stale story end to end: killing a node mid-serving
+    /// degrades the snapshot to the surviving chains (correct missing-pid
+    /// record, versions never go backwards, queries still answer and SAY
+    /// they are stale), and a refresh after `recover` migrates the dead
+    /// node's chains home and heals back to a complete snapshot.
+    #[test]
+    fn refresh_degrades_to_stale_then_heals_after_recovery() {
+        let particles = 8;
+        let batches = fixed_batches(6, 19);
+        let algo = SgMcmc::new(
+            pd_with(2, TransportKind::TcpLoopback),
+            chain_cfg(particles, SgmcmcAlgo::Sgld, 0.0),
+        )
+        .unwrap()
+        .with_recovery(1);
+        let mut ckpt = Checkpoint::capture(algo.pd()).unwrap();
+        let mut used = 0usize;
+        for b in &batches[..4] {
+            algo.step_all_recovering(&b.x, &b.y, &mut ckpt, &mut used).unwrap();
+        }
+        let server = algo
+            .serve_handle_with(ServeConfig {
+                refresh_retries: 1,
+                refresh_backoff: Duration::from_millis(5),
+                ..ServeConfig::default()
+            })
+            .unwrap();
+        let x = probe_x();
+        let full = server.refresh(1).unwrap();
+        assert!(full.staleness.is_complete());
+        assert_eq!(full.chains.len(), particles);
+
+        // sever node 1's link on its next data frame: the refresh's own
+        // SnapshotNode frame is the frame that dies
+        let addr = algo.pd().peer_addr(1).expect("node 1 is a wire link");
+        fault::set_plan(addr, FaultPlan { drop_after_frames: Some(0), ..FaultPlan::default() });
+        let degraded = server.refresh(2).unwrap();
+        fault::clear(addr);
+
+        let lost: Vec<Pid> = full
+            .chains
+            .iter()
+            .map(|c| c.pid)
+            .filter(|p| algo.pd().node_of(*p) == Some(1))
+            .collect();
+        assert!(!lost.is_empty(), "round-robin placement put nothing on node 1?");
+        assert_eq!(degraded.staleness.missing, lost, "wrong missing-pid record");
+        assert_eq!(degraded.epoch, Some(2), "degraded refresh must still stamp");
+        // carried forward from the last good snapshot: every chain still
+        // present, versions never below the full snapshot's
+        assert_eq!(degraded.chains.len(), particles);
+        for (a, b) in full.versions().iter().zip(degraded.versions()) {
+            assert_eq!(a.0, b.0);
+            assert!(b.1 >= a.1, "{}: version went backwards ({} -> {})", a.0, a.1, b.1);
+        }
+        // the lost chains answer with exactly their pre-failure reservoirs
+        for (a, b) in full.chains.iter().zip(&degraded.chains) {
+            if lost.contains(&a.pid) {
+                assert_eq!(a.seen, b.seen, "{}: carried version changed", a.pid);
+                assert_eq!(a.samples, b.samples, "{}: carried samples changed", a.pid);
+            }
+        }
+        // queries still answer, and the result says it is stale
+        let res = server.query_mean(&x).unwrap();
+        assert_eq!(res.staleness.missing, lost);
+        assert_eq!(res.epoch, Some(2));
+        assert!(res.value.as_f32().iter().all(|v| v.is_finite()));
+
+        // recover: the next training step detects the dead node and
+        // migrates its chains onto node 0 (bit-identical replay, PR6)
+        for b in &batches[4..] {
+            algo.step_all_recovering(&b.x, &b.y, &mut ckpt, &mut used).unwrap();
+        }
+        assert_eq!(used, 1, "exactly one recovery round");
+        for pid in &lost {
+            assert_eq!(algo.pd().node_of(*pid), Some(0), "{pid} not migrated");
+        }
+        // a post-migration refresh heals back to a COMPLETE snapshot
+        let healed = server.refresh(3).unwrap();
+        assert!(healed.staleness.is_complete(), "post-recover refresh still degraded");
+        assert_eq!(healed.staleness.epoch_lag, 0);
+        assert_eq!(healed.chains.len(), particles);
+        for (a, b) in degraded.versions().iter().zip(healed.versions()) {
+            assert!(b.1 >= a.1, "{}: version went backwards across recovery", a.0);
+        }
+        server.predict_mean(&x).expect("healed snapshot must answer");
+
+        let st = server.serve_stats();
+        assert_eq!(st.refreshes, 3);
+        assert_eq!(st.degraded_refreshes, 1);
+        assert!(st.stale_served >= 1, "the stale answer was not counted");
+    }
 }
