@@ -8,7 +8,8 @@
 //! encode/decode throughput, device-job dispatch, context-switch (swap)
 //! cost under cache pressure, parameter views, the native SVGD kernel
 //! math, the SGMCMC chain-step body (SGLD update + native linear
-//! gradient), the prefetching data pipeline (a 40-batch epoch with the
+//! gradient), the native model zoo's fused MLP and 1-D conv grad/forward
+//! bodies, the prefetching data pipeline (a 40-batch epoch with the
 //! gathers overlapped vs synchronous), posterior serving under training
 //! load (SGLD rounds with vs without hammering readers), and the
 //! heartbeat monitor's tax on a 2-node training loop (SGLD rounds over
@@ -393,6 +394,38 @@ fn main() {
         run(&mut results, "sgmcmc_linear_grad_16x64", 20, 1000, || {
             let _ = gfn(&w, &x, &y).unwrap();
         });
+    }
+
+    // ---- native model zoo: closed-form grad/forward bodies (hermetic) -----
+    // The per-step cost the CI accuracy-gate job pays: fused
+    // affine+activation layers with post-activation caches (MLP) and the
+    // direct-convolution 1-D net, each at its registered spec's batch.
+    {
+        use push::infer::ModelSource;
+        for name in ["mlp_native", "conv1d_native"] {
+            let nm = push::infer::native_model(name).unwrap();
+            let spec = nm.spec.clone();
+            let b = spec.batch();
+            let d: usize = spec.x_shape[1..].iter().product();
+            let mut rng = Rng::new(0x6e61);
+            let params = nm.init_params(3, 0);
+            let x = Tensor::f32(vec![b, d], rng.normal_vec(b * d));
+            let y = if spec.task == "classify" {
+                Tensor::i32(vec![b], (0..b).map(|_| rng.below(2) as i32).collect())
+            } else {
+                let yn: usize = spec.y_shape[1..].iter().product();
+                Tensor::f32(vec![b, yn], rng.normal_vec(b * yn))
+            };
+            let ModelSource::Native { grad, forward, .. } = nm.source.clone() else {
+                unreachable!()
+            };
+            run(&mut results, &format!("{name}_grad_{b}x{d}"), 20, 500, || {
+                let _ = grad(&params, &x, &y).unwrap();
+            });
+            run(&mut results, &format!("{name}_forward_{b}x{d}"), 20, 500, || {
+                let _ = forward(&params, &x).unwrap();
+            });
+        }
     }
 
     // ---- pipelined data loading: 40-batch epoch, prefetch vs sync ---------

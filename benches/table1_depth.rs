@@ -8,6 +8,7 @@
 use push::bench::depth_width::{run, table1_rows, table2_rows};
 use push::bench::report::results_dir;
 use push::bench::scaling::ScaleOpts;
+use push::bench::Method;
 use push::runtime::{artifacts_dir, Manifest};
 
 fn main() {
@@ -22,7 +23,8 @@ fn main() {
         ..ScaleOpts::default()
     };
 
-    let rep = run(&manifest, "table1_depth", &table1_rows(), &[1, 2, 4], &opts).expect("table1");
+    let rep = run(&manifest, "table1_depth", &table1_rows(), Method::MultiSwag, &[1, 2, 4], &opts)
+        .expect("table1");
     rep.print();
     let p = rep.save(results_dir()).expect("save");
     println!("saved {p:?}\n");
@@ -31,7 +33,8 @@ fn main() {
     if !full {
         t2.truncate(3);
     }
-    let rep = run(&manifest, "table2_width", &t2, &[1, 2, 4], &opts).expect("table2");
+    let rep = run(&manifest, "table2_width", &t2, Method::MultiSwag, &[1, 2, 4], &opts)
+        .expect("table2");
     rep.print();
     let p = rep.save(results_dir()).expect("save");
     println!("saved {p:?}");

@@ -1,55 +1,32 @@
-//! SGLD vs SGHMC on noisy linear regression — the SGMCMC particle
-//! encoding end to end: per-particle chains over the M:N scheduler, a
-//! cyclical cSG-MCMC step-size schedule with warm restarts, bounded
-//! posterior-sample reservoirs, and posterior-predictive averaging with an
+//! SGLD vs SGHMC on a native model — the SGMCMC particle encoding end to
+//! end: per-particle chains over the M:N scheduler, a cyclical cSG-MCMC
+//! step-size schedule with warm restarts, bounded posterior-sample
+//! reservoirs, and posterior-predictive averaging with an
 //! epistemic-uncertainty readout.
 //!
-//! Fully hermetic: the closed-form linear model
-//! (`infer::sgmcmc::linear_native_model`) supplies gradients and forwards,
-//! so no artifacts and no PJRT are needed:
+//! Fully hermetic: every registered native model (`infer::models`)
+//! supplies closed-form gradients and forwards, so no artifacts and no
+//! PJRT are needed. `--model` picks the model (default `linear_native`;
+//! classify models report vote accuracy instead of MSE):
 //!
 //! ```sh
 //! cargo run --release --example sgmcmc_regression
+//! cargo run --release --example sgmcmc_regression -- --model mlp_native
 //! ```
 
-use std::collections::BTreeMap;
-use std::sync::Arc;
-
-use anyhow::Result;
-use push::data::{synth, DataLoader};
+use anyhow::{anyhow, Result};
+use push::bench::data_for;
+use push::data::DataLoader;
 use push::device::CostModel;
-use push::infer::sgmcmc::linear_native_model;
-use push::infer::{eval, Infer, ModelSource, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig};
-use push::runtime::{DType, Manifest, ModelSpec, Tensor};
+use push::infer::{
+    eval, native_manifest, native_model, Infer, ModelSource, NativeModel, Schedule, SgMcmc,
+    SgmcmcAlgo, SgmcmcConfig,
+};
 use push::util::flags::Flags;
-use push::util::rng::Rng;
 use push::{NelConfig, PushDist};
 
-const D: usize = 8;
-const BATCH: usize = 16;
-
-/// A manifest for the closed-form linear model: no artifact entries — the
-/// native ModelSource supplies grad/forward, so the PD never touches PJRT.
-fn native_manifest() -> Manifest {
-    let spec = ModelSpec {
-        name: "linear_native".to_string(),
-        param_count: D,
-        task: "regress".to_string(),
-        x_shape: vec![BATCH, D],
-        y_shape: vec![BATCH, 1],
-        y_dtype: DType::F32,
-        arch: "mlp".to_string(),
-        meta: BTreeMap::new(),
-        entries: BTreeMap::new(),
-    };
-    Manifest {
-        dir: std::path::PathBuf::from("."),
-        models: [("linear_native".to_string(), spec)].into_iter().collect(),
-        svgd: Vec::new(),
-    }
-}
-
 fn run_chain(
+    nm: &NativeModel,
     algo: SgmcmcAlgo,
     particles: usize,
     epochs: usize,
@@ -63,7 +40,8 @@ fn run_chain(
         seed: 55,
         ..NelConfig::default()
     };
-    let pd = PushDist::new(&manifest, "linear_native", cfg)?;
+    let pd = PushDist::new(&manifest, nm.name, cfg)?;
+    let spec = pd.model().clone();
     let steps = epochs * batches;
     let mut algo = SgMcmc::new(
         pd,
@@ -84,14 +62,12 @@ fn run_chain(
             max_samples: 64,
             prior_std: Some(10.0),
             seed: 99,
-            model: linear_native_model(),
-            init: Some(Arc::new(|i| {
-                Tensor::f32(vec![D], Rng::new(1234).fold_in(i as u64).normal_vec(D))
-            })),
+            model: nm.source.clone(),
+            init: Some(nm.seeded_init(1234)),
         },
     )?;
-    let data = synth::linear(BATCH * batches, D, 0.1, 13);
-    let mut loader = DataLoader::new(data, BATCH, true, 17).with_max_batches(batches);
+    let data = data_for(&spec, spec.batch() * batches, 13)?;
+    let mut loader = DataLoader::new(data, spec.batch(), true, 17).with_max_batches(batches);
     let mut curve = Vec::with_capacity(epochs);
     for _ in 0..epochs {
         let rep = algo.train(&mut loader, 1)?;
@@ -102,12 +78,16 @@ fn run_chain(
 
 fn main() -> Result<()> {
     let flags = Flags::from_env().map_err(anyhow::Error::msg)?;
+    let model_name = flags.str_or("model", "linear_native");
+    let nm = native_model(&model_name).ok_or_else(|| {
+        anyhow!("--model must be a registered native model (linear_native|mlp_native|...)")
+    })?;
     let particles = flags.usize_or("particles", 8).map_err(anyhow::Error::msg)?.max(1);
     let epochs = flags.usize_or("epochs", 30).map_err(anyhow::Error::msg)?.max(1);
     let batches = 6usize;
 
-    let (sgld, sgld_curve) = run_chain(SgmcmcAlgo::Sgld, particles, epochs, batches)?;
-    let (sghmc, sghmc_curve) = run_chain(SgmcmcAlgo::Sghmc, particles, epochs, batches)?;
+    let (sgld, sgld_curve) = run_chain(&nm, SgmcmcAlgo::Sgld, particles, epochs, batches)?;
+    let (sghmc, sghmc_curve) = run_chain(&nm, SgmcmcAlgo::Sghmc, particles, epochs, batches)?;
 
     println!("epoch   sgld_loss   sghmc_loss");
     for e in (0..epochs).step_by(4.max(epochs / 6)) {
@@ -139,26 +119,40 @@ fn main() -> Result<()> {
     // Posterior-predictive mean vs targets + epistemic uncertainty: every
     // reservoir sample of every chain is a draw from the (approximate)
     // posterior; the spread of their predictions is the uncertainty.
-    let data = synth::linear(BATCH * batches, D, 0.1, 13);
-    let b = DataLoader::new(data, BATCH, false, 0).epoch()[0].clone();
+    let spec = native_manifest().model(&model_name)?.clone();
+    let classify = spec.task == "classify";
+    let data = data_for(&spec, spec.batch() * batches, 13)?;
+    let b = DataLoader::new(data, spec.batch(), false, 0).epoch()[0].clone();
     let pred = sgld.predict_mean(&b.x)?;
-    println!("\nposterior-predictive MSE (sgld): {:.4}", eval::batch_mse(&pred, &b.y));
+    if classify {
+        println!(
+            "\nposterior-predictive accuracy (sgld): {:.1}%",
+            100.0 * eval::batch_accuracy(&pred, &b.y)
+        );
+    } else {
+        println!("\nposterior-predictive MSE (sgld): {:.4}", eval::batch_mse(&pred, &b.y));
+    }
 
-    let ModelSource::Native { forward, .. } = linear_native_model() else { unreachable!() };
+    let ModelSource::Native { forward, .. } = nm.source.clone() else { unreachable!() };
     let mut sample_preds = Vec::new();
     for pid in sgld.pids() {
         for s in sgld.chain(pid).samples {
             sample_preds.push(forward(&s, &b.x).map_err(anyhow::Error::new)?);
         }
     }
-    let std = eval::predictive_std(&sample_preds)?;
-    let mean_std: f32 =
-        std.as_f32().iter().sum::<f32>() / std.element_count() as f32;
-    println!(
-        "epistemic std over {} posterior samples: {:.4} (per-point mean)",
-        sample_preds.len(),
-        mean_std
-    );
+    if classify {
+        // class votes have no per-point spread; the sample count still
+        // shows how much posterior mass backs each vote
+        println!("({} posterior samples behind the vote)", sample_preds.len());
+    } else {
+        let std = eval::predictive_std(&sample_preds)?;
+        let mean_std: f32 = std.as_f32().iter().sum::<f32>() / std.element_count() as f32;
+        println!(
+            "epistemic std over {} posterior samples: {:.4} (per-point mean)",
+            sample_preds.len(),
+            mean_std
+        );
+    }
     println!("predictions (first 4): {:?}", &pred.as_f32()[..4]);
     println!("targets     (first 4): {:?}", &b.y.as_f32()[..4]);
     Ok(())

@@ -11,11 +11,14 @@ use anyhow::Result;
 
 use crate::bench::depth_width::SweepRow;
 use crate::bench::report::{Report, Row};
-use crate::bench::data_for;
+use crate::bench::{data_for, lr_for, Method};
 use crate::data::DataLoader;
 use crate::device::CostModel;
-use crate::infer::eval::dataset_accuracy;
-use crate::infer::{DeepEnsemble, Infer, MultiSwag, SwagConfig};
+use crate::infer::eval::{dataset_accuracy, dataset_mse};
+use crate::infer::{
+    DeepEnsemble, Infer, MultiSwag, Schedule, SgMcmc, SgmcmcAlgo, SgmcmcConfig, Svgd,
+    SvgdConfig, SwagConfig,
+};
 use crate::nel::NelConfig;
 use crate::pd::PushDist;
 use crate::runtime::Manifest;
@@ -50,6 +53,21 @@ impl Default for AccOpts {
             scale: 1e-30,
             lr: 1e-3,
             seed: 0,
+        }
+    }
+}
+
+impl AccOpts {
+    /// Defaults for the hermetic native-model matrix (`push bench
+    /// native-acc`): ~640 closed-form SGD steps per cell, sized so the CI
+    /// accuracy-gate job trains every (model, method) pair in seconds.
+    pub fn native() -> AccOpts {
+        AccOpts {
+            batches: 8,
+            test_batches: 4,
+            epochs: 80,
+            pretrain_epochs: 56,
+            ..AccOpts::default()
         }
     }
 }
@@ -123,6 +141,99 @@ pub fn run(
                 .int("particles", particles)
                 .num("multiswag_acc", 100.0 * ms_acc),
         );
+    }
+    Ok(rep)
+}
+
+/// The hermetic Table-1 matrix over the native model zoo: every registered
+/// native model x every algorithm family, closed-form grad/forward only —
+/// no AOT artifacts, so it runs on a bare CI runner. Classify rows report
+/// accuracy (%), regression rows MSE. The CI accuracy-gate job checks the
+/// saved JSON against ACC_GATES.json via tools/check_accuracy_gates.py.
+pub fn run_native(opts: &AccOpts) -> Result<Report> {
+    let manifest = crate::infer::native_manifest();
+    let mut rep = Report::new("native_acc");
+    let particles = 4usize;
+    for name in ["linear_spiral_native", "mlp_native", "conv1d_native"] {
+        let nm = crate::infer::native_model(name)
+            .ok_or_else(|| anyhow::anyhow!("{name} is not a registered native model"))?;
+        let model = manifest.model(name)?.clone();
+        let classify = model.task == "classify";
+        let lr = lr_for(&model);
+        let bsz = model.batch();
+        let n_train = bsz * opts.batches;
+        let n_test = bsz * opts.test_batches;
+        let all = data_for(&model, n_train + n_test, opts.seed + 10)?;
+        let (train, test) = all.split(n_test as f32 / (n_train + n_test) as f32);
+        for method in Method::all() {
+            let pd = PushDist::new(&manifest, name, cfg(opts))?;
+            let init = nm.seeded_init(opts.seed);
+            let mut algo: Box<dyn Infer> = match method {
+                Method::Ensemble => {
+                    Box::new(DeepEnsemble::new_native(pd, particles, lr, &nm.source, init)?)
+                }
+                Method::MultiSwag => Box::new(MultiSwag::new_native(
+                    pd,
+                    SwagConfig {
+                        particles,
+                        lr,
+                        pretrain_epochs: opts.pretrain_epochs,
+                        n_samples: opts.n_samples,
+                        scale: opts.scale,
+                        adam: false, // there is no native Adam
+                        seed: opts.seed,
+                    },
+                    &nm.source,
+                    init,
+                )?),
+                Method::Svgd => Box::new(Svgd::new_native(
+                    pd,
+                    SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() },
+                    &nm.source,
+                    init,
+                )?),
+                Method::Sgld | Method::Sghmc => {
+                    let algo =
+                        if method == Method::Sgld { SgmcmcAlgo::Sgld } else { SgmcmcAlgo::Sghmc };
+                    Box::new(SgMcmc::new(
+                        pd,
+                        SgmcmcConfig {
+                            particles,
+                            algo,
+                            schedule: Schedule::Constant { eps: lr },
+                            temperature: 1e-4,
+                            // explore for the first half, sample the rest
+                            burn_in: opts.batches * opts.epochs / 2,
+                            thin: 1,
+                            max_samples: 32,
+                            seed: opts.seed,
+                            model: nm.source.clone(),
+                            init: Some(init),
+                            ..SgmcmcConfig::default()
+                        },
+                    )?)
+                }
+            };
+            let mut loader = DataLoader::new(train.clone(), bsz, true, opts.seed + 11)
+                .with_max_batches(opts.batches);
+            algo.train(&mut loader, opts.epochs)?;
+            let mut row = Row::new()
+                .str("model", name)
+                .str("method", method.name())
+                .str("task", &model.task)
+                .int("params", model.param_count)
+                .int("particles", particles);
+            if classify {
+                let acc = 100.0 * dataset_accuracy(&test, bsz, |x| algo.predict_mean(x))?;
+                crate::log_info!("native_acc: {name} {} acc={acc:.2}%", method.name());
+                row = row.num("accuracy", acc);
+            } else {
+                let mse = dataset_mse(&test, bsz, |x| algo.predict_mean(x))?;
+                crate::log_info!("native_acc: {name} {} mse={mse:.4}", method.name());
+                row = row.num("mse", mse);
+            }
+            rep.push(row);
+        }
     }
     Ok(rep)
 }

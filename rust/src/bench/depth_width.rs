@@ -48,12 +48,13 @@ pub fn table2_rows(full: bool) -> Vec<SweepRow> {
     rows
 }
 
-/// Run a depth/width sweep with multi-SWAG across `devices`, reporting the
-/// paper's T_k time multiples.
+/// Run a depth/width sweep with `method` (the paper uses multi-SWAG)
+/// across `devices`, reporting the paper's T_k time multiples.
 pub fn run(
     manifest: &Manifest,
     name: &str,
     rows: &[SweepRow],
+    method: Method,
     devices: &[usize],
     opts: &ScaleOpts,
 ) -> Result<Report> {
@@ -64,7 +65,7 @@ pub fn run(
         let mut one_dev_secs: Option<f64> = None;
         for &dev in devices {
             let particles = row.base_particles * dev;
-            let pt = run_one(manifest, &row.model, Method::MultiSwag, dev, particles, opts)?;
+            let pt = run_one(manifest, &row.model, method, dev, particles, opts)?;
             // The paper's multiples compare times that would overlap across
             // devices — use the modeled parallel makespan (1-core host;
             // see ScalePoint docs).
@@ -85,6 +86,7 @@ pub fn run(
             rep.push(
                 Row::new()
                     .str("model", &row.model)
+                    .str("method", method.name())
                     .int("params", params)
                     .int("effective_params", params * particles)
                     .int("devices", dev)

@@ -100,6 +100,11 @@ pub fn data_for(model: &ModelSpec, n_samples: usize, seed: u64) -> Result<Datase
             synth::advection(n_samples, nx, 1.0, 0.2, 6, seed)
         }
         "mlp" => synth::linear(n_samples, model.x_shape[1], 0.1, seed),
+        // native-model tasks: the two-class spiral a linear cut provably
+        // cannot fit (data/synth.rs proves best-cut accuracy < 0.8) and
+        // the nonlinear 1-D wave-energy regression
+        "spiral" => synth::spiral(n_samples, 1.5, 0.02, seed),
+        "wave1d" => synth::wave_energy(n_samples, model.x_shape[1], 4, 0.05, seed),
         other => anyhow::bail!("no dataset substitute for arch {other:?}"),
     };
     // shape sanity against the manifest contract
@@ -121,6 +126,10 @@ pub fn lr_for(model: &ModelSpec) -> f32 {
         // plain-SGD transformers/CNNs on the synthetic vision task train
         // comfortably at 5e-2 (validated in tests/infer_integration.rs)
         "vit" | "resnet" => 5e-2,
+        // the native spiral MLP needs a hot rate to clear the softmax
+        // plateau inside a CI-sized budget; wave1d is a shallow conv net
+        "spiral" => 1e-1,
+        "wave1d" => 2e-2,
         _ => 1e-2,
     }
 }

@@ -98,37 +98,61 @@ pub fn run_one(
     let mut loader =
         DataLoader::new(data, model.batch(), true, opts.seed + 2).with_max_batches(opts.batches);
 
+    // Registered native models swap the AOT artifact plane for closed-form
+    // grad/forward closures; every family has a `new_native` twin.
+    let native = crate::infer::native_model(model_name);
     let mut algo: Box<dyn Infer> = match method {
-        Method::Ensemble => Box::new(DeepEnsemble::new(pd, particles, lr)?),
-        Method::MultiSwag => Box::new(MultiSwag::new(
-            pd,
-            SwagConfig {
+        Method::Ensemble => match &native {
+            Some(nm) => Box::new(DeepEnsemble::new_native(
+                pd,
+                particles,
+                lr,
+                &nm.source,
+                nm.seeded_init(opts.seed),
+            )?),
+            None => Box::new(DeepEnsemble::new(pd, particles, lr)?),
+        },
+        Method::MultiSwag => {
+            let cfg = SwagConfig {
                 particles,
                 lr,
                 pretrain_epochs: 0, // every measured epoch does moment work
                 ..SwagConfig::default()
-            },
-        )?),
-        Method::Svgd => Box::new(Svgd::new(
-            pd,
-            SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() },
-        )?),
+            };
+            match &native {
+                Some(nm) => {
+                    Box::new(MultiSwag::new_native(pd, cfg, &nm.source, nm.seeded_init(opts.seed))?)
+                }
+                None => Box::new(MultiSwag::new(pd, cfg)?),
+            }
+        }
+        Method::Svgd => {
+            let cfg = SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() };
+            match &native {
+                Some(nm) => {
+                    Box::new(Svgd::new_native(pd, cfg, &nm.source, nm.seeded_init(opts.seed))?)
+                }
+                None => Box::new(Svgd::new(pd, cfg)?),
+            }
+        }
         Method::Sgld | Method::Sghmc => {
             let algo = if method == Method::Sgld { SgmcmcAlgo::Sgld } else { SgmcmcAlgo::Sghmc };
-            Box::new(SgMcmc::new(
-                pd,
-                SgmcmcConfig {
-                    particles,
-                    algo,
-                    schedule: Schedule::Constant { eps: lr },
-                    temperature: 1e-4,
-                    burn_in: opts.batches, // one epoch of burn-in
-                    thin: 1,
-                    max_samples: 16,
-                    seed: opts.seed,
-                    ..SgmcmcConfig::default()
-                },
-            )?)
+            let mut cfg = SgmcmcConfig {
+                particles,
+                algo,
+                schedule: Schedule::Constant { eps: lr },
+                temperature: 1e-4,
+                burn_in: opts.batches, // one epoch of burn-in
+                thin: 1,
+                max_samples: 16,
+                seed: opts.seed,
+                ..SgmcmcConfig::default()
+            };
+            if let Some(nm) = &native {
+                cfg.model = nm.source.clone();
+                cfg.init = Some(nm.seeded_init(opts.seed));
+            }
+            Box::new(SgMcmc::new(pd, cfg)?)
         }
     };
     // warmup epoch (PJRT compiles) excluded from both metrics
@@ -254,7 +278,9 @@ pub fn run_figure(
                     rep.push(row);
                 }
             }
-            if opts.baseline {
+            // The handwritten baselines drive the AOT artifact plane
+            // directly, which native models don't have — skip them.
+            if opts.baseline && crate::infer::native_model(arch).is_none() {
                 for &base in &opts.particles_base {
                     let pt = run_baseline(manifest, arch, *method, base, opts)?;
                     crate::log_info!(

@@ -181,6 +181,63 @@ pub fn linear(n: usize, in_dim: usize, noise: f32, seed: u64) -> Dataset {
     d
 }
 
+/// Two-class spiral: two interleaved Archimedean arms (arm k rotated by
+/// π), radius growing 0.2 → 1.0 over `turns` full rotations, plus
+/// Gaussian coordinate noise. With `turns >= 1` the arms wrap around each
+/// other, so NO linear decision boundary separates them — the task the
+/// CI accuracy gate uses to prove `mlp_native` learns something
+/// `linear_spiral_native` provably cannot (see
+/// `spiral_is_not_linearly_separable` below for the checked form of
+/// "provably").
+pub fn spiral(n: usize, turns: f32, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed).fold_in(0x7370_6972);
+    let mut d = Dataset::new_classify(vec![2]);
+    for i in 0..n {
+        let label = (i % 2) as i32;
+        let t = rng.uniform_in(0.0, 1.0);
+        let angle = t * turns * 2.0 * std::f32::consts::PI + label as f32 * std::f32::consts::PI;
+        let radius = 0.2 + 0.8 * t;
+        let x = [
+            radius * angle.cos() + noise * rng.normal(),
+            radius * angle.sin() + noise * rng.normal(),
+        ];
+        d.push_classify(&x, label);
+    }
+    d
+}
+
+/// Nonlinear 1-D signal regression: inputs are random Fourier series on an
+/// `nx` grid (the `advection` initial-condition family) and the target is
+/// the signal's RMS amplitude `sqrt(mean u²)` (+ noise). The map u → RMS
+/// is EVEN in u — negating a signal leaves its target unchanged — so every
+/// linear predictor has zero covariance with the target and the task is
+/// only learnable through a nonlinearity (|u| is exactly what paired ReLU
+/// conv channels represent).
+pub fn wave_energy(n: usize, nx: usize, modes: usize, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed).fold_in(0x7761_7665);
+    let mut d = Dataset::new_f32(vec![nx], vec![1]);
+    let mut u = vec![0.0f32; nx];
+    for _ in 0..n {
+        let coeffs: Vec<(f32, f32, f32)> = (1..=modes)
+            .map(|m| {
+                let amp = rng.normal() / m as f32;
+                let phase = rng.uniform_in(0.0, 2.0 * std::f32::consts::PI);
+                (m as f32, amp, phase)
+            })
+            .collect();
+        for (i, ui) in u.iter_mut().enumerate() {
+            let xpos = i as f32 / nx as f32;
+            *ui = coeffs
+                .iter()
+                .map(|(m, a, p)| a * (2.0 * std::f32::consts::PI * m * xpos + p).sin())
+                .sum();
+        }
+        let rms = (u.iter().map(|v| v * v).sum::<f32>() / nx as f32).sqrt();
+        d.push_f32(&u, &[rms + noise * rng.normal()]);
+    }
+    d
+}
+
 /// Energy-only variant of [`md17_like`] packing y[()]-per-sample — the
 /// SchNet contract (y_shape = [B]).
 pub fn md17_energy(n: usize, atoms: usize, species: usize, seed: u64) -> Dataset {
@@ -260,6 +317,83 @@ mod tests {
                 assert!((a - b).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn spiral_shapes_balance_and_reproducibility() {
+        let d = spiral(100, 1.5, 0.02, 3);
+        assert_eq!(d.n, 100);
+        assert_eq!(d.x_stride(), 2);
+        assert_eq!(d.ys_i.iter().filter(|&&l| l == 0).count(), 50);
+        assert_eq!(spiral(100, 1.5, 0.02, 3).xs, d.xs);
+        assert_ne!(spiral(100, 1.5, 0.02, 4).xs, d.xs);
+        // points live inside the unit-ish disk
+        assert!(d.xs.iter().all(|v| v.abs() < 1.2));
+    }
+
+    #[test]
+    fn spiral_is_not_linearly_separable() {
+        // The gate's premise, checked directly: sweep 72 boundary
+        // directions and every threshold along each; the BEST linear
+        // classifier must stay well below perfect.
+        let d = spiral(400, 1.5, 0.02, 11);
+        let mut best = 0usize;
+        for k in 0..72 {
+            let phi = k as f32 / 72.0 * std::f32::consts::PI;
+            let (c, s) = (phi.cos(), phi.sin());
+            let mut proj: Vec<(f32, i32)> = (0..d.n)
+                .map(|i| (c * d.xs[2 * i] + s * d.xs[2 * i + 1], d.ys_i[i]))
+                .collect();
+            proj.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // prefix counts: accuracy of "label 1 iff proj > threshold"
+            // at every cut, both polarities
+            let ones: usize = proj.iter().filter(|p| p.1 == 1).count();
+            let mut ones_below = 0usize;
+            for cut in 0..=d.n {
+                let zeros_below = cut - ones_below;
+                let correct = zeros_below + (ones - ones_below);
+                best = best.max(correct).max(d.n - correct);
+                if cut < d.n && proj[cut].1 == 1 {
+                    ones_below += 1;
+                }
+            }
+        }
+        let acc = best as f32 / d.n as f32;
+        assert!(acc < 0.8, "a linear boundary reached {acc} on the spiral");
+    }
+
+    #[test]
+    fn wave_energy_targets_are_nonlinear_in_the_signal() {
+        let d = wave_energy(500, 32, 4, 0.0, 8);
+        assert_eq!(d.x_stride(), 32);
+        assert_eq!(d.y_stride(), 1);
+        // RMS targets are nonnegative and non-degenerate
+        assert!(d.ys_f.iter().all(|&y| y >= 0.0));
+        let mu = d.ys_f.iter().sum::<f32>() / d.n as f32;
+        assert!(mu > 0.1, "mean RMS {mu}");
+        // evenness: per-coordinate linear correlation with the target is
+        // ~0 (a linear model has nothing to grab)
+        let sd_y = {
+            let v = d.ys_f.iter().map(|y| (y - mu) * (y - mu)).sum::<f32>() / d.n as f32;
+            v.sqrt().max(1e-6)
+        };
+        let mut mean_abs_corr = 0.0f32;
+        for j in 0..32 {
+            let mx = (0..d.n).map(|i| d.xs[i * 32 + j]).sum::<f32>() / d.n as f32;
+            let mut cov = 0.0f32;
+            let mut var = 0.0f32;
+            for i in 0..d.n {
+                let dx = d.xs[i * 32 + j] - mx;
+                cov += dx * (d.ys_f[i] - mu);
+                var += dx * dx;
+            }
+            let sd_x = (var / d.n as f32).sqrt().max(1e-6);
+            mean_abs_corr += (cov / d.n as f32 / sd_x / sd_y).abs();
+        }
+        mean_abs_corr /= 32.0;
+        assert!(mean_abs_corr < 0.1, "mean |corr| {mean_abs_corr}");
+        // reproducible
+        assert_eq!(wave_energy(5, 32, 4, 0.0, 8).xs, d.xs[..5 * 32]);
     }
 
     #[test]

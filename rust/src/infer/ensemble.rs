@@ -5,14 +5,17 @@
 //! the driver imposes by waiting on every particle's STEP future (which is
 //! what the paper's epoch timing measures).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::BatchSource;
-use crate::infer::{Infer, TrainReport};
+use crate::infer::models::{self, native_sgd_step};
+use crate::infer::sgmcmc::ModelSource;
+use crate::infer::{eval, Infer, TrainReport};
 use crate::nel::CreateOpts;
-use crate::particle::{handler, PFuture, Value};
+use crate::particle::{handler, PFuture, PushError, Value};
 use crate::pd::PushDist;
 use crate::runtime::Tensor;
 use crate::Pid;
@@ -23,6 +26,10 @@ pub struct DeepEnsemble {
     pub lr: f32,
     /// Use Adam (paper Tables 3/4 protocol) instead of plain SGD.
     pub adam: bool,
+    /// Members run a native model source: STEP takes closed-form SGD steps
+    /// and prediction goes through the members' PREDICT handlers instead
+    /// of the AOT forward artifact.
+    native: bool,
 }
 
 impl DeepEnsemble {
@@ -45,10 +52,60 @@ impl DeepEnsemble {
             receive: [("STEP".to_string(), step.clone())].into_iter().collect(),
             ..CreateOpts::default()
         })?;
-        Ok(DeepEnsemble { pd, pids, lr, adam: false })
+        Ok(DeepEnsemble { pd, pids, lr, adam: false, native: false })
     }
 
-    /// Switch the STEP message to Adam updates.
+    /// An ensemble over a [`ModelSource::Native`]: STEP answers with one
+    /// closed-form SGD step (the `adam` flag is ignored — there is no
+    /// native Adam), PREDICT with the member's own forward, and creation
+    /// takes explicit per-member init params so the whole family is
+    /// hermetic (no AOT init/step/fwd artifacts anywhere).
+    pub fn new_native(
+        pd: PushDist,
+        n: usize,
+        lr: f32,
+        source: &ModelSource,
+        init: Arc<dyn Fn(usize) -> Tensor + Send + Sync>,
+    ) -> Result<DeepEnsemble> {
+        assert!(n > 0);
+        let (grad, forward) = match source {
+            ModelSource::Native { grad, forward, .. } => (grad.clone(), forward.clone()),
+            ModelSource::Artifact => {
+                return Err(anyhow!("DeepEnsemble::new_native needs a native model source"))
+            }
+        };
+        let step = handler(move |ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let y = args[1].as_tensor()?.clone();
+            let lr = args[2].f32()?;
+            let loss = native_sgd_step(ctx, &grad, &x, &y, lr)?;
+            Ok(Value::Tensor(Tensor::scalar_f32(loss)))
+        });
+        let predict = handler(move |ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let classify = ctx.model().task == "classify";
+            let params = ctx.own_params().wait()?.tensor()?;
+            let mut acc = None;
+            eval::accumulate_prediction(&mut acc, forward(&params, &x)?, classify);
+            eval::finalize_mean(acc, 1, classify)
+                .map(Value::Tensor)
+                .ok_or_else(|| PushError::new("PREDICT produced nothing"))
+        });
+        let pids = pd.p_create_n(n, |i| CreateOpts {
+            receive: [
+                ("STEP".to_string(), step.clone()),
+                ("PREDICT".to_string(), predict.clone()),
+            ]
+            .into_iter()
+            .collect(),
+            init_params: Some(init(i)),
+            ..CreateOpts::default()
+        })?;
+        Ok(DeepEnsemble { pd, pids, lr, adam: false, native: true })
+    }
+
+    /// Switch the STEP message to Adam updates (native members ignore it
+    /// and keep taking plain SGD steps).
     pub fn with_adam(mut self) -> DeepEnsemble {
         self.adam = true;
         self
@@ -112,8 +169,22 @@ impl Infer for DeepEnsemble {
         Ok(report)
     }
 
+    /// Ensemble prediction: the AOT `mean_forward` for artifact members;
+    /// for native members, summed class votes (classify) or averaged
+    /// member predictions (regress) via their PREDICT handlers — the same
+    /// vote protocol SWAG and the MCMC reservoir use.
     fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
-        self.pd.mean_forward(&self.pids, x)
+        if !self.native {
+            return self.pd.mean_forward(&self.pids, x);
+        }
+        let futs = self.pd.broadcast(&self.pids, "PREDICT", vec![Value::Tensor(x.clone())]);
+        let joined = PFuture::join_all(&futs);
+        let preds = joined.wait().map_err(|e| anyhow!("{e}"))?.list().map_err(|e| anyhow!("{e}"))?;
+        // Release the futures before accumulating so the first prediction
+        // is uniquely owned and the axpy chain runs in place.
+        drop(joined);
+        drop(futs);
+        models::fold_predictions(preds, self.pd.model().task == "classify")
     }
 
     fn nel_stats(&self) -> crate::nel::NelStats {

@@ -11,6 +11,7 @@
 
 pub mod ensemble;
 pub mod eval;
+pub mod models;
 pub mod serve;
 pub mod sgmcmc;
 pub mod svgd;
@@ -22,6 +23,10 @@ use crate::data::BatchSource;
 use crate::runtime::Tensor;
 
 pub use ensemble::DeepEnsemble;
+pub use models::{
+    native_manifest, native_model, Activation, Conv1dSpec, MlpSpec, NativeModel,
+    NATIVE_MODEL_NAMES,
+};
 pub use serve::{
     Overloaded, PosteriorServer, PosteriorSnapshot, QueryResult, ReservoirSnapshot, ServeConfig,
     ServeStats, Staleness,

@@ -1,0 +1,897 @@
+//! Native model zoo: closed-form forwards and backprops that run with no
+//! PJRT, no artifacts, and no Python — the hermetic counterpart of
+//! `python/compile/models/`.
+//!
+//! Two architectures beyond `linear_native`:
+//!
+//! * **MLP** ([`MlpSpec`]): depth/width-configurable, ReLU or tanh, with
+//!   the fused affine+activation layer of
+//!   `python/compile/kernels/fused_linear.py` — each layer computes
+//!   `act(x @ W + b)` in one pass over the output row, and the backward
+//!   pass consumes the cached POST-activation outputs (ReLU' = [a > 0],
+//!   tanh' = 1 − a²), so no pre-activation buffer is ever materialized.
+//! * **1-D conv net** ([`Conv1dSpec`]): valid convolution (stride 1) →
+//!   fused activation → mean-pool per channel → linear head. Small enough
+//!   to backprop in closed form, nonlinear enough to learn signal-energy
+//!   tasks a linear model cannot.
+//!
+//! Both speak the [`ModelSource::Native`] contract of `sgmcmc.rs`:
+//! `grad(params, x, y) → (loss, flat gradient)` and
+//! `forward(params, x) → prediction`. The LOSS is part of the model and is
+//! keyed by the label dtype: i32 labels mean softmax cross-entropy (mean
+//! over the batch, predictions are logits `[B, C]`); f32 targets mean MSE
+//! (mean over all `B·O` elements) — the convention `linear_native`
+//! established for `O = 1`.
+//!
+//! **Wire-name registry invariant.** A `ModelSource` crosses the PD wire
+//! as a NAME only; the receiving node rebuilds the closures through
+//! `model_source_by_name`. A registered name therefore denotes one FIXED
+//! architecture (`MLP_NATIVE`, `CONV1D_NATIVE`, `LINEAR_SPIRAL`) — two
+//! nodes resolving the same name MUST build bit-identical math, or
+//! placement invariance dies silently. Arbitrary [`MlpSpec`] /
+//! [`Conv1dSpec`] configs are still constructible ([`mlp_model`],
+//! [`conv1d_model`]) but carry the empty name and are rejected at the
+//! wire seam (in-process only — the gradcheck property tests use these).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::infer::sgmcmc::{
+    linear_native_manifest, linear_native_model, ModelSource, NativeForwardFn, NativeGradFn,
+};
+use crate::nel::ParticleCtx;
+use crate::particle::{PushError, Value};
+use crate::runtime::{DType, Manifest, ModelSpec, Tensor};
+use crate::util::rng::Rng;
+
+/// Salt folded into every per-(seed, particle) init stream. The exact
+/// value `linear_native` has always used (`rust/src/main.rs` since PR 2) —
+/// changing it would silently re-seed every pinned trajectory.
+pub const INIT_SALT: u64 = 0x1217;
+
+/// `linear_native`'s canonical dimensions (moved here from `main.rs` so
+/// every consumer shares one definition).
+pub const LINEAR_D: usize = 8;
+pub const LINEAR_BATCH: usize = 16;
+
+// ---- activations ---------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Tanh,
+}
+
+impl Activation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Tanh => "tanh",
+        }
+    }
+
+    #[inline]
+    pub fn apply(&self, z: f32) -> f32 {
+        match self {
+            Activation::Relu => z.max(0.0),
+            Activation::Tanh => z.tanh(),
+        }
+    }
+
+    /// Derivative as a function of the ACTIVATED output `a = act(z)` —
+    /// the property that lets backprop run off the post-activation cache.
+    #[inline]
+    pub fn grad_from_output(&self, a: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if a > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Tanh => 1.0 - a * a,
+        }
+    }
+}
+
+// ---- the shared loss head ------------------------------------------------
+
+/// Loss and dL/dpred for a `[b, o]` prediction block, keyed by `y`'s
+/// dtype: i32 labels → softmax cross-entropy (mean over batch, numerically
+/// stabilized by the row max); f32 targets → MSE (mean over `b·o`).
+fn loss_and_delta(
+    pred: &[f32],
+    b: usize,
+    o: usize,
+    y: &Tensor,
+) -> Result<(f32, Vec<f32>), PushError> {
+    let mut delta = vec![0.0f32; b * o];
+    let mut loss = 0.0f32;
+    match y.dtype() {
+        DType::I32 => {
+            if y.element_count() != b {
+                return Err(PushError::new(format!(
+                    "classify loss: {b} rows but {} labels",
+                    y.element_count()
+                )));
+            }
+            let labels = y.as_i32();
+            let inv_b = 1.0 / b as f32;
+            for i in 0..b {
+                let row = &pred[i * o..(i + 1) * o];
+                let label = labels[i];
+                if label < 0 || label as usize >= o {
+                    return Err(PushError::new(format!(
+                        "classify loss: label {label} outside 0..{o}"
+                    )));
+                }
+                let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let mut z = 0.0f32;
+                for &v in row {
+                    z += (v - max).exp();
+                }
+                loss += z.ln() + max - row[label as usize];
+                let drow = &mut delta[i * o..(i + 1) * o];
+                for (d, &v) in drow.iter_mut().zip(row) {
+                    *d = (v - max).exp() / z * inv_b;
+                }
+                drow[label as usize] -= inv_b;
+            }
+            loss /= b as f32;
+        }
+        DType::F32 => {
+            if y.element_count() != b * o {
+                return Err(PushError::new(format!(
+                    "regress loss: pred [{b}, {o}] vs y {:?}",
+                    y.shape
+                )));
+            }
+            let ys = y.as_f32();
+            let inv = 1.0 / (b * o) as f32;
+            for ((d, &p), &t) in delta.iter_mut().zip(pred).zip(ys) {
+                let err = p - t;
+                loss += err * err;
+                *d = 2.0 * err * inv;
+            }
+            loss *= inv;
+        }
+        other => {
+            return Err(PushError::new(format!(
+                "native loss: unsupported target dtype {other:?}"
+            )))
+        }
+    }
+    Ok((loss, delta))
+}
+
+// ---- MLP -----------------------------------------------------------------
+
+/// A depth/width-configurable MLP. `depth` counts HIDDEN layers: depth 0
+/// is a single affine map (the "linear control" of the spiral gate),
+/// depth d stacks d fused `act(x @ W + b)` layers before the affine head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub depth: usize,
+    pub out_dim: usize,
+    pub activation: Activation,
+}
+
+impl MlpSpec {
+    /// Layer widths `[in] + [hidden] * depth + [out]` (the layout
+    /// `python/compile/models/mlp.py` uses).
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = Vec::with_capacity(self.depth + 2);
+        d.push(self.in_dim);
+        d.resize(self.depth + 1, self.hidden);
+        d.push(self.out_dim);
+        d
+    }
+
+    /// Flat parameter count: per layer a row-major `[da, db]` weight block
+    /// followed by a `[db]` bias block.
+    pub fn param_count(&self) -> usize {
+        self.dims().windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    /// Smallest |pre-activation| over every HIDDEN unit of the batch —
+    /// the finite-difference gradcheck uses this to certify that no ReLU
+    /// kink lies within the probe step (see `tests/properties.rs`).
+    pub fn min_abs_preactivation(&self, params: &Tensor, x: &Tensor) -> Result<f32, PushError> {
+        let b = self.check_shapes(params, x)?;
+        let (_, margin) = mlp_forward_acts(self, params.as_f32(), x.as_f32(), b);
+        Ok(margin)
+    }
+
+    fn check_shapes(&self, params: &Tensor, x: &Tensor) -> Result<usize, PushError> {
+        let b = x.shape.first().copied().unwrap_or(0);
+        if b == 0 || x.element_count() != b * self.in_dim {
+            return Err(PushError::new(format!(
+                "mlp: x {:?} incompatible with in_dim {}",
+                x.shape, self.in_dim
+            )));
+        }
+        if params.element_count() != self.param_count() {
+            return Err(PushError::new(format!(
+                "mlp: {} params given, spec {:?} needs {}",
+                params.element_count(),
+                self,
+                self.param_count()
+            )));
+        }
+        Ok(b)
+    }
+}
+
+/// Fused forward: returns every layer's POST-activation output
+/// (`acts[0]` is the input copy, `acts[L]` the affine network output) plus
+/// the smallest |pre-activation| seen on any hidden unit.
+fn mlp_forward_acts(spec: &MlpSpec, params: &[f32], x: &[f32], b: usize) -> (Vec<Vec<f32>>, f32) {
+    let dims = spec.dims();
+    let n_layers = dims.len() - 1;
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
+    acts.push(x.to_vec());
+    let mut margin = f32::INFINITY;
+    let mut off = 0usize;
+    for l in 0..n_layers {
+        let (da, db) = (dims[l], dims[l + 1]);
+        let w = &params[off..off + da * db];
+        let bias = &params[off + da * db..off + da * db + db];
+        off += da * db + db;
+        let last = l + 1 == n_layers;
+        let out = {
+            let prev = &acts[l];
+            let mut out = vec![0.0f32; b * db];
+            for i in 0..b {
+                let row = &prev[i * da..(i + 1) * da];
+                let orow = &mut out[i * db..(i + 1) * db];
+                orow.copy_from_slice(bias);
+                for (k, &xk) in row.iter().enumerate() {
+                    let wrow = &w[k * db..(k + 1) * db];
+                    for (o, &wkj) in orow.iter_mut().zip(wrow) {
+                        *o += xk * wkj;
+                    }
+                }
+                if !last {
+                    // fused affine + activation: the pre-activation never
+                    // leaves this row buffer
+                    for o in orow.iter_mut() {
+                        margin = margin.min(o.abs());
+                        *o = spec.activation.apply(*o);
+                    }
+                }
+            }
+            out
+        };
+        acts.push(out);
+    }
+    (acts, margin)
+}
+
+/// Closed-form backprop: `delta` starts as dL/dpred from the loss head and
+/// walks the layers in reverse; layer `l`'s weight gradient is
+/// `a_{l}ᵀ delta` and the incoming delta is `(delta Wᵀ) ⊙ act'(a_l)`.
+fn mlp_loss_grad(
+    spec: &MlpSpec,
+    params: &Tensor,
+    x: &Tensor,
+    y: &Tensor,
+) -> Result<(f32, Tensor), PushError> {
+    let b = spec.check_shapes(params, x)?;
+    let p = params.as_f32();
+    let dims = spec.dims();
+    let n_layers = dims.len() - 1;
+    let (acts, _) = mlp_forward_acts(spec, p, x.as_f32(), b);
+    let (loss, mut delta) = loss_and_delta(&acts[n_layers], b, spec.out_dim, y)?;
+
+    let mut offsets = Vec::with_capacity(n_layers);
+    let mut off = 0usize;
+    for w in dims.windows(2) {
+        offsets.push(off);
+        off += w[0] * w[1] + w[1];
+    }
+    let mut g = vec![0.0f32; spec.param_count()];
+    for l in (0..n_layers).rev() {
+        let (da, db) = (dims[l], dims[l + 1]);
+        let a_prev = &acts[l];
+        {
+            let layer = &mut g[offsets[l]..offsets[l] + da * db + db];
+            let (gw, gb) = layer.split_at_mut(da * db);
+            for i in 0..b {
+                let drow = &delta[i * db..(i + 1) * db];
+                let arow = &a_prev[i * da..(i + 1) * da];
+                for (k, &ak) in arow.iter().enumerate() {
+                    let gwrow = &mut gw[k * db..(k + 1) * db];
+                    for (gkj, &dj) in gwrow.iter_mut().zip(drow) {
+                        *gkj += ak * dj;
+                    }
+                }
+                for (gbj, &dj) in gb.iter_mut().zip(drow) {
+                    *gbj += dj;
+                }
+            }
+        }
+        if l > 0 {
+            let w = &p[offsets[l]..offsets[l] + da * db];
+            let mut dprev = vec![0.0f32; b * da];
+            for i in 0..b {
+                let drow = &delta[i * db..(i + 1) * db];
+                let arow = &a_prev[i * da..(i + 1) * da];
+                let dp = &mut dprev[i * da..(i + 1) * da];
+                for (k, dk) in dp.iter_mut().enumerate() {
+                    let wrow = &w[k * db..(k + 1) * db];
+                    let s: f32 = wrow.iter().zip(drow).map(|(wj, dj)| wj * dj).sum();
+                    *dk = s * spec.activation.grad_from_output(arow[k]);
+                }
+            }
+            delta = dprev;
+        }
+    }
+    Ok((loss, Tensor::f32(vec![g.len()], g)))
+}
+
+fn mlp_forward(spec: &MlpSpec, params: &Tensor, x: &Tensor) -> Result<Tensor, PushError> {
+    let b = spec.check_shapes(params, x)?;
+    let (mut acts, _) = mlp_forward_acts(spec, params.as_f32(), x.as_f32(), b);
+    let out = acts.pop().expect("forward always yields an output layer");
+    Ok(Tensor::f32(vec![b, spec.out_dim], out))
+}
+
+/// An MLP source under an explicit wire name. Registered names must map to
+/// one fixed spec (see the registry invariant in the module docs); use
+/// [`mlp_model`] for anonymous in-process sources.
+pub fn mlp_model_named(name: &'static str, spec: MlpSpec) -> ModelSource {
+    let grad: NativeGradFn = Arc::new(move |p, x, y| mlp_loss_grad(&spec, p, x, y));
+    let forward: NativeForwardFn = Arc::new(move |p, x| mlp_forward(&spec, p, x));
+    ModelSource::Native { name, grad, forward }
+}
+
+/// An anonymous (in-process only) MLP source for an arbitrary spec.
+pub fn mlp_model(spec: MlpSpec) -> ModelSource {
+    mlp_model_named("", spec)
+}
+
+// ---- 1-D conv net --------------------------------------------------------
+
+/// Valid 1-D convolution (stride 1) → fused activation → mean-pool per
+/// channel → affine head. Parameters, flat:
+/// `[w_conv (C·K)] [b_conv (C)] [w_head (C·O)] [b_head (O)]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv1dSpec {
+    pub nx: usize,
+    pub channels: usize,
+    pub kernel: usize,
+    pub out_dim: usize,
+    pub activation: Activation,
+}
+
+impl Conv1dSpec {
+    /// Output positions of the valid convolution.
+    pub fn positions(&self) -> usize {
+        self.nx + 1 - self.kernel
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.channels * self.kernel + self.channels + self.channels * self.out_dim + self.out_dim
+    }
+
+    /// Smallest |pre-activation| over the conv units of the batch (the
+    /// gradcheck margin twin of [`MlpSpec::min_abs_preactivation`]).
+    pub fn min_abs_preactivation(&self, params: &Tensor, x: &Tensor) -> Result<f32, PushError> {
+        let b = self.check_shapes(params, x)?;
+        let fwd = conv_forward_full(self, params.as_f32(), x.as_f32(), b);
+        Ok(fwd.margin)
+    }
+
+    fn check_shapes(&self, params: &Tensor, x: &Tensor) -> Result<usize, PushError> {
+        if self.kernel == 0 || self.kernel > self.nx {
+            return Err(PushError::new(format!(
+                "conv1d: kernel {} does not fit nx {}",
+                self.kernel, self.nx
+            )));
+        }
+        let b = x.shape.first().copied().unwrap_or(0);
+        if b == 0 || x.element_count() != b * self.nx {
+            return Err(PushError::new(format!(
+                "conv1d: x {:?} incompatible with nx {}",
+                x.shape, self.nx
+            )));
+        }
+        if params.element_count() != self.param_count() {
+            return Err(PushError::new(format!(
+                "conv1d: {} params given, spec {:?} needs {}",
+                params.element_count(),
+                self,
+                self.param_count()
+            )));
+        }
+        Ok(b)
+    }
+}
+
+struct ConvForward {
+    /// Network output, `[b, out_dim]` flattened.
+    out: Vec<f32>,
+    /// Post-activation conv maps, `[b, C, P]` flattened.
+    act: Vec<f32>,
+    /// Mean-pooled channels, `[b, C]` flattened.
+    pooled: Vec<f32>,
+    /// Smallest |pre-activation| over every conv unit.
+    margin: f32,
+}
+
+fn conv_forward_full(spec: &Conv1dSpec, p: &[f32], x: &[f32], b: usize) -> ConvForward {
+    let (c, k, o, nx) = (spec.channels, spec.kernel, spec.out_dim, spec.nx);
+    let np = spec.positions();
+    let w_conv = &p[..c * k];
+    let b_conv = &p[c * k..c * k + c];
+    let w_head = &p[c * k + c..c * k + c + c * o];
+    let b_head = &p[c * k + c + c * o..];
+    let mut act = vec![0.0f32; b * c * np];
+    let mut pooled = vec![0.0f32; b * c];
+    let mut out = vec![0.0f32; b * o];
+    let mut margin = f32::INFINITY;
+    let inv_np = 1.0 / np as f32;
+    for i in 0..b {
+        let sig = &x[i * nx..(i + 1) * nx];
+        for ch in 0..c {
+            let kern = &w_conv[ch * k..(ch + 1) * k];
+            let amap = &mut act[(i * c + ch) * np..(i * c + ch + 1) * np];
+            let mut sum = 0.0f32;
+            for (pos, a) in amap.iter_mut().enumerate() {
+                // fused conv + activation at this position
+                let mut z = b_conv[ch];
+                for (&wj, &xj) in kern.iter().zip(&sig[pos..pos + k]) {
+                    z += wj * xj;
+                }
+                margin = margin.min(z.abs());
+                let v = spec.activation.apply(z);
+                *a = v;
+                sum += v;
+            }
+            pooled[i * c + ch] = sum * inv_np;
+        }
+        let orow = &mut out[i * o..(i + 1) * o];
+        orow.copy_from_slice(b_head);
+        for ch in 0..c {
+            let wrow = &w_head[ch * o..(ch + 1) * o];
+            let pv = pooled[i * c + ch];
+            for (ov, &wj) in orow.iter_mut().zip(wrow) {
+                *ov += pv * wj;
+            }
+        }
+    }
+    ConvForward { out, act, pooled, margin }
+}
+
+fn conv_loss_grad(
+    spec: &Conv1dSpec,
+    params: &Tensor,
+    x: &Tensor,
+    y: &Tensor,
+) -> Result<(f32, Tensor), PushError> {
+    let b = spec.check_shapes(params, x)?;
+    let p = params.as_f32();
+    let xs = x.as_f32();
+    let (c, k, o, nx) = (spec.channels, spec.kernel, spec.out_dim, spec.nx);
+    let np = spec.positions();
+    let fwd = conv_forward_full(spec, p, xs, b);
+    let (loss, delta) = loss_and_delta(&fwd.out, b, o, y)?;
+
+    let w_head = &p[c * k + c..c * k + c + c * o];
+    let mut g = vec![0.0f32; spec.param_count()];
+    let inv_np = 1.0 / np as f32;
+    for i in 0..b {
+        let drow = &delta[i * o..(i + 1) * o];
+        let sig = &xs[i * nx..(i + 1) * nx];
+        for ch in 0..c {
+            // head gradient and the pooled delta for this channel
+            let pv = fwd.pooled[i * c + ch];
+            let wrow = &w_head[ch * o..(ch + 1) * o];
+            let mut dpool = 0.0f32;
+            {
+                let gw_head = &mut g[c * k + c + ch * o..c * k + c + (ch + 1) * o];
+                for ((gj, &dj), &wj) in gw_head.iter_mut().zip(drow).zip(wrow) {
+                    *gj += pv * dj;
+                    dpool += dj * wj;
+                }
+            }
+            // mean-pool spreads the delta uniformly over positions
+            let df = dpool * inv_np;
+            let amap = &fwd.act[(i * c + ch) * np..(i * c + ch + 1) * np];
+            for (pos, &a) in amap.iter().enumerate() {
+                let dz = df * spec.activation.grad_from_output(a);
+                g[c * k + ch] += dz;
+                let gw_conv = &mut g[ch * k..(ch + 1) * k];
+                for (gj, &xj) in gw_conv.iter_mut().zip(&sig[pos..pos + k]) {
+                    *gj += dz * xj;
+                }
+            }
+        }
+        let gb_head = &mut g[c * k + c + c * o..];
+        for (gj, &dj) in gb_head.iter_mut().zip(drow) {
+            *gj += dj;
+        }
+    }
+    Ok((loss, Tensor::f32(vec![g.len()], g)))
+}
+
+fn conv_forward(spec: &Conv1dSpec, params: &Tensor, x: &Tensor) -> Result<Tensor, PushError> {
+    let b = spec.check_shapes(params, x)?;
+    let fwd = conv_forward_full(spec, params.as_f32(), x.as_f32(), b);
+    Ok(Tensor::f32(vec![b, spec.out_dim], fwd.out))
+}
+
+/// A conv source under an explicit wire name (see the registry invariant).
+pub fn conv1d_model_named(name: &'static str, spec: Conv1dSpec) -> ModelSource {
+    let grad: NativeGradFn = Arc::new(move |p, x, y| conv_loss_grad(&spec, p, x, y));
+    let forward: NativeForwardFn = Arc::new(move |p, x| conv_forward(&spec, p, x));
+    ModelSource::Native { name, grad, forward }
+}
+
+/// An anonymous (in-process only) conv source for an arbitrary spec.
+pub fn conv1d_model(spec: Conv1dSpec) -> ModelSource {
+    conv1d_model_named("", spec)
+}
+
+// ---- the native optimizer step -------------------------------------------
+
+/// One plain SGD step through a native grad closure: θ ← θ − lr·∇U; the
+/// minibatch loss comes back for the STEP protocol's scalar-tensor reply.
+/// Shared by the native DeepEnsemble and MultiSwag handlers (the native
+/// families always take plain SGD steps — there is no native Adam).
+pub fn native_sgd_step(
+    ctx: &ParticleCtx,
+    grad: &NativeGradFn,
+    x: &Tensor,
+    y: &Tensor,
+    lr: f32,
+) -> Result<f32, PushError> {
+    let params = ctx.own_params().wait()?.tensor()?;
+    let (loss, mut u) = grad(&params, x, y)?;
+    // Release the snapshot BEFORE the apply so axpy_params mutates the
+    // resident parameters in place instead of COW-detaching.
+    drop(params);
+    for v in u.as_f32_mut() {
+        *v *= -lr;
+    }
+    ctx.axpy_params(1.0, u).wait()?;
+    Ok(loss)
+}
+
+/// Fold a fan-out of per-particle PREDICT replies into the family vote:
+/// summed one-hot class votes (classify — ready for `argmax` accuracy) or
+/// the mean prediction (regress). The caller must drop the reply futures
+/// first so the first tensor is uniquely owned and the axpy chain runs in
+/// place. Shared by every native `predict_mean` (ensemble, SWAG, SVGD) —
+/// the same vote protocol the MCMC reservoir uses.
+pub fn fold_predictions(preds: Vec<Value>, classify: bool) -> anyhow::Result<Tensor> {
+    let n = preds.len();
+    let mut acc: Option<Tensor> = None;
+    for p in preds {
+        let t = p.tensor().map_err(|e| anyhow::anyhow!("{e}"))?;
+        match &mut acc {
+            None => acc = Some(t),
+            Some(a) => crate::runtime::tensor::ops::axpy(a, 1.0, &t),
+        }
+    }
+    let mut out = acc.ok_or_else(|| anyhow::anyhow!("predict over zero particles"))?;
+    if !classify {
+        for v in out.as_f32_mut() {
+            *v /= n as f32;
+        }
+    }
+    Ok(out)
+}
+
+// ---- the registry --------------------------------------------------------
+
+/// The fixed architecture behind the wire name `mlp_native`: a 2→16→16→2
+/// ReLU classifier sized for the two-class spiral task.
+pub const MLP_NATIVE: MlpSpec =
+    MlpSpec { in_dim: 2, hidden: 16, depth: 2, out_dim: 2, activation: Activation::Relu };
+
+/// The fixed architecture behind `linear_spiral_native`: the depth-0
+/// (single affine map) softmax classifier on the same spiral inputs — the
+/// linear CONTROL of the CI accuracy gate. A linear decision boundary
+/// provably cannot separate interleaved spiral arms, so this model's
+/// accuracy bounds what any linear method can do on the task.
+pub const LINEAR_SPIRAL: MlpSpec =
+    MlpSpec { in_dim: 2, hidden: 0, depth: 0, out_dim: 2, activation: Activation::Relu };
+
+/// The fixed architecture behind `conv1d_native`: 6 channels of kernel-5
+/// valid conv over 32 samples, ReLU, mean-pool, affine head — sized for
+/// the `wave_energy` regression (ReLU pairs can represent |u|, which a
+/// purely linear map cannot).
+pub const CONV1D_NATIVE: Conv1dSpec =
+    Conv1dSpec { nx: 32, channels: 6, kernel: 5, out_dim: 1, activation: Activation::Relu };
+
+const MLP_NATIVE_BATCH: usize = 32;
+const SPIRAL_BATCH: usize = 32;
+const CONV1D_BATCH: usize = 16;
+
+pub fn mlp_native_model() -> ModelSource {
+    mlp_model_named("mlp_native", MLP_NATIVE)
+}
+
+pub fn linear_spiral_model() -> ModelSource {
+    mlp_model_named("linear_spiral_native", LINEAR_SPIRAL)
+}
+
+pub fn conv1d_native_model() -> ModelSource {
+    conv1d_model_named("conv1d_native", CONV1D_NATIVE)
+}
+
+/// One registered native model: wire name, closed-form source, the
+/// shape/task contract the data plane and serving tier read, and the
+/// deterministic per-(seed, particle) initializer that makes creation
+/// hermetic (no AOT `init` artifact).
+#[derive(Clone)]
+pub struct NativeModel {
+    pub name: &'static str,
+    pub source: ModelSource,
+    pub spec: ModelSpec,
+    init: Arc<dyn Fn(u64, usize) -> Tensor + Send + Sync>,
+}
+
+impl fmt::Debug for NativeModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("NativeModel")
+            .field("name", &self.name)
+            .field("spec", &self.spec.name)
+            .finish()
+    }
+}
+
+impl NativeModel {
+    /// Initial parameters for particle `i` under `seed`.
+    pub fn init_params(&self, seed: u64, i: usize) -> Tensor {
+        (self.init)(seed, i)
+    }
+
+    /// The initializer curried over a run seed — the exact closure shape
+    /// `SgmcmcConfig::init` and the native family constructors take.
+    pub fn seeded_init(&self, seed: u64) -> Arc<dyn Fn(usize) -> Tensor + Send + Sync> {
+        let f = self.init.clone();
+        Arc::new(move |i| f(seed, i))
+    }
+}
+
+/// Every registered native model name, in CLI-listing order.
+pub const NATIVE_MODEL_NAMES: [&str; 4] =
+    ["linear_native", "mlp_native", "conv1d_native", "linear_spiral_native"];
+
+fn mlp_spec_for(name: &str, spec: MlpSpec, batch: usize, task: &str, arch: &str) -> ModelSpec {
+    ModelSpec {
+        name: name.to_string(),
+        param_count: spec.param_count(),
+        task: task.to_string(),
+        x_shape: vec![batch, spec.in_dim],
+        y_shape: if task == "classify" { vec![batch] } else { vec![batch, spec.out_dim] },
+        y_dtype: if task == "classify" { DType::I32 } else { DType::F32 },
+        arch: arch.to_string(),
+        meta: BTreeMap::new(),
+        entries: BTreeMap::new(),
+    }
+}
+
+/// Per-layer scaled Gaussian weights (std = 1/√fan_in), zero biases, all
+/// from the one `(seed ^ INIT_SALT, particle)` stream.
+fn mlp_init(spec: MlpSpec, seed: u64, i: usize) -> Tensor {
+    let mut rng = Rng::new(seed ^ INIT_SALT).fold_in(i as u64);
+    let mut p = Vec::with_capacity(spec.param_count());
+    for w in spec.dims().windows(2) {
+        let (da, db) = (w[0], w[1]);
+        let std = (1.0 / da as f32).sqrt();
+        for _ in 0..da * db {
+            p.push(std * rng.normal());
+        }
+        p.resize(p.len() + db, 0.0);
+    }
+    Tensor::f32(vec![p.len()], p)
+}
+
+fn conv1d_init(spec: Conv1dSpec, seed: u64, i: usize) -> Tensor {
+    let mut rng = Rng::new(seed ^ INIT_SALT).fold_in(i as u64);
+    let mut p = Vec::with_capacity(spec.param_count());
+    let conv_std = (1.0 / spec.kernel as f32).sqrt();
+    for _ in 0..spec.channels * spec.kernel {
+        p.push(conv_std * rng.normal());
+    }
+    p.resize(p.len() + spec.channels, 0.0);
+    let head_std = (1.0 / spec.channels as f32).sqrt();
+    for _ in 0..spec.channels * spec.out_dim {
+        p.push(head_std * rng.normal());
+    }
+    p.resize(p.len() + spec.out_dim, 0.0);
+    Tensor::f32(vec![p.len()], p)
+}
+
+/// Look a registered native model up by its wire/CLI name.
+pub fn native_model(name: &str) -> Option<NativeModel> {
+    match name {
+        "linear_native" => Some(NativeModel {
+            name: "linear_native",
+            source: linear_native_model(),
+            spec: linear_native_manifest(LINEAR_D, LINEAR_BATCH)
+                .model("linear_native")
+                .expect("seed manifest always carries linear_native")
+                .clone(),
+            // the exact stream `main.rs` has always used for linear chains
+            init: Arc::new(|seed, i| {
+                Tensor::f32(
+                    vec![LINEAR_D],
+                    Rng::new(seed ^ INIT_SALT).fold_in(i as u64).normal_vec(LINEAR_D),
+                )
+            }),
+        }),
+        "mlp_native" => Some(NativeModel {
+            name: "mlp_native",
+            source: mlp_native_model(),
+            spec: mlp_spec_for("mlp_native", MLP_NATIVE, MLP_NATIVE_BATCH, "classify", "spiral"),
+            init: Arc::new(|seed, i| mlp_init(MLP_NATIVE, seed, i)),
+        }),
+        "conv1d_native" => Some(NativeModel {
+            name: "conv1d_native",
+            source: conv1d_native_model(),
+            spec: ModelSpec {
+                name: "conv1d_native".to_string(),
+                param_count: CONV1D_NATIVE.param_count(),
+                task: "regress".to_string(),
+                x_shape: vec![CONV1D_BATCH, CONV1D_NATIVE.nx],
+                y_shape: vec![CONV1D_BATCH, CONV1D_NATIVE.out_dim],
+                y_dtype: DType::F32,
+                arch: "wave1d".to_string(),
+                meta: BTreeMap::new(),
+                entries: BTreeMap::new(),
+            },
+            init: Arc::new(|seed, i| conv1d_init(CONV1D_NATIVE, seed, i)),
+        }),
+        "linear_spiral_native" => Some(NativeModel {
+            name: "linear_spiral_native",
+            source: linear_spiral_model(),
+            spec: mlp_spec_for(
+                "linear_spiral_native",
+                LINEAR_SPIRAL,
+                SPIRAL_BATCH,
+                "classify",
+                "spiral",
+            ),
+            init: Arc::new(|seed, i| mlp_init(LINEAR_SPIRAL, seed, i)),
+        }),
+        _ => None,
+    }
+}
+
+/// A manifest holding EVERY registered native model spec — the hermetic
+/// stand-in for `artifacts/manifest.json` wherever a native model name is
+/// given (`push train/serve/bench`, node workers, examples).
+pub fn native_manifest() -> Manifest {
+    let mut models = BTreeMap::new();
+    for name in NATIVE_MODEL_NAMES {
+        let nm = native_model(name).expect("registry names resolve");
+        models.insert(name.to_string(), nm.spec);
+    }
+    Manifest { dir: PathBuf::from("."), models, svgd: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_dims_and_param_count() {
+        let spec = MLP_NATIVE;
+        assert_eq!(spec.dims(), vec![2, 16, 16, 2]);
+        assert_eq!(spec.param_count(), 2 * 16 + 16 + 16 * 16 + 16 + 16 * 2 + 2);
+        // depth 0 is a single affine map
+        assert_eq!(LINEAR_SPIRAL.dims(), vec![2, 2]);
+        assert_eq!(LINEAR_SPIRAL.param_count(), 6);
+        assert_eq!(CONV1D_NATIVE.param_count(), 6 * 5 + 6 + 6 + 1);
+        assert_eq!(CONV1D_NATIVE.positions(), 28);
+    }
+
+    #[test]
+    fn registry_resolves_every_name_consistently() {
+        for name in NATIVE_MODEL_NAMES {
+            let nm = native_model(name).unwrap();
+            assert_eq!(nm.name, name);
+            assert_eq!(nm.spec.name, name);
+            assert_eq!(nm.spec.param_count, nm.init_params(7, 0).element_count());
+            // init is deterministic in (seed, particle) and differs across
+            // particles
+            assert_eq!(nm.init_params(7, 3), nm.init_params(7, 3));
+            assert_ne!(nm.init_params(7, 0), nm.init_params(7, 1));
+        }
+        assert!(native_model("resnet_native").is_none());
+        let m = native_manifest();
+        assert_eq!(m.models.len(), NATIVE_MODEL_NAMES.len());
+    }
+
+    #[test]
+    fn linear_native_init_stream_is_preserved() {
+        // the pinned stream every trajectory test and CI smoke depends on
+        let nm = native_model("linear_native").unwrap();
+        let want =
+            Tensor::f32(vec![LINEAR_D], Rng::new(42 ^ 0x1217).fold_in(5).normal_vec(LINEAR_D));
+        assert_eq!(nm.init_params(42, 5), want);
+    }
+
+    #[test]
+    fn mlp_forward_shapes_and_loss_heads() {
+        let nm = native_model("mlp_native").unwrap();
+        let ModelSource::Native { grad, forward, .. } = nm.source else {
+            panic!("native")
+        };
+        let params = nm.init_params(3, 0);
+        let b = 5;
+        let x = Tensor::f32(vec![b, 2], Rng::new(9).normal_vec(b * 2));
+        let pred = forward(&params, &x).unwrap();
+        assert_eq!(pred.shape, vec![b, 2]);
+        // classify labels: finite CE loss, gradient matches param count
+        let y = Tensor::i32(vec![b], vec![0, 1, 1, 0, 1]);
+        let (loss, g) = grad(&params, &x, &y).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(g.element_count(), MLP_NATIVE.param_count());
+        // out-of-range labels are a model error, not UB
+        let bad = Tensor::i32(vec![b], vec![0, 1, 2, 0, 1]);
+        assert!(grad(&params, &x, &bad).is_err());
+        // shape mismatches error cleanly
+        let wide = Tensor::f32(vec![b, 3], vec![0.0; b * 3]);
+        assert!(forward(&params, &wide).is_err());
+    }
+
+    #[test]
+    fn uniform_logits_give_ln_c_loss() {
+        // depth-0 map with zero params: logits all 0 → CE = ln 2 and the
+        // per-row delta sums to zero (softmax minus one-hot property)
+        let spec = LINEAR_SPIRAL;
+        let params = Tensor::zeros(vec![spec.param_count()]);
+        let x = Tensor::f32(vec![4, 2], Rng::new(1).normal_vec(8));
+        let y = Tensor::i32(vec![4], vec![0, 1, 0, 1]);
+        let (loss, _) = mlp_loss_grad(&spec, &params, &x, &y).unwrap();
+        assert!((loss - (2.0f32).ln()).abs() < 1e-6, "uniform CE is ln 2, got {loss}");
+    }
+
+    #[test]
+    fn conv_forward_shapes_and_regress_loss() {
+        let nm = native_model("conv1d_native").unwrap();
+        let ModelSource::Native { grad, forward, .. } = nm.source else {
+            panic!("native")
+        };
+        let params = nm.init_params(11, 2);
+        let b = 3;
+        let x = Tensor::f32(vec![b, 32], Rng::new(4).normal_vec(b * 32));
+        let pred = forward(&params, &x).unwrap();
+        assert_eq!(pred.shape, vec![b, 1]);
+        let y = Tensor::f32(vec![b, 1], vec![0.5, 0.1, 0.9]);
+        let (loss, g) = grad(&params, &x, &y).unwrap();
+        assert!(loss.is_finite() && loss >= 0.0);
+        assert_eq!(g.element_count(), CONV1D_NATIVE.param_count());
+    }
+
+    #[test]
+    fn activation_derivatives_come_from_outputs() {
+        assert_eq!(Activation::Relu.apply(-2.0), 0.0);
+        assert_eq!(Activation::Relu.grad_from_output(0.0), 0.0);
+        assert_eq!(Activation::Relu.grad_from_output(1.5), 1.0);
+        let a = Activation::Tanh.apply(0.7);
+        assert!((Activation::Tanh.grad_from_output(a) - (1.0 - a * a)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn preactivation_margin_reports_kink_distance() {
+        // a single positive weight and bias pushes every ReLU unit well
+        // away from its kink; the margin must see that
+        let spec =
+            MlpSpec { in_dim: 1, hidden: 2, depth: 1, out_dim: 1, activation: Activation::Relu };
+        let params = Tensor::f32(vec![spec.param_count()], vec![1.0, 1.0, 5.0, 5.0, 1.0, 1.0, 0.0]);
+        let x = Tensor::f32(vec![1, 1], vec![0.5]);
+        let margin = spec.min_abs_preactivation(&params, &x).unwrap();
+        assert!((margin - 5.5).abs() < 1e-6, "margin {margin}");
+    }
+}

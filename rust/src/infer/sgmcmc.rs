@@ -168,6 +168,9 @@ pub fn model_source_by_name(name: &str) -> Option<ModelSource> {
     match name {
         "artifact" => Some(ModelSource::Artifact),
         "linear" => Some(linear_native_model()),
+        "mlp_native" => Some(crate::infer::models::mlp_native_model()),
+        "conv1d_native" => Some(crate::infer::models::conv1d_native_model()),
+        "linear_spiral_native" => Some(crate::infer::models::linear_spiral_model()),
         _ => None,
     }
 }
@@ -1134,6 +1137,18 @@ mod tests {
             ..SgmcmcConfig::default()
         };
         assert!(anon.to_wire().is_err());
+        // the registered zoo names resolve to themselves on the far side
+        for name in ["mlp_native", "conv1d_native", "linear_spiral_native"] {
+            let zoo = SgmcmcConfig {
+                model: model_source_by_name(name).unwrap(),
+                ..SgmcmcConfig::default()
+            };
+            let back = SgmcmcConfig::from_wire(&zoo.to_wire().unwrap()).unwrap();
+            match back.model {
+                ModelSource::Native { name: got, .. } => assert_eq!(got, name),
+                other => panic!("{name} decoded as {other:?}"),
+            }
+        }
         // garbage rejects cleanly
         assert!(SgmcmcConfig::from_wire(&Value::Unit).is_err());
         assert!(SgmcmcConfig::from_wire(&Value::List(vec![Value::Unit; 10])).is_err());

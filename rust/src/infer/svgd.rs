@@ -20,17 +20,24 @@
 //! Sign convention: canonical descent-form SVGD — the paper's Appendix-B
 //! listing flips the repulsion term; see DESIGN.md §SVGD-sign.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::BatchSource;
-use crate::infer::{Infer, TrainReport};
+use crate::infer::models::fold_predictions;
+use crate::infer::sgmcmc::{ModelSource, NativeForwardFn, NativeGradFn};
+use crate::infer::{eval, Infer, TrainReport};
 use crate::nel::CreateOpts;
 use crate::particle::{handler, PFuture, PushError, Value};
 use crate::pd::PushDist;
 use crate::runtime::Tensor;
 use crate::Pid;
+
+/// Per-particle init-parameter factory for native runs (index 0 is the
+/// leader, 1.. the followers — matching `pids()` order).
+type NativeInit = Arc<dyn Fn(usize) -> Tensor + Send + Sync>;
 
 #[derive(Debug, Clone)]
 pub struct SvgdConfig {
@@ -67,18 +74,70 @@ pub struct Svgd {
     leader: Pid,
     followers: Vec<Pid>,
     pub cfg: SvgdConfig,
+    /// Particles run a native model source: gradients come from its
+    /// closed-form closure and prediction from PREDICT handlers instead
+    /// of the AOT grad/forward artifacts.
+    native: bool,
 }
 
 impl Svgd {
     pub fn new(pd: PushDist, cfg: SvgdConfig) -> Result<Svgd> {
+        Svgd::build(pd, cfg, None)
+    }
+
+    /// SVGD over a [`ModelSource::Native`]: followers answer SVGD_STEP
+    /// with the model's closed-form (loss, grad) pair, the leader runs
+    /// the same closure for its own gradient, and `predict_mean` fans out
+    /// PREDICT to every particle's native forward (there is no AOT fwd
+    /// entry to `mean_forward` over). The kernel-matrix update itself is
+    /// unchanged: Pallas artifact when one matches (n, d), native loop
+    /// otherwise.
+    pub fn new_native(
+        pd: PushDist,
+        cfg: SvgdConfig,
+        source: &ModelSource,
+        init: NativeInit,
+    ) -> Result<Svgd> {
+        let (grad, forward) = match source {
+            ModelSource::Native { grad, forward, .. } => (grad.clone(), forward.clone()),
+            ModelSource::Artifact => {
+                return Err(anyhow!("Svgd::new_native needs a native model source"))
+            }
+        };
+        Svgd::build(pd, cfg, Some((grad, forward, init)))
+    }
+
+    fn build(
+        pd: PushDist,
+        cfg: SvgdConfig,
+        native: Option<(NativeGradFn, NativeForwardFn, NativeInit)>,
+    ) -> Result<Svgd> {
         assert!(cfg.particles > 0);
+        let is_native = native.is_some();
         // --- follower handlers -------------------------------------------
-        // SVGD_STEP: compute (loss, grad) on own device, return both.
-        let svgd_step = handler(|ctx, args| {
-            let x = args[0].as_tensor()?.clone();
-            let y = args[1].as_tensor()?.clone();
-            ctx.grad(x, y).wait()
-        });
+        // SVGD_STEP: compute (loss, grad) on own device — AOT grad
+        // artifact or the native closure — and return both.
+        let svgd_step = match &native {
+            Some((grad, _, _)) => {
+                let grad = grad.clone();
+                handler(move |ctx, args| {
+                    let x = args[0].as_tensor()?.clone();
+                    let y = args[1].as_tensor()?.clone();
+                    let params = ctx.own_params().wait()?.tensor()?;
+                    let (loss, g) = grad(&params, &x, &y)?;
+                    drop(params);
+                    Ok(Value::List(vec![
+                        Value::Tensor(Tensor::scalar_f32(loss)),
+                        Value::Tensor(g),
+                    ]))
+                })
+            }
+            None => handler(|ctx, args| {
+                let x = args[0].as_tensor()?.clone();
+                let y = args[1].as_tensor()?.clone();
+                ctx.grad(x, y).wait()
+            }),
+        };
         // SVGD_FOLLOW: apply params -= lr * update on own device.
         let svgd_follow = handler(|ctx, args| {
             let lr = args[0].f32()?;
@@ -86,16 +145,37 @@ impl Svgd {
             ctx.axpy_params(-lr, update).wait()
         });
 
+        // PREDICT (native only): forward on own params, vote-ready (the
+        // one-hot/mean convention of `eval::accumulate_prediction`).
+        let predict = native.as_ref().map(|(_, forward, _)| {
+            let forward = forward.clone();
+            handler(move |ctx, args| {
+                let x = args[0].as_tensor()?.clone();
+                let classify = ctx.model().task == "classify";
+                let params = ctx.own_params().wait()?.tensor()?;
+                let mut acc = None;
+                eval::accumulate_prediction(&mut acc, forward(&params, &x)?, classify);
+                eval::finalize_mean(acc, 1, classify)
+                    .map(Value::Tensor)
+                    .ok_or_else(|| PushError::new("PREDICT produced nothing"))
+            })
+        });
+
         let follower_table = || {
-            [
+            let mut t = vec![
                 ("SVGD_STEP".to_string(), svgd_step.clone()),
                 ("SVGD_FOLLOW".to_string(), svgd_follow.clone()),
-            ]
-            .into_iter()
-            .collect()
+            ];
+            if let Some(p) = &predict {
+                t.push(("PREDICT".to_string(), p.clone()));
+            }
+            t.into_iter().collect()
         };
-        let followers = pd.p_create_n(cfg.particles - 1, |_| CreateOpts {
+        let init_fn = native.as_ref().map(|(_, _, i)| i.clone());
+        let follower_init = init_fn.clone();
+        let followers = pd.p_create_n(cfg.particles - 1, |i| CreateOpts {
             receive: follower_table(),
+            init_params: follower_init.as_ref().map(|f| f(i + 1)),
             ..CreateOpts::default()
         })?;
 
@@ -105,6 +185,7 @@ impl Svgd {
         let fls = followers.clone();
         let artifact = if cfg.force_native { None } else { pd.svgd_artifact(cfg.particles) };
         let lcfg = cfg.clone();
+        let leader_grad = native.as_ref().map(|(g, _, _)| g.clone());
         let svgd_batch = handler(move |ctx, args| {
             let x = args[0].as_tensor()?.clone();
             let y = args[1].as_tensor()?.clone();
@@ -117,7 +198,6 @@ impl Svgd {
             //    Futures and the join aggregate are dropped before the
             //    prior term so the extracted gradients are uniquely owned
             //    and the axpy below mutates in place.
-            let own = ctx.grad(x.clone(), y.clone());
             let step_futs = ctx.broadcast(
                 &fls,
                 "SVGD_STEP",
@@ -126,12 +206,23 @@ impl Svgd {
             let step_joined = PFuture::join_all(&step_futs);
             let mut losses = Vec::with_capacity(n);
             let mut grads: Vec<Tensor> = Vec::with_capacity(n);
-            {
-                let mut lg = own.wait()?.list()?;
-                losses.push(lg[0].as_tensor()?.scalar());
-                grads.push(lg.remove(1).tensor()?);
+            match &leader_grad {
+                // Native: the leader's own (loss, grad) comes straight
+                // from the closure while the broadcast is in flight; the
+                // params snapshot drops with the arm.
+                Some(g) => {
+                    let params = ctx.own_params().wait()?.tensor()?;
+                    let (loss, grad) = g(&params, &x, &y)?;
+                    losses.push(loss);
+                    grads.push(grad);
+                }
+                None => {
+                    let own = ctx.grad(x.clone(), y.clone());
+                    let mut lg = own.wait()?.list()?;
+                    losses.push(lg[0].as_tensor()?.scalar());
+                    grads.push(lg.remove(1).tensor()?);
+                }
             }
-            drop(own);
             let gathered_steps = step_joined.wait()?;
             drop(step_joined);
             drop(step_futs);
@@ -238,10 +329,11 @@ impl Svgd {
         let leader = pd.p_create(CreateOpts {
             device: Some(0),
             receive: leader_table,
+            init_params: init_fn.map(|f| f(0)),
             ..CreateOpts::default()
         })?;
 
-        Ok(Svgd { pd, leader, followers, cfg })
+        Ok(Svgd { pd, leader, followers, cfg, native: is_native })
     }
 
     pub fn pd(&self) -> &PushDist {
@@ -294,8 +386,22 @@ impl Infer for Svgd {
         Ok(report)
     }
 
+    /// Posterior-mean prediction: AOT `mean_forward` for artifact models;
+    /// for native models, summed class votes (classify) or averaged
+    /// particle predictions (regress) via the PREDICT handlers.
     fn predict_mean(&self, x: &Tensor) -> Result<Tensor> {
-        self.pd.mean_forward(&self.pids(), x)
+        let pids = self.pids();
+        if !self.native {
+            return self.pd.mean_forward(&pids, x);
+        }
+        let futs = self.pd.broadcast(&pids, "PREDICT", vec![Value::Tensor(x.clone())]);
+        let joined = PFuture::join_all(&futs);
+        let preds = joined.wait().map_err(|e| anyhow!("{e}"))?.list().map_err(|e| anyhow!("{e}"))?;
+        // Drop the futures before accumulating so the first prediction is
+        // uniquely owned and the axpy chain runs in place.
+        drop(joined);
+        drop(futs);
+        fold_predictions(preds, self.pd.model().task == "classify")
     }
 
     fn nel_stats(&self) -> crate::nel::NelStats {

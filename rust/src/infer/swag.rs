@@ -10,13 +10,16 @@
 //! all particles (classify) or averages predictions (regress) — the §C.4
 //! protocol.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::BatchSource;
+use crate::infer::models::{fold_predictions, native_sgd_step};
+use crate::infer::sgmcmc::ModelSource;
 use crate::infer::{Infer, TrainReport};
-use crate::nel::CreateOpts;
+use crate::nel::{CreateOpts, ParticleCtx};
 use crate::particle::{handler, PFuture, Value};
 use crate::pd::PushDist;
 use crate::runtime::Tensor;
@@ -65,6 +68,46 @@ const K_N: &str = "swag_n";
 const K_MEAN: &str = "swag_mean";
 const K_SQ: &str = "swag_sqmean";
 
+/// Running first/second moment update from the particle's current params —
+/// the O(P) per-step SWAG bookkeeping, shared by the artifact and native
+/// SWAG_STEP handlers.
+fn update_moments(ctx: &ParticleCtx) -> Result<(), crate::PushError> {
+    let params = ctx.own_params().wait()?.tensor()?;
+    let n = match ctx.state_get(K_N) {
+        Some(Value::Usize(n)) => n,
+        _ => 0,
+    };
+    let w_old = n as f32 / (n as f32 + 1.0);
+    let w_new = 1.0 / (n as f32 + 1.0);
+    let mut mean = match ctx.state_take(K_MEAN) {
+        Some(Value::Tensor(t)) => t,
+        _ => Tensor::zeros(params.shape.clone()),
+    };
+    let mut sq = match ctx.state_take(K_SQ) {
+        Some(Value::Tensor(t)) => t,
+        _ => Tensor::zeros(params.shape.clone()),
+    };
+    crate::runtime::tensor::ops::scale_add(&mut mean, w_old, w_new, &params);
+    crate::runtime::tensor::ops::scale_add_sq(&mut sq, w_old, w_new, &params);
+    ctx.state_set(K_MEAN, Value::Tensor(mean));
+    ctx.state_set(K_SQ, Value::Tensor(sq));
+    ctx.state_set(K_N, Value::Usize(n + 1));
+    Ok(())
+}
+
+/// One diagonal-Gaussian posterior draw:
+/// theta = mean + scale * sqrt(max(sq - mean^2, 0)) * eps.
+fn draw_theta(mean: &Tensor, sq: &Tensor, scale: f32, rng: &mut Rng) -> Tensor {
+    let mut theta = mean.clone();
+    let m = mean.as_f32();
+    let s = sq.as_f32();
+    for (i, t) in theta.as_f32_mut().iter_mut().enumerate() {
+        let var = (s[i] - m[i] * m[i]).max(0.0);
+        *t = m[i] + scale * var.sqrt() * rng.normal();
+    }
+    theta
+}
+
 impl MultiSwag {
     pub fn new(pd: PushDist, cfg: SwagConfig) -> Result<MultiSwag> {
         assert!(cfg.particles > 0);
@@ -87,26 +130,7 @@ impl MultiSwag {
             } else {
                 ctx.step(x, y, lr).wait()?
             };
-            let params = ctx.own_params().wait()?.tensor()?;
-            let n = match ctx.state_get(K_N) {
-                Some(Value::Usize(n)) => n,
-                _ => 0,
-            };
-            let w_old = n as f32 / (n as f32 + 1.0);
-            let w_new = 1.0 / (n as f32 + 1.0);
-            let mut mean = match ctx.state_take(K_MEAN) {
-                Some(Value::Tensor(t)) => t,
-                _ => Tensor::zeros(params.shape.clone()),
-            };
-            let mut sq = match ctx.state_take(K_SQ) {
-                Some(Value::Tensor(t)) => t,
-                _ => Tensor::zeros(params.shape.clone()),
-            };
-            crate::runtime::tensor::ops::scale_add(&mut mean, w_old, w_new, &params);
-            crate::runtime::tensor::ops::scale_add_sq(&mut sq, w_old, w_new, &params);
-            ctx.state_set(K_MEAN, Value::Tensor(mean));
-            ctx.state_set(K_SQ, Value::Tensor(sq));
-            ctx.state_set(K_N, Value::Usize(n + 1));
+            update_moments(ctx)?;
             Ok(loss)
         });
         // Posterior-sample prediction: draw, forward, vote/average, restore.
@@ -140,16 +164,7 @@ impl MultiSwag {
             // particle running on a posterior draw.
             let mut failure = None;
             for _ in 0..n_samples {
-                // theta = mean + scale * sqrt(max(sq - mean^2, 0)) * eps
-                let mut theta = mean.clone();
-                {
-                    let m = mean.as_f32();
-                    let s = sq.as_f32();
-                    for (i, t) in theta.as_f32_mut().iter_mut().enumerate() {
-                        let var = (s[i] - m[i] * m[i]).max(0.0);
-                        *t = m[i] + scale * var.sqrt() * rng.normal();
-                    }
-                }
+                let theta = draw_theta(&mean, &sq, scale, &mut rng);
                 let pred = ctx
                     .set_params(theta)
                     .wait()
@@ -180,6 +195,87 @@ impl MultiSwag {
             ]
             .into_iter()
             .collect(),
+            ..CreateOpts::default()
+        })?;
+        Ok(MultiSwag { pd, pids, cfg })
+    }
+
+    /// Multi-SWAG over a [`ModelSource::Native`]: the optimizer is
+    /// closed-form SGD (the `adam` flag is ignored — there is no native
+    /// Adam), the moment bookkeeping is byte-identical to the artifact
+    /// path, and SWAG_PREDICT evaluates each diagonal-Gaussian draw
+    /// directly through the native forward — no set_params/restore
+    /// round-trip, so the resident params never move.
+    pub fn new_native(
+        pd: PushDist,
+        cfg: SwagConfig,
+        source: &ModelSource,
+        init: Arc<dyn Fn(usize) -> Tensor + Send + Sync>,
+    ) -> Result<MultiSwag> {
+        assert!(cfg.particles > 0);
+        let (grad, forward) = match source {
+            ModelSource::Native { grad, forward, .. } => (grad.clone(), forward.clone()),
+            ModelSource::Artifact => {
+                return Err(anyhow!("MultiSwag::new_native needs a native model source"))
+            }
+        };
+        let sgrad = grad.clone();
+        let step = handler(move |ctx, args| {
+            let (x, y) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone());
+            let lr = args[2].f32()?;
+            let loss = native_sgd_step(ctx, &sgrad, &x, &y, lr)?;
+            Ok(Value::Tensor(Tensor::scalar_f32(loss)))
+        });
+        let swag_step = handler(move |ctx, args| {
+            let (x, y) = (args[0].as_tensor()?.clone(), args[1].as_tensor()?.clone());
+            let lr = args[2].f32()?;
+            let loss = native_sgd_step(ctx, &grad, &x, &y, lr)?;
+            update_moments(ctx)?;
+            Ok(Value::Tensor(Tensor::scalar_f32(loss)))
+        });
+        let swag_predict = handler(move |ctx, args| {
+            let x = args[0].as_tensor()?.clone();
+            let n_samples = args[1].usize()?;
+            let scale = args[2].f32()?;
+            let seed = args[3].usize()? as u64;
+            let classify = ctx.model().task == "classify";
+
+            let current = ctx.own_params().wait()?.tensor()?;
+            let (mean, sq) = match (ctx.state_get(K_MEAN), ctx.state_get(K_SQ)) {
+                (Some(Value::Tensor(m)), Some(Value::Tensor(s))) => (m, s),
+                // No moments collected: fall back to the current params
+                // (pretrain-only particle == plain ensemble member).
+                _ => (current.clone(), {
+                    let mut s = current.clone();
+                    let b = current.as_f32();
+                    for (si, bi) in s.as_f32_mut().iter_mut().zip(b) {
+                        *si = bi * bi;
+                    }
+                    s
+                }),
+            };
+            drop(current);
+            let mut rng = Rng::new(seed).fold_in(ctx.pid.0 as u64);
+            let mut acc: Option<Tensor> = None;
+            for _ in 0..n_samples {
+                let theta = draw_theta(&mean, &sq, scale, &mut rng);
+                let pred = forward(&theta, &x)?;
+                crate::infer::eval::accumulate_prediction(&mut acc, pred, classify);
+            }
+            crate::infer::eval::finalize_mean(acc, n_samples, classify)
+                .map(Value::Tensor)
+                .ok_or_else(|| crate::PushError::new("n_samples == 0"))
+        });
+
+        let pids = pd.p_create_n(cfg.particles, |i| CreateOpts {
+            receive: [
+                ("STEP".to_string(), step.clone()),
+                ("SWAG_STEP".to_string(), swag_step.clone()),
+                ("SWAG_PREDICT".to_string(), swag_predict.clone()),
+            ]
+            .into_iter()
+            .collect(),
+            init_params: Some(init(i)),
             ..CreateOpts::default()
         })?;
         Ok(MultiSwag { pd, pids, cfg })
@@ -237,22 +333,7 @@ impl MultiSwag {
         // axpy chain runs in place.
         drop(joined);
         drop(futs);
-        let mut acc: Option<Tensor> = None;
-        for p in preds {
-            let t = p.tensor().map_err(|e| anyhow!("{e}"))?;
-            match &mut acc {
-                None => acc = Some(t),
-                Some(a) => crate::runtime::tensor::ops::axpy(a, 1.0, &t),
-            }
-        }
-        let mut out = acc.unwrap();
-        if self.pd.model().task != "classify" {
-            let n = self.pids.len() as f32;
-            for v in out.as_f32_mut() {
-                *v /= n;
-            }
-        }
-        Ok(out)
+        fold_predictions(preds, self.pd.model().task == "classify")
     }
 }
 

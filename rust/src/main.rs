@@ -4,7 +4,7 @@
 //! push info                          manifest + runtime summary
 //! push train  --model M --method A   train one configuration
 //! push serve                         train WHILE serving posterior queries
-//! push bench  fig4|fig7|table1|table2|table3|table4|stress
+//! push bench  fig4|fig7|table1|table2|table3|table4|native-acc|stress
 //! push trace                         two-particle Figure-3b timeline
 //! ```
 //!
@@ -36,7 +36,6 @@ use push::particle::{handler, Value};
 use push::pd::{FabricConfig, Topology, TransportKind};
 use push::runtime::{artifacts_dir, Manifest};
 use push::util::flags::Flags;
-use push::util::rng::Rng;
 use push::{NelConfig, PushDist, Tensor};
 
 const USAGE: &str = "\
@@ -57,15 +56,25 @@ USAGE:
              [--deadline-ms MS] [--retries N] [--max-inflight N]
              [--nodes N] [--transport inproc|tcp]
              [--heartbeat-every MS] [--dead-after MS] [... chain options]
-  push bench <fig4|fig7|table1|table2|table3|table4|stress|ablate>
+  push bench <fig4|fig7|table1|table2|table3|table4|native-acc|stress|ablate>
              [--devices 1,2,4] [--particles 1,2,4,8] [--batches B]
              [--epochs E] [--no-baseline] [--full] [--cache N] [--seed N]
+             [--models a,b,c] [--algo <method>]   (figures/tables only)
   push trace [--model <name>]
+
+Native models: linear_native, mlp_native, conv1d_native, and
+linear_spiral_native are built in — closed-form grad/forward closures,
+no artifacts, no PJRT — and train under every --algo, checkpoint,
+migrate, and serve exactly like artifact models. `push bench native-acc`
+runs the hermetic model x algorithm accuracy matrix the CI accuracy gate
+checks. --models swaps a figure/table's model list (an all-native list
+needs no artifacts); --algo picks the depth/width tables' method
+(default multi_swag).
 
 Serving: --serve-every N refreshes a PosteriorServer snapshot every N
 epochs during `push train` (sgld/sghmc on a native model) and answers a
 posterior-predictive probe from it. `push serve` is the full demo: it
-trains the hermetic linear_native model through a prefetching loader
+trains a hermetic native model through a prefetching loader
 while --clients C threads hammer predict_mean concurrently — queries are
 answered from versioned reservoir snapshots and never pause training.
 
@@ -73,8 +82,8 @@ Distributed NEL: --nodes N splits particles across N nodes (each with its
 own NEL, scheduler, and --devices devices). --transport tcp runs every
 node behind a real socket — hermetic 127.0.0.1 loopback servers, or the
 addresses in $PUSH_NODES (host:port,host:port — launched via the node
-worker). sgld/sghmc span nodes; --model linear_native trains the
-closed-form linear model with no artifacts at all.
+worker). sgld/sghmc span nodes; native models train their closed-form
+grad/forward on every node with no artifacts at all.
 
 Serving under failure: a refresh is ONE batched SnapshotNode frame per
 node, bounded by --deadline-ms (0 = wait for the transport) and retried
@@ -123,28 +132,24 @@ fn run() -> Result<()> {
     }
 }
 
-/// The hermetic built-in model: closed-form linear least squares over a
-/// flat weight vector (no artifacts, no PJRT) — the same ModelSpec shape
-/// the sgmcmc tests use. Trains only via sgld/sghmc (whose native
-/// ModelSource supplies grad/forward closures).
-const NATIVE_D: usize = 8;
-const NATIVE_BATCH: usize = 16;
-
-fn native_linear_manifest() -> Manifest {
-    push::infer::sgmcmc::linear_native_manifest(NATIVE_D, NATIVE_BATCH)
-}
-
-/// Deterministic per-particle init for the native model: keyed by
-/// (seed, particle index), so runs reproduce across node counts.
-fn native_init(seed: u64, i: usize) -> Tensor {
-    Tensor::f32(vec![NATIVE_D], Rng::new(seed ^ 0x1217).fold_in(i as u64).normal_vec(NATIVE_D))
-}
-
+/// Registered native models (linear/MLP/conv — `infer::models`) are fully
+/// hermetic: closed-form grad/forward closures over a flat weight vector,
+/// no artifacts, no PJRT. Their manifest is built in-process; everything
+/// else reads the AOT artifact manifest from disk.
 fn load_manifest(model_name: &str) -> Result<Manifest> {
-    if model_name == "linear_native" {
-        Ok(native_linear_manifest())
+    if push::infer::native_model(model_name).is_some() {
+        Ok(push::infer::native_manifest())
     } else {
         Manifest::load(artifacts_dir())
+    }
+}
+
+/// Classify tasks probe posterior-predictive accuracy, regression MSE.
+fn probe_metric(pred: &Tensor, y: &Tensor, classify: bool) -> String {
+    if classify {
+        format!("probe acc {:.1}%", 100.0 * eval::batch_accuracy(pred, y))
+    } else {
+        format!("probe mse {:.4}", eval::batch_mse(pred, y))
     }
 }
 
@@ -251,9 +256,6 @@ fn train(flags: &Flags) -> Result<()> {
     if topology.nodes > 1 && method == Method::Svgd {
         bail!("--nodes > 1 does not support svgd (its leader messages followers directly)");
     }
-    if model_name == "linear_native" && !is_sgmcmc {
-        bail!("--model linear_native trains via --algo sgld|sghmc (closed-form native model)");
-    }
     // Validate BEFORE building the fabric: serving reads SGMCMC reservoirs
     // through a native forward, so the non-sgmcmc case can never serve.
     if serve_every > 0 && !is_sgmcmc {
@@ -282,6 +284,7 @@ fn train(flags: &Flags) -> Result<()> {
     let pd =
         PushDist::with_topology_and_fabric(&manifest, model_name, cfg, &topology, &fabric_cfg)?;
     let model = pd.model().clone();
+    let classify = model.task == "classify";
     let lr = flags
         .f64("lr")
         .map_err(anyhow::Error::msg)?
@@ -308,17 +311,44 @@ fn train(flags: &Flags) -> Result<()> {
         topology.nodes,
         if tcp { "tcp" } else { "inproc" },
     );
+    // Registered native models swap the artifact plane for closed-form
+    // closures; every family has a `new_native` twin, so any native model
+    // trains under any --algo.
+    let native = push::infer::native_model(model_name);
     let mut server: Option<PosteriorServer> = None;
     let mut algo: Box<dyn Infer> = match method {
-        Method::Ensemble => Box::new(DeepEnsemble::new(pd, particles, lr)?),
-        Method::MultiSwag => Box::new(MultiSwag::new(
-            pd,
-            SwagConfig { particles, lr, ..SwagConfig::default() },
-        )?),
-        Method::Svgd => Box::new(Svgd::new(
-            pd,
-            SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() },
-        )?),
+        Method::Ensemble => match &native {
+            Some(nm) => Box::new(DeepEnsemble::new_native(
+                pd,
+                particles,
+                lr,
+                &nm.source,
+                nm.seeded_init(seed),
+            )?),
+            None => Box::new(DeepEnsemble::new(pd, particles, lr)?),
+        },
+        Method::MultiSwag => {
+            let swag_cfg = SwagConfig { particles, lr, ..SwagConfig::default() };
+            match &native {
+                Some(nm) => Box::new(MultiSwag::new_native(
+                    pd,
+                    swag_cfg,
+                    &nm.source,
+                    nm.seeded_init(seed),
+                )?),
+                None => Box::new(MultiSwag::new(pd, swag_cfg)?),
+            }
+        }
+        Method::Svgd => {
+            let svgd_cfg =
+                SvgdConfig { particles, lr, lengthscale: 10.0, ..SvgdConfig::default() };
+            match &native {
+                Some(nm) => {
+                    Box::new(Svgd::new_native(pd, svgd_cfg, &nm.source, nm.seeded_init(seed))?)
+                }
+                None => Box::new(Svgd::new(pd, svgd_cfg)?),
+            }
+        }
         Method::Sgld | Method::Sghmc => {
             let algo =
                 if method == Method::Sgld { SgmcmcAlgo::Sgld } else { SgmcmcAlgo::Sghmc };
@@ -339,11 +369,11 @@ fn train(flags: &Flags) -> Result<()> {
                 seed,
                 ..SgmcmcConfig::default()
             };
-            if model_name == "linear_native" {
+            if let Some(nm) = &native {
                 // fully hermetic: native closed-form grad/forward plus
                 // explicit init parameters — no artifacts on any node
-                chain_cfg.model = push::infer::sgmcmc::linear_native_model();
-                chain_cfg.init = Some(Arc::new(move |i| native_init(seed, i)));
+                chain_cfg.model = nm.source.clone();
+                chain_cfg.init = Some(nm.seeded_init(seed));
             }
             let m = SgMcmc::new(pd, chain_cfg)?.with_recovery(recover);
             if serve_every > 0 {
@@ -377,12 +407,11 @@ fn train(flags: &Flags) -> Result<()> {
                         };
                         match srv.predict_mean(&probe.x) {
                             Ok(pred) => println!(
-                                "  serve: snapshot @epoch {} ({} chains, {} samples{stale}) \
-                                 probe mse {:.4}",
+                                "  serve: snapshot @epoch {} ({} chains, {} samples{stale}) {}",
                                 e + 1,
                                 snap.chains.len(),
                                 snap.total_samples(),
-                                eval::batch_mse(&pred, &probe.y),
+                                probe_metric(&pred, &probe.y, classify),
                             ),
                             Err(err) => println!("  serve: snapshot @epoch {} — {err}", e + 1),
                         }
@@ -453,17 +482,20 @@ fn train(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// Train the hermetic linear_native model WHILE serving posterior
-/// predictions: `--clients C` threads hammer `PosteriorServer::predict_mean`
-/// against epoch-stamped reservoir snapshots as training steps — the
+/// Train a hermetic native model WHILE serving posterior predictions:
+/// `--clients C` threads hammer `PosteriorServer::predict_mean` against
+/// epoch-stamped reservoir snapshots as training steps — the
 /// pipelined-data + serving demo (DESIGN.md §10). Works over every
 /// transport (`--nodes`/`--transport` as in train); queries are answered
 /// on the client threads, never through the scheduler.
 fn serve(flags: &Flags) -> Result<()> {
     let model_name = flags.str_or("model", "linear_native");
-    if model_name != "linear_native" {
-        bail!("push serve is hermetic: only --model linear_native has a native forward");
-    }
+    let nm = push::infer::native_model(&model_name).ok_or_else(|| {
+        anyhow!(
+            "push serve is hermetic: --model must be a native model ({})",
+            push::infer::NATIVE_MODEL_NAMES.join("|")
+        )
+    })?;
     let algo_name = flags.str_or("algo", "sgld");
     let method = Method::parse(&algo_name)
         .filter(|m| matches!(*m, Method::Sgld | Method::Sghmc))
@@ -522,8 +554,8 @@ fn serve(flags: &Flags) -> Result<()> {
         thin: flags.usize_or("thin", 1).map_err(anyhow::Error::msg)?,
         max_samples: flags.usize_or("samples", 32).map_err(anyhow::Error::msg)?,
         seed,
-        model: push::infer::sgmcmc::linear_native_model(),
-        init: Some(Arc::new(move |i| native_init(seed, i))),
+        model: nm.source.clone(),
+        init: Some(nm.seeded_init(seed)),
         ..SgmcmcConfig::default()
     };
     let mut algo = SgMcmc::new(pd, chain_cfg)?;
@@ -661,14 +693,20 @@ fn serve(flags: &Flags) -> Result<()> {
             final_snap.staleness.epoch_lag
         );
     }
+    let classify = model.task == "classify";
     match server.predict_mean(&probe.x) {
+        // predictive_std is regression-only by design (class votes have no
+        // per-point spread), so classify tasks report the vote accuracy.
+        Ok(pred) if classify => {
+            println!("final snapshot: {}", probe_metric(&pred, &probe.y, true));
+        }
         Ok(pred) => {
             let spread = server.predictive_std(&probe.x)?;
             let mean_std = spread.as_f32().iter().map(|v| *v as f64).sum::<f64>()
                 / spread.element_count() as f64;
             println!(
-                "final snapshot: probe mse {:.4}, mean epistemic std {mean_std:.4}",
-                eval::batch_mse(&pred, &probe.y),
+                "final snapshot: {}, mean epistemic std {mean_std:.4}",
+                probe_metric(&pred, &probe.y, false),
             );
         }
         Err(err) => println!("final snapshot answered no queries: {err}"),
@@ -720,38 +758,85 @@ fn bench(flags: &Flags) -> Result<()> {
         .get(1)
         .map(String::as_str)
         .ok_or_else(|| {
-            anyhow!("bench needs a target (fig4|fig7|table1|table2|table3|table4|stress)")
+            anyhow!("bench needs a target (fig4|fig7|table1..table4|native-acc|stress|ablate)")
         })?;
-    let manifest = Manifest::load(artifacts_dir())?;
+    // Hermetic native-model matrix: every native model x every family,
+    // no artifacts required — this is what the CI accuracy gate runs, so
+    // it must not touch the artifact manifest at all.
+    if which == "native-acc" {
+        let mut o = accuracy::AccOpts::native();
+        o.devices = flags.usize_or("devices-n", o.devices).map_err(anyhow::Error::msg)?;
+        o.batches = flags.usize_or("batches", o.batches).map_err(anyhow::Error::msg)?;
+        o.epochs = flags.usize_or("epochs", o.epochs).map_err(anyhow::Error::msg)?;
+        o.pretrain_epochs = (o.epochs * 7) / 10;
+        o.seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
+        let report = accuracy::run_native(&o)?;
+        report.print();
+        let path = report.save(results_dir())?;
+        println!("\nsaved {path:?}");
+        return Ok(());
+    }
+    // --models a,b,c overrides a figure/table's model list. An all-native
+    // list runs against the hermetic in-process manifest (no artifacts);
+    // mixing native and artifact models has no single manifest to run on.
+    let models: Option<Vec<String>> = flags.str("models").map(|s| {
+        s.split(',').map(|m| m.trim().to_string()).filter(|m| !m.is_empty()).collect()
+    });
+    let n_native = models
+        .as_ref()
+        .map(|ms| ms.iter().filter(|m| push::infer::native_model(m).is_some()).count())
+        .unwrap_or(0);
+    let all_native = models.as_ref().map(|ms| n_native == ms.len()).unwrap_or(false);
+    if n_native > 0 && !all_native {
+        bail!("--models mixes native and artifact models; run them as separate invocations");
+    }
+    let manifest =
+        if all_native { push::infer::native_manifest() } else { Manifest::load(artifacts_dir())? };
     let opts = scale_opts(flags)?;
     let full = flags.has("full");
+    let figure_archs = |defaults: &[&str]| -> Vec<String> {
+        models.clone().unwrap_or_else(|| defaults.iter().map(|s| s.to_string()).collect())
+    };
+    let sweep_rows = |defaults: Vec<depth_width::SweepRow>| -> Vec<depth_width::SweepRow> {
+        match &models {
+            Some(ms) => ms
+                .iter()
+                .map(|m| depth_width::SweepRow { model: m.clone(), base_particles: 4 })
+                .collect(),
+            None => defaults,
+        }
+    };
+    // the depth/width tables default to the paper's multi-SWAG protocol
+    let dw_method = match flags.str("algo").or_else(|| flags.str("method")) {
+        Some(a) => Method::parse(a)
+            .ok_or_else(|| anyhow!("--algo must be ensemble|multi_swag|svgd|sgld|sghmc"))?,
+        None => Method::MultiSwag,
+    };
 
     let report = match which {
-        "fig4" => scaling::run_figure(
-            &manifest,
-            "fig4_scaling",
-            &["vit_fig4", "cgcnn_fig4", "unet_fig4"],
-            &Method::all(),
-            &opts,
-        )?,
-        "fig7" => scaling::run_figure(
-            &manifest,
-            "fig7_scaling",
-            &["resnet_fig7", "schnet_fig7"],
-            &Method::all(),
-            &opts,
-        )?,
+        "fig4" => {
+            let archs = figure_archs(&["vit_fig4", "cgcnn_fig4", "unet_fig4"]);
+            let archs: Vec<&str> = archs.iter().map(String::as_str).collect();
+            scaling::run_figure(&manifest, "fig4_scaling", &archs, &Method::all(), &opts)?
+        }
+        "fig7" => {
+            let archs = figure_archs(&["resnet_fig7", "schnet_fig7"]);
+            let archs: Vec<&str> = archs.iter().map(String::as_str).collect();
+            scaling::run_figure(&manifest, "fig7_scaling", &archs, &Method::all(), &opts)?
+        }
         "table1" => depth_width::run(
             &manifest,
             "table1_depth",
-            &depth_width::table1_rows(),
+            &sweep_rows(depth_width::table1_rows()),
+            dw_method,
             &opts.devices.clone(),
             &opts,
         )?,
         "table2" => depth_width::run(
             &manifest,
             "table2_width",
-            &depth_width::table2_rows(full),
+            &sweep_rows(depth_width::table2_rows(full)),
+            dw_method,
             &opts.devices.clone(),
             &opts,
         )?,

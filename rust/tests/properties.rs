@@ -610,3 +610,198 @@ fn checkpoint_state_section_uses_the_shared_wire_codec_bytes() {
     assert_eq!(Checkpoint::load(&path).unwrap(), ck);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ------------------------------------------------- native model gradcheck
+
+fn native_loss(
+    src: &push::infer::ModelSource,
+    params: &Tensor,
+    x: &Tensor,
+    y: &Tensor,
+) -> f32 {
+    let push::infer::ModelSource::Native { grad, .. } = src else { panic!("native source") };
+    grad(params, x, y).expect("native loss").0
+}
+
+fn native_grad(
+    src: &push::infer::ModelSource,
+    params: &Tensor,
+    x: &Tensor,
+    y: &Tensor,
+) -> Tensor {
+    let push::infer::ModelSource::Native { grad, .. } = src else { panic!("native source") };
+    grad(params, x, y).expect("native grad").1
+}
+
+/// Central finite difference vs the closed-form gradient at every (or a
+/// random subset of) parameter coordinates. The caller guarantees the
+/// probe step cannot cross a ReLU kink (margin search below).
+fn gradcheck_native(
+    label: &str,
+    src: &push::infer::ModelSource,
+    params: &Tensor,
+    x: &Tensor,
+    y: &Tensor,
+    rng: &mut Rng,
+) {
+    let h = 1e-3f32;
+    let g = native_grad(src, params, x, y);
+    let gs = g.as_f32().to_vec();
+    let n = gs.len();
+    let probes: Vec<usize> = if n <= 24 {
+        (0..n).collect()
+    } else {
+        (0..24).map(|_| rng.below(n)).collect()
+    };
+    for j in probes {
+        let mut plus = params.clone();
+        plus.as_f32_mut()[j] += h;
+        let mut minus = params.clone();
+        minus.as_f32_mut()[j] -= h;
+        let fd = (native_loss(src, &plus, x, y) - native_loss(src, &minus, x, y)) / (2.0 * h);
+        let tol = 5e-3 + 0.05 * gs[j].abs();
+        assert!(
+            (fd - gs[j]).abs() <= tol,
+            "{label}: param {j}: analytic {} vs central-difference {fd}",
+            gs[j]
+        );
+    }
+}
+
+#[test]
+fn prop_native_mlp_gradcheck_matches_finite_difference() {
+    use push::infer::{models, Activation, MlpSpec};
+    let b = 4usize;
+    for depth in 1..=3usize {
+        for act in [Activation::Relu, Activation::Tanh] {
+            for classify in [false, true] {
+                let spec =
+                    MlpSpec { in_dim: 3, hidden: 4, depth, out_dim: 2, activation: act };
+                let src = models::mlp_model(spec);
+                let salt = depth as u64 * 16
+                    + u64::from(act == Activation::Tanh) * 4
+                    + u64::from(classify) * 2;
+                // ReLU: redraw until every hidden pre-activation clears the
+                // kink by far more than the probe step can move it; tanh is
+                // smooth and accepts the first draw.
+                let mut found = None;
+                for case in 0..200u64 {
+                    let mut r = Rng::new(0x6d6c_7031).fold_in(salt).fold_in(case);
+                    let pv: Vec<f32> =
+                        r.normal_vec(spec.param_count()).iter().map(|v| 0.5 * v).collect();
+                    let params = Tensor::f32(vec![spec.param_count()], pv);
+                    let x = Tensor::f32(vec![b, 3], r.normal_vec(b * 3));
+                    let margin = spec.min_abs_preactivation(&params, &x).unwrap();
+                    if act == Activation::Tanh || margin > 0.05 {
+                        found = Some((params, x, r));
+                        break;
+                    }
+                }
+                let (params, x, mut r) = found.expect("a kink-free draw exists in 200 cases");
+                let y = if classify {
+                    Tensor::i32(vec![b], (0..b).map(|_| r.below(2) as i32).collect())
+                } else {
+                    Tensor::f32(vec![b, 2], r.normal_vec(b * 2))
+                };
+                let label = format!(
+                    "mlp depth={depth} {} {}",
+                    act.name(),
+                    if classify { "ce" } else { "mse" }
+                );
+                gradcheck_native(&label, &src, &params, &x, &y, &mut r);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_native_conv1d_gradcheck_matches_finite_difference() {
+    use push::infer::{models, Activation, Conv1dSpec};
+    let b = 3usize;
+    let mut shape_rng = Rng::new(0x636f_6e76);
+    for act in [Activation::Relu, Activation::Tanh] {
+        for classify in [false, true] {
+            for case in 0..3u64 {
+                let nx = 8 + shape_rng.below(8);
+                let kernel = 2 + shape_rng.below(4);
+                let channels = 1 + shape_rng.below(3);
+                let out_dim = if classify { 2 } else { 1 + shape_rng.below(2) };
+                let spec = Conv1dSpec { nx, channels, kernel, out_dim, activation: act };
+                let src = models::conv1d_model(spec);
+                let salt = u64::from(act == Activation::Tanh) * 8
+                    + u64::from(classify) * 4
+                    + case;
+                // conv maps have many units, so accept a smaller (still
+                // safely > h * max|x|) kink margin than the MLP check
+                let mut found = None;
+                for draw in 0..400u64 {
+                    let mut r = Rng::new(0x6376_3164).fold_in(salt).fold_in(draw);
+                    let pv: Vec<f32> =
+                        r.normal_vec(spec.param_count()).iter().map(|v| 0.5 * v).collect();
+                    let params = Tensor::f32(vec![spec.param_count()], pv);
+                    let x = Tensor::f32(vec![b, nx], r.normal_vec(b * nx));
+                    let margin = spec.min_abs_preactivation(&params, &x).unwrap();
+                    if act == Activation::Tanh || margin > 0.02 {
+                        found = Some((params, x, r));
+                        break;
+                    }
+                }
+                let (params, x, mut r) = found.expect("a kink-free draw exists in 400 cases");
+                let y = if classify {
+                    Tensor::i32(vec![b], (0..b).map(|_| r.below(out_dim) as i32).collect())
+                } else {
+                    Tensor::f32(vec![b, out_dim], r.normal_vec(b * out_dim))
+                };
+                let label = format!(
+                    "conv1d nx={nx} k={kernel} c={channels} o={out_dim} {} {}",
+                    act.name(),
+                    if classify { "ce" } else { "mse" }
+                );
+                gradcheck_native(&label, &src, &params, &x, &y, &mut r);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_registered_native_models_pass_gradcheck() {
+    // The three REGISTERED wire names (fixed architectures) must satisfy
+    // the same finite-difference contract as the anonymous specs above —
+    // this is the acceptance gate for the model/wire/checkpoint seam.
+    for name in ["mlp_native", "linear_spiral_native", "conv1d_native"] {
+        let nm = push::infer::native_model(name).unwrap();
+        let spec = &nm.spec;
+        // a tiny probe batch keeps the unit count low enough that a
+        // kink-free ReLU draw exists with decent probability per attempt
+        let b = if name == "conv1d_native" { 1 } else { 3 };
+        let d: usize = spec.x_shape[1..].iter().product();
+        let mut found = None;
+        for case in 0..400u64 {
+            let mut r = Rng::new(0x7265_6734).fold_in(case);
+            let params = nm.init_params(case, 0);
+            let x = Tensor::f32(vec![b, d], r.normal_vec(b * d));
+            let margin = match name {
+                "conv1d_native" => {
+                    push::infer::models::CONV1D_NATIVE.min_abs_preactivation(&params, &x).unwrap()
+                }
+                "mlp_native" => {
+                    push::infer::models::MLP_NATIVE.min_abs_preactivation(&params, &x).unwrap()
+                }
+                // depth 0: no hidden units, no kinks
+                _ => f32::INFINITY,
+            };
+            if margin > 0.02 {
+                found = Some((params, x, r));
+                break;
+            }
+        }
+        let (params, x, mut r) = found.expect("a kink-free draw exists in 400 cases");
+        let y = if spec.task == "classify" {
+            Tensor::i32(vec![b], (0..b).map(|_| r.below(2) as i32).collect())
+        } else {
+            let yn: usize = spec.y_shape[1..].iter().product();
+            Tensor::f32(vec![b, yn], r.normal_vec(b * yn))
+        };
+        gradcheck_native(name, &nm.source, &params, &x, &y, &mut r);
+    }
+}

@@ -139,6 +139,65 @@ fn two_node_tcp_sghmc_with_noise_is_placement_invariant() {
     }
 }
 
+#[test]
+fn two_node_tcp_mlp_native_sgld_matches_single_node() {
+    // same bar as the linear test, but through the registered-model seam:
+    // "mlp_native" crosses the wire as a NAME and every node rebuilds the
+    // closed-form MLP grad/forward closures locally via the registry
+    let n = 3;
+    let nm = push::infer::native_model("mlp_native").unwrap();
+    let bsz = nm.spec.batch();
+    let data = synth::spiral(bsz * 4, 1.5, 0.02, 31);
+    let batches = DataLoader::new(data, bsz, false, 0).epoch();
+
+    let run = |nodes: usize, transport: TransportKind| -> BTreeMap<Pid, Tensor> {
+        let cfg = NelConfig {
+            num_devices: 2,
+            cache_size: 4,
+            cost: CostModel::free(),
+            control_workers: 2,
+            seed: 7,
+            ..NelConfig::default()
+        };
+        let pd = PushDist::with_topology(
+            &push::infer::native_manifest(),
+            "mlp_native",
+            cfg,
+            &Topology { nodes, transport },
+        )
+        .unwrap();
+        let algo = SgMcmc::new(
+            pd,
+            SgmcmcConfig {
+                particles: n,
+                algo: SgmcmcAlgo::Sgld,
+                schedule: Schedule::Constant { eps: 5e-2 },
+                temperature: 0.0,
+                friction: 0.2,
+                burn_in: 1,
+                thin: 1,
+                max_samples: 8,
+                prior_std: Some(10.0),
+                seed: 33,
+                model: nm.source.clone(),
+                init: Some(nm.seeded_init(77)),
+            },
+        )
+        .unwrap();
+        for b in &batches {
+            algo.step_all(&b.x, &b.y).unwrap();
+        }
+        algo.pd().drain_params().unwrap()
+    };
+
+    let local = run(1, TransportKind::InProc);
+    let tcp = run(2, TransportKind::TcpLoopback);
+    assert_eq!(local.len(), n);
+    for (pid, want) in &local {
+        assert_eq!(&tcp[pid], want, "{pid}: mlp_native diverged across the tcp fabric");
+    }
+}
+
 // ---- frame batching ------------------------------------------------------
 
 #[test]

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Native-model accuracy gate (CI).
+
+Checks a fresh `push bench native-acc` run (the JSON saved under
+bench_results/) against the thresholds committed in ACC_GATES.json. Every
+entry in its `gates` array addresses one measured row by (model, method)
+and asserts one of three machine-readable forms on `metric`:
+
+    {"model": M, "method": A, "metric": "accuracy", "min": X}
+    {"model": M, "method": A, "metric": "mse", "max": X}
+    {"model": M, "method": A, "metric": "accuracy",
+     "beats": {"model": M2, "method": A2, "margin": D}}
+
+The `beats` form asserts value(M, A) - value(M2, A2) >= D — e.g. the
+spiral MLP posterior must beat the linear control by a fixed margin that a
+linear decision rule provably cannot close (data/synth.rs bounds the best
+linear cut on the 1.5-turn spiral below 80%). Every gated row is a
+hermetic closed-form native model: no artifacts, no PJRT, so this runs on
+a bare CI runner.
+
+Usage: check_accuracy_gates.py ACC_GATES.json bench_results/native_acc.json
+"""
+
+import json
+import sys
+
+
+def row_value(rows, model, method, metric):
+    for r in rows:
+        if r.get("model") == model and r.get("method") == method:
+            return r.get(metric)
+    return None
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        measured = json.load(f)
+
+    gates = baseline.get("gates", [])
+    if not gates:
+        print(f"error: no gates defined in {sys.argv[1]}")
+        return 1
+    rows = measured.get("rows", [])
+
+    failures = []
+    print(f"{'gate':<58} {'value':>8} {'bound':>18}  verdict")
+    for gate in gates:
+        model, method, metric = gate["model"], gate["method"], gate["metric"]
+        label = f"{model}/{method} {metric}"
+        value = row_value(rows, model, method, metric)
+        if value is None:
+            failures.append(f"no measured {metric} row for {model}/{method}")
+            print(f"{label:<58} {'-':>8} {'-':>18}  MISSING")
+            continue
+        value = float(value)
+        if "beats" in gate:
+            b = gate["beats"]
+            margin = float(b["margin"])
+            other = row_value(rows, b["model"], b["method"], metric)
+            if other is None:
+                failures.append(
+                    f"no measured {metric} row for control {b['model']}/{b['method']}"
+                )
+                print(f"{label:<58} {value:>8.2f} {'-':>18}  MISSING CONTROL")
+                continue
+            other = float(other)
+            ok = value - other >= margin
+            bound = f">= {b['method']}+{margin:g}"
+            print(f"{label:<58} {value:>8.2f} {bound:>18}  {'ok' if ok else 'FAILED'}")
+            if not ok:
+                failures.append(
+                    f"{model}/{method} {metric} {value:.2f} does not beat "
+                    f"{b['model']}/{b['method']} ({other:.2f}) by {margin:g}"
+                )
+        elif "min" in gate:
+            lo = float(gate["min"])
+            ok = value >= lo
+            print(f"{label:<58} {value:>8.2f} {'>= %g' % lo:>18}  {'ok' if ok else 'FAILED'}")
+            if not ok:
+                failures.append(f"{model}/{method} {metric} {value:.2f} < required {lo:g}")
+        elif "max" in gate:
+            hi = float(gate["max"])
+            ok = value <= hi
+            print(f"{label:<58} {value:>8.2f} {'<= %g' % hi:>18}  {'ok' if ok else 'FAILED'}")
+            if not ok:
+                failures.append(f"{model}/{method} {metric} {value:.2f} > allowed {hi:g}")
+        else:
+            failures.append(f"gate for {model}/{method} has no min/max/beats clause")
+
+    if failures:
+        print("\naccuracy gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nall {len(gates)} accuracy gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
