@@ -396,6 +396,84 @@ fn main() {
         });
     }
 
+    // ---- kernel plane: scalar reference vs vectorized dispatch ------------
+    // Each pair runs the SAME body; only the dispatch knobs differ —
+    // force_backend(Scalar) + 1 thread vs the widest detected backend +
+    // auto worker shards. Results are bit-identical either way (the
+    // fixed-shape reduction tree, DESIGN.md §14), so the pair isolates
+    // pure dispatch-tier speed; BENCH_l3.json gates simd <= 0.6x scalar.
+    // Without --features simd both legs run the scalar tier (the pool can
+    // still shard), so the gate is only checked on simd builds.
+    {
+        use push::runtime::kernels::{self, Backend};
+        let scalar_knobs = || {
+            kernels::force_backend(Some(Backend::Scalar));
+            kernels::set_threads(1);
+        };
+        let simd_knobs = || {
+            kernels::force_backend(None);
+            kernels::set_threads(0);
+        };
+        let d = 50_000usize;
+        let mut rng = Rng::new(0x51);
+        let x = Tensor::f32(vec![d], rng.normal_vec(d));
+        let mut y = Tensor::f32(vec![d], rng.normal_vec(d));
+        scalar_knobs();
+        run(&mut results, "axpy_50k_scalar", 20, 500, || {
+            ops::axpy(&mut y, 1e-4, &x);
+        });
+        simd_knobs();
+        run(&mut results, "axpy_50k_simd", 20, 500, || {
+            ops::axpy(&mut y, 1e-4, &x);
+        });
+
+        // one row of the 16-particle RBF kernel matrix at SVGD's stacked
+        // shape: 16 sq_dist reductions + 16 fused kernel/repulsion
+        // accumulations over 50k dims (the svgd_update_native inner loop)
+        let n = 16usize;
+        let ps: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+        let gs: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+        let h2 = 10.0f32;
+        let mut rbf_row = move || {
+            let mut u = vec![0.0f32; d];
+            for j in 0..n {
+                let d2 = kernels::sq_dist(&ps[0], &ps[j]);
+                let kij = (-d2 / (2.0 * h2)).exp();
+                kernels::rbf_accum(&mut u, kij, &gs[j], kij / h2, &ps[j], &ps[0]);
+            }
+            black_box(&u);
+        };
+        scalar_knobs();
+        run(&mut results, "rbf_kernel_16x50k_scalar", 5, 60, || rbf_row());
+        simd_knobs();
+        run(&mut results, "rbf_kernel_16x50k_simd", 5, 60, || rbf_row());
+
+        // the full fused MLP grad + drift apply (the per-particle step body
+        // every SGLD/SGHMC round pays on the registered mlp_native spec)
+        use push::infer::ModelSource;
+        let nm = push::infer::native_model("mlp_native").unwrap();
+        let b = nm.spec.batch();
+        let md: usize = nm.spec.x_shape[1..].iter().product();
+        let params = nm.init_params(3, 0);
+        let mx = Tensor::f32(vec![b, md], rng.normal_vec(b * md));
+        let my = Tensor::i32(vec![b], (0..b).map(|_| rng.below(2) as i32).collect());
+        let ModelSource::Native { grad: mgrad, .. } = nm.source.clone() else {
+            unreachable!()
+        };
+        let mut mlp_step = move || {
+            let (_, g) = mgrad(&params, &mx, &my).unwrap();
+            let mut p = params.clone();
+            ops::axpy(&mut p, -0.05, &g);
+            black_box(&p);
+        };
+        scalar_knobs();
+        run(&mut results, "mlp_grad_step_scalar", 20, 500, || mlp_step());
+        simd_knobs();
+        run(&mut results, "mlp_grad_step_simd", 20, 500, || mlp_step());
+        // leave the defaults for every case after this block
+        simd_knobs();
+    }
+
     // ---- native model zoo: closed-form grad/forward bodies (hermetic) -----
     // The per-step cost the CI accuracy-gate job pays: fused
     // affine+activation layers with post-activation caches (MLP) and the
@@ -823,6 +901,21 @@ fn main() {
         }
         let mut top = BTreeMap::new();
         top.insert("bench".to_string(), Json::Str("l3_microbench".to_string()));
+        // compiled feature set: gates in BENCH_l3.json whose
+        // `requires_feature` is absent here are skipped by the checker
+        // (a non-simd build runs both legs of a scalar/simd pair on the
+        // same tier, so its ratio says nothing about the vector path)
+        let mut feats = Vec::new();
+        for (name, on) in [
+            ("simd", cfg!(feature = "simd")),
+            ("pjrt", cfg!(feature = "pjrt")),
+            ("faultinject", cfg!(feature = "faultinject")),
+        ] {
+            if on {
+                feats.push(Json::Str(name.to_string()));
+            }
+        }
+        top.insert("features".to_string(), Json::Arr(feats));
         top.insert("cases".to_string(), Json::Obj(cases));
         std::fs::write(&path, Json::Obj(top).pretty()).expect("writing bench json");
         println!("\nwrote {path}");

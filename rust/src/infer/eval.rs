@@ -8,6 +8,7 @@
 use anyhow::Result;
 
 use crate::data::{BatchSource, DataLoader, Dataset};
+use crate::runtime::kernels;
 use crate::runtime::tensor::ops;
 use crate::runtime::Tensor;
 
@@ -21,14 +22,7 @@ pub fn batch_accuracy(scores: &Tensor, labels: &Tensor) -> f64 {
     let l = labels.as_i32();
     let mut correct = 0usize;
     for i in 0..b {
-        let row = &s[i * c..(i + 1) * c];
-        let mut best = 0;
-        for j in 1..c {
-            if row[j] > row[best] {
-                best = j;
-            }
-        }
-        if best as i32 == l[i] {
+        if kernels::argmax(&s[i * c..(i + 1) * c]) as i32 == l[i] {
             correct += 1;
         }
     }
@@ -55,13 +49,7 @@ pub fn one_hot_votes(logits: &Tensor) -> Tensor {
     let l = logits.as_f32();
     let mut v = vec![0.0f32; b * c];
     for i in 0..b {
-        let row = &l[i * c..(i + 1) * c];
-        let mut best = 0;
-        for j in 1..c {
-            if row[j] > row[best] {
-                best = j;
-            }
-        }
+        let best = kernels::argmax(&l[i * c..(i + 1) * c]);
         v[i * c + best] = 1.0;
     }
     Tensor::f32(vec![b, c], v)
@@ -88,9 +76,7 @@ pub fn finalize_mean(acc: Option<Tensor>, n: usize, classify: bool) -> Option<Te
         return None;
     }
     if !classify {
-        for v in out.as_f32_mut() {
-            *v /= n as f32;
-        }
+        kernels::div_scale(out.as_f32_mut(), n as f32);
     }
     Some(out)
 }

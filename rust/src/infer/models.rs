@@ -43,6 +43,7 @@ use crate::infer::sgmcmc::{
 };
 use crate::nel::ParticleCtx;
 use crate::particle::{PushError, Value};
+use crate::runtime::kernels;
 use crate::runtime::{DType, Manifest, ModelSpec, Tensor};
 use crate::util::rng::Rng;
 
@@ -128,16 +129,14 @@ fn loss_and_delta(
                         "classify loss: label {label} outside 0..{o}"
                     )));
                 }
-                let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-                let mut z = 0.0f32;
-                for &v in row {
-                    z += (v - max).exp();
-                }
-                loss += z.ln() + max - row[label as usize];
+                // softmax through the kernel plane: the row lands in the
+                // delta buffer, is normalized in place, then scaled to the
+                // batch-mean gradient
                 let drow = &mut delta[i * o..(i + 1) * o];
-                for (d, &v) in drow.iter_mut().zip(row) {
-                    *d = (v - max).exp() / z * inv_b;
-                }
+                drow.copy_from_slice(row);
+                let (max, z) = kernels::softmax(drow);
+                loss += z.ln() + max - row[label as usize];
+                kernels::scale(drow, inv_b);
                 drow[label as usize] -= inv_b;
             }
             loss /= b as f32;
@@ -250,19 +249,12 @@ fn mlp_forward_acts(spec: &MlpSpec, params: &[f32], x: &[f32], b: usize) -> (Vec
                 let row = &prev[i * da..(i + 1) * da];
                 let orow = &mut out[i * db..(i + 1) * db];
                 orow.copy_from_slice(bias);
-                for (k, &xk) in row.iter().enumerate() {
-                    let wrow = &w[k * db..(k + 1) * db];
-                    for (o, &wkj) in orow.iter_mut().zip(wrow) {
-                        *o += xk * wkj;
-                    }
-                }
+                kernels::gemv_scatter(orow, row, w);
                 if !last {
                     // fused affine + activation: the pre-activation never
                     // leaves this row buffer
-                    for o in orow.iter_mut() {
-                        margin = margin.min(o.abs());
-                        *o = spec.activation.apply(*o);
-                    }
+                    let m = kernels::act_margin(orow, |v| spec.activation.apply(v));
+                    margin = margin.min(m);
                 }
             }
             out
@@ -304,15 +296,12 @@ fn mlp_loss_grad(
             for i in 0..b {
                 let drow = &delta[i * db..(i + 1) * db];
                 let arow = &a_prev[i * da..(i + 1) * da];
+                // outer-product accumulate: row k of the weight grad gains
+                // a_k · delta (axpy per input unit)
                 for (k, &ak) in arow.iter().enumerate() {
-                    let gwrow = &mut gw[k * db..(k + 1) * db];
-                    for (gkj, &dj) in gwrow.iter_mut().zip(drow) {
-                        *gkj += ak * dj;
-                    }
+                    kernels::axpy(&mut gw[k * db..(k + 1) * db], ak, drow);
                 }
-                for (gbj, &dj) in gb.iter_mut().zip(drow) {
-                    *gbj += dj;
-                }
+                kernels::axpy(gb, 1.0, drow);
             }
         }
         if l > 0 {
@@ -324,7 +313,7 @@ fn mlp_loss_grad(
                 let dp = &mut dprev[i * da..(i + 1) * da];
                 for (k, dk) in dp.iter_mut().enumerate() {
                     let wrow = &w[k * db..(k + 1) * db];
-                    let s: f32 = wrow.iter().zip(drow).map(|(wj, dj)| wj * dj).sum();
+                    let s = kernels::dot(wrow, drow);
                     *dk = s * spec.activation.grad_from_output(arow[k]);
                 }
             }
@@ -441,29 +430,18 @@ fn conv_forward_full(spec: &Conv1dSpec, p: &[f32], x: &[f32], b: usize) -> ConvF
         for ch in 0..c {
             let kern = &w_conv[ch * k..(ch + 1) * k];
             let amap = &mut act[(i * c + ch) * np..(i * c + ch + 1) * np];
-            let mut sum = 0.0f32;
+            // conv at each position: bias + tap dot through the kernel
+            // plane, then one fused activation pass over the channel map
             for (pos, a) in amap.iter_mut().enumerate() {
-                // fused conv + activation at this position
-                let mut z = b_conv[ch];
-                for (&wj, &xj) in kern.iter().zip(&sig[pos..pos + k]) {
-                    z += wj * xj;
-                }
-                margin = margin.min(z.abs());
-                let v = spec.activation.apply(z);
-                *a = v;
-                sum += v;
+                *a = b_conv[ch] + kernels::dot(kern, &sig[pos..pos + k]);
             }
-            pooled[i * c + ch] = sum * inv_np;
+            let m = kernels::act_margin(amap, |v| spec.activation.apply(v));
+            margin = margin.min(m);
+            pooled[i * c + ch] = kernels::sum(amap) * inv_np;
         }
         let orow = &mut out[i * o..(i + 1) * o];
         orow.copy_from_slice(b_head);
-        for ch in 0..c {
-            let wrow = &w_head[ch * o..(ch + 1) * o];
-            let pv = pooled[i * c + ch];
-            for (ov, &wj) in orow.iter_mut().zip(wrow) {
-                *ov += pv * wj;
-            }
-        }
+        kernels::gemv_scatter(orow, &pooled[i * c..(i + 1) * c], w_head);
     }
     ConvForward { out, act, pooled, margin }
 }
@@ -492,30 +470,18 @@ fn conv_loss_grad(
             // head gradient and the pooled delta for this channel
             let pv = fwd.pooled[i * c + ch];
             let wrow = &w_head[ch * o..(ch + 1) * o];
-            let mut dpool = 0.0f32;
-            {
-                let gw_head = &mut g[c * k + c + ch * o..c * k + c + (ch + 1) * o];
-                for ((gj, &dj), &wj) in gw_head.iter_mut().zip(drow).zip(wrow) {
-                    *gj += pv * dj;
-                    dpool += dj * wj;
-                }
-            }
+            kernels::axpy(&mut g[c * k + c + ch * o..c * k + c + (ch + 1) * o], pv, drow);
+            let dpool = kernels::dot(drow, wrow);
             // mean-pool spreads the delta uniformly over positions
             let df = dpool * inv_np;
             let amap = &fwd.act[(i * c + ch) * np..(i * c + ch + 1) * np];
             for (pos, &a) in amap.iter().enumerate() {
                 let dz = df * spec.activation.grad_from_output(a);
                 g[c * k + ch] += dz;
-                let gw_conv = &mut g[ch * k..(ch + 1) * k];
-                for (gj, &xj) in gw_conv.iter_mut().zip(&sig[pos..pos + k]) {
-                    *gj += dz * xj;
-                }
+                kernels::axpy(&mut g[ch * k..(ch + 1) * k], dz, &sig[pos..pos + k]);
             }
         }
-        let gb_head = &mut g[c * k + c + c * o..];
-        for (gj, &dj) in gb_head.iter_mut().zip(drow) {
-            *gj += dj;
-        }
+        kernels::axpy(&mut g[c * k + c + c * o..], 1.0, drow);
     }
     Ok((loss, Tensor::f32(vec![g.len()], g)))
 }
@@ -556,9 +522,7 @@ pub fn native_sgd_step(
     // Release the snapshot BEFORE the apply so axpy_params mutates the
     // resident parameters in place instead of COW-detaching.
     drop(params);
-    for v in u.as_f32_mut() {
-        *v *= -lr;
-    }
+    kernels::scale(u.as_f32_mut(), -lr);
     ctx.axpy_params(1.0, u).wait()?;
     Ok(loss)
 }
@@ -581,9 +545,7 @@ pub fn fold_predictions(preds: Vec<Value>, classify: bool) -> anyhow::Result<Ten
     }
     let mut out = acc.ok_or_else(|| anyhow::anyhow!("predict over zero particles"))?;
     if !classify {
-        for v in out.as_f32_mut() {
-            *v /= n as f32;
-        }
+        kernels::div_scale(out.as_f32_mut(), n as f32);
     }
     Ok(out)
 }

@@ -49,6 +49,7 @@ use crate::nel::{CreateOpts, ParticleCtx};
 use crate::particle::{handler, PFuture, PushError, Value};
 use crate::pd::checkpoint::Checkpoint;
 use crate::pd::PushDist;
+use crate::runtime::kernels;
 use crate::runtime::tensor::ops;
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
@@ -501,9 +502,7 @@ pub fn chain_handler_table(cfg: &SgmcmcConfig) -> crate::particle::HandlerTable 
         //    apply below can put the old momentum back untouched.
         let mut rng = noise_rng(scfg.seed, ctx.pid.0 as u64, t as u64);
         let mut u = grad;
-        for v in u.as_f32_mut() {
-            *v *= -eps;
-        }
+        ops::scale(&mut u, -eps);
         let old_momentum = match scfg.algo {
             SgmcmcAlgo::Sgld => {
                 // u = −ε g + N(0, 2 ε T)
@@ -907,9 +906,7 @@ impl Infer for SgMcmc {
         }
         let mut out = acc.ok_or_else(|| anyhow!("predict over zero particles"))?;
         if !classify {
-            for v in out.as_f32_mut() {
-                *v /= n as f32;
-            }
+            kernels::div_scale(out.as_f32_mut(), n as f32);
         }
         Ok(out)
     }
@@ -979,17 +976,13 @@ pub fn linear_native_model() -> ModelSource {
         let mut loss = 0.0f32;
         for i in 0..b {
             let row = &xs[i * d..(i + 1) * d];
-            let pred: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+            let pred = kernels::dot(row, w);
             let err = pred - ys[i];
             loss += err * err;
-            for (gj, xj) in g.iter_mut().zip(row) {
-                *gj += 2.0 * err * xj;
-            }
+            kernels::axpy(&mut g, 2.0 * err, row);
         }
         let inv_b = 1.0 / b as f32;
-        for gj in g.iter_mut() {
-            *gj *= inv_b;
-        }
+        kernels::scale(&mut g, inv_b);
         Ok((loss * inv_b, Tensor::f32(vec![d], g)))
     });
     let forward: NativeForwardFn = Arc::new(|params, x| {
@@ -1003,9 +996,8 @@ pub fn linear_native_model() -> ModelSource {
         }
         let w = params.as_f32();
         let xs = x.as_f32();
-        let preds: Vec<f32> = (0..b)
-            .map(|i| xs[i * d..(i + 1) * d].iter().zip(w).map(|(a, b)| a * b).sum())
-            .collect();
+        let preds: Vec<f32> =
+            (0..b).map(|i| kernels::dot(&xs[i * d..(i + 1) * d], w)).collect();
         Ok(Tensor::f32(vec![b, 1], preds))
     });
     ModelSource::Native { name: "linear", grad, forward }

@@ -32,6 +32,7 @@ use crate::infer::{eval, Infer, TrainReport};
 use crate::nel::CreateOpts;
 use crate::particle::{handler, PFuture, PushError, Value};
 use crate::pd::PushDist;
+use crate::runtime::kernels;
 use crate::runtime::Tensor;
 use crate::Pid;
 
@@ -419,9 +420,7 @@ pub fn median_lengthscale(params: &[Tensor]) -> f32 {
     for i in 0..n {
         let pi = params[i].as_f32();
         for j in (i + 1)..n {
-            let pj = params[j].as_f32();
-            let d2: f32 = pi.iter().zip(pj).map(|(a, b)| (a - b) * (a - b)).sum();
-            d2s.push(d2);
+            d2s.push(kernels::sq_dist(pi, params[j].as_f32()));
         }
     }
     d2s.sort_by(f32::total_cmp);
@@ -446,39 +445,31 @@ pub fn svgd_update_native(params: &[Tensor], grads: &[Tensor], h: f32) -> Result
     let d = params[0].element_count();
     let h2 = h * h;
 
-    // pairwise squared distances
+    // pairwise squared distances through the kernel plane's fixed-shape
+    // row reduction
     let mut k = vec![0.0f32; n * n];
     for i in 0..n {
         k[i * n + i] = 1.0;
         let pi = params[i].as_f32();
         for j in (i + 1)..n {
-            let pj = params[j].as_f32();
-            let mut d2 = 0.0f32;
-            for t in 0..d {
-                let diff = pi[t] - pj[t];
-                d2 += diff * diff;
-            }
+            let d2 = kernels::sq_dist(pi, params[j].as_f32());
             let kij = (-0.5 * d2 / h2).exp();
             k[i * n + j] = kij;
             k[j * n + i] = kij;
         }
     }
 
+    let inv_h2 = 1.0 / h2;
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         let pi = params[i].as_f32();
         let mut u = vec![0.0f32; d];
         for j in 0..n {
             let kij = k[i * n + j];
-            let gj = grads[j].as_f32();
-            let pj = params[j].as_f32();
-            for t in 0..d {
-                u[t] += kij * gj[t] + kij * (pj[t] - pi[t]) / h2;
-            }
+            // u += k_ij g_j + (k_ij / h²)(p_j − p_i), one fused row pass
+            kernels::rbf_accum(&mut u, kij, grads[j].as_f32(), kij * inv_h2, params[j].as_f32(), pi);
         }
-        for v in u.iter_mut() {
-            *v /= n as f32;
-        }
+        kernels::div_scale(&mut u, n as f32);
         out.push(Tensor::f32(vec![d], u));
     }
     Ok(out)

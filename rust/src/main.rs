@@ -46,6 +46,8 @@ USAGE:
   push train --model <name> [--algo ensemble|multi_swag|svgd|sgld|sghmc]
              [--particles N] [--devices D] [--epochs E] [--batches B]
              [--lr F] [--cache N] [--seed N] [--workers N]
+             [--kernel-threads N]    (math kernel shards; 0 = auto,
+                                      env PUSH_KERNEL_THREADS)
              [--nodes N] [--transport inproc|tcp]
              [--heartbeat-every MS] [--dead-after MS] [--recover N]
              [--temp T] [--friction A] [--burn-in N] [--thin N]
@@ -235,6 +237,11 @@ fn train(flags: &Flags) -> Result<()> {
     let seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
     // 0 = auto (one control worker per available CPU)
     let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
+    // kernel-plane sharding: only override when the flag is given so
+    // $PUSH_KERNEL_THREADS keeps working as the ambient default (0 = auto)
+    if let Some(n) = flags.usize("kernel-threads").map_err(anyhow::Error::msg)? {
+        push::runtime::kernels::set_threads(n);
+    }
     // 0 = no serving; N refreshes the posterior snapshot every N epochs
     let serve_every = flags.usize_or("serve-every", 0).map_err(anyhow::Error::msg)?;
     // elastic fabric: 0 disables the heartbeat monitor / recovery budget
@@ -508,6 +515,9 @@ fn serve(flags: &Flags) -> Result<()> {
     let serve_every = flags.usize_or("serve-every", 1).map_err(anyhow::Error::msg)?.max(1);
     let seed = flags.usize_or("seed", 0).map_err(anyhow::Error::msg)? as u64;
     let workers = flags.usize_or("workers", 0).map_err(anyhow::Error::msg)?;
+    if let Some(n) = flags.usize("kernel-threads").map_err(anyhow::Error::msg)? {
+        push::runtime::kernels::set_threads(n);
+    }
     // serving policy: 0 = wait for the transport / admit everything
     let deadline_ms = flags.usize_or("deadline-ms", 0).map_err(anyhow::Error::msg)?;
     let retries = flags.usize_or("retries", 2).map_err(anyhow::Error::msg)?;

@@ -1,0 +1,1279 @@
+//! The kernel plane: vectorized + data-parallel primitives for the
+//! per-step hot loops (DESIGN.md §14).
+//!
+//! Every per-step inner loop in the native plane — axpy applies, the MLP /
+//! conv GEMV scatters, SVGD's RBF row kernels, the eval reductions — funnels
+//! through this module. Three dispatch tiers share one math shape:
+//!
+//! * **scalar** — always compiled; the correctness oracle.
+//! * **SIMD** — `--features simd`: explicit SSE2/AVX intrinsics on x86_64
+//!   with runtime width detection ([`backend`]). Other targets fall back to
+//!   the scalar tier. No FMA anywhere: every vector op is the same
+//!   mul-then-add the scalar tier performs, so lanes are bit-exact.
+//! * **threaded** — a fixed-size worker pool shards large operations
+//!   (`len >= PAR_MIN`) across threads. Sized once from
+//!   `PUSH_KERNEL_THREADS` / [`set_threads`] (`push train --kernel-threads`);
+//!   0 = auto.
+//!
+//! **Bit-reproducibility is the hard invariant.** Reductions run a
+//! fixed-shape tree keyed by `(len, LANES, shard plan)`:
+//!
+//! 1. the input splits into `shard_plan(len)` contiguous shards — a
+//!    function of `len` only, never of the thread count;
+//! 2. each shard accumulates into [`LANES`] independent lane accumulators
+//!    (lane `j` sees elements `j, j+LANES, j+2·LANES, …` in order — exactly
+//!    what an 8-wide vector register computes);
+//! 3. the 8 lanes collapse through a fixed pairwise tree;
+//! 4. shard partials combine sequentially in shard order.
+//!
+//! Scalar, SIMD, and threaded paths all execute this same shape, so the f32
+//! result is byte-identical at any thread count and lane width — the
+//! placement-invariance and migration bit-identity suites hold with every
+//! tier enabled. Elementwise kernels are bit-stable by construction (each
+//! output element is an independent mul/add chain).
+//!
+//! Kernels never allocate on the hot path: reduction partials live in a
+//! stack array of [`PAR_SHARDS`] slots and elementwise kernels write in
+//! place.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Logical lane width of the reduction shape (f32 lanes in an AVX
+/// register). All tiers accumulate into this many independent lanes, so
+/// the width is part of the result's identity, not an optimization knob.
+pub const LANES: usize = 8;
+
+/// Below this element count an operation is always a single shard (no
+/// threading) — the fixed point of the shard plan for small tensors.
+pub const PAR_MIN: usize = 1 << 15;
+
+/// Shard count for large operations. Fixed (never derived from the thread
+/// count) so the reduction shape is a function of `len` alone.
+pub const PAR_SHARDS: usize = 16;
+
+// ---- dispatch configuration ---------------------------------------------
+
+/// Requested worker count. `usize::MAX` = unset (read `PUSH_KERNEL_THREADS`
+/// on first use), `0` = auto.
+static THREADS_CFG: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Test hook: 0 = auto-detect, 1 = force scalar, 2 = force SSE2,
+/// 3 = force AVX (clamped to what the CPU supports).
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// Vector instruction set a kernel range executes with. Which one runs
+/// never changes results — that is the bit-identity invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Sse2,
+    Avx,
+}
+
+/// Set the kernel-plane thread target (`push train --kernel-threads N`).
+/// 0 = auto (`available_parallelism`, capped). The pool itself is built
+/// once, on first parallel dispatch; later calls only gate whether large
+/// ops run inline or on the pool. Results are identical either way.
+pub fn set_threads(n: usize) {
+    THREADS_CFG.store(n, Ordering::Relaxed);
+}
+
+/// Effective thread target (>= 1). Resolves `PUSH_KERNEL_THREADS` on first
+/// call; 0/unset means auto.
+pub fn threads() -> usize {
+    let mut t = THREADS_CFG.load(Ordering::Relaxed);
+    if t == usize::MAX {
+        t = std::env::var("PUSH_KERNEL_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        THREADS_CFG.store(t, Ordering::Relaxed);
+    }
+    if t == 0 {
+        auto_threads()
+    } else {
+        t
+    }
+}
+
+fn auto_threads() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    })
+}
+
+/// Test hook: pin the vector tier (None = auto-detect). Forcing a wider
+/// backend than the CPU supports clamps down; forcing anything without the
+/// `simd` feature is a no-op (the scalar tier is all there is).
+pub fn force_backend(b: Option<Backend>) {
+    let v = match b {
+        None => 0,
+        Some(Backend::Scalar) => 1,
+        Some(Backend::Sse2) => 2,
+        Some(Backend::Avx) => 3,
+    };
+    FORCED.store(v, Ordering::Relaxed);
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn detected() -> Backend {
+    static DET: OnceLock<Backend> = OnceLock::new();
+    *DET.get_or_init(|| {
+        if is_x86_feature_detected!("avx") {
+            Backend::Avx
+        } else {
+            // SSE2 is the x86_64 baseline — always present.
+            Backend::Sse2
+        }
+    })
+}
+
+/// The vector tier ranges execute with right now (runtime width
+/// detection, or the [`force_backend`] override clamped to the CPU).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn backend() -> Backend {
+    let b = match FORCED.load(Ordering::Relaxed) {
+        1 => Backend::Scalar,
+        2 => Backend::Sse2,
+        3 => Backend::Avx,
+        _ => detected(),
+    };
+    if b == Backend::Avx && detected() != Backend::Avx {
+        return Backend::Sse2;
+    }
+    b
+}
+
+/// Without the `simd` feature (or off x86_64) the scalar oracle is the
+/// only tier.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn backend() -> Backend {
+    Backend::Scalar
+}
+
+/// Every tier this build + CPU can execute (the property suite's axis).
+pub fn available_backends() -> Vec<Backend> {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        let mut v = vec![Backend::Scalar, Backend::Sse2];
+        if detected() == Backend::Avx {
+            v.push(Backend::Avx);
+        }
+        v
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        vec![Backend::Scalar]
+    }
+}
+
+// ---- the fixed reduction shape ------------------------------------------
+
+/// Shard plan: `(shards, chunk)`, a function of `len` only.
+#[inline]
+fn shard_plan(len: usize) -> (usize, usize) {
+    if len >= PAR_MIN {
+        (PAR_SHARDS, (len + PAR_SHARDS - 1) / PAR_SHARDS)
+    } else {
+        (1, len)
+    }
+}
+
+#[inline]
+fn shard_range(s: usize, chunk: usize, len: usize) -> (usize, usize) {
+    let lo = (s * chunk).min(len);
+    let hi = (lo + chunk).min(len);
+    (lo, hi)
+}
+
+/// Reduction kinds sharing the lane-blocked shape. `Max` has no intrinsic
+/// path (x86 `maxps` NaN semantics differ from `f32::max`); it still lane-
+/// blocks and shards, so every tier folds identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RKind {
+    Sum,
+    SumSq,
+    Dot,
+    SqDist,
+    Max,
+}
+
+impl RKind {
+    #[inline]
+    fn identity(self) -> f32 {
+        match self {
+            RKind::Max => f32::NEG_INFINITY,
+            _ => 0.0,
+        }
+    }
+}
+
+/// One element's contribution. The SIMD tiers compute this exact
+/// expression per lane (mul then add — never FMA).
+#[inline(always)]
+fn term(kind: RKind, av: f32, bv: f32) -> f32 {
+    match kind {
+        RKind::Sum => av,
+        RKind::SumSq => av * av,
+        RKind::Dot => av * bv,
+        RKind::SqDist => {
+            let d = av - bv;
+            d * d
+        }
+        RKind::Max => av,
+    }
+}
+
+/// Collapse the 8 lane accumulators through the fixed pairwise tree.
+#[inline]
+fn tree8(kind: RKind, l: [f32; LANES]) -> f32 {
+    match kind {
+        RKind::Max => {
+            (l[0].max(l[1]).max(l[2].max(l[3]))).max(l[4].max(l[5]).max(l[6].max(l[7])))
+        }
+        _ => ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7])),
+    }
+}
+
+/// Combine shard partials sequentially in shard order.
+#[inline]
+fn combine(kind: RKind, partials: &[f32]) -> f32 {
+    let mut acc = partials[0];
+    for &p in &partials[1..] {
+        acc = match kind {
+            RKind::Max => acc.max(p),
+            _ => acc + p,
+        };
+    }
+    acc
+}
+
+// ---- scalar tier (the oracle) -------------------------------------------
+
+mod scalar {
+    use super::{term, RKind, LANES};
+
+    /// Lane-blocked reduction over one contiguous range: lane `j`
+    /// accumulates elements `j, j+LANES, …`, tail elements land on lanes
+    /// `0..tail_len` in order — the exact shape a vector register computes.
+    pub(super) fn lanes(kind: RKind, a: &[f32], b: &[f32]) -> [f32; LANES] {
+        let mut acc = [kind.identity(); LANES];
+        let blocks = a.len() / LANES;
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            for (j, slot) in acc.iter_mut().enumerate() {
+                let t = term(kind, a[base + j], b[base + j]);
+                *slot = match kind {
+                    RKind::Max => slot.max(t),
+                    _ => *slot + t,
+                };
+            }
+        }
+        let tail = blocks * LANES;
+        for (j, &av) in a[tail..].iter().enumerate() {
+            let t = term(kind, av, b[tail + j]);
+            acc[j] = match kind {
+                RKind::Max => acc[j].max(t),
+                _ => acc[j] + t,
+            };
+        }
+        acc
+    }
+
+    pub(super) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    pub(super) fn scale(y: &mut [f32], a: f32) {
+        for v in y.iter_mut() {
+            *v *= a;
+        }
+    }
+
+    pub(super) fn div_scale(y: &mut [f32], d: f32) {
+        for v in y.iter_mut() {
+            *v /= d;
+        }
+    }
+
+    pub(super) fn scale_add(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi = a * *yi + b * xi;
+        }
+    }
+
+    pub(super) fn scale_add_sq(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi = a * *yi + b * xi * xi;
+        }
+    }
+
+    /// SVGD row accumulate: u += kg·g + kr·(pj − pi).
+    pub(super) fn rbf_accum(u: &mut [f32], kg: f32, g: &[f32], kr: f32, pj: &[f32], pi: &[f32]) {
+        for (t, ut) in u.iter_mut().enumerate() {
+            *ut += kg * g[t] + kr * (pj[t] - pi[t]);
+        }
+    }
+}
+
+// ---- SIMD tier (x86_64 SSE2 / AVX) --------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    //! Explicit-intrinsic twins of the scalar kernels. Per lane they
+    //! perform the identical mul/add/sub/div sequence (no FMA, no
+    //! reassociation), so results are bit-equal to the scalar tier.
+    use super::{term, RKind, LANES};
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX via [`super::backend`].
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn lanes_avx(kind: RKind, a: &[f32], b: &[f32]) -> [f32; LANES] {
+        let mut acc = _mm256_setzero_ps();
+        let blocks = a.len() / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        for blk in 0..blocks {
+            let va = _mm256_loadu_ps(pa.add(blk * LANES));
+            let t = match kind {
+                RKind::Sum => va,
+                RKind::SumSq => _mm256_mul_ps(va, va),
+                RKind::Dot => _mm256_mul_ps(va, _mm256_loadu_ps(pb.add(blk * LANES))),
+                RKind::SqDist => {
+                    let d = _mm256_sub_ps(va, _mm256_loadu_ps(pb.add(blk * LANES)));
+                    _mm256_mul_ps(d, d)
+                }
+                RKind::Max => unreachable!("max reduces on the scalar lane path"),
+            };
+            acc = _mm256_add_ps(acc, t);
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let tail = blocks * LANES;
+        for (j, &av) in a[tail..].iter().enumerate() {
+            lanes[j] += term(kind, av, b[tail + j]);
+        }
+        lanes
+    }
+
+    /// # Safety
+    /// SSE2 is the x86_64 baseline; callers reach here via [`super::backend`].
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn lanes_sse2(kind: RKind, a: &[f32], b: &[f32]) -> [f32; LANES] {
+        let mut acc0 = _mm_setzero_ps();
+        let mut acc1 = _mm_setzero_ps();
+        let blocks = a.len() / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let va0 = _mm_loadu_ps(pa.add(base));
+            let va1 = _mm_loadu_ps(pa.add(base + 4));
+            let (t0, t1) = match kind {
+                RKind::Sum => (va0, va1),
+                RKind::SumSq => (_mm_mul_ps(va0, va0), _mm_mul_ps(va1, va1)),
+                RKind::Dot => (
+                    _mm_mul_ps(va0, _mm_loadu_ps(pb.add(base))),
+                    _mm_mul_ps(va1, _mm_loadu_ps(pb.add(base + 4))),
+                ),
+                RKind::SqDist => {
+                    let d0 = _mm_sub_ps(va0, _mm_loadu_ps(pb.add(base)));
+                    let d1 = _mm_sub_ps(va1, _mm_loadu_ps(pb.add(base + 4)));
+                    (_mm_mul_ps(d0, d0), _mm_mul_ps(d1, d1))
+                }
+                RKind::Max => unreachable!("max reduces on the scalar lane path"),
+            };
+            acc0 = _mm_add_ps(acc0, t0);
+            acc1 = _mm_add_ps(acc1, t1);
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc0);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), acc1);
+        let tail = blocks * LANES;
+        for (j, &av) in a[tail..].iter().enumerate() {
+            lanes[j] += term(kind, av, b[tail + j]);
+        }
+        lanes
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX via [`super::backend`].
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn axpy_avx(y: &mut [f32], a: f32, x: &[f32]) {
+        let av = _mm256_set1_ps(a);
+        let blocks = y.len() / LANES;
+        let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let yv = _mm256_loadu_ps(py.add(base));
+            let xv = _mm256_loadu_ps(px.add(base));
+            _mm256_storeu_ps(py.add(base), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+        }
+        let tail = blocks * LANES;
+        super::scalar::axpy(&mut y[tail..], a, &x[tail..]);
+    }
+
+    /// # Safety
+    /// SSE2 baseline (see [`lanes_sse2`]).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn axpy_sse2(y: &mut [f32], a: f32, x: &[f32]) {
+        let av = _mm_set1_ps(a);
+        let blocks = y.len() / 4;
+        let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * 4;
+            let yv = _mm_loadu_ps(py.add(base));
+            let xv = _mm_loadu_ps(px.add(base));
+            _mm_storeu_ps(py.add(base), _mm_add_ps(yv, _mm_mul_ps(av, xv)));
+        }
+        let tail = blocks * 4;
+        super::scalar::axpy(&mut y[tail..], a, &x[tail..]);
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX via [`super::backend`].
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn scale_avx(y: &mut [f32], a: f32) {
+        let av = _mm256_set1_ps(a);
+        let blocks = y.len() / LANES;
+        let py = y.as_mut_ptr();
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let yv = _mm256_loadu_ps(py.add(base));
+            _mm256_storeu_ps(py.add(base), _mm256_mul_ps(yv, av));
+        }
+        let tail = blocks * LANES;
+        super::scalar::scale(&mut y[tail..], a);
+    }
+
+    /// # Safety
+    /// SSE2 baseline (see [`lanes_sse2`]).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn scale_sse2(y: &mut [f32], a: f32) {
+        let av = _mm_set1_ps(a);
+        let blocks = y.len() / 4;
+        let py = y.as_mut_ptr();
+        for blk in 0..blocks {
+            let base = blk * 4;
+            let yv = _mm_loadu_ps(py.add(base));
+            _mm_storeu_ps(py.add(base), _mm_mul_ps(yv, av));
+        }
+        let tail = blocks * 4;
+        super::scalar::scale(&mut y[tail..], a);
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX via [`super::backend`].
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn div_scale_avx(y: &mut [f32], d: f32) {
+        let dv = _mm256_set1_ps(d);
+        let blocks = y.len() / LANES;
+        let py = y.as_mut_ptr();
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let yv = _mm256_loadu_ps(py.add(base));
+            _mm256_storeu_ps(py.add(base), _mm256_div_ps(yv, dv));
+        }
+        let tail = blocks * LANES;
+        super::scalar::div_scale(&mut y[tail..], d);
+    }
+
+    /// # Safety
+    /// SSE2 baseline (see [`lanes_sse2`]).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn div_scale_sse2(y: &mut [f32], d: f32) {
+        let dv = _mm_set1_ps(d);
+        let blocks = y.len() / 4;
+        let py = y.as_mut_ptr();
+        for blk in 0..blocks {
+            let base = blk * 4;
+            let yv = _mm_loadu_ps(py.add(base));
+            _mm_storeu_ps(py.add(base), _mm_div_ps(yv, dv));
+        }
+        let tail = blocks * 4;
+        super::scalar::div_scale(&mut y[tail..], d);
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX via [`super::backend`].
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn scale_add_avx(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+        let av = _mm256_set1_ps(a);
+        let bv = _mm256_set1_ps(b);
+        let blocks = y.len() / LANES;
+        let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let yv = _mm256_loadu_ps(py.add(base));
+            let xv = _mm256_loadu_ps(px.add(base));
+            let r = _mm256_add_ps(_mm256_mul_ps(av, yv), _mm256_mul_ps(bv, xv));
+            _mm256_storeu_ps(py.add(base), r);
+        }
+        let tail = blocks * LANES;
+        super::scalar::scale_add(&mut y[tail..], a, b, &x[tail..]);
+    }
+
+    /// # Safety
+    /// SSE2 baseline (see [`lanes_sse2`]).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn scale_add_sse2(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+        let av = _mm_set1_ps(a);
+        let bv = _mm_set1_ps(b);
+        let blocks = y.len() / 4;
+        let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * 4;
+            let yv = _mm_loadu_ps(py.add(base));
+            let xv = _mm_loadu_ps(px.add(base));
+            _mm_storeu_ps(py.add(base), _mm_add_ps(_mm_mul_ps(av, yv), _mm_mul_ps(bv, xv)));
+        }
+        let tail = blocks * 4;
+        super::scalar::scale_add(&mut y[tail..], a, b, &x[tail..]);
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX via [`super::backend`].
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn scale_add_sq_avx(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+        let av = _mm256_set1_ps(a);
+        let bv = _mm256_set1_ps(b);
+        let blocks = y.len() / LANES;
+        let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let yv = _mm256_loadu_ps(py.add(base));
+            let xv = _mm256_loadu_ps(px.add(base));
+            // a*y + (b*x)*x — the scalar tier's exact association
+            let r = _mm256_add_ps(
+                _mm256_mul_ps(av, yv),
+                _mm256_mul_ps(_mm256_mul_ps(bv, xv), xv),
+            );
+            _mm256_storeu_ps(py.add(base), r);
+        }
+        let tail = blocks * LANES;
+        super::scalar::scale_add_sq(&mut y[tail..], a, b, &x[tail..]);
+    }
+
+    /// # Safety
+    /// SSE2 baseline (see [`lanes_sse2`]).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn scale_add_sq_sse2(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+        let av = _mm_set1_ps(a);
+        let bv = _mm_set1_ps(b);
+        let blocks = y.len() / 4;
+        let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * 4;
+            let yv = _mm_loadu_ps(py.add(base));
+            let xv = _mm_loadu_ps(px.add(base));
+            let r = _mm_add_ps(_mm_mul_ps(av, yv), _mm_mul_ps(_mm_mul_ps(bv, xv), xv));
+            _mm_storeu_ps(py.add(base), r);
+        }
+        let tail = blocks * 4;
+        super::scalar::scale_add_sq(&mut y[tail..], a, b, &x[tail..]);
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX via [`super::backend`].
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn rbf_accum_avx(
+        u: &mut [f32],
+        kg: f32,
+        g: &[f32],
+        kr: f32,
+        pj: &[f32],
+        pi: &[f32],
+    ) {
+        let kgv = _mm256_set1_ps(kg);
+        let krv = _mm256_set1_ps(kr);
+        let blocks = u.len() / LANES;
+        let (pu, pg, ppj, ppi) = (u.as_mut_ptr(), g.as_ptr(), pj.as_ptr(), pi.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let uv = _mm256_loadu_ps(pu.add(base));
+            let gv = _mm256_loadu_ps(pg.add(base));
+            let dv = _mm256_sub_ps(_mm256_loadu_ps(ppj.add(base)), _mm256_loadu_ps(ppi.add(base)));
+            let r = _mm256_add_ps(uv, _mm256_add_ps(_mm256_mul_ps(kgv, gv), _mm256_mul_ps(krv, dv)));
+            _mm256_storeu_ps(pu.add(base), r);
+        }
+        let tail = blocks * LANES;
+        super::scalar::rbf_accum(&mut u[tail..], kg, &g[tail..], kr, &pj[tail..], &pi[tail..]);
+    }
+
+    /// # Safety
+    /// SSE2 baseline (see [`lanes_sse2`]).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn rbf_accum_sse2(
+        u: &mut [f32],
+        kg: f32,
+        g: &[f32],
+        kr: f32,
+        pj: &[f32],
+        pi: &[f32],
+    ) {
+        let kgv = _mm_set1_ps(kg);
+        let krv = _mm_set1_ps(kr);
+        let blocks = u.len() / 4;
+        let (pu, pg, ppj, ppi) = (u.as_mut_ptr(), g.as_ptr(), pj.as_ptr(), pi.as_ptr());
+        for blk in 0..blocks {
+            let base = blk * 4;
+            let uv = _mm_loadu_ps(pu.add(base));
+            let gv = _mm_loadu_ps(pg.add(base));
+            let dv = _mm_sub_ps(_mm_loadu_ps(ppj.add(base)), _mm_loadu_ps(ppi.add(base)));
+            let r = _mm_add_ps(uv, _mm_add_ps(_mm_mul_ps(kgv, gv), _mm_mul_ps(krv, dv)));
+            _mm_storeu_ps(pu.add(base), r);
+        }
+        let tail = blocks * 4;
+        super::scalar::rbf_accum(&mut u[tail..], kg, &g[tail..], kr, &pj[tail..], &pi[tail..]);
+    }
+}
+
+// ---- range dispatch (one contiguous shard) ------------------------------
+
+fn lanes_range(kind: RKind, a: &[f32], b: &[f32]) -> [f32; LANES] {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if kind != RKind::Max {
+        match backend() {
+            // Safety: the backend was runtime-detected (or clamped to it).
+            Backend::Avx => return unsafe { x86::lanes_avx(kind, a, b) },
+            Backend::Sse2 => return unsafe { x86::lanes_sse2(kind, a, b) },
+            Backend::Scalar => {}
+        }
+    }
+    scalar::lanes(kind, a, b)
+}
+
+macro_rules! ew_dispatch {
+    ($avx:path, $sse2:path, $scalar:path, ($($arg:expr),*)) => {{
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        match backend() {
+            // Safety: the backend was runtime-detected (or clamped to it).
+            Backend::Avx => return unsafe { $avx($($arg),*) },
+            Backend::Sse2 => return unsafe { $sse2($($arg),*) },
+            Backend::Scalar => {}
+        }
+        $scalar($($arg),*)
+    }};
+}
+
+fn axpy_range(y: &mut [f32], a: f32, x: &[f32]) {
+    ew_dispatch!(x86::axpy_avx, x86::axpy_sse2, scalar::axpy, (y, a, x))
+}
+
+fn scale_range(y: &mut [f32], a: f32) {
+    ew_dispatch!(x86::scale_avx, x86::scale_sse2, scalar::scale, (y, a))
+}
+
+fn div_scale_range(y: &mut [f32], d: f32) {
+    ew_dispatch!(x86::div_scale_avx, x86::div_scale_sse2, scalar::div_scale, (y, d))
+}
+
+fn scale_add_range(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+    ew_dispatch!(x86::scale_add_avx, x86::scale_add_sse2, scalar::scale_add, (y, a, b, x))
+}
+
+fn scale_add_sq_range(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+    ew_dispatch!(
+        x86::scale_add_sq_avx,
+        x86::scale_add_sq_sse2,
+        scalar::scale_add_sq,
+        (y, a, b, x)
+    )
+}
+
+fn rbf_accum_range(u: &mut [f32], kg: f32, g: &[f32], kr: f32, pj: &[f32], pi: &[f32]) {
+    ew_dispatch!(
+        x86::rbf_accum_avx,
+        x86::rbf_accum_sse2,
+        scalar::rbf_accum,
+        (u, kg, g, kr, pj, pi)
+    )
+}
+
+// ---- public kernels ------------------------------------------------------
+
+/// y += a·x (elementwise).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+    let (shards, chunk) = shard_plan(y.len());
+    if shards > 1
+        && threads() > 1
+        && pool::run(pool::Job::axpy(y, a, x), shards, chunk, y.len())
+    {
+        return;
+    }
+    axpy_range(y, a, x);
+}
+
+/// y *= a (elementwise).
+pub fn scale(y: &mut [f32], a: f32) {
+    let (shards, chunk) = shard_plan(y.len());
+    if shards > 1 && threads() > 1 && pool::run(pool::Job::scale(y, a), shards, chunk, y.len()) {
+        return;
+    }
+    scale_range(y, a);
+}
+
+/// y /= d (elementwise; true division, not multiply-by-reciprocal, so the
+/// result matches the scalar `/=` it replaced bit for bit).
+pub fn div_scale(y: &mut [f32], d: f32) {
+    let (shards, chunk) = shard_plan(y.len());
+    if shards > 1
+        && threads() > 1
+        && pool::run(pool::Job::div_scale(y, d), shards, chunk, y.len())
+    {
+        return;
+    }
+    div_scale_range(y, d);
+}
+
+/// y = a·y + b·x (elementwise).
+pub fn scale_add(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "scale_add: length mismatch");
+    let (shards, chunk) = shard_plan(y.len());
+    if shards > 1
+        && threads() > 1
+        && pool::run(pool::Job::scale_add(y, a, b, x), shards, chunk, y.len())
+    {
+        return;
+    }
+    scale_add_range(y, a, b, x);
+}
+
+/// y = a·y + b·x² (elementwise).
+pub fn scale_add_sq(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "scale_add_sq: length mismatch");
+    let (shards, chunk) = shard_plan(y.len());
+    if shards > 1
+        && threads() > 1
+        && pool::run(pool::Job::scale_add_sq(y, a, b, x), shards, chunk, y.len())
+    {
+        return;
+    }
+    scale_add_sq_range(y, a, b, x);
+}
+
+/// SVGD row accumulate: u += kg·g + kr·(pj − pi) (elementwise).
+pub fn rbf_accum(u: &mut [f32], kg: f32, g: &[f32], kr: f32, pj: &[f32], pi: &[f32]) {
+    assert!(
+        g.len() == u.len() && pj.len() == u.len() && pi.len() == u.len(),
+        "rbf_accum: length mismatch"
+    );
+    let (shards, chunk) = shard_plan(u.len());
+    if shards > 1
+        && threads() > 1
+        && pool::run(pool::Job::rbf_accum(u, kg, g, kr, pj, pi), shards, chunk, u.len())
+    {
+        return;
+    }
+    rbf_accum_range(u, kg, g, kr, pj, pi);
+}
+
+fn reduce(kind: RKind, a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len();
+    let (shards, chunk) = shard_plan(len);
+    let mut partials = [0.0f32; PAR_SHARDS];
+    let pooled = shards > 1
+        && threads() > 1
+        && pool::run(pool::Job::reduce(kind, a, b, &mut partials), shards, chunk, len);
+    if !pooled {
+        for (s, slot) in partials.iter_mut().enumerate().take(shards) {
+            let (lo, hi) = shard_range(s, chunk, len);
+            *slot = if lo >= hi {
+                kind.identity()
+            } else {
+                tree8(kind, lanes_range(kind, &a[lo..hi], &b[lo..hi]))
+            };
+        }
+    }
+    combine(kind, &partials[..shards])
+}
+
+/// Σ x, fixed-shape. 0.0 for an empty slice.
+pub fn sum(x: &[f32]) -> f32 {
+    reduce(RKind::Sum, x, x)
+}
+
+/// Σ x², fixed-shape.
+pub fn sum_sq(x: &[f32]) -> f32 {
+    reduce(RKind::SumSq, x, x)
+}
+
+/// Σ x·y, fixed-shape.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    reduce(RKind::Dot, x, y)
+}
+
+/// Σ (a−b)², fixed-shape.
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "sq_dist: length mismatch");
+    reduce(RKind::SqDist, a, b)
+}
+
+/// Max via `f32::max` folds (NaN-ignoring unless all-NaN). No intrinsic
+/// path — `maxps` treats NaN differently — but still lane-blocked and
+/// thread-shardable. `NEG_INFINITY` for an empty slice.
+pub fn max(x: &[f32]) -> f32 {
+    reduce(RKind::Max, x, x)
+}
+
+/// Mean with the historical `len.max(1)` guard (0.0 for empty).
+pub fn mean(x: &[f32]) -> f32 {
+    sum(x) / x.len().max(1) as f32
+}
+
+/// √(Σ x²).
+pub fn l2_norm(x: &[f32]) -> f32 {
+    sum_sq(x).sqrt()
+}
+
+/// First-max-wins argmax (the vote/accuracy tie-break). 0 for an empty row.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for j in 1..row.len() {
+        if row[j] > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Row-max-stabilized softmax in place; returns `(row_max, z)` where `z`
+/// is the pre-normalization Σ exp(v − max) — the pieces the CE loss needs.
+pub fn softmax(row: &mut [f32]) -> (f32, f32) {
+    let m = max(row);
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+    }
+    let z = sum(row);
+    div_scale(row, z);
+    (m, z)
+}
+
+/// Fused GEMV scatter: out += x[k]·w_row(k) for each input k, where `w` is
+/// row-major `[din, dout]`. The affine microkernel behind the MLP / conv
+/// head layers (bias is pre-copied into `out` by the caller).
+pub fn gemv_scatter(out: &mut [f32], x: &[f32], w: &[f32]) {
+    let dout = out.len();
+    assert_eq!(x.len() * dout, w.len(), "gemv_scatter: shape mismatch");
+    for (k, &xk) in x.iter().enumerate() {
+        axpy_range(out, xk, &w[k * dout..(k + 1) * dout]);
+    }
+}
+
+/// Fused activation pass: applies `act` in place and returns the smallest
+/// |pre-activation| seen (`INFINITY` for an empty row) — the gradcheck
+/// kink margin.
+pub fn act_margin(row: &mut [f32], act: impl Fn(f32) -> f32) -> f32 {
+    let mut margin = f32::INFINITY;
+    for v in row.iter_mut() {
+        margin = margin.min(v.abs());
+        *v = act(*v);
+    }
+    margin
+}
+
+// ---- the fixed-size worker pool -----------------------------------------
+
+mod pool {
+    //! A fixed-size shard pool. Tasks publish through an epoch-stamped
+    //! slot; workers (and the caller) drain shard indices from a shared
+    //! counter. Shard geometry comes from `shard_plan`, never from the
+    //! worker count, so helping threads change wall-clock, not bits.
+
+    use super::{lanes_range, shard_range, tree8, RKind};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    #[derive(Clone, Copy)]
+    pub(super) struct ConstPtr(*const f32);
+    // Safety: raw views into caller buffers; the caller blocks until
+    // `pending == 0`, keeping them alive, and shards never overlap.
+    unsafe impl Send for ConstPtr {}
+    unsafe impl Sync for ConstPtr {}
+
+    #[derive(Clone, Copy)]
+    pub(super) struct MutPtr(*mut f32);
+    // Safety: as above — disjoint shard ranges, caller outlives the task.
+    unsafe impl Send for MutPtr {}
+    unsafe impl Sync for MutPtr {}
+
+    #[derive(Clone, Copy)]
+    pub(super) enum Job {
+        Axpy { y: MutPtr, x: ConstPtr, a: f32 },
+        Scale { y: MutPtr, a: f32 },
+        DivScale { y: MutPtr, d: f32 },
+        ScaleAdd { y: MutPtr, x: ConstPtr, a: f32, b: f32 },
+        ScaleAddSq { y: MutPtr, x: ConstPtr, a: f32, b: f32 },
+        RbfAccum { u: MutPtr, g: ConstPtr, pj: ConstPtr, pi: ConstPtr, kg: f32, kr: f32 },
+        Reduce { kind: RKind, a: ConstPtr, b: ConstPtr, partials: MutPtr },
+    }
+
+    impl Job {
+        pub(super) fn axpy(y: &mut [f32], a: f32, x: &[f32]) -> Job {
+            Job::Axpy { y: MutPtr(y.as_mut_ptr()), x: ConstPtr(x.as_ptr()), a }
+        }
+        pub(super) fn scale(y: &mut [f32], a: f32) -> Job {
+            Job::Scale { y: MutPtr(y.as_mut_ptr()), a }
+        }
+        pub(super) fn div_scale(y: &mut [f32], d: f32) -> Job {
+            Job::DivScale { y: MutPtr(y.as_mut_ptr()), d }
+        }
+        pub(super) fn scale_add(y: &mut [f32], a: f32, b: f32, x: &[f32]) -> Job {
+            Job::ScaleAdd { y: MutPtr(y.as_mut_ptr()), x: ConstPtr(x.as_ptr()), a, b }
+        }
+        pub(super) fn scale_add_sq(y: &mut [f32], a: f32, b: f32, x: &[f32]) -> Job {
+            Job::ScaleAddSq { y: MutPtr(y.as_mut_ptr()), x: ConstPtr(x.as_ptr()), a, b }
+        }
+        pub(super) fn rbf_accum(
+            u: &mut [f32],
+            kg: f32,
+            g: &[f32],
+            kr: f32,
+            pj: &[f32],
+            pi: &[f32],
+        ) -> Job {
+            Job::RbfAccum {
+                u: MutPtr(u.as_mut_ptr()),
+                g: ConstPtr(g.as_ptr()),
+                pj: ConstPtr(pj.as_ptr()),
+                pi: ConstPtr(pi.as_ptr()),
+                kg,
+                kr,
+            }
+        }
+        pub(super) fn reduce(kind: RKind, a: &[f32], b: &[f32], partials: &mut [f32]) -> Job {
+            Job::Reduce {
+                kind,
+                a: ConstPtr(a.as_ptr()),
+                b: ConstPtr(b.as_ptr()),
+                partials: MutPtr(partials.as_mut_ptr()),
+            }
+        }
+
+        /// Run shard `s`.
+        ///
+        /// # Safety
+        /// `Pool::execute` guarantees the backing buffers outlive the task
+        /// (the caller blocks on `pending`) and `(s, chunk, len)` ranges
+        /// are disjoint across shards.
+        unsafe fn run_shard(&self, s: usize, chunk: usize, len: usize) {
+            let (lo, hi) = shard_range(s, chunk, len);
+            let n = hi.saturating_sub(lo);
+            match *self {
+                Job::Axpy { y, x, a } => {
+                    if n == 0 {
+                        return;
+                    }
+                    super::axpy_range(
+                        std::slice::from_raw_parts_mut(y.0.add(lo), n),
+                        a,
+                        std::slice::from_raw_parts(x.0.add(lo), n),
+                    );
+                }
+                Job::Scale { y, a } => {
+                    if n == 0 {
+                        return;
+                    }
+                    super::scale_range(std::slice::from_raw_parts_mut(y.0.add(lo), n), a);
+                }
+                Job::DivScale { y, d } => {
+                    if n == 0 {
+                        return;
+                    }
+                    super::div_scale_range(std::slice::from_raw_parts_mut(y.0.add(lo), n), d);
+                }
+                Job::ScaleAdd { y, x, a, b } => {
+                    if n == 0 {
+                        return;
+                    }
+                    super::scale_add_range(
+                        std::slice::from_raw_parts_mut(y.0.add(lo), n),
+                        a,
+                        b,
+                        std::slice::from_raw_parts(x.0.add(lo), n),
+                    );
+                }
+                Job::ScaleAddSq { y, x, a, b } => {
+                    if n == 0 {
+                        return;
+                    }
+                    super::scale_add_sq_range(
+                        std::slice::from_raw_parts_mut(y.0.add(lo), n),
+                        a,
+                        b,
+                        std::slice::from_raw_parts(x.0.add(lo), n),
+                    );
+                }
+                Job::RbfAccum { u, g, pj, pi, kg, kr } => {
+                    if n == 0 {
+                        return;
+                    }
+                    super::rbf_accum_range(
+                        std::slice::from_raw_parts_mut(u.0.add(lo), n),
+                        kg,
+                        std::slice::from_raw_parts(g.0.add(lo), n),
+                        kr,
+                        std::slice::from_raw_parts(pj.0.add(lo), n),
+                        std::slice::from_raw_parts(pi.0.add(lo), n),
+                    );
+                }
+                Job::Reduce { kind, a, b, partials } => {
+                    let part = if n == 0 {
+                        kind.identity()
+                    } else {
+                        tree8(
+                            kind,
+                            lanes_range(
+                                kind,
+                                std::slice::from_raw_parts(a.0.add(lo), n),
+                                std::slice::from_raw_parts(b.0.add(lo), n),
+                            ),
+                        )
+                    };
+                    *partials.0.add(s) = part;
+                }
+            }
+        }
+    }
+
+    struct Task {
+        job: Job,
+        shards: usize,
+        chunk: usize,
+        len: usize,
+        next: AtomicUsize,
+        pending: AtomicUsize,
+    }
+
+    impl Task {
+        fn drain(&self) {
+            loop {
+                let s = self.next.fetch_add(1, Ordering::Relaxed);
+                if s >= self.shards {
+                    break;
+                }
+                // Safety: see `Job::run_shard` — disjoint shards, caller
+                // keeps buffers alive until `pending` hits zero.
+                unsafe { self.job.run_shard(s, self.chunk, self.len) };
+                self.pending.fetch_sub(1, Ordering::Release);
+            }
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    struct Shared {
+        cur: Mutex<(u64, Option<Arc<Task>>)>,
+        cv: Condvar,
+    }
+
+    struct Pool {
+        shared: Arc<Shared>,
+        workers: usize,
+    }
+
+    impl Pool {
+        fn build() -> Pool {
+            let shared = Arc::new(Shared { cur: Mutex::new((0, None)), cv: Condvar::new() });
+            // Fixed size: the thread target at first parallel dispatch,
+            // minus the calling thread (which always helps drain).
+            let target = super::threads().clamp(1, 16) - 1;
+            let mut workers = 0;
+            for i in 0..target {
+                let sh = shared.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("push-kernel-{i}"))
+                    .spawn(move || worker_loop(sh));
+                if spawned.is_ok() {
+                    workers += 1;
+                }
+            }
+            Pool { shared, workers }
+        }
+
+        fn execute(&self, job: Job, shards: usize, chunk: usize, len: usize) {
+            let task = Arc::new(Task {
+                job,
+                shards,
+                chunk,
+                len,
+                next: AtomicUsize::new(0),
+                pending: AtomicUsize::new(shards),
+            });
+            {
+                let mut g = self.shared.cur.lock().unwrap_or_else(|e| e.into_inner());
+                g.0 = g.0.wrapping_add(1);
+                g.1 = Some(task.clone());
+            }
+            self.shared.cv.notify_all();
+            task.drain();
+            while task.pending.load(Ordering::Acquire) != 0 {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    fn worker_loop(shared: Arc<Shared>) {
+        let mut seen = 0u64;
+        loop {
+            let task = {
+                let mut g = shared.cur.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if g.0 != seen {
+                        seen = g.0;
+                        if let Some(t) = g.1.clone() {
+                            break t;
+                        }
+                    }
+                    g = shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            task.drain();
+        }
+    }
+
+    fn pool() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(Pool::build)
+    }
+
+    /// Run `job` over `shards` on the pool (caller helps). Returns false
+    /// when no worker could be spawned, so the caller falls back inline.
+    pub(super) fn run(job: Job, shards: usize, chunk: usize, len: usize) -> bool {
+        let p = pool();
+        if p.workers == 0 {
+            return false;
+        }
+        p.execute(job, shards, chunk, len);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Kernel tests mutate the global dispatch knobs; serialize them.
+    /// (Bit-identity means concurrent *users* of the kernels are unaffected
+    /// by whatever a test forces — only tests comparing tiers need the
+    /// lock.)
+    fn dispatch_lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: Mutex<()> = Mutex::new(());
+        M.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn fill(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn shard_plan_is_len_keyed() {
+        assert_eq!(shard_plan(0), (1, 0));
+        assert_eq!(shard_plan(PAR_MIN - 1), (1, PAR_MIN - 1));
+        let (s, c) = shard_plan(PAR_MIN);
+        assert_eq!(s, PAR_SHARDS);
+        assert_eq!(c, PAR_MIN / PAR_SHARDS);
+        // ragged: the last shard is short but the plan still covers len
+        let (s2, c2) = shard_plan(PAR_MIN + 1);
+        assert_eq!(s2, PAR_SHARDS);
+        assert!(c2 * s2 >= PAR_MIN + 1);
+    }
+
+    #[test]
+    fn reduction_matches_naive_within_tolerance() {
+        let x = fill(7, 1003);
+        let naive: f32 = x.iter().sum();
+        assert!((sum(&x) - naive).abs() < 1e-3 * naive.abs().max(1.0));
+        assert_eq!(max(&x), x.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)));
+    }
+
+    #[test]
+    fn empty_and_single_element_identities() {
+        assert_eq!(sum(&[]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(l2_norm(&[]), 0.0);
+        assert_eq!(max(&[]), f32::NEG_INFINITY);
+        assert_eq!(sum(&[3.5]), 3.5);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn threaded_reduction_is_bit_identical() {
+        let _g = dispatch_lock();
+        let x = fill(11, 50_000);
+        let y = fill(13, 50_000);
+        set_threads(1);
+        let inline = (sum(&x), dot(&x, &y), sum_sq(&x), sq_dist(&x, &y), max(&x));
+        set_threads(4);
+        let pooled = (sum(&x), dot(&x, &y), sum_sq(&x), sq_dist(&x, &y), max(&x));
+        set_threads(0);
+        assert_eq!(inline.0.to_bits(), pooled.0.to_bits());
+        assert_eq!(inline.1.to_bits(), pooled.1.to_bits());
+        assert_eq!(inline.2.to_bits(), pooled.2.to_bits());
+        assert_eq!(inline.3.to_bits(), pooled.3.to_bits());
+        assert_eq!(inline.4.to_bits(), pooled.4.to_bits());
+    }
+
+    #[test]
+    fn threaded_elementwise_is_bit_identical() {
+        let _g = dispatch_lock();
+        let x = fill(17, 50_000);
+        let mut a = fill(19, 50_000);
+        let mut b = a.clone();
+        set_threads(1);
+        axpy(&mut a, 0.37, &x);
+        set_threads(4);
+        axpy(&mut b, 0.37, &x);
+        set_threads(0);
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+
+    #[test]
+    fn backends_agree_bitwise() {
+        let _g = dispatch_lock();
+        let x = fill(23, 517);
+        let y = fill(29, 517);
+        let mut results: Vec<(u32, u32)> = Vec::new();
+        for be in available_backends() {
+            force_backend(Some(be));
+            results.push((sum(&x).to_bits(), dot(&x, &y).to_bits()));
+        }
+        force_backend(None);
+        for w in results.windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        let (m, _z) = softmax(&mut row);
+        assert_eq!(m, 3.0);
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn gemv_scatter_matches_manual() {
+        // out = x · W with W row-major [2, 3]
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = [10.0f32, 100.0];
+        let mut out = [0.0f32; 3];
+        gemv_scatter(&mut out, &x, &w);
+        assert_eq!(out, [410.0, 520.0, 630.0]);
+    }
+
+    #[test]
+    fn act_margin_tracks_preactivation() {
+        let mut row = vec![-0.5f32, 2.0, 0.25];
+        let margin = act_margin(&mut row, |v| v.max(0.0));
+        assert_eq!(margin, 0.25);
+        assert_eq!(row, vec![0.0, 2.0, 0.25]);
+    }
+}

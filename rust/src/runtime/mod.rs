@@ -2,6 +2,7 @@
 //! the per-device PJRT client that loads and executes `artifacts/*.hlo.txt`.
 
 pub mod client;
+pub mod kernels;
 pub mod manifest;
 pub mod tensor;
 

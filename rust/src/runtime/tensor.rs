@@ -277,46 +277,44 @@ impl fmt::Debug for Tensor {
 /// All write through `as_f32_mut`, so they are COW-safe: a shared `y`
 /// detaches once; a uniquely-owned `y` updates strictly in place.
 pub mod ops {
+    //! Tensor-level wrappers over the kernel plane
+    //! ([`crate::runtime::kernels`]): shape checks here, math there. All
+    //! of these are zero-allocation — reductions use the kernel plane's
+    //! stack-resident partials and elementwise ops mutate in place (after
+    //! `as_f32_mut`'s usual COW discipline).
     use super::Tensor;
+    use crate::runtime::kernels;
 
     /// y += alpha * x (elementwise, f32).
     pub fn axpy(y: &mut Tensor, alpha: f32, x: &Tensor) {
         let n = x.element_count();
         assert_eq!(n, y.element_count());
-        let ys = y.as_f32_mut();
-        let xs = x.as_f32();
-        for (yi, xi) in ys.iter_mut().zip(xs) {
-            *yi += alpha * xi;
-        }
+        kernels::axpy(y.as_f32_mut(), alpha, x.as_f32());
+    }
+
+    /// y *= a (elementwise, f32).
+    pub fn scale(y: &mut Tensor, a: f32) {
+        kernels::scale(y.as_f32_mut(), a);
     }
 
     /// y = a*y + b*x.
     pub fn scale_add(y: &mut Tensor, a: f32, b: f32, x: &Tensor) {
         assert_eq!(x.element_count(), y.element_count());
-        let ys = y.as_f32_mut();
-        let xs = x.as_f32();
-        for (yi, xi) in ys.iter_mut().zip(xs) {
-            *yi = a * *yi + b * xi;
-        }
+        kernels::scale_add(y.as_f32_mut(), a, b, x.as_f32());
     }
 
     /// Elementwise square accumulate: y = a*y + b*x^2.
     pub fn scale_add_sq(y: &mut Tensor, a: f32, b: f32, x: &Tensor) {
         assert_eq!(x.element_count(), y.element_count());
-        let ys = y.as_f32_mut();
-        let xs = x.as_f32();
-        for (yi, xi) in ys.iter_mut().zip(xs) {
-            *yi = a * *yi + b * xi * xi;
-        }
+        kernels::scale_add_sq(y.as_f32_mut(), a, b, x.as_f32());
     }
 
     pub fn l2_norm(x: &Tensor) -> f32 {
-        x.as_f32().iter().map(|v| v * v).sum::<f32>().sqrt()
+        kernels::l2_norm(x.as_f32())
     }
 
     pub fn mean(x: &Tensor) -> f32 {
-        let v = x.as_f32();
-        v.iter().sum::<f32>() / v.len().max(1) as f32
+        kernels::mean(x.as_f32())
     }
 }
 

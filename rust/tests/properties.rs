@@ -19,6 +19,11 @@
 //!   nested chain state, strict-prefix truncation of any encoded request
 //!   fails to decode, and unknown kind bytes error cleanly (a v-next peer
 //!   can't wedge a v1 node)
+//! * Kernel plane: every kernel is bit-identical across the scalar
+//!   reference tier, every detected SIMD backend, and any worker-pool
+//!   thread count, over a shape grid covering ragged lane remainders,
+//!   the sharding threshold, len 0/1, and NaN/inf inputs; plus one full
+//!   native-MLP gradient + drift step, kernels off vs on (DESIGN.md §14)
 
 use std::collections::BTreeMap;
 
@@ -803,5 +808,247 @@ fn prop_registered_native_models_pass_gradcheck() {
             Tensor::f32(vec![b, yn], r.normal_vec(b * yn))
         };
         gradcheck_native(name, &nm.source, &params, &x, &y, &mut r);
+    }
+}
+
+// ------------------------------------------------------------- kernels
+//
+// The kernel plane's hard invariant (DESIGN.md §14): scalar, SIMD, and
+// thread-pool tiers run the SAME fixed-shape reduction tree, so every
+// kernel returns bit-identical f32 results no matter which tier executed
+// it. These tests pin that down over a shape grid chosen to hit every
+// dispatch edge: empty, single element, below/at/above the 8-lane block
+// width, ragged remainders (len % 8 != 0), and both sides of the
+// PAR_MIN sharding threshold.
+mod kernel_identity {
+    use push::runtime::kernels::{self, Backend, PAR_MIN};
+    use push::runtime::tensor::ops;
+    use push::runtime::Tensor;
+    use push::util::rng::Rng;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// `force_backend` / `set_threads` are process-wide knobs. Serialize
+    /// the tests that touch them; `Knobs` restores the defaults on drop
+    /// (including on assertion panic, so one failure can't cascade).
+    fn lock() -> MutexGuard<'static, ()> {
+        static M: OnceLock<Mutex<()>> = OnceLock::new();
+        M.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    struct Knobs;
+    impl Drop for Knobs {
+        fn drop(&mut self) {
+            kernels::force_backend(None);
+            kernels::set_threads(0);
+        }
+    }
+
+    /// Every dispatch edge: 0, 1, ragged around the 8-lane width, ragged
+    /// around 8-blocks, and both sides of the PAR_MIN shard threshold.
+    const SHAPES: &[usize] =
+        &[0, 1, 2, 7, 8, 9, 15, 16, 17, 63, 64, 65, 255, 1024, PAR_MIN, PAR_MIN + 1, 50_000];
+
+    fn fill(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(0x6b72_6e6c).fold_in(seed).fold_in(n as u64);
+        r.normal_vec(n)
+    }
+
+    /// One pass of every kernel over (seed, len): reduction results as
+    /// bits, elementwise/composite outputs as bit vectors, all in one
+    /// flat Vec<u32> so a single comparison covers the lot.
+    fn all_kernel_bits(seed: u64, n: usize) -> Vec<u32> {
+        let x = fill(seed, n);
+        let y = fill(seed ^ 1, n);
+        let z = fill(seed ^ 2, n);
+        let mut bits = Vec::new();
+        for v in [
+            kernels::sum(&x),
+            kernels::sum_sq(&x),
+            kernels::dot(&x, &y),
+            kernels::sq_dist(&x, &y),
+            kernels::max(&x),
+            kernels::mean(&x),
+            kernels::l2_norm(&x),
+        ] {
+            bits.push(v.to_bits());
+        }
+        bits.push(kernels::argmax(&x) as u32);
+
+        let mut buf = y.clone();
+        kernels::axpy(&mut buf, 0.37, &x);
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+        let mut buf = y.clone();
+        kernels::scale(&mut buf, -1.25);
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+        let mut buf = y.clone();
+        kernels::div_scale(&mut buf, 3.0);
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+        let mut buf = y.clone();
+        kernels::scale_add(&mut buf, 0.9, 0.1, &x);
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+        let mut buf = y.clone();
+        kernels::scale_add_sq(&mut buf, 0.9, 0.1, &x);
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+        let mut buf = y.clone();
+        kernels::rbf_accum(&mut buf, 0.8, &x, 0.2, &z, &x);
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+
+        let mut buf = x.clone();
+        let (mx, zn) = kernels::softmax(&mut buf);
+        bits.push(mx.to_bits());
+        bits.push(zn.to_bits());
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+        let mut buf = x.clone();
+        let margin = kernels::act_margin(&mut buf, |v| v.max(0.0));
+        bits.push(margin.to_bits());
+        bits.extend(buf.iter().map(|v| v.to_bits()));
+        bits
+    }
+
+    #[test]
+    fn prop_kernels_bit_identical_across_backends_and_threads() {
+        let _g = lock();
+        let _restore = Knobs;
+        for &n in SHAPES {
+            for seed in 0..3u64 {
+                kernels::force_backend(Some(Backend::Scalar));
+                kernels::set_threads(1);
+                let reference = all_kernel_bits(seed, n);
+                for backend in kernels::available_backends() {
+                    for threads in [1usize, 4] {
+                        kernels::force_backend(Some(backend));
+                        kernels::set_threads(threads);
+                        let got = all_kernel_bits(seed, n);
+                        assert!(
+                            got == reference,
+                            "len {n} seed {seed}: {backend:?} x {threads} threads \
+                             diverged from the scalar reference"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_gemv_scatter_bit_identical_across_backends_and_threads() {
+        let _g = lock();
+        let _restore = Knobs;
+        // (din, dout) pairs: scalar-sized, lane-ragged, full blocks, and a
+        // dout big enough that each scatter row crosses several 8-blocks
+        for (din, dout) in [(1usize, 1usize), (3, 5), (8, 8), (17, 9), (7, 130)] {
+            let x = fill(din as u64, din);
+            let w = fill((din * dout) as u64, din * dout);
+            kernels::force_backend(Some(Backend::Scalar));
+            kernels::set_threads(1);
+            let mut reference = vec![0.5f32; dout];
+            kernels::gemv_scatter(&mut reference, &x, &w);
+            for backend in kernels::available_backends() {
+                for threads in [1usize, 4] {
+                    kernels::force_backend(Some(backend));
+                    kernels::set_threads(threads);
+                    let mut got = vec![0.5f32; dout];
+                    kernels::gemv_scatter(&mut got, &x, &w);
+                    let same = got
+                        .iter()
+                        .zip(&reference)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "gemv {din}x{dout}: {backend:?} x {threads} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_kernels_propagate_nan_and_inf_identically() {
+        let _g = lock();
+        let _restore = Knobs;
+        // Special values must flow through every tier the same way: the
+        // reductions go NaN/inf, max ignores NaN via f32::max on every
+        // path, and elementwise ops propagate per element. Bit-compare the
+        // whole battery with specials planted at lane 0, a ragged-tail
+        // lane, and mid-shard positions.
+        for &n in &[9usize, 64, 1024, PAR_MIN + 7] {
+            let mut x = fill(0x5eed, n);
+            x[0] = f32::NAN;
+            x[n / 2] = f32::INFINITY;
+            x[n - 1] = f32::NEG_INFINITY;
+            let y = fill(0x5eee, n);
+            let run = || {
+                let mut bits = vec![
+                    kernels::sum(&x).to_bits(),
+                    kernels::dot(&x, &y).to_bits(),
+                    kernels::sq_dist(&x, &y).to_bits(),
+                    kernels::max(&x).to_bits(),
+                    kernels::l2_norm(&x).to_bits(),
+                ];
+                let mut buf = y.clone();
+                kernels::axpy(&mut buf, 2.0, &x);
+                bits.extend(buf.iter().map(|v| v.to_bits()));
+                bits
+            };
+            kernels::force_backend(Some(Backend::Scalar));
+            kernels::set_threads(1);
+            let reference = run();
+            assert!(f32::from_bits(reference[0]).is_nan(), "sum must be NaN");
+            assert_eq!(f32::from_bits(reference[3]), f32::INFINITY, "max skips NaN");
+            for backend in kernels::available_backends() {
+                for threads in [1usize, 4] {
+                    kernels::force_backend(Some(backend));
+                    kernels::set_threads(threads);
+                    assert!(
+                        run() == reference,
+                        "len {n}: {backend:?} x {threads} diverged on NaN/inf input"
+                    );
+                }
+            }
+        }
+    }
+
+    /// One full native-MLP step — forward, cross-entropy backward, and the
+    /// -lr drift applied through `ops` — bit-compared between the scalar
+    /// 1-thread tier and the widest available backend at 4 threads. This
+    /// is the end-to-end seal on top of the per-kernel grid: the whole
+    /// consumer chain (models.rs + tensor.rs ops) stays placement- and
+    /// dispatch-invariant.
+    #[test]
+    fn prop_native_mlp_step_bit_identical_kernels_on_vs_off() {
+        let _g = lock();
+        let _restore = Knobs;
+        let nm = push::infer::native_model("mlp_native").unwrap();
+        let push::infer::ModelSource::Native { grad, .. } = &nm.source else {
+            panic!("mlp_native is a native source")
+        };
+        let d: usize = nm.spec.x_shape[1..].iter().product();
+        let b = 16usize;
+        let step = |seed: u64| -> (u32, Vec<u32>, Vec<u32>) {
+            let mut r = Rng::new(0x5349_4d44).fold_in(seed);
+            let params = nm.init_params(seed, 0);
+            let x = Tensor::f32(vec![b, d], r.normal_vec(b * d));
+            let y = Tensor::i32(vec![b], (0..b).map(|_| r.below(2) as i32).collect());
+            let (loss, g) = grad(&params, &x, &y).expect("native grad");
+            let mut p = params.clone();
+            ops::axpy(&mut p, -0.05, &g);
+            (
+                loss.to_bits(),
+                g.as_f32().iter().map(|v| v.to_bits()).collect(),
+                p.as_f32().iter().map(|v| v.to_bits()).collect(),
+            )
+        };
+        for seed in 0..8u64 {
+            kernels::force_backend(Some(Backend::Scalar));
+            kernels::set_threads(1);
+            let want = step(seed);
+            kernels::force_backend(None);
+            kernels::set_threads(4);
+            let got = step(seed);
+            assert!(
+                got == want,
+                "seed {seed}: full MLP step diverged between scalar x1 and \
+                 default backend x4 (loss bits {:#010x} vs {:#010x})",
+                want.0,
+                got.0
+            );
+        }
     }
 }

@@ -12,33 +12,43 @@ the build fails only when an optimized path has regressed by more than 2x
 relative to what the byte/op accounting says it must beat. Gated cases are
 all hermetic, so the check needs no artifacts and no PJRT.
 
+A gate may carry `requires_feature`: it is checked only when that feature
+name appears in the measured JSON's `features` array (the bench emits its
+compiled feature set). This keeps scalar/simd pairs honest — on a build
+without `--features simd` both legs run the same scalar tier, so the pair's
+ratio says nothing about the vector path and the gate is reported SKIPPED
+instead of failing on missing speedup.
+
 Usage: check_bench_gates.py BENCH_l3.json measured.json
+       check_bench_gates.py --selftest   (run the committed fixtures)
 """
 
 import json
+import os
 import sys
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    with open(sys.argv[1]) as f:
-        baseline = json.load(f)
-    with open(sys.argv[2]) as f:
-        measured = json.load(f)
-
+def check(baseline: dict, measured: dict, baseline_name: str) -> int:
     gates = baseline.get("gates", [])
     if not gates:
-        print(f"error: no gates defined in {sys.argv[1]}")
+        print(f"error: no gates defined in {baseline_name}")
         return 1
     cases = measured.get("cases", {})
+    features = set(measured.get("features", []))
 
     failures = []
+    checked = 0
     print(f"{'gate (slow / fast)':<64} {'ratio':>8} {'min':>6}  verdict")
     for gate in gates:
         fast, slow = gate["fast"], gate["slow"]
         min_ratio = float(gate["min_ratio"])
+        need = gate.get("requires_feature")
+        if need and need not in features:
+            print(
+                f"{slow + ' / ' + fast:<64} {'-':>8} {min_ratio:>6}  "
+                f"SKIPPED (needs --features {need})"
+            )
+            continue
         missing = [name for name in (fast, slow) if name not in cases]
         if missing:
             failures.append(f"missing case(s) {missing} for gate {slow}/{fast}")
@@ -51,6 +61,7 @@ def main() -> int:
             continue
         ratio = slow_us / fast_us
         ok = ratio >= min_ratio
+        checked += 1
         print(f"{slow + ' / ' + fast:<64} {ratio:>8.2f} {min_ratio:>6}  {'ok' if ok else 'REGRESSED'}")
         if not ok:
             failures.append(
@@ -63,8 +74,52 @@ def main() -> int:
         for f in failures:
             print(f"  - {f}")
         return 1
-    print(f"\nall {len(gates)} bench gates passed")
+    print(f"\nall gates passed ({checked} checked, {len(gates) - checked} skipped)")
     return 0
+
+
+def selftest() -> int:
+    """Run the checker against the committed fixtures: a passing run, a
+    regressed run (must fail), and a scalar build where the feature-gated
+    pairs must be SKIPPED rather than failed."""
+    fixtures = os.path.join(os.path.dirname(os.path.abspath(__file__)), "fixtures")
+    with open(os.path.join(fixtures, "gates_baseline.json")) as f:
+        baseline = json.load(f)
+
+    expectations = [
+        ("measured_pass.json", 0),
+        ("measured_regressed.json", 1),
+        ("measured_no_simd.json", 0),
+    ]
+    bad = []
+    for name, want in expectations:
+        with open(os.path.join(fixtures, name)) as f:
+            measured = json.load(f)
+        print(f"--- fixture {name} (expect exit {want})")
+        got = check(baseline, measured, "gates_baseline.json")
+        print()
+        if got != want:
+            bad.append(f"{name}: exit {got}, expected {want}")
+    if bad:
+        print("selftest FAILED:")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    print(f"selftest passed ({len(expectations)} fixtures)")
+    return 0
+
+
+def main() -> int:
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        return selftest()
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        measured = json.load(f)
+    return check(baseline, measured, sys.argv[1])
 
 
 if __name__ == "__main__":
