@@ -4,7 +4,9 @@
 //! message dispatch through the M:N scheduler, particle creation at 1k
 //! scale (vs a thread-per-particle control), broadcast fan-out (vs serial
 //! sends), the PD fabric seam (single-node InProc vs the raw NEL path, and
-//! a 2-node TCP-loopback broadcast over real sockets), wire-codec
+//! a 2-node TCP-loopback broadcast over real sockets, the same broadcast
+//! on the evented poll-reactor transport, and a 256-idle-link connection
+//! scaling pair: thread-per-link vs the fixed poll-shard pool), wire-codec
 //! encode/decode throughput, device-job dispatch, context-switch (swap)
 //! cost under cache pressure, parameter views, the native SVGD kernel
 //! math, the SGMCMC chain-step body (SGLD update + native linear
@@ -249,6 +251,55 @@ fn main() {
             "    (tcp fabric: {} frames out / {} in per node-0 link)",
             frames[0].frames_sent, frames[0].frames_received
         );
+        // broadcast_256_tcp_evented: the same 2-node fan-out with every
+        // link on the shared poll reactor — parity-gated at ≤1.05x of the
+        // threaded flavor in BENCH_l3.json.
+        let (pd, pids) = mk(2, TransportKind::TcpLoopbackEvented);
+        run(&mut results, "broadcast_256_tcp_evented", 10, 100, || {
+            PFuture::join_all(&pd.broadcast(&pids, "PING", vec![])).wait().unwrap();
+        });
+    }
+
+    // ---- connection scaling: 256 idle links --------------------------------
+    // The tentpole win of the evented transport: a threaded client spends a
+    // reader thread per link (256 links -> 256 spawned threads, plus the
+    // server's per-connection writer threads), while the evented flavor
+    // parks every link on the fixed poll-shard pool. Both legs hold 256
+    // idle links against the SAME evented server (lazy NELs: an idle
+    // connection costs one fd, no NEL); the evented leg asserts the census
+    // stays under 8 transport threads.
+    {
+        use push::pd::poll::{live_transport_threads, REACTOR_THREADS};
+        use push::pd::transport::TcpNode;
+        const LINKS: usize = 256;
+
+        let addr =
+            push::pd::transport::spawn_loopback_node_evented(cfg(1, 2), dummy_model())
+                .unwrap();
+        // settle: let reader/writer threads from earlier cases exit so the
+        // census reflects this case only
+        let t0 = std::time::Instant::now();
+        while live_transport_threads() > REACTOR_THREADS
+            && t0.elapsed() < std::time::Duration::from_secs(5)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+
+        run(&mut results, "connections_256_evented", 2, 10, || {
+            let links: Vec<TcpNode> =
+                (0..LINKS).map(|_| TcpNode::connect_evented(addr).unwrap()).collect();
+            let threads = live_transport_threads();
+            assert!(
+                threads < 8,
+                "evented transport held {LINKS} links on {threads} threads (must be < 8)"
+            );
+            black_box(&links);
+        });
+        run(&mut results, "connections_256_threaded", 2, 10, || {
+            let links: Vec<TcpNode> =
+                (0..LINKS).map(|_| TcpNode::connect(addr).unwrap()).collect();
+            black_box(&links);
+        });
     }
 
     // ---- wire codec throughput (encode/decode a 1 MB tensor value) --------

@@ -296,7 +296,17 @@ pub struct PosteriorServer {
     stale_served: AtomicU64,
     shed: AtomicU64,
     latency: LatencyCells,
+    /// Decorrelates THIS server's retry backoff from every other server
+    /// in the fleet (first pid + a process-wide construction counter). A
+    /// constant seed here once made a whole fleet sleep the identical
+    /// "jittered" duration and retry in lockstep against a recovering
+    /// node — the thundering herd the jitter exists to prevent.
+    jitter_nonce: u64,
 }
+
+/// Construction counter behind the per-server jitter nonce: two servers
+/// over the same pids (process restarts, A/B handles) still decorrelate.
+static SERVER_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl PosteriorServer {
     /// `pd` must be a serve handle onto the fabric that owns `pids`
@@ -327,6 +337,8 @@ impl PosteriorServer {
             }
         };
         let classify = pd.model().task == "classify";
+        let jitter_nonce = ((pids[0].0 as u64) << 32)
+            | (SERVER_SEQ.fetch_add(1, Ordering::Relaxed) & 0xffff_ffff);
         Ok(PosteriorServer {
             pd,
             pids,
@@ -344,7 +356,23 @@ impl PosteriorServer {
             stale_served: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             latency: LatencyCells::new(),
+            jitter_nonce,
         })
+    }
+
+    /// The deterministic backoff this server would sleep before retry
+    /// `attempt` (1-based): `2^(attempt-1) * refresh_backoff`, ±25%
+    /// jitter keyed by the per-server nonce. Public so tests (and
+    /// operators debugging a herd) can audit that two servers in a fleet
+    /// retry on DISTINCT schedules.
+    pub fn retry_backoff(&self, attempt: u32) -> Duration {
+        let attempt = attempt.max(1);
+        let base_ms =
+            (self.cfg.refresh_backoff.as_millis() as u64).max(1) << (attempt - 1).min(8);
+        let mut rng = crate::util::rng::Rng::new(0x5e57_4e5e ^ self.jitter_nonce)
+            .fold_in(attempt as u64);
+        let jitter = rng.below((base_ms / 2 + 1) as usize) as u64;
+        Duration::from_millis(base_ms - base_ms / 4 + jitter)
     }
 
     /// Chains served.
@@ -411,13 +439,9 @@ impl PosteriorServer {
                 self.retries.fetch_add(1, Ordering::Relaxed);
                 // 2^(attempt-1) * base, ±25% deterministic jitter (the
                 // vendored crate set has no rand) — bounded, loud, and
-                // reproducible under test.
-                let base_ms =
-                    (self.cfg.refresh_backoff.as_millis() as u64).max(1) << (attempt - 1).min(8);
-                let mut rng =
-                    crate::util::rng::Rng::new(0x5e57_4e5e).fold_in(attempt as u64);
-                let jitter = rng.below((base_ms / 2 + 1) as usize) as u64;
-                std::thread::sleep(Duration::from_millis(base_ms - base_ms / 4 + jitter));
+                // reproducible under test, but keyed per-server so a
+                // fleet never retries in lockstep (see `retry_backoff`).
+                std::thread::sleep(self.retry_backoff(attempt));
             }
             for (pid, res) in self.pd.snapshot_chains(&want, self.cfg.refresh_deadline) {
                 match res {

@@ -162,19 +162,34 @@ fn parse_topology(flags: &Flags) -> Result<Topology> {
     }
     let transport = match flags.str_or("transport", "inproc").as_str() {
         "inproc" => TransportKind::InProc,
-        "tcp" => match std::env::var("PUSH_NODES") {
-            Ok(spec) if !spec.trim().is_empty() => {
-                let addrs = spec
-                    .split(',')
-                    .map(|a| a.trim().parse().map_err(|e| anyhow!("$PUSH_NODES {a:?}: {e}")))
-                    .collect::<Result<Vec<_>>>()?;
-                TransportKind::TcpConnect(addrs)
-            }
-            _ => TransportKind::TcpLoopback,
+        // With $PUSH_NODES set, connect to external node workers; else
+        // spawn hermetic loopback nodes. "tcp" is the threaded reference
+        // transport, "tcp-evented" multiplexes every link onto the
+        // reactor's fixed poll pool (same wire protocol).
+        "tcp" => match parse_push_nodes()? {
+            Some(addrs) => TransportKind::TcpConnect(addrs),
+            None => TransportKind::TcpLoopback,
         },
-        other => bail!("--transport must be inproc|tcp, got {other:?}"),
+        "tcp-evented" => match parse_push_nodes()? {
+            Some(addrs) => TransportKind::TcpConnectEvented(addrs),
+            None => TransportKind::TcpLoopbackEvented,
+        },
+        other => bail!("--transport must be inproc|tcp|tcp-evented, got {other:?}"),
     };
     Ok(Topology { nodes, transport })
+}
+
+fn parse_push_nodes() -> Result<Option<Vec<std::net::SocketAddr>>> {
+    match std::env::var("PUSH_NODES") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let addrs = spec
+                .split(',')
+                .map(|a| a.trim().parse().map_err(|e| anyhow!("$PUSH_NODES {a:?}: {e}")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Some(addrs))
+        }
+        _ => Ok(None),
+    }
 }
 
 fn scale_opts(flags: &Flags) -> Result<ScaleOpts> {
@@ -526,7 +541,18 @@ fn serve(flags: &Flags) -> Result<()> {
     let heartbeat_ms = flags.usize_or("heartbeat-every", 0).map_err(anyhow::Error::msg)?;
     let dead_after_ms =
         flags.usize_or("dead-after", heartbeat_ms * 4).map_err(anyhow::Error::msg)?;
-    let topology = parse_topology(flags)?;
+    let mut topology = parse_topology(flags)?;
+    // The serving tier defaults its TCP links to the evented transport:
+    // parked client connections must not cost parked threads. Training
+    // runs keep "tcp" threaded (the reference path); --tcp-threaded
+    // opts serving back into it.
+    if !flags.has("tcp-threaded") {
+        topology.transport = match topology.transport {
+            TransportKind::TcpLoopback => TransportKind::TcpLoopbackEvented,
+            TransportKind::TcpConnect(addrs) => TransportKind::TcpConnectEvented(addrs),
+            t => t,
+        };
+    }
 
     let manifest = load_manifest(&model_name)?;
     let cfg = NelConfig {
@@ -735,8 +761,11 @@ fn serve(flags: &Flags) -> Result<()> {
 /// Hidden subcommand: one distributed-NEL node server. Binds
 /// --host:--port (default 127.0.0.1, ephemeral), prints the address, and
 /// serves connections — one NEL per connection — until killed (or after
-/// one connection with --once). `push train --transport tcp` reaches
-/// workers via $PUSH_NODES=host:port,host:port.
+/// one connection with --once). The default is the evented accept loop
+/// (any number of concurrent connections off the reactor's poll pool);
+/// --once and --threaded use the one-connection-per-loop reference
+/// server. `push train --transport tcp` reaches workers via
+/// $PUSH_NODES=host:port,host:port.
 fn node_worker(flags: &Flags) -> Result<()> {
     let model_name = flags.str_or("model", "linear_native");
     let manifest = load_manifest(&model_name)?;
@@ -754,11 +783,19 @@ fn node_worker(flags: &Flags) -> Result<()> {
     };
     let listener = std::net::TcpListener::bind((host.as_str(), port))?;
     println!("node-worker listening on {} (model {model_name})", listener.local_addr()?);
-    loop {
-        push::pd::transport::serve_one(&listener, cfg.clone(), model.clone())?;
-        if flags.has("once") {
-            return Ok(());
+    if flags.has("once") || flags.has("threaded") {
+        loop {
+            push::pd::transport::serve_one(&listener, cfg.clone(), model.clone())?;
+            if flags.has("once") {
+                return Ok(());
+            }
         }
+    }
+    push::pd::transport::serve_evented(listener, cfg, model)?;
+    // The reactor owns the accept loop now; this thread just has to stay
+    // alive (the worker runs until killed).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
 

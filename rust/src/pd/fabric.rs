@@ -30,8 +30,8 @@ use anyhow::{anyhow, ensure, Result};
 use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
 use crate::particle::{PFuture, Pid, PushError, Value};
 use crate::pd::transport::{
-    decode_state_value, loopback_node, wait_deadline, InProc, LinkHealth, NodeTransport,
-    TcpNode, TransportCounters,
+    decode_state_value, loopback_node, loopback_node_evented, wait_deadline, InProc,
+    LinkHealth, NodeTransport, TcpNode, TransportCounters,
 };
 use crate::pd::wire::{CreateSpec, DirectOp};
 use crate::runtime::{ModelSpec, Tensor};
@@ -49,6 +49,13 @@ pub enum TransportKind {
     /// Connect to externally launched `push node-worker` servers; one
     /// address per node.
     TcpConnect(Vec<SocketAddr>),
+    /// [`TransportKind::TcpLoopback`] on the event-driven flavor: same
+    /// wire protocol and invariants, but every connection (both halves)
+    /// is multiplexed onto the reactor's fixed poll pool instead of
+    /// dedicated reader/writer threads.
+    TcpLoopbackEvented,
+    /// [`TransportKind::TcpConnect`] with evented client links.
+    TcpConnectEvented(Vec<SocketAddr>),
 }
 
 /// Node topology of a PD.
@@ -169,6 +176,18 @@ impl NodeFabric {
                     // be binding their ports — launch order must not
                     // matter (6 tries over ~3 s).
                     links.push(Arc::new(TcpNode::connect_with_backoff(addrs[i], 6)?));
+                }
+                TransportKind::TcpLoopbackEvented => {
+                    links.push(Arc::new(loopback_node_evented(node_cfg, model.clone())?));
+                }
+                TransportKind::TcpConnectEvented(addrs) => {
+                    ensure!(
+                        addrs.len() == topology.nodes,
+                        "need {} node addresses, got {}",
+                        topology.nodes,
+                        addrs.len()
+                    );
+                    links.push(Arc::new(TcpNode::connect_evented_with_backoff(addrs[i], 6)?));
                 }
             }
         }
@@ -530,7 +549,7 @@ impl NodeFabric {
             .zip(slots)
             .map(|(pid, fut)| {
                 let fut = fut.expect("every slot filled");
-                let res = wait_deadline(&fut, expiry)
+                let res = wait_deadline(&fut, expiry, deadline)
                     .map_err(|e| {
                         let n = self.node_of(*pid);
                         match (n, n.and_then(|n| self.peer_addr(n))) {

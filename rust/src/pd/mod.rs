@@ -14,6 +14,7 @@
 
 pub mod checkpoint;
 pub mod fabric;
+pub mod poll;
 pub mod programs;
 pub mod transport;
 pub mod wire;

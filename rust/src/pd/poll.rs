@@ -1,0 +1,412 @@
+//! Readiness-driven socket multiplexing for the wire transport
+//! (DESIGN.md §Event-driven transport).
+//!
+//! The threaded transport parks one reader thread per client link and a
+//! reader/writer thread pair per server connection — fine for a handful
+//! of training nodes, fatal for a serving tier holding thousands of
+//! client connections. This module multiplexes EVERY evented connection
+//! (client and server side) onto a small fixed pool of poll threads:
+//!
+//! * a [`Reactor`] owns `REACTOR_THREADS` shards, each one poll thread
+//!   with its own interest set; connections are round-robined across
+//!   shards at registration;
+//! * each shard sleeps in `poll(2)` on its fds plus a self-wake socket
+//!   pair, reads readable connections to `WouldBlock`, reassembles
+//!   length-prefixed frames incrementally, and hands each complete frame
+//!   to the connection's [`Sink`];
+//! * writes never go through the reactor: senders write on their own
+//!   thread under the link's existing write mutex ([`write_frame_nb`]
+//!   parks in `poll(POLLOUT)` when the socket buffer is full), so the
+//!   per-sender FIFO order of the threaded transport is preserved
+//!   verbatim.
+//!
+//! No `libc` crate: the one foreign call is a `poll(2)` FFI shim behind
+//! the [`sys`] module, everything else is `std` (`set_nonblocking` +
+//! `AsRawFd`). The completion side reuses `PFuture::on_ready`
+//! continuations unchanged — readiness is the only new concept.
+//!
+//! A [`Sink::on_frame`] may block its shard (the node server's
+//! synchronous ops wait on NEL completion); that is a latency cost for
+//! connections sharing the shard, never a deadlock, because NELs and
+//! senders make progress on their own threads. Frame demux itself never
+//! waits on another connection.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::pd::wire::MAX_FRAME;
+
+/// Fixed poll-thread pool size. The `connections_256_evented` bench gate
+/// pins "256 idle links on <8 transport threads"; 4 shards leave headroom
+/// while still spreading busy connections across cores.
+pub const REACTOR_THREADS: usize = 4;
+
+// ---- transport thread census ----------------------------------------------
+
+static LIVE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII census of live transport-owned threads (reader loops, server
+/// read/write threads, loopback accept threads, reactor shards). The
+/// `connections_256_{threaded,evented}` bench pair asserts the thread-count
+/// win through this counter, so every transport thread body holds a gauge.
+pub struct ThreadGauge(());
+
+impl ThreadGauge {
+    pub fn enter() -> ThreadGauge {
+        LIVE_THREADS.fetch_add(1, Ordering::AcqRel);
+        ThreadGauge(())
+    }
+}
+
+impl Drop for ThreadGauge {
+    fn drop(&mut self) {
+        LIVE_THREADS.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Number of transport-owned threads alive right now.
+pub fn live_transport_threads() -> usize {
+    LIVE_THREADS.load(Ordering::Acquire)
+}
+
+// ---- poll(2) shim ----------------------------------------------------------
+
+/// The one foreign call. `PollFd` and the event bits have identical
+/// layout/values on Linux and the BSDs (macOS included), so no `libc`
+/// crate is needed — just the prototype.
+mod sys {
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    #[cfg(target_os = "linux")]
+    type Nfds = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type Nfds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: std::os::raw::c_int) -> std::os::raw::c_int;
+    }
+
+    /// `poll(2)` with EINTR retried. Returns the number of ready fds
+    /// (0 on timeout).
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+// ---- nonblocking writes ----------------------------------------------------
+
+/// Write all of `buf` on a nonblocking socket, parking in `poll(POLLOUT)`
+/// whenever the kernel buffer is full. Blocking-write semantics on a
+/// nonblocking fd — callers keep the threaded transport's behavior (and
+/// its per-sender FIFO, since they already serialize under a write mutex).
+pub fn write_all_nb(stream: &TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
+    let mut s = stream;
+    while !buf.is_empty() {
+        match s.write(buf) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "socket write returned zero",
+                ))
+            }
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                let mut fds = [sys::PollFd {
+                    fd: stream.as_raw_fd(),
+                    events: sys::POLLOUT,
+                    revents: 0,
+                }];
+                // POLLERR/POLLHUP surface as a hard error on the next write
+                sys::poll_fds(&mut fds, 5_000)?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// One length-prefixed frame ([`crate::pd::wire::write_frame`]'s layout)
+/// on a nonblocking socket: `len: u32 le | payload`.
+pub fn write_frame_nb(stream: &TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds MAX_FRAME", payload.len()),
+        ));
+    }
+    write_all_nb(stream, &(payload.len() as u32).to_le_bytes())?;
+    write_all_nb(stream, payload)
+}
+
+// ---- connection sinks ------------------------------------------------------
+
+/// What a sink tells the reactor after handling a frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameVerdict {
+    Continue,
+    /// Close the connection; [`Sink::on_close`] fires next.
+    Close,
+}
+
+/// The read-side owner of one evented connection. `on_frame` receives
+/// every complete frame (length prefix stripped) in arrival order;
+/// `on_close` fires exactly once when the connection dies (EOF, socket
+/// error, oversized frame header, or an `on_frame` verdict of `Close`).
+pub trait Sink: Send {
+    fn on_frame(&mut self, frame: Vec<u8>) -> FrameVerdict;
+    fn on_close(&mut self);
+}
+
+// ---- reactor ---------------------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    /// Partial-read accumulator; complete frames are drained off the front.
+    buf: VecDeque<u8>,
+    sink: Box<dyn Sink>,
+}
+
+struct Lis {
+    listener: TcpListener,
+    on_accept: Box<dyn FnMut(TcpStream) + Send>,
+}
+
+enum Cmd {
+    Conn(Conn),
+    Lis(Lis),
+}
+
+struct Shard {
+    inbox: Mutex<Vec<Cmd>>,
+    /// Write end of the shard's self-wake socket pair; one byte unparks
+    /// the poll thread so a fresh registration is picked up immediately.
+    waker: Mutex<TcpStream>,
+}
+
+impl Shard {
+    fn push(&self, cmd: Cmd) {
+        self.inbox.lock().unwrap().push(cmd);
+        // WouldBlock means wake bytes are already queued — the poll thread
+        // is guaranteed to wake and drain the inbox either way.
+        let _ = self.waker.lock().unwrap().write(&[1u8]);
+    }
+}
+
+/// The process-wide event loop: a fixed pool of poll threads multiplexing
+/// every evented connection and listener. Lives for the life of the
+/// process (transport links come and go; the pool does not).
+pub struct Reactor {
+    shards: Vec<&'static Shard>,
+    next: AtomicUsize,
+}
+
+impl Reactor {
+    /// The global reactor, spawned on first use.
+    pub fn global() -> &'static Reactor {
+        static GLOBAL: OnceLock<Reactor> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let mut shards = Vec::with_capacity(REACTOR_THREADS);
+            for i in 0..REACTOR_THREADS {
+                let (wake_tx, wake_rx) =
+                    wake_pair().expect("reactor: loopback wake pair");
+                let shard: &'static Shard = Box::leak(Box::new(Shard {
+                    inbox: Mutex::new(Vec::new()),
+                    waker: Mutex::new(wake_tx),
+                }));
+                std::thread::Builder::new()
+                    .name(format!("push-poll-{i}"))
+                    .spawn(move || shard_loop(shard, wake_rx))
+                    .expect("reactor: spawn poll thread");
+                shards.push(shard);
+            }
+            Reactor { shards, next: AtomicUsize::new(0) }
+        })
+    }
+
+    /// Hand `stream` to the reactor: it becomes nonblocking, joins a
+    /// shard's interest set, and `sink` receives its frames. Writers keep
+    /// using their own (cloned) handle with [`write_frame_nb`].
+    pub fn register(&self, stream: TcpStream, sink: Box<dyn Sink>) -> std::io::Result<()> {
+        stream.set_nonblocking(true)?;
+        self.shard().push(Cmd::Conn(Conn { stream, buf: VecDeque::new(), sink }));
+        Ok(())
+    }
+
+    /// Register an accept loop: `on_accept` runs on the shard thread for
+    /// every accepted connection (typically to `register` it right back).
+    /// The listener stays in the interest set for the life of the process.
+    pub fn register_listener(
+        &self,
+        listener: TcpListener,
+        on_accept: Box<dyn FnMut(TcpStream) + Send>,
+    ) -> std::io::Result<()> {
+        listener.set_nonblocking(true)?;
+        self.shard().push(Cmd::Lis(Lis { listener, on_accept }));
+        Ok(())
+    }
+
+    /// Poll threads in the pool (the bench's thread-count claim).
+    pub fn threads(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self) -> &'static Shard {
+        self.shards[self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len()]
+    }
+}
+
+/// A self-wake channel from plain std: a loopback TCP pair (no `pipe(2)`,
+/// which would need more FFI). Returns (write end, read end).
+fn wake_pair() -> std::io::Result<(TcpStream, TcpStream)> {
+    let l = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = l.local_addr()?;
+    let tx = TcpStream::connect(addr)?;
+    let (rx, _) = l.accept()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    tx.set_nodelay(true).ok();
+    Ok((tx, rx))
+}
+
+fn shard_loop(shard: &'static Shard, wake_rx: TcpStream) {
+    let _gauge = ThreadGauge::enter();
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut listeners: Vec<Lis> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let ready = sys::POLLIN | sys::POLLERR | sys::POLLHUP;
+    loop {
+        for cmd in shard.inbox.lock().unwrap().drain(..) {
+            match cmd {
+                Cmd::Conn(c) => conns.push(c),
+                Cmd::Lis(l) => listeners.push(l),
+            }
+        }
+
+        let mut fds = Vec::with_capacity(1 + listeners.len() + conns.len());
+        fds.push(sys::PollFd { fd: wake_rx.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+        for l in &listeners {
+            fds.push(sys::PollFd {
+                fd: l.listener.as_raw_fd(),
+                events: sys::POLLIN,
+                revents: 0,
+            });
+        }
+        for c in &conns {
+            fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+        }
+        // 1 s tick even with nothing ready, so a poll error can't spin and
+        // a missed wake byte (can't happen, but cheap insurance) heals.
+        if sys::poll_fds(&mut fds, 1_000).is_err() {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            continue;
+        }
+
+        if fds[0].revents != 0 {
+            drain_wake(&wake_rx, &mut scratch);
+        }
+
+        for (i, l) in listeners.iter_mut().enumerate() {
+            if fds[1 + i].revents & ready == 0 {
+                continue;
+            }
+            loop {
+                match l.listener.accept() {
+                    Ok((stream, _peer)) => (l.on_accept)(stream),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    // Transient accept errors (ECONNABORTED etc.): the
+                    // listener itself is fine, retry on the next tick.
+                    Err(_) => break,
+                }
+            }
+        }
+
+        let base = 1 + listeners.len();
+        let mut dead = Vec::new();
+        for (i, c) in conns.iter_mut().enumerate() {
+            if fds[base + i].revents & ready == 0 {
+                continue;
+            }
+            if service_conn(c, &mut scratch) == FrameVerdict::Close {
+                dead.push(i);
+            }
+        }
+        // Highest index first: swap_remove never disturbs a smaller index.
+        for i in dead.into_iter().rev() {
+            let mut c = conns.swap_remove(i);
+            c.sink.on_close();
+        }
+    }
+}
+
+fn drain_wake(wake_rx: &TcpStream, scratch: &mut [u8]) {
+    let mut rx = wake_rx;
+    loop {
+        match rx.read(scratch) {
+            Ok(0) => return, // waker gone: process teardown
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return, // WouldBlock: drained
+        }
+    }
+}
+
+/// Read a readable connection to `WouldBlock`, dispatching every complete
+/// frame in order. The frame layout is exactly `wire::read_frame`'s —
+/// `len: u32 le | payload` with the same `MAX_FRAME` bound.
+fn service_conn(c: &mut Conn, scratch: &mut [u8]) -> FrameVerdict {
+    loop {
+        match (&c.stream).read(scratch) {
+            Ok(0) => return FrameVerdict::Close, // EOF
+            Ok(n) => {
+                c.buf.extend(&scratch[..n]);
+                loop {
+                    if c.buf.len() < 4 {
+                        break;
+                    }
+                    let header: Vec<u8> = c.buf.iter().take(4).copied().collect();
+                    let len =
+                        u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+                    if len > MAX_FRAME {
+                        return FrameVerdict::Close; // framing is unrecoverable
+                    }
+                    if c.buf.len() < 4 + len {
+                        break; // frame still in flight
+                    }
+                    c.buf.drain(..4);
+                    let frame: Vec<u8> = c.buf.drain(..len).collect();
+                    if c.sink.on_frame(frame) == FrameVerdict::Close {
+                        return FrameVerdict::Close;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return FrameVerdict::Continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return FrameVerdict::Close,
+        }
+    }
+}

@@ -25,6 +25,17 @@
 //! Everything binds 127.0.0.1 ephemeral ports in tests/benches, so CI
 //! exercises real serialization and real sockets hermetically.
 //!
+//! Both halves come in two mechanically-equivalent flavors sharing one
+//! demux/dispatch path (DESIGN.md §Event-driven transport):
+//! * **threaded** (the reference): one reader thread per client link, one
+//!   reader loop + writer thread per server connection;
+//! * **evented** ([`TcpNode::connect_evented`], [`serve_evented`]): all
+//!   connections multiplexed onto [`crate::pd::poll::Reactor`]'s fixed
+//!   poll-thread pool; `PFuture::on_ready` continuations are the
+//!   completion mechanism on both sides, server NELs are created lazily
+//!   on the first data frame, and the accept loop holds N concurrent
+//!   connections per node instead of exactly one.
+//!
 //! Liveness (DESIGN.md §Elastic fabric): the fabric's monitor calls
 //! [`NodeTransport::heartbeat_tick`] on a cadence; a TCP link tracks
 //! [`LinkHealth`] from heartbeat pongs, and a link silent past
@@ -44,8 +55,9 @@ use anyhow::{anyhow, Result};
 
 use crate::nel::{CreateOpts, Nel, NelConfig, NelStats};
 use crate::particle::{HandlerTable, PFuture, Pid, PushError, Value};
-use crate::pd::wire::{self, CreateSpec, DirectOp, Request, Response};
+use crate::pd::poll::{self, FrameVerdict, Sink, ThreadGauge};
 use crate::pd::programs;
+use crate::pd::wire::{self, CreateSpec, DirectOp, Request, Response};
 use crate::runtime::{ModelSpec, Tensor};
 
 /// Frame/byte counters of one node link. The in-process link never
@@ -207,19 +219,49 @@ pub trait NodeTransport: Send + Sync {
 /// heartbeat monitor declares the link dead — the caller owns retry and
 /// failover policy. The future itself stays registered with the reader
 /// demux; a late response completes it harmlessly with nobody waiting.
-pub fn wait_deadline(fut: &PFuture, expiry: Option<Instant>) -> Result<Value, PushError> {
+///
+/// `configured` is the caller's whole deadline budget. The error names
+/// BOTH it and the residual wait this future actually got: when a shared
+/// expiry lapsed while earlier futures in the batch were being drained,
+/// the residual is ~0 — reported alone it reads as "expired after 3ns"
+/// and sends operators hunting a phantom misconfiguration.
+pub fn wait_deadline(
+    fut: &PFuture,
+    expiry: Option<Instant>,
+    configured: Option<Duration>,
+) -> Result<Value, PushError> {
     match expiry {
         None => fut.wait(),
         Some(t) => {
             let remaining = t.saturating_duration_since(Instant::now());
             match fut.wait_timeout(remaining) {
                 Some(res) => res,
-                None => Err(PushError::new(format!(
-                    "request deadline expired after {remaining:?} (node slow or unreachable)"
-                ))),
+                None => {
+                    let budget = configured
+                        .map(|d| format!("{d:?}"))
+                        .unwrap_or_else(|| "unspecified".to_string());
+                    Err(PushError::new(format!(
+                        "request deadline expired (configured {budget}, residual wait \
+                         {remaining:?}; node slow or unreachable)"
+                    )))
+                }
             }
         }
     }
+}
+
+/// Decode a pid that crossed the wire as a tagged `usize`. Pids are u32
+/// everywhere else; a bare `as u32` here would silently wrap a corrupt or
+/// hostile value (pid 4294967296 becomes pid 0) and hand one particle's
+/// traffic to another. Out-of-range values are a decode error naming the
+/// offending value instead.
+pub fn decode_wire_pid(raw: usize) -> Result<Pid, PushError> {
+    u32::try_from(raw).map(Pid).map_err(|_| {
+        PushError::new(format!(
+            "wire pid {raw} exceeds the u32 pid space (max {}); refusing silent truncation",
+            u32::MAX
+        ))
+    })
 }
 
 /// Encode a particle's state entries the way `ParticleState` responses
@@ -414,11 +456,38 @@ impl HealthCells {
     }
 }
 
+/// The write half of a TCP link. Both flavors serialize whole frames
+/// under the link's write mutex, so per-sender FIFO order is identical.
+enum WriteHalf {
+    /// Blocking socket + BufWriter, flushed per frame (threaded reader).
+    Buffered(BufWriter<TcpStream>),
+    /// Nonblocking socket shared with the reactor's poll set; writes park
+    /// in `poll(POLLOUT)` when the kernel buffer is full.
+    Evented(TcpStream),
+}
+
+impl WriteHalf {
+    fn send_frame(&mut self, payload: &[u8]) -> Result<()> {
+        match self {
+            WriteHalf::Buffered(w) => {
+                wire::write_frame(w, payload)?;
+                w.flush()?;
+                Ok(())
+            }
+            WriteHalf::Evented(s) => {
+                poll::write_frame_nb(s, payload)?;
+                Ok(())
+            }
+        }
+    }
+}
+
 /// A node reached over TCP. Cloned per fabric; owns the write half of the
-/// connection plus a reader thread that demultiplexes responses.
+/// connection plus a demux for responses — a dedicated reader thread
+/// (threaded flavor) or a reactor registration (evented flavor).
 pub struct TcpNode {
     stream: TcpStream,
-    writer: Mutex<BufWriter<TcpStream>>,
+    writer: Mutex<WriteHalf>,
     pending: Arc<Mutex<HashMap<u64, Pending>>>,
     /// Set by the reader thread when the connection dies. Checked around
     /// every pending-map insert: a request registered after the reader
@@ -429,22 +498,48 @@ pub struct TcpNode {
     counters: Arc<CounterCells>,
     health: Arc<HealthCells>,
     peer: SocketAddr,
+    evented: bool,
 }
 
 impl TcpNode {
-    /// Connect to a node server at `addr`.
+    /// Connect to a node server at `addr` (threaded reference flavor: a
+    /// dedicated reader thread demultiplexes responses).
     pub fn connect(addr: SocketAddr) -> Result<TcpNode> {
+        TcpNode::connect_via(addr, false)
+    }
+
+    /// Connect to a node server at `addr` on the evented flavor: the
+    /// response demux runs on the global reactor's poll pool instead of a
+    /// dedicated thread, so any number of links cost zero parked threads.
+    /// Same wire protocol, counters, fault hooks, and FIFO guarantees.
+    pub fn connect_evented(addr: SocketAddr) -> Result<TcpNode> {
+        TcpNode::connect_via(addr, true)
+    }
+
+    fn connect_via(addr: SocketAddr, evented: bool) -> Result<TcpNode> {
         #[cfg(any(test, feature = "faultinject"))]
         fault::on_connect(addr)?;
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        let writer = Mutex::new(BufWriter::new(stream.try_clone()?));
         let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
         let closed = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let counters = Arc::new(CounterCells::default());
         let health = Arc::new(HealthCells::fresh());
-        let rstream = stream.try_clone()?;
-        {
+        let writer = if evented {
+            // Registration flips the shared fd nonblocking, so the write
+            // half must be the poll-assisted one.
+            poll::Reactor::global().register(
+                stream.try_clone()?,
+                Box::new(ClientDemux {
+                    pending: pending.clone(),
+                    closed: closed.clone(),
+                    counters: counters.clone(),
+                    health: health.clone(),
+                }),
+            )?;
+            Mutex::new(WriteHalf::Evented(stream.try_clone()?))
+        } else {
+            let rstream = stream.try_clone()?;
             let pending = pending.clone();
             let closed = closed.clone();
             let counters = counters.clone();
@@ -452,7 +547,8 @@ impl TcpNode {
             std::thread::Builder::new()
                 .name(format!("push-tcp-client-{addr}"))
                 .spawn(move || reader_loop(rstream, pending, closed, counters, health))?;
-        }
+            Mutex::new(WriteHalf::Buffered(BufWriter::new(stream.try_clone()?)))
+        };
         Ok(TcpNode {
             stream,
             writer,
@@ -462,6 +558,7 @@ impl TcpNode {
             counters,
             health,
             peer: addr,
+            evented,
         })
     }
 
@@ -470,10 +567,19 @@ impl TcpNode {
     /// order of `push node-worker` processes and the coordinator stops
     /// mattering (the worker may still be binding its port).
     pub fn connect_with_backoff(addr: SocketAddr, attempts: u32) -> Result<TcpNode> {
+        TcpNode::backoff_via(addr, attempts, false)
+    }
+
+    /// [`TcpNode::connect_evented`] behind the same backoff schedule.
+    pub fn connect_evented_with_backoff(addr: SocketAddr, attempts: u32) -> Result<TcpNode> {
+        TcpNode::backoff_via(addr, attempts, true)
+    }
+
+    fn backoff_via(addr: SocketAddr, attempts: u32, evented: bool) -> Result<TcpNode> {
         let attempts = attempts.max(1);
         let mut last: Option<anyhow::Error> = None;
         for attempt in 0..attempts {
-            match TcpNode::connect(addr) {
+            match TcpNode::connect_via(addr, evented) {
                 Ok(node) => return Ok(node),
                 Err(e) => {
                     crate::log_debug!(
@@ -558,14 +664,7 @@ impl TcpNode {
             self.counters.errors.fetch_add(1, Ordering::Relaxed);
             return Err(PushError::new(format!("node {}: connection closed", self.peer)));
         }
-        let sent = {
-            let mut w = self.writer.lock().unwrap();
-            let written = wire::write_frame(&mut *w, &buf);
-            match written {
-                Ok(()) => w.flush().map_err(anyhow::Error::from),
-                Err(e) => Err(e),
-            }
-        };
+        let sent = self.writer.lock().unwrap().send_frame(&buf);
         if let Err(e) = sent {
             self.pending.lock().unwrap().remove(&id);
             self.counters.errors.fetch_add(1, Ordering::Relaxed);
@@ -613,58 +712,83 @@ fn reader_loop(
     counters: Arc<CounterCells>,
     health: Arc<HealthCells>,
 ) {
+    let _gauge = ThreadGauge::enter();
     let mut r = BufReader::new(stream);
     loop {
         let buf = match wire::read_frame(&mut r) {
             Ok(b) => b,
             Err(_) => break, // EOF or a framing error: connection is done
         };
-        let (id, resp) = match wire::decode_response(&buf) {
-            Ok(x) => x,
-            Err(_) => break,
-        };
-        let entry = pending.lock().unwrap().remove(&id);
-        // Heartbeat pongs stay off the data-path counters, mirroring the
-        // uncounted send side.
-        if !matches!(entry, Some(Pending::Heartbeat)) {
-            counters.frames_received.fetch_add(1, Ordering::Relaxed);
-            counters.bytes_received.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
-        }
-        match (entry, resp) {
-            (Some(Pending::Heartbeat), _) => health.pong(),
-            (Some(Pending::One(fut)), Response::One(res)) => {
-                fut.complete(res.map_err(PushError::new));
-            }
-            (Some(Pending::Many(futs)), Response::Many(results)) => {
-                let n = results.len();
-                for (fut, res) in futs.iter().zip(results) {
-                    fut.complete(res.map_err(PushError::new));
-                }
-                // a short batch (protocol bug) must not strand futures
-                for fut in futs.iter().skip(n) {
-                    fut.complete(Err(PushError::new("short broadcast response")));
-                }
-            }
-            (Some(Pending::Stats(tx)), Response::Stats(stats)) => {
-                let _ = tx.send(Ok(*stats));
-            }
-            (Some(Pending::One(fut)), _) => {
-                fut.complete(Err(PushError::new("mismatched response kind")));
-            }
-            (Some(Pending::Many(futs)), _) => {
-                for fut in futs {
-                    fut.complete(Err(PushError::new("mismatched response kind")));
-                }
-            }
-            (Some(Pending::Stats(tx)), _) => {
-                let _ = tx.send(Err(PushError::new("mismatched response kind")));
-            }
-            (None, _) => {} // response for an abandoned request
+        if demux_response(&buf, &pending, &counters, &health) == FrameVerdict::Close {
+            break;
         }
     }
-    // Connection gone. Flag first, THEN drain: `request` re-checks the
-    // flag after its insert, so every pending entry is either drained
-    // here or rejected there — nothing can wait on an unwatched map.
+    sever_link(&pending, &closed, &counters, &health);
+}
+
+/// Demultiplex one response frame to its parked future(s). THE client
+/// demux — the threaded reader thread and the evented reactor sink both
+/// run exactly this, so the two flavors cannot drift.
+fn demux_response(
+    buf: &[u8],
+    pending: &Mutex<HashMap<u64, Pending>>,
+    counters: &CounterCells,
+    health: &HealthCells,
+) -> FrameVerdict {
+    let (id, resp) = match wire::decode_response(buf) {
+        Ok(x) => x,
+        Err(_) => return FrameVerdict::Close,
+    };
+    let entry = pending.lock().unwrap().remove(&id);
+    // Heartbeat pongs stay off the data-path counters, mirroring the
+    // uncounted send side.
+    if !matches!(entry, Some(Pending::Heartbeat)) {
+        counters.frames_received.fetch_add(1, Ordering::Relaxed);
+        counters.bytes_received.fetch_add(buf.len() as u64 + 4, Ordering::Relaxed);
+    }
+    match (entry, resp) {
+        (Some(Pending::Heartbeat), _) => health.pong(),
+        (Some(Pending::One(fut)), Response::One(res)) => {
+            fut.complete(res.map_err(PushError::new));
+        }
+        (Some(Pending::Many(futs)), Response::Many(results)) => {
+            let n = results.len();
+            for (fut, res) in futs.iter().zip(results) {
+                fut.complete(res.map_err(PushError::new));
+            }
+            // a short batch (protocol bug) must not strand futures
+            for fut in futs.iter().skip(n) {
+                fut.complete(Err(PushError::new("short broadcast response")));
+            }
+        }
+        (Some(Pending::Stats(tx)), Response::Stats(stats)) => {
+            let _ = tx.send(Ok(*stats));
+        }
+        (Some(Pending::One(fut)), _) => {
+            fut.complete(Err(PushError::new("mismatched response kind")));
+        }
+        (Some(Pending::Many(futs)), _) => {
+            for fut in futs {
+                fut.complete(Err(PushError::new("mismatched response kind")));
+            }
+        }
+        (Some(Pending::Stats(tx)), _) => {
+            let _ = tx.send(Err(PushError::new("mismatched response kind")));
+        }
+        (None, _) => {} // response for an abandoned request
+    }
+    FrameVerdict::Continue
+}
+
+/// The connection-closed drain. Flag first, THEN drain: `request`
+/// re-checks the flag after its insert, so every pending entry is either
+/// drained here or rejected there — nothing can wait on an unwatched map.
+fn sever_link(
+    pending: &Mutex<HashMap<u64, Pending>>,
+    closed: &std::sync::atomic::AtomicBool,
+    counters: &CounterCells,
+    health: &HealthCells,
+) {
     closed.store(true, Ordering::Release);
     health.set(LinkHealth::Dead);
     let drained: Vec<Pending> = pending.lock().unwrap().drain().map(|(_, p)| p).collect();
@@ -690,9 +814,32 @@ fn reader_loop(
     }
 }
 
+/// The evented client's read side: the reactor hands it frames, it runs
+/// the shared [`demux_response`] / [`sever_link`] pair.
+struct ClientDemux {
+    pending: Arc<Mutex<HashMap<u64, Pending>>>,
+    closed: Arc<std::sync::atomic::AtomicBool>,
+    counters: Arc<CounterCells>,
+    health: Arc<HealthCells>,
+}
+
+impl Sink for ClientDemux {
+    fn on_frame(&mut self, frame: Vec<u8>) -> FrameVerdict {
+        demux_response(&frame, &self.pending, &self.counters, &self.health)
+    }
+
+    fn on_close(&mut self) {
+        sever_link(&self.pending, &self.closed, &self.counters, &self.health);
+    }
+}
+
 impl NodeTransport for TcpNode {
     fn kind(&self) -> &'static str {
-        "tcp"
+        if self.evented {
+            "tcp-evented"
+        } else {
+            "tcp"
+        }
     }
 
     fn create_local(&self, _opts: CreateOpts) -> Result<Pid, PushError> {
@@ -705,7 +852,7 @@ impl NodeTransport for TcpNode {
 
     fn create_spec(&self, spec: CreateSpec) -> Result<Pid, PushError> {
         match self.call_wait(&Request::Create(spec))? {
-            Value::Usize(pid) => Ok(Pid(pid as u32)),
+            Value::Usize(pid) => decode_wire_pid(pid),
             other => Err(PushError::new(format!("create returned {other:?}"))),
         }
     }
@@ -747,7 +894,7 @@ impl NodeTransport for TcpNode {
             }
             let t = pair.remove(1).tensor()?;
             let pid = pair[0].usize()?;
-            out.push((Pid(pid as u32), t));
+            out.push((decode_wire_pid(pid)?, t));
         }
         Ok(out)
     }
@@ -870,21 +1017,148 @@ pub fn spawn_loopback_node(
     let handle = std::thread::Builder::new()
         .name(format!("push-node-{addr}"))
         .spawn(move || {
+            let _gauge = ThreadGauge::enter();
             let _ = serve_one(&listener, cfg, model);
         })?;
     Ok((addr, handle))
 }
 
 /// Accept one connection and serve it to completion. The standalone
-/// `push node-worker` subcommand loops over this.
+/// `push node-worker` subcommand's `--once` mode uses this; its default
+/// is the evented accept loop ([`serve_evented`]).
 pub fn serve_one(listener: &TcpListener, cfg: NelConfig, model: Arc<ModelSpec>) -> Result<()> {
     let (stream, _peer) = listener.accept()?;
     serve_connection(stream, cfg, model)
 }
 
-/// The per-connection node server: one fresh NEL (this node's scheduler +
-/// devices), a read loop that never blocks on handler completion, and a
-/// writer thread draining completed responses FIFO.
+/// Where a node server writes completed responses: the threaded flavor's
+/// FIFO writer thread, or an evented connection's shared nonblocking
+/// socket (frames written inline from `on_ready` continuations, still
+/// FIFO because whole frames are serialized under the mutex).
+#[derive(Clone)]
+enum Responder {
+    Thread(mpsc::Sender<Vec<u8>>),
+    Evented(Arc<Mutex<TcpStream>>),
+}
+
+impl Responder {
+    fn send(&self, payload: Vec<u8>) {
+        match self {
+            Responder::Thread(tx) => {
+                let _ = tx.send(payload);
+            }
+            Responder::Evented(stream) => {
+                let s = stream.lock().unwrap();
+                if poll::write_frame_nb(&s, &payload).is_err() {
+                    // A dead write half must kill the WHOLE connection
+                    // (mirroring the writer thread): otherwise requests
+                    // keep arriving whose responses can never be
+                    // delivered, and the client's matching futures hang
+                    // instead of failing through its closed-link drain.
+                    let _ = s.shutdown(std::net::Shutdown::Both);
+                }
+            }
+        }
+    }
+}
+
+/// What the read side does after dispatching one request.
+enum Dispatch {
+    Continue,
+    /// The client asked the node to wind down.
+    Shutdown,
+}
+
+/// Dispatch one decoded request against this connection's NEL — THE
+/// request path, shared by the threaded per-connection server and the
+/// evented accept loop so the two flavors cannot drift. Never blocks on
+/// handler completion: `Send`/`Broadcast`/`Direct` respond from
+/// `on_ready` continuations.
+fn dispatch_request(
+    nel: &Nel,
+    model: &Arc<ModelSpec>,
+    out: &Responder,
+    id: u64,
+    req: Request,
+) -> Dispatch {
+    match req {
+        Request::Shutdown => {
+            respond(out, id, Response::One(Ok(Value::Unit)));
+            return Dispatch::Shutdown;
+        }
+        Request::Create(spec) => {
+            let res = create_from_spec(nel, model, spec);
+            respond(out, id, Response::One(res));
+        }
+        Request::Send { pid, msg, args } => {
+            complete_async(out, id, nel.send(None, pid, &msg, args));
+        }
+        Request::Broadcast { pids, msg, args } => {
+            let futs = nel.broadcast(None, &pids, &msg, args);
+            respond_batch(out, id, &futs);
+        }
+        Request::Direct(op) => {
+            complete_async(out, id, dispatch_direct(nel, op));
+        }
+        Request::DrainParams => {
+            let res = nel.drain_params().map(|params| {
+                Value::List(
+                    params
+                        .into_iter()
+                        .map(|(pid, t)| {
+                            Value::List(vec![Value::Usize(pid.0 as usize), Value::Tensor(t)])
+                        })
+                        .collect(),
+                )
+            });
+            respond(out, id, Response::One(res.map_err(|e| e.msg)));
+        }
+        Request::ParticleState { pid } => {
+            let res = encode_state_value(nel.particle_state(pid));
+            respond(out, id, Response::One(Ok(res)));
+        }
+        Request::RestoreState { pid, entries } => {
+            let res = nel
+                .restore_particle_state(pid, entries)
+                .map(|_| Value::Unit)
+                .map_err(|e| e.msg);
+            respond(out, id, Response::One(res));
+        }
+        Request::Stats => {
+            let msg = Response::Stats(Box::new(nel.stats()));
+            respond_raw(out, id, &msg);
+        }
+        Request::Heartbeat { nonce } => {
+            // Echo the nonce straight from the read side: a loaded node
+            // still pongs promptly (liveness, not readiness).
+            respond(out, id, Response::One(Ok(Value::Usize(nonce as usize))));
+        }
+        Request::Migrate { specs } => {
+            let results: Vec<Result<Value, String>> = specs
+                .into_iter()
+                .map(|spec| create_from_spec(nel, model, spec))
+                .collect();
+            respond(out, id, Response::Many(results));
+        }
+        Request::SnapshotNode { pids } => {
+            // Answered straight from the read side: `particle_state` is
+            // one map clone per pid (atomic wrt any state commit, so
+            // reservoir versions are never torn), and the batch goes back
+            // as ONE `Response::Many` in input order.
+            let results: Vec<Result<Value, String>> = pids
+                .into_iter()
+                .map(|pid| Ok(encode_state_value(nel.particle_state(pid))))
+                .collect();
+            respond(out, id, Response::Many(results));
+        }
+    }
+    Dispatch::Continue
+}
+
+/// The per-connection node server (threaded reference flavor): one fresh
+/// NEL (this node's scheduler + devices), a read loop that never blocks
+/// on handler completion, and a writer thread draining completed
+/// responses FIFO.
 pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>) -> Result<()> {
     stream.set_nodelay(true).ok();
     let nel = Nel::new(cfg)?;
@@ -893,6 +1167,7 @@ pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>
     let writer = std::thread::Builder::new()
         .name("push-node-writer".to_string())
         .spawn(move || {
+            let _gauge = ThreadGauge::enter();
             let mut w = BufWriter::new(stream);
             while let Ok(buf) = rx.recv() {
                 if wire::write_frame(&mut w, &buf).is_err() || w.flush().is_err() {
@@ -906,6 +1181,7 @@ pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>
                 }
             }
         })?;
+    let out = Responder::Thread(tx);
 
     loop {
         let buf = match wire::read_frame(&mut reader) {
@@ -918,85 +1194,104 @@ pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>
             // connection is unrecoverable. Drop it.
             Err(_) => break,
         };
-        match req {
-            Request::Shutdown => {
-                respond(&tx, id, Response::One(Ok(Value::Unit)));
-                break;
-            }
-            Request::Create(spec) => {
-                let res = create_from_spec(&nel, &model, spec);
-                respond(&tx, id, Response::One(res));
-            }
-            Request::Send { pid, msg, args } => {
-                complete_async(&tx, id, nel.send(None, pid, &msg, args));
-            }
-            Request::Broadcast { pids, msg, args } => {
-                let futs = nel.broadcast(None, &pids, &msg, args);
-                respond_batch(&tx, id, &futs);
-            }
-            Request::Direct(op) => {
-                complete_async(&tx, id, dispatch_direct(&nel, op));
-            }
-            Request::DrainParams => {
-                let res = nel.drain_params().map(|params| {
-                    Value::List(
-                        params
-                            .into_iter()
-                            .map(|(pid, t)| {
-                                Value::List(vec![
-                                    Value::Usize(pid.0 as usize),
-                                    Value::Tensor(t),
-                                ])
-                            })
-                            .collect(),
-                    )
-                });
-                respond(&tx, id, Response::One(res.map_err(|e| e.msg)));
-            }
-            Request::ParticleState { pid } => {
-                let res = encode_state_value(nel.particle_state(pid));
-                respond(&tx, id, Response::One(Ok(res)));
-            }
-            Request::RestoreState { pid, entries } => {
-                let res = nel
-                    .restore_particle_state(pid, entries)
-                    .map(|_| Value::Unit)
-                    .map_err(|e| e.msg);
-                respond(&tx, id, Response::One(res));
-            }
-            Request::Stats => {
-                let msg = Response::Stats(Box::new(nel.stats()));
-                respond_raw(&tx, id, &msg);
-            }
-            Request::Heartbeat { nonce } => {
-                // Echo the nonce straight from the read loop: a loaded
-                // node still pongs promptly (liveness, not readiness).
-                respond(&tx, id, Response::One(Ok(Value::Usize(nonce as usize))));
-            }
-            Request::Migrate { specs } => {
-                let results: Vec<Result<Value, String>> = specs
-                    .into_iter()
-                    .map(|spec| create_from_spec(&nel, &model, spec))
-                    .collect();
-                respond(&tx, id, Response::Many(results));
-            }
-            Request::SnapshotNode { pids } => {
-                // Answered straight from the read loop: `particle_state`
-                // is one map clone per pid (atomic wrt any state commit,
-                // so reservoir versions are never torn), and the batch
-                // goes back as ONE `Response::Many` in input order.
-                let results: Vec<Result<Value, String>> = pids
-                    .into_iter()
-                    .map(|pid| Ok(encode_state_value(nel.particle_state(pid))))
-                    .collect();
-                respond(&tx, id, Response::Many(results));
-            }
+        if matches!(dispatch_request(&nel, &model, &out, id, req), Dispatch::Shutdown) {
+            break;
         }
     }
-    drop(tx); // writer drains queued responses, then exits
+    drop(out); // writer drains queued responses, then exits
     drop(nel); // fail any undelivered envelopes, wind the node down
     let _ = writer.join();
     Ok(())
+}
+
+/// One accepted connection on the evented node server. The NEL is
+/// created LAZILY on the first data frame, so an idle connection (a
+/// serving-tier client parked between refreshes) costs one registered fd
+/// and nothing else — no NEL, no scheduler, no device threads, no parked
+/// reader/writer pair.
+struct ServerConn {
+    cfg: NelConfig,
+    model: Arc<ModelSpec>,
+    nel: Option<Nel>,
+    out: Responder,
+}
+
+impl Sink for ServerConn {
+    fn on_frame(&mut self, frame: Vec<u8>) -> FrameVerdict {
+        let (id, req) = match wire::decode_request(&frame) {
+            Ok(x) => x,
+            Err(_) => return FrameVerdict::Close, // unrecoverable framing
+        };
+        if self.nel.is_none() {
+            // A link winding down without ever doing work (the idle-bench
+            // shape) must not build a NEL just to tear it down.
+            if matches!(req, Request::Shutdown) {
+                respond(&self.out, id, Response::One(Ok(Value::Unit)));
+                return FrameVerdict::Close;
+            }
+            match Nel::new(self.cfg.clone()) {
+                Ok(nel) => self.nel = Some(nel),
+                Err(e) => {
+                    respond(
+                        &self.out,
+                        id,
+                        Response::One(Err(format!("node: NEL startup failed: {e:#}"))),
+                    );
+                    return FrameVerdict::Close;
+                }
+            }
+        }
+        let nel = self.nel.as_ref().expect("lazily created above");
+        match dispatch_request(nel, &self.model, &self.out, id, req) {
+            Dispatch::Shutdown => FrameVerdict::Close,
+            Dispatch::Continue => FrameVerdict::Continue,
+        }
+    }
+
+    fn on_close(&mut self) {
+        // Fail any undelivered envelopes, wind the node down.
+        self.nel = None;
+    }
+}
+
+/// Register `listener` on the global reactor as an evented accept loop:
+/// every accepted connection is multiplexed onto the fixed poll pool, so
+/// ONE node holds any number of concurrent client connections without a
+/// thread per connection (`listener.accept()` was called exactly once on
+/// the threaded path). The listener stays registered for the life of the
+/// process; each connection's NEL lives only while that connection does.
+pub fn serve_evented(
+    listener: TcpListener,
+    cfg: NelConfig,
+    model: Arc<ModelSpec>,
+) -> Result<SocketAddr> {
+    let addr = listener.local_addr()?;
+    poll::Reactor::global().register_listener(
+        listener,
+        Box::new(move |stream| {
+            stream.set_nodelay(true).ok();
+            let wstream = match stream.try_clone() {
+                Ok(s) => s,
+                Err(_) => return, // accept raced the peer's death
+            };
+            let conn = ServerConn {
+                cfg: cfg.clone(),
+                model: model.clone(),
+                nel: None,
+                out: Responder::Evented(Arc::new(Mutex::new(wstream))),
+            };
+            let _ = poll::Reactor::global().register(stream, Box::new(conn));
+        }),
+    )?;
+    Ok(addr)
+}
+
+/// Evented sibling of [`spawn_loopback_node`]: bind an ephemeral
+/// loopback port and serve any number of concurrent connections off the
+/// reactor. Spawns no thread at all.
+pub fn spawn_loopback_node_evented(cfg: NelConfig, model: Arc<ModelSpec>) -> Result<SocketAddr> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    serve_evented(listener, cfg, model)
 }
 
 /// The model handshake: the client's fabric stamps every CreateSpec with
@@ -1041,11 +1336,11 @@ fn create_from_spec(
     Ok(Value::Usize(pid.0 as usize))
 }
 
-fn respond(tx: &mpsc::Sender<Vec<u8>>, id: u64, resp: Response) {
-    respond_raw(tx, id, &resp);
+fn respond(out: &Responder, id: u64, resp: Response) {
+    respond_raw(out, id, &resp);
 }
 
-fn respond_raw(tx: &mpsc::Sender<Vec<u8>>, id: u64, resp: &Response) {
+fn respond_raw(out: &Responder, id: u64, resp: &Response) {
     // An unencodable response (e.g. a Value nested past MAX_DEPTH) must
     // still answer the request — as an error — or the client's future for
     // this req_id would wait until the connection dies.
@@ -1056,17 +1351,17 @@ fn respond_raw(tx: &mpsc::Sender<Vec<u8>>, id: u64, resp: &Response) {
         )
     });
     if let Ok(buf) = buf {
-        let _ = tx.send(buf);
+        out.send(buf);
     }
 }
 
 /// Answer `id` with `fut`'s result once it resolves — from the
-/// completer's thread, never blocking the read loop.
-fn complete_async(tx: &mpsc::Sender<Vec<u8>>, id: u64, fut: PFuture) {
-    let tx = tx.clone();
+/// completer's thread, never blocking the read side.
+fn complete_async(out: &Responder, id: u64, fut: PFuture) {
+    let out = out.clone();
     fut.on_ready(move |r| {
         let res = r.clone().map_err(|e| e.msg);
-        respond_raw(&tx, id, &Response::One(res));
+        respond_raw(&out, id, &Response::One(res));
     });
 }
 
@@ -1078,10 +1373,10 @@ fn complete_async(tx: &mpsc::Sender<Vec<u8>>, id: u64, fut: PFuture) {
 /// agree on error ordering.
 type BatchSlots = Arc<Mutex<Vec<Option<Result<Value, String>>>>>;
 
-fn respond_batch(tx: &mpsc::Sender<Vec<u8>>, id: u64, futs: &[PFuture]) {
+fn respond_batch(out: &Responder, id: u64, futs: &[PFuture]) {
     let n = futs.len();
     if n == 0 {
-        respond(tx, id, Response::Many(Vec::new()));
+        respond(out, id, Response::Many(Vec::new()));
         return;
     }
     let slots: BatchSlots = Arc::new(Mutex::new(vec![None; n]));
@@ -1089,14 +1384,14 @@ fn respond_batch(tx: &mpsc::Sender<Vec<u8>>, id: u64, futs: &[PFuture]) {
     for (i, fut) in futs.iter().enumerate() {
         let slots = slots.clone();
         let remaining = remaining.clone();
-        let tx = tx.clone();
+        let out = out.clone();
         fut.on_ready(move |r| {
             slots.lock().unwrap()[i] = Some(r.clone().map_err(|e| e.msg));
             if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                 let resolved = std::mem::take(&mut *slots.lock().unwrap());
                 let results: Vec<Result<Value, String>> =
                     resolved.into_iter().map(|s| s.expect("all resolved")).collect();
-                respond_raw(&tx, id, &Response::Many(results));
+                respond_raw(&out, id, &Response::Many(results));
             }
         });
     }
@@ -1187,4 +1482,12 @@ pub mod fault {
 pub fn loopback_node(cfg: NelConfig, model: Arc<ModelSpec>) -> Result<TcpNode> {
     let (addr, _handle) = spawn_loopback_node(cfg, model)?;
     TcpNode::connect(addr).map_err(|e| anyhow!("connecting to loopback node {addr}: {e:#}"))
+}
+
+/// [`loopback_node`] with both halves on the evented flavor: an
+/// accept-loop server off the reactor plus an evented client link.
+pub fn loopback_node_evented(cfg: NelConfig, model: Arc<ModelSpec>) -> Result<TcpNode> {
+    let addr = spawn_loopback_node_evented(cfg, model)?;
+    TcpNode::connect_evented(addr)
+        .map_err(|e| anyhow!("connecting to evented loopback node {addr}: {e:#}"))
 }

@@ -160,6 +160,57 @@ fn node_death_recovers_bit_identically_to_uninterrupted_run() {
     }
 }
 
+#[test]
+fn node_death_recovers_bit_identically_on_the_evented_fabric() {
+    // Same kill/migrate round as above, but over TcpLoopbackEvented: the
+    // fault plan still fires in the shared `request_inner`, and the
+    // severing runs through the reactor's EOF path instead of a reader
+    // thread's exit. Recovery must be byte-for-byte the same story.
+    let n = 4;
+    let batches = fixed_batches(5, 23);
+    let kill_step = 2;
+
+    let control = SgMcmc::new(
+        pd_with(1, TransportKind::InProc, &FabricConfig::default()),
+        chain_cfg(n, SgmcmcAlgo::Sgld, 1e-3),
+    )
+    .unwrap();
+    let mut control_losses = Vec::new();
+    for b in &batches {
+        control_losses.push(control.step_all(&b.x, &b.y).unwrap());
+    }
+    let control_params = control.pd().drain_params().unwrap();
+
+    let pd = pd_with(2, TransportKind::TcpLoopbackEvented, &FabricConfig::default());
+    let addr = pd.peer_addr(1).expect("node 1 is a wire link");
+    let algo =
+        SgMcmc::new(pd, chain_cfg(n, SgmcmcAlgo::Sgld, 1e-3)).unwrap().with_recovery(1);
+    let mut ckpt = Checkpoint::capture(algo.pd()).unwrap();
+    let mut used = 0usize;
+    let mut losses = Vec::new();
+    for (i, b) in batches.iter().enumerate() {
+        if i == kill_step {
+            fault::set_plan(
+                addr,
+                FaultPlan { drop_after_frames: Some(0), ..FaultPlan::default() },
+            );
+        }
+        losses.push(algo.step_all_recovering(&b.x, &b.y, &mut ckpt, &mut used).unwrap());
+    }
+    fault::clear(addr);
+
+    assert_eq!(used, 1, "exactly one recovery round");
+    assert_eq!(algo.pd().dead_nodes(), vec![1]);
+    assert_eq!(algo.pd().node_of(Pid(1)), Some(0), "pid 1 not migrated");
+    assert_eq!(algo.pd().node_of(Pid(3)), Some(0), "pid 3 not migrated");
+    assert_eq!(losses, control_losses, "per-step losses diverged across the evented kill");
+    let params: BTreeMap<Pid, Tensor> = algo.pd().drain_params().unwrap();
+    assert_eq!(params.len(), n);
+    for (pid, want) in &control_params {
+        assert_eq!(&params[pid], want, "{pid} params diverged after evented migration");
+    }
+}
+
 // ---- dead-link detection --------------------------------------------------
 
 #[test]

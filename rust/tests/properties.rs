@@ -13,8 +13,9 @@
 //!   DataLoader epochs across a (seed, batch_size, max_batches, shuffle)
 //!   grid — asynchrony changes timing, never data (DESIGN.md §10)
 //! * Wire codec: arbitrary nested Value round-trip, truncated/oversized
-//!   frame rejection, and checkpoint-file/wire-codec byte identity (the
-//!   v1/v2 checkpoint compatibility seam)
+//!   frame rejection, pid decode rejecting values beyond the u32 pid
+//!   space (no silent wraparound), and checkpoint-file/wire-codec byte
+//!   identity (the v1/v2 checkpoint compatibility seam)
 //! * Elastic-fabric messages: Heartbeat/Migrate round-trip with arbitrary
 //!   nested chain state, strict-prefix truncation of any encoded request
 //!   fails to decode, and unknown kind bytes error cleanly (a v-next peer
@@ -418,6 +419,28 @@ fn prop_wire_truncated_and_oversized_frames_rejected() {
     // a frame header claiming more than MAX_FRAME errors without allocating
     let huge = (u32::MAX).to_le_bytes();
     assert!(wire::read_frame(&mut &huge[..]).is_err());
+}
+
+#[test]
+fn prop_wire_pid_decode_rejects_beyond_u32_instead_of_wrapping() {
+    use push::pd::transport::decode_wire_pid;
+    // the whole u32 pid space round-trips, boundary included
+    for seed in 0..CASES {
+        let pid = Rng::new(seed ^ 0x91d).below(u32::MAX as usize) as u32;
+        assert_eq!(decode_wire_pid(pid as usize).unwrap(), Pid(pid), "seed {seed}");
+    }
+    assert_eq!(decode_wire_pid(u32::MAX as usize).unwrap(), Pid(u32::MAX));
+    // one past the boundary must be a decode error NAMING the raw value —
+    // the old `as u32` cast silently wrapped pid 2^32 to pid 0, aliasing
+    // a remote particle onto a local one
+    #[cfg(target_pointer_width = "64")]
+    {
+        let raw = (u32::MAX as usize) + 1;
+        let err = decode_wire_pid(raw).unwrap_err();
+        assert!(err.msg.contains(&raw.to_string()), "raw value not named: {err}");
+        assert!(err.msg.contains("truncation"), "{err}");
+        assert!(decode_wire_pid(usize::MAX).is_err());
+    }
 }
 
 #[test]

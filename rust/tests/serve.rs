@@ -339,13 +339,57 @@ fn snapshot_deadline_expires_against_mute_peer() {
     let t0 = Instant::now();
     let expiry = Some(Instant::now() + deadline);
     for fut in &futs {
-        let err = wait_deadline(fut, expiry).unwrap_err();
+        let err = wait_deadline(fut, expiry, Some(deadline)).unwrap_err();
         assert!(err.msg.contains("deadline"), "not a deadline failure: {}", err.msg);
+        // the CONFIGURED budget is named, not just the residual wait —
+        // later futures in a shared-expiry batch have ~0 residual and the
+        // old message ("expired after 0ns") read as a config of zero
+        assert!(err.msg.contains("150ms"), "configured budget not named: {}", err.msg);
+        assert!(err.msg.contains("residual"), "residual wait not named: {}", err.msg);
     }
     let waited = t0.elapsed();
     assert!(waited >= Duration::from_millis(100), "deadline cut short: {waited:?}");
     assert!(waited < deadline * 2, "deadline {deadline:?} but waited {waited:?}");
     drop(listener);
+}
+
+/// Two servers over the SAME chains must retry on DISTINCT jittered
+/// schedules: the backoff RNG is keyed by a per-server nonce, not a
+/// process-wide constant. A constant seed once made every server in a
+/// fleet sleep the identical "jittered" duration and hammer a recovering
+/// node in lockstep — exactly the herd the jitter exists to break.
+#[test]
+fn two_servers_retry_on_distinct_jitter_schedules() {
+    let algo = SgMcmc::new(
+        pd_with(1, TransportKind::InProc),
+        chain_cfg(4, SgmcmcAlgo::Sgld, 0.0),
+    )
+    .unwrap();
+    let a = algo.serve_handle().unwrap();
+    let b = algo.serve_handle().unwrap();
+
+    let sched_a: Vec<Duration> = (1..=4).map(|n| a.retry_backoff(n)).collect();
+    let sched_b: Vec<Duration> = (1..=4).map(|n| b.retry_backoff(n)).collect();
+    // deterministic per server: auditing a schedule doesn't change it
+    assert_eq!(sched_a, (1..=4).map(|n| a.retry_backoff(n)).collect::<Vec<_>>());
+    assert_eq!(sched_b, (1..=4).map(|n| b.retry_backoff(n)).collect::<Vec<_>>());
+    // ...but distinct between servers
+    assert_ne!(sched_a, sched_b, "two servers retry in lockstep: {sched_a:?}");
+
+    // every sleep stays inside the ±25% envelope of 2^(n-1) * backoff
+    let base = ServeConfig::default().refresh_backoff.as_millis() as u64;
+    for sched in [&sched_a, &sched_b] {
+        for (i, d) in sched.iter().enumerate() {
+            let base_ms = base << i;
+            let lo = Duration::from_millis(base_ms - base_ms / 4);
+            let hi = Duration::from_millis(base_ms - base_ms / 4 + base_ms / 2);
+            assert!(
+                *d >= lo && *d <= hi,
+                "attempt {}: {d:?} outside the jitter envelope [{lo:?}, {hi:?}]",
+                i + 1
+            );
+        }
+    }
 }
 
 /// Admission control: with a 1-slot gate, concurrent hammering sheds with

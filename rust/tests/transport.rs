@@ -411,6 +411,153 @@ fn node_local_nel_names_the_node_for_remote_pids() {
     assert!(pd.p_launch(pids[1], "PING", vec![]).wait().is_ok());
 }
 
+// ---- evented transport parity --------------------------------------------
+//
+// The evented flavor multiplexes every link onto the shared poll reactor
+// instead of a reader-thread/writer-thread pair per connection. It must be
+// observationally identical to the threaded reference: same bits out of a
+// training run, same wire accounting, same failure detection, and a server
+// that holds many concurrent connections where `serve_one` held one.
+
+#[test]
+fn two_node_evented_sgld_matches_threaded_and_inproc_exactly() {
+    // temperature > 0 exercises the per-(seed, pid, step) noise streams too
+    let n = 4;
+    let batches = fixed_batches(6, 11);
+    let run = |pd: PushDist| -> BTreeMap<Pid, Tensor> {
+        let algo = SgMcmc::new(pd, chain_cfg(n, SgmcmcAlgo::Sgld, 1e-3)).unwrap();
+        for b in &batches {
+            algo.step_all(&b.x, &b.y).unwrap();
+        }
+        algo.pd().drain_params().unwrap()
+    };
+    let local = run(pd_with(1, TransportKind::InProc));
+    let threaded = run(pd_with(2, TransportKind::TcpLoopback));
+    let evented = run(pd_with(2, TransportKind::TcpLoopbackEvented));
+    assert_eq!(local.len(), n);
+    for (pid, want) in &local {
+        assert_eq!(&threaded[pid], want, "{pid} diverged on the threaded fabric");
+        assert_eq!(&evented[pid], want, "{pid} diverged on the evented fabric");
+    }
+}
+
+#[test]
+fn evented_broadcast_counters_match_threaded_exactly() {
+    // one frame per destination node, and byte-for-byte the same wire
+    // accounting as the threaded flavor — the batching seam is shared
+    let measure = |transport: TransportKind| {
+        let pd = pd_with(2, transport);
+        let pids = echo_particles(&pd, 6); // round-robin: 3 per node
+        let before = pd.transport_counters();
+        let futs =
+            pd.broadcast(&pids, "PING", vec![Value::Tensor(Tensor::zeros(vec![16]))]);
+        PFuture::join_all(&futs).wait().unwrap();
+        let after = pd.transport_counters();
+        (0..2)
+            .map(|node| {
+                (
+                    after[node].frames_sent - before[node].frames_sent,
+                    after[node].frames_received - before[node].frames_received,
+                    after[node].bytes_sent - before[node].bytes_sent,
+                    after[node].bytes_received - before[node].bytes_received,
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let threaded = measure(TransportKind::TcpLoopback);
+    let evented = measure(TransportKind::TcpLoopbackEvented);
+    for node in 0..2 {
+        assert_eq!(evented[node].0, 1, "node {node}: fan-out must stay ONE request frame");
+        assert_eq!(evented[node].1, 1, "node {node}: and ONE batched response frame");
+    }
+    assert_eq!(threaded, evented, "wire accounting must be flavor-invariant");
+}
+
+#[test]
+fn evented_mute_peer_heartbeat_severs_suspect_then_dead() {
+    // Same silent-death shape as the elastic suite's threaded test, but the
+    // severing now runs through the reactor's EOF path instead of a reader
+    // thread's exit path.
+    use push::pd::transport::{NodeTransport, TcpNode};
+    use push::pd::LinkHealth;
+    use std::time::{Duration, Instant};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let node = TcpNode::connect_evented(addr).unwrap();
+    assert_eq!(node.kind(), "tcp-evented");
+    let dead_after = Duration::from_millis(300);
+
+    let fut = node.send(Pid(0), "PING", vec![]);
+    let t0 = Instant::now();
+    let mut saw_suspect = false;
+    loop {
+        match node.heartbeat_tick(dead_after) {
+            LinkHealth::Dead => break,
+            LinkHealth::Suspect => saw_suspect = true,
+            LinkHealth::Healthy => {}
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "monitor never declared the silent evented link dead"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(t0.elapsed() >= dead_after, "declared dead before the silence threshold");
+    assert!(saw_suspect, "Suspect must precede Dead on a silent link");
+
+    // the reactor's on_close drained the pending future — no hang
+    let err = fut.wait().unwrap_err();
+    assert!(err.msg.contains("connection closed"), "{err}");
+    assert_eq!(node.health(), LinkHealth::Dead);
+    assert!(node.counters().errors >= 1, "link failures must be counted");
+}
+
+#[test]
+fn evented_server_holds_64_concurrent_connections() {
+    // `serve_one` accepted exactly one connection; the evented accept loop
+    // must hold N live links at once, each with its own lazily-built NEL.
+    use push::pd::transport::{spawn_loopback_node_evented, NodeTransport, TcpNode};
+    use push::pd::wire::CreateSpec;
+
+    let model = Arc::new(native_manifest().model("linear_native").unwrap().clone());
+    let cfg = NelConfig {
+        num_devices: 1,
+        cache_size: 2,
+        cost: CostModel::free(),
+        control_workers: 1,
+        ..NelConfig::default()
+    };
+    let addr = spawn_loopback_node_evented(cfg, model).unwrap();
+    let nodes: Vec<TcpNode> =
+        (0..64).map(|_| TcpNode::connect_evented(addr).unwrap()).collect();
+
+    // every link creates a particle while all 64 connections are open
+    for (i, node) in nodes.iter().enumerate() {
+        let pid = node
+            .create_spec(CreateSpec {
+                pid: Pid(i as u32),
+                device: None,
+                program: Some(("echo".to_string(), Value::Unit)),
+                state: Vec::new(),
+                no_params: true,
+                init_params: None,
+                model: "linear_native".to_string(),
+            })
+            .unwrap();
+        assert_eq!(pid, Pid(i as u32));
+    }
+    // ...and round-trips concurrently: launch all 64 before waiting on any
+    let futs: Vec<PFuture> = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| node.send(Pid(i as u32), "WHO", vec![]))
+        .collect();
+    for (i, fut) in futs.into_iter().enumerate() {
+        assert_eq!(fut.wait().unwrap(), Value::Usize(i), "connection {i} lost its answer");
+    }
+}
+
 #[test]
 fn fabric_stats_sum_each_node_exactly_once() {
     let pd = pd_with(2, TransportKind::TcpLoopback);
