@@ -269,7 +269,7 @@ fn main() {
     // connection costs one fd, no NEL); the evented leg asserts the census
     // stays under 8 transport threads.
     {
-        use push::pd::poll::{live_transport_threads, REACTOR_THREADS};
+        use push::pd::poll::{live_transport_threads, resident_transport_threads};
         use push::pd::transport::TcpNode;
         const LINKS: usize = 256;
 
@@ -277,9 +277,10 @@ fn main() {
             push::pd::transport::spawn_loopback_node_evented(cfg(1, 2), dummy_model())
                 .unwrap();
         // settle: let reader/writer threads from earlier cases exit so the
-        // census reflects this case only
+        // census reflects this case only (resident = the fixed reactor +
+        // offload pools, the floor the per-link claim is measured against)
         let t0 = std::time::Instant::now();
-        while live_transport_threads() > REACTOR_THREADS
+        while live_transport_threads() > resident_transport_threads()
             && t0.elapsed() < std::time::Duration::from_secs(5)
         {
             std::thread::sleep(std::time::Duration::from_millis(20));

@@ -14,10 +14,17 @@
 //!   pair, reads readable connections to `WouldBlock`, reassembles
 //!   length-prefixed frames incrementally, and hands each complete frame
 //!   to the connection's [`Sink`];
-//! * writes never go through the reactor: senders write on their own
-//!   thread under the link's existing write mutex ([`write_frame_nb`]
-//!   parks in `poll(POLLOUT)` when the socket buffer is full), so the
-//!   per-sender FIFO order of the threaded transport is preserved
+//! * server-side writes go through a per-connection outbox
+//!   ([`WriteHandle::send_frame`] queues whole frames; the OWNING shard
+//!   flushes them to `WouldBlock` under `POLLOUT` interest) — a shard
+//!   never parks waiting for a peer to drain, so two connections that
+//!   happen to share a shard (the loopback `push serve` shape, where
+//!   client and server halves ride one global reactor) can never
+//!   deadlock it;
+//! * client-side senders write on their own threads under the link's
+//!   existing write mutex ([`write_frame_nb`] parks in `poll(POLLOUT)`
+//!   when the socket buffer is full, bounded by [`WRITE_STALL_LIMIT`]),
+//!   so the per-sender FIFO order of the threaded transport is preserved
 //!   verbatim.
 //!
 //! No `libc` crate: the one foreign call is a `poll(2)` FFI shim behind
@@ -25,34 +32,51 @@
 //! `AsRawFd`). The completion side reuses `PFuture::on_ready`
 //! continuations unchanged — readiness is the only new concept.
 //!
-//! A [`Sink::on_frame`] may block its shard (the node server's
-//! synchronous ops wait on NEL completion); that is a latency cost for
-//! connections sharing the shard, never a deadlock, because NELs and
-//! senders make progress on their own threads. Frame demux itself never
-//! waits on another connection.
+//! The no-deadlock/no-starvation argument has two legs. (1) Shard
+//! threads NEVER block: reads stop at `WouldBlock`, outbox flushes stop
+//! at `WouldBlock` (resuming on `POLLOUT` readiness), and a peer that
+//! stops draining for [`WRITE_STALL_LIMIT`] is severed, mirroring the
+//! threaded writer thread's failure path. (2) [`Sink::on_frame`] must
+//! not run long synchronous work on the shard — heavy operations
+//! (building a NEL, batched snapshot/migrate dispatch, NEL teardown)
+//! belong on the fixed [`offload`] pool, whose workers may block freely
+//! because NELs and senders make progress on their own threads. Frame
+//! demux itself never waits on another connection.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::pd::wire::MAX_FRAME;
 
 /// Fixed poll-thread pool size. The `connections_256_evented` bench gate
-/// pins "256 idle links on <8 transport threads"; 4 shards leave headroom
-/// while still spreading busy connections across cores.
+/// pins "256 idle links on <8 transport threads"; 4 shards (plus the
+/// [`EXEC_THREADS`] offload workers) leave headroom while still
+/// spreading busy connections across cores.
 pub const REACTOR_THREADS: usize = 4;
+
+/// Longest a socket write may sit in `poll(POLLOUT)` without moving ONE
+/// byte before the write fails with `TimedOut`. This is a stall bound,
+/// not a throughput bound: any progress resets it. Severing beats
+/// waiting — a peer that stopped draining is indistinguishable from a
+/// dead one, and the link-severing error paths fail pending futures
+/// promptly instead of parking a sender (or, worse, a flush) forever.
+pub const WRITE_STALL_LIMIT: Duration = Duration::from_secs(15);
 
 // ---- transport thread census ----------------------------------------------
 
 static LIVE_THREADS: AtomicUsize = AtomicUsize::new(0);
+static FIXED_THREADS: AtomicUsize = AtomicUsize::new(0);
 
 /// RAII census of live transport-owned threads (reader loops, server
-/// read/write threads, loopback accept threads, reactor shards). The
-/// `connections_256_{threaded,evented}` bench pair asserts the thread-count
-/// win through this counter, so every transport thread body holds a gauge.
+/// read/write threads, loopback accept threads, reactor shards, offload
+/// workers). The `connections_256_{threaded,evented}` bench pair asserts
+/// the thread-count win through this counter, so every transport thread
+/// body holds a gauge.
 pub struct ThreadGauge(());
 
 impl ThreadGauge {
@@ -71,6 +95,15 @@ impl Drop for ThreadGauge {
 /// Number of transport-owned threads alive right now.
 pub fn live_transport_threads() -> usize {
     LIVE_THREADS.load(Ordering::Acquire)
+}
+
+/// Threads belonging to the transport's FIXED pools (reactor shards plus
+/// offload workers) spawned so far. Unlike [`live_transport_threads`]
+/// this never shrinks — it is the settled baseline the per-link
+/// thread-scaling claim is measured against: evented transports add
+/// ZERO threads per link on top of this number.
+pub fn resident_transport_threads() -> usize {
+    FIXED_THREADS.load(Ordering::Acquire)
 }
 
 // ---- poll(2) shim ----------------------------------------------------------
@@ -118,12 +151,27 @@ mod sys {
 
 // ---- nonblocking writes ----------------------------------------------------
 
+/// [`write_all_nb_within`] with the default [`WRITE_STALL_LIMIT`].
+pub fn write_all_nb(stream: &TcpStream, buf: &[u8]) -> std::io::Result<()> {
+    write_all_nb_within(stream, buf, WRITE_STALL_LIMIT)
+}
+
 /// Write all of `buf` on a nonblocking socket, parking in `poll(POLLOUT)`
 /// whenever the kernel buffer is full. Blocking-write semantics on a
 /// nonblocking fd — callers keep the threaded transport's behavior (and
-/// its per-sender FIFO, since they already serialize under a write mutex).
-pub fn write_all_nb(stream: &TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
+/// its per-sender FIFO, since they already serialize under a write
+/// mutex) — EXCEPT that a peer which stops draining for `stall_limit`
+/// fails the write with `TimedOut` instead of stalling the caller
+/// silently forever. Any forward progress resets the stall clock; on
+/// error the stream is no longer frame-aligned and the caller must
+/// sever the link.
+pub fn write_all_nb_within(
+    stream: &TcpStream,
+    mut buf: &[u8],
+    stall_limit: Duration,
+) -> std::io::Result<()> {
     let mut s = stream;
+    let mut stall_deadline = Instant::now() + stall_limit;
     while !buf.is_empty() {
         match s.write(buf) {
             Ok(0) => {
@@ -132,15 +180,31 @@ pub fn write_all_nb(stream: &TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
                     "socket write returned zero",
                 ))
             }
-            Ok(n) => buf = &buf[n..],
+            Ok(n) => {
+                buf = &buf[n..];
+                stall_deadline = Instant::now() + stall_limit;
+            }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                let now = Instant::now();
+                if now >= stall_deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!(
+                            "socket write stalled for {stall_limit:?} with no progress \
+                             (peer not draining)"
+                        ),
+                    ));
+                }
+                let wait = stall_deadline
+                    .saturating_duration_since(now)
+                    .min(Duration::from_millis(1_000));
                 let mut fds = [sys::PollFd {
                     fd: stream.as_raw_fd(),
                     events: sys::POLLOUT,
                     revents: 0,
                 }];
                 // POLLERR/POLLHUP surface as a hard error on the next write
-                sys::poll_fds(&mut fds, 5_000)?;
+                sys::poll_fds(&mut fds, (wait.as_millis() as i32).max(1))?;
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
             Err(e) => return Err(e),
@@ -175,10 +239,99 @@ pub enum FrameVerdict {
 /// The read-side owner of one evented connection. `on_frame` receives
 /// every complete frame (length prefix stripped) in arrival order;
 /// `on_close` fires exactly once when the connection dies (EOF, socket
-/// error, oversized frame header, or an `on_frame` verdict of `Close`).
+/// error, oversized frame header, a write stall, or an `on_frame`
+/// verdict of `Close`). Both callbacks run ON THE SHARD THREAD and must
+/// not block or run long synchronous work — push anything heavy onto
+/// [`offload`].
 pub trait Sink: Send {
     fn on_frame(&mut self, frame: Vec<u8>) -> FrameVerdict;
     fn on_close(&mut self);
+}
+
+// ---- outbox ----------------------------------------------------------------
+
+struct OutState {
+    /// Bytes queued for the shard to flush (whole frames, header
+    /// included). Appended by [`WriteHandle::send_frame`] from any
+    /// thread; drained only by the owning shard.
+    buf: VecDeque<u8>,
+    /// Flush everything queued, then close the connection (graceful
+    /// server shutdown: the response to a `Shutdown` request must still
+    /// reach the peer before the fd drops).
+    closing: bool,
+    /// The connection is gone (socket error, stall, or removal): sends
+    /// fail and the shard closes the conn on its next pass.
+    dead: bool,
+    /// Last instant the kernel accepted outbox bytes (or the outbox went
+    /// from empty to non-empty). A non-empty outbox with no progress for
+    /// [`WRITE_STALL_LIMIT`] marks the connection dead.
+    last_progress: Instant,
+}
+
+struct Outbox {
+    state: Mutex<OutState>,
+}
+
+impl Outbox {
+    fn fresh() -> Outbox {
+        Outbox {
+            state: Mutex::new(OutState {
+                buf: VecDeque::new(),
+                closing: false,
+                dead: false,
+                last_progress: Instant::now(),
+            }),
+        }
+    }
+}
+
+/// The write half of an evented connection: queues whole frames for the
+/// owning reactor shard to flush under `POLLOUT` readiness. Cloneable
+/// and callable from any thread; NEVER blocks — which is exactly why
+/// the evented server responds through it instead of writing inline
+/// (an inline write parked in `poll(POLLOUT)` on a shard thread could
+/// deadlock the shard against a same-shard peer).
+#[derive(Clone)]
+pub struct WriteHandle {
+    out: Arc<Outbox>,
+    shard: &'static Shard,
+}
+
+impl WriteHandle {
+    /// Queue one length-prefixed frame. Returns an error once the
+    /// connection is dead — queued-but-unflushed frames on a dying
+    /// connection are dropped, exactly like the threaded writer thread's
+    /// undelivered queue.
+    pub fn send_frame(&self, payload: &[u8]) -> std::io::Result<()> {
+        if payload.len() > MAX_FRAME {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame of {} bytes exceeds MAX_FRAME", payload.len()),
+            ));
+        }
+        {
+            let mut s = self.out.state.lock().unwrap();
+            if s.dead {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "evented connection closed",
+                ));
+            }
+            if s.buf.is_empty() {
+                s.last_progress = Instant::now();
+            }
+            s.buf.extend((payload.len() as u32).to_le_bytes());
+            s.buf.extend(payload);
+        }
+        self.shard.wake();
+        Ok(())
+    }
+
+    /// Flush everything queued so far, then close the connection.
+    pub fn close_after_flush(&self) {
+        self.out.state.lock().unwrap().closing = true;
+        self.shard.wake();
+    }
 }
 
 // ---- reactor ---------------------------------------------------------------
@@ -188,6 +341,14 @@ struct Conn {
     /// Partial-read accumulator; complete frames are drained off the front.
     buf: VecDeque<u8>,
     sink: Box<dyn Sink>,
+    out: Arc<Outbox>,
+}
+
+impl Conn {
+    fn wants_flush(&self) -> bool {
+        let s = self.out.state.lock().unwrap();
+        !s.buf.is_empty() || s.closing || s.dead
+    }
 }
 
 struct Lis {
@@ -203,15 +364,20 @@ enum Cmd {
 struct Shard {
     inbox: Mutex<Vec<Cmd>>,
     /// Write end of the shard's self-wake socket pair; one byte unparks
-    /// the poll thread so a fresh registration is picked up immediately.
+    /// the poll thread so a fresh registration or outbox append is
+    /// picked up immediately.
     waker: Mutex<TcpStream>,
 }
 
 impl Shard {
     fn push(&self, cmd: Cmd) {
         self.inbox.lock().unwrap().push(cmd);
+        self.wake();
+    }
+
+    fn wake(&self) {
         // WouldBlock means wake bytes are already queued — the poll thread
-        // is guaranteed to wake and drain the inbox either way.
+        // is guaranteed to wake and rescan either way.
         let _ = self.waker.lock().unwrap().write(&[1u8]);
     }
 }
@@ -237,6 +403,7 @@ impl Reactor {
                     inbox: Mutex::new(Vec::new()),
                     waker: Mutex::new(wake_tx),
                 }));
+                FIXED_THREADS.fetch_add(1, Ordering::AcqRel);
                 std::thread::Builder::new()
                     .name(format!("push-poll-{i}"))
                     .spawn(move || shard_loop(shard, wake_rx))
@@ -248,12 +415,34 @@ impl Reactor {
     }
 
     /// Hand `stream` to the reactor: it becomes nonblocking, joins a
-    /// shard's interest set, and `sink` receives its frames. Writers keep
-    /// using their own (cloned) handle with [`write_frame_nb`].
+    /// shard's interest set, and `sink` receives its frames. For a
+    /// read-mostly connection whose writes happen on caller threads
+    /// (the evented CLIENT shape — senders keep their own cloned handle
+    /// and [`write_frame_nb`]).
     pub fn register(&self, stream: TcpStream, sink: Box<dyn Sink>) -> std::io::Result<()> {
+        self.register_duplex(stream, move |_handle| sink).map(|_| ())
+    }
+
+    /// Full-duplex registration: like [`Reactor::register`], but the
+    /// sink is built FROM the connection's [`WriteHandle`], so responses
+    /// can be queued on the outbox the owning shard flushes (the evented
+    /// SERVER shape). The handle is also returned for callers that keep
+    /// one outside the sink.
+    pub fn register_duplex<F>(
+        &self,
+        stream: TcpStream,
+        mk_sink: F,
+    ) -> std::io::Result<WriteHandle>
+    where
+        F: FnOnce(WriteHandle) -> Box<dyn Sink>,
+    {
         stream.set_nonblocking(true)?;
-        self.shard().push(Cmd::Conn(Conn { stream, buf: VecDeque::new(), sink }));
-        Ok(())
+        let shard = self.shard();
+        let out = Arc::new(Outbox::fresh());
+        let handle = WriteHandle { out: out.clone(), shard };
+        let sink = mk_sink(handle.clone());
+        shard.push(Cmd::Conn(Conn { stream, buf: VecDeque::new(), sink, out }));
+        Ok(handle)
     }
 
     /// Register an accept loop: `on_accept` runs on the shard thread for
@@ -285,7 +474,18 @@ fn wake_pair() -> std::io::Result<(TcpStream, TcpStream)> {
     let l = TcpListener::bind(("127.0.0.1", 0))?;
     let addr = l.local_addr()?;
     let tx = TcpStream::connect(addr)?;
-    let (rx, _) = l.accept()?;
+    let me = tx.local_addr()?;
+    // Accept until we see OUR OWN connect: the bind->accept window is
+    // open to any local process, and installing a stranger as the
+    // shard's waker read end would leave the real write end unpaired —
+    // registrations would only be noticed on the 1 s poll tick.
+    // Strangers are dropped (their connection resets on close).
+    let rx = loop {
+        let (s, peer) = l.accept()?;
+        if peer == me {
+            break s;
+        }
+    };
     tx.set_nonblocking(true)?;
     rx.set_nonblocking(true)?;
     tx.set_nodelay(true).ok();
@@ -316,10 +516,17 @@ fn shard_loop(shard: &'static Shard, wake_rx: TcpStream) {
             });
         }
         for c in &conns {
-            fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+            // POLLOUT interest only while the outbox has pending bytes:
+            // an idle connection costs a POLLIN slot, nothing more.
+            let mut events = sys::POLLIN;
+            if c.wants_flush() {
+                events |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events, revents: 0 });
         }
-        // 1 s tick even with nothing ready, so a poll error can't spin and
-        // a missed wake byte (can't happen, but cheap insurance) heals.
+        // 1 s tick even with nothing ready, so a poll error can't spin,
+        // write stalls are detected on quiet shards, and a missed wake
+        // byte (can't happen, but cheap insurance) heals.
         if sys::poll_fds(&mut fds, 1_000).is_err() {
             std::thread::sleep(std::time::Duration::from_millis(5));
             continue;
@@ -348,16 +555,23 @@ fn shard_loop(shard: &'static Shard, wake_rx: TcpStream) {
         let base = 1 + listeners.len();
         let mut dead = Vec::new();
         for (i, c) in conns.iter_mut().enumerate() {
-            if fds[base + i].revents & ready == 0 {
-                continue;
+            let mut verdict = FrameVerdict::Continue;
+            if fds[base + i].revents & ready != 0 {
+                verdict = service_conn(c, &mut scratch);
             }
-            if service_conn(c, &mut scratch) == FrameVerdict::Close {
+            // Flush every pass, not just on POLLOUT revents: a wake byte
+            // (fresh outbox append) lands here with this fd's revents 0.
+            if verdict == FrameVerdict::Continue {
+                verdict = flush_conn(c);
+            }
+            if verdict == FrameVerdict::Close {
                 dead.push(i);
             }
         }
         // Highest index first: swap_remove never disturbs a smaller index.
         for i in dead.into_iter().rev() {
             let mut c = conns.swap_remove(i);
+            c.out.state.lock().unwrap().dead = true;
             c.sink.on_close();
         }
     }
@@ -408,5 +622,131 @@ fn service_conn(c: &mut Conn, scratch: &mut [u8]) -> FrameVerdict {
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
             Err(_) => return FrameVerdict::Close,
         }
+    }
+}
+
+/// Drain a connection's outbox to `WouldBlock`. NEVER parks: `POLLOUT`
+/// interest (held while the outbox is non-empty) resumes the flush when
+/// the kernel buffer frees up, and a peer that accepts nothing for
+/// [`WRITE_STALL_LIMIT`] gets the connection severed — the same verdict
+/// the threaded writer thread's failure path reaches, minus the parked
+/// thread.
+fn flush_conn(c: &mut Conn) -> FrameVerdict {
+    let mut s = c.out.state.lock().unwrap();
+    if s.dead {
+        return FrameVerdict::Close;
+    }
+    while !s.buf.is_empty() {
+        let wrote = {
+            let (front, _) = s.buf.as_slices();
+            match (&c.stream).write(front) {
+                Ok(0) => 0,
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => 0,
+            }
+        };
+        if wrote == 0 {
+            s.dead = true;
+            return FrameVerdict::Close;
+        }
+        s.buf.drain(..wrote);
+        s.last_progress = Instant::now();
+    }
+    if s.buf.is_empty() {
+        if s.closing {
+            s.dead = true;
+            return FrameVerdict::Close;
+        }
+    } else if s.last_progress.elapsed() > WRITE_STALL_LIMIT {
+        s.dead = true;
+        return FrameVerdict::Close;
+    }
+    FrameVerdict::Continue
+}
+
+// ---- offload executor ------------------------------------------------------
+
+/// Workers in the fixed [`offload`] pool. Together with
+/// [`REACTOR_THREADS`] this is the whole resident cost of the evented
+/// transport (4 + 2 = 6, under the bench's <8 gate) — per-connection
+/// cost stays zero threads.
+pub const EXEC_THREADS: usize = 2;
+
+/// Run `job` on the transport's small fixed offload pool — the escape
+/// hatch for work that must NOT occupy a reactor shard: NEL
+/// construction, synchronous batched dispatch (snapshot/migrate), NEL
+/// teardown. Offload workers may block freely (NELs and senders make
+/// progress on their own threads). Jobs run in submission order per
+/// worker; callers needing per-connection FIFO serialize their own
+/// queue and keep at most one job in flight (see
+/// `transport::drain_conn`).
+pub fn offload(job: Box<dyn FnOnce() + Send + 'static>) {
+    type Job = Box<dyn FnOnce() + Send + 'static>;
+    static POOL: OnceLock<Mutex<mpsc::Sender<Job>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..EXEC_THREADS {
+            let rx = rx.clone();
+            FIXED_THREADS.fetch_add(1, Ordering::AcqRel);
+            std::thread::Builder::new()
+                .name(format!("push-exec-{i}"))
+                .spawn(move || {
+                    let _gauge = ThreadGauge::enter();
+                    loop {
+                        // The guard drops at the end of this statement,
+                        // so workers run jobs concurrently — the lock
+                        // covers only the dequeue.
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => return,
+                        };
+                        job();
+                    }
+                })
+                .expect("spawn offload worker");
+        }
+        Mutex::new(tx)
+    });
+    let _ = pool.lock().unwrap().send(job);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_all_nb_fails_timed_out_after_bounded_stall_against_mute_peer() {
+        // A peer that stops draining must surface as an ERROR on the
+        // writer within the stall bound, not park the caller forever
+        // (on the client that is a sender thread; pre-fix it silently
+        // re-polled with no bound at all).
+        let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = l.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (_mute_rx, _) = l.accept().unwrap(); // held open, never read
+        tx.set_nonblocking(true).unwrap();
+
+        let chunk = vec![0u8; 1 << 20];
+        let limit = Duration::from_millis(200);
+        let t0 = Instant::now();
+        let err = loop {
+            match write_all_nb_within(&tx, &chunk, limit) {
+                // kernel buffers still absorbing: keep filling
+                Ok(()) => assert!(
+                    t0.elapsed() < Duration::from_secs(30),
+                    "socket buffers never filled"
+                ),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "stall bound never engaged ({:?})",
+            t0.elapsed()
+        );
     }
 }

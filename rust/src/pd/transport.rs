@@ -34,7 +34,11 @@
 //!   poll-thread pool; `PFuture::on_ready` continuations are the
 //!   completion mechanism on both sides, server NELs are created lazily
 //!   on the first data frame, and the accept loop holds N concurrent
-//!   connections per node instead of exactly one.
+//!   connections per node instead of exactly one. Request dispatch runs
+//!   on the reactor's [`poll::offload`] pool (heartbeat pongs excepted —
+//!   they answer straight from the shard) and responses queue on a
+//!   per-connection outbox the owning shard flushes under `POLLOUT`, so
+//!   a shard thread never blocks on a peer.
 //!
 //! Liveness (DESIGN.md §Elastic fabric): the fabric's monitor calls
 //! [`NodeTransport::heartbeat_tick`] on a cadence; a TCP link tracks
@@ -44,7 +48,7 @@
 //! data-path counters. The [`fault`] module (tests and the `faultinject`
 //! feature only) kills chosen links deterministically.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -462,7 +466,10 @@ enum WriteHalf {
     /// Blocking socket + BufWriter, flushed per frame (threaded reader).
     Buffered(BufWriter<TcpStream>),
     /// Nonblocking socket shared with the reactor's poll set; writes park
-    /// in `poll(POLLOUT)` when the kernel buffer is full.
+    /// in `poll(POLLOUT)` when the kernel buffer is full, bounded by
+    /// [`poll::WRITE_STALL_LIMIT`] — a peer that stops draining fails the
+    /// send (and the link is severed) instead of parking the sender
+    /// forever.
     Evented(TcpStream),
 }
 
@@ -666,8 +673,18 @@ impl TcpNode {
         }
         let sent = self.writer.lock().unwrap().send_frame(&buf);
         if let Err(e) = sent {
+            // The frame may be HALF-sent (header landed, payload failed,
+            // or a mid-payload stall): the stream is no longer
+            // frame-aligned, so the link cannot be reused — the next
+            // frame's bytes would be parsed as the tail of this one.
+            // Sever both halves: the reader/reactor drain fails every
+            // other pending future promptly instead of leaving them to
+            // misparse against a corrupt stream. This entry is removed
+            // FIRST so the drain doesn't double-count its error.
             self.pending.lock().unwrap().remove(&id);
             self.counters.errors.fetch_add(1, Ordering::Relaxed);
+            self.health.set(LinkHealth::Dead);
+            let _ = self.stream.shutdown(std::net::Shutdown::Both);
             return Err(PushError::new(format!("node {}: {e:#}", self.peer)));
         }
         if count {
@@ -1032,13 +1049,20 @@ pub fn serve_one(listener: &TcpListener, cfg: NelConfig, model: Arc<ModelSpec>) 
 }
 
 /// Where a node server writes completed responses: the threaded flavor's
-/// FIFO writer thread, or an evented connection's shared nonblocking
-/// socket (frames written inline from `on_ready` continuations, still
-/// FIFO because whole frames are serialized under the mutex).
+/// FIFO writer thread, or an evented connection's outbox — frames are
+/// QUEUED (never written inline) and the connection's owning shard
+/// flushes them under `POLLOUT` readiness. Queuing is what makes
+/// responding safe from ANY thread, shard threads included: an inline
+/// write parked in `poll(POLLOUT)` on the shard that also owns the
+/// destination peer's read side (the loopback `push serve` shape, where
+/// both halves round-robin onto one global reactor) would deadlock the
+/// shard — the response can only drain once the peer reads, and the peer
+/// is only read by the parked shard. Both responders are FIFO: whole
+/// frames enqueue atomically in completion order.
 #[derive(Clone)]
 enum Responder {
     Thread(mpsc::Sender<Vec<u8>>),
-    Evented(Arc<Mutex<TcpStream>>),
+    Evented(poll::WriteHandle),
 }
 
 impl Responder {
@@ -1047,16 +1071,12 @@ impl Responder {
             Responder::Thread(tx) => {
                 let _ = tx.send(payload);
             }
-            Responder::Evented(stream) => {
-                let s = stream.lock().unwrap();
-                if poll::write_frame_nb(&s, &payload).is_err() {
-                    // A dead write half must kill the WHOLE connection
-                    // (mirroring the writer thread): otherwise requests
-                    // keep arriving whose responses can never be
-                    // delivered, and the client's matching futures hang
-                    // instead of failing through its closed-link drain.
-                    let _ = s.shutdown(std::net::Shutdown::Both);
-                }
+            Responder::Evented(handle) => {
+                // An error means the connection is already dead/closing;
+                // the client's matching futures fail through its
+                // closed-link drain, exactly like a response the writer
+                // thread never got to deliver.
+                let _ = handle.send_frame(&payload);
             }
         }
     }
@@ -1209,48 +1229,151 @@ pub fn serve_connection(stream: TcpStream, cfg: NelConfig, model: Arc<ModelSpec>
 /// serving-tier client parked between refreshes) costs one registered fd
 /// and nothing else — no NEL, no scheduler, no device threads, no parked
 /// reader/writer pair.
+///
+/// The shard thread only ENQUEUES frames here; decoding and dispatch run
+/// on [`poll::offload`] workers. Synchronous request work — `Nel::new`
+/// on the first frame, `SnapshotNode`/`Migrate` batches — can take
+/// longer than a fabric `dead_after` (hundreds of ms), and a shard stuck
+/// in it would starve heartbeat pongs for EVERY other connection on that
+/// shard, making the monitor falsely sever healthy links. Heartbeats
+/// themselves are the one exception: they are answered straight from the
+/// shard ([`wire::request_is_heartbeat`]), both because a liveness probe
+/// must not queue behind data work and because that keeps pong latency
+/// load-independent, matching the threaded read loop's behavior.
 struct ServerConn {
+    shared: Arc<ConnShared>,
+}
+
+/// State shared between a [`ServerConn`]'s shard-side sink and the
+/// offload jobs draining its dispatch queue.
+struct ConnShared {
     cfg: NelConfig,
     model: Arc<ModelSpec>,
-    nel: Option<Nel>,
+    /// Created lazily by the FIRST offload drain that sees a data frame;
+    /// torn down by the LAST drain after close (never on the shard —
+    /// `Nel` teardown joins scheduler/device threads and may block).
+    nel: Mutex<Option<Nel>>,
     out: Responder,
+    handle: poll::WriteHandle,
+    work: Mutex<ConnWork>,
+}
+
+/// The connection's dispatch queue. At most ONE offload drain job is in
+/// flight per connection (`scheduled`), and that job pops frames in
+/// arrival order — per-sender FIFO dispatch, exactly the threaded read
+/// loop's order, while still letting different connections' queues drain
+/// concurrently on the pool.
+struct ConnWork {
+    frames: VecDeque<Vec<u8>>,
+    scheduled: bool,
+    closed: bool,
 }
 
 impl Sink for ServerConn {
     fn on_frame(&mut self, frame: Vec<u8>) -> FrameVerdict {
-        let (id, req) = match wire::decode_request(&frame) {
-            Ok(x) => x,
-            Err(_) => return FrameVerdict::Close, // unrecoverable framing
-        };
-        if self.nel.is_none() {
-            // A link winding down without ever doing work (the idle-bench
-            // shape) must not build a NEL just to tear it down.
-            if matches!(req, Request::Shutdown) {
-                respond(&self.out, id, Response::One(Ok(Value::Unit)));
-                return FrameVerdict::Close;
+        if wire::request_is_heartbeat(&frame) {
+            // Pong inline: req_id-matched, touches no NEL state, so
+            // jumping the dispatch queue cannot reorder anything a
+            // client can observe (heartbeats resolve their own Pending
+            // slot, never a data future).
+            if let Ok((id, Request::Heartbeat { nonce })) = wire::decode_request(&frame) {
+                respond(&self.shared.out, id, Response::One(Ok(Value::Usize(nonce as usize))));
+                return FrameVerdict::Continue;
             }
-            match Nel::new(self.cfg.clone()) {
-                Ok(nel) => self.nel = Some(nel),
-                Err(e) => {
-                    respond(
-                        &self.out,
-                        id,
-                        Response::One(Err(format!("node: NEL startup failed: {e:#}"))),
-                    );
-                    return FrameVerdict::Close;
-                }
-            }
+            // Peek matched but full decode failed: corrupt frame.
+            return FrameVerdict::Close;
         }
-        let nel = self.nel.as_ref().expect("lazily created above");
-        match dispatch_request(nel, &self.model, &self.out, id, req) {
-            Dispatch::Shutdown => FrameVerdict::Close,
-            Dispatch::Continue => FrameVerdict::Continue,
+        let mut work = self.shared.work.lock().unwrap();
+        if work.closed {
+            return FrameVerdict::Continue; // draining toward close
         }
+        work.frames.push_back(frame);
+        if !work.scheduled {
+            work.scheduled = true;
+            let shared = self.shared.clone();
+            poll::offload(Box::new(move || drain_conn(shared)));
+        }
+        FrameVerdict::Continue
     }
 
     fn on_close(&mut self) {
-        // Fail any undelivered envelopes, wind the node down.
-        self.nel = None;
+        let mut work = self.shared.work.lock().unwrap();
+        work.closed = true;
+        work.frames.clear();
+        if !work.scheduled {
+            // No drain in flight to observe `closed`: schedule one purely
+            // for teardown, so the NEL is dropped on the pool, not here.
+            work.scheduled = true;
+            let shared = self.shared.clone();
+            poll::offload(Box::new(move || drain_conn(shared)));
+        }
+    }
+}
+
+/// Drain one connection's dispatch queue on an offload worker until it
+/// is empty (or the connection closed), then clear `scheduled` so the
+/// next frame schedules a fresh drain. Exactly one drain runs per
+/// connection at a time.
+fn drain_conn(shared: Arc<ConnShared>) {
+    loop {
+        let frame = {
+            let mut work = shared.work.lock().unwrap();
+            match work.frames.pop_front() {
+                Some(f) if !work.closed => f,
+                _ => {
+                    let closed = work.closed;
+                    work.frames.clear();
+                    work.scheduled = false;
+                    drop(work);
+                    if closed {
+                        // Fail any undelivered envelopes, wind the node
+                        // down. Off-shard on purpose: Nel teardown joins
+                        // its scheduler/device threads.
+                        let _ = shared.nel.lock().unwrap().take();
+                    }
+                    return;
+                }
+            }
+        };
+        if process_frame(&shared, &frame) == FrameVerdict::Close {
+            shared.work.lock().unwrap().closed = true;
+            // Queued responses (the Shutdown ack, a NEL-startup error)
+            // still reach the peer before the fd drops.
+            shared.handle.close_after_flush();
+        }
+    }
+}
+
+/// Decode and dispatch one queued request frame (offload worker).
+fn process_frame(shared: &ConnShared, frame: &[u8]) -> FrameVerdict {
+    let (id, req) = match wire::decode_request(frame) {
+        Ok(x) => x,
+        Err(_) => return FrameVerdict::Close, // unrecoverable framing
+    };
+    let mut nel = shared.nel.lock().unwrap();
+    if nel.is_none() {
+        // A link winding down without ever doing work (the idle-bench
+        // shape) must not build a NEL just to tear it down.
+        if matches!(req, Request::Shutdown) {
+            respond(&shared.out, id, Response::One(Ok(Value::Unit)));
+            return FrameVerdict::Close;
+        }
+        match Nel::new(shared.cfg.clone()) {
+            Ok(n) => *nel = Some(n),
+            Err(e) => {
+                respond(
+                    &shared.out,
+                    id,
+                    Response::One(Err(format!("node: NEL startup failed: {e:#}"))),
+                );
+                return FrameVerdict::Close;
+            }
+        }
+    }
+    let nel = nel.as_ref().expect("lazily created above");
+    match dispatch_request(nel, &shared.model, &shared.out, id, req) {
+        Dispatch::Shutdown => FrameVerdict::Close,
+        Dispatch::Continue => FrameVerdict::Continue,
     }
 }
 
@@ -1270,17 +1393,27 @@ pub fn serve_evented(
         listener,
         Box::new(move |stream| {
             stream.set_nodelay(true).ok();
-            let wstream = match stream.try_clone() {
-                Ok(s) => s,
-                Err(_) => return, // accept raced the peer's death
-            };
-            let conn = ServerConn {
-                cfg: cfg.clone(),
-                model: model.clone(),
-                nel: None,
-                out: Responder::Evented(Arc::new(Mutex::new(wstream))),
-            };
-            let _ = poll::Reactor::global().register(stream, Box::new(conn));
+            let cfg = cfg.clone();
+            let model = model.clone();
+            // Responses go through the connection's outbox handle: the
+            // shard flushes them under POLLOUT, so completing a future
+            // (from any thread, shards included) never blocks.
+            let _ = poll::Reactor::global().register_duplex(stream, move |handle| {
+                Box::new(ServerConn {
+                    shared: Arc::new(ConnShared {
+                        cfg,
+                        model,
+                        nel: Mutex::new(None),
+                        out: Responder::Evented(handle.clone()),
+                        handle,
+                        work: Mutex::new(ConnWork {
+                            frames: VecDeque::new(),
+                            scheduled: false,
+                            closed: false,
+                        }),
+                    }),
+                })
+            });
         }),
     )?;
     Ok(addr)

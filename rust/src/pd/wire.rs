@@ -436,6 +436,16 @@ const R_ONE: u8 = 1;
 const R_MANY: u8 = 2;
 const R_STATS: u8 = 3;
 
+/// Cheap peek: is this encoded request frame a heartbeat probe? The
+/// evented server's shard thread uses this to pong liveness probes
+/// inline (a heartbeat touches no NEL state, so jumping the offload
+/// queue is safe) while everything else leaves the shard — keeping pong
+/// latency independent of how busy the connection's dispatch queue is,
+/// which is exactly what a LIVENESS probe must measure.
+pub fn request_is_heartbeat(buf: &[u8]) -> bool {
+    buf.len() >= 2 && buf[0] == WIRE_VERSION && buf[1] == K_HEARTBEAT
+}
+
 fn write_opt_tensor(w: &mut impl Write, t: &Option<Tensor>) -> Result<()> {
     match t {
         None => w.write_all(&[0u8])?,

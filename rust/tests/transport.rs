@@ -559,6 +559,105 @@ fn evented_server_holds_64_concurrent_connections() {
 }
 
 #[test]
+fn evented_large_frames_and_heartbeats_survive_busy_shared_shards() {
+    // Regression: the evented server used to WRITE responses inline on the
+    // reactor shard thread and run dispatch there too. With client and
+    // server halves sharing the same 4-shard reactor (the loopback shape),
+    // a multi-megabyte snapshot response could park a shard in
+    // poll(POLLOUT) against a peer only that same shard could drain —
+    // permanent deadlock — and inline dispatch starved heartbeat pongs for
+    // every other connection on the shard. Eight concurrent 4 MB snapshots
+    // (2x the shard count, so both halves of some pair share a shard) must
+    // all complete, while a bystander link's heartbeats stay Healthy
+    // throughout.
+    use push::pd::transport::{spawn_loopback_node_evented, NodeTransport, TcpNode};
+    use push::pd::wire::CreateSpec;
+    use push::pd::LinkHealth;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    const CONNS: usize = 8;
+    const DIM: usize = 1 << 20; // 4 MB of f32 per snapshot frame
+
+    let model = Arc::new(native_manifest().model("linear_native").unwrap().clone());
+    let cfg = NelConfig {
+        num_devices: 1,
+        cache_size: 2,
+        cost: CostModel::free(),
+        control_workers: 1,
+        ..NelConfig::default()
+    };
+    let addr = spawn_loopback_node_evented(cfg, model).unwrap();
+    let nodes: Vec<TcpNode> =
+        (0..CONNS).map(|_| TcpNode::connect_evented(addr).unwrap()).collect();
+    let bystander = TcpNode::connect_evented(addr).unwrap();
+
+    let blob = |i: usize| Tensor::f32(vec![DIM], vec![i as f32 + 0.5; DIM]);
+    for (i, node) in nodes.iter().enumerate() {
+        node.create_spec(CreateSpec {
+            pid: Pid(i as u32),
+            device: None,
+            program: Some(("echo".to_string(), Value::Unit)),
+            state: Vec::new(),
+            no_params: true,
+            init_params: None,
+            model: "linear_native".to_string(),
+        })
+        .unwrap();
+        node.restore_particle_state(
+            Pid(i as u32),
+            vec![("blob".to_string(), Value::Tensor(blob(i)))],
+        )
+        .unwrap();
+    }
+
+    // the bystander pings on a fabric-like cadence the whole time the big
+    // frames are in flight; it must never be (falsely) declared dead
+    let stop = Arc::new(AtomicBool::new(false));
+    let saw_dead = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let stop = stop.clone();
+        let saw_dead = saw_dead.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                if bystander.heartbeat_tick(Duration::from_millis(1500)) == LinkHealth::Dead
+                {
+                    saw_dead.store(true, Ordering::Release);
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        })
+    };
+
+    // all 8 snapshots launched before any is waited on: responses land on
+    // the shared reactor concurrently
+    let futs: Vec<PFuture> = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| node.snapshot_node(&[Pid(i as u32)]).remove(0))
+        .collect();
+    for (i, fut) in futs.into_iter().enumerate() {
+        let got = fut
+            .wait_timeout(Duration::from_secs(60))
+            .expect("snapshot future hung — evented write path deadlocked a shard")
+            .unwrap();
+        let want = Value::List(vec![Value::List(vec![
+            Value::Str("blob".to_string()),
+            Value::Tensor(blob(i)),
+        ])]);
+        assert_eq!(got, want, "connection {i}: snapshot payload corrupted");
+    }
+
+    stop.store(true, Ordering::Release);
+    ticker.join().unwrap();
+    assert!(
+        !saw_dead.load(Ordering::Acquire),
+        "bystander link falsely severed while big frames were in flight"
+    );
+}
+
+#[test]
 fn fabric_stats_sum_each_node_exactly_once() {
     let pd = pd_with(2, TransportKind::TcpLoopback);
     let pids = echo_particles(&pd, 4);
